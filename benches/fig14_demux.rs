@@ -1,0 +1,82 @@
+//! Fig. 14: network demultiplexer — (a) 2..32 master ports at 6 ID bits,
+//! (b) 2..8 ID bits at 4 master ports (exponential area blowup), plus a
+//! cycle-level validation: same-ID traffic to one target sustains full
+//! rate; the counters only stall target *changes*.
+
+use noc::area::{all_figures, area_timing, Module};
+use noc::bench_harness::section;
+use noc::noc::demux::Demux;
+use noc::protocol::payload::{Bytes, Cmd, RBeat, Resp};
+use noc::protocol::port::{bundle, BundleCfg};
+use noc::sim::Component;
+
+fn sim_demux_throughput(m: usize, spread_ids: bool, cycles: u64) -> f64 {
+    let cfg = BundleCfg::new(64, 6);
+    let (up, up_s) = bundle("up", cfg);
+    let mut masters = Vec::new();
+    let mut downs = Vec::new();
+    for i in 0..m {
+        let (mm, ss) = bundle(&format!("d{i}"), cfg);
+        masters.push(mm);
+        downs.push(ss);
+    }
+    let mc = m;
+    let mut demux =
+        Demux::new_symmetric("demux", up_s, masters, move |c: &Cmd| (c.addr as usize >> 6) % mc)
+            .with_max_txns_per_id(8);
+    let mut done = 0u64;
+    let mut i = 0u64;
+    for cy in 1..=cycles {
+        up.set_now(cy);
+        if up.ar.can_push() {
+            let id = if spread_ids { (i % 64) as u32 } else { 0 };
+            let mut c = Cmd::new(id, (i % m as u64) << 6, 0, 3);
+            c.tag = i;
+            up.ar.push(c);
+            i += 1;
+        }
+        for d in &downs {
+            d.set_now(cy);
+        }
+        demux.tick(cy);
+        for d in &downs {
+            if d.ar.can_pop() {
+                let c = d.ar.pop();
+                d.r.push(RBeat { id: c.id, data: Bytes::zeroed(8), resp: Resp::Okay, last: true, tag: c.tag });
+            }
+        }
+        if up.r.can_pop() {
+            up.r.pop();
+            done += 1;
+        }
+    }
+    done as f64 / cycles as f64
+}
+
+fn main() {
+    for s in all_figures().iter().filter(|s| s.figure.starts_with("Fig 14")) {
+        println!("{}", s.render());
+    }
+    println!("paper endpoints: (a) 330->430 ps, 22->38 kGE; (b) 250->400 ps, 5->95 kGE\n");
+
+    section("simulated demux: round-robin targets, spread vs single ID");
+    for m in [2usize, 4, 8, 16, 32] {
+        let spread = sim_demux_throughput(m, true, 20_000);
+        let single = sim_demux_throughput(m, false, 20_000);
+        let at = area_timing(Module::Demux { m, i: 6 });
+        println!(
+            "M={m:<3} spread-IDs {spread:.3} txn/cy, single-ID {single:.3} txn/cy  (model {:.0} ps, {:.1} kGE)",
+            at.cp_ps, at.kge
+        );
+        // Spread IDs: different IDs may target different ports concurrently.
+        assert!(spread > 0.8, "spread-ID throughput too low: {spread}");
+        // Single ID round-robining across targets must serialize (the
+        // same-target ordering rule) — visibly below the spread case.
+        assert!(single < spread + 0.05);
+    }
+    println!("\nexponential ID-width cost (model): ");
+    for i in [2usize, 4, 6, 8] {
+        let at = area_timing(Module::Demux { m: 4, i });
+        println!("  I={i}: {:.1} kGE, {:.0} ps", at.kge, at.cp_ps);
+    }
+}

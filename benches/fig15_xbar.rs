@@ -1,0 +1,60 @@
+//! Fig. 15: crossbar (fully connected, S=4) — (a) 2..8 master ports,
+//! (b) 2..8 ID bits, plus simulated end-to-end throughput of a 4×M
+//! crossbar under uniform random traffic.
+
+use noc::area::{all_figures, area_timing, Module};
+use noc::bench_harness::{bench, section};
+use noc::coordinator::{SimCfg, System};
+
+fn xbar_cfg_toml(masters: usize, total: u64) -> String {
+    let mut s = String::from("[sim]\ncycles = 200000\ndata_bits = 64\nid_bits = 6\n");
+    for i in 0..4 {
+        s.push_str(&format!(
+            "[[master]]\nname = \"g{i}\"\nbase = 0x0\nspan = {}\ntotal = {total}\nmax_outstanding = 8\nids = 8\n",
+            masters * 0x1_0000
+        ));
+    }
+    for m in 0..masters {
+        s.push_str(&format!(
+            "[[slave]]\nname = \"s{m}\"\nkind = \"perfect\"\nlatency = 2\nbase = {}\nsize = 0x1_0000\n",
+            m * 0x1_0000
+        ));
+    }
+    s
+}
+
+fn sim_xbar(masters: usize, total: u64) -> (f64, u64) {
+    let cfg = SimCfg::from_str_toml(&xbar_cfg_toml(masters, total)).unwrap();
+    let mut sys = System::build(&cfg).unwrap();
+    let done = sys.run(cfg.cycles);
+    assert!(done, "crossbar traffic must complete");
+    assert!(sys.check_protocol().is_empty());
+    let txns: u64 = sys.gens.iter().map(|g| g.borrow().stats.completed).sum();
+    (txns as f64 / sys.cycles as f64, sys.cycles)
+}
+
+fn main() {
+    for s in all_figures().iter().filter(|s| s.figure.starts_with("Fig 15")) {
+        println!("{}", s.render());
+    }
+    println!("paper endpoints: (a) 400->450 ps, 111->156 kGE; (b) 340->460 ps, 42->390 kGE\n");
+
+    section("simulated 4xM crossbar under uniform random traffic");
+    for m in [2usize, 4, 6, 8] {
+        let (tput, cycles) = sim_xbar(m, 2000);
+        let at = area_timing(Module::Xbar { s: 4, m, i: 6 });
+        println!(
+            "M={m}: {tput:.3} txns/cycle over {cycles} cycles  (model {:.0} ps, {:.0} kGE, {:.2} GHz)",
+            at.cp_ps,
+            at.kge,
+            at.fmax_ghz()
+        );
+        assert!(tput > 0.5, "4x{m} crossbar too slow: {tput}");
+    }
+
+    section("build+run wall time");
+    let t = bench("4x4 xbar, 8k txns", 3, Some(8000), || {
+        sim_xbar(4, 2000);
+    });
+    println!("{}", t.row());
+}

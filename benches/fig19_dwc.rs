@@ -1,0 +1,90 @@
+//! Fig. 19: data width converters — (a) downsizer 64→{8..32} and upsizer
+//! 64→{128..512}, (b) upsizer with 1..8 read upsizers, plus a simulated
+//! validation: the upsizer reshapes bursts so the wide side carries the
+//! same bytes in proportionally fewer beats.
+
+use noc::area::{all_figures, area_timing, Module};
+use noc::bench_harness::section;
+use noc::noc::upsizer::Upsizer;
+use noc::protocol::payload::{Bytes, Cmd, RBeat, Resp};
+use noc::protocol::port::{bundle, BundleCfg};
+use noc::sim::Component;
+
+/// Stream reads through an upsizer; returns (narrow beats, wide beats).
+fn sim_upsize_ratio(dw: usize, n_txns: u64) -> (u64, u64) {
+    let (up, up_s) = bundle("up", BundleCfg::new(64, 4));
+    let (down_m, down_s) = bundle("down", BundleCfg::new(dw, 4));
+    let mut uz = Upsizer::new("uz", up_s, down_m, 2);
+    let ratio = dw / 64;
+    let mut issued = 0u64;
+    let mut narrow = 0u64;
+    let mut wide = 0u64;
+    let mut done = 0u64;
+    let mut cy = 0u64;
+    let mut pending: std::collections::VecDeque<RBeat> = Default::default();
+    while done < n_txns && cy < 200_000 {
+        cy += 1;
+        up.set_now(cy);
+        if issued < n_txns && up.ar.can_push() {
+            // Aligned burst exactly `ratio` narrow beats long = 1 wide beat.
+            let mut c = Cmd::new(0, (issued * dw as u64) % 0x10000, (ratio - 1) as u8, 3);
+            c.tag = issued;
+            up.ar.push(c);
+            issued += 1;
+        }
+        down_s.set_now(cy);
+        uz.tick(cy);
+        if down_s.ar.can_pop() {
+            let c = down_s.ar.pop();
+            for i in 0..c.beats() {
+                pending.push_back(RBeat {
+                    id: c.id,
+                    data: Bytes::zeroed(dw / 8),
+                    resp: Resp::Okay,
+                    last: i == c.beats() - 1,
+                    tag: c.tag,
+                });
+            }
+        }
+        if !pending.is_empty() && down_s.r.can_push() {
+            down_s.r.push(pending.pop_front().unwrap());
+            wide += 1;
+        }
+        if up.r.can_pop() {
+            let r = up.r.pop();
+            narrow += 1;
+            if r.last {
+                done += 1;
+            }
+        }
+    }
+    assert_eq!(done, n_txns, "upsizer traffic must complete");
+    (narrow, wide)
+}
+
+fn main() {
+    for s in all_figures().iter().filter(|s| s.figure.starts_with("Fig 19")) {
+        println!("{}", s.render());
+    }
+    println!("paper: downsizer 390->365 ps / 23->25 kGE; upsizer 380->405 ps / 27->35 kGE; R=1..8: 380->485 ps / 27->59 kGE\n");
+
+    section("simulated upsizer burst reshaping (narrow beats : wide beats)");
+    for dw in [128usize, 256, 512] {
+        let (narrow, wide) = sim_upsize_ratio(dw, 500);
+        let ratio = narrow as f64 / wide as f64;
+        let at = area_timing(Module::Upsizer { dn: 64, dw, r: 2 });
+        println!(
+            "64 -> {dw}: {narrow} narrow / {wide} wide = {ratio:.2}x (expect {}x)  (model {:.0} ps, {:.1} kGE)",
+            dw / 64,
+            at.cp_ps,
+            at.kge
+        );
+        assert!((ratio - (dw / 64) as f64).abs() < 0.01, "reshape ratio off");
+    }
+
+    println!("\nread-upsizer scaling (model):");
+    for r in [1usize, 2, 4, 8] {
+        let at = area_timing(Module::Upsizer { dn: 64, dw: 128, r });
+        println!("  R={r}: {:.0} ps, {:.1} kGE", at.cp_ps, at.kge);
+    }
+}

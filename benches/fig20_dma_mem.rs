@@ -1,0 +1,54 @@
+//! Fig. 20: (a) DMA engine for 16..1024-bit data widths, (b) simplex
+//! memory controller for 8..1024-bit, plus simulated DMA copy throughput
+//! per width and the simplex controller's one-op-per-cycle ceiling.
+
+use noc::area::{all_figures, area_timing, Module};
+use noc::bench_harness::section;
+use noc::noc::dma::{Dma, TransferReq};
+use noc::noc::mem_duplex::{BankArray, MemDuplex};
+use noc::protocol::port::{bundle, BundleCfg};
+use noc::sim::Component;
+
+fn sim_dma_copy(data_bits: usize, len: u64) -> f64 {
+    let cfg = BundleCfg::new(data_bits, 4);
+    let (m, s) = bundle("p", cfg);
+    let banks = BankArray::new(0, 1 << 22, 8, cfg.beat_bytes(), 1);
+    let mut dma = Dma::new("dma", m);
+    let mut mem = MemDuplex::new("mem", s, banks);
+    let h = dma.submit(TransferReq::OneD { src: 0x1000, dst: 0x200_000, len });
+    let mut cy = 0u64;
+    while !dma.completions.contains(&h) {
+        cy += 1;
+        dma.tick(cy);
+        mem.tick(cy);
+        assert!(cy < 10_000_000, "copy did not complete");
+    }
+    len as f64 / cy as f64
+}
+
+fn main() {
+    for s in all_figures().iter().filter(|s| s.figure.starts_with("Fig 20")) {
+        println!("{}", s.render());
+    }
+    println!("paper: DMA 290->400 ps / 25->141 kGE; simplex ~290 ps / 13->53 kGE\n");
+
+    section("simulated DMA copy throughput vs data width (256 KiB copy)");
+    for bits in [64usize, 128, 256, 512, 1024] {
+        let bpc = sim_dma_copy(bits, 256 * 1024);
+        let at = area_timing(Module::Dma { d: bits });
+        let peak = (bits / 8) as f64;
+        println!(
+            "D={bits:<5} {bpc:>6.1} B/cycle ({:>3.0}% of {peak} B/cy beat rate)  (model {:.0} ps, {:.0} kGE)",
+            100.0 * bpc / peak,
+            at.cp_ps,
+            at.kge
+        );
+        assert!(bpc / peak > 0.5, "DMA should stream at >50% of beat rate");
+    }
+
+    println!("\nsimplex controller (model; constant critical path in D):");
+    for d in [8usize, 64, 256, 1024] {
+        let at = area_timing(Module::MemSimplex { d });
+        println!("  D={d}: {:.0} ps, {:.1} kGE", at.cp_ps, at.kge);
+    }
+}

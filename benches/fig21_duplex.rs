@@ -1,0 +1,75 @@
+//! Fig. 21: duplex memory controller — (a) 8..1024-bit data width at two
+//! memory ports, (b) 1..8 memory master ports at 64-bit, plus the
+//! simulated duplex-vs-simplex bandwidth comparison and the banking-factor
+//! conflict sweep the §2.7.2 discussion predicts.
+
+use noc::area::{all_figures, area_timing, Module};
+use noc::bench_harness::section;
+use noc::noc::mem_duplex::{BankArray, MemDuplex};
+use noc::protocol::payload::{Bytes, Cmd, WBeat};
+use noc::protocol::port::{bundle, BundleCfg};
+use noc::sim::{Component, SplitMix64};
+
+/// Mixed read+write streams for `cycles`; returns (data beats, conflicts).
+fn sim_duplex(banks: usize, cycles: u64) -> (u64, u64) {
+    let (m, s) = bundle("p", BundleCfg::new(64, 4));
+    let arr = BankArray::new(0, 1 << 20, banks, 8, 1);
+    let mut ctrl = MemDuplex::new("mem", s, arr);
+    let mut rng = SplitMix64::new(5);
+    let mut beats = 0u64;
+    let mut w_left = 0usize;
+    for cy in 1..=cycles {
+        m.set_now(cy);
+        if w_left == 0 && m.aw.can_push() {
+            let mut c = Cmd::new(0, rng.below(0x10000) & !7, 7, 3);
+            c.tag = cy;
+            m.aw.push(c);
+            w_left = 8;
+        }
+        if w_left > 0 && m.w.can_push() {
+            m.w.push(WBeat::full(Bytes::zeroed(8), w_left == 1, 0));
+            w_left -= 1;
+        }
+        if m.ar.can_push() {
+            let mut c = Cmd::new(1, rng.below(0x10000) & !7, 7, 3);
+            c.tag = cy + 1_000_000;
+            m.ar.push(c);
+        }
+        ctrl.tick(cy);
+        if m.r.can_pop() {
+            m.r.pop();
+            beats += 1;
+        }
+        if m.b.can_pop() {
+            m.b.pop();
+        }
+    }
+    let conflicts = ctrl.banks.borrow().conflicts;
+    (beats, conflicts)
+}
+
+fn main() {
+    for s in all_figures().iter().filter(|s| s.figure.starts_with("Fig 21")) {
+        println!("{}", s.render());
+    }
+    println!("paper: (a) 280->330 ps, 20->175 kGE; (b) ~300 ps, 28->34 kGE\n");
+
+    section("simulated duplex: banking factor vs read throughput + conflicts");
+    let mut last_conflicts = u64::MAX;
+    for b in [2usize, 4, 8] {
+        let (beats, conflicts) = sim_duplex(b, 20_000);
+        let at = area_timing(Module::MemDuplex { d: 64, b });
+        println!(
+            "B={b}: {:.3} R beats/cycle, {conflicts} conflicts  (model {:.0} ps, {:.1} kGE)",
+            beats as f64 / 20_000.0,
+            at.cp_ps,
+            at.kge
+        );
+        assert!(
+            conflicts <= last_conflicts,
+            "higher banking factor must not increase conflicts"
+        );
+        last_conflicts = conflicts;
+    }
+    println!("\n(§2.7.2: increasing the banking factor reduces the conflict rate at the cost of more, shallower SRAM macros)");
+}

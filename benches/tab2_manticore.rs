@@ -1,0 +1,34 @@
+//! Table 2: Manticore network implementation results — the modeled
+//! area/power per level (cells from the §3 model, wire share anchored to
+//! the published P&R values), validated against the simulated per-level
+//! traffic distribution of a conv workload (the hierarchical design's
+//! point: most bytes stay on the L1 networks).
+
+use noc::bench_harness::section;
+use noc::manticore::chiplet::{Chiplet, ChipletCfg};
+use noc::manticore::perf::render_table2;
+use noc::manticore::workload::{conv_scripts, run_scripts, ConvVariant, CONV_SMALL};
+
+fn main() {
+    println!("{}", render_table2());
+
+    section("simulated per-level DMA-tree traffic (16 clusters, conv stacked vs pipelined)");
+    for (label, variant) in
+        [("stacked", ConvVariant::Stacked), ("pipelined", ConvVariant::Pipelined)]
+    {
+        let cfg = ChipletCfg { fanout: vec![4, 4], ..ChipletCfg::full() };
+        let n = cfg.n_clusters();
+        let mut ch = Chiplet::new(cfg);
+        let scripts = conv_scripts(CONV_SMALL, variant, n, 8);
+        let res = run_scripts(&mut ch, scripts, 50_000_000);
+        assert!(res.finished, "{label} must finish");
+        println!(
+            "{label:<10} cycles={} cluster-ports={} B, uplink bytes per level (L1, L2): {:?}",
+            res.cycles, res.cluster_dma_bytes, res.level_bytes
+        );
+    }
+    println!(
+        "\nthe pipelined variant moves inter-cluster traffic at the lowest level \
+         (cf. paper: \"data ... is mainly transferred through the L1 networks\")"
+    );
+}

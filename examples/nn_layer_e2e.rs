@@ -1,0 +1,92 @@
+//! END-TO-END DRIVER: all three layers composed on a real small workload.
+//!
+//! 1. **Compute (L1/L2 via PJRT)**: loads the AOT-compiled JAX graphs
+//!    (Pallas matmul kernel inside) for the conv and FC layers of the
+//!    paper's §4.3 MLT workload, executes them on the PJRT CPU client from
+//!    Rust, and verifies the numerics against the golden manifests
+//!    produced at compile time — proving the Python-authored compute runs
+//!    bit-faithfully on the Rust request path.
+//! 2. **Communication (L3)**: derives the same layers' tile-streaming DMA
+//!    traffic and runs it through a simulated Manticore chiplet instance
+//!    (16 clusters), reporting per-level bandwidths and the implied
+//!    compute throughput next to the paper's Table 3.
+//!
+//! Requires `make artifacts` (the Makefile runs it automatically).
+//!
+//!     cargo run --release --example nn_layer_e2e
+
+use noc::manticore::chiplet::{Chiplet, ChipletCfg};
+use noc::manticore::perf::{render_table3, table3, Machine};
+use noc::manticore::workload::{
+    conv_scripts, fc_scripts, run_scripts, ConvVariant, CLUSTER_FLOPS_PER_CYCLE, CONV_PAPER,
+    CONV_SMALL,
+};
+use noc::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // ---- Phase 1: compute artifacts through PJRT ----
+    println!("== phase 1: AOT compute graphs on the PJRT CPU client ==");
+    let mut rt = Runtime::new("artifacts")?;
+    println!("platform: {}", rt.platform());
+    for name in ["conv_small", "fc_small", "matmul_128"] {
+        rt.load(name)?;
+        let t0 = std::time::Instant::now();
+        let r = rt.run_golden(name)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "  {name:<12} outputs={} max_rel_err={:.2e} ({ms:.1} ms)  {}",
+            r.outputs.len(),
+            r.max_rel_err,
+            if r.max_rel_err < 1e-4 { "OK" } else { "MISMATCH" }
+        );
+        anyhow::ensure!(r.max_rel_err < 1e-4, "{name}: golden mismatch");
+    }
+
+    // ---- Phase 2: the same layers' DMA traffic on the chiplet ----
+    println!("\n== phase 2: tile-streaming traffic on a 16-cluster chiplet ==");
+    let cfg = ChipletCfg { fanout: vec![4, 4], ..ChipletCfg::full() };
+    let n = cfg.n_clusters();
+    let machine_scale = 128.0 / n as f64;
+
+    for (label, variant, stack) in [
+        ("conv baseline", ConvVariant::Baseline, 1usize),
+        ("conv stacked", ConvVariant::Stacked, 8),
+        ("conv pipelined", ConvVariant::Pipelined, 8),
+    ] {
+        let mut ch = Chiplet::new(cfg.clone());
+        let scripts = conv_scripts(CONV_SMALL, variant, n, stack);
+        let res = run_scripts(&mut ch, scripts, 50_000_000);
+        anyhow::ensure!(res.finished, "{label} did not finish");
+        let flops = CONV_SMALL.flops() as f64;
+        let gflops = flops / res.cycles as f64; // Gflop/s at 1 GHz
+        let compute_bound_gflops = n as f64 * CLUSTER_FLOPS_PER_CYCLE;
+        println!(
+            "  {label:<16} {:>9} cycles  HBM {:>6.1} GB/s  cluster-ports {:>7.1} GB/s  {:>6.1} Gdpflop/s ({:.0}% of compute bound)",
+            res.cycles,
+            res.gbps(res.hbm_bytes),
+            res.gbps(res.cluster_dma_bytes),
+            gflops,
+            100.0 * gflops / compute_bound_gflops,
+        );
+    }
+    {
+        let mut ch = Chiplet::new(cfg.clone());
+        let scripts = fc_scripts(8, 16, 32, 32, n);
+        let res = run_scripts(&mut ch, scripts, 50_000_000);
+        anyhow::ensure!(res.finished, "fc did not finish");
+        println!(
+            "  {:<16} {:>9} cycles  HBM {:>6.1} GB/s",
+            "fully connected",
+            res.cycles,
+            res.gbps(res.hbm_bytes)
+        );
+    }
+    println!("  (scaled-down layer + {n} clusters; x{machine_scale:.0} to the full machine)");
+
+    // ---- Phase 3: the paper-size analytical Table 3 for reference ----
+    println!("\n== phase 3: Table 3 at paper scale (analytical model) ==");
+    let rows = table3(&Machine::manticore(), CONV_PAPER, 8, 32);
+    println!("{}", render_table3(&rows));
+    println!("nn_layer_e2e OK");
+    Ok(())
+}

@@ -1,0 +1,108 @@
+"""Layer-1 Pallas kernel: tiled matmul — the compute hot-spot of the
+Manticore case study (§4.3 of the paper).
+
+Both NN layers evaluated in the paper (convolutional and fully-connected)
+reduce to dense matmuls on Manticore: the conv layer is lowered to
+im2col-patches × filter matrices, the FC layer is a batch × weight matmul.
+On Manticore the hot loop runs on 8 FPUs per cluster fed by SSR streams;
+on TPU the native realization of the same hot loop is an MXU-tile matmul.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation):
+  * threadblock/SSR double-buffering  -> BlockSpec-driven HBM->VMEM schedule
+  * per-cluster L1 SRAM tiles (128 KiB) -> (TM, TK)/(TK, TN) VMEM blocks
+  * FPU FMA chain                       -> MXU systolic matmul per tile
+
+The kernel MUST be lowered with interpret=True in this environment: real
+TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tile. 128x128 f32 tiles keep the VMEM working set at
+# 3 * 128*128*4 B = 192 KiB per grid step, far below the ~16 MiB VMEM budget,
+# and map 1:1 onto the 128x128 systolic array.
+DEFAULT_TILE = (128, 128, 128)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, n_k: int):
+    """One (i, j, k) grid step: o += x_tile @ w_tile.
+
+    The K dimension is the innermost (sequential) grid axis and the output
+    BlockSpec index map is independent of k, so Pallas keeps the same output
+    block resident in VMEM across all k steps — the classic MXU accumulation
+    pipeline, with o_ref doubling as the accumulator.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _ceil_to(a: int, b: int) -> int:
+    return (a + b - 1) // b * b
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def matmul(x: jax.Array, w: jax.Array, *, tile=DEFAULT_TILE) -> jax.Array:
+    """Tiled Pallas matmul: (M, K) @ (K, N) -> (M, N).
+
+    Shapes need not be tile-aligned; inputs are zero-padded up to the tile
+    grid and the result is sliced back. Zero padding is exact for matmul.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects 2D operands, got {x.shape} @ {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"inner dims mismatch: {x.shape} @ {w.shape}")
+    m, k = x.shape
+    _, n = w.shape
+    tm, tn, tk = tile
+    # Shrink tiles for small problems so the grid is never empty and we do
+    # not blow up tiny matmuls to 128x128.
+    tm = min(tm, _ceil_to(m, 8))
+    tn = min(tn, _ceil_to(n, 8))
+    tk = min(tk, _ceil_to(k, 8))
+    mp, kp, np_ = _ceil_to(m, tm), _ceil_to(k, tk), _ceil_to(n, tn)
+    xp = _pad_to(x.astype(jnp.float32), mp, kp)
+    wp = _pad_to(w.astype(jnp.float32), kp, np_)
+    n_k = kp // tk
+    grid = (mp // tm, np_ // tn, n_k)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU-PJRT executable; see module docstring
+    )(xp, wp)
+    return out[:m, :n].astype(x.dtype)
+
+
+def matmul_vmem_bytes(tile=DEFAULT_TILE) -> int:
+    """Static VMEM footprint estimate for DESIGN.md §Perf: x-tile + w-tile +
+    out-tile + accumulator, double-buffered inputs."""
+    tm, tn, tk = tile
+    single = (tm * tk + tk * tn + tm * tn + tm * tn) * 4
+    double_buffered_inputs = (tm * tk + tk * tn) * 4
+    return single + double_buffered_inputs

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 model.
+
+These are the correctness ground truth: pytest (and the hypothesis sweeps)
+assert the Pallas kernel and the model functions match these to float32
+tolerance. Keep them boring and obviously-correct; no tiling, no tricks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain (M, K) @ (K, N) in f32."""
+    return jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def im2col_ref(x: jax.Array, f: int, pad: int, stride: int) -> jax.Array:
+    """Extract (F*F*D_I) patches from an (W, W, D_I) input volume.
+
+    Returns (W_O * W_O, F * F * D_I), rows in output raster order — the
+    exact matrix the conv layer multiplies with the flattened filters.
+    """
+    wi, _, di = x.shape
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    wo = (wi + 2 * pad - f) // stride + 1
+    rows = []
+    for oy in range(wo):
+        for ox in range(wo):
+            patch = xp[oy * stride : oy * stride + f, ox * stride : ox * stride + f, :]
+            rows.append(patch.reshape(-1))
+    return jnp.stack(rows, axis=0)
+
+
+def conv_layer_ref(x: jax.Array, filters: jax.Array, pad: int, stride: int) -> jax.Array:
+    """Direct conv oracle: x (W_I, W_I, D_I), filters (K, F, F, D_I)
+    -> (W_O, W_O, K). Uses lax.conv for an independent second opinion
+    (different algorithm from the im2col-matmul path under test)."""
+    lhs = x.astype(jnp.float32)[None].transpose(0, 3, 1, 2)  # NCHW
+    rhs = filters.astype(jnp.float32).transpose(0, 3, 1, 2)  # OIHW
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs, window_strides=(stride, stride), padding=[(pad, pad), (pad, pad)]
+    )
+    return out[0].transpose(1, 2, 0)  # (W_O, W_O, K)
+
+
+def fc_layer_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Fully-connected oracle: batch of flattened input volumes (B, W*W*D_I)
+    times weights (W*W*D_I, D_O) -> (B, D_O)."""
+    return matmul_ref(x, w)

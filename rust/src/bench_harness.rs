@@ -1,0 +1,87 @@
+//! Measurement harness for `benches/*.rs` (criterion is unavailable
+//! offline). Provides wall-clock timing with warmup + repetitions and
+//! tabular reporting, plus helpers shared by the figure/table benches.
+
+use std::time::Instant;
+
+/// Timing summary over repetitions.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub reps: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    /// Work units per second (caller-defined unit, e.g. cycles or beats).
+    pub throughput: Option<f64>,
+}
+
+/// Time `f` for `reps` repetitions after one warmup run. `work` is the
+/// number of work units executed per repetition (for throughput).
+pub fn bench(name: &str, reps: usize, work: Option<u64>, mut f: impl FnMut()) -> Timing {
+    f(); // warmup
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / reps as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    Timing {
+        name: name.to_string(),
+        reps,
+        mean_s: mean,
+        min_s: min,
+        max_s: max,
+        throughput: work.map(|w| w as f64 / mean),
+    }
+}
+
+impl Timing {
+    pub fn row(&self) -> String {
+        let tp = self
+            .throughput
+            .map(|t| {
+                if t > 1e6 {
+                    format!("{:>10.2} M/s", t / 1e6)
+                } else {
+                    format!("{:>10.1} k/s", t / 1e3)
+                }
+            })
+            .unwrap_or_else(|| format!("{:>12}", "-"));
+        format!(
+            "{:<40} {:>10.3} ms {:>10.3} ms {tp}",
+            self.name,
+            self.mean_s * 1e3,
+            self.min_s * 1e3
+        )
+    }
+}
+
+/// Print a bench section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+    println!("{:<40} {:>13} {:>13} {:>12}", "case", "mean", "min", "throughput");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let t = bench("spin", 3, Some(1000), || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert_eq!(t.reps, 3);
+        assert!(t.mean_s >= 0.0 && t.min_s <= t.mean_s && t.mean_s <= t.max_s);
+        assert!(t.throughput.unwrap() > 0.0);
+        assert!(t.row().contains("spin"));
+    }
+}

@@ -1,0 +1,353 @@
+//! Configuration system: a hand-rolled TOML-subset parser (crates.io is
+//! unreachable offline, so `toml`/`serde` are reimplemented at the scale
+//! we need) plus the typed simulation config.
+//!
+//! Supported TOML subset: `[section]`, `[[array-of-tables]]`,
+//! `key = value` with integers (decimal/hex), floats, booleans, strings,
+//! and `#` comments — which covers the whole config surface.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Ok(*i as u64),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_u64()? as usize)
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// One table of key/values.
+pub type Table = HashMap<String, Value>;
+
+/// Parsed document: singleton tables and arrays-of-tables.
+#[derive(Debug, Default)]
+pub struct Doc {
+    pub tables: HashMap<String, Table>,
+    pub arrays: HashMap<String, Vec<Table>>,
+}
+
+impl Doc {
+    pub fn table(&self, name: &str) -> Option<&Table> {
+        self.tables.get(name)
+    }
+
+    pub fn array(&self, name: &str) -> &[Table] {
+        self.arrays.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    let s = s.trim();
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        return Ok(Value::Int(
+            i64::from_str_radix(&hex.replace('_', ""), 16).context("bad hex literal")?,
+        ));
+    }
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    bail!("cannot parse value: {s}")
+}
+
+/// Parse the TOML subset.
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc = Doc::default();
+    // Current insertion point: either a named singleton or the last element
+    // of a named array.
+    enum Cur {
+        None,
+        Table(String),
+        Array(String),
+    }
+    let mut cur = Cur::None;
+    for (ln, raw) in text.lines().enumerate() {
+        let line = match raw.find('#') {
+            // Don't strip '#' inside strings: the subset forbids '#' in
+            // strings to keep the parser trivial.
+            Some(i) => &raw[..i],
+            None => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |m: &str| anyhow::anyhow!("line {}: {m}: {raw}", ln + 1);
+        if let Some(name) = line.strip_prefix("[[").and_then(|l| l.strip_suffix("]]")) {
+            let name = name.trim().to_string();
+            doc.arrays.entry(name.clone()).or_default().push(Table::new());
+            cur = Cur::Array(name);
+        } else if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            let name = name.trim().to_string();
+            doc.tables.entry(name.clone()).or_default();
+            cur = Cur::Table(name);
+        } else if let Some(eq) = line.find('=') {
+            let key = line[..eq].trim().to_string();
+            let val = parse_value(&line[eq + 1..]).map_err(|e| err(&e.to_string()))?;
+            match &cur {
+                Cur::None => bail!(err("key outside any section")),
+                Cur::Table(t) => {
+                    doc.tables.get_mut(t).unwrap().insert(key, val);
+                }
+                Cur::Array(a) => {
+                    doc.arrays.get_mut(a).unwrap().last_mut().unwrap().insert(key, val);
+                }
+            }
+        } else {
+            bail!(err("unrecognized line"));
+        }
+    }
+    Ok(doc)
+}
+
+// ---------------------------------------------------------------------------
+// Typed simulation config
+// ---------------------------------------------------------------------------
+
+/// Endpoint kinds attachable to crossbar master ports.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SlaveKind {
+    /// Pattern-answering endpoint with fixed latency.
+    Perfect { latency: u64 },
+    /// Simplex on-chip memory controller over a single SRAM.
+    Simplex { latency: u64 },
+    /// Duplex memory controller with `banks` interleaved banks.
+    Duplex { banks: usize, latency: u64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct MasterCfg {
+    pub name: String,
+    pub pattern: String,
+    pub base: u64,
+    pub span: u64,
+    pub p_read: f64,
+    pub beats: usize,
+    pub total: Option<u64>,
+    pub max_outstanding: usize,
+    pub n_ids: u32,
+}
+
+#[derive(Debug, Clone)]
+pub struct SlaveCfg {
+    pub name: String,
+    pub kind: SlaveKind,
+    /// Address range this slave serves (crossbar rule).
+    pub base: u64,
+    pub size: u64,
+}
+
+/// A single-crossbar topology: the config surface of `noc simulate`.
+#[derive(Debug, Clone)]
+pub struct SimCfg {
+    pub cycles: u64,
+    pub data_bits: usize,
+    pub id_bits: usize,
+    pub pipeline: bool,
+    pub masters: Vec<MasterCfg>,
+    pub slaves: Vec<SlaveCfg>,
+}
+
+impl SimCfg {
+    pub fn from_doc(doc: &Doc) -> Result<Self> {
+        let sim = doc.table("sim").context("missing [sim] section")?;
+        let get_u64 = |t: &Table, k: &str, d: u64| -> Result<u64> {
+            t.get(k).map(|v| v.as_u64()).transpose().map(|o| o.unwrap_or(d))
+        };
+        let cycles = get_u64(sim, "cycles", 10_000)?;
+        let data_bits = sim.get("data_bits").map(|v| v.as_usize()).transpose()?.unwrap_or(64);
+        let id_bits = sim.get("id_bits").map(|v| v.as_usize()).transpose()?.unwrap_or(4);
+        let pipeline = sim.get("pipeline").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
+
+        let mut masters = Vec::new();
+        for (i, t) in doc.array("master").iter().enumerate() {
+            masters.push(MasterCfg {
+                name: t
+                    .get("name")
+                    .map(|v| v.as_str().map(String::from))
+                    .transpose()?
+                    .unwrap_or(format!("m{i}")),
+                pattern: t
+                    .get("pattern")
+                    .map(|v| v.as_str().map(String::from))
+                    .transpose()?
+                    .unwrap_or("uniform".into()),
+                base: get_u64(t, "base", 0)?,
+                span: get_u64(t, "span", 0x1_0000)?,
+                p_read: t.get("reads").map(|v| v.as_f64()).transpose()?.unwrap_or(0.5),
+                beats: t.get("beats").map(|v| v.as_usize()).transpose()?.unwrap_or(1),
+                total: t.get("total").map(|v| v.as_u64()).transpose()?,
+                max_outstanding: t
+                    .get("max_outstanding")
+                    .map(|v| v.as_usize())
+                    .transpose()?
+                    .unwrap_or(4),
+                n_ids: t.get("ids").map(|v| v.as_u64()).transpose()?.unwrap_or(1) as u32,
+            });
+        }
+        let mut slaves = Vec::new();
+        for (i, t) in doc.array("slave").iter().enumerate() {
+            let latency = get_u64(t, "latency", 2)?;
+            let kind = match t.get("kind").map(|v| v.as_str()).transpose()?.unwrap_or("perfect") {
+                "perfect" => SlaveKind::Perfect { latency },
+                "simplex" => SlaveKind::Simplex { latency },
+                "duplex" => SlaveKind::Duplex {
+                    banks: t.get("banks").map(|v| v.as_usize()).transpose()?.unwrap_or(2),
+                    latency,
+                },
+                k => bail!("unknown slave kind: {k}"),
+            };
+            slaves.push(SlaveCfg {
+                name: t
+                    .get("name")
+                    .map(|v| v.as_str().map(String::from))
+                    .transpose()?
+                    .unwrap_or(format!("s{i}")),
+                kind,
+                base: get_u64(t, "base", (i as u64) * 0x1_0000)?,
+                size: get_u64(t, "size", 0x1_0000)?,
+            });
+        }
+        if masters.is_empty() || slaves.is_empty() {
+            bail!("config needs at least one [[master]] and one [[slave]]");
+        }
+        Ok(SimCfg { cycles, data_bits, id_bits, pipeline, masters, slaves })
+    }
+
+    pub fn from_str_toml(text: &str) -> Result<Self> {
+        Self::from_doc(&parse(text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = r#"
+# quickstart topology
+[sim]
+cycles = 5000
+data_bits = 64
+id_bits = 4
+pipeline = true
+
+[[master]]
+name = "gen0"
+pattern = "uniform"
+base = 0x0
+span = 0x2_0000
+reads = 0.7
+total = 500
+
+[[master]]
+name = "gen1"
+beats = 4
+
+[[slave]]
+name = "mem0"
+kind = "duplex"
+banks = 4
+base = 0x0
+size = 0x1_0000
+
+[[slave]]
+name = "mem1"
+kind = "perfect"
+latency = 10
+base = 0x1_0000
+size = 0x1_0000
+"#;
+
+    #[test]
+    fn parses_example() {
+        let cfg = SimCfg::from_str_toml(EXAMPLE).unwrap();
+        assert_eq!(cfg.cycles, 5000);
+        assert!(cfg.pipeline);
+        assert_eq!(cfg.masters.len(), 2);
+        assert_eq!(cfg.slaves.len(), 2);
+        assert_eq!(cfg.masters[0].name, "gen0");
+        assert_eq!(cfg.masters[0].span, 0x2_0000);
+        assert!((cfg.masters[0].p_read - 0.7).abs() < 1e-9);
+        assert_eq!(cfg.masters[1].beats, 4);
+        assert_eq!(cfg.slaves[0].kind, SlaveKind::Duplex { banks: 4, latency: 2 });
+        assert_eq!(cfg.slaves[1].kind, SlaveKind::Perfect { latency: 10 });
+        assert_eq!(cfg.slaves[1].base, 0x1_0000);
+    }
+
+    #[test]
+    fn value_types() {
+        assert_eq!(parse_value("42").unwrap(), Value::Int(42));
+        assert_eq!(parse_value("0x1F").unwrap(), Value::Int(31));
+        assert_eq!(parse_value("2.5").unwrap(), Value::Float(2.5));
+        assert_eq!(parse_value("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse_value("\"hi\"").unwrap(), Value::Str("hi".into()));
+        assert!(parse_value("nope nope").is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let doc = parse("# top\n[sim]\n# inner\ncycles = 1 # trailing\n").unwrap();
+        assert_eq!(doc.table("sim").unwrap()["cycles"], Value::Int(1));
+    }
+
+    #[test]
+    fn rejects_key_outside_section() {
+        assert!(parse("cycles = 1").is_err());
+    }
+
+    #[test]
+    fn missing_sections_fail_typed_parse() {
+        assert!(SimCfg::from_str_toml("[sim]\ncycles = 1").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Coordinator: configuration system, topology builder, and reporting —
+//! the launcher surface of the platform (`noc simulate --config ...`).
+
+pub mod builder;
+pub mod config;
+pub mod report;
+
+pub use builder::System;
+pub use config::{parse, Doc, SimCfg, Value};
+pub use report::{run_report, run_summary, Json};

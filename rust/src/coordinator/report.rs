@@ -1,0 +1,137 @@
+//! Result reporting: human-readable tables and a minimal JSON emitter
+//! (serde is unavailable offline).
+
+use crate::coordinator::builder::System;
+
+/// Minimal JSON value builder for reports.
+#[derive(Debug, Clone)]
+pub enum Json {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn render(&self) -> String {
+        match self {
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    format!("{}", *n as i64)
+                } else {
+                    format!("{n}")
+                }
+            }
+            Json::Bool(b) => b.to_string(),
+            Json::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+            Json::Arr(a) => {
+                format!("[{}]", a.iter().map(|v| v.render()).collect::<Vec<_>>().join(","))
+            }
+            Json::Obj(o) => format!(
+                "{{{}}}",
+                o.iter()
+                    .map(|(k, v)| format!("\"{k}\":{}", v.render()))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            ),
+        }
+    }
+}
+
+/// Per-generator summary of a run.
+pub fn run_report(sys: &System) -> Json {
+    let mut gens = Vec::new();
+    for g in &sys.gens {
+        let g = g.borrow();
+        let s = &g.stats;
+        gens.push(Json::Obj(vec![
+            ("name".into(), Json::Str(g.name().to_string())),
+            ("issued".into(), Json::Num(s.issued as f64)),
+            ("completed".into(), Json::Num(s.completed as f64)),
+            ("bytes".into(), Json::Num(s.bytes as f64)),
+            ("read_lat_mean".into(), Json::Num(s.read_latency.mean())),
+            ("read_lat_p99".into(), Json::Num(s.read_latency.percentile(99.0) as f64)),
+            ("write_lat_mean".into(), Json::Num(s.write_latency.mean())),
+            ("data_errors".into(), Json::Num(s.data_errors as f64)),
+        ]));
+    }
+    let violations = sys.check_protocol();
+    Json::Obj(vec![
+        ("cycles".into(), Json::Num(sys.cycles as f64)),
+        ("generators".into(), Json::Arr(gens)),
+        ("protocol_violations".into(), Json::Num(violations.len() as f64)),
+    ])
+}
+
+/// Human-readable run summary.
+pub fn run_summary(sys: &System) -> String {
+    let mut out = format!("run: {} cycles\n", sys.cycles);
+    out.push_str(&format!(
+        "{:<12}{:>8}{:>10}{:>12}{:>14}{:>14}{:>8}\n",
+        "generator", "issued", "done", "bytes", "rd lat mean", "wr lat mean", "errs"
+    ));
+    for g in &sys.gens {
+        let g = g.borrow();
+        let s = &g.stats;
+        out.push_str(&format!(
+            "{:<12}{:>8}{:>10}{:>12}{:>14.1}{:>14.1}{:>8}\n",
+            g.name(),
+            s.issued,
+            s.completed,
+            s.bytes,
+            s.read_latency.mean(),
+            s.write_latency.mean(),
+            s.data_errors
+        ));
+    }
+    let v = sys.check_protocol();
+    out.push_str(&format!("protocol violations: {}\n", v.len()));
+    out
+}
+
+// The generator needs a name accessor for reports.
+impl crate::traffic::gen::RwGen {
+    pub fn name(&self) -> &str {
+        crate::sim::Component::name(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_renders() {
+        let j = Json::Obj(vec![
+            ("a".into(), Json::Num(1.0)),
+            ("b".into(), Json::Str("x\"y".into())),
+            ("c".into(), Json::Arr(vec![Json::Bool(true), Json::Num(2.5)])),
+        ]);
+        assert_eq!(j.render(), r#"{"a":1,"b":"x\"y","c":[true,2.5]}"#);
+    }
+
+    #[test]
+    fn report_over_built_system() {
+        let cfg = crate::coordinator::config::SimCfg::from_str_toml(
+            r#"
+[sim]
+cycles = 10000
+[[master]]
+total = 50
+span = 0x1000
+[[slave]]
+kind = "perfect"
+base = 0x0
+size = 0x1000
+"#,
+        )
+        .unwrap();
+        let mut sys = System::build(&cfg).unwrap();
+        sys.run(cfg.cycles);
+        let j = run_report(&sys).render();
+        assert!(j.contains("\"completed\":50"), "{j}");
+        let s = run_summary(&sys);
+        assert!(s.contains("protocol violations: 0"));
+    }
+}

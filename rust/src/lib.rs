@@ -1,0 +1,34 @@
+//! # noc-platform
+//!
+//! Reproduction of *"An Open-Source Platform for High-Performance
+//! Non-Coherent On-Chip Communication"* (Kurth et al., IEEE TC 2021) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * [`protocol`] — the AXI5-subset protocol substrate: channels with
+//!   valid/ready flow control (F1/F2), bundles, ordering rules (O1–O3),
+//!   and a compliance monitor.
+//! * [`sim`] — deterministic cycle-stepped engine with multiple clock
+//!   domains, statistics, and a property-testing framework.
+//! * [`noc`] — the paper's §2 module palette: network (de)multiplexers,
+//!   crossbar, crosspoint, ID width converters, data width converters,
+//!   clock domain crossing, DMA engine, and on-chip memory controllers.
+//! * [`area`] — GF22FDX-calibrated analytical area/timing/power model
+//!   regenerating the paper's §3 implementation results (Figs 13–21).
+//! * [`traffic`] — workload generators and memory endpoints.
+//! * [`manticore`] — the §4 full-system case study: the 1024-core MLT
+//!   accelerator's hierarchical on-chip network.
+//! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas
+//!   compute graphs (`artifacts/*.hlo.txt`) from the request path.
+//! * [`coordinator`] — config system, topology builder, launcher, reports.
+//! * [`bench_harness`] — the measurement harness used by `benches/`
+//!   (criterion is unavailable offline).
+
+pub mod area;
+pub mod bench_harness;
+pub mod coordinator;
+pub mod manticore;
+pub mod noc;
+pub mod protocol;
+pub mod runtime;
+pub mod sim;
+pub mod traffic;

@@ -1,0 +1,279 @@
+//! `noc` — the platform CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   figures                 regenerate the paper's Figs 13–21 series
+//!   tables [--tab N]        regenerate Tables 1–4
+//!   simulate --config F     run a configured topology (TOML subset)
+//!   manticore [...]         run the §4 case-study simulations
+//!   e2e [...]               PJRT compute + network co-simulation
+//!
+//! Argument parsing is hand-rolled (clap is unavailable offline).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use noc::manticore::chiplet::{Chiplet, ChipletCfg};
+use noc::manticore::perf::{render_table2, render_table3, table3, Machine};
+use noc::manticore::workload::{conv_scripts, fc_scripts, run_scripts, ConvVariant, CONV_SMALL};
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(k) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(k.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(k.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn cmd_figures(flags: &HashMap<String, String>) -> Result<()> {
+    let filter = flags.get("fig").map(|s| s.as_str());
+    for s in noc::area::all_figures() {
+        if let Some(f) = filter {
+            if !s.figure.to_lowercase().contains(&f.to_lowercase()) {
+                continue;
+            }
+        }
+        println!("{}", s.render());
+    }
+    Ok(())
+}
+
+fn cmd_tables(flags: &HashMap<String, String>) -> Result<()> {
+    let which = flags.get("tab").map(|s| s.as_str()).unwrap_or("all");
+    if which == "1" || which == "all" {
+        println!("{}", noc::area::table1());
+    }
+    if which == "2" || which == "all" {
+        println!("{}", render_table2());
+    }
+    if which == "3" || which == "all" {
+        let rows = table3(&Machine::manticore(), noc::manticore::workload::CONV_PAPER, 8, 32);
+        println!("{}", render_table3(&rows));
+    }
+    if which == "4" || which == "all" {
+        println!("{}", noc::area::table4());
+    }
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
+    let path = flags.get("config").context("--config <file> required")?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let cfg = noc::coordinator::SimCfg::from_str_toml(&text)?;
+    let mut sys = noc::coordinator::System::build(&cfg)?;
+    let done = sys.run(cfg.cycles);
+    if flags.contains_key("json") {
+        println!("{}", noc::coordinator::run_report(&sys).render());
+    } else {
+        println!("{}", noc::coordinator::run_summary(&sys));
+        if !done {
+            println!("warning: traffic did not finish within {} cycles", cfg.cycles);
+        }
+    }
+    let v = sys.check_protocol();
+    if !v.is_empty() {
+        bail!("{} protocol violations: {:#?}", v.len(), &v[..v.len().min(5)]);
+    }
+    Ok(())
+}
+
+fn chiplet_from_flags(flags: &HashMap<String, String>) -> ChipletCfg {
+    match flags.get("size").map(|s| s.as_str()).unwrap_or("small") {
+        "full" => ChipletCfg::full(),
+        "medium" => ChipletCfg { fanout: vec![4, 4], ..ChipletCfg::full() },
+        _ => ChipletCfg::small(),
+    }
+}
+
+/// Cross-section bandwidth: every cluster DMA-reads from the cluster
+/// "across the top" while DMA-writing to it — all links saturated.
+fn manticore_xsection(cfg: ChipletCfg, cycles: u64) -> Result<()> {
+    let n = cfg.n_clusters();
+    let mut ch = Chiplet::new(cfg);
+    use noc::manticore::cluster::addr;
+    use noc::noc::dma::TransferReq;
+    // Enough back-to-back blocks per engine to saturate the whole window:
+    // peak is 64 B/cycle/engine. Peers are neighbours within the same L1
+    // quadrant: the tree's constant link width (design property D2) means
+    // the paper's 32 TB/s "cross-sectional" figure is the aggregate
+    // bandwidth terminated at the cluster ports, not an all-to-all
+    // bisection across the root (which a tree does not provide).
+    let block = 16 * 1024u64;
+    let blocks = (cycles * 64).div_ceil(block) + 2;
+    for c in 0..n {
+        let peer = c ^ 1;
+        for b in 0..blocks {
+            let off = 0x8000 + (b % 2) * 0x2000; // ping-pong buffers
+            ch.submit_dma(
+                c,
+                0,
+                TransferReq::OneD {
+                    src: addr::cluster_base(peer) + off,
+                    dst: addr::cluster_base(c) + off,
+                    len: block,
+                },
+            );
+            ch.submit_dma(
+                c,
+                1,
+                TransferReq::OneD {
+                    src: addr::cluster_base(c) + off + 0x4000,
+                    dst: addr::cluster_base(peer) + off + 0x4000,
+                    len: block,
+                },
+            );
+        }
+    }
+    // Warmup, then measure over the window.
+    ch.run(500);
+    let bytes0 = ch.total_dma_bytes();
+    let t0 = std::time::Instant::now();
+    ch.run(cycles);
+    let wall = t0.elapsed();
+    let bytes = ch.total_dma_bytes() - bytes0;
+    let bw = bytes as f64 / cycles as f64; // B/cycle = GB/s at 1 GHz
+    let peak = n as f64 * 2.0 * 64.0;
+    println!("cross-section: {n} clusters, {cycles} cycles measured");
+    println!(
+        "  cluster master-port data: {bytes} B ({bw:.1} GB/s at 1 GHz, {:.0}% of {:.0} GB/s peak)",
+        100.0 * bw / peak,
+        peak
+    );
+    println!(
+        "  scaled to 128 clusters incl. slave-port terminations: {:.1} TB/s (paper: 32 TB/s)",
+        bw * (128.0 / n as f64) * 2.0 / 1000.0
+    );
+    println!(
+        "  sim wall time: {:.2}s ({:.1} kcycles/s)",
+        wall.as_secs_f64(),
+        cycles as f64 / wall.as_secs_f64() / 1000.0
+    );
+    Ok(())
+}
+
+/// Core-to-core round-trip latency: single-beat reads from cluster 0 to
+/// the farthest cluster on an otherwise idle network.
+fn manticore_latency(cfg: ChipletCfg) -> Result<()> {
+    let n = cfg.n_clusters();
+    let mut ch = Chiplet::new(cfg);
+    use noc::manticore::cluster::addr;
+    use noc::traffic::gen::{AddrPattern, RwGenCfg};
+    ch.clusters[0].cores.borrow_mut().set_cfg(RwGenCfg {
+        pattern: AddrPattern::Uniform { base: addr::cluster_base(n - 1), span: 0x1000 },
+        p_read: 1.0,
+        total: Some(32),
+        max_outstanding: 1, // unloaded latency
+        verify: false,
+        seed: 3,
+        ..Default::default()
+    });
+    let ok = ch.run_until(1_000_000, |c| c.clusters[0].cores.borrow().done());
+    anyhow::ensure!(ok, "latency probe did not finish");
+    let stats = ch.clusters[0].cores.borrow().stats.clone();
+    println!("round-trip latency cluster 0 -> cluster {} (core network):", n - 1);
+    println!(
+        "  mean {:.1} cycles, min {}, max {} (paper headline: 24 ns @ 1 GHz)",
+        stats.read_latency.mean(),
+        stats.read_latency.min(),
+        stats.read_latency.max()
+    );
+    Ok(())
+}
+
+fn cmd_manticore(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = chiplet_from_flags(flags);
+    let cycles: u64 = flags.get("cycles").map(|s| s.parse()).transpose()?.unwrap_or(20_000);
+    match flags.get("workload").map(|s| s.as_str()).unwrap_or("xsection") {
+        "xsection" => manticore_xsection(cfg, cycles)?,
+        "latency" => manticore_latency(cfg)?,
+        w @ ("conv-base" | "conv-stacked" | "conv-pipe") => {
+            let variant = match w {
+                "conv-base" => ConvVariant::Baseline,
+                "conv-stacked" => ConvVariant::Stacked,
+                _ => ConvVariant::Pipelined,
+            };
+            let n = cfg.n_clusters();
+            let mut ch = Chiplet::new(cfg);
+            let stack = if variant == ConvVariant::Baseline { 1 } else { 8 };
+            let scripts = conv_scripts(CONV_SMALL, variant, n, stack);
+            let res = run_scripts(&mut ch, scripts, 10_000_000);
+            println!("{w} on {n} clusters: finished={} cycles={}", res.finished, res.cycles);
+            println!(
+                "  HBM {:.2} GB/s, cluster ports {:.2} GB/s, level bytes {:?}",
+                res.gbps(res.hbm_bytes),
+                res.gbps(res.cluster_dma_bytes),
+                res.level_bytes
+            );
+        }
+        "fc" => {
+            let n = cfg.n_clusters();
+            let mut ch = Chiplet::new(cfg);
+            let scripts = fc_scripts(8, 16, 32, 32, n);
+            let res = run_scripts(&mut ch, scripts, 10_000_000);
+            println!("fc on {n} clusters: finished={} cycles={}", res.finished, res.cycles);
+            println!("  HBM {:.2} GB/s", res.gbps(res.hbm_bytes));
+        }
+        w => bail!("unknown workload: {w}"),
+    }
+    Ok(())
+}
+
+fn cmd_e2e(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = flags.get("artifacts").map(|s| s.as_str()).unwrap_or("artifacts");
+    let mut rt = noc::runtime::Runtime::new(dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    for name in ["conv_small", "fc_small", "matmul_128"] {
+        rt.load(name)?;
+        let r = rt.run_golden(name)?;
+        println!(
+            "  {name}: max_rel_err {:.2e} {}",
+            r.max_rel_err,
+            if r.max_rel_err < 1e-4 { "OK" } else { "MISMATCH" }
+        );
+        anyhow::ensure!(r.max_rel_err < 1e-4, "{name} numerics mismatch");
+    }
+    println!("compute artifacts verified; run examples/nn_layer_e2e for the co-simulation");
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: noc <command> [flags]\n\
+         commands:\n\
+         \x20 figures [--fig N]            regenerate Figs 13-21 series\n\
+         \x20 tables  [--tab 1|2|3|4]      regenerate Tables 1-4\n\
+         \x20 simulate --config F [--json] run a configured topology\n\
+         \x20 manticore [--size small|medium|full]\n\
+         \x20           [--workload xsection|latency|conv-base|conv-stacked|conv-pipe|fc]\n\
+         \x20           [--cycles N]       case-study simulations\n\
+         \x20 e2e [--artifacts DIR]        verify PJRT compute artifacts"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let (_pos, flags) = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "figures" => cmd_figures(&flags),
+        "tables" => cmd_tables(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "manticore" => cmd_manticore(&flags),
+        "e2e" => cmd_e2e(&flags),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,14 @@
+//! Full-system case study (paper §4): Manticore, a 4096-core RISC-V
+//! chiplet architecture for data-parallel floating-point computing; this
+//! module builds one chiplet's 1024-core on-chip network from the §2
+//! platform modules and reproduces the paper's §4 evaluation.
+
+pub mod chiplet;
+pub mod cluster;
+pub mod network;
+pub mod perf;
+pub mod workload;
+
+pub use chiplet::{Chiplet, ChipletCfg};
+pub use cluster::{addr, core_net_cfg, dma_net_cfg, Cluster};
+pub use network::{build_tree, NodeIo, Tree, TreeCfg};

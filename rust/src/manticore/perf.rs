@@ -1,0 +1,323 @@
+//! Analytical performance and implementation models for the Manticore
+//! case study: Table 2 (network implementation results) and Table 3
+//! (NN-layer performance), cross-checked against simulation by the bench
+//! harness (`benches/tab2_manticore.rs`, `benches/tab3_nn.rs`).
+
+use crate::area::model::{area_timing, Module};
+use crate::manticore::workload::ConvCfg;
+
+// ---------------------------------------------------------------------------
+// Table 3: NN layer performance
+// ---------------------------------------------------------------------------
+
+/// Machine parameters of one chiplet (paper §4).
+pub struct Machine {
+    pub clusters: usize,
+    pub fpus_per_cluster: usize,
+    pub freq_ghz: f64,
+    pub fpu_util: f64,
+    /// HBM bandwidth caps (GB/s): read channel and total.
+    pub hbm_read_gbps: f64,
+    pub hbm_total_gbps: f64,
+}
+
+impl Machine {
+    pub fn manticore() -> Self {
+        Machine {
+            clusters: 128,
+            fpus_per_cluster: 8,
+            freq_ghz: 1.0,
+            fpu_util: 0.8,
+            hbm_read_gbps: 256.0,
+            hbm_total_gbps: 262.0,
+        }
+    }
+
+    /// Peak sustained dpflop/s (FMA = 2 flops) in Gdpflop/s.
+    pub fn peak_gflops(&self) -> f64 {
+        self.clusters as f64 * self.fpus_per_cluster as f64 * 2.0 * self.freq_ghz * self.fpu_util
+            * 1.0e9
+            / 1.0e9
+    }
+}
+
+/// One column of Table 3.
+#[derive(Debug, Clone)]
+pub struct Tab3Row {
+    pub label: &'static str,
+    pub op_intensity: f64,
+    pub hbm_gbps: f64,
+    pub l3_gbps: f64,
+    pub l2_gbps: f64,
+    pub l1_gbps: f64,
+    pub perf_gflops: f64,
+}
+
+/// Compute the four Table 3 columns analytically (paper §4.3).
+pub fn table3(machine: &Machine, conv: ConvCfg, stack: usize, fc_batch: usize) -> Vec<Tab3Row> {
+    let peak = machine.peak_gflops();
+    let flops = conv.flops() as f64;
+
+    // Per-variant HBM bytes for the conv layer (see python model.py for
+    // the identical accounting, unit-tested against the paper's numbers).
+    let conv_row = |label: &'static str, input_passes: f64, hbm_only_input: bool| -> Tab3Row {
+        let l1_passes = (conv.k as f64 / stack as f64).ceil();
+        let l1_bytes =
+            l1_passes * conv.in_bytes() as f64 + conv.filter_bytes() as f64 + conv.out_bytes() as f64;
+        let hbm_bytes = if hbm_only_input {
+            input_passes * conv.in_bytes() as f64
+        } else {
+            input_passes * conv.in_bytes() as f64
+                + conv.filter_bytes() as f64
+                + conv.out_bytes() as f64
+        };
+        // Cluster-level operational intensity (compute per L1 byte).
+        let oi_cluster = flops / l1_bytes;
+        // HBM-level intensity decides compute- vs memory-bound.
+        let oi_hbm = flops / hbm_bytes;
+        let perf = (oi_hbm * machine.hbm_total_gbps).min(peak);
+        let hbm_bw = perf / oi_hbm;
+        let l1_bw = perf / oi_cluster;
+        // L2: pipelined forwarding crosses an L1-quadrant boundary for 1 in
+        // 4 hops (4 clusters per L1 quadrant); otherwise levels carry the
+        // HBM stream.
+        let (l2_bw, l3_bw) = if hbm_only_input {
+            (l1_bw / 4.0, hbm_bw)
+        } else {
+            (hbm_bw, hbm_bw)
+        };
+        Tab3Row {
+            label,
+            op_intensity: oi_cluster,
+            hbm_gbps: hbm_bw,
+            l3_gbps: l3_bw,
+            l2_gbps: l2_bw,
+            l1_gbps: l1_bw,
+            perf_gflops: perf,
+        }
+    };
+
+    // Baseline: the whole input volume streams once per output slice, and
+    // the cluster-level intensity equals the HBM-level one.
+    let baseline = {
+        let input_passes = conv.k as f64;
+        let hbm_bytes = input_passes * conv.in_bytes() as f64
+            + conv.filter_bytes() as f64
+            + conv.out_bytes() as f64;
+        let oi = flops / hbm_bytes;
+        let perf = (oi * machine.hbm_total_gbps).min(peak);
+        let bw = perf / oi;
+        Tab3Row {
+            label: "conv base",
+            op_intensity: oi,
+            hbm_gbps: bw,
+            l3_gbps: bw,
+            l2_gbps: bw,
+            l1_gbps: bw,
+            perf_gflops: perf,
+        }
+    };
+
+    let stacked = conv_row("conv stacked", (conv.k as f64 / stack as f64).ceil(), false);
+    let pipelined = conv_row("conv pipe'd", 1.0, true);
+
+    // Fully connected: weights dominate; everything moves once.
+    let fc = {
+        let in_features = (conv.wi * conv.wi * conv.di) as f64;
+        let fc_flops = 2.0 * fc_batch as f64 * in_features * conv.k as f64;
+        let bytes = fc_batch as f64 * in_features * 8.0
+            + in_features * conv.k as f64 * 8.0
+            + fc_batch as f64 * conv.k as f64 * 8.0;
+        let oi = fc_flops / bytes;
+        let perf = (oi * machine.hbm_total_gbps).min(peak);
+        let bw = perf / oi;
+        Tab3Row {
+            label: "fully conn.",
+            op_intensity: oi,
+            hbm_gbps: bw,
+            l3_gbps: bw,
+            l2_gbps: bw,
+            l1_gbps: bw,
+            perf_gflops: perf,
+        }
+    };
+
+    vec![baseline, stacked, pipelined, fc]
+}
+
+pub fn render_table3(rows: &[Tab3Row]) -> String {
+    let mut out = String::from(
+        "Table 3 — Manticore NN-layer performance (analytical; GB/s, Gdpflop/s)\n",
+    );
+    out.push_str(&format!(
+        "{:<14}{:>10}{:>10}{:>10}{:>10}{:>10}{:>12}\n",
+        "layer", "OI [f/B]", "HBM BW", "L3 BW", "L2 BW", "L1 BW", "perf"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<14}{:>10.1}{:>10.0}{:>10.0}{:>10.0}{:>10.0}{:>12.0}\n",
+            r.label, r.op_intensity, r.hbm_gbps, r.l3_gbps, r.l2_gbps, r.l1_gbps, r.perf_gflops
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Table 2: network implementation results
+// ---------------------------------------------------------------------------
+
+/// One row block of Table 2 (per network level).
+#[derive(Debug, Clone)]
+pub struct Tab2Level {
+    pub name: &'static str,
+    pub area_mm2_per_inst: f64,
+    pub power_mw_per_inst: f64,
+    pub insts_per_chiplet: usize,
+}
+
+/// Physical model: module standard-cell area from the §3 model
+/// (data-width scaled); the *wire* share of each level is anchored to the
+/// paper's published Table 2 per-instance areas — P&R routing-channel
+/// area is floorplan-determined and cannot be derived from a gate-level
+/// model (the paper: "the area of each network level is mainly determined
+/// by the available routing channels"). The power *split* across levels
+/// is genuinely modeled (cell power + wire load growing with the level
+/// span) and calibrated only in its overall activity factor.
+pub fn table2() -> Vec<Tab2Level> {
+    // Cell area: per level, one 5x5 512-bit crosspoint (DMA net) + one 5x5
+    // 64-bit crosspoint (core net) + pipeline registers.
+    let xp64 = area_timing(Module::Crosspoint { s: 5, m: 5, i: 4 }).kge;
+    // Datapath fraction ~65% scales with width (512/64 = 8x).
+    let width_scale = |w: f64| 0.35 + 0.65 * (w / 64.0);
+    let xp512 = xp64 * width_scale(512.0);
+    let cells_kge = xp512 + xp64;
+    let cell_mm2 = cells_kge * 1000.0 * crate::area::calib::UM2_PER_GE / 1e6;
+
+    // Level spans in cluster widths (L1 quadrant = 2x2 clusters, ...).
+    let spans = [2.1f64, 4.2, 8.4]; // mm, at ~1.05 mm cluster pitch
+    // Wire-area anchors: paper per-instance areas minus our cell area.
+    let paper_area = [0.41f64, 1.40, 2.99];
+    let names = ["L1", "L2", "L3"];
+    let insts = [32usize, 8, 2];
+    // Overall activity calibrated so the chiplet network totals ~396 mW;
+    // the per-level split follows the span-dependent wire load.
+    let activity = 0.028;
+    names
+        .iter()
+        .zip(spans.iter().zip(paper_area))
+        .zip(insts)
+        .map(|((name, (&span, parea)), ins)| {
+            let wire_mm2 = (parea - cell_mm2).max(0.0);
+            let area = cell_mm2 + wire_mm2;
+            // Power: cell switching at 1 GHz plus wire capacitance that
+            // grows with the span the level's bundles traverse.
+            let power = cells_kge
+                * crate::area::calib::MW_PER_KGE_GHZ
+                * activity
+                * (1.0 + span / 4.0);
+            Tab2Level {
+                name,
+                area_mm2_per_inst: area,
+                power_mw_per_inst: power,
+                insts_per_chiplet: ins,
+            }
+        })
+        .collect()
+}
+
+pub fn render_table2() -> String {
+    let levels = table2();
+    let mut out = String::from("Table 2 — Manticore network implementation results (modeled)\n");
+    out.push_str(&format!(
+        "{:<8}{:>16}{:>16}{:>8}{:>16}{:>16}\n",
+        "level", "area/inst [mm2]", "power/inst [mW]", "#insts", "area/chip [mm2]", "power/chip [mW]"
+    ));
+    let mut tot_area = 0.0;
+    let mut tot_power = 0.0;
+    for l in &levels {
+        let a = l.area_mm2_per_inst * l.insts_per_chiplet as f64;
+        let p = l.power_mw_per_inst * l.insts_per_chiplet as f64;
+        tot_area += a;
+        tot_power += p;
+        out.push_str(&format!(
+            "{:<8}{:>16.2}{:>16.1}{:>8}{:>16.2}{:>16.1}\n",
+            l.name, l.area_mm2_per_inst, l.power_mw_per_inst, l.insts_per_chiplet, a, p
+        ));
+    }
+    out.push_str(&format!(
+        "{:<8}{:>16}{:>16}{:>8}{:>16.2}{:>16.1}\n",
+        "total", "-", "-", "-", tot_area, tot_power
+    ));
+    out.push_str(&format!(
+        "paper:   L1 0.41 / L2 1.40 / L3 2.99 mm2 per inst; total 30.43 mm2, 396 mW\n\
+         per-core network area: {:.0} um2 (paper: 29710 um2)\n",
+        tot_area * 1e6 / 1024.0
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manticore::workload::CONV_PAPER;
+
+    #[test]
+    fn peak_performance_matches_paper() {
+        let m = Machine::manticore();
+        // 128 clusters x 8 FPUs x 2 flop x 80% = 1638.4 Gdpflop/s.
+        assert!((m.peak_gflops() - 1638.4).abs() < 1.0);
+    }
+
+    #[test]
+    fn table3_matches_paper_shape() {
+        let rows = table3(&Machine::manticore(), CONV_PAPER, 8, 32);
+        let base = &rows[0];
+        let stacked = &rows[1];
+        let piped = &rows[2];
+        let fc = &rows[3];
+        // Paper column 1: OI 2.2, HBM 262, perf 571.
+        assert!((base.op_intensity - 2.2).abs() < 0.15, "{base:?}");
+        assert!((base.perf_gflops - 571.0).abs() < 25.0, "{base:?}");
+        // Column 2: OI 15.9, HBM ~98, perf 1638 (compute bound).
+        assert!((stacked.op_intensity - 15.9).abs() < 0.5, "{stacked:?}");
+        assert!((stacked.perf_gflops - 1638.0).abs() < 10.0);
+        assert!((stacked.hbm_gbps - 98.0).abs() < 10.0, "{stacked:?}");
+        // Column 3: HBM drops to ~6 GB/s at constant perf; L1 stays ~98.
+        assert!(piped.hbm_gbps < 10.0, "{piped:?}");
+        assert!((piped.perf_gflops - 1638.0).abs() < 10.0);
+        assert!((piped.l1_gbps - 98.0).abs() < 10.0, "{piped:?}");
+        assert!(piped.l2_gbps < 30.0 && piped.l2_gbps > 10.0, "{piped:?}");
+        // Column 4: compute bound; paper reports OI 7.9 with weight-dominated
+        // accounting (our strict in+w+out accounting gives ~6.4).
+        assert!((5.5..9.0).contains(&fc.op_intensity), "{fc:?}");
+        assert!(fc.perf_gflops > 1500.0);
+    }
+
+    #[test]
+    fn table2_magnitudes() {
+        let levels = table2();
+        assert_eq!(levels.len(), 3);
+        // Per-instance area must grow with the level span.
+        assert!(levels[0].area_mm2_per_inst < levels[1].area_mm2_per_inst);
+        assert!(levels[1].area_mm2_per_inst < levels[2].area_mm2_per_inst);
+        // Within 2x of the paper's per-instance values.
+        let paper = [0.41, 1.40, 2.99];
+        for (l, p) in levels.iter().zip(paper) {
+            let ratio = l.area_mm2_per_inst / p;
+            assert!((0.5..2.0).contains(&ratio), "{}: {} vs paper {p}", l.name, l.area_mm2_per_inst);
+        }
+        // Total network power within 2x of 396 mW.
+        let total: f64 =
+            levels.iter().map(|l| l.power_mw_per_inst * l.insts_per_chiplet as f64).sum();
+        assert!((200.0..800.0).contains(&total), "total power {total}");
+    }
+
+    #[test]
+    fn render_functions_produce_tables() {
+        let rows = table3(&Machine::manticore(), CONV_PAPER, 8, 32);
+        let t3 = render_table3(&rows);
+        assert!(t3.contains("conv stacked"));
+        let t2 = render_table2();
+        assert!(t2.contains("L1") && t2.contains("29710"));
+    }
+}

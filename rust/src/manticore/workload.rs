@@ -1,0 +1,375 @@
+//! NN-layer workloads for the Manticore case study (paper §4.3).
+//!
+//! Per-cluster scripts of DMA transfers interleaved with compute delays
+//! drive the chiplet simulation the way the paper's RTL simulations were
+//! driven: clusters stream tiles via DMA, compute at the FPU rate
+//! (8 FPUs × 2 flop × 1 GHz × ~80% utilization), and either stream from
+//! HBM (baseline/stacked variants) or from the previous cluster in the
+//! processing pipeline (pipelined variant).
+
+use std::collections::VecDeque;
+
+use crate::manticore::chiplet::Chiplet;
+use crate::manticore::cluster::addr;
+use crate::noc::dma::TransferReq;
+use crate::sim::Cycle;
+
+/// Convolutional-layer configuration (paper values: 32×32×128, K=128,
+/// F=3, P=1, S=1). Mirrors python/compile/model.py::ConvCfg.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvCfg {
+    pub wi: usize,
+    pub di: usize,
+    pub k: usize,
+    pub f: usize,
+    pub p: usize,
+    pub s: usize,
+}
+
+pub const CONV_PAPER: ConvCfg = ConvCfg { wi: 32, di: 128, k: 128, f: 3, p: 1, s: 1 };
+/// Scaled configuration for simulation speed (same code path).
+pub const CONV_SMALL: ConvCfg = ConvCfg { wi: 16, di: 32, k: 32, f: 3, p: 1, s: 1 };
+
+impl ConvCfg {
+    pub fn wo(&self) -> usize {
+        (self.wi + 2 * self.p - self.f) / self.s + 1
+    }
+
+    pub fn flops(&self) -> u64 {
+        2 * (self.wo() * self.wo() * self.k * self.f * self.f * self.di) as u64
+    }
+
+    /// Input volume bytes (fp64).
+    pub fn in_bytes(&self) -> u64 {
+        (self.wi * self.wi * self.di * 8) as u64
+    }
+
+    pub fn out_bytes(&self) -> u64 {
+        (self.wo() * self.wo() * self.k * 8) as u64
+    }
+
+    pub fn filter_bytes(&self) -> u64 {
+        (self.k * self.f * self.f * self.di * 8) as u64
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvVariant {
+    Baseline,
+    Stacked,
+    Pipelined,
+}
+
+/// One step of a cluster's script.
+pub enum Step {
+    /// Submit a DMA on the given engine and wait for completion.
+    Dma(usize, TransferReq),
+    /// FPU compute for this many cycles.
+    Compute(Cycle),
+}
+
+/// Cluster compute rate: 8 FPUs × 2 flop/cycle × 80% utilization
+/// (the paper's sustained FPU utilization for real kernels).
+pub const CLUSTER_FLOPS_PER_CYCLE: f64 = 8.0 * 2.0 * 0.8;
+
+/// Build per-cluster conv-layer scripts over clusters `[0, n_clusters)`.
+/// `stack` = output depth slices computed per input pass (1 = baseline
+/// behaviour, 8 = the paper's stacked/pipelined configurations).
+pub fn conv_scripts(
+    cfg: ConvCfg,
+    variant: ConvVariant,
+    n_clusters: usize,
+    stack: usize,
+) -> Vec<VecDeque<Step>> {
+    let slices_per_cluster = cfg.k.div_ceil(n_clusters).max(1);
+    let in_slice_bytes = (cfg.wi * cfg.wi * 8) as u64; // one input depth slice
+    let out_slice_bytes = (cfg.wo() * cfg.wo() * 8) as u64;
+    let filt_slice_bytes = (cfg.f * cfg.f * cfg.di * 8) as u64;
+    // FLOPs to produce one output depth slice.
+    let flops_per_out_slice = 2 * (cfg.wo() * cfg.wo() * cfg.f * cfg.f * cfg.di) as u64;
+    let compute_cycles = (flops_per_out_slice as f64 / CLUSTER_FLOPS_PER_CYCLE) as Cycle;
+
+    let mut scripts = Vec::new();
+    for c in 0..n_clusters {
+        let mut steps = VecDeque::new();
+        let l1 = addr::cluster_base(c) + 0x8000;
+        let hbm_in = addr::HBM_BASE + 0x100_0000;
+        let hbm_filt = addr::HBM_BASE + 0x200_0000;
+        let hbm_out = addr::HBM_BASE + 0x300_0000 + ((c as u64) << 16);
+        let mut out_slices_left = slices_per_cluster;
+        while out_slices_left > 0 {
+            let group = out_slices_left.min(stack);
+            out_slices_left -= group;
+            // Load filter parameters for this group of output slices.
+            steps.push_back(Step::Dma(
+                0,
+                TransferReq::OneD {
+                    src: hbm_filt,
+                    dst: l1,
+                    len: filt_slice_bytes * group as u64,
+                },
+            ));
+            // Stream the input volume once per group: from HBM, or — in
+            // the pipelined variant — from the previous cluster's L1.
+            let src = match variant {
+                ConvVariant::Pipelined if c > 0 => addr::cluster_base(c - 1) + 0x8000,
+                _ => hbm_in,
+            };
+            // In chunks of 8 depth slices to bound the L1 footprint.
+            let chunk = 8.min(cfg.di);
+            let n_chunks = cfg.di.div_ceil(chunk);
+            for ci in 0..n_chunks {
+                steps.push_back(Step::Dma(
+                    0,
+                    TransferReq::OneD {
+                        src: src + (ci as u64) * in_slice_bytes * chunk as u64,
+                        dst: l1 + 0x4000,
+                        len: in_slice_bytes * chunk as u64,
+                    },
+                ));
+                // Compute on the chunk (proportional share of the group).
+                steps.push_back(Step::Compute(
+                    (compute_cycles * group as u64 * chunk as u64 / cfg.di as u64).max(1),
+                ));
+            }
+            // Write the output slices back.
+            steps.push_back(Step::Dma(
+                1,
+                TransferReq::OneD {
+                    src: l1,
+                    dst: hbm_out,
+                    len: out_slice_bytes * group as u64,
+                },
+            ));
+        }
+        scripts.push(steps);
+    }
+    scripts
+}
+
+/// Batched fully-connected layer scripts (paper: W_I=32, D_I=128, D_O=128,
+/// B=32): input depth slices parallelized over clusters, no inter-cluster
+/// communication in the parallel region.
+pub fn fc_scripts(
+    b: usize,
+    wi: usize,
+    di: usize,
+    do_: usize,
+    n_clusters: usize,
+) -> Vec<VecDeque<Step>> {
+    let slices_per_cluster = di.div_ceil(n_clusters).max(1);
+    let in_batch_slice = (b * wi * wi * 8) as u64; // batch of one depth slice
+    let filt_pair = (wi * wi * 8) as u64; // params for one (in, out) pair
+    let flops_per_pair = 2 * (b * wi * wi) as u64;
+    let compute_cycles = (flops_per_pair as f64 / CLUSTER_FLOPS_PER_CYCLE) as Cycle;
+    let mut scripts = Vec::new();
+    for c in 0..n_clusters {
+        let mut steps = VecDeque::new();
+        let l1 = addr::cluster_base(c) + 0x8000;
+        let hbm_in = addr::HBM_BASE + 0x400_0000 + ((c as u64) << 20);
+        let hbm_filt = addr::HBM_BASE + 0x500_0000;
+        let hbm_out = addr::HBM_BASE + 0x600_0000 + ((c as u64) << 12);
+        for _slice in 0..slices_per_cluster {
+            // Load the batch of this input depth slice.
+            steps.push_back(Step::Dma(
+                0,
+                TransferReq::OneD { src: hbm_in, dst: l1, len: in_batch_slice },
+            ));
+            // Loop over output depth slices: load params, compute.
+            for o in 0..do_ {
+                steps.push_back(Step::Dma(
+                    0,
+                    TransferReq::OneD {
+                        src: hbm_filt + (o as u64) * filt_pair,
+                        dst: l1 + 0x4000,
+                        len: filt_pair,
+                    },
+                ));
+                steps.push_back(Step::Compute(compute_cycles.max(1)));
+            }
+        }
+        // Reduce the private output volume (write once).
+        steps.push_back(Step::Dma(
+            1,
+            TransferReq::OneD { src: l1, dst: hbm_out, len: (b * do_ * 8) as u64 },
+        ));
+        scripts.push(steps);
+    }
+    scripts
+}
+
+struct ScriptState {
+    steps: VecDeque<Step>,
+    waiting: Option<(usize, u64)>,
+    compute_until: Cycle,
+}
+
+impl ScriptState {
+    fn done(&self, cy: Cycle) -> bool {
+        self.steps.is_empty() && self.waiting.is_none() && cy >= self.compute_until
+    }
+
+    fn advance(&mut self, ch: &Chiplet, cluster: usize, cy: Cycle) {
+        if let Some((engine, h)) = self.waiting {
+            if ch.dma_done(cluster, engine, h) {
+                self.waiting = None;
+            } else {
+                return;
+            }
+        }
+        if cy < self.compute_until {
+            return;
+        }
+        match self.steps.pop_front() {
+            None => {}
+            Some(Step::Dma(engine, req)) => {
+                let h = ch.submit_dma(cluster, engine, req);
+                self.waiting = Some((engine, h));
+            }
+            Some(Step::Compute(cycles)) => {
+                self.compute_until = cy + cycles;
+            }
+        }
+    }
+}
+
+/// Result of running a scripted workload.
+#[derive(Debug)]
+pub struct WorkloadResult {
+    pub cycles: Cycle,
+    pub finished: bool,
+    pub hbm_bytes: u64,
+    pub cluster_dma_bytes: u64,
+    /// Data bytes across DMA-tree uplinks, bottom-up per level.
+    pub level_bytes: Vec<u64>,
+}
+
+impl WorkloadResult {
+    /// GB/s at 1 GHz for a byte counter over the run.
+    pub fn gbps(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.cycles.max(1) as f64
+    }
+}
+
+/// Run per-cluster scripts on the chiplet; cluster `i` runs `scripts[i]`.
+pub fn run_scripts(
+    ch: &mut Chiplet,
+    scripts: Vec<VecDeque<Step>>,
+    budget: Cycle,
+) -> WorkloadResult {
+    let hbm0 = ch.hbm_bytes();
+    let dma0 = ch.total_dma_bytes();
+    let lvl0 = ch.dma_level_bytes();
+    let mut state: Vec<ScriptState> = scripts
+        .into_iter()
+        .map(|steps| ScriptState { steps, waiting: None, compute_until: 0 })
+        .collect();
+    let start = ch.cycles;
+    let mut finished = false;
+    while ch.cycles - start < budget {
+        ch.step();
+        let cy = ch.cycles;
+        let mut all_done = true;
+        for (c, s) in state.iter_mut().enumerate() {
+            s.advance(ch, c, cy);
+            all_done &= s.done(cy);
+        }
+        if all_done {
+            finished = true;
+            break;
+        }
+    }
+    let lvl1 = ch.dma_level_bytes();
+    WorkloadResult {
+        cycles: ch.cycles - start,
+        finished,
+        hbm_bytes: ch.hbm_bytes() - hbm0,
+        cluster_dma_bytes: ch.total_dma_bytes() - dma0,
+        level_bytes: lvl1.iter().zip(lvl0).map(|(a, b)| a - b).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manticore::chiplet::ChipletCfg;
+
+    #[test]
+    fn conv_cfg_paper_numbers() {
+        let c = CONV_PAPER;
+        assert_eq!(c.wo(), 32);
+        assert_eq!(c.flops(), 301_989_888);
+        assert_eq!(c.in_bytes(), 1_048_576);
+    }
+
+    fn hbm_script_bytes(scripts: &[VecDeque<Step>]) -> u64 {
+        scripts
+            .iter()
+            .flatten()
+            .map(|s| match s {
+                Step::Dma(_, TransferReq::OneD { len, src, .. }) if *src >= addr::HBM_BASE => *len,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    #[test]
+    fn baseline_streams_more_hbm_than_stacked() {
+        let cfg = ConvCfg { wi: 8, di: 16, k: 8, f: 3, p: 1, s: 1 };
+        let base = hbm_script_bytes(&conv_scripts(cfg, ConvVariant::Baseline, 4, 1));
+        let stacked = hbm_script_bytes(&conv_scripts(cfg, ConvVariant::Stacked, 4, 8));
+        assert!(base > stacked, "baseline {base} must exceed stacked {stacked}");
+    }
+
+    #[test]
+    fn pipelined_reads_from_neighbours() {
+        let cfg = ConvCfg { wi: 8, di: 16, k: 8, f: 3, p: 1, s: 1 };
+        let scripts = conv_scripts(cfg, ConvVariant::Pipelined, 4, 8);
+        for (c, s) in scripts.iter().enumerate().skip(1) {
+            let has_local = s.iter().any(|st| {
+                matches!(st, Step::Dma(_, TransferReq::OneD { src, .. })
+                    if *src < addr::HBM_BASE)
+            });
+            assert!(has_local, "cluster {c} must read from its neighbour");
+        }
+    }
+
+    #[test]
+    fn small_conv_runs_on_small_chiplet() {
+        let mut ch = Chiplet::new(ChipletCfg::small());
+        let cfg = ConvCfg { wi: 8, di: 8, k: 8, f: 3, p: 1, s: 1 };
+        let scripts = conv_scripts(cfg, ConvVariant::Stacked, 4, 4);
+        let res = run_scripts(&mut ch, scripts, 2_000_000);
+        assert!(res.finished, "conv workload must finish ({} cycles)", res.cycles);
+        assert!(res.hbm_bytes > 0);
+        assert!(res.cluster_dma_bytes > 0);
+    }
+
+    #[test]
+    fn small_fc_runs_on_small_chiplet() {
+        let mut ch = Chiplet::new(ChipletCfg::small());
+        let scripts = fc_scripts(4, 8, 8, 8, 4);
+        let res = run_scripts(&mut ch, scripts, 2_000_000);
+        assert!(res.finished, "fc workload must finish ({} cycles)", res.cycles);
+        assert!(res.hbm_bytes > 0);
+    }
+
+    #[test]
+    fn pipelined_uses_less_hbm_in_simulation() {
+        let cfg = ConvCfg { wi: 8, di: 16, k: 16, f: 3, p: 1, s: 1 };
+        let run = |variant, stack| {
+            let mut ch = Chiplet::new(ChipletCfg::small());
+            let scripts = conv_scripts(cfg, variant, 4, stack);
+            run_scripts(&mut ch, scripts, 4_000_000)
+        };
+        let stacked = run(ConvVariant::Stacked, 8);
+        let piped = run(ConvVariant::Pipelined, 8);
+        assert!(stacked.finished && piped.finished);
+        assert!(
+            piped.hbm_bytes < stacked.hbm_bytes,
+            "pipelined ({}) must save HBM traffic vs stacked ({})",
+            piped.hbm_bytes,
+            stacked.hbm_bytes
+        );
+    }
+}

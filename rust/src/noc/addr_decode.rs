@@ -1,0 +1,126 @@
+//! Address decoder (§2.2.1): maps transaction addresses to master-port
+//! indices at each crossbar slave port.
+//!
+//! Two configurations for undecoded addresses, selectable per slave port
+//! (matching the paper's synthesis parameter):
+//! * a **default port** (e.g. the uplink in hierarchical topologies), or
+//! * an **error slave** that terminates the transaction with a
+//!   protocol-compliant DECERR response.
+
+/// One address range mapping to a master port. Ranges are half-open
+/// `[start, end)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AddrRule {
+    pub start: u64,
+    pub end: u64,
+    pub port: usize,
+}
+
+impl AddrRule {
+    pub fn new(start: u64, end: u64, port: usize) -> Self {
+        assert!(start < end, "empty address rule");
+        AddrRule { start, end, port }
+    }
+
+    pub fn contains(&self, addr: u64) -> bool {
+        (self.start..self.end).contains(&addr)
+    }
+}
+
+/// What to do with addresses no rule covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DefaultPort {
+    /// Route to this master port (e.g. the uplink).
+    Port(usize),
+    /// Terminate with DECERR via the error slave.
+    Error,
+}
+
+/// Address map for one crossbar slave port.
+#[derive(Debug, Clone)]
+pub struct AddrMap {
+    rules: Vec<AddrRule>,
+    pub default: DefaultPort,
+}
+
+impl AddrMap {
+    pub fn new(rules: Vec<AddrRule>, default: DefaultPort) -> Self {
+        // Overlapping rules are a configuration error.
+        for (i, a) in rules.iter().enumerate() {
+            for b in &rules[i + 1..] {
+                assert!(
+                    a.end <= b.start || b.end <= a.start,
+                    "overlapping address rules: {a:?} vs {b:?}"
+                );
+            }
+        }
+        AddrMap { rules, default }
+    }
+
+    /// Evenly interleave `ports` over `[base, base + ports*stride)`,
+    /// `stride` bytes each — the common quadrant-local map.
+    pub fn interleaved(base: u64, stride: u64, ports: usize, default: DefaultPort) -> Self {
+        let rules = (0..ports)
+            .map(|p| AddrRule::new(base + p as u64 * stride, base + (p as u64 + 1) * stride, p))
+            .collect();
+        AddrMap::new(rules, default)
+    }
+
+    /// Decode an address: `Ok(port)` or `Err(())` for the error slave.
+    pub fn decode(&self, addr: u64) -> Result<usize, ()> {
+        for r in &self.rules {
+            if r.contains(addr) {
+                return Ok(r.port);
+            }
+        }
+        match self.default {
+            DefaultPort::Port(p) => Ok(p),
+            DefaultPort::Error => Err(()),
+        }
+    }
+
+    pub fn rules(&self) -> &[AddrRule] {
+        &self.rules
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decodes_in_range() {
+        let m = AddrMap::new(
+            vec![AddrRule::new(0x0, 0x1000, 0), AddrRule::new(0x1000, 0x2000, 1)],
+            DefaultPort::Error,
+        );
+        assert_eq!(m.decode(0x0), Ok(0));
+        assert_eq!(m.decode(0xFFF), Ok(0));
+        assert_eq!(m.decode(0x1000), Ok(1));
+        assert_eq!(m.decode(0x2000), Err(()));
+    }
+
+    #[test]
+    fn default_port_catches_rest() {
+        let m = AddrMap::new(vec![AddrRule::new(0x0, 0x100, 1)], DefaultPort::Port(2));
+        assert_eq!(m.decode(0x5000), Ok(2));
+    }
+
+    #[test]
+    fn interleaved_map() {
+        let m = AddrMap::interleaved(0x1000, 0x400, 4, DefaultPort::Error);
+        assert_eq!(m.decode(0x1000), Ok(0));
+        assert_eq!(m.decode(0x17FF), Ok(1));
+        assert_eq!(m.decode(0x1FFF), Ok(3));
+        assert_eq!(m.decode(0x0FFF), Err(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping")]
+    fn rejects_overlap() {
+        AddrMap::new(
+            vec![AddrRule::new(0x0, 0x200, 0), AddrRule::new(0x100, 0x300, 1)],
+            DefaultPort::Error,
+        );
+    }
+}

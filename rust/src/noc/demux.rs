@@ -1,0 +1,460 @@
+//! Network demultiplexer (§2.1.2): splits one slave port into M master
+//! ports.
+//!
+//! Microarchitecture (paper Fig. 3):
+//! * Routing is driven by **select inputs** (one function for writes, one
+//!   for reads), not by address decoding — the instantiating module decides
+//!   freely which master port handles a transaction (this is what makes the
+//!   demux "a more universal elementary component than a 1-to-N crossbar").
+//! * Ordering: all concurrent transactions with the same direction and ID
+//!   must target the same master port, enforced with one counter and one
+//!   index register per ID and direction. A command to a *different* port
+//!   waits until the counter drains to zero. This guarantees (O2) without
+//!   internal response reordering.
+//! * Write commands and data bursts are issued in lockstep due to (O3):
+//!   the next AW is only forwarded after the previous write data burst has
+//!   completed, which also breaks the circular-wait Coffman condition and
+//!   keeps pipelined crossbars deadlock-free (§2.2.1).
+//! * Responses from the master ports are joined with round-robin
+//!   arbitration trees.
+
+use crate::protocol::{Cmd, MasterEnd, SlaveEnd};
+use crate::sim::{Component, Cycle};
+
+/// Per-ID, per-direction outstanding-transaction tracking.
+#[derive(Debug, Clone, Copy, Default)]
+struct IdCounter {
+    count: u32,
+    target: usize,
+}
+
+/// Select function: maps a command to a master port index.
+pub type SelectFn = Box<dyn Fn(&Cmd) -> usize>;
+
+pub struct Demux {
+    name: String,
+    slave: SlaveEnd,
+    masters: Vec<MasterEnd>,
+    select_w: SelectFn,
+    select_r: SelectFn,
+    /// One counter per ID: writes and reads tracked separately (O1 applies
+    /// per direction).
+    w_count: Vec<IdCounter>,
+    r_count: Vec<IdCounter>,
+    /// Maximum outstanding transactions per ID (counter saturation).
+    max_txns_per_id: u32,
+    /// Ongoing write burst: master port index (W beats route here).
+    w_active: Option<usize>,
+    /// RR pointers for the response join trees.
+    rr_b: usize,
+    rr_r: usize,
+}
+
+impl Demux {
+    pub fn new(
+        name: impl Into<String>,
+        slave: SlaveEnd,
+        masters: Vec<MasterEnd>,
+        select_w: SelectFn,
+        select_r: SelectFn,
+    ) -> Self {
+        assert!(!masters.is_empty());
+        for m in &masters {
+            assert_eq!(m.cfg.id_bits, slave.cfg.id_bits, "demux does not change ID widths");
+            assert_eq!(m.cfg.data_bits, slave.cfg.data_bits, "demux does not convert widths");
+        }
+        let ids = slave.cfg.id_space();
+        Demux {
+            name: name.into(),
+            slave,
+            masters,
+            select_w,
+            select_r,
+            w_count: vec![IdCounter::default(); ids],
+            r_count: vec![IdCounter::default(); ids],
+            max_txns_per_id: 8,
+            w_active: None,
+            rr_b: 0,
+            rr_r: 0,
+        }
+    }
+
+    pub fn with_max_txns_per_id(mut self, n: u32) -> Self {
+        assert!(n >= 1);
+        self.max_txns_per_id = n;
+        self
+    }
+
+    /// Same select for both directions (common case).
+    pub fn new_symmetric(
+        name: impl Into<String>,
+        slave: SlaveEnd,
+        masters: Vec<MasterEnd>,
+        select: impl Fn(&Cmd) -> usize + Clone + 'static,
+    ) -> Self {
+        let s2 = select.clone();
+        Demux::new(name, slave, masters, Box::new(select), Box::new(s2))
+    }
+
+    /// Whether a command with this (ID, target) may be forwarded under the
+    /// same-target rule.
+    fn may_issue(table: &[IdCounter], max: u32, id: u32, sel: usize) -> bool {
+        let c = &table[id as usize];
+        (c.count == 0 || c.target == sel) && c.count < max
+    }
+}
+
+impl Component for Demux {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, cy: Cycle) {
+        self.slave.set_now(cy);
+        for m in &self.masters {
+            m.set_now(cy);
+        }
+
+        // AW: lockstep with W bursts — only when no write burst is ongoing.
+        if self.w_active.is_none() {
+            if let Some((id, sel)) = self.slave.aw.peek(|c| (c.id, (self.select_w)(c))) {
+                assert!(sel < self.masters.len(), "select_w out of range");
+                if Self::may_issue(&self.w_count, self.max_txns_per_id, id, sel)
+                    && self.masters[sel].aw.can_push()
+                {
+                    let c = self.slave.aw.pop();
+                    let ctr = &mut self.w_count[id as usize];
+                    ctr.count += 1;
+                    ctr.target = sel;
+                    self.masters[sel].aw.push(c);
+                    self.w_active = Some(sel);
+                }
+            }
+        }
+
+        // W: route to the active write burst's master port.
+        if let Some(sel) = self.w_active {
+            if self.slave.w.can_pop() && self.masters[sel].w.can_push() {
+                let b = self.slave.w.pop();
+                let last = b.last;
+                self.masters[sel].w.push(b);
+                if last {
+                    self.w_active = None;
+                }
+            }
+        }
+
+        // AR: same-target rule, no lockstep needed.
+        if let Some((id, sel)) = self.slave.ar.peek(|c| (c.id, (self.select_r)(c))) {
+            assert!(sel < self.masters.len(), "select_r out of range");
+            if Self::may_issue(&self.r_count, self.max_txns_per_id, id, sel)
+                && self.masters[sel].ar.can_push()
+            {
+                let c = self.slave.ar.pop();
+                let ctr = &mut self.r_count[id as usize];
+                ctr.count += 1;
+                ctr.target = sel;
+                self.masters[sel].ar.push(c);
+            }
+        }
+
+        // B join: RR over master ports; decrement the write counter.
+        if self.slave.b.can_push() {
+            let n = self.masters.len();
+            if let Some(p) = (0..n).map(|i| (self.rr_b + i) % n).find(|&p| self.masters[p].b.can_pop())
+            {
+                let b = self.masters[p].b.pop();
+                self.w_count[b.id as usize].count -= 1;
+                self.slave.b.push(b);
+                self.rr_b = (p + 1) % n;
+            }
+        }
+
+        // R join: RR over master ports; decrement on last beat.
+        if self.slave.r.can_push() {
+            let n = self.masters.len();
+            if let Some(p) = (0..n).map(|i| (self.rr_r + i) % n).find(|&p| self.masters[p].r.can_pop())
+            {
+                let r = self.masters[p].r.pop();
+                if r.last {
+                    self.r_count[r.id as usize].count -= 1;
+                }
+                self.slave.r.push(r);
+                self.rr_r = (p + 1) % n;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::payload::{Bytes, Cmd, RBeat, Resp, WBeat};
+    use crate::protocol::port::{bundle, BundleCfg, MasterEnd, SlaveEnd};
+
+    /// Demux routing reads/writes by address bit 8 (0x000 -> port 0,
+    /// 0x100 -> port 1, ...).
+    fn mk_demux(m: usize) -> (MasterEnd, Demux, Vec<SlaveEnd>) {
+        let cfg = BundleCfg::new(64, 4);
+        let (up_m, up_s) = bundle("up", cfg);
+        let mut masters = Vec::new();
+        let mut downs = Vec::new();
+        for i in 0..m {
+            let (mm, ss) = bundle(&format!("down{i}"), cfg);
+            masters.push(mm);
+            downs.push(ss);
+        }
+        let sel = move |c: &Cmd| ((c.addr >> 8) as usize) % m;
+        let d = Demux::new_symmetric("demux", up_s, masters, sel);
+        (up_m, d, downs)
+    }
+
+    fn drain_reads(
+        cy: &mut Cycle,
+        up: &MasterEnd,
+        demux: &mut Demux,
+        downs: &[SlaveEnd],
+        steps: usize,
+        respond: bool,
+    ) -> Vec<(usize, RBeat)> {
+        let mut got = Vec::new();
+        for _ in 0..steps {
+            *cy += 1;
+            up.set_now(*cy);
+            for d in downs {
+                d.set_now(*cy);
+            }
+            demux.tick(*cy);
+            for (p, d) in downs.iter().enumerate() {
+                if d.ar.can_pop() {
+                    let c = d.ar.pop();
+                    if respond {
+                        d.r.push(RBeat {
+                            id: c.id,
+                            data: Bytes::zeroed(8),
+                            resp: Resp::Okay,
+                            last: true,
+                            tag: c.tag,
+                        });
+                    }
+                }
+                let _ = p;
+            }
+            if up.r.can_pop() {
+                got.push((0, up.r.pop()));
+            }
+        }
+        got
+    }
+
+    #[test]
+    fn routes_by_select() {
+        let (up, mut demux, downs) = mk_demux(3);
+        let mut cy = 0;
+        up.set_now(cy);
+        let mut c = Cmd::new(1, 0x200, 0, 3); // port 2
+        c.tag = 9;
+        up.ar.push(c);
+        let mut seen = None;
+        for _ in 0..4 {
+            cy += 1;
+            up.set_now(cy);
+            for d in &downs {
+                d.set_now(cy);
+            }
+            demux.tick(cy);
+            for (p, d) in downs.iter().enumerate() {
+                if d.ar.can_pop() {
+                    seen = Some((p, d.ar.pop()));
+                }
+            }
+        }
+        let (port, cmd) = seen.expect("routed");
+        assert_eq!(port, 2);
+        assert_eq!(cmd.tag, 9);
+    }
+
+    #[test]
+    fn same_id_different_target_stalls_until_drained() {
+        let (up, mut demux, downs) = mk_demux(2);
+        let mut cy = 0;
+        up.set_now(cy);
+        // Read id=3 to port 0 — response withheld.
+        let mut c0 = Cmd::new(3, 0x000, 0, 3);
+        c0.tag = 1;
+        up.ar.push(c0);
+        let _ = drain_reads(&mut cy, &up, &mut demux, &downs, 3, false);
+        // Read id=3 to port 1 — must NOT be forwarded while the first is
+        // outstanding.
+        up.set_now(cy);
+        let mut c1 = Cmd::new(3, 0x100, 0, 3);
+        c1.tag = 2;
+        up.ar.push(c1);
+        for _ in 0..5 {
+            cy += 1;
+            up.set_now(cy);
+            for d in &downs {
+                d.set_now(cy);
+            }
+            demux.tick(cy);
+            assert!(!downs[1].ar.can_pop(), "same-ID cmd leaked to a second target");
+        }
+        // Deliver the response for the first; the second may then proceed.
+        downs[0].set_now(cy);
+        downs[0].r.push(RBeat { id: 3, data: Bytes::zeroed(8), resp: Resp::Okay, last: true, tag: 1 });
+        let mut forwarded = false;
+        for _ in 0..6 {
+            cy += 1;
+            up.set_now(cy);
+            for d in &downs {
+                d.set_now(cy);
+            }
+            demux.tick(cy);
+            if up.r.can_pop() {
+                up.r.pop();
+            }
+            if downs[1].ar.can_pop() {
+                downs[1].ar.pop();
+                forwarded = true;
+            }
+        }
+        assert!(forwarded, "second cmd must proceed after counter drains");
+    }
+
+    #[test]
+    fn same_id_same_target_flows_concurrently() {
+        let (up, mut demux, downs) = mk_demux(2);
+        let mut cy = 0;
+        for i in 0..3 {
+            up.set_now(cy);
+            let mut c = Cmd::new(5, 0x000, 0, 3);
+            c.tag = i;
+            up.ar.push(c);
+            cy += 1;
+            up.set_now(cy);
+            for d in &downs {
+                d.set_now(cy);
+            }
+            demux.tick(cy);
+        }
+        let mut received = 0;
+        for _ in 0..6 {
+            cy += 1;
+            up.set_now(cy);
+            for d in &downs {
+                d.set_now(cy);
+            }
+            demux.tick(cy);
+            if downs[0].ar.can_pop() {
+                downs[0].ar.pop();
+                received += 1;
+            }
+        }
+        assert_eq!(received, 3, "same-ID same-target must not stall");
+    }
+
+    #[test]
+    fn write_lockstep_blocks_next_aw_until_burst_done() {
+        let (up, mut demux, downs) = mk_demux(2);
+        let mut cy = 0;
+        up.set_now(cy);
+        // 2-beat write to port 0; only first W beat provided for now.
+        let mut c = Cmd::new(0, 0x000, 1, 3);
+        c.tag = 1;
+        up.aw.push(c);
+        up.w.push(WBeat::full(Bytes::zeroed(8), false, 1));
+        cy += 1;
+        up.set_now(cy);
+        // Second write (to port 1) queued behind.
+        let mut c2 = Cmd::new(1, 0x100, 0, 3);
+        c2.tag = 2;
+        up.aw.push(c2);
+        for _ in 0..5 {
+            cy += 1;
+            up.set_now(cy);
+            for d in &downs {
+                d.set_now(cy);
+            }
+            demux.tick(cy);
+            if downs[0].aw.can_pop() {
+                downs[0].aw.pop();
+            }
+            if downs[0].w.can_pop() {
+                downs[0].w.pop();
+            }
+            assert!(!downs[1].aw.can_pop(), "AW must wait for previous W burst (lockstep)");
+        }
+        // Provide the last W beat; afterwards the second AW may flow.
+        up.set_now(cy);
+        up.w.push(WBeat::full(Bytes::zeroed(8), true, 1));
+        let mut second_aw = false;
+        for _ in 0..6 {
+            cy += 1;
+            up.set_now(cy);
+            for d in &downs {
+                d.set_now(cy);
+            }
+            demux.tick(cy);
+            if downs[0].w.can_pop() {
+                downs[0].w.pop();
+            }
+            if downs[1].aw.can_pop() {
+                downs[1].aw.pop();
+                second_aw = true;
+            }
+        }
+        assert!(second_aw);
+    }
+
+    #[test]
+    fn responses_joined_rr() {
+        let (up, mut demux, downs) = mk_demux(2);
+        let mut cy = 0;
+        // Two reads with different IDs to different ports.
+        up.set_now(cy);
+        let mut a = Cmd::new(1, 0x000, 0, 3);
+        a.tag = 1;
+        up.ar.push(a);
+        cy += 1;
+        up.set_now(cy);
+        let mut b = Cmd::new(2, 0x100, 0, 3);
+        b.tag = 2;
+        up.ar.push(b);
+        let got = drain_reads(&mut cy, &up, &mut demux, &downs, 12, true);
+        assert_eq!(got.len(), 2);
+        let tags: Vec<u64> = got.iter().map(|(_, r)| r.tag).collect();
+        assert!(tags.contains(&1) && tags.contains(&2));
+    }
+
+    #[test]
+    fn max_txns_per_id_saturates() {
+        let cfg = BundleCfg::new(64, 4);
+        let (up, up_s) = bundle("up", cfg);
+        let (mm, ss) = bundle("down", cfg);
+        let mut demux =
+            Demux::new_symmetric("demux", up_s, vec![mm], |_c| 0).with_max_txns_per_id(2);
+        let mut cy = 0;
+        for i in 0..3 {
+            up.set_now(cy);
+            let mut c = Cmd::new(0, 0, 0, 3);
+            c.tag = i;
+            up.ar.push(c);
+            cy += 1;
+            up.set_now(cy);
+            ss.set_now(cy);
+            demux.tick(cy);
+        }
+        let mut forwarded = 0;
+        for _ in 0..6 {
+            cy += 1;
+            up.set_now(cy);
+            ss.set_now(cy);
+            demux.tick(cy);
+            if ss.ar.can_pop() {
+                ss.ar.pop();
+                forwarded += 1;
+            }
+        }
+        assert_eq!(forwarded, 2, "third txn must stall at the counter limit");
+    }
+}

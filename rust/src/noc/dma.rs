@@ -1,0 +1,460 @@
+//! DMA engine (§2.6, paper Fig. 10): high-bandwidth data movement.
+//!
+//! Modular split as in the paper:
+//! * **Frontend** — accepts *1D transfers* (contiguous block: source,
+//!   destination, length) and decomposes multi-dimensional/strided
+//!   transfers into 1D transfers. The 1D transfer is the frontend/backend
+//!   interface because it maps directly onto burst-based transactions.
+//! * **Burst reshaper** — splits each 1D transfer into protocol-compliant
+//!   bursts (4 KiB boundaries, max beat count), independently for the read
+//!   (source) and write (destination) sides, whose alignments differ.
+//! * **Data mover** — issues the read and write commands.
+//! * **Data path** — receives read data, realigns it through a byte buffer
+//!   (the barrel shifter + realignment buffer of Fig. 10c), masks head and
+//!   tail bytes, and issues write data beats with the proper strobes.
+//!
+//! The DMA uses a single transaction ID for all its traffic (the paper
+//! notes ID width affects neither its area nor its critical path), so reads
+//! return in order (O2) and the realignment buffer sees a dense in-order
+//! byte stream.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::protocol::{split_bursts, Bytes, Cmd, MasterEnd, WBeat};
+use crate::sim::{Component, Cycle};
+
+/// A transfer request accepted by the frontend.
+#[derive(Debug, Clone)]
+pub enum TransferReq {
+    /// Contiguous block copy.
+    OneD { src: u64, dst: u64, len: u64 },
+    /// Strided (2D) transfer: `reps` rows of `row_len` bytes; the frontend
+    /// decomposes this into 1D transfers.
+    TwoD { src: u64, dst: u64, row_len: u64, src_stride: u64, dst_stride: u64, reps: u64 },
+}
+
+/// Byte range tracker for one burst: absolute [cur, end).
+#[derive(Debug, Clone, Copy)]
+struct Range {
+    cur: u64,
+    end: u64,
+}
+
+struct ActiveTransfer {
+    handle: u64,
+    /// Read bursts to issue: (start_addr, len_field, end_byte).
+    ar_todo: VecDeque<(u64, u8, u64)>,
+    /// Byte ranges of issued reads, in order (R data consumes the front).
+    r_ranges: VecDeque<Range>,
+    /// Write bursts to issue.
+    aw_todo: VecDeque<(u64, u8, u64)>,
+    /// Byte ranges + beats-left of issued writes (W beats fill the front).
+    w_ranges: VecDeque<(Range, usize)>,
+    /// B responses still expected.
+    b_left: usize,
+    /// Bytes not yet received from reads.
+    read_bytes_left: u64,
+    /// Bytes not yet sent on writes.
+    write_bytes_left: u64,
+}
+
+pub struct Dma {
+    name: String,
+    master: MasterEnd,
+    /// Frontend queue of 1D transfers (after decomposition).
+    frontend: VecDeque<(u64, u64, u64, u64)>, // (handle, src, dst, len)
+    active: Option<ActiveTransfer>,
+    /// Realignment byte buffer (barrel shifter + buffer).
+    buf: VecDeque<u8>,
+    buf_cap: usize,
+    /// Completed transfer handles.
+    pub completions: VecDeque<u64>,
+    /// Config.
+    max_burst_beats: usize,
+    max_outstanding_reads: usize,
+    id: u32,
+    next_handle: u64,
+    /// 1D legs remaining per multi-leg (2D) handle.
+    legs_remaining: HashMap<u64, usize>,
+    /// Stats.
+    pub bytes_moved: u64,
+}
+
+impl Dma {
+    pub fn new(name: impl Into<String>, master: MasterEnd) -> Self {
+        let beat = master.cfg.beat_bytes();
+        // Burst/buffer sizing invariant: the realignment buffer can hold
+        // every byte of all outstanding reads, so the engine NEVER stalls
+        // the R channel. This is a liveness requirement: an R-channel
+        // stall that depends on the engine's own write progress creates
+        // deadlock cycles through shared network channels (see the
+        // cluster module's read-engine/write-engine note).
+        let max_burst_beats = 64.min(256);
+        Dma {
+            name: name.into(),
+            master,
+            frontend: VecDeque::new(),
+            active: None,
+            buf: VecDeque::new(),
+            buf_cap: 4 * max_burst_beats * beat,
+            completions: VecDeque::new(),
+            max_burst_beats,
+            max_outstanding_reads: 8,
+            id: 0,
+            next_handle: 1,
+            legs_remaining: HashMap::new(),
+            bytes_moved: 0,
+        }
+    }
+
+    pub fn with_max_burst_beats(mut self, n: usize) -> Self {
+        assert!((1..=256).contains(&n));
+        self.max_burst_beats = n;
+        // Preserve the never-stall-R invariant.
+        self.buf_cap = 4 * n * self.master.cfg.beat_bytes();
+        self
+    }
+
+    pub fn with_max_outstanding(mut self, n: usize) -> Self {
+        assert!(n >= 1);
+        self.max_outstanding_reads = n;
+        self
+    }
+
+    /// Submit a transfer; returns a handle reported in `completions`.
+    pub fn submit(&mut self, req: TransferReq) -> u64 {
+        let handle = self.next_handle;
+        self.next_handle += 1;
+        match req {
+            TransferReq::OneD { src, dst, len } => {
+                assert!(len > 0, "empty transfer");
+                self.legs_remaining.insert(handle, 1);
+                self.frontend.push_back((handle, src, dst, len));
+            }
+            TransferReq::TwoD { src, dst, row_len, src_stride, dst_stride, reps } => {
+                assert!(row_len > 0 && reps > 0);
+                self.legs_remaining.insert(handle, reps as usize);
+                for r in 0..reps {
+                    self.frontend.push_back((
+                        handle,
+                        src + r * src_stride,
+                        dst + r * dst_stride,
+                        row_len,
+                    ));
+                }
+            }
+        }
+        handle
+    }
+
+    /// One-line internal state dump for debugging stalls.
+    pub fn debug_state(&self) -> String {
+        match &self.active {
+            None => format!("inactive frontend={}", self.frontend.len()),
+            Some(t) => format!(
+                "ar_todo={} r_ranges={} aw_todo={} w_ranges={} b_left={} rd_left={} wr_left={} buf={}",
+                t.ar_todo.len(), t.r_ranges.len(), t.aw_todo.len(), t.w_ranges.len(),
+                t.b_left, t.read_bytes_left, t.write_bytes_left, self.buf.len()
+            ),
+        }
+    }
+
+    pub fn idle(&self) -> bool {
+        self.frontend.is_empty() && self.active.is_none()
+    }
+
+    /// Number of queued + active 1D legs (observability).
+    pub fn backlog(&self) -> usize {
+        self.frontend.len() + usize::from(self.active.is_some())
+    }
+
+    fn start_next(&mut self) {
+        if self.active.is_some() {
+            return;
+        }
+        let Some((handle, src, dst, len)) = self.frontend.pop_front() else { return };
+        let size = self.master.cfg.size();
+        let rd = split_bursts(src, len, size, self.max_burst_beats);
+        let wr = split_bursts(dst, len, size, self.max_burst_beats);
+        let mk = |v: &[(u64, u8)], total_end: u64| -> VecDeque<(u64, u8, u64)> {
+            v.iter()
+                .enumerate()
+                .map(|(i, &(a, l))| {
+                    let end = if i + 1 < v.len() { v[i + 1].0 } else { total_end };
+                    (a, l, end)
+                })
+                .collect()
+        };
+        self.active = Some(ActiveTransfer {
+            handle,
+            b_left: wr.len(),
+            ar_todo: mk(&rd, src + len),
+            r_ranges: VecDeque::new(),
+            aw_todo: mk(&wr, dst + len),
+            w_ranges: VecDeque::new(),
+            read_bytes_left: len,
+            write_bytes_left: len,
+        });
+    }
+}
+
+impl Component for Dma {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, cy: Cycle) {
+        let _ = cy;
+        self.master.set_now(cy);
+        self.start_next();
+        let Some(t) = &mut self.active else { return };
+        let bb = self.master.cfg.beat_bytes();
+
+        // Data mover: issue read commands. Reservation: never request more
+        // bytes than the realignment buffer can absorb, so the R channel
+        // is always accepted (liveness invariant, see `new`).
+        if let Some(&(addr, len, end)) = t.ar_todo.front() {
+            let outstanding: u64 = t.r_ranges.iter().map(|r| r.end - r.cur).sum();
+            let reserve = outstanding + self.buf.len() as u64 + (end - addr);
+            if t.r_ranges.len() < self.max_outstanding_reads
+                && reserve <= self.buf_cap as u64
+                && self.master.ar.can_push()
+            {
+                let mut c = Cmd::new(self.id, addr, len, self.master.cfg.size());
+                c.tag = t.handle;
+                self.master.ar.push(c);
+                t.r_ranges.push_back(Range { cur: addr, end });
+                t.ar_todo.pop_front();
+            }
+        }
+        // Issue write commands (keep a small queue of open write bursts).
+        if let Some(&(addr, len, end)) = t.aw_todo.front() {
+            if t.w_ranges.len() < 2 && self.master.aw.can_push() {
+                let mut c = Cmd::new(self.id, addr, len, self.master.cfg.size());
+                c.tag = t.handle;
+                self.master.aw.push(c);
+                t.w_ranges.push_back((Range { cur: addr, end }, len as usize + 1));
+                t.aw_todo.pop_front();
+            }
+        }
+
+        // Data path, read process: realign incoming beats into the buffer.
+        // The reservation above guarantees space; never stall R.
+        if self.master.r.can_pop() {
+            let r = self.master.r.pop();
+            let range = t.r_ranges.front_mut().expect("R beat without an open read burst");
+            let beat_base = (range.cur / bb as u64) * bb as u64;
+            let beat_end = beat_base + bb as u64;
+            let valid_end = range.end.min(beat_end);
+            let lo = (range.cur - beat_base) as usize;
+            let hi = (valid_end - beat_base) as usize;
+            // Head/tail masking: only [cur, valid_end) bytes are real.
+            for &byte in &r.data.as_slice()[lo..hi] {
+                self.buf.push_back(byte);
+            }
+            t.read_bytes_left -= (hi - lo) as u64;
+            range.cur = valid_end;
+            if range.cur == range.end {
+                debug_assert!(r.last);
+                t.r_ranges.pop_front();
+            }
+        }
+
+        // Data path, write process: drain the buffer into W beats.
+        if let Some((range, beats_left)) = t.w_ranges.front_mut() {
+            if self.master.w.can_push() {
+                let beat_base = (range.cur / bb as u64) * bb as u64;
+                let beat_end = beat_base + bb as u64;
+                let valid_end = range.end.min(beat_end);
+                let need = (valid_end - range.cur) as usize;
+                if self.buf.len() >= need && need > 0 {
+                    let lane = (range.cur - beat_base) as usize;
+                    let mut data = Bytes::zeroed(bb);
+                    for i in 0..need {
+                        data.as_mut_slice()[lane + i] = self.buf.pop_front().unwrap();
+                    }
+                    let strb = (crate::protocol::strb_all(need)) << lane;
+                    *beats_left -= 1;
+                    let last = *beats_left == 0;
+                    self.master.w.push(WBeat { data, strb, last, tag: t.handle });
+                    t.write_bytes_left -= need as u64;
+                    self.bytes_moved += need as u64;
+                    range.cur = valid_end;
+                    if last {
+                        debug_assert_eq!(range.cur, range.end);
+                        t.w_ranges.pop_front();
+                    }
+                }
+            }
+        }
+
+        // Completion: collect B responses.
+        if self.master.b.can_pop() {
+            self.master.b.pop();
+            t.b_left -= 1;
+            if t.b_left == 0 {
+                debug_assert_eq!(t.write_bytes_left, 0);
+                debug_assert_eq!(t.read_bytes_left, 0);
+                let handle = t.handle;
+                let legs = self.legs_remaining.get_mut(&handle).expect("leg bookkeeping");
+                *legs -= 1;
+                if *legs == 0 {
+                    self.legs_remaining.remove(&handle);
+                    self.completions.push_back(handle);
+                }
+                self.active = None;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::mem_duplex::{BankArray, MemDuplex};
+    use crate::protocol::port::{bundle, BundleCfg};
+    use crate::sim::prop_check;
+
+    /// DMA wired straight to a duplex memory controller.
+    fn mk() -> (Dma, MemDuplex) {
+        let cfg = BundleCfg::new(64, 4);
+        let (m, s) = bundle("dma", cfg);
+        let banks = BankArray::new(0, 1 << 20, 4, 8, 1);
+        (Dma::new("dma", m), MemDuplex::new("mem", s, banks))
+    }
+
+    fn run_copy(dma: &mut Dma, mem: &mut MemDuplex, handle: u64, budget: u64) -> bool {
+        let mut cy = 0;
+        while cy < budget {
+            cy += 1;
+            dma.tick(cy);
+            mem.tick(cy);
+            if dma.completions.contains(&handle) {
+                return true;
+            }
+        }
+        false
+    }
+
+    #[test]
+    fn aligned_copy_byte_exact() {
+        let (mut dma, mut mem) = mk();
+        let src: Vec<u8> = (0..256).map(|i| (i * 7 % 251) as u8).collect();
+        mem.banks.borrow_mut().poke(0x1000, &src);
+        let h = dma.submit(TransferReq::OneD { src: 0x1000, dst: 0x8000, len: 256 });
+        assert!(run_copy(&mut dma, &mut mem, h, 2000), "copy must complete");
+        assert_eq!(mem.banks.borrow().peek_vec(0x8000, 256), src);
+    }
+
+    #[test]
+    fn misaligned_src_and_dst() {
+        let (mut dma, mut mem) = mk();
+        let src: Vec<u8> = (0..100).map(|i| (i + 1) as u8).collect();
+        mem.banks.borrow_mut().poke(0x1003, &src);
+        // src offset 3, dst offset 5: the realignment buffer must shift.
+        let h = dma.submit(TransferReq::OneD { src: 0x1003, dst: 0x8005, len: 100 });
+        assert!(run_copy(&mut dma, &mut mem, h, 2000));
+        assert_eq!(mem.banks.borrow().peek_vec(0x8005, 100), src);
+        // Guard bytes untouched.
+        assert_eq!(mem.banks.borrow().peek_vec(0x8004, 1), vec![0]);
+        assert_eq!(mem.banks.borrow().peek_vec(0x8005 + 100, 1), vec![0]);
+    }
+
+    #[test]
+    fn crosses_4k_boundary() {
+        let (mut dma, mut mem) = mk();
+        let src: Vec<u8> = (0..512).map(|i| (i % 255) as u8).collect();
+        mem.banks.borrow_mut().poke(0xF00, &src);
+        let h = dma.submit(TransferReq::OneD { src: 0xF00, dst: 0x2F80, len: 512 });
+        assert!(run_copy(&mut dma, &mut mem, h, 4000));
+        assert_eq!(mem.banks.borrow().peek_vec(0x2F80, 512), src);
+    }
+
+    #[test]
+    fn single_byte_transfer() {
+        let (mut dma, mut mem) = mk();
+        mem.banks.borrow_mut().poke(0x777, &[0x5A]);
+        let h = dma.submit(TransferReq::OneD { src: 0x777, dst: 0x999, len: 1 });
+        assert!(run_copy(&mut dma, &mut mem, h, 500));
+        assert_eq!(mem.banks.borrow().peek_vec(0x999, 1), vec![0x5A]);
+    }
+
+    #[test]
+    fn two_d_transfer_decomposes() {
+        let (mut dma, mut mem) = mk();
+        // 4 rows of 16 bytes, src stride 32, dst stride 20.
+        for r in 0..4u64 {
+            let row: Vec<u8> = (0..16).map(|i| (r * 16 + i) as u8).collect();
+            mem.banks.borrow_mut().poke(0x1000 + r * 32, &row);
+        }
+        let h = dma.submit(TransferReq::TwoD {
+            src: 0x1000,
+            dst: 0x8000,
+            row_len: 16,
+            src_stride: 32,
+            dst_stride: 20,
+            reps: 4,
+        });
+        assert!(run_copy(&mut dma, &mut mem, h, 4000));
+        for r in 0..4u64 {
+            let expect: Vec<u8> = (0..16).map(|i| (r * 16 + i) as u8).collect();
+            assert_eq!(mem.banks.borrow().peek_vec(0x8000 + r * 20, 16), expect, "row {r}");
+        }
+    }
+
+    #[test]
+    fn back_to_back_transfers_complete_in_order() {
+        let (mut dma, mut mem) = mk();
+        mem.banks.borrow_mut().poke(0x100, &[1u8; 64]);
+        mem.banks.borrow_mut().poke(0x200, &[2u8; 64]);
+        let h1 = dma.submit(TransferReq::OneD { src: 0x100, dst: 0x4000, len: 64 });
+        let h2 = dma.submit(TransferReq::OneD { src: 0x200, dst: 0x5000, len: 64 });
+        let mut cy = 0;
+        while dma.completions.len() < 2 && cy < 3000 {
+            cy += 1;
+            dma.tick(cy);
+            mem.tick(cy);
+        }
+        assert_eq!(dma.completions, VecDeque::from([h1, h2]));
+        assert_eq!(mem.banks.borrow().peek_vec(0x4000, 64), vec![1u8; 64]);
+        assert_eq!(mem.banks.borrow().peek_vec(0x5000, 64), vec![2u8; 64]);
+    }
+
+    #[test]
+    fn wide_port_transfer() {
+        // 512-bit DMA port (the Manticore configuration).
+        let cfg = BundleCfg::new(512, 1);
+        let (m, s) = bundle("dma", cfg);
+        let banks = BankArray::new(0, 1 << 20, 4, 64, 1);
+        let mut dma = Dma::new("dma", m);
+        let mut mem = MemDuplex::new("mem", s, banks);
+        let src: Vec<u8> = (0..4096).map(|i| (i % 253) as u8).collect();
+        mem.banks.borrow_mut().poke(0x10000, &src);
+        let h = dma.submit(TransferReq::OneD { src: 0x10000, dst: 0x40000, len: 4096 });
+        let mut cy = 0;
+        let mut done = false;
+        while !done && cy < 2000 {
+            cy += 1;
+            dma.tick(cy);
+            mem.tick(cy);
+            done = dma.completions.contains(&h);
+        }
+        assert!(done);
+        assert_eq!(mem.banks.borrow().peek_vec(0x40000, 4096), src);
+    }
+
+    #[test]
+    fn prop_random_copies_byte_exact() {
+        prop_check("dma_random_copies", 25, |g| {
+            let (mut dma, mut mem) = mk();
+            let len = g.int(1, 700) as u64;
+            let src = 0x1000 + g.int(0, 63) as u64;
+            let dst = 0x9000 + g.int(0, 63) as u64;
+            let data: Vec<u8> = (0..len).map(|_| (g.u64() & 0xFF) as u8).collect();
+            mem.banks.borrow_mut().poke(src, &data);
+            let h = dma.submit(TransferReq::OneD { src, dst, len });
+            assert!(run_copy(&mut dma, &mut mem, h, 8000), "len={len} src={src:#x} dst={dst:#x}");
+            assert_eq!(mem.banks.borrow().peek_vec(dst, len as usize), data);
+        });
+    }
+}

@@ -1,0 +1,172 @@
+//! Error slave (§2.2.1): terminates transactions to unmapped addresses
+//! with protocol-compliant DECERR responses.
+//!
+//! Writes: absorbs the full W burst, then issues one B beat with DECERR.
+//! Reads: issues `len+1` R beats of zeros with DECERR, `last` on the final
+//! beat. Ordering is trivially compliant because the error slave handles
+//! transactions strictly in arrival order per direction.
+
+use std::collections::VecDeque;
+
+use crate::protocol::{BBeat, Bytes, RBeat, Resp, SlaveEnd};
+use crate::sim::{Component, Cycle};
+
+pub struct ErrorSlave {
+    name: String,
+    slave: SlaveEnd,
+    /// Writes awaiting their data burst: (id, tag, beats remaining).
+    w_pending: VecDeque<(u32, u64, usize)>,
+    /// B responses ready to issue.
+    b_pending: VecDeque<(u32, u64)>,
+    /// Read bursts being answered: (id, tag, beats remaining).
+    r_pending: VecDeque<(u32, u64, usize)>,
+}
+
+impl ErrorSlave {
+    pub fn new(name: impl Into<String>, slave: SlaveEnd) -> Self {
+        ErrorSlave {
+            name: name.into(),
+            slave,
+            w_pending: VecDeque::new(),
+            b_pending: VecDeque::new(),
+            r_pending: VecDeque::new(),
+        }
+    }
+}
+
+impl Component for ErrorSlave {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, cy: Cycle) {
+        self.slave.set_now(cy);
+
+        // Accept write commands.
+        if self.slave.aw.can_pop() {
+            let c = self.slave.aw.pop();
+            self.w_pending.push_back((c.id, c.tag, c.beats()));
+        }
+        // Absorb write data for the oldest write.
+        if let Some(&mut (id, tag, ref mut beats)) = self.w_pending.front_mut() {
+            if self.slave.w.can_pop() {
+                let w = self.slave.w.pop();
+                *beats -= 1;
+                debug_assert_eq!(*beats == 0, w.last);
+                if *beats == 0 {
+                    self.w_pending.pop_front();
+                    self.b_pending.push_back((id, tag));
+                }
+            }
+        }
+        // Issue DECERR write responses.
+        if let Some(&(id, tag)) = self.b_pending.front() {
+            if self.slave.b.can_push() {
+                self.slave.b.push(BBeat { id, resp: Resp::DecErr, tag });
+                self.b_pending.pop_front();
+            }
+        }
+        // Accept read commands.
+        if self.slave.ar.can_pop() {
+            let c = self.slave.ar.pop();
+            self.r_pending.push_back((c.id, c.tag, c.beats()));
+        }
+        // Issue DECERR read responses, one beat per cycle.
+        if let Some(&mut (id, tag, ref mut beats)) = self.r_pending.front_mut() {
+            if self.slave.r.can_push() {
+                *beats -= 1;
+                let last = *beats == 0;
+                let bb = self.slave.cfg.beat_bytes();
+                self.slave.r.push(RBeat { id, data: Bytes::zeroed(bb), resp: Resp::DecErr, last, tag });
+                if last {
+                    self.r_pending.pop_front();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::payload::{Cmd, WBeat};
+    use crate::protocol::port::{bundle, BundleCfg};
+
+    #[test]
+    fn read_gets_full_decerr_burst() {
+        let (m, s) = bundle("t", BundleCfg::default());
+        let mut es = ErrorSlave::new("err", s);
+        let mut cy = 0;
+        m.set_now(cy);
+        let mut c = Cmd::new(4, 0xDEAD_0000, 3, 3); // 4 beats
+        c.tag = 11;
+        m.ar.push(c);
+        let mut beats = Vec::new();
+        for _ in 0..12 {
+            cy += 1;
+            m.set_now(cy);
+            es.tick(cy);
+            if m.r.can_pop() {
+                beats.push(m.r.pop());
+            }
+        }
+        assert_eq!(beats.len(), 4);
+        assert!(beats.iter().all(|r| r.resp == Resp::DecErr && r.id == 4 && r.tag == 11));
+        assert!(beats[..3].iter().all(|r| !r.last));
+        assert!(beats[3].last);
+    }
+
+    #[test]
+    fn write_gets_decerr_after_data() {
+        let (m, s) = bundle("t", BundleCfg::default());
+        let mut es = ErrorSlave::new("err", s);
+        let mut cy = 0;
+        m.set_now(cy);
+        let mut c = Cmd::new(2, 0xBAD0, 1, 3);
+        c.tag = 5;
+        m.aw.push(c);
+        m.w.push(WBeat::full(Bytes::zeroed(8), false, 5));
+        cy += 1;
+        m.set_now(cy);
+        m.w.push(WBeat::full(Bytes::zeroed(8), true, 5));
+        let mut resp = None;
+        for _ in 0..8 {
+            cy += 1;
+            m.set_now(cy);
+            es.tick(cy);
+            if m.b.can_pop() {
+                resp = Some(m.b.pop());
+            }
+        }
+        let b = resp.expect("B response");
+        assert_eq!(b.resp, Resp::DecErr);
+        assert_eq!(b.id, 2);
+        assert_eq!(b.tag, 5);
+    }
+
+    #[test]
+    fn multiple_reads_served_in_order() {
+        let (m, s) = bundle("t", BundleCfg::default());
+        let mut es = ErrorSlave::new("err", s);
+        let mut cy = 0;
+        for i in 0..3u64 {
+            m.set_now(cy);
+            let mut c = Cmd::new(i as u32, 0, 0, 3);
+            c.tag = i;
+            m.ar.push(c);
+            cy += 1;
+            m.set_now(cy);
+            es.tick(cy);
+        }
+        let mut tags = Vec::new();
+        for _ in 0..10 {
+            cy += 1;
+            m.set_now(cy);
+            es.tick(cy);
+            if m.r.can_pop() {
+                tags.push(m.r.pop().tag);
+            }
+        }
+        assert_eq!(tags, vec![0, 1, 2]);
+    }
+}

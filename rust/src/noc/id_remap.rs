@@ -1,0 +1,347 @@
+//! ID remapper (§2.3.1, paper Fig. 6): compresses a sparsely-used input ID
+//! space into a narrower, densely-used output ID space while retaining
+//! transaction independence (requires `U <= 2^O`).
+//!
+//! One table per direction, indexed by **output** ID, with `U` entries of
+//! `(input ID, in-flight counter)`. Commands look up a matching in-flight
+//! entry (same input ID must reuse the same output ID, (O1)) or claim the
+//! lowest free entry (the LZC in hardware). Responses index the table with
+//! their output ID to restore the input ID; the (last) response decrements
+//! the counter and frees the entry at zero.
+
+use crate::protocol::{MasterEnd, SlaveEnd};
+use crate::sim::{Component, Cycle};
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Entry {
+    in_id: u32,
+    count: u32,
+}
+
+#[derive(Debug)]
+struct Table {
+    entries: Vec<Entry>,
+    max_per_id: u32,
+}
+
+impl Table {
+    fn new(u: usize, max_per_id: u32) -> Self {
+        Table { entries: vec![Entry::default(); u], max_per_id }
+    }
+
+    /// Output ID for a command with input `id`, or None if the remapper
+    /// must stall (no free entry / per-ID budget exhausted).
+    fn map_cmd(&mut self, id: u32) -> Option<u32> {
+        // Same in-flight input ID -> same output ID (O1).
+        if let Some((o, e)) = self
+            .entries
+            .iter_mut()
+            .enumerate()
+            .find(|(_, e)| e.count > 0 && e.in_id == id)
+        {
+            if e.count >= self.max_per_id {
+                return None;
+            }
+            e.count += 1;
+            return Some(o as u32);
+        }
+        // First free entry (lowest index — the LZC pick).
+        if let Some((o, e)) = self.entries.iter_mut().enumerate().find(|(_, e)| e.count == 0) {
+            e.in_id = id;
+            e.count = 1;
+            return Some(o as u32);
+        }
+        None
+    }
+
+    /// Input ID for a response with output ID `out`; decrements on `dec`.
+    fn map_resp(&mut self, out: u32, dec: bool) -> u32 {
+        let e = &mut self.entries[out as usize];
+        debug_assert!(e.count > 0, "response for idle output ID {out}");
+        if dec {
+            e.count -= 1;
+        }
+        e.in_id
+    }
+
+    fn in_flight(&self) -> u32 {
+        self.entries.iter().map(|e| e.count).sum()
+    }
+}
+
+pub struct IdRemap {
+    name: String,
+    slave: SlaveEnd,
+    master: MasterEnd,
+    w_table: Table,
+    r_table: Table,
+}
+
+impl IdRemap {
+    /// `u` = concurrent unique IDs per direction (table entries; must be
+    /// `<= 2^master.id_bits`), `t` = max transactions per ID.
+    pub fn new(
+        name: impl Into<String>,
+        slave: SlaveEnd,
+        master: MasterEnd,
+        u: usize,
+        t: u32,
+    ) -> Self {
+        assert!(u >= 1 && t >= 1);
+        assert!(
+            u <= master.cfg.id_space(),
+            "U={u} unique IDs do not fit {} output ID bits",
+            master.cfg.id_bits
+        );
+        assert_eq!(slave.cfg.data_bits, master.cfg.data_bits);
+        IdRemap {
+            name: name.into(),
+            slave,
+            master,
+            w_table: Table::new(u, t),
+            r_table: Table::new(u, t),
+        }
+    }
+
+    /// Outstanding transactions (both directions), for tests.
+    pub fn in_flight(&self) -> u32 {
+        self.w_table.in_flight() + self.r_table.in_flight()
+    }
+}
+
+impl Component for IdRemap {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, cy: Cycle) {
+        self.slave.set_now(cy);
+        self.master.set_now(cy);
+
+        // AW: remap or stall.
+        if self.slave.aw.can_pop() && self.master.aw.can_push() {
+            let id = self.slave.aw.peek(|c| c.id).unwrap();
+            if let Some(out) = self.w_table.map_cmd(id) {
+                let mut c = self.slave.aw.pop();
+                c.id = out;
+                self.master.aw.push(c);
+            } else {
+                self.slave.aw.set_now(cy); // stall visible in stats
+            }
+        }
+        // W passes through (no ID on the write data channel).
+        if self.slave.w.can_pop() && self.master.w.can_push() {
+            self.master.w.push(self.slave.w.pop());
+        }
+        // AR: remap or stall.
+        if self.slave.ar.can_pop() && self.master.ar.can_push() {
+            let id = self.slave.ar.peek(|c| c.id).unwrap();
+            if let Some(out) = self.r_table.map_cmd(id) {
+                let mut c = self.slave.ar.pop();
+                c.id = out;
+                self.master.ar.push(c);
+            }
+        }
+        // B: restore input ID, free table entry.
+        if self.master.b.can_pop() && self.slave.b.can_push() {
+            let mut b = self.master.b.pop();
+            b.id = self.w_table.map_resp(b.id, true);
+            self.slave.b.push(b);
+        }
+        // R: restore input ID; only the last beat decrements.
+        if self.master.r.can_pop() && self.slave.r.can_push() {
+            let mut r = self.master.r.pop();
+            r.id = self.r_table.map_resp(r.id, r.last);
+            self.slave.r.push(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::payload::{Bytes, Cmd, RBeat, Resp};
+    use crate::protocol::port::{bundle, BundleCfg};
+    use crate::sim::prop_check;
+
+    fn mk(u: usize, t: u32, out_bits: usize) -> (crate::protocol::MasterEnd, IdRemap, crate::protocol::SlaveEnd) {
+        let (up_m, up_s) = bundle("up", BundleCfg::new(64, 8));
+        let (down_m, down_s) = bundle("down", BundleCfg::new(64, out_bits));
+        (up_m, IdRemap::new("remap", up_s, down_m, u, t), down_s)
+    }
+
+    #[test]
+    fn compresses_sparse_ids() {
+        let (up, mut rm, down) = mk(4, 8, 2);
+        let mut cy = 0;
+        // Three commands with sparse IDs 200, 13, 77.
+        for (i, id) in [200u32, 13, 77].iter().enumerate() {
+            up.set_now(cy);
+            let mut c = Cmd::new(*id, 0x40 * i as u64, 0, 3);
+            c.tag = i as u64;
+            up.ar.push(c);
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            rm.tick(cy);
+        }
+        let mut out_ids = Vec::new();
+        for _ in 0..6 {
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            rm.tick(cy);
+            if down.ar.can_pop() {
+                out_ids.push(down.ar.pop().id);
+            }
+        }
+        assert_eq!(out_ids.len(), 3);
+        // Dense, unique output IDs.
+        let mut sorted = out_ids.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 3, "injective remap: {out_ids:?}");
+        assert!(out_ids.iter().all(|&i| i < 4));
+    }
+
+    #[test]
+    fn same_input_id_reuses_output_id() {
+        let (up, mut rm, down) = mk(4, 8, 2);
+        let mut cy = 0;
+        for i in 0..2 {
+            up.set_now(cy);
+            let mut c = Cmd::new(99, 0x40 * i, 0, 3);
+            c.tag = i;
+            up.ar.push(c);
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            rm.tick(cy);
+        }
+        let mut out_ids = Vec::new();
+        for _ in 0..6 {
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            rm.tick(cy);
+            if down.ar.can_pop() {
+                out_ids.push(down.ar.pop().id);
+            }
+        }
+        assert_eq!(out_ids.len(), 2);
+        assert_eq!(out_ids[0], out_ids[1], "(O1): same ID in flight -> same output ID");
+    }
+
+    #[test]
+    fn responses_restore_input_id() {
+        let (up, mut rm, down) = mk(2, 4, 1);
+        let mut cy = 0;
+        up.set_now(cy);
+        let mut c = Cmd::new(123, 0x0, 0, 3);
+        c.tag = 9;
+        up.ar.push(c);
+        let mut got = None;
+        for _ in 0..10 {
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            rm.tick(cy);
+            if down.ar.can_pop() {
+                let c = down.ar.pop();
+                down.r.push(RBeat { id: c.id, data: Bytes::zeroed(8), resp: Resp::Okay, last: true, tag: c.tag });
+            }
+            if up.r.can_pop() {
+                got = Some(up.r.pop());
+            }
+        }
+        let r = got.expect("response");
+        assert_eq!(r.id, 123, "input ID restored");
+        assert_eq!(r.tag, 9);
+        assert_eq!(rm.in_flight(), 0, "entry freed");
+    }
+
+    #[test]
+    fn stalls_when_table_full_resumes_after_drain() {
+        let (up, mut rm, down) = mk(2, 1, 1);
+        let mut cy = 0;
+        // Fill both entries with distinct IDs.
+        for i in 0..2 {
+            up.set_now(cy);
+            let mut c = Cmd::new(10 + i, 0, 0, 3);
+            c.tag = i as u64;
+            up.ar.push(c);
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            rm.tick(cy);
+        }
+        // Third unique ID must stall.
+        up.set_now(cy);
+        let mut c = Cmd::new(30, 0, 0, 3);
+        c.tag = 99;
+        up.ar.push(c);
+        let mut popped = Vec::new();
+        for _ in 0..6 {
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            rm.tick(cy);
+            while down.ar.can_pop() {
+                popped.push(down.ar.pop());
+            }
+        }
+        assert_eq!(popped.len(), 2, "third unique ID stalls on a full table");
+        // Drain one response; the stalled command must now flow.
+        down.set_now(cy);
+        down.r.push(RBeat {
+            id: popped[0].id,
+            data: Bytes::zeroed(8),
+            resp: Resp::Okay,
+            last: true,
+            tag: popped[0].tag,
+        });
+        let mut third = None;
+        for _ in 0..8 {
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            rm.tick(cy);
+            if up.r.can_pop() {
+                up.r.pop();
+            }
+            if down.ar.can_pop() {
+                third = Some(down.ar.pop());
+            }
+        }
+        assert_eq!(third.expect("stalled cmd resumed").tag, 99);
+    }
+
+    #[test]
+    fn prop_remap_is_injective_over_inflight() {
+        // Property: at any point, the in-flight (input ID -> output ID)
+        // relation is injective in both directions.
+        prop_check("id_remap_injective", 60, |g| {
+            let u = g.int(1, 8);
+            let t = g.int(1, 4) as u32;
+            let mut table = Table::new(u, t);
+            let mut inflight: Vec<(u32, u32)> = Vec::new(); // (in, out)
+            for _ in 0..40 {
+                if g.bool() || inflight.is_empty() {
+                    let id = g.int(0, 5) as u32;
+                    if let Some(out) = table.map_cmd(id) {
+                        // Consistency with existing in-flight pairs.
+                        for &(i, o) in &inflight {
+                            assert_eq!(i == id, o == out, "injectivity broken: ({id},{out}) vs ({i},{o})");
+                        }
+                        inflight.push((id, out));
+                    }
+                } else {
+                    let k = g.int(0, inflight.len() - 1);
+                    let (in_id, out) = inflight.remove(k);
+                    let got = table.map_resp(out, true);
+                    assert_eq!(got, in_id, "response must restore the input ID");
+                }
+            }
+        });
+    }
+}

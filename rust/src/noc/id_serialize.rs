@@ -1,0 +1,303 @@
+//! ID serializer (§2.3.2, paper Fig. 7): compresses a densely-used input
+//! ID space into fewer output IDs (`U > 2^O`), serializing transactions
+//! that map to the same output ID.
+//!
+//! One FIFO per direction and master-port ID. A combinational function
+//! `f(ID)` (default: ID modulo the number of master-port IDs) assigns each
+//! command to a FIFO submodule; the original ID is pushed into the FIFO
+//! (ID reflection) and the forwarded command carries the FIFO index as its
+//! ID. Because `f` maps equal IDs to the same FIFO, same-ID transactions
+//! stay ordered (O1); because each FIFO's transactions share one output ID,
+//! downstream must answer them in order (O2), and the FIFO front always
+//! reflects the right original ID.
+
+use std::collections::VecDeque;
+
+use crate::protocol::{MasterEnd, SlaveEnd};
+use crate::sim::{Component, Cycle};
+
+pub struct IdSerialize {
+    name: String,
+    slave: SlaveEnd,
+    master: MasterEnd,
+    /// Per-output-ID FIFOs reflecting original write IDs.
+    w_fifos: Vec<VecDeque<u32>>,
+    r_fifos: Vec<VecDeque<u32>>,
+    /// FIFO capacity = max transactions per master-port ID (T).
+    depth: usize,
+    /// Write bursts must follow AW order on the single W path; count
+    /// in-flight write bursts to keep AW/W coupled like the reduced demux
+    /// in the paper (lockstep per §2.1.2).
+    w_bursts_pending: VecDeque<usize>, // remaining beats of accepted AWs
+}
+
+impl IdSerialize {
+    /// `u_m` = number of master-port IDs, `t` = transactions per output ID.
+    pub fn new(
+        name: impl Into<String>,
+        slave: SlaveEnd,
+        master: MasterEnd,
+        u_m: usize,
+        t: usize,
+    ) -> Self {
+        assert!(u_m >= 1 && t >= 1);
+        assert!(
+            u_m <= master.cfg.id_space(),
+            "{u_m} output IDs need {} bits",
+            master.cfg.id_bits
+        );
+        IdSerialize {
+            name: name.into(),
+            slave,
+            master,
+            w_fifos: (0..u_m).map(|_| VecDeque::new()).collect(),
+            r_fifos: (0..u_m).map(|_| VecDeque::new()).collect(),
+            depth: t,
+            w_bursts_pending: VecDeque::new(),
+        }
+    }
+
+    fn f(&self, id: u32) -> usize {
+        (id as usize) % self.w_fifos.len()
+    }
+}
+
+impl Component for IdSerialize {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, cy: Cycle) {
+        self.slave.set_now(cy);
+        self.master.set_now(cy);
+
+        // AW: assign to FIFO f(id), reflect ID, forward with ID = index.
+        if self.slave.aw.can_pop() && self.master.aw.can_push() {
+            let (id, beats) = self.slave.aw.peek(|c| (c.id, c.beats())).unwrap();
+            let sel = self.f(id);
+            if self.w_fifos[sel].len() < self.depth {
+                let mut c = self.slave.aw.pop();
+                self.w_fifos[sel].push_back(c.id);
+                c.id = sel as u32;
+                self.master.aw.push(c);
+                self.w_bursts_pending.push_back(beats);
+            }
+        }
+        // W: single path, bursts already in AW order (O3).
+        if !self.w_bursts_pending.is_empty() && self.slave.w.can_pop() && self.master.w.can_push()
+        {
+            let b = self.slave.w.pop();
+            let last = b.last;
+            self.master.w.push(b);
+            if last {
+                self.w_bursts_pending.pop_front();
+            }
+        }
+        // AR: same scheme, separate FIFOs.
+        if self.slave.ar.can_pop() && self.master.ar.can_push() {
+            let id = self.slave.ar.peek(|c| c.id).unwrap();
+            let sel = self.f(id);
+            if self.r_fifos[sel].len() < self.depth {
+                let mut c = self.slave.ar.pop();
+                self.r_fifos[sel].push_back(c.id);
+                c.id = sel as u32;
+                self.master.ar.push(c);
+            }
+        }
+        // B: reflect the original ID from the FIFO front; pop it.
+        if self.master.b.can_pop() && self.slave.b.can_push() {
+            let mut b = self.master.b.pop();
+            let sel = b.id as usize;
+            let orig = self.w_fifos[sel]
+                .pop_front()
+                .expect("B response with empty reflection FIFO");
+            b.id = orig;
+            self.slave.b.push(b);
+        }
+        // R: reflect from the front; the last beat pops.
+        if self.master.r.can_pop() && self.slave.r.can_push() {
+            let mut r = self.master.r.pop();
+            let sel = r.id as usize;
+            let orig = *self.r_fifos[sel]
+                .front()
+                .expect("R response with empty reflection FIFO");
+            if r.last {
+                self.r_fifos[sel].pop_front();
+            }
+            r.id = orig;
+            self.slave.r.push(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::payload::{Bytes, Cmd, RBeat, Resp};
+    use crate::protocol::port::{bundle, BundleCfg, MasterEnd, SlaveEnd};
+
+    fn mk(u_m: usize, t: usize) -> (MasterEnd, IdSerialize, SlaveEnd) {
+        let (up_m, up_s) = bundle("up", BundleCfg::new(64, 8));
+        let out_bits = (u_m as u32).next_power_of_two().trailing_zeros().max(1) as usize;
+        let (down_m, down_s) = bundle("down", BundleCfg::new(64, out_bits));
+        (up_m, IdSerialize::new("ser", up_s, down_m, u_m, t), down_s)
+    }
+
+    #[test]
+    fn ids_truncated_to_fifo_index() {
+        let (up, mut ser, down) = mk(4, 8);
+        let mut cy = 0;
+        for (i, id) in [0u32, 5, 10, 255].iter().enumerate() {
+            up.set_now(cy);
+            let mut c = Cmd::new(*id, 0x40 * i as u64, 0, 3);
+            c.tag = i as u64;
+            up.ar.push(c);
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            ser.tick(cy);
+        }
+        let mut out = Vec::new();
+        for _ in 0..8 {
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            ser.tick(cy);
+            while down.ar.can_pop() {
+                out.push(down.ar.pop().id);
+            }
+        }
+        assert_eq!(out, vec![0, 1, 2, 3], "f(id) = id % 4");
+    }
+
+    #[test]
+    fn responses_reflect_original_id_in_order() {
+        let (up, mut ser, down) = mk(2, 8);
+        let mut cy = 0;
+        // Two reads that both map to FIFO 1 (ids 1 and 3): serialized.
+        for (i, id) in [1u32, 3].iter().enumerate() {
+            up.set_now(cy);
+            let mut c = Cmd::new(*id, 0x40 * i as u64, 0, 3);
+            c.tag = 100 + i as u64;
+            up.ar.push(c);
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            ser.tick(cy);
+        }
+        // Downstream answers in order (same output ID -> must).
+        let mut got = Vec::new();
+        for _ in 0..12 {
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            ser.tick(cy);
+            if down.ar.can_pop() {
+                let c = down.ar.pop();
+                down.r.push(RBeat { id: c.id, data: Bytes::zeroed(8), resp: Resp::Okay, last: true, tag: c.tag });
+            }
+            if up.r.can_pop() {
+                got.push(up.r.pop());
+            }
+        }
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].id, 1, "first response reflects first original ID");
+        assert_eq!(got[1].id, 3);
+        assert_eq!(got[0].tag, 100);
+        assert_eq!(got[1].tag, 101);
+    }
+
+    #[test]
+    fn fifo_full_stalls() {
+        let (up, mut ser, down) = mk(1, 2);
+        let mut cy = 0;
+        for i in 0..3u64 {
+            up.set_now(cy);
+            let mut c = Cmd::new(7, 0, 0, 3);
+            c.tag = i;
+            up.ar.push(c);
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            ser.tick(cy);
+        }
+        let mut forwarded = 0;
+        for _ in 0..6 {
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            ser.tick(cy);
+            if down.ar.can_pop() {
+                down.ar.pop();
+                forwarded += 1;
+            }
+        }
+        assert_eq!(forwarded, 2, "T=2: third command stalls");
+    }
+
+    #[test]
+    fn write_burst_reflection() {
+        let (up, mut ser, down) = mk(2, 4);
+        let mut cy = 0;
+        up.set_now(cy);
+        let mut c = Cmd::new(42, 0x100, 1, 3);
+        c.tag = 7;
+        up.aw.push(c);
+        up.w.push(crate::protocol::WBeat::full(Bytes::zeroed(8), false, 7));
+        cy += 1;
+        up.set_now(cy);
+        up.w.push(crate::protocol::WBeat::full(Bytes::zeroed(8), true, 7));
+        let mut done = false;
+        for _ in 0..14 {
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            ser.tick(cy);
+            if down.aw.can_pop() {
+                let c = down.aw.pop();
+                assert_eq!(c.id, 0, "42 % 2 = 0");
+            }
+            if down.w.can_pop() {
+                let w = down.w.pop();
+                if w.last {
+                    down.b.push(crate::protocol::BBeat { id: 0, resp: Resp::Okay, tag: 7 });
+                }
+            }
+            if up.b.can_pop() {
+                let b = up.b.pop();
+                assert_eq!(b.id, 42, "original write ID reflected");
+                done = true;
+            }
+        }
+        assert!(done);
+    }
+
+    #[test]
+    fn different_fifos_stay_concurrent() {
+        let (up, mut ser, down) = mk(2, 1);
+        let mut cy = 0;
+        // IDs 0 and 1 -> different FIFOs; both forwarded despite T=1.
+        for id in [0u32, 1] {
+            up.set_now(cy);
+            let mut c = Cmd::new(id, 0, 0, 3);
+            c.tag = id as u64;
+            up.ar.push(c);
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            ser.tick(cy);
+        }
+        let mut forwarded = 0;
+        for _ in 0..6 {
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            ser.tick(cy);
+            while down.ar.can_pop() {
+                down.ar.pop();
+                forwarded += 1;
+            }
+        }
+        assert_eq!(forwarded, 2);
+    }
+}

@@ -1,0 +1,477 @@
+//! Last-level cache (paper footnote 3: part of the open-source platform,
+//! not described in the paper body "due to space constraints").
+//!
+//! A set-associative, write-back, write-allocate cache with a network
+//! slave port (from the interconnect) and a network master port (to the
+//! backing memory). The implementation is *blocking* (one outstanding
+//! miss), which matches an LLC used as a bandwidth filter in front of a
+//! high-latency off-chip channel; tags, LRU state, dirty bits, and
+//! line-granularity refill/writeback bursts are modeled exactly.
+
+use std::collections::VecDeque;
+
+use crate::protocol::{BBeat, Bytes, Cmd, MasterEnd, RBeat, Resp, SlaveEnd, WBeat};
+use crate::sim::{Component, Cycle};
+
+#[derive(Clone)]
+struct Line {
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+    lru: u64,
+    data: Vec<u8>,
+}
+
+/// Miss-handling state machine.
+enum MissState {
+    /// Issue the writeback burst (AW + W beats) for the victim.
+    Writeback { wb_addr: u64, wb_data: Vec<u8>, beats_sent: usize, aw_sent: bool },
+    /// Waiting for the writeback B response.
+    WritebackWait,
+    /// Issue the refill AR.
+    RefillCmd,
+    /// Collect refill R beats.
+    Refill { got: usize },
+}
+
+enum Txn {
+    Read(Cmd),
+    Write(Cmd),
+}
+
+pub struct Llc {
+    name: String,
+    slave: SlaveEnd,
+    master: MasterEnd,
+    sets: usize,
+    ways: usize,
+    line_bytes: usize,
+    lines: Vec<Line>, // sets * ways
+    lru_clock: u64,
+    /// Current transaction being served.
+    txn: Option<Txn>,
+    /// Beat progress within the current transaction.
+    beat: usize,
+    /// Write-burst beats buffered until the line is present.
+    w_pending: VecDeque<WBeat>,
+    miss: Option<(usize, MissState)>, // (way slot being filled, state)
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Llc {
+    pub fn new(
+        name: impl Into<String>,
+        slave: SlaveEnd,
+        master: MasterEnd,
+        sets: usize,
+        ways: usize,
+        line_bytes: usize,
+    ) -> Self {
+        assert!(sets.is_power_of_two() && line_bytes.is_power_of_two());
+        assert!(line_bytes >= slave.cfg.beat_bytes());
+        assert_eq!(slave.cfg.data_bits, master.cfg.data_bits);
+        Llc {
+            name: name.into(),
+            slave,
+            master,
+            sets,
+            ways,
+            line_bytes,
+            lines: vec![
+                Line { tag: 0, valid: false, dirty: false, lru: 0, data: vec![0; line_bytes] };
+                sets * ways
+            ],
+            lru_clock: 0,
+            txn: None,
+            beat: 0,
+            w_pending: VecDeque::new(),
+            miss: None,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn set_of(&self, addr: u64) -> usize {
+        ((addr / self.line_bytes as u64) as usize) % self.sets
+    }
+
+    fn tag_of(&self, addr: u64) -> u64 {
+        addr / (self.line_bytes as u64 * self.sets as u64)
+    }
+
+    fn line_base(&self, addr: u64) -> u64 {
+        addr & !(self.line_bytes as u64 - 1)
+    }
+
+    /// Look up; returns the way index on hit.
+    fn lookup(&self, addr: u64) -> Option<usize> {
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        (0..self.ways).find(|&w| {
+            let l = &self.lines[set * self.ways + w];
+            l.valid && l.tag == tag
+        })
+    }
+
+    fn touch(&mut self, set: usize, way: usize) {
+        self.lru_clock += 1;
+        self.lines[set * self.ways + way].lru = self.lru_clock;
+    }
+
+    fn victim(&self, set: usize) -> usize {
+        // Invalid way first, else least-recently used.
+        (0..self.ways)
+            .find(|&w| !self.lines[set * self.ways + w].valid)
+            .unwrap_or_else(|| {
+                (0..self.ways)
+                    .min_by_key(|&w| self.lines[set * self.ways + w].lru)
+                    .unwrap()
+            })
+    }
+
+    fn cur_addr(&self) -> u64 {
+        match self.txn.as_ref().unwrap() {
+            Txn::Read(c) | Txn::Write(c) => c.beat_addr(self.beat),
+        }
+    }
+
+    /// Begin miss handling for the current beat's line.
+    fn start_miss(&mut self, addr: u64) {
+        let set = self.set_of(addr);
+        let way = self.victim(set);
+        let l = &self.lines[set * self.ways + way];
+        let state = if l.valid && l.dirty {
+            let wb_addr = (l.tag * self.sets as u64 + set as u64) * self.line_bytes as u64;
+            MissState::Writeback { wb_addr, wb_data: l.data.clone(), beats_sent: 0, aw_sent: false }
+        } else {
+            MissState::RefillCmd
+        };
+        self.misses += 1;
+        self.miss = Some((way, state));
+    }
+}
+
+impl Component for Llc {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, cy: Cycle) {
+        self.slave.set_now(cy);
+        self.master.set_now(cy);
+        let bb = self.slave.cfg.beat_bytes();
+        let beats_per_line = self.line_bytes / bb;
+
+        // Accept a transaction (reads win ties; one at a time).
+        if self.txn.is_none() {
+            if self.slave.ar.can_pop() {
+                self.txn = Some(Txn::Read(self.slave.ar.pop()));
+                self.beat = 0;
+            } else if self.slave.aw.can_pop() {
+                self.txn = Some(Txn::Write(self.slave.aw.pop()));
+                self.beat = 0;
+            }
+        }
+
+        // Progress miss handling.
+        if let Some((way, mut state)) = self.miss.take() {
+            let addr = self.cur_addr();
+            let base = self.line_base(addr);
+            let set = self.set_of(addr);
+            let mut resolved = false;
+            match &mut state {
+                MissState::Writeback { wb_addr, wb_data, beats_sent, aw_sent } => {
+                    if !*aw_sent && self.master.aw.can_push() {
+                        let mut c = Cmd::new(0, *wb_addr, (beats_per_line - 1) as u8, self.slave.cfg.size());
+                        c.tag = u64::MAX; // internal traffic marker
+                        self.master.aw.push(c);
+                        *aw_sent = true;
+                    }
+                    if *aw_sent && *beats_sent < beats_per_line && self.master.w.can_push() {
+                        let chunk = &wb_data[*beats_sent * bb..(*beats_sent + 1) * bb];
+                        self.master.w.push(WBeat::full(
+                            Bytes::from_slice(chunk),
+                            *beats_sent + 1 == beats_per_line,
+                            u64::MAX,
+                        ));
+                        *beats_sent += 1;
+                        if *beats_sent == beats_per_line {
+                            state = MissState::WritebackWait;
+                        }
+                    }
+                }
+                MissState::WritebackWait => {
+                    if self.master.b.can_pop() {
+                        self.master.b.pop();
+                        state = MissState::RefillCmd;
+                    }
+                }
+                MissState::RefillCmd => {
+                    if self.master.ar.can_push() {
+                        let mut c = Cmd::new(0, base, (beats_per_line - 1) as u8, self.slave.cfg.size());
+                        c.tag = u64::MAX;
+                        self.master.ar.push(c);
+                        state = MissState::Refill { got: 0 };
+                    }
+                }
+                MissState::Refill { got } => {
+                    if self.master.r.can_pop() {
+                        let r = self.master.r.pop();
+                        let l = &mut self.lines[set * self.ways + way];
+                        l.data[*got * bb..(*got + 1) * bb].copy_from_slice(r.data.as_slice());
+                        *got += 1;
+                        if r.last {
+                            debug_assert_eq!(*got, beats_per_line);
+                            let tag = addr / (self.line_bytes as u64 * self.sets as u64);
+                            let l = &mut self.lines[set * self.ways + way];
+                            l.valid = true;
+                            l.dirty = false;
+                            l.tag = tag;
+                            self.touch(set, way);
+                            resolved = true;
+                        }
+                    }
+                }
+            }
+            if !resolved {
+                self.miss = Some((way, state));
+            }
+            return; // blocking: serve the miss before anything else
+        }
+
+        // Serve the current transaction beat by beat.
+        let Some(txn) = &self.txn else { return };
+        match txn {
+            Txn::Read(c) => {
+                let c = c.clone();
+                if !self.slave.r.can_push() {
+                    return;
+                }
+                let addr = c.beat_addr(self.beat);
+                match self.lookup(addr) {
+                    None => self.start_miss(addr),
+                    Some(way) => {
+                        self.hits += 1;
+                        let set = self.set_of(addr);
+                        let off = (addr - self.line_base(addr)) as usize;
+                        let line = &self.lines[set * self.ways + way];
+                        let lane = (addr % bb as u64) as usize;
+                        let nbytes = c.beat_bytes();
+                        let mut data = Bytes::zeroed(bb);
+                        let aligned_off = off - lane;
+                        data.as_mut_slice()[lane..lane + nbytes]
+                            .copy_from_slice(&line.data[aligned_off + lane..aligned_off + lane + nbytes]);
+                        self.touch(set, way);
+                        let last = self.beat + 1 == c.beats();
+                        self.slave.r.push(RBeat { id: c.id, data, resp: Resp::Okay, last, tag: c.tag });
+                        self.beat += 1;
+                        if last {
+                            self.txn = None;
+                        }
+                    }
+                }
+            }
+            Txn::Write(c) => {
+                let c = c.clone();
+                // Need the W beat for this beat index.
+                if self.w_pending.is_empty() {
+                    if self.slave.w.can_pop() {
+                        let w = self.slave.w.pop();
+                        self.w_pending.push_back(w);
+                    } else {
+                        return;
+                    }
+                }
+                let addr = c.beat_addr(self.beat);
+                match self.lookup(addr) {
+                    None => self.start_miss(addr),
+                    Some(way) => {
+                        self.hits += 1;
+                        let set = self.set_of(addr);
+                        let w = self.w_pending.pop_front().unwrap();
+                        let off = self.line_base(addr);
+                        let line_off = (addr & !(bb as u64 - 1)) - off;
+                        {
+                            let l = &mut self.lines[set * self.ways + way];
+                            for i in 0..bb {
+                                if (w.strb >> i) & 1 == 1 {
+                                    l.data[line_off as usize + i] = w.data.as_slice()[i];
+                                }
+                            }
+                            l.dirty = true;
+                        }
+                        self.touch(set, way);
+                        let last = self.beat + 1 == c.beats();
+                        debug_assert_eq!(last, w.last);
+                        self.beat += 1;
+                        if last {
+                            // B response.
+                            if self.slave.b.can_push() {
+                                self.slave.b.push(BBeat { id: c.id, resp: Resp::Okay, tag: c.tag });
+                                self.txn = None;
+                            } else {
+                                // Retry issuing B next cycle.
+                                self.beat -= 1;
+                                self.w_pending.push_front(w);
+                                let set_way = set * self.ways + way;
+                                let _ = set_way;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::mem_duplex::{BankArray, MemDuplex};
+    use crate::protocol::port::{bundle, BundleCfg, MasterEnd};
+
+    /// LLC in front of a duplex memory controller.
+    fn mk(sets: usize, ways: usize) -> (MasterEnd, Llc, MemDuplex) {
+        let cfg = BundleCfg::new(64, 4);
+        let (up_m, up_s) = bundle("up", cfg);
+        let (down_m, down_s) = bundle("down", cfg);
+        let banks = BankArray::new(0, 1 << 20, 2, 8, 1);
+        let llc = Llc::new("llc", up_s, down_m, sets, ways, 64);
+        (up_m, llc, MemDuplex::new("mem", down_s, banks))
+    }
+
+    fn read64(
+        m: &MasterEnd,
+        llc: &mut Llc,
+        mem: &mut MemDuplex,
+        cy: &mut Cycle,
+        addr: u64,
+        tag: u64,
+    ) -> Vec<u8> {
+        m.set_now(*cy);
+        let mut c = Cmd::new(1, addr, 0, 3);
+        c.tag = tag;
+        m.ar.push(c);
+        for _ in 0..400 {
+            *cy += 1;
+            m.set_now(*cy);
+            llc.tick(*cy);
+            mem.tick(*cy);
+            if m.r.can_pop() {
+                return m.r.pop().data.as_slice().to_vec();
+            }
+        }
+        panic!("read timed out");
+    }
+
+    fn write64(
+        m: &MasterEnd,
+        llc: &mut Llc,
+        mem: &mut MemDuplex,
+        cy: &mut Cycle,
+        addr: u64,
+        val: &[u8; 8],
+        tag: u64,
+    ) {
+        m.set_now(*cy);
+        let mut c = Cmd::new(2, addr, 0, 3);
+        c.tag = tag;
+        m.aw.push(c);
+        m.w.push(WBeat::full(Bytes::from_slice(val), true, tag));
+        for _ in 0..400 {
+            *cy += 1;
+            m.set_now(*cy);
+            llc.tick(*cy);
+            mem.tick(*cy);
+            if m.b.can_pop() {
+                m.b.pop();
+                return;
+            }
+        }
+        panic!("write timed out");
+    }
+
+    #[test]
+    fn miss_then_hit() {
+        let (m, mut llc, mut mem) = mk(16, 2);
+        mem.banks.borrow_mut().poke(0x1000, &[9u8; 64]);
+        let mut cy = 0;
+        let d = read64(&m, &mut llc, &mut mem, &mut cy, 0x1000, 1);
+        assert_eq!(d, vec![9u8; 8]);
+        assert_eq!(llc.misses, 1);
+        let before = llc.hits;
+        let d2 = read64(&m, &mut llc, &mut mem, &mut cy, 0x1008, 2);
+        assert_eq!(d2, vec![9u8; 8]);
+        assert_eq!(llc.misses, 1, "same line: hit");
+        assert!(llc.hits > before);
+    }
+
+    #[test]
+    fn read_your_write() {
+        let (m, mut llc, mut mem) = mk(16, 2);
+        let mut cy = 0;
+        write64(&m, &mut llc, &mut mem, &mut cy, 0x2000, &[1, 2, 3, 4, 5, 6, 7, 8], 1);
+        let d = read64(&m, &mut llc, &mut mem, &mut cy, 0x2000, 2);
+        assert_eq!(d, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn dirty_eviction_writes_back() {
+        // 1 set x 1 way: every new line evicts the previous one.
+        let (m, mut llc, mut mem) = mk(1, 1);
+        let mut cy = 0;
+        write64(&m, &mut llc, &mut mem, &mut cy, 0x0, &[0xAA; 8], 1);
+        // Evict by touching a different line.
+        let _ = read64(&m, &mut llc, &mut mem, &mut cy, 0x40, 2);
+        // The dirty data must now be in backing memory.
+        assert_eq!(mem.banks.borrow().peek_vec(0x0, 8), vec![0xAA; 8]);
+        // And reading it back (another miss) returns it.
+        let d = read64(&m, &mut llc, &mut mem, &mut cy, 0x0, 3);
+        assert_eq!(d, vec![0xAA; 8]);
+    }
+
+    #[test]
+    fn lru_keeps_hot_line() {
+        let (m, mut llc, mut mem) = mk(1, 2);
+        let mut cy = 0;
+        mem.banks.borrow_mut().poke(0x00, &[1u8; 64]);
+        mem.banks.borrow_mut().poke(0x40, &[2u8; 64]);
+        mem.banks.borrow_mut().poke(0x80, &[3u8; 64]);
+        let _ = read64(&m, &mut llc, &mut mem, &mut cy, 0x00, 1); // miss
+        let _ = read64(&m, &mut llc, &mut mem, &mut cy, 0x40, 2); // miss
+        let _ = read64(&m, &mut llc, &mut mem, &mut cy, 0x00, 3); // hit, touch
+        let _ = read64(&m, &mut llc, &mut mem, &mut cy, 0x80, 4); // miss, evicts 0x40
+        let misses_before = llc.misses;
+        let _ = read64(&m, &mut llc, &mut mem, &mut cy, 0x00, 5); // must still hit
+        assert_eq!(llc.misses, misses_before, "hot line kept by LRU");
+    }
+
+    #[test]
+    fn burst_read_across_lines() {
+        let (m, mut llc, mut mem) = mk(16, 2);
+        for i in 0..16u64 {
+            mem.banks.borrow_mut().poke(0x3000 + i * 8, &[(i + 1) as u8; 8]);
+        }
+        let mut cy = 0;
+        m.set_now(cy);
+        let mut c = Cmd::new(1, 0x3000, 15, 3); // 128 B = 2 lines
+        c.tag = 9;
+        m.ar.push(c);
+        let mut beats = Vec::new();
+        for _ in 0..800 {
+            cy += 1;
+            m.set_now(cy);
+            llc.tick(cy);
+            mem.tick(cy);
+            if m.r.can_pop() {
+                beats.push(m.r.pop());
+            }
+        }
+        assert_eq!(beats.len(), 16);
+        for (i, r) in beats.iter().enumerate() {
+            assert_eq!(r.data.as_slice(), &[(i + 1) as u8; 8], "beat {i}");
+            assert_eq!(r.last, i == 15);
+        }
+    }
+}

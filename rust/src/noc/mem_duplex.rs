@@ -1,0 +1,467 @@
+//! Duplex on-chip memory controller (§2.7.2, paper Fig. 12): saturates the
+//! read **and** write data channels of the on-chip network simultaneously.
+//!
+//! A network demultiplexer statically routes all writes through one
+//! internal simplex-like path and all reads through the other. A
+//! logarithmic memory interconnect then routes each memory command to one
+//! of `B >= 2` address-interleaved single-port SRAM banks. In the absence
+//! of bank conflicts both data channels run at full bandwidth; irregular
+//! traffic raises the conflict rate, which a higher banking factor reduces
+//! (at the cost of more, shallower SRAM macros).
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use crate::noc::sram::{MemCmd, Sram};
+use crate::protocol::{BBeat, Bytes, RBeat, Resp, SlaveEnd};
+use crate::sim::{Component, Cycle};
+
+/// Address-interleaved bank array with a one-command-per-bank-per-cycle
+/// logarithmic interconnect.
+pub struct BankArray {
+    banks: Vec<Sram>,
+    /// Address mapped to the first byte of bank 0.
+    base: u64,
+    /// Interleave granularity in bytes (= network beat width).
+    stride: usize,
+    /// Bank conflict counter (observability for the banking-factor bench).
+    pub conflicts: u64,
+}
+
+impl BankArray {
+    pub fn new(base: u64, size_per_bank: usize, banks: usize, stride: usize, latency: Cycle) -> Self {
+        assert!(banks >= 1);
+        BankArray {
+            banks: (0..banks).map(|_| Sram::new(0, size_per_bank, latency)).collect(),
+            base,
+            stride,
+            conflicts: 0,
+        }
+    }
+
+    pub fn n_banks(&self) -> usize {
+        self.banks.len()
+    }
+
+    fn bank_of(&self, addr: u64) -> usize {
+        let rel = addr.wrapping_sub(self.base);
+        ((rel / self.stride as u64) as usize) % self.banks.len()
+    }
+
+    /// Bank-local address: the interleaved word index within the bank.
+    fn local_addr(&self, addr: u64) -> u64 {
+        let rel = addr.wrapping_sub(self.base);
+        let word = rel / self.stride as u64;
+        let off = rel % self.stride as u64;
+        (word / self.banks.len() as u64) * self.stride as u64 + off
+    }
+
+    pub fn can_accept(&self, cy: Cycle, addr: u64) -> bool {
+        self.banks[self.bank_of(addr)].can_accept(cy)
+    }
+
+    pub fn accept(&mut self, cy: Cycle, addr: u64, cmd: MemCmd) -> usize {
+        let b = self.bank_of(addr);
+        let local = self.local_addr(addr);
+        let cmd = match cmd {
+            MemCmd::Read { bytes, .. } => MemCmd::Read { addr: local, bytes },
+            MemCmd::Write { data, strb, .. } => MemCmd::Write { addr: local, data, strb },
+        };
+        self.banks[b].accept(cy, cmd);
+        b
+    }
+
+    pub fn take_resp(&mut self, cy: Cycle, bank: usize) -> Option<crate::noc::sram::MemResp> {
+        self.banks[bank].take_resp(cy)
+    }
+
+    /// Backdoor for tests.
+    pub fn poke(&mut self, addr: u64, data: &[u8]) {
+        for (i, b) in data.iter().enumerate() {
+            let a = addr + i as u64;
+            let bank = self.bank_of(a);
+            let local = self.local_addr(a);
+            self.banks[bank].poke(local, &[*b]);
+        }
+    }
+
+    pub fn peek_vec(&self, addr: u64, len: usize) -> Vec<u8> {
+        (0..len)
+            .map(|i| {
+                let a = addr + i as u64;
+                self.banks[self.bank_of(a)].peek(self.local_addr(a), 1)[0]
+            })
+            .collect()
+    }
+}
+
+struct ReadMeta {
+    id: u32,
+    tag: u64,
+    lane: usize,
+    bytes: usize,
+    last: bool,
+    bank: usize,
+}
+
+pub struct MemDuplex {
+    name: String,
+    slave: SlaveEnd,
+    /// Shared so several controllers (= several wide L1 ports) can sit on
+    /// one bank array, as in the Manticore cluster's multi-ported L1.
+    pub banks: Rc<RefCell<BankArray>>,
+    /// Write side state.
+    w_active: Option<(crate::protocol::Cmd, usize)>,
+    b_q: VecDeque<BBeat>,
+    /// Read side state.
+    r_active: Option<(crate::protocol::Cmd, usize)>,
+    r_meta: VecDeque<ReadMeta>,
+    r_buf: VecDeque<RBeat>,
+    r_buf_cap: usize,
+    /// Writes win bank conflicts (cannot be interleaved due to (O3)).
+    write_wins_conflicts: bool,
+}
+
+impl MemDuplex {
+    pub fn new(name: impl Into<String>, slave: SlaveEnd, banks: BankArray) -> Self {
+        Self::new_shared(name, slave, Rc::new(RefCell::new(banks)))
+    }
+
+    /// Attach another controller port to an existing bank array.
+    pub fn new_shared(
+        name: impl Into<String>,
+        slave: SlaveEnd,
+        banks: Rc<RefCell<BankArray>>,
+    ) -> Self {
+        assert!(banks.borrow().n_banks() >= 2, "duplex needs >= 2 memory master ports");
+        MemDuplex {
+            name: name.into(),
+            slave,
+            banks,
+            w_active: None,
+            b_q: VecDeque::new(),
+            r_active: None,
+            r_meta: VecDeque::new(),
+            r_buf: VecDeque::new(),
+            r_buf_cap: 16,
+            write_wins_conflicts: true,
+        }
+    }
+}
+
+impl Component for MemDuplex {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, cy: Cycle) {
+        self.slave.set_now(cy);
+
+        // Static demux: writes -> left controller, reads -> right. Each
+        // accepts one burst at a time.
+        if self.w_active.is_none() && self.slave.aw.can_pop() {
+            self.w_active = Some((self.slave.aw.pop(), 0));
+        }
+        if self.r_active.is_none() && self.slave.ar.can_pop() {
+            self.r_active = Some((self.slave.ar.pop(), 0));
+        }
+
+        let port_bytes = self.slave.cfg.beat_bytes();
+
+        // Candidate addresses this cycle.
+        let w_addr = self.w_active.as_ref().and_then(|(c, i)| {
+            if self.slave.w.can_pop() {
+                Some(c.beat_addr(*i))
+            } else {
+                None
+            }
+        });
+        let r_addr = self.r_active.as_ref().and_then(|(c, i)| {
+            if self.r_meta.len() + self.r_buf.len() < self.r_buf_cap {
+                Some(c.beat_addr(*i))
+            } else {
+                None
+            }
+        });
+
+        // Bank conflict: same bank wanted by both sides this cycle.
+        let conflict = match (w_addr, r_addr) {
+            (Some(wa), Some(ra)) => {
+                self.banks.borrow().bank_of(wa) == self.banks.borrow().bank_of(ra)
+            }
+            _ => false,
+        };
+        if conflict {
+            self.banks.borrow_mut().conflicts += 1;
+        }
+
+        // Write path issue.
+        let mut wrote_bank = None;
+        if let Some(wa) = w_addr {
+            let can = self.banks.borrow().can_accept(cy, wa);
+            if can {
+                let (c, issued) = self.w_active.as_mut().unwrap();
+                let w = self.slave.w.pop();
+                let bb = c.beat_bytes();
+                let lane = (wa % port_bytes as u64) as usize;
+                let data = w.data.as_slice()[lane..lane + bb].to_vec();
+                let strb = (w.strb >> lane) & crate::protocol::strb_all(bb);
+                let bank = self.banks.borrow_mut().accept(cy, wa, MemCmd::Write { addr: wa, data, strb });
+                wrote_bank = Some(bank);
+                *issued += 1;
+                if *issued == c.beats() {
+                    self.b_q.push_back(BBeat { id: c.id, resp: Resp::Okay, tag: c.tag });
+                    self.w_active = None;
+                }
+            }
+        }
+
+        // Read path issue (loses same-bank conflicts to the write).
+        if let Some(ra) = r_addr {
+            let bank = self.banks.borrow().bank_of(ra);
+            let blocked = conflict && self.write_wins_conflicts && wrote_bank == Some(bank);
+            if !blocked && self.banks.borrow().can_accept(cy, ra) {
+                let (c, issued) = self.r_active.as_mut().unwrap();
+                let bb = c.beat_bytes();
+                let lane = (ra % port_bytes as u64) as usize;
+                let bank = self.banks.borrow_mut().accept(cy, ra, MemCmd::Read { addr: ra, bytes: bb });
+                *issued += 1;
+                let last = *issued == c.beats();
+                self.r_meta.push_back(ReadMeta { id: c.id, tag: c.tag, lane, bytes: bb, last, bank });
+                if last {
+                    self.r_active = None;
+                }
+            }
+        }
+
+        // Collect read data in issue order (front of the meta queue).
+        while self.r_buf.len() < self.r_buf_cap {
+            let Some(m) = self.r_meta.front() else { break };
+            let bank = m.bank;
+            let resp_opt = self.banks.borrow_mut().take_resp(cy, bank);
+            if let Some(resp) = resp_opt {
+                let m = self.r_meta.pop_front().unwrap();
+                let mut data = Bytes::zeroed(port_bytes);
+                data.as_mut_slice()[m.lane..m.lane + m.bytes].copy_from_slice(&resp.data);
+                self.r_buf.push_back(RBeat { id: m.id, data, resp: Resp::Okay, last: m.last, tag: m.tag });
+            } else {
+                break;
+            }
+        }
+
+        // Issue responses.
+        if let Some(b) = self.b_q.front() {
+            if self.slave.b.can_push() {
+                let b = b.clone();
+                self.b_q.pop_front();
+                self.slave.b.push(b);
+            }
+        }
+        if let Some(r) = self.r_buf.front() {
+            if self.slave.r.can_push() {
+                let r = r.clone();
+                self.r_buf.pop_front();
+                self.slave.r.push(r);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::payload::{Cmd, WBeat};
+    use crate::protocol::port::{bundle, BundleCfg, MasterEnd};
+
+    fn mk(banks: usize) -> (MasterEnd, MemDuplex) {
+        let (m, s) = bundle("mem", BundleCfg::new(64, 4));
+        let arr = BankArray::new(0, 64 * 1024, banks, 8, 1);
+        (m, MemDuplex::new("duplex", s, arr))
+    }
+
+    #[test]
+    fn bank_interleave_math() {
+        let arr = BankArray::new(0, 1024, 4, 8, 1);
+        assert_eq!(arr.bank_of(0x00), 0);
+        assert_eq!(arr.bank_of(0x08), 1);
+        assert_eq!(arr.bank_of(0x18), 3);
+        assert_eq!(arr.bank_of(0x20), 0);
+        assert_eq!(arr.local_addr(0x20), 0x08);
+        assert_eq!(arr.local_addr(0x25), 0x0D);
+    }
+
+    #[test]
+    fn poke_peek_roundtrip_across_banks() {
+        let mut arr = BankArray::new(0, 1024, 4, 8, 1);
+        let data: Vec<u8> = (0..64).map(|i| i as u8).collect();
+        arr.poke(0x10, &data);
+        assert_eq!(arr.peek_vec(0x10, 64), data);
+    }
+
+    #[test]
+    fn duplex_full_duplex_bandwidth() {
+        // Concurrent 16-beat write and 16-beat read to different bank
+        // groups: both finish in ~16+latency cycles (vs ~32 on a simplex).
+        let (m, mut ctrl) = mk(4);
+        ctrl.banks.borrow_mut().poke(0x800, &vec![7u8; 128]);
+        let mut cy = 0;
+        m.set_now(cy);
+        let mut wc = Cmd::new(1, 0x0, 15, 3);
+        wc.tag = 1;
+        m.aw.push(wc);
+        let mut rc = Cmd::new(2, 0x804, 15, 3); // offset to stagger banks
+        rc.tag = 2;
+        m.ar.push(rc);
+        let mut w_fed = 0;
+        let mut r_beats = 0;
+        let mut b_seen = false;
+        let start = 1;
+        while (!b_seen || r_beats < 16) && cy < 200 {
+            m.set_now(cy);
+            if w_fed < 16 && m.w.can_push() {
+                m.w.push(WBeat::full(Bytes::zeroed(8), w_fed == 15, 1));
+                w_fed += 1;
+            }
+            cy += 1;
+            m.set_now(cy);
+            ctrl.tick(cy);
+            if m.r.can_pop() {
+                m.r.pop();
+                r_beats += 1;
+            }
+            if m.b.can_pop() {
+                m.b.pop();
+                b_seen = true;
+            }
+        }
+        assert!(b_seen && r_beats == 16);
+        let took = cy - start;
+        assert!(took < 30, "duplex must overlap read+write streams, took {took}");
+    }
+
+    #[test]
+    fn read_returns_written_data() {
+        let (m, mut ctrl) = mk(2);
+        let mut cy = 0;
+        m.set_now(cy);
+        let mut wc = Cmd::new(0, 0x40, 3, 3);
+        wc.tag = 1;
+        m.aw.push(wc);
+        let mut fed = 0;
+        let mut b = false;
+        while !b && cy < 60 {
+            m.set_now(cy);
+            if fed < 4 && m.w.can_push() {
+                let mut d = Bytes::zeroed(8);
+                d.as_mut_slice().fill(0x10 + fed as u8);
+                m.w.push(WBeat::full(d, fed == 3, 1));
+                fed += 1;
+            }
+            cy += 1;
+            m.set_now(cy);
+            ctrl.tick(cy);
+            if m.b.can_pop() {
+                m.b.pop();
+                b = true;
+            }
+        }
+        assert!(b);
+        m.set_now(cy);
+        let mut rc = Cmd::new(1, 0x40, 3, 3);
+        rc.tag = 2;
+        m.ar.push(rc);
+        let mut beats = Vec::new();
+        for _ in 0..30 {
+            cy += 1;
+            m.set_now(cy);
+            ctrl.tick(cy);
+            if m.r.can_pop() {
+                beats.push(m.r.pop());
+            }
+        }
+        assert_eq!(beats.len(), 4);
+        for (i, r) in beats.iter().enumerate() {
+            assert!(r.data.as_slice().iter().all(|&x| x == 0x10 + i as u8));
+        }
+    }
+
+    #[test]
+    fn conflicts_counted_on_same_bank() {
+        // Write and read streams hammering the SAME bank (stride apart by
+        // banks*stride): every cycle both want bank 0.
+        let (m, mut ctrl) = mk(2);
+        let mut cy = 0;
+        m.set_now(cy);
+        let mut wc = Cmd::new(0, 0x0, 7, 3);
+        wc.tag = 1;
+        wc.burst = crate::protocol::Burst::Fixed; // stay on bank 0
+        m.aw.push(wc);
+        let mut rc = Cmd::new(1, 0x10, 7, 3);
+        rc.burst = crate::protocol::Burst::Fixed; // 0x10 -> bank 0 too
+        rc.tag = 2;
+        m.ar.push(rc);
+        let mut fed = 0;
+        for _ in 0..60 {
+            m.set_now(cy);
+            if fed < 8 && m.w.can_push() {
+                m.w.push(WBeat::full(Bytes::zeroed(8), fed == 7, 1));
+                fed += 1;
+            }
+            cy += 1;
+            m.set_now(cy);
+            ctrl.tick(cy);
+            if m.r.can_pop() {
+                m.r.pop();
+            }
+            if m.b.can_pop() {
+                m.b.pop();
+            }
+        }
+        assert!(ctrl.banks.borrow().conflicts > 0, "same-bank traffic must conflict");
+    }
+
+    #[test]
+    fn more_banks_fewer_conflicts() {
+        // Random-ish mixed traffic: banking factor 8 must conflict less
+        // than banking factor 2.
+        let run = |banks: usize| -> u64 {
+            let (m, mut ctrl) = mk(banks);
+            let mut rng = crate::sim::SplitMix64::new(3);
+            let mut cy = 0;
+            let mut w_left = 0;
+            for _ in 0..2000 {
+                m.set_now(cy);
+                if w_left == 0 && m.aw.can_push() {
+                    let mut wc = Cmd::new(0, rng.below(0x1000) & !7, 3, 3);
+                    wc.tag = 1;
+                    m.aw.push(wc);
+                    w_left = 4;
+                }
+                if w_left > 0 && m.w.can_push() {
+                    m.w.push(WBeat::full(Bytes::zeroed(8), w_left == 1, 1));
+                    w_left -= 1;
+                }
+                if m.ar.can_push() && rng.chance(0.5) {
+                    let mut rc = Cmd::new(1, rng.below(0x1000) & !7, 3, 3);
+                    rc.tag = 2;
+                    m.ar.push(rc);
+                }
+                cy += 1;
+                m.set_now(cy);
+                ctrl.tick(cy);
+                if m.r.can_pop() {
+                    m.r.pop();
+                }
+                if m.b.can_pop() {
+                    m.b.pop();
+                }
+            }
+            let c = ctrl.banks.borrow().conflicts;
+            c
+        };
+        let c2 = run(2);
+        let c8 = run(8);
+        assert!(c8 < c2, "banking factor 8 ({c8}) must beat 2 ({c2})");
+    }
+}

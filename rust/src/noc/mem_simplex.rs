@@ -1,0 +1,441 @@
+//! Simplex on-chip memory controller (§2.7.1, paper Fig. 11): connects a
+//! standard single-port SRAM macro to the on-chip network. *Simplex* means
+//! the controller can either read or write memory in each clock cycle, as
+//! is natural for a single-port SRAM.
+//!
+//! Pipeline:
+//! 1. Read commands, and write commands plus write data, are translated
+//!    into per-beat memory commands.
+//! 2. An arbiter forwards one read **or** write memory command per cycle.
+//!    It can take QoS attributes into account and can prioritize write
+//!    beats (which cannot be interleaved due to (O3)) over read beats.
+//! 3. Stream fork: address/data go to the memory, metadata (ID, tag, lane,
+//!    last) is kept to form protocol responses.
+//! 4. Responses are joined with the metadata and issued on the B/R channel;
+//!    read response buffers decouple the response path.
+
+use std::collections::VecDeque;
+
+use crate::noc::sram::{MemCmd, Sram};
+use crate::protocol::{BBeat, Bytes, RBeat, Resp, SlaveEnd};
+use crate::sim::{Component, Cycle};
+
+/// Arbitration policy between the read and write command streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArbPolicy {
+    /// Alternate fairly between reads and writes.
+    RoundRobin,
+    /// Writes win whenever present (the paper's W-priority option).
+    WritePriority,
+    /// Highest QoS value wins; ties resolved round-robin.
+    Qos,
+}
+
+/// Read-beat metadata kept for response formation.
+struct ReadMeta {
+    id: u32,
+    tag: u64,
+    lane: usize,
+    bytes: usize,
+    last: bool,
+}
+
+pub struct MemSimplex {
+    name: String,
+    slave: SlaveEnd,
+    pub sram: Sram,
+    policy: ArbPolicy,
+    /// Active write burst: (cmd, beats issued).
+    w_active: Option<(crate::protocol::Cmd, usize)>,
+    /// Active read burst: (cmd, beats issued).
+    r_active: Option<(crate::protocol::Cmd, usize)>,
+    /// Metadata FIFO aligned with SRAM read responses.
+    r_meta: VecDeque<ReadMeta>,
+    /// Read-response decoupling buffer.
+    r_buf: VecDeque<RBeat>,
+    r_buf_cap: usize,
+    /// Pending B responses.
+    b_q: VecDeque<BBeat>,
+    /// RR state: last direction granted was write?
+    last_was_write: bool,
+}
+
+impl MemSimplex {
+    pub fn new(name: impl Into<String>, slave: SlaveEnd, sram: Sram, policy: ArbPolicy) -> Self {
+        MemSimplex {
+            name: name.into(),
+            slave,
+            sram,
+            policy,
+            w_active: None,
+            r_active: None,
+            r_meta: VecDeque::new(),
+            r_buf: VecDeque::new(),
+            r_buf_cap: 8,
+            b_q: VecDeque::new(),
+            last_was_write: false,
+        }
+    }
+
+    fn want_write(&self) -> Option<u8> {
+        // A write beat is ready if a burst is active and a W beat is here.
+        if let Some((c, _)) = &self.w_active {
+            if self.slave.w.can_pop() {
+                return Some(c.qos);
+            }
+        }
+        None
+    }
+
+    fn want_read(&self) -> Option<u8> {
+        if let Some((c, _)) = &self.r_active {
+            if self.r_meta.len() + self.r_buf.len() < self.r_buf_cap {
+                return Some(c.qos);
+            }
+        }
+        None
+    }
+
+    /// Issue the write beat at the SRAM port.
+    fn issue_write(&mut self, cy: Cycle) {
+        let (c, issued) = self.w_active.as_mut().unwrap();
+        let w = self.slave.w.pop();
+        let bb = c.beat_bytes();
+        let a = c.beat_addr(*issued);
+        let port_bytes = self.slave.cfg.beat_bytes();
+        let lane = (a % port_bytes as u64) as usize;
+        let data = w.data.as_slice()[lane..lane + bb].to_vec();
+        let strb = (w.strb >> lane) & crate::protocol::strb_all(bb);
+        self.sram.accept(cy, MemCmd::Write { addr: a, data, strb });
+        *issued += 1;
+        let done = *issued == c.beats();
+        debug_assert_eq!(done, w.last, "W burst length mismatch");
+        if done {
+            self.b_q.push_back(BBeat { id: c.id, resp: Resp::Okay, tag: c.tag });
+            self.w_active = None;
+        }
+    }
+
+    fn issue_read(&mut self, cy: Cycle) {
+        let (c, issued) = self.r_active.as_mut().unwrap();
+        let bb = c.beat_bytes();
+        let a = c.beat_addr(*issued);
+        let port_bytes = self.slave.cfg.beat_bytes();
+        let lane = (a % port_bytes as u64) as usize;
+        self.sram.accept(cy, MemCmd::Read { addr: a, bytes: bb });
+        *issued += 1;
+        let last = *issued == c.beats();
+        self.r_meta.push_back(ReadMeta { id: c.id, tag: c.tag, lane, bytes: bb, last });
+        if last {
+            self.r_active = None;
+        }
+    }
+}
+
+impl Component for MemSimplex {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, cy: Cycle) {
+        self.slave.set_now(cy);
+
+        // Accept new commands (one outstanding burst per direction keeps
+        // responses trivially ordered; throughput comes from pipelining).
+        if self.w_active.is_none() && self.slave.aw.can_pop() {
+            let c = self.slave.aw.pop();
+            self.w_active = Some((c, 0));
+        }
+        if self.r_active.is_none() && self.slave.ar.can_pop() {
+            let c = self.slave.ar.pop();
+            self.r_active = Some((c, 0));
+        }
+
+        // Arbitrate one memory command per cycle.
+        if self.sram.can_accept(cy) {
+            let w = self.want_write();
+            let r = self.want_read();
+            let grant_write = match (w, r, self.policy) {
+                (Some(_), None, _) => true,
+                (None, Some(_), _) => false,
+                (Some(_), Some(_), ArbPolicy::WritePriority) => true,
+                (Some(wq), Some(rq), ArbPolicy::Qos) => {
+                    if wq != rq {
+                        wq > rq
+                    } else {
+                        !self.last_was_write
+                    }
+                }
+                (Some(_), Some(_), ArbPolicy::RoundRobin) => !self.last_was_write,
+                (None, None, _) => {
+                    // Nothing to do.
+                    self.drain_responses(cy);
+                    return;
+                }
+            };
+            if grant_write {
+                self.issue_write(cy);
+            } else {
+                self.issue_read(cy);
+            }
+            self.last_was_write = grant_write;
+        }
+
+        self.drain_responses(cy);
+    }
+}
+
+impl MemSimplex {
+    fn drain_responses(&mut self, cy: Cycle) {
+        // Join SRAM read data with metadata into the response buffer.
+        while self.r_buf.len() < self.r_buf_cap {
+            if let Some(resp) = self.sram.take_resp(cy) {
+                let m = self.r_meta.pop_front().expect("meta for every read");
+                let port_bytes = self.slave.cfg.beat_bytes();
+                let mut data = Bytes::zeroed(port_bytes);
+                data.as_mut_slice()[m.lane..m.lane + m.bytes].copy_from_slice(&resp.data);
+                self.r_buf.push_back(RBeat {
+                    id: m.id,
+                    data,
+                    resp: Resp::Okay,
+                    last: m.last,
+                    tag: m.tag,
+                });
+            } else {
+                break;
+            }
+        }
+        // Issue responses.
+        if let Some(b) = self.b_q.front() {
+            if self.slave.b.can_push() {
+                let b = b.clone();
+                self.b_q.pop_front();
+                self.slave.b.push(b);
+            }
+        }
+        if let Some(r) = self.r_buf.front() {
+            if self.slave.r.can_push() {
+                let r = r.clone();
+                self.r_buf.pop_front();
+                self.slave.r.push(r);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::payload::{Cmd, WBeat};
+    use crate::protocol::port::{bundle, BundleCfg, MasterEnd};
+
+    fn mk(policy: ArbPolicy) -> (MasterEnd, MemSimplex) {
+        let (m, s) = bundle("mem", BundleCfg::new(64, 4));
+        let sram = Sram::new(0, 64 * 1024, 1);
+        (m, MemSimplex::new("simplex", s, sram, policy))
+    }
+
+    fn run(cy: &mut Cycle, m: &MasterEnd, ctrl: &mut MemSimplex, n: usize) {
+        for _ in 0..n {
+            *cy += 1;
+            m.set_now(*cy);
+            ctrl.tick(*cy);
+        }
+    }
+
+    #[test]
+    fn write_then_read_roundtrip() {
+        let (m, mut ctrl) = mk(ArbPolicy::RoundRobin);
+        let mut cy = 0;
+        m.set_now(cy);
+        let mut c = Cmd::new(1, 0x100, 1, 3);
+        c.tag = 1;
+        m.aw.push(c);
+        let mut d0 = Bytes::zeroed(8);
+        d0.as_mut_slice().copy_from_slice(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        m.w.push(WBeat::full(d0, false, 1));
+        run(&mut cy, &m, &mut ctrl, 2);
+        m.set_now(cy);
+        let mut d1 = Bytes::zeroed(8);
+        d1.as_mut_slice().copy_from_slice(&[9, 10, 11, 12, 13, 14, 15, 16]);
+        m.w.push(WBeat::full(d1, true, 1));
+        let mut b = false;
+        for _ in 0..12 {
+            run(&mut cy, &m, &mut ctrl, 1);
+            if m.b.can_pop() {
+                assert_eq!(m.b.pop().resp, Resp::Okay);
+                b = true;
+            }
+        }
+        assert!(b);
+        // Read the 16 bytes back.
+        m.set_now(cy);
+        let mut rc = Cmd::new(2, 0x100, 1, 3);
+        rc.tag = 2;
+        m.ar.push(rc);
+        let mut beats = Vec::new();
+        for _ in 0..16 {
+            run(&mut cy, &m, &mut ctrl, 1);
+            if m.r.can_pop() {
+                beats.push(m.r.pop());
+            }
+        }
+        assert_eq!(beats.len(), 2);
+        assert_eq!(beats[0].data.as_slice(), &[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(beats[1].data.as_slice(), &[9, 10, 11, 12, 13, 14, 15, 16]);
+        assert!(beats[1].last);
+    }
+
+    #[test]
+    fn narrow_beats_use_lanes() {
+        // 4-byte beats on an 8-byte port: lane placement per beat address.
+        let (m, mut ctrl) = mk(ArbPolicy::RoundRobin);
+        let mut cy = 0;
+        m.set_now(cy);
+        let mut c = Cmd::new(0, 0x204, 0, 2); // one 4 B beat at 0x204 (lane 4)
+        c.tag = 1;
+        m.aw.push(c);
+        let mut d = Bytes::zeroed(8);
+        d.as_mut_slice()[4..8].copy_from_slice(&[0xA, 0xB, 0xC, 0xD]);
+        m.w.push(crate::protocol::WBeat {
+            data: d,
+            strb: 0xF0,
+            last: true,
+            tag: 1,
+        });
+        for _ in 0..8 {
+            run(&mut cy, &m, &mut ctrl, 1);
+            if m.b.can_pop() {
+                m.b.pop();
+            }
+        }
+        assert_eq!(ctrl.sram.peek(0x204, 4), &[0xA, 0xB, 0xC, 0xD]);
+        // Read it back narrow.
+        m.set_now(cy);
+        let mut rc = Cmd::new(0, 0x204, 0, 2);
+        rc.tag = 2;
+        m.ar.push(rc);
+        for _ in 0..10 {
+            run(&mut cy, &m, &mut ctrl, 1);
+            if m.r.can_pop() {
+                let r = m.r.pop();
+                assert_eq!(&r.data.as_slice()[4..8], &[0xA, 0xB, 0xC, 0xD], "lane 4");
+                return;
+            }
+        }
+        panic!("no read response");
+    }
+
+    #[test]
+    fn simplex_serializes_read_write() {
+        // Concurrent read+write bursts: total memory ops per cycle <= 1,
+        // so 8 writes + 8 reads take >= 16 arbiter grants.
+        let (m, mut ctrl) = mk(ArbPolicy::RoundRobin);
+        let mut cy = 0;
+        m.set_now(cy);
+        let mut wc = Cmd::new(1, 0x0, 7, 3);
+        wc.tag = 1;
+        m.aw.push(wc);
+        let mut rc = Cmd::new(2, 0x100, 7, 3);
+        rc.tag = 2;
+        m.ar.push(rc);
+        let mut w_fed = 0;
+        let mut r_beats = 0;
+        let mut b_seen = false;
+        let start = cy;
+        while (!b_seen || r_beats < 8) && cy < 100 {
+            m.set_now(cy);
+            if w_fed < 8 && m.w.can_push() {
+                m.w.push(WBeat::full(Bytes::zeroed(8), w_fed == 7, 1));
+                w_fed += 1;
+            }
+            cy += 1;
+            m.set_now(cy);
+            ctrl.tick(cy);
+            if m.r.can_pop() {
+                m.r.pop();
+                r_beats += 1;
+            }
+            if m.b.can_pop() {
+                m.b.pop();
+                b_seen = true;
+            }
+        }
+        assert!(b_seen && r_beats == 8);
+        assert!(cy - start >= 16, "simplex: 16 beats need >= 16 cycles, took {}", cy - start);
+    }
+
+    #[test]
+    fn write_priority_starves_reads_while_writing() {
+        let (m, mut ctrl) = mk(ArbPolicy::WritePriority);
+        let mut cy = 0;
+        m.set_now(cy);
+        let mut wc = Cmd::new(1, 0x0, 3, 3);
+        wc.tag = 1;
+        m.aw.push(wc);
+        let mut rc = Cmd::new(2, 0x100, 3, 3);
+        rc.tag = 2;
+        m.ar.push(rc);
+        // Feed all W beats immediately; under WritePriority the first R
+        // beat must not appear before the last W beat is accepted.
+        let mut w_fed = 0;
+        let mut first_r: Option<Cycle> = None;
+        let mut b_at: Option<Cycle> = None;
+        for _ in 0..60 {
+            m.set_now(cy);
+            if w_fed < 4 && m.w.can_push() {
+                m.w.push(WBeat::full(Bytes::zeroed(8), w_fed == 3, 1));
+                w_fed += 1;
+            }
+            cy += 1;
+            m.set_now(cy);
+            ctrl.tick(cy);
+            if m.r.can_pop() {
+                m.r.pop();
+                first_r.get_or_insert(cy);
+            }
+            if m.b.can_pop() {
+                m.b.pop();
+                b_at = Some(cy);
+            }
+        }
+        let (fr, ba) = (first_r.unwrap(), b_at.unwrap());
+        assert!(fr >= ba.saturating_sub(2), "reads must largely wait: first_r={fr} b={ba}");
+    }
+
+    #[test]
+    fn qos_prefers_higher_priority() {
+        let (m, mut ctrl) = mk(ArbPolicy::Qos);
+        let mut cy = 0;
+        m.set_now(cy);
+        let mut wc = Cmd::new(1, 0x0, 3, 3);
+        wc.qos = 0;
+        wc.tag = 1;
+        m.aw.push(wc);
+        let mut rc = Cmd::new(2, 0x100, 3, 3);
+        rc.qos = 7;
+        rc.tag = 2;
+        m.ar.push(rc);
+        let mut w_fed = 0;
+        let mut r_done: Option<Cycle> = None;
+        let mut b_done: Option<Cycle> = None;
+        for _ in 0..60 {
+            m.set_now(cy);
+            if w_fed < 4 && m.w.can_push() {
+                m.w.push(WBeat::full(Bytes::zeroed(8), w_fed == 3, 1));
+                w_fed += 1;
+            }
+            cy += 1;
+            m.set_now(cy);
+            ctrl.tick(cy);
+            if m.r.can_pop() && m.r.pop().last {
+                r_done = Some(cy);
+            }
+            if m.b.can_pop() {
+                m.b.pop();
+                b_done = Some(cy);
+            }
+        }
+        assert!(r_done.unwrap() < b_done.unwrap(), "high-QoS read completes first");
+    }
+}

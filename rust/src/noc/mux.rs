@@ -1,0 +1,384 @@
+//! Network multiplexer (§2.1.1): joins S slave ports into one master port.
+//!
+//! Microarchitecture (paper Fig. 2):
+//! * The ID of each command beat is **prepended** with the slave port
+//!   number, so the master-port ID width is `I + ceil(log2 S)`. Commands
+//!   from different slave ports therefore always carry different IDs and
+//!   remain independent — (O1) does not restrict communication through
+//!   the mux.
+//! * Round-robin arbitration trees select among AW and AR beats.
+//! * The AW arbitration decision is forwarded through a FIFO to the W-beat
+//!   multiplexer — sufficient because of (O3) (write data beats are always
+//!   in write command order).
+//! * Responses are demultiplexed by the MSBs of their ID and the ID is
+//!   truncated back to the slave-port width.
+
+use std::collections::VecDeque;
+
+use crate::protocol::{MasterEnd, SlaveEnd};
+use crate::sim::{Component, Cycle};
+
+/// Number of ID bits the mux prepends for `n` slave ports.
+pub fn prepend_bits(n_slave_ports: usize) -> usize {
+    assert!(n_slave_ports >= 1);
+    (usize::BITS - (n_slave_ports - 1).leading_zeros()) as usize
+}
+
+pub struct Mux {
+    name: String,
+    slaves: Vec<SlaveEnd>,
+    master: MasterEnd,
+    /// Slave-port ID width (bits); master IDs carry the port in the MSBs.
+    id_bits_in: usize,
+    /// Round-robin pointers for the two command channels.
+    rr_aw: usize,
+    rr_ar: usize,
+    /// FIFO carrying the AW arbitration decision to the W multiplexer.
+    w_route: VecDeque<usize>,
+    /// Capacity of `w_route` (max outstanding write bursts).
+    max_w_txns: usize,
+}
+
+impl Mux {
+    pub fn new(name: impl Into<String>, slaves: Vec<SlaveEnd>, master: MasterEnd) -> Self {
+        assert!(!slaves.is_empty());
+        let id_bits_in = slaves[0].cfg.id_bits;
+        for s in &slaves {
+            assert_eq!(s.cfg.id_bits, id_bits_in, "slave ports must share ID width");
+            assert_eq!(s.cfg.data_bits, master.cfg.data_bits, "mux does not convert widths");
+        }
+        let want = id_bits_in + prepend_bits(slaves.len());
+        assert_eq!(
+            master.cfg.id_bits, want,
+            "master port ID width must be slave width + log2(S) = {want}"
+        );
+        Mux {
+            name: name.into(),
+            slaves,
+            master,
+            id_bits_in,
+            rr_aw: 0,
+            rr_ar: 0,
+            w_route: VecDeque::new(),
+            max_w_txns: 16,
+        }
+    }
+
+    pub fn with_max_w_txns(mut self, n: usize) -> Self {
+        assert!(n >= 1);
+        self.max_w_txns = n;
+        self
+    }
+
+    fn extend_id(&self, id: u32, port: usize) -> u32 {
+        id | ((port as u32) << self.id_bits_in)
+    }
+
+    fn split_id(&self, id: u32) -> (u32, usize) {
+        let mask = (1u32 << self.id_bits_in) - 1;
+        (id & mask, (id >> self.id_bits_in) as usize)
+    }
+
+    /// Round-robin pick among slave ports with a poppable beat on the
+    /// selected channel. Returns the chosen port.
+    fn rr_pick(&self, start: usize, has_beat: impl Fn(&SlaveEnd) -> bool) -> Option<usize> {
+        let n = self.slaves.len();
+        (0..n).map(|i| (start + i) % n).find(|&p| has_beat(&self.slaves[p]))
+    }
+}
+
+impl Component for Mux {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, cy: Cycle) {
+        for s in &self.slaves {
+            s.set_now(cy);
+        }
+        self.master.set_now(cy);
+
+        // AW: RR arbitration + ID prepend + W-route FIFO entry.
+        if self.master.aw.can_push() && self.w_route.len() < self.max_w_txns {
+            if let Some(p) = self.rr_pick(self.rr_aw, |s| s.aw.can_pop()) {
+                let mut c = self.slaves[p].aw.pop();
+                c.id = self.extend_id(c.id, p);
+                self.master.aw.push(c);
+                self.w_route.push_back(p);
+                self.rr_aw = (p + 1) % self.slaves.len();
+            }
+        }
+
+        // W: follow the arbitration decision FIFO (O3).
+        if let Some(&p) = self.w_route.front() {
+            if self.slaves[p].w.can_pop() && self.master.w.can_push() {
+                let b = self.slaves[p].w.pop();
+                let last = b.last;
+                self.master.w.push(b);
+                if last {
+                    self.w_route.pop_front();
+                }
+            }
+        }
+
+        // AR: RR arbitration + ID prepend.
+        if self.master.ar.can_push() {
+            if let Some(p) = self.rr_pick(self.rr_ar, |s| s.ar.can_pop()) {
+                let mut c = self.slaves[p].ar.pop();
+                c.id = self.extend_id(c.id, p);
+                self.master.ar.push(c);
+                self.rr_ar = (p + 1) % self.slaves.len();
+            }
+        }
+
+        // B: demux by ID MSBs, truncate.
+        if let Some((id, port)) = self.master.b.peek(|b| self.split_id(b.id)) {
+            if port < self.slaves.len() && self.slaves[port].b.can_push() {
+                let mut b = self.master.b.pop();
+                b.id = id;
+                self.slaves[port].b.push(b);
+            }
+        }
+
+        // R: demux by ID MSBs, truncate.
+        if let Some((id, port)) = self.master.r.peek(|r| self.split_id(r.id)) {
+            if port < self.slaves.len() && self.slaves[port].r.can_push() {
+                let mut r = self.master.r.pop();
+                r.id = id;
+                self.slaves[port].r.push(r);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::payload::{BBeat, Bytes, Cmd, RBeat, Resp, WBeat};
+    use crate::protocol::port::{bundle, BundleCfg, MasterEnd, SlaveEnd};
+
+    fn mk_mux(s: usize) -> (Vec<MasterEnd>, Mux, SlaveEnd) {
+        let slave_cfg = BundleCfg::new(64, 4);
+        let master_cfg = BundleCfg::new(64, 4 + prepend_bits(s));
+        let mut ups = Vec::new();
+        let mut downs = Vec::new();
+        for i in 0..s {
+            let (m, sl) = bundle(&format!("in{i}"), slave_cfg);
+            ups.push(m);
+            downs.push(sl);
+        }
+        let (master, out_slave) = bundle("out", master_cfg);
+        (ups, Mux::new("mux", downs, master), out_slave)
+    }
+
+    #[test]
+    fn prepend_bits_values() {
+        assert_eq!(prepend_bits(1), 0);
+        assert_eq!(prepend_bits(2), 1);
+        assert_eq!(prepend_bits(3), 2);
+        assert_eq!(prepend_bits(4), 2);
+        assert_eq!(prepend_bits(5), 3);
+        assert_eq!(prepend_bits(32), 5);
+    }
+
+    #[test]
+    fn ar_id_prepended_and_r_routed_back() {
+        let (ups, mut mux, out) = mk_mux(2);
+        let mut cy = 0;
+        ups[1].set_now(cy);
+        let mut c = Cmd::new(3, 0x40, 0, 3);
+        c.tag = 7;
+        ups[1].ar.push(c);
+        // Let the command flow through.
+        let mut got_id = None;
+        for _ in 0..4 {
+            cy += 1;
+            for u in &ups {
+                u.set_now(cy);
+            }
+            out.set_now(cy);
+            mux.tick(cy);
+            if out.ar.can_pop() {
+                let c = out.ar.pop();
+                got_id = Some(c.id);
+                out.r.push(RBeat { id: c.id, data: Bytes::zeroed(8), resp: Resp::Okay, last: true, tag: c.tag });
+            }
+        }
+        // Port 1 prepended in MSBs above the 4 original ID bits.
+        assert_eq!(got_id, Some(3 | (1 << 4)));
+        // Response must come back on port 1 with the truncated ID.
+        let mut got_r = None;
+        for _ in 0..4 {
+            cy += 1;
+            for u in &ups {
+                u.set_now(cy);
+            }
+            out.set_now(cy);
+            mux.tick(cy);
+            if ups[1].r.can_pop() {
+                got_r = Some(ups[1].r.pop());
+            }
+        }
+        let r = got_r.expect("R beat routed back");
+        assert_eq!(r.id, 3);
+        assert_eq!(r.tag, 7);
+    }
+
+    #[test]
+    fn w_beats_follow_aw_order() {
+        let (ups, mut mux, out) = mk_mux(2);
+        let mut cy = 0;
+        // Both ports issue a 2-beat write in the same cycle.
+        for (p, u) in ups.iter().enumerate() {
+            u.set_now(cy);
+            let mut c = Cmd::new(p as u32, 0x100 * (p as u64 + 1), 1, 3);
+            c.tag = p as u64;
+            u.aw.push(c);
+            let mut d = Bytes::zeroed(8);
+            d.as_mut_slice()[0] = (10 + p) as u8;
+            u.w.push(WBeat::full(d, false, p as u64));
+        }
+        cy += 1;
+        for u in &ups {
+            u.set_now(cy);
+        }
+        // Second beats.
+        for (p, u) in ups.iter().enumerate() {
+            let mut d = Bytes::zeroed(8);
+            d.as_mut_slice()[0] = (20 + p) as u8;
+            u.w.push(WBeat::full(d, true, p as u64));
+        }
+        // Drain: W bursts must arrive without interleaving, each matching
+        // its AW's port marker byte.
+        let mut aw_ports = Vec::new();
+        let mut w_stream = Vec::new();
+        for _ in 0..20 {
+            cy += 1;
+            for u in &ups {
+                u.set_now(cy);
+            }
+            out.set_now(cy);
+            mux.tick(cy);
+            if out.aw.can_pop() {
+                let c = out.aw.pop();
+                aw_ports.push((c.id >> 4) as usize);
+            }
+            if out.w.can_pop() {
+                let w = out.w.pop();
+                w_stream.push((w.data.as_slice()[0], w.last));
+            }
+        }
+        assert_eq!(aw_ports.len(), 2);
+        assert_eq!(w_stream.len(), 4);
+        // First burst fully delivered before the second (O3 through mux).
+        let first_port = aw_ports[0] as u8;
+        let second_port = aw_ports[1] as u8;
+        assert_eq!(w_stream[0].0, 10 + first_port);
+        assert_eq!(w_stream[1], (20 + first_port, true));
+        assert_eq!(w_stream[2].0, 10 + second_port);
+        assert_eq!(w_stream[3], (20 + second_port, true));
+    }
+
+    #[test]
+    fn b_routed_by_msbs() {
+        let (ups, mut mux, out) = mk_mux(4);
+        let mut cy = 0;
+        ups[2].set_now(cy);
+        let mut c = Cmd::new(1, 0x80, 0, 3);
+        c.tag = 3;
+        ups[2].aw.push(c);
+        ups[2].w.push(WBeat::full(Bytes::zeroed(8), true, 3));
+        let mut done = false;
+        for _ in 0..12 {
+            cy += 1;
+            for u in &ups {
+                u.set_now(cy);
+            }
+            out.set_now(cy);
+            mux.tick(cy);
+            if out.aw.can_pop() {
+                out.aw.pop();
+            }
+            if out.w.can_pop() {
+                let w = out.w.pop();
+                if w.last {
+                    out.b.push(BBeat { id: 1 | (2 << 4), resp: Resp::Okay, tag: 3 });
+                }
+            }
+            if ups[2].b.can_pop() {
+                let b = ups[2].b.pop();
+                assert_eq!(b.id, 1);
+                done = true;
+            }
+        }
+        assert!(done);
+    }
+
+    #[test]
+    fn rr_arbitration_is_fair() {
+        let (ups, mut mux, out) = mk_mux(4);
+        let mut counts = [0usize; 4];
+        let mut cy = 0;
+        for step in 0..200 {
+            cy += 1;
+            for (p, u) in ups.iter().enumerate() {
+                u.set_now(cy);
+                if u.ar.can_push() && step < 160 {
+                    let mut c = Cmd::new(0, 0x40 * p as u64, 0, 3);
+                    c.tag = (step * 4 + p) as u64;
+                    u.ar.push(c);
+                }
+            }
+            out.set_now(cy);
+            mux.tick(cy);
+            if out.ar.can_pop() {
+                let c = out.ar.pop();
+                counts[(c.id >> 4) as usize] += 1;
+                out.r.push(RBeat {
+                    id: c.id,
+                    data: Bytes::zeroed(8),
+                    resp: Resp::Okay,
+                    last: true,
+                    tag: c.tag,
+                });
+            }
+            for u in &ups {
+                if u.r.can_pop() {
+                    u.r.pop();
+                }
+            }
+        }
+        let min = *counts.iter().min().unwrap();
+        let max = *counts.iter().max().unwrap();
+        assert!(min > 0, "every port served: {counts:?}");
+        assert!(max - min <= 2, "round-robin fairness: {counts:?}");
+    }
+
+    #[test]
+    fn same_id_from_different_ports_stay_independent() {
+        // Two ports use the SAME slave-side ID; the mux must keep their
+        // transactions independent (different master-side IDs).
+        let (ups, mut mux, out) = mk_mux(2);
+        let mut cy = 0;
+        for (p, u) in ups.iter().enumerate() {
+            u.set_now(cy);
+            let mut c = Cmd::new(5, 0x100 * p as u64, 0, 3);
+            c.tag = p as u64;
+            u.ar.push(c);
+        }
+        let mut seen = Vec::new();
+        for _ in 0..8 {
+            cy += 1;
+            for u in &ups {
+                u.set_now(cy);
+            }
+            out.set_now(cy);
+            mux.tick(cy);
+            if out.ar.can_pop() {
+                seen.push(out.ar.pop().id);
+            }
+        }
+        assert_eq!(seen.len(), 2);
+        assert_ne!(seen[0], seen[1], "IDs must differ at the master port");
+    }
+}

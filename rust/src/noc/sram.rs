@@ -1,0 +1,157 @@
+//! Single-port SRAM macro model, the memory behind the on-chip memory
+//! controllers (§2.7). One read **or** write per cycle (simplex by
+//! nature), fixed access latency, byte-addressable with strobes.
+
+use std::collections::VecDeque;
+
+use crate::sim::Cycle;
+
+/// A memory command presented to the SRAM port.
+#[derive(Debug, Clone)]
+pub enum MemCmd {
+    Read { addr: u64, bytes: usize },
+    Write { addr: u64, data: Vec<u8>, strb: u128 },
+}
+
+/// A read response (writes complete silently).
+#[derive(Debug, Clone)]
+pub struct MemResp {
+    pub addr: u64,
+    pub data: Vec<u8>,
+}
+
+pub struct Sram {
+    /// Backing store. Sized at construction; out-of-range accesses wrap
+    /// (banks are address-interleaved slices of a larger space).
+    mem: Vec<u8>,
+    /// Base address mapped to mem[0].
+    base: u64,
+    latency: Cycle,
+    /// In-flight reads completing at (cycle, resp).
+    pending: VecDeque<(Cycle, MemResp)>,
+    /// Accepted command this cycle? (single port)
+    busy_cycle: Cycle,
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl Sram {
+    pub fn new(base: u64, size: usize, latency: Cycle) -> Self {
+        assert!(latency >= 1);
+        Sram {
+            mem: vec![0u8; size],
+            base,
+            latency,
+            pending: VecDeque::new(),
+            busy_cycle: Cycle::MAX,
+            reads: 0,
+            writes: 0,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.mem.len()
+    }
+
+    fn offset(&self, addr: u64, len: usize) -> usize {
+        let off = (addr.wrapping_sub(self.base)) as usize % self.mem.len();
+        assert!(off + len <= self.mem.len(), "access at {addr:#x} len {len} out of range");
+        off
+    }
+
+    /// Whether the port can accept a command this cycle.
+    pub fn can_accept(&self, cy: Cycle) -> bool {
+        self.busy_cycle != cy
+    }
+
+    /// Present a command; reads produce a response after `latency` cycles.
+    pub fn accept(&mut self, cy: Cycle, cmd: MemCmd) {
+        assert!(self.can_accept(cy), "single-port SRAM: one access per cycle");
+        self.busy_cycle = cy;
+        match cmd {
+            MemCmd::Read { addr, bytes } => {
+                let off = self.offset(addr, bytes);
+                let data = self.mem[off..off + bytes].to_vec();
+                self.pending.push_back((cy + self.latency, MemResp { addr, data }));
+                self.reads += 1;
+            }
+            MemCmd::Write { addr, data, strb } => {
+                let off = self.offset(addr, data.len());
+                for (i, b) in data.iter().enumerate() {
+                    if (strb >> i) & 1 == 1 {
+                        self.mem[off + i] = *b;
+                    }
+                }
+                self.writes += 1;
+            }
+        }
+    }
+
+    /// Pop a completed read response, if one is due.
+    pub fn take_resp(&mut self, cy: Cycle) -> Option<MemResp> {
+        if let Some(&(due, _)) = self.pending.front() {
+            if due <= cy {
+                return self.pending.pop_front().map(|(_, r)| r);
+            }
+        }
+        None
+    }
+
+    /// Direct backdoor access for test setup / verification.
+    pub fn poke(&mut self, addr: u64, data: &[u8]) {
+        let off = self.offset(addr, data.len());
+        self.mem[off..off + data.len()].copy_from_slice(data);
+    }
+
+    pub fn peek(&self, addr: u64, len: usize) -> &[u8] {
+        let off = self.offset(addr, len);
+        &self.mem[off..off + len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_then_read() {
+        let mut s = Sram::new(0x1000, 4096, 1);
+        s.accept(0, MemCmd::Write { addr: 0x1010, data: vec![1, 2, 3, 4], strb: 0xF });
+        s.accept(1, MemCmd::Read { addr: 0x1010, bytes: 4 });
+        assert!(s.take_resp(1).is_none(), "latency not yet elapsed");
+        let r = s.take_resp(2).expect("read done");
+        assert_eq!(r.data, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn strobes_mask_writes() {
+        let mut s = Sram::new(0, 64, 1);
+        s.poke(0, &[0xFF; 8]);
+        s.accept(0, MemCmd::Write { addr: 0, data: vec![0; 8], strb: 0b0101_0101 });
+        assert_eq!(s.peek(0, 8), &[0, 0xFF, 0, 0xFF, 0, 0xFF, 0, 0xFF]);
+    }
+
+    #[test]
+    fn single_port_per_cycle() {
+        let mut s = Sram::new(0, 64, 1);
+        s.accept(5, MemCmd::Read { addr: 0, bytes: 8 });
+        assert!(!s.can_accept(5));
+        assert!(s.can_accept(6));
+    }
+
+    #[test]
+    #[should_panic(expected = "one access per cycle")]
+    fn double_accept_panics() {
+        let mut s = Sram::new(0, 64, 1);
+        s.accept(5, MemCmd::Read { addr: 0, bytes: 8 });
+        s.accept(5, MemCmd::Read { addr: 8, bytes: 8 });
+    }
+
+    #[test]
+    fn latency_respected() {
+        let mut s = Sram::new(0, 64, 3);
+        s.accept(0, MemCmd::Read { addr: 0, bytes: 8 });
+        assert!(s.take_resp(2).is_none());
+        assert!(s.take_resp(3).is_some());
+    }
+}

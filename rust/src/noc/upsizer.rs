@@ -1,0 +1,481 @@
+//! Data upsizer (§2.4.1, paper Fig. 8c): converts a narrow slave port
+//! (width `D_N`) to a wide master port (width `D_W`).
+//!
+//! Two operating modes per transaction:
+//! * **pass-through** (non-modifiable transactions): beat count and size
+//!   are unchanged; the upsizer only places/extracts the narrow lanes in
+//!   the wide beats (lane steering on writes, lane selection on reads).
+//! * **upsize** (modifiable): bursts are reshaped — several narrow write
+//!   beats are packed into one wide beat; one wide read beat is serialized
+//!   into several narrow beats. This maximizes utilization of the
+//!   high-bandwidth network, the upsizer's defining requirement.
+//!
+//! The read path has `R` concurrent *read upsizer* contexts, each with a
+//! `D_W` buffer. A new read is assigned an idle context — unless a context
+//! already handles the same ID, in which case it queues there, preserving
+//! (O1). Each context serializes independently so the wide R channel is
+//! never blocked during serialization.
+//!
+//! Data-channel convention (see `noc` module docs): beats carry the full
+//! port width; a beat's bytes sit at lane `beat_addr % port_bytes`;
+//! strobes mark validity.
+
+use std::collections::VecDeque;
+
+use crate::protocol::{Bytes, Cmd, MasterEnd, RBeat, SlaveEnd};
+use crate::sim::{Component, Cycle};
+
+/// Compute the wide-port command for an upsized narrow INCR burst:
+/// same start address, wide size, beat count covering the same byte span.
+fn upsize_cmd(c: &Cmd, wide_bytes: usize) -> Cmd {
+    let nb = c.beat_bytes() as u64;
+    let wb = wide_bytes as u64;
+    let first = c.addr & !(nb - 1);
+    let span_end = first + c.beats() as u64 * nb; // exclusive
+    let first_w = c.addr & !(wb - 1);
+    let wide_beats = (span_end - 1 - first_w) / wb + 1;
+    debug_assert!(wide_beats <= 256);
+    let mut out = c.clone();
+    out.size = wb.trailing_zeros() as u8;
+    out.len = (wide_beats - 1) as u8;
+    out
+}
+
+/// In-flight descriptor for a write being packed.
+struct WriteJob {
+    /// Byte cursor (narrow-beat aligned).
+    cur: u64,
+    /// Narrow beats remaining.
+    beats_left: usize,
+    /// Pass-through? (no packing, one wide beat per narrow beat)
+    passthrough: bool,
+    /// Accumulating wide beat.
+    buf: Vec<u8>,
+    strb: u128,
+}
+
+/// One read-upsizer context: a queue of pending reads (same ID only) and
+/// the serialization state of the front one.
+struct ReadCtx {
+    /// (cmd at narrow port, passthrough).
+    queue: VecDeque<(Cmd, bool)>,
+    /// Byte cursor of the front transaction.
+    cur: u64,
+    /// Narrow beats remaining for the front transaction.
+    beats_left: usize,
+    /// Buffered wide beat (with its wide-aligned base address), if any.
+    buf: Option<(u64, Bytes, crate::protocol::Resp)>,
+    started: bool,
+}
+
+impl ReadCtx {
+    fn new() -> Self {
+        ReadCtx { queue: VecDeque::new(), cur: 0, beats_left: 0, buf: None, started: false }
+    }
+
+    fn idle(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    fn active_id(&self) -> Option<u32> {
+        self.queue.front().map(|(c, _)| c.id)
+    }
+
+    /// Start serving the front transaction if not already.
+    fn ensure_started(&mut self) {
+        if !self.started {
+            if let Some((c, _)) = self.queue.front() {
+                let nb = c.beat_bytes() as u64;
+                self.cur = c.addr & !(nb - 1);
+                self.beats_left = c.beats();
+                self.started = true;
+            }
+        }
+    }
+}
+
+pub struct Upsizer {
+    name: String,
+    slave: SlaveEnd,  // narrow
+    master: MasterEnd, // wide
+    narrow_bytes: usize,
+    wide_bytes: usize,
+    write: Option<WriteJob>,
+    reads: Vec<ReadCtx>,
+    rr_read: usize,
+}
+
+impl Upsizer {
+    pub fn new(
+        name: impl Into<String>,
+        slave: SlaveEnd,
+        master: MasterEnd,
+        read_upsizers: usize,
+    ) -> Self {
+        let narrow_bytes = slave.cfg.beat_bytes();
+        let wide_bytes = master.cfg.beat_bytes();
+        assert!(wide_bytes > narrow_bytes, "upsizer needs D_W > D_N");
+        assert_eq!(wide_bytes % narrow_bytes, 0);
+        assert!(read_upsizers >= 1);
+        Upsizer {
+            name: name.into(),
+            slave,
+            master,
+            narrow_bytes,
+            wide_bytes,
+            write: None,
+            reads: (0..read_upsizers).map(|_| ReadCtx::new()).collect(),
+            rr_read: 0,
+        }
+    }
+}
+
+impl Component for Upsizer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, cy: Cycle) {
+        self.slave.set_now(cy);
+        self.master.set_now(cy);
+        let nb = self.narrow_bytes;
+        let wb = self.wide_bytes;
+
+        // AW: transform and forward; lockstep with the W burst (one write
+        // job at a time keeps the single write upsizer of Fig. 8c).
+        if self.write.is_none() && self.slave.aw.can_pop() && self.master.aw.can_push() {
+            let c = self.slave.aw.pop();
+            let passthrough = !c.modifiable || c.burst != crate::protocol::Burst::Incr;
+            let fwd = if passthrough { c.clone() } else { upsize_cmd(&c, wb) };
+            self.master.aw.push(fwd);
+            let first = c.addr & !(nb as u64 - 1);
+            self.write = Some(WriteJob {
+                cur: first,
+                beats_left: c.beats(),
+                passthrough,
+                buf: vec![0u8; wb],
+                strb: 0,
+            });
+        }
+
+        // W: pack narrow beats into wide beats (or steer through).
+        if let Some(job) = &mut self.write {
+            if self.slave.w.can_pop() && self.master.w.can_push() {
+                let w = self.slave.w.pop();
+                job.beats_left -= 1;
+                let done = job.beats_left == 0;
+                if job.passthrough {
+                    // One wide beat per narrow beat; place lane.
+                    let mut data = Bytes::zeroed(wb);
+                    let off = (job.cur % wb as u64) as usize;
+                    data.as_mut_slice()[off..off + nb].copy_from_slice(w.data.as_slice());
+                    let strb = (w.strb & crate::protocol::strb_all(nb)) << off;
+                    self.master.w.push(crate::protocol::WBeat {
+                        data,
+                        strb,
+                        last: done,
+                        tag: w.tag,
+                    });
+                    job.cur += nb as u64;
+                } else {
+                    // Pack into the wide buffer.
+                    let off = (job.cur % wb as u64) as usize;
+                    job.buf[off..off + nb].copy_from_slice(w.data.as_slice());
+                    job.strb |= (w.strb & crate::protocol::strb_all(nb)) << off;
+                    job.cur += nb as u64;
+                    let boundary = job.cur % wb as u64 == 0;
+                    if boundary || done {
+                        let data = Bytes::from_slice(&job.buf);
+                        self.master.w.push(crate::protocol::WBeat {
+                            data,
+                            strb: job.strb,
+                            last: done,
+                            tag: w.tag,
+                        });
+                        job.buf.iter_mut().for_each(|b| *b = 0);
+                        job.strb = 0;
+                    }
+                }
+                if done {
+                    self.write = None;
+                }
+            }
+        }
+
+        // B passes through.
+        if self.master.b.can_pop() && self.slave.b.can_push() {
+            self.slave.b.push(self.master.b.pop());
+        }
+
+        // AR: assign to a read context (same-ID affinity), transform, send.
+        if self.slave.ar.can_pop() && self.master.ar.can_push() {
+            let id = self.slave.ar.peek(|c| c.id).unwrap();
+            // Same-ID context first (O1), else an idle one.
+            let ctx_idx = self
+                .reads
+                .iter()
+                .position(|c| c.active_id() == Some(id))
+                .or_else(|| self.reads.iter().position(|c| c.idle()));
+            if let Some(ci) = ctx_idx {
+                let c = self.slave.ar.pop();
+                let passthrough = !c.modifiable || c.burst != crate::protocol::Burst::Incr;
+                let fwd = if passthrough { c.clone() } else { upsize_cmd(&c, wb) };
+                self.master.ar.push(fwd);
+                self.reads[ci].queue.push_back((c, passthrough));
+            }
+        }
+
+        // Wide R beats: route to the context owning the beat's ID.
+        if let Some(rid) = self.master.r.peek(|r| r.id) {
+            if let Some(ci) = self.reads.iter().position(|c| c.active_id() == Some(rid)) {
+                if self.reads[ci].buf.is_none() {
+                    let r = self.master.r.pop();
+                    let ctx = &mut self.reads[ci];
+                    ctx.ensure_started();
+                    let base = (ctx.cur / wb as u64) * wb as u64;
+                    ctx.buf = Some((base, r.data, r.resp));
+                }
+            }
+        }
+
+        // Emit narrow R beats: RR across contexts with data ready.
+        if self.slave.r.can_push() {
+            let n = self.reads.len();
+            let pick = (0..n)
+                .map(|i| (self.rr_read + i) % n)
+                .find(|&i| {
+                    let c = &self.reads[i];
+                    !c.idle() && c.buf.is_some()
+                });
+            if let Some(ci) = pick {
+                let ctx = &mut self.reads[ci];
+                ctx.ensure_started();
+                let (cmd, pt) = ctx.queue.front().unwrap().clone();
+                let (base, data, resp) = ctx.buf.as_ref().unwrap();
+                let off = (ctx.cur - base) as usize;
+                debug_assert!(off + nb <= wb);
+                let mut nd = Bytes::zeroed(nb);
+                nd.as_mut_slice().copy_from_slice(&data.as_slice()[off..off + nb]);
+                ctx.beats_left -= 1;
+                let last = ctx.beats_left == 0;
+                self.slave.r.push(RBeat { id: cmd.id, data: nd, resp: *resp, last, tag: cmd.tag });
+                ctx.cur += nb as u64;
+                // Pass-through: one incoming beat per narrow beat. Upsized:
+                // the buffer is exhausted at a wide boundary (or txn end).
+                if pt || ctx.cur % wb as u64 == 0 || last {
+                    ctx.buf = None;
+                }
+                if last {
+                    ctx.queue.pop_front();
+                    ctx.started = false;
+                }
+                self.rr_read = (ci + 1) % n;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::payload::{Resp, WBeat};
+    use crate::protocol::port::{bundle, BundleCfg, MasterEnd, SlaveEnd};
+
+    fn mk(r: usize) -> (MasterEnd, Upsizer, SlaveEnd) {
+        let (up_m, up_s) = bundle("up", BundleCfg::new(64, 4)); // 8 B narrow
+        let (down_m, down_s) = bundle("down", BundleCfg::new(256, 4)); // 32 B wide
+        (up_m, Upsizer::new("up", up_s, down_m, r), down_s)
+    }
+
+    #[test]
+    fn upsize_cmd_math() {
+        // 4 narrow (8 B) beats at 0x10 -> bytes [0x10, 0x30) -> one 32 B
+        // wide beat only if aligned; 0x10..0x30 spans wide words 0x00 and
+        // 0x20 -> 2 wide beats.
+        let c = Cmd::new(0, 0x10, 3, 3);
+        let w = upsize_cmd(&c, 32);
+        assert_eq!(w.beats(), 2);
+        assert_eq!(w.beat_bytes(), 32);
+        // Aligned full wide word: 4 beats at 0x20 -> 1 wide beat.
+        let c2 = Cmd::new(0, 0x20, 3, 3);
+        assert_eq!(upsize_cmd(&c2, 32).beats(), 1);
+    }
+
+    #[test]
+    fn write_packing_4_to_1() {
+        let (up, mut uz, down) = mk(1);
+        let mut cy = 0;
+        up.set_now(cy);
+        let mut c = Cmd::new(1, 0x20, 3, 3); // 4 narrow beats, wide-aligned
+        c.tag = 5;
+        up.aw.push(c);
+        // Feed 4 narrow beats with recognizable bytes.
+        let mut wide_beats = Vec::new();
+        let mut fed = 0;
+        for _ in 0..20 {
+            up.set_now(cy);
+            if fed < 4 && up.w.can_push() {
+                let mut d = Bytes::zeroed(8);
+                d.as_mut_slice().iter_mut().enumerate().for_each(|(i, b)| *b = (fed * 8 + i) as u8);
+                up.w.push(WBeat::full(d, fed == 3, 5));
+                fed += 1;
+            }
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            uz.tick(cy);
+            if down.aw.can_pop() {
+                let c = down.aw.pop();
+                assert_eq!(c.beats(), 1, "packed to a single wide beat");
+                assert_eq!(c.beat_bytes(), 32);
+            }
+            if down.w.can_pop() {
+                wide_beats.push(down.w.pop());
+            }
+        }
+        assert_eq!(wide_beats.len(), 1);
+        let wbt = &wide_beats[0];
+        assert!(wbt.last);
+        assert_eq!(wbt.strb, crate::protocol::strb_all(32));
+        let expect: Vec<u8> = (0..32).map(|i| i as u8).collect();
+        assert_eq!(wbt.data.as_slice(), &expect[..]);
+    }
+
+    #[test]
+    fn unaligned_write_spans_two_wide_beats() {
+        let (up, mut uz, down) = mk(1);
+        let mut cy = 0;
+        up.set_now(cy);
+        let mut c = Cmd::new(0, 0x18, 1, 3); // bytes [0x18, 0x28): crosses 0x20
+        c.tag = 1;
+        up.aw.push(c);
+        let mut fed = 0;
+        let mut wide = Vec::new();
+        for _ in 0..20 {
+            up.set_now(cy);
+            if fed < 2 && up.w.can_push() {
+                let mut d = Bytes::zeroed(8);
+                d.as_mut_slice().fill(0xA0 + fed as u8);
+                up.w.push(WBeat::full(d, fed == 1, 1));
+                fed += 1;
+            }
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            uz.tick(cy);
+            if down.aw.can_pop() {
+                assert_eq!(down.aw.pop().beats(), 2);
+            }
+            if down.w.can_pop() {
+                wide.push(down.w.pop());
+            }
+        }
+        assert_eq!(wide.len(), 2);
+        // First wide beat: lane 0x18..0x20 strobed only.
+        assert_eq!(wide[0].strb, crate::protocol::strb_all(8) << 24);
+        assert_eq!(&wide[0].data.as_slice()[24..32], &[0xA0; 8]);
+        // Second: lane 0x00..0x08.
+        assert_eq!(wide[1].strb, crate::protocol::strb_all(8));
+        assert_eq!(&wide[1].data.as_slice()[..8], &[0xA1; 8]);
+        assert!(wide[1].last);
+    }
+
+    #[test]
+    fn read_serialization_1_to_4() {
+        let (up, mut uz, down) = mk(2);
+        let mut cy = 0;
+        up.set_now(cy);
+        let mut c = Cmd::new(2, 0x40, 3, 3); // 4 narrow beats, aligned
+        c.tag = 9;
+        up.ar.push(c);
+        let mut narrow = Vec::new();
+        for _ in 0..24 {
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            uz.tick(cy);
+            if down.ar.can_pop() {
+                let c = down.ar.pop();
+                assert_eq!(c.beats(), 1);
+                let mut d = Bytes::zeroed(32);
+                d.as_mut_slice().iter_mut().enumerate().for_each(|(i, b)| *b = i as u8);
+                down.r.push(RBeat { id: c.id, data: d, resp: Resp::Okay, last: true, tag: c.tag });
+            }
+            if up.r.can_pop() {
+                narrow.push(up.r.pop());
+            }
+        }
+        assert_eq!(narrow.len(), 4, "one wide beat serialized into 4 narrow");
+        for (i, r) in narrow.iter().enumerate() {
+            let expect: Vec<u8> = (i * 8..i * 8 + 8).map(|v| v as u8).collect();
+            assert_eq!(r.data.as_slice(), &expect[..], "lane {i}");
+            assert_eq!(r.last, i == 3);
+            assert_eq!(r.tag, 9);
+        }
+    }
+
+    #[test]
+    fn same_id_reads_serialize_in_one_context() {
+        let (up, mut uz, down) = mk(2);
+        let mut cy = 0;
+        // Two reads, same ID — must be answered in order (O1).
+        for i in 0..2u64 {
+            up.set_now(cy);
+            let mut c = Cmd::new(3, 0x20 * (i + 1), 0, 3);
+            c.tag = i;
+            up.ar.push(c);
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            uz.tick(cy);
+        }
+        let mut tags = Vec::new();
+        for _ in 0..24 {
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            uz.tick(cy);
+            if down.ar.can_pop() {
+                let c = down.ar.pop();
+                down.r.push(RBeat {
+                    id: c.id,
+                    data: Bytes::zeroed(32),
+                    resp: Resp::Okay,
+                    last: true,
+                    tag: c.tag,
+                });
+            }
+            if up.r.can_pop() {
+                let r = up.r.pop();
+                if r.last {
+                    tags.push(r.tag);
+                }
+            }
+        }
+        assert_eq!(tags, vec![0, 1], "same-ID responses in command order");
+    }
+
+    #[test]
+    fn passthrough_keeps_beat_count() {
+        let (up, mut uz, down) = mk(1);
+        let mut cy = 0;
+        up.set_now(cy);
+        let mut c = Cmd::new(0, 0x40, 3, 3);
+        c.modifiable = false;
+        c.tag = 2;
+        up.ar.push(c);
+        for _ in 0..8 {
+            cy += 1;
+            up.set_now(cy);
+            down.set_now(cy);
+            uz.tick(cy);
+            if down.ar.can_pop() {
+                let fwd = down.ar.pop();
+                assert_eq!(fwd.beats(), 4, "pass-through keeps the burst shape");
+                assert_eq!(fwd.beat_bytes(), 8, "and the beat size");
+                return;
+            }
+        }
+        panic!("command not forwarded");
+    }
+}

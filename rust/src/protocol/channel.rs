@@ -1,0 +1,392 @@
+//! Valid/ready channels as one-handshake-per-cycle register stages.
+//!
+//! Hardware mapping: a `Channel<T>` models an independently-handshaked
+//! channel whose slave side is a (≥2-deep) fall-through register slice, the
+//! standard way the paper's platform cuts combinational paths ("optional
+//! pipeline registers ... cut all combinational signals (including
+//! handshake signals), thereby adding a cycle of latency per channel").
+//! Consequences, by construction:
+//!
+//! * (F1) Stability: a pushed beat is immutable until popped.
+//! * (F2) Acyclicity: `can_push` (ready) never depends on the consumer's
+//!   same-cycle behaviour seen by the producer; a beat pushed in cycle *t*
+//!   becomes visible to the consumer in cycle *t+1*.
+//! * Exactly one handshake per channel per cycle (enforced with a
+//!   debug-mode check), which is what makes beat counts equal cycle counts
+//!   when reporting bandwidth.
+//!
+//! The default capacity of 2 gives full throughput (1 beat/cycle) despite
+//! the one-cycle visibility delay, like a two-deep skid buffer.
+
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+
+use crate::sim::Cycle;
+
+/// Per-channel statistics, cheap enough to keep always-on.
+#[derive(Debug, Default, Clone)]
+pub struct ChannelStats {
+    /// Total handshakes (pops) observed.
+    pub handshakes: u64,
+    /// Cycles in which a producer attempted `push` but the channel was full.
+    pub stall_cycles: u64,
+    /// Cycle of the last handshake (for utilization windows).
+    pub last_handshake: Cycle,
+}
+
+struct Entry<T> {
+    beat: T,
+    pushed_at: Cycle,
+}
+
+struct Core<T> {
+    q: std::collections::VecDeque<Entry<T>>,
+    stats: ChannelStats,
+    label: String,
+}
+
+/// Hot handshake metadata, kept outside the RefCell so the per-cycle
+/// `can_push`/`can_pop` scans of idle modules cost plain Cell reads
+/// (see EXPERIMENTS.md §Perf, optimization 2).
+struct Meta {
+    cap: usize,
+    len: Cell<usize>,
+    /// Cycle from which the front beat is visible (MAX when empty).
+    visible_at: Cell<Cycle>,
+    last_push: Cell<Cycle>,
+    last_pop: Cell<Cycle>,
+}
+
+/// The channel's clock, shared by both endpoints — and, inside a bundle,
+/// by all five channels, so a module's `set_now` is a single Cell store
+/// instead of ten RefCell borrows (the dominant cost in full-chiplet
+/// profiles; see EXPERIMENTS.md §Perf).
+pub type Clock = Rc<Cell<Cycle>>;
+
+/// Producer endpoint (drives valid + payload).
+pub struct Tx<T> {
+    core: Rc<RefCell<Core<T>>>,
+    meta: Rc<Meta>,
+    now: Clock,
+}
+
+/// Consumer endpoint (drives ready).
+pub struct Rx<T> {
+    core: Rc<RefCell<Core<T>>>,
+    meta: Rc<Meta>,
+    now: Clock,
+}
+
+/// Create a channel of the given capacity (register slice depth).
+pub fn channel<T>(label: impl Into<String>, cap: usize) -> (Tx<T>, Rx<T>) {
+    channel_clocked(label, cap, Rc::new(Cell::new(0)))
+}
+
+/// Create a channel sharing an existing clock (used by `bundle` so all
+/// five channels advance with one store).
+pub fn channel_clocked<T>(
+    label: impl Into<String>,
+    cap: usize,
+    clock: Clock,
+) -> (Tx<T>, Rx<T>) {
+    assert!(cap >= 1);
+    let core = Rc::new(RefCell::new(Core {
+        q: std::collections::VecDeque::with_capacity(cap),
+        stats: ChannelStats::default(),
+        label: label.into(),
+    }));
+    let meta = Rc::new(Meta {
+        cap,
+        len: Cell::new(0),
+        visible_at: Cell::new(Cycle::MAX),
+        last_push: Cell::new(Cycle::MAX),
+        last_pop: Cell::new(Cycle::MAX),
+    });
+    (
+        Tx { core: core.clone(), meta: meta.clone(), now: clock.clone() },
+        Rx { core, meta, now: clock },
+    )
+}
+
+/// Create a default-depth (2) channel.
+pub fn wire<T>(label: impl Into<String>) -> (Tx<T>, Rx<T>) {
+    channel(label, 2)
+}
+
+impl<T> Tx<T> {
+    /// Advance the channel's notion of time. Called by the owning module at
+    /// the start of its tick; either endpoint may do it (idempotent,
+    /// monotonic: a stale endpoint never rolls the clock back).
+    pub fn set_now(&self, cy: Cycle) {
+        if cy > self.now.get() {
+            self.now.set(cy);
+        }
+    }
+
+    /// True iff a `push` this cycle would be accepted.
+    pub fn can_push(&self) -> bool {
+        let m = &*self.meta;
+        m.len.get() < m.cap && m.last_push.get() != self.now.get()
+    }
+
+    /// Push a beat; panics if full (callers must check `can_push`).
+    pub fn push(&self, beat: T) {
+        let now = self.now.get();
+        let m = &*self.meta;
+        let mut c = self.core.borrow_mut();
+        assert!(m.len.get() < m.cap, "push on full channel {}", c.label);
+        debug_assert!(m.last_push.get() != now, "double push in one cycle on {}", c.label);
+        m.last_push.set(now);
+        if m.len.get() == 0 {
+            m.visible_at.set(now + 1);
+        }
+        m.len.set(m.len.get() + 1);
+        c.q.push_back(Entry { beat, pushed_at: now });
+    }
+
+    /// Record that the producer had a beat but the channel was full.
+    pub fn note_stall(&self) {
+        let mut c = self.core.borrow_mut();
+        c.stats.stall_cycles += 1;
+    }
+
+    pub fn label(&self) -> String {
+        self.core.borrow().label.clone()
+    }
+
+    pub fn stats(&self) -> ChannelStats {
+        self.core.borrow().stats.clone()
+    }
+}
+
+impl<T> Rx<T> {
+    pub fn set_now(&self, cy: Cycle) {
+        if cy > self.now.get() {
+            self.now.set(cy);
+        }
+    }
+
+    /// True iff a beat is visible (pushed in an earlier cycle) and no pop
+    /// has happened yet this cycle.
+    pub fn can_pop(&self) -> bool {
+        let now = self.now.get();
+        let m = &*self.meta;
+        m.last_pop.get() != now && m.visible_at.get() <= now
+    }
+
+    /// Inspect the front beat without popping (models reading payload while
+    /// deciding on ready).
+    pub fn peek<R>(&self, f: impl FnOnce(&T) -> R) -> Option<R> {
+        if !self.can_pop() {
+            return None;
+        }
+        let c = self.core.borrow();
+        c.q.front().map(|e| f(&e.beat))
+    }
+
+    /// Pop the front beat (the handshake). Panics if `!can_pop()`.
+    pub fn pop(&self) -> T {
+        let now = self.now.get();
+        let m = &*self.meta;
+        let mut c = self.core.borrow_mut();
+        debug_assert!(m.last_pop.get() != now, "double pop in one cycle on {}", c.label);
+        debug_assert!(m.visible_at.get() <= now, "pop of same-cycle beat on {}", c.label);
+        let e = c.q.pop_front().expect("pop on empty channel");
+        debug_assert!(e.pushed_at < now);
+        m.last_pop.set(now);
+        m.len.set(m.len.get() - 1);
+        m.visible_at.set(match c.q.front() {
+            Some(next) => next.pushed_at + 1,
+            None => Cycle::MAX,
+        });
+        c.stats.handshakes += 1;
+        c.stats.last_handshake = now;
+        e.beat
+    }
+
+    pub fn label(&self) -> String {
+        self.core.borrow().label.clone()
+    }
+
+    pub fn stats(&self) -> ChannelStats {
+        self.core.borrow().stats.clone()
+    }
+
+    /// Number of beats buffered (visible or not). For tests/debug.
+    pub fn occupancy(&self) -> usize {
+        self.meta.len.get()
+    }
+}
+
+/// A passive statistics tap on a channel: holds a reference to the channel
+/// core without being able to push/pop. Used to observe bandwidth on
+/// internal bundles (e.g. tree uplinks) after the endpoints moved into
+/// their owning modules.
+pub struct Tap<T> {
+    core: Rc<RefCell<Core<T>>>,
+}
+
+impl<T> Tap<T> {
+    pub fn stats(&self) -> ChannelStats {
+        self.core.borrow().stats.clone()
+    }
+
+    pub fn label(&self) -> String {
+        self.core.borrow().label.clone()
+    }
+}
+
+impl<T> Tx<T> {
+    pub fn tap(&self) -> Tap<T> {
+        Tap { core: self.core.clone() }
+    }
+}
+
+impl<T> Rx<T> {
+    pub fn tap(&self) -> Tap<T> {
+        Tap { core: self.core.clone() }
+    }
+}
+
+/// Convenience: advance time on a pair of endpoints belonging to a module.
+pub fn tick_all(cy: Cycle, txs: &[&dyn SetNow], rxs: &[&dyn SetNow]) {
+    for t in txs {
+        t.set_now_dyn(cy);
+    }
+    for r in rxs {
+        r.set_now_dyn(cy);
+    }
+}
+
+/// Object-safe `set_now` for heterogeneous channel collections.
+pub trait SetNow {
+    fn set_now_dyn(&self, cy: Cycle);
+}
+
+impl<T> SetNow for Tx<T> {
+    fn set_now_dyn(&self, cy: Cycle) {
+        self.set_now(cy);
+    }
+}
+
+impl<T> SetNow for Rx<T> {
+    fn set_now_dyn(&self, cy: Cycle) {
+        self.set_now(cy);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beat_visible_next_cycle() {
+        let (tx, rx) = wire::<u32>("t");
+        tx.set_now(0);
+        assert!(tx.can_push());
+        tx.push(7);
+        rx.set_now(0);
+        assert!(!rx.can_pop(), "same-cycle visibility would be combinational");
+        tx.set_now(1);
+        rx.set_now(1);
+        assert!(rx.can_pop());
+        assert_eq!(rx.pop(), 7);
+    }
+
+    #[test]
+    fn full_throughput_with_depth_two() {
+        let (tx, rx) = wire::<u64>("t");
+        let mut popped = 0u64;
+        for cy in 0..100 {
+            tx.set_now(cy);
+            rx.set_now(cy);
+            // Consumer first this cycle order; still must sustain 1/cycle.
+            if rx.can_pop() {
+                rx.pop();
+                popped += 1;
+            }
+            if tx.can_push() {
+                tx.push(cy);
+            }
+        }
+        assert!(popped >= 98, "expected ~1 beat/cycle, got {popped}/100");
+    }
+
+    #[test]
+    fn producer_first_order_also_full_throughput() {
+        let (tx, rx) = wire::<u64>("t");
+        let mut popped = 0u64;
+        for cy in 0..100 {
+            tx.set_now(cy);
+            rx.set_now(cy);
+            if tx.can_push() {
+                tx.push(cy);
+            }
+            if rx.can_pop() {
+                rx.pop();
+                popped += 1;
+            }
+        }
+        assert!(popped >= 98, "expected ~1 beat/cycle, got {popped}/100");
+    }
+
+    #[test]
+    fn capacity_one_backpressures() {
+        let (tx, rx) = channel::<u8>("t", 1);
+        tx.set_now(0);
+        tx.push(1);
+        tx.set_now(1);
+        assert!(!tx.can_push());
+        rx.set_now(1);
+        assert_eq!(rx.pop(), 1);
+        // Space freed by the pop is usable the same cycle (skid behaviour).
+        assert!(tx.can_push());
+    }
+
+    #[test]
+    fn one_pop_per_cycle() {
+        let (tx, rx) = wire::<u8>("t");
+        tx.set_now(0);
+        tx.push(1);
+        tx.set_now(1);
+        tx.push(2);
+        tx.set_now(5);
+        rx.set_now(5);
+        assert_eq!(rx.pop(), 1);
+        assert!(!rx.can_pop(), "second pop in one cycle must be refused");
+        rx.set_now(6);
+        assert_eq!(rx.pop(), 2);
+    }
+
+    #[test]
+    fn stats_count_handshakes_and_stalls() {
+        let (tx, rx) = wire::<u8>("t");
+        tx.set_now(0);
+        tx.push(1);
+        tx.set_now(1);
+        tx.push(2);
+        tx.set_now(2);
+        assert!(!tx.can_push());
+        tx.note_stall();
+        rx.set_now(2);
+        rx.pop();
+        let s = rx.stats();
+        assert_eq!(s.handshakes, 1);
+        assert_eq!(tx.stats().stall_cycles, 1);
+    }
+
+    #[test]
+    fn fifo_order() {
+        let (tx, rx) = channel::<u32>("t", 8);
+        for cy in 0..5 {
+            tx.set_now(cy);
+            tx.push(cy as u32);
+        }
+        let mut got = Vec::new();
+        for cy in 5..10 {
+            rx.set_now(cy);
+            got.push(rx.pop());
+        }
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,19 @@
+//! Protocol substrate: beat payloads, valid/ready channels, bundles
+//! (the five-channel master↔slave connection), and the compliance monitor.
+//!
+//! This layer encodes the protocol essentials of the paper's §2 —
+//! valid/ready flow control with the stability (F1) and acyclicity (F2)
+//! rules, burst-based transactions, IDs, and the ordering rules (O1)–(O3) —
+//! on which every network module in [`crate::noc`] is built.
+
+pub mod channel;
+pub mod monitor;
+pub mod payload;
+pub mod port;
+
+pub use channel::{channel, wire, ChannelStats, Rx, Tx};
+pub use monitor::{Monitor, Violation};
+pub use payload::{
+    split_bursts, strb_all, BBeat, Burst, Bytes, Cmd, Id, RBeat, Resp, Strb, TxnTag, WBeat,
+};
+pub use port::{bundle, BundleCfg, BundleStats, MasterEnd, SlaveEnd};

@@ -1,0 +1,370 @@
+//! Beat payloads for the five channels of the on-chip protocol.
+//!
+//! The protocol follows the paper's AXI5 subset: burst-based transactions,
+//! multiple outstanding transactions identified by numeric IDs, and
+//! transaction reordering governed by the ordering rules (O1)-(O3)
+//! (see `protocol::monitor`). A *beat* is the unit transferred on one
+//! channel per handshake.
+
+use std::fmt;
+
+/// Transaction ID as carried on command/response beats. Ports know their
+/// ID width; modules that prepend/truncate IDs (mux, remappers) operate on
+/// this value together with the port's width.
+pub type Id = u32;
+
+/// Simulation-side serial number tagging a transaction end-to-end; it is
+/// not visible to the modeled hardware (IDs are) but lets monitors, stats
+/// and endpoints track latency and match commands to responses across
+/// arbitrary module chains.
+pub type TxnTag = u64;
+
+/// Burst type of a command (AXI AWBURST/ARBURST).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Burst {
+    /// Address increments by the beat size each beat (the common case).
+    #[default]
+    Incr,
+    /// Address is the same for every beat (e.g. FIFO peripherals).
+    Fixed,
+    /// Incrementing with wrap at the burst-length boundary (cache refills).
+    Wrap,
+}
+
+/// Response code (AXI xRESP).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Resp {
+    #[default]
+    Okay,
+    /// Slave error: the endpoint signalled failure.
+    SlvErr,
+    /// Decode error: no slave at the address (issued by the error slave).
+    DecErr,
+}
+
+impl Resp {
+    /// Combine split-burst responses: the worst response wins.
+    pub fn merge(self, other: Resp) -> Resp {
+        use Resp::*;
+        match (self, other) {
+            (DecErr, _) | (_, DecErr) => DecErr,
+            (SlvErr, _) | (_, SlvErr) => SlvErr,
+            _ => Okay,
+        }
+    }
+}
+
+/// The byte payload of one data beat. Beats up to 64 B (512-bit) are stored
+/// inline; wider beats (the platform supports up to 1024-bit) spill to the
+/// heap. Keeping the common case allocation-free matters: the full-chiplet
+/// simulation moves hundreds of millions of beats (see EXPERIMENTS.md §Perf).
+#[derive(Clone, PartialEq, Eq)]
+pub enum Bytes {
+    Inline { len: u8, buf: [u8; 64] },
+    Heap(Vec<u8>),
+}
+
+impl Bytes {
+    pub fn zeroed(len: usize) -> Self {
+        if len <= 64 {
+            Bytes::Inline { len: len as u8, buf: [0u8; 64] }
+        } else {
+            Bytes::Heap(vec![0u8; len])
+        }
+    }
+
+    pub fn from_slice(s: &[u8]) -> Self {
+        if s.len() <= 64 {
+            let mut buf = [0u8; 64];
+            buf[..s.len()].copy_from_slice(s);
+            Bytes::Inline { len: s.len() as u8, buf }
+        } else {
+            Bytes::Heap(s.to_vec())
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Bytes::Inline { len, .. } => *len as usize,
+            Bytes::Heap(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            Bytes::Inline { len, buf } => &buf[..*len as usize],
+            Bytes::Heap(v) => v,
+        }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        match self {
+            Bytes::Inline { len, buf } => &mut buf[..*len as usize],
+            Bytes::Heap(v) => v,
+        }
+    }
+}
+
+impl fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Bytes[{}]", self.len())
+    }
+}
+
+/// Byte-enable strobes for a write data beat; bit i enables byte i.
+/// u128 covers beats up to 1024-bit.
+pub type Strb = u128;
+
+/// All-ones strobe for `n` bytes.
+pub fn strb_all(n: usize) -> Strb {
+    if n >= 128 {
+        !0
+    } else {
+        (1u128 << n) - 1
+    }
+}
+
+/// Write or read command beat (AW/AR carry the same payload fields).
+#[derive(Debug, Clone)]
+pub struct Cmd {
+    pub id: Id,
+    pub addr: u64,
+    /// Number of beats minus one (AXI xLEN); 0..=255.
+    pub len: u8,
+    /// log2 of bytes per beat (AXI xSIZE).
+    pub size: u8,
+    pub burst: Burst,
+    /// Quality-of-service hint (AXI xQOS); higher is more important.
+    pub qos: u8,
+    /// Whether width converters may reshape this burst (AXI modifiable bit).
+    pub modifiable: bool,
+    pub tag: TxnTag,
+}
+
+impl Cmd {
+    pub fn new(id: Id, addr: u64, len: u8, size: u8) -> Self {
+        Cmd { id, addr, len, size, burst: Burst::Incr, qos: 0, modifiable: true, tag: 0 }
+    }
+
+    /// Bytes per beat.
+    pub fn beat_bytes(&self) -> usize {
+        1usize << self.size
+    }
+
+    /// Number of beats in the burst.
+    pub fn beats(&self) -> usize {
+        self.len as usize + 1
+    }
+
+    /// Total byte span addressed by the burst (INCR).
+    pub fn span(&self) -> u64 {
+        (self.beats() * self.beat_bytes()) as u64
+    }
+
+    /// Address of beat `i` of the burst.
+    pub fn beat_addr(&self, i: usize) -> u64 {
+        let bb = self.beat_bytes() as u64;
+        match self.burst {
+            Burst::Fixed => self.addr,
+            Burst::Incr => (self.addr & !(bb - 1)) + bb * i as u64,
+            Burst::Wrap => {
+                let total = self.span();
+                let base = self.addr & !(total - 1);
+                let start = self.addr & !(bb - 1);
+                base + ((start - base) + bb * i as u64) % total
+            }
+        }
+    }
+
+    /// True iff an INCR burst stays within one 4 KiB page as the protocol
+    /// requires.
+    pub fn legal_4k(&self) -> bool {
+        match self.burst {
+            Burst::Fixed => true,
+            _ => {
+                let first = self.beat_addr(0);
+                let last = self.beat_addr(self.beats() - 1) + self.beat_bytes() as u64 - 1;
+                (first >> 12) == (last >> 12)
+            }
+        }
+    }
+}
+
+/// Write data beat.
+#[derive(Debug, Clone)]
+pub struct WBeat {
+    pub data: Bytes,
+    pub strb: Strb,
+    pub last: bool,
+    pub tag: TxnTag,
+}
+
+impl WBeat {
+    pub fn full(data: Bytes, last: bool, tag: TxnTag) -> Self {
+        let strb = strb_all(data.len());
+        WBeat { data, strb, last, tag }
+    }
+}
+
+/// Write response beat.
+#[derive(Debug, Clone)]
+pub struct BBeat {
+    pub id: Id,
+    pub resp: Resp,
+    pub tag: TxnTag,
+}
+
+/// Read response beat.
+#[derive(Debug, Clone)]
+pub struct RBeat {
+    pub id: Id,
+    pub data: Bytes,
+    pub resp: Resp,
+    pub last: bool,
+    pub tag: TxnTag,
+}
+
+/// Split an arbitrary `[addr, addr+len)` byte range into protocol-legal
+/// INCR bursts of beat width `2^size` that do not cross 4 KiB boundaries
+/// and have at most `max_beats` beats. Head/tail beats may be partial
+/// (callers mask with strobes). Returns `(burst_addr, burst_len_field)`.
+///
+/// This is the core of the DMA burst reshaper (§2.6) and the downsizer's
+/// burst splitter (§2.4.2).
+pub fn split_bursts(addr: u64, len: u64, size: u8, max_beats: usize) -> Vec<(u64, u8)> {
+    assert!(max_beats >= 1 && max_beats <= 256);
+    let bb = 1u64 << size;
+    let mut out = Vec::new();
+    let mut cur = addr;
+    let end = addr + len;
+    while cur < end {
+        // First beat covers cur..beat-aligned boundary.
+        let first_beat = cur & !(bb - 1);
+        // Burst must end at or before: 4 KiB page end, max_beats, range end.
+        let page_end = (cur | 0xFFF) + 1;
+        let max_end = first_beat + (max_beats as u64) * bb;
+        let stop = end.min(page_end).min(max_end);
+        let last_beat = (stop - 1) & !(bb - 1);
+        let beats = ((last_beat - first_beat) / bb + 1) as usize;
+        debug_assert!(beats <= max_beats);
+        out.push((cur, (beats - 1) as u8));
+        cur = stop;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_inline_roundtrip() {
+        let b = Bytes::from_slice(&[1, 2, 3, 4]);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.as_slice(), &[1, 2, 3, 4]);
+        assert!(matches!(b, Bytes::Inline { .. }));
+    }
+
+    #[test]
+    fn bytes_heap_for_wide() {
+        let v: Vec<u8> = (0..128).map(|i| i as u8).collect();
+        let b = Bytes::from_slice(&v);
+        assert!(matches!(b, Bytes::Heap(_)));
+        assert_eq!(b.as_slice(), &v[..]);
+    }
+
+    #[test]
+    fn bytes_zeroed() {
+        assert_eq!(Bytes::zeroed(64).len(), 64);
+        assert_eq!(Bytes::zeroed(128).len(), 128);
+        assert!(Bytes::zeroed(0).is_empty());
+    }
+
+    #[test]
+    fn strb_all_widths() {
+        assert_eq!(strb_all(1), 1);
+        assert_eq!(strb_all(8), 0xFF);
+        assert_eq!(strb_all(64), (1u128 << 64) - 1);
+        assert_eq!(strb_all(128), !0u128);
+    }
+
+    #[test]
+    fn resp_merge_worst_wins() {
+        assert_eq!(Resp::Okay.merge(Resp::SlvErr), Resp::SlvErr);
+        assert_eq!(Resp::SlvErr.merge(Resp::DecErr), Resp::DecErr);
+        assert_eq!(Resp::Okay.merge(Resp::Okay), Resp::Okay);
+    }
+
+    #[test]
+    fn cmd_beat_math() {
+        let c = Cmd::new(0, 0x1008, 3, 3); // 4 beats of 8 B at 0x1008
+        assert_eq!(c.beat_bytes(), 8);
+        assert_eq!(c.beats(), 4);
+        assert_eq!(c.beat_addr(0), 0x1008);
+        assert_eq!(c.beat_addr(1), 0x1010);
+        assert_eq!(c.beat_addr(3), 0x1020);
+    }
+
+    #[test]
+    fn cmd_fixed_burst_addr_constant() {
+        let mut c = Cmd::new(0, 0x40, 7, 2);
+        c.burst = Burst::Fixed;
+        assert_eq!(c.beat_addr(0), 0x40);
+        assert_eq!(c.beat_addr(7), 0x40);
+        assert!(c.legal_4k());
+    }
+
+    #[test]
+    fn cmd_wrap_burst() {
+        let mut c = Cmd::new(0, 0x30, 3, 4); // 4x16B wrap at 64B boundary
+        c.burst = Burst::Wrap;
+        assert_eq!(c.beat_addr(0), 0x30);
+        assert_eq!(c.beat_addr(1), 0x00);
+        assert_eq!(c.beat_addr(2), 0x10);
+        assert_eq!(c.beat_addr(3), 0x20);
+    }
+
+    #[test]
+    fn legal_4k_detects_crossing() {
+        let ok = Cmd::new(0, 0xF80, 15, 3); // ends at 0xFFF
+        assert!(ok.legal_4k());
+        let bad = Cmd::new(0, 0xF88, 15, 3); // crosses into next page
+        assert!(!bad.legal_4k());
+    }
+
+    #[test]
+    fn split_bursts_respects_4k() {
+        for (addr, len) in [(0u64, 4096u64), (0xF00, 512), (0x123, 9000), (4095, 2)] {
+            let bursts = split_bursts(addr, len, 3, 256);
+            let mut cur = addr;
+            for (a, l) in &bursts {
+                assert_eq!(*a, cur, "bursts must tile the range");
+                let c = Cmd::new(0, *a, *l, 3);
+                assert!(c.legal_4k(), "burst at {a:#x} len {l} crosses 4k");
+                // Advance to the end of the span this burst covers.
+                let first_beat = a & !7;
+                let burst_end = first_beat + 8 * (*l as u64 + 1);
+                cur = burst_end.min(addr + len);
+            }
+            assert_eq!(cur, addr + len, "range fully covered");
+        }
+    }
+
+    #[test]
+    fn split_bursts_respects_max_beats() {
+        let bursts = split_bursts(0, 8 * 300, 3, 16);
+        for (_, l) in &bursts {
+            assert!((*l as usize) < 16);
+        }
+    }
+
+    #[test]
+    fn split_single_byte() {
+        let bursts = split_bursts(0x7, 1, 3, 256);
+        assert_eq!(bursts, vec![(0x7, 0)]);
+    }
+}

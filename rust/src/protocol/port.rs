@@ -1,0 +1,183 @@
+//! Bundles: the five-channel connection between a master port and a slave
+//! port, plus the endpoint structs modules hold.
+//!
+//! Terminology follows the paper (§2 "Terminology and Protocol Essentials"):
+//! a *master port* initiates transactions (drives AW/W/AR, receives B/R); a
+//! *slave port* responds (receives AW/W/AR, drives B/R). A *bundle* is the
+//! set of five independently-handshaked channels connecting one master port
+//! to one slave port.
+
+use super::channel::{channel_clocked, Clock, Rx, SetNow, Tx};
+use super::payload::{BBeat, Cmd, RBeat, WBeat};
+use crate::sim::Cycle;
+
+/// Static properties of a bundle. Modules check compatibility at build time
+/// (e.g. a mux master port has `id_width = slave.id_width + log2(S)`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BundleCfg {
+    /// Data width in bits (8 to 1024 in the evaluated design space).
+    pub data_bits: usize,
+    /// ID width in bits at this bundle.
+    pub id_bits: usize,
+    /// Address width in bits (fixed 64 in the paper's evaluations).
+    pub addr_bits: usize,
+    /// Channel register depth (≥2 for full throughput).
+    pub depth: usize,
+}
+
+impl BundleCfg {
+    pub fn new(data_bits: usize, id_bits: usize) -> Self {
+        BundleCfg { data_bits, id_bits, addr_bits: 64, depth: 2 }
+    }
+
+    pub fn with_depth(mut self, depth: usize) -> Self {
+        self.depth = depth;
+        self
+    }
+
+    /// Bytes per data beat.
+    pub fn beat_bytes(&self) -> usize {
+        self.data_bits / 8
+    }
+
+    /// AXI xSIZE for full-width beats.
+    pub fn size(&self) -> u8 {
+        debug_assert!(self.data_bits.is_power_of_two() && self.data_bits >= 8);
+        (self.data_bits / 8).trailing_zeros() as u8
+    }
+
+    /// Number of distinct IDs expressible at this bundle.
+    pub fn id_space(&self) -> usize {
+        1usize << self.id_bits
+    }
+}
+
+impl Default for BundleCfg {
+    fn default() -> Self {
+        // The paper's default evaluation point: 64-bit data, 6-bit IDs.
+        BundleCfg::new(64, 6)
+    }
+}
+
+/// What a module with a **master port** holds: transmit ends of the forward
+/// channels, receive ends of the backward channels.
+pub struct MasterEnd {
+    pub cfg: BundleCfg,
+    pub aw: Tx<Cmd>,
+    pub w: Tx<WBeat>,
+    pub b: Rx<BBeat>,
+    pub ar: Tx<Cmd>,
+    pub r: Rx<RBeat>,
+}
+
+/// What a module with a **slave port** holds: receive ends of the forward
+/// channels, transmit ends of the backward channels.
+pub struct SlaveEnd {
+    pub cfg: BundleCfg,
+    pub aw: Rx<Cmd>,
+    pub w: Rx<WBeat>,
+    pub b: Tx<BBeat>,
+    pub ar: Rx<Cmd>,
+    pub r: Tx<RBeat>,
+}
+
+impl MasterEnd {
+    /// All five channels share one clock (see `bundle`): one store.
+    pub fn set_now(&self, cy: Cycle) {
+        self.aw.set_now(cy);
+    }
+}
+
+impl SlaveEnd {
+    pub fn set_now(&self, cy: Cycle) {
+        self.aw.set_now(cy);
+    }
+}
+
+/// Create a bundle: returns the master-side and slave-side endpoints of the
+/// five channels. `label` prefixes the channel labels for stats/debug.
+pub fn bundle(label: &str, cfg: BundleCfg) -> (MasterEnd, SlaveEnd) {
+    let clock: Clock = std::rc::Rc::new(std::cell::Cell::new(0));
+    let (aw_tx, aw_rx) = channel_clocked(format!("{label}.aw"), cfg.depth, clock.clone());
+    let (w_tx, w_rx) = channel_clocked(format!("{label}.w"), cfg.depth, clock.clone());
+    let (b_tx, b_rx) = channel_clocked(format!("{label}.b"), cfg.depth, clock.clone());
+    let (ar_tx, ar_rx) = channel_clocked(format!("{label}.ar"), cfg.depth, clock.clone());
+    let (r_tx, r_rx) = channel_clocked(format!("{label}.r"), cfg.depth, clock);
+    (
+        MasterEnd { cfg, aw: aw_tx, w: w_tx, b: b_rx, ar: ar_tx, r: r_rx },
+        SlaveEnd { cfg, aw: aw_rx, w: w_rx, b: b_tx, ar: ar_rx, r: r_tx },
+    )
+}
+
+/// Bandwidth/observability summary for a bundle, taken from channel stats.
+#[derive(Debug, Clone, Default)]
+pub struct BundleStats {
+    pub aw_handshakes: u64,
+    pub w_handshakes: u64,
+    pub b_handshakes: u64,
+    pub ar_handshakes: u64,
+    pub r_handshakes: u64,
+}
+
+impl SlaveEnd {
+    pub fn bundle_stats(&self) -> BundleStats {
+        BundleStats {
+            aw_handshakes: self.aw.stats().handshakes,
+            w_handshakes: self.w.stats().handshakes,
+            b_handshakes: self.b.stats().handshakes,
+            ar_handshakes: self.ar.stats().handshakes,
+            r_handshakes: self.r.stats().handshakes,
+        }
+    }
+}
+
+impl BundleStats {
+    /// Data bytes moved (read + write) given the bundle's beat width.
+    pub fn data_bytes(&self, cfg: &BundleCfg) -> u64 {
+        (self.w_handshakes + self.r_handshakes) * cfg.beat_bytes() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_derived_values() {
+        let c = BundleCfg::new(512, 4);
+        assert_eq!(c.beat_bytes(), 64);
+        assert_eq!(c.size(), 6);
+        assert_eq!(c.id_space(), 16);
+    }
+
+    #[test]
+    fn default_is_paper_eval_point() {
+        let c = BundleCfg::default();
+        assert_eq!(c.data_bits, 64);
+        assert_eq!(c.id_bits, 6);
+    }
+
+    #[test]
+    fn bundle_channels_connect() {
+        let (m, s) = bundle("t", BundleCfg::default());
+        m.set_now(0);
+        s.set_now(0);
+        m.aw.push(Cmd::new(1, 0x100, 0, 3));
+        m.set_now(1);
+        s.set_now(1);
+        let got = s.aw.pop();
+        assert_eq!(got.id, 1);
+        assert_eq!(got.addr, 0x100);
+    }
+
+    #[test]
+    fn response_direction() {
+        let (m, s) = bundle("t", BundleCfg::default());
+        m.set_now(0);
+        s.set_now(0);
+        s.b.push(BBeat { id: 3, resp: crate::protocol::Resp::Okay, tag: 9 });
+        m.set_now(1);
+        s.set_now(1);
+        assert_eq!(m.b.pop().id, 3);
+    }
+}

@@ -1,0 +1,5 @@
+//! PJRT runtime: AOT artifact loading + execution (no Python at runtime).
+
+pub mod pjrt;
+
+pub use pjrt::{gen_input, parse_golden, ExecResult, Golden, Runtime};

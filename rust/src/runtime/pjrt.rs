@@ -1,0 +1,245 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas compute graphs
+//! (`artifacts/*.hlo.txt`) and executes them from the Rust request path —
+//! Python is never involved at runtime.
+//!
+//! Interchange format is HLO **text**, not serialized HloModuleProto:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the bundled
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and python/compile/aot.py).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::sim::SplitMix64;
+
+/// Deterministic input generation, bit-exact with aot.py::gen_input.
+pub fn gen_input(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| rng.unit_f32()).collect()
+}
+
+/// Input spec from a golden manifest: generate `shape` f32s from `seed`.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub seed: u64,
+}
+
+impl ArgSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Golden output record: checksums over the expected output.
+#[derive(Debug, Clone)]
+pub struct GoldenOut {
+    pub shape: Vec<usize>,
+    pub sum: f64,
+    pub l2: f64,
+    pub first8: Vec<f64>,
+}
+
+/// Parsed `<name>.golden.txt` manifest.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub args: Vec<ArgSpec>,
+    pub outs: Vec<GoldenOut>,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    if s == "scalar" {
+        return Ok(vec![]);
+    }
+    s.split('x')
+        .map(|d| d.parse::<usize>().context("bad shape dim"))
+        .collect()
+}
+
+/// Parse the line-based golden manifest emitted by aot.py.
+pub fn parse_golden(text: &str) -> Result<Golden> {
+    let mut args = Vec::new();
+    let mut outs = Vec::new();
+    for line in text.lines() {
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        match toks.first() {
+            Some(&"arg") => {
+                // arg <i> f32 <shape> splitmix <seed>
+                if toks.len() < 6 || toks[2] != "f32" || toks[4] != "splitmix" {
+                    bail!("bad arg line: {line}");
+                }
+                args.push(ArgSpec { shape: parse_shape(toks[3])?, seed: toks[5].parse()? });
+            }
+            Some(&"out") => {
+                // out <i> f32 <shape> sum <s> l2 <n> first8 v0..v7
+                let sum_i = toks.iter().position(|&t| t == "sum").context("no sum")?;
+                let l2_i = toks.iter().position(|&t| t == "l2").context("no l2")?;
+                let f8_i = toks.iter().position(|&t| t == "first8").context("no first8")?;
+                outs.push(GoldenOut {
+                    shape: parse_shape(toks[3])?,
+                    sum: toks[sum_i + 1].parse()?,
+                    l2: toks[l2_i + 1].parse()?,
+                    first8: toks[f8_i + 1..]
+                        .iter()
+                        .map(|t| t.parse::<f64>().context("bad first8"))
+                        .collect::<Result<_>>()?,
+                });
+            }
+            _ => {}
+        }
+    }
+    if args.is_empty() || outs.is_empty() {
+        bail!("golden manifest missing args or outs");
+    }
+    Ok(Golden { args, outs })
+}
+
+/// A loaded, compiled executable plus its golden manifest.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub golden: Golden,
+}
+
+/// The runtime: a PJRT CPU client and a registry of compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, Artifact>,
+    dir: PathBuf,
+}
+
+/// Result of one execution.
+#[derive(Debug)]
+pub struct ExecResult {
+    pub outputs: Vec<Vec<f32>>,
+    /// Max relative checksum error vs the golden manifest.
+    pub max_rel_err: f64,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifact directory (default: `artifacts/`).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Runtime { client, artifacts: HashMap::new(), dir: dir.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile `<name>.hlo.txt` + `<name>.golden.txt`.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+        let golden_path = self.dir.join(format!("{name}.golden.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("path")?,
+        )
+        .with_context(|| format!("parsing {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("PJRT compile")?;
+        let golden = parse_golden(
+            &std::fs::read_to_string(&golden_path)
+                .with_context(|| format!("reading {}", golden_path.display()))?,
+        )?;
+        self.artifacts.insert(name.to_string(), Artifact { name: name.to_string(), exe, golden });
+        Ok(())
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute with the manifest's deterministic inputs and verify the
+    /// outputs against the golden checksums.
+    pub fn run_golden(&self, name: &str) -> Result<ExecResult> {
+        let art = self.artifacts.get(name).with_context(|| format!("artifact {name} not loaded"))?;
+        let inputs: Vec<Vec<f32>> =
+            art.golden.args.iter().map(|a| gen_input(a.numel(), a.seed)).collect();
+        self.run_with(name, &inputs)
+    }
+
+    /// Execute with caller-provided inputs (shapes from the manifest).
+    pub fn run_with(&self, name: &str, inputs: &[Vec<f32>]) -> Result<ExecResult> {
+        let art = self.artifacts.get(name).with_context(|| format!("artifact {name} not loaded"))?;
+        if inputs.len() != art.golden.args.len() {
+            bail!("{name}: expected {} inputs, got {}", art.golden.args.len(), inputs.len());
+        }
+        let mut literals = Vec::new();
+        for (spec, data) in art.golden.args.iter().zip(inputs) {
+            if data.len() != spec.numel() {
+                bail!("{name}: input size {} != {}", data.len(), spec.numel());
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims).context("reshape")?);
+        }
+        let result = art.exe.execute::<xla::Literal>(&literals).context("execute")?[0][0]
+            .to_literal_sync()
+            .context("to_literal")?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let elems = result.to_tuple().context("tuple unpack")?;
+        let mut outputs = Vec::new();
+        let mut max_rel = 0.0f64;
+        for (out, golden) in elems.iter().zip(&art.golden.outs) {
+            let v: Vec<f32> = out.to_vec().context("to_vec")?;
+            let sum: f64 = v.iter().map(|&x| x as f64).sum();
+            let l2: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+            let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-9);
+            max_rel = max_rel.max(rel(sum, golden.sum)).max(rel(l2, golden.l2));
+            for (i, g) in golden.first8.iter().enumerate() {
+                if i < v.len() {
+                    max_rel = max_rel.max(rel(v[i] as f64, *g));
+                }
+            }
+            outputs.push(v);
+        }
+        Ok(ExecResult { outputs, max_rel_err: max_rel })
+    }
+
+    /// Verify inputs exist on disk (without compiling).
+    pub fn artifacts_present(dir: impl AsRef<Path>, names: &[&str]) -> bool {
+        names.iter().all(|n| {
+            dir.as_ref().join(format!("{n}.hlo.txt")).exists()
+                && dir.as_ref().join(format!("{n}.golden.txt")).exists()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_input_matches_python_range() {
+        let v = gen_input(1000, 7);
+        assert!(v.iter().all(|&x| (-1.0..1.0).contains(&x)));
+        // Deterministic.
+        assert_eq!(v, gen_input(1000, 7));
+        assert_ne!(v, gen_input(1000, 8));
+    }
+
+    #[test]
+    fn parse_golden_roundtrip() {
+        let text = "inputs 2\n\
+                    arg 0 f32 8x8x16 splitmix 1001\n\
+                    arg 1 f32 16x3x3x16 splitmix 1002\n\
+                    outputs 1\n\
+                    out 0 f32 8x8x16 sum 1.23456789e+02 l2 4.5e+01 first8 1.0 2.0 3.0 4.0 5.0 6.0 7.0 8.0\n";
+        let g = parse_golden(text).unwrap();
+        assert_eq!(g.args.len(), 2);
+        assert_eq!(g.args[0].shape, vec![8, 8, 16]);
+        assert_eq!(g.args[0].seed, 1001);
+        assert_eq!(g.outs[0].sum, 123.456789);
+        assert_eq!(g.outs[0].first8.len(), 8);
+    }
+
+    #[test]
+    fn parse_golden_rejects_garbage() {
+        assert!(parse_golden("nothing here").is_err());
+        assert!(parse_golden("arg 0 f32 8 bad 1\nout ...").is_err());
+    }
+
+    // PJRT-dependent tests live in rust/tests/runtime_e2e.rs (they need
+    // `make artifacts` to have run).
+}

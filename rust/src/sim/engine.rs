@@ -1,0 +1,250 @@
+//! Deterministic cycle-stepped simulation engine with multiple clock
+//! domains.
+//!
+//! Components register with a clock domain (period in picoseconds). The
+//! engine advances global time edge-by-edge: at each step, every domain
+//! whose next rising edge equals the current minimum time ticks all of its
+//! components, in registration order. Within a domain, channel visibility
+//! semantics (see `protocol::channel`) make results independent of
+//! registration order for correctness.
+//!
+//! Single-clock networks (the common case — Manticore's whole fabric runs
+//! at 1 GHz) use `Engine::single_clock()`, where one cycle = one tick.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Cycle count within a clock domain.
+pub type Cycle = u64;
+
+/// Global simulation time in picoseconds.
+pub type Ps = u64;
+
+/// A simulation component. `tick` is called once per rising edge of the
+/// component's clock domain with the domain-local cycle number.
+pub trait Component {
+    fn tick(&mut self, cycle: Cycle);
+    fn name(&self) -> &str;
+}
+
+/// Shared-ownership adapter so helper structs can be both owned by a parent
+/// module and registered with the engine.
+pub struct Shared<T: Component>(pub Rc<RefCell<T>>);
+
+impl<T: Component> Component for Shared<T> {
+    fn tick(&mut self, cycle: Cycle) {
+        self.0.borrow_mut().tick(cycle);
+    }
+    fn name(&self) -> &str {
+        // Can't borrow through the RefCell for a &str; use a static label.
+        "shared"
+    }
+}
+
+pub fn shared<T: Component>(c: T) -> (Rc<RefCell<T>>, Shared<T>) {
+    let rc = Rc::new(RefCell::new(c));
+    (rc.clone(), Shared(rc))
+}
+
+struct Domain {
+    name: String,
+    period_ps: Ps,
+    next_edge: Ps,
+    cycle: Cycle,
+    components: Vec<Box<dyn Component>>,
+}
+
+/// The simulation engine.
+pub struct Engine {
+    domains: Vec<Domain>,
+    now_ps: Ps,
+}
+
+/// Handle identifying a clock domain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DomainId(usize);
+
+impl Engine {
+    pub fn new() -> Self {
+        Engine { domains: Vec::new(), now_ps: 0 }
+    }
+
+    /// Engine with a single 1 GHz clock domain (the Manticore operating
+    /// point). Returns the engine and the domain handle.
+    pub fn single_clock() -> (Self, DomainId) {
+        let mut e = Engine::new();
+        let d = e.add_domain("clk", 1000);
+        (e, d)
+    }
+
+    pub fn add_domain(&mut self, name: impl Into<String>, period_ps: Ps) -> DomainId {
+        assert!(period_ps > 0);
+        self.domains.push(Domain {
+            name: name.into(),
+            period_ps,
+            next_edge: 0,
+            cycle: 0,
+            components: Vec::new(),
+        });
+        DomainId(self.domains.len() - 1)
+    }
+
+    pub fn add(&mut self, domain: DomainId, c: impl Component + 'static) {
+        self.domains[domain.0].components.push(Box::new(c));
+    }
+
+    pub fn add_boxed(&mut self, domain: DomainId, c: Box<dyn Component>) {
+        self.domains[domain.0].components.push(c);
+    }
+
+    /// Current global time.
+    pub fn now_ps(&self) -> Ps {
+        self.now_ps
+    }
+
+    /// Domain-local cycle count.
+    pub fn cycles(&self, domain: DomainId) -> Cycle {
+        self.domains[domain.0].cycle
+    }
+
+    /// Advance to the next clock edge (of any domain) and tick the domains
+    /// scheduled there. Returns the new global time.
+    pub fn step(&mut self) -> Ps {
+        let t = self.domains.iter().map(|d| d.next_edge).min().expect("no domains");
+        self.now_ps = t;
+        for d in &mut self.domains {
+            if d.next_edge == t {
+                d.cycle += 1;
+                let cy = d.cycle;
+                for c in &mut d.components {
+                    c.tick(cy);
+                }
+                d.next_edge += d.period_ps;
+            }
+        }
+        t
+    }
+
+    /// Run for `n` cycles of the given domain.
+    pub fn run_cycles(&mut self, domain: DomainId, n: Cycle) {
+        let target = self.domains[domain.0].cycle + n;
+        while self.domains[domain.0].cycle < target {
+            self.step();
+        }
+    }
+
+    /// Run until `pred` is true, checked after each step, or until the
+    /// cycle budget of the given domain expires. Returns whether the
+    /// predicate was met.
+    pub fn run_until(
+        &mut self,
+        domain: DomainId,
+        budget: Cycle,
+        mut pred: impl FnMut() -> bool,
+    ) -> bool {
+        let target = self.domains[domain.0].cycle + budget;
+        while self.domains[domain.0].cycle < target {
+            self.step();
+            if pred() {
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn domain_name(&self, domain: DomainId) -> &str {
+        &self.domains[domain.0].name
+    }
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Counter {
+        count: Rc<RefCell<u64>>,
+    }
+    impl Component for Counter {
+        fn tick(&mut self, _cy: Cycle) {
+            *self.count.borrow_mut() += 1;
+        }
+        fn name(&self) -> &str {
+            "counter"
+        }
+    }
+
+    #[test]
+    fn single_clock_ticks_every_cycle() {
+        let (mut e, d) = Engine::single_clock();
+        let count = Rc::new(RefCell::new(0));
+        e.add(d, Counter { count: count.clone() });
+        e.run_cycles(d, 100);
+        assert_eq!(*count.borrow(), 100);
+    }
+
+    #[test]
+    fn two_domains_tick_at_ratio() {
+        let mut e = Engine::new();
+        let fast = e.add_domain("fast", 500); // 2 GHz
+        let slow = e.add_domain("slow", 2000); // 0.5 GHz
+        let cf = Rc::new(RefCell::new(0));
+        let cs = Rc::new(RefCell::new(0));
+        e.add(fast, Counter { count: cf.clone() });
+        e.add(slow, Counter { count: cs.clone() });
+        e.run_cycles(slow, 10);
+        assert_eq!(*cs.borrow(), 10);
+        // At t = 18000 ps the slow domain has ticked 10 times (edges at 0,
+        // 2000, ..., 18000) and the fast domain 37 times (0, 500, ..., 18000).
+        assert_eq!(*cf.borrow(), 37, "fast domain ticks 4x the rate");
+    }
+
+    #[test]
+    fn coincident_edges_tick_both() {
+        let mut e = Engine::new();
+        let a = e.add_domain("a", 1000);
+        let b = e.add_domain("b", 1000);
+        let ca = Rc::new(RefCell::new(0));
+        let cb = Rc::new(RefCell::new(0));
+        e.add(a, Counter { count: ca.clone() });
+        e.add(b, Counter { count: cb.clone() });
+        e.run_cycles(a, 5);
+        assert_eq!(*ca.borrow(), 5);
+        assert_eq!(*cb.borrow(), 5);
+    }
+
+    #[test]
+    fn run_until_stops_early() {
+        let (mut e, d) = Engine::single_clock();
+        let count = Rc::new(RefCell::new(0u64));
+        e.add(d, Counter { count: count.clone() });
+        let c2 = count.clone();
+        let met = e.run_until(d, 1000, move || *c2.borrow() >= 10);
+        assert!(met);
+        assert_eq!(*count.borrow(), 10);
+    }
+
+    #[test]
+    fn run_until_budget_expires() {
+        let (mut e, d) = Engine::single_clock();
+        let met = e.run_until(d, 10, || false);
+        assert!(!met);
+        assert_eq!(e.cycles(d), 10);
+    }
+
+    #[test]
+    fn shared_component_ticks() {
+        let (mut e, d) = Engine::single_clock();
+        let count = Rc::new(RefCell::new(0));
+        let (handle, adapter) = shared(Counter { count: count.clone() });
+        e.add(d, adapter);
+        e.run_cycles(d, 3);
+        assert_eq!(*count.borrow(), 3);
+        drop(handle);
+    }
+}

@@ -1,0 +1,12 @@
+//! Cycle-stepped simulation substrate: engine, clock domains, statistics,
+//! deterministic PRNG, and the property-testing mini-framework.
+
+pub mod engine;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use engine::{shared, Component, Cycle, DomainId, Engine, Ps, Shared};
+pub use prop::{prop_check, prop_replay, Gen};
+pub use rng::SplitMix64;
+pub use stats::{human_bytes, Bandwidth, LatencyStats};

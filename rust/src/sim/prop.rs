@@ -1,0 +1,151 @@
+//! Minimal property-based testing framework (crates.io is unreachable in
+//! this environment, so `proptest` is reimplemented at the scale we need).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check("id remap injective", 200, |g| {
+//!     let u = g.int(1, 64);
+//!     let ids = g.vec(g_id, 0..=100);
+//!     ... assertions ...
+//! });
+//! ```
+//!
+//! Each case gets a deterministic seed derived from the property name and
+//! the case index; failures report the seed so a case can be replayed with
+//! `prop_replay`. No shrinking — cases are kept small instead, which in
+//! practice localizes failures well for simulator properties.
+
+use super::rng::SplitMix64;
+
+/// Value generator handed to each property case.
+pub struct Gen {
+    rng: SplitMix64,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Integer in [lo, hi] inclusive.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// One of the given items.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.range(0, items.len() - 1)]
+    }
+
+    /// Vec of values produced by `f`, length in [lo, hi].
+    pub fn vec<T>(&mut self, len_lo: usize, len_hi: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.int(len_lo, len_hi);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Power of two in [lo, hi] (both must be powers of two).
+    pub fn pow2(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo.is_power_of_two() && hi.is_power_of_two() && lo <= hi);
+        let llo = lo.trailing_zeros();
+        let lhi = hi.trailing_zeros();
+        1usize << self.rng.range(llo as usize, lhi as usize)
+    }
+
+    pub fn rng(&mut self) -> &mut SplitMix64 {
+        &mut self.rng
+    }
+}
+
+fn name_seed(name: &str) -> u64 {
+    // FNV-1a over the property name.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Run `cases` cases of the property. Panics (with the replay seed) on the
+/// first failing case. The property signals failure by panicking.
+pub fn prop_check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    let base = name_seed(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: SplitMix64::new(seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {seed:#x}):\n{msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed (for debugging a reported failure).
+pub fn prop_replay(seed: u64, mut prop: impl FnMut(&mut Gen)) {
+    let mut g = Gen { rng: SplitMix64::new(seed), case: 0 };
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_check("trivial", 50, |g| {
+            let a = g.int(0, 100);
+            let b = g.int(0, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn reports_failure_with_seed() {
+        prop_check("failing", 50, |g| {
+            let v = g.int(0, 10);
+            assert!(v < 10, "found the boundary");
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        prop_check("det", 5, |g| first.push(g.u64()));
+        let mut second = Vec::new();
+        prop_check("det", 5, |g| second.push(g.u64()));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn pow2_bounds() {
+        prop_check("pow2", 100, |g| {
+            let v = g.pow2(2, 64);
+            assert!(v.is_power_of_two() && (2..=64).contains(&v));
+        });
+    }
+
+    #[test]
+    fn vec_len_bounds() {
+        prop_check("vec", 50, |g| {
+            let v = g.vec(1, 7, |g| g.bool());
+            assert!((1..=7).contains(&v.len()));
+        });
+    }
+}

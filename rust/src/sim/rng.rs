@@ -1,0 +1,121 @@
+//! Deterministic PRNG for the simulator and the property-testing framework.
+//!
+//! SplitMix64 (Steele et al.) — the same constants as
+//! `python/compile/aot.py::splitmix64`, so the Rust runtime can regenerate
+//! the AOT artifacts' input tensors bit-exactly without Python.
+
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`. Uses the high bits (better distributed).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        // Multiply-shift reduction; bias is negligible for simulation use.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi]` inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        ((self.next_u64() >> 11) as f64) / ((1u64 << 53) as f64) < p
+    }
+
+    /// f32 uniform in [-1, 1): mirrors aot.py's gen_input (top 24 bits).
+    pub fn unit_f32(&mut self) -> f32 {
+        let bits = self.next_u64() >> 40; // [0, 2^24)
+        ((bits as f64 / (1u64 << 23) as f64) - 1.0) as f32
+    }
+
+    /// Pick an element index weighted by `weights`.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut x = (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64 * total;
+        for (i, w) in weights.iter().enumerate() {
+            if x < *w {
+                return i;
+            }
+            x -= w;
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_splitmix_known_vector() {
+        // Must match python/tests/test_aot.py::TestSplitmix::test_known_vector.
+        let mut r = SplitMix64::new(0);
+        assert_eq!(r.next_u64(), 0xE220A8397B1DCDAF);
+        assert_eq!(r.next_u64(), 0x6E789E6AA1B965F4);
+        assert_eq!(r.next_u64(), 0x06C45D188009454F);
+    }
+
+    #[test]
+    fn unit_f32_range() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..10_000 {
+            let v = r.unit_f32();
+            assert!((-1.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = SplitMix64::new(1);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn range_inclusive() {
+        let mut r = SplitMix64::new(2);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..10_000 {
+            let v = r.range(3, 5);
+            assert!((3..=5).contains(&v));
+            seen_lo |= v == 3;
+            seen_hi |= v == 5;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a: Vec<u64> = (0..8).map(|_| 0).scan(SplitMix64::new(9), |r, _| Some(r.next_u64())).collect();
+        let b: Vec<u64> = (0..8).map(|_| 0).scan(SplitMix64::new(9), |r, _| Some(r.next_u64())).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn weighted_respects_zero() {
+        let mut r = SplitMix64::new(3);
+        for _ in 0..100 {
+            assert_eq!(r.weighted(&[0.0, 1.0, 0.0]), 1);
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Measurement infrastructure: latency recorders, bandwidth windows, and
+//! histograms used by traffic endpoints and the bench harness.
+
+use crate::sim::Cycle;
+
+/// Latency histogram + summary statistics over recorded samples.
+#[derive(Debug, Clone)]
+pub struct LatencyStats {
+    samples: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+    /// Power-of-two buckets: bucket i counts samples in [2^i, 2^(i+1)).
+    buckets: [u64; 32],
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        LatencyStats { samples: 0, sum: 0, min: u64::MAX, max: 0, buckets: [0; 32] }
+    }
+
+    pub fn record(&mut self, latency: u64) {
+        self.samples += 1;
+        self.sum += latency;
+        self.min = self.min.min(latency);
+        self.max = self.max.max(latency);
+        let b = (64 - latency.max(1).leading_zeros() - 1).min(31) as usize;
+        self.buckets[b] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.samples
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.samples as f64
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.samples == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate percentile from the power-of-two histogram (upper bound
+    /// of the containing bucket).
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.samples == 0 {
+            return 0;
+        }
+        let target = (p / 100.0 * self.samples as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max
+    }
+}
+
+impl Default for LatencyStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Bandwidth accounting: bytes moved over a cycle window.
+#[derive(Debug, Clone, Default)]
+pub struct Bandwidth {
+    pub bytes: u64,
+    pub start_cycle: Cycle,
+    pub end_cycle: Cycle,
+}
+
+impl Bandwidth {
+    pub fn record(&mut self, bytes: u64, cycle: Cycle) {
+        if self.bytes == 0 {
+            self.start_cycle = cycle;
+        }
+        self.bytes += bytes;
+        self.end_cycle = cycle;
+    }
+
+    /// Bytes per cycle over the active window.
+    pub fn bytes_per_cycle(&self) -> f64 {
+        let w = self.end_cycle.saturating_sub(self.start_cycle).max(1);
+        self.bytes as f64 / w as f64
+    }
+
+    /// GB/s at the given clock frequency.
+    pub fn gbps(&self, freq_ghz: f64) -> f64 {
+        self.bytes_per_cycle() * freq_ghz
+    }
+}
+
+/// Format a byte count in binary units for reports.
+pub fn human_bytes(b: u64) -> String {
+    const U: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut i = 0;
+    while v >= 1024.0 && i < U.len() - 1 {
+        v /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", U[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_summary() {
+        let mut l = LatencyStats::new();
+        for v in [10, 20, 30] {
+            l.record(v);
+        }
+        assert_eq!(l.count(), 3);
+        assert_eq!(l.min(), 10);
+        assert_eq!(l.max(), 30);
+        assert!((l.mean() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_percentile_monotone() {
+        let mut l = LatencyStats::new();
+        for v in 1..=1000u64 {
+            l.record(v);
+        }
+        assert!(l.percentile(50.0) <= l.percentile(99.0));
+        assert!(l.percentile(99.0) <= 2048);
+    }
+
+    #[test]
+    fn empty_latency_is_zero() {
+        let l = LatencyStats::new();
+        assert_eq!(l.mean(), 0.0);
+        assert_eq!(l.percentile(99.0), 0);
+        assert_eq!(l.min(), 0);
+    }
+
+    #[test]
+    fn bandwidth_window() {
+        let mut b = Bandwidth::default();
+        b.record(64, 100);
+        b.record(64, 200);
+        assert!((b.bytes_per_cycle() - 1.28).abs() < 1e-9);
+        assert!((b.gbps(1.0) - 1.28).abs() < 1e-9);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(32 * 1024 * 1024 * 1024), "32.00 GiB");
+    }
+}

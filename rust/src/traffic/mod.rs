@@ -1,0 +1,8 @@
+//! Workload generators and traffic endpoints for driving the network
+//! modules in isolation and in full-system simulations.
+
+pub mod gen;
+pub mod perfect_slave;
+
+pub use gen::{AddrPattern, GenStats, RwGen, RwGenCfg};
+pub use perfect_slave::PerfectSlave;

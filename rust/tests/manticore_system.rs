@@ -1,0 +1,147 @@
+//! Integration: Manticore chiplet system-level scenarios beyond the unit
+//! tests — concurrent multi-cluster DMA, mixed core+DMA traffic, and the
+//! scaled headline-metric measurements the examples/benches report.
+
+use noc::manticore::chiplet::{Chiplet, ChipletCfg};
+use noc::manticore::cluster::addr;
+use noc::noc::dma::TransferReq;
+use noc::traffic::gen::{AddrPattern, RwGenCfg};
+
+#[test]
+fn all_clusters_concurrent_bidirectional_dma() {
+    // The deadlock-regression test: every cluster reads from and writes to
+    // its neighbour simultaneously (this configuration deadlocked with a
+    // single-ported L1 / combined read-write engines; see cluster.rs).
+    let cfg = ChipletCfg::small();
+    let n = cfg.n_clusters();
+    let mut ch = Chiplet::new(cfg);
+    let mut handles = Vec::new();
+    for c in 0..n {
+        let peer = c ^ 1;
+        handles.push((c, 0, ch.submit_dma(c, 0, TransferReq::OneD {
+            src: addr::cluster_base(peer) + 0x8000,
+            dst: addr::cluster_base(c) + 0x8000,
+            len: 32 * 1024,
+        })));
+        handles.push((c, 1, ch.submit_dma(c, 1, TransferReq::OneD {
+            src: addr::cluster_base(c) + 0x10000,
+            dst: addr::cluster_base(peer) + 0x10000,
+            len: 32 * 1024,
+        })));
+    }
+    let ok = ch.run_until(200_000, |ch| {
+        handles.iter().all(|&(c, e, h)| ch.dma_done(c, e, h))
+    });
+    assert!(ok, "bidirectional all-cluster DMA must not deadlock");
+}
+
+#[test]
+fn mixed_core_and_dma_traffic() {
+    let mut cfg = ChipletCfg::small();
+    cfg.core_traffic = RwGenCfg {
+        pattern: AddrPattern::Uniform { base: addr::HBM_BASE, span: 0x10000 },
+        p_read: 1.0,
+        total: Some(30),
+        max_outstanding: 2,
+        verify: true,
+        ..Default::default()
+    };
+    let n = cfg.n_clusters();
+    let mut ch = Chiplet::new(cfg);
+    // DMA streams under the core traffic.
+    let mut handles = Vec::new();
+    for c in 0..n {
+        handles.push((c, ch.submit_dma(c, 0, TransferReq::OneD {
+            src: addr::HBM_BASE + (c as u64) * 0x100000,
+            dst: addr::cluster_base(c) + 0x8000,
+            len: 16 * 1024,
+        })));
+    }
+    let ok = ch.run_until(400_000, |ch| {
+        handles.iter().all(|&(c, h)| ch.dma_done(c, 0, h))
+            && ch.clusters.iter().all(|cl| cl.cores.borrow().done())
+    });
+    assert!(ok, "mixed traffic must complete");
+    for cl in &ch.clusters {
+        assert_eq!(cl.cores.borrow().stats.data_errors, 0, "core data intact under DMA load");
+    }
+}
+
+#[test]
+fn aggregate_bandwidth_exceeds_half_peak() {
+    // The headline-metric measurement at CI scale: >= 50% of the cluster
+    // port peak under neighbour-saturation (the bench reports ~90%).
+    let cfg = ChipletCfg::small();
+    let n = cfg.n_clusters();
+    let mut ch = Chiplet::new(cfg);
+    let window = 3000u64;
+    let block = 16 * 1024u64;
+    for c in 0..n {
+        let peer = c ^ 1;
+        for b in 0..(window * 64 / block + 2) {
+            let off = 0x8000 + (b % 2) * 0x2000;
+            ch.submit_dma(c, 0, TransferReq::OneD {
+                src: addr::cluster_base(peer) + off,
+                dst: addr::cluster_base(c) + off,
+                len: block,
+            });
+            ch.submit_dma(c, 1, TransferReq::OneD {
+                src: addr::cluster_base(c) + off + 0x4000,
+                dst: addr::cluster_base(peer) + off + 0x4000,
+                len: block,
+            });
+        }
+    }
+    ch.run(500);
+    let b0 = ch.total_dma_bytes();
+    ch.run(window);
+    let bw = (ch.total_dma_bytes() - b0) as f64 / window as f64;
+    let peak = n as f64 * 2.0 * 64.0;
+    assert!(
+        bw / peak > 0.5,
+        "aggregate bandwidth {:.0}% of peak, expected > 50%",
+        100.0 * bw / peak
+    );
+}
+
+#[test]
+fn round_trip_latency_reasonable() {
+    let cfg = ChipletCfg::small();
+    let n = cfg.n_clusters();
+    let mut ch = Chiplet::new(cfg);
+    ch.clusters[0].cores.borrow_mut().set_cfg(RwGenCfg {
+        pattern: AddrPattern::Uniform { base: addr::cluster_base(n - 1), span: 0x1000 },
+        p_read: 1.0,
+        total: Some(16),
+        max_outstanding: 1,
+        verify: false,
+        seed: 3,
+        ..Default::default()
+    });
+    let ok = ch.run_until(500_000, |c| c.clusters[0].cores.borrow().done());
+    assert!(ok);
+    let mean = ch.clusters[0].cores.borrow().stats.read_latency.mean();
+    // Paper headline is 24 ns; our per-module register granularity puts the
+    // small instance in the tens of cycles. Guard the order of magnitude.
+    assert!(
+        (10.0..80.0).contains(&mean),
+        "round-trip latency {mean} cycles out of expected range"
+    );
+}
+
+#[test]
+fn error_on_unmapped_address() {
+    let mut ch = Chiplet::new(ChipletCfg::small());
+    // A core read far outside any mapped range must complete (with DECERR)
+    // rather than hang — the error-slave termination property.
+    ch.clusters[0].cores.borrow_mut().set_cfg(RwGenCfg {
+        pattern: AddrPattern::Uniform { base: 0x4000_0000, span: 0x1000 }, // unmapped hole
+        p_read: 1.0,
+        total: Some(4),
+        max_outstanding: 1,
+        verify: false,
+        ..Default::default()
+    });
+    let ok = ch.run_until(200_000, |c| c.clusters[0].cores.borrow().done());
+    assert!(ok, "unmapped reads must terminate with DECERR, not hang");
+}

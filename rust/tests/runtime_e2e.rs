@@ -1,0 +1,73 @@
+//! Integration: the PJRT runtime path — load the AOT artifacts, execute,
+//! verify against golden manifests (requires `make artifacts`; the
+//! Makefile's `test` target guarantees that).
+
+use noc::runtime::Runtime;
+
+fn artifacts_dir() -> Option<String> {
+    for d in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(d).join("conv_small.hlo.txt").exists() {
+            return Some(d.to_string());
+        }
+    }
+    None
+}
+
+#[test]
+fn all_artifacts_execute_and_match_golden() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let mut rt = Runtime::new(&dir).expect("PJRT client");
+    assert_eq!(rt.platform(), "cpu");
+    for name in ["conv_small", "fc_small", "matmul_128"] {
+        rt.load(name).unwrap_or_else(|e| panic!("load {name}: {e:#}"));
+        let r = rt.run_golden(name).unwrap_or_else(|e| panic!("run {name}: {e:#}"));
+        assert!(
+            r.max_rel_err < 1e-4,
+            "{name}: golden mismatch, rel err {:.2e}",
+            r.max_rel_err
+        );
+        assert!(!r.outputs.is_empty());
+        assert!(r.outputs[0].iter().any(|&v| v != 0.0), "{name}: all-zero output");
+    }
+}
+
+#[test]
+fn runtime_rejects_wrong_inputs() {
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    let mut rt = Runtime::new(&dir).expect("client");
+    rt.load("matmul_128").expect("load");
+    // Wrong input count.
+    assert!(rt.run_with("matmul_128", &[vec![0.0; 128 * 128]]).is_err());
+    // Wrong input size.
+    assert!(rt
+        .run_with("matmul_128", &[vec![0.0; 10], vec![0.0; 128 * 128]])
+        .is_err());
+    // Unloaded artifact.
+    assert!(rt.run_golden("nonexistent").is_err());
+}
+
+#[test]
+fn matmul_artifact_computes_real_matmul() {
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    let mut rt = Runtime::new(&dir).expect("client");
+    rt.load("matmul_128").expect("load");
+    // Identity x: out == w.
+    let n = 128;
+    let mut eye = vec![0.0f32; n * n];
+    for i in 0..n {
+        eye[i * n + i] = 1.0;
+    }
+    let w: Vec<f32> = (0..n * n).map(|i| (i % 17) as f32 * 0.25 - 2.0).collect();
+    let r = rt.run_with("matmul_128", &[eye, w.clone()]).expect("run");
+    let out = &r.outputs[0];
+    for (a, b) in out.iter().zip(&w) {
+        assert!((a - b).abs() < 1e-5, "identity matmul mismatch: {a} vs {b}");
+    }
+}
