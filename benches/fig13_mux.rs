@@ -3,7 +3,7 @@
 //! the simulated mux (RR fairness means aggregate ~1 cmd/cycle).
 
 use noc::area::{all_figures, area_timing, Module};
-use noc::bench_harness::{bench, section};
+use noc::bench_harness::{bench, iters, section, Report};
 use noc::protocol::payload::{Bytes, Cmd, RBeat, Resp};
 use noc::protocol::port::{bundle, BundleCfg};
 use noc::sim::Component;
@@ -45,6 +45,9 @@ fn sim_mux_throughput(s: usize, cycles: u64) -> f64 {
 }
 
 fn main() {
+    let mut report = Report::new("fig13_mux");
+    let cycles = iters(20_000, 2_000);
+
     // Paper series (area/timing model, calibrated to GF22FDX endpoints).
     for s in all_figures().iter().filter(|s| s.figure == "Fig 13") {
         println!("{}", s.render());
@@ -53,7 +56,7 @@ fn main() {
 
     section("simulated mux: sustained command throughput (target ~1 cmd/cycle)");
     for s in [2usize, 4, 8, 16, 32] {
-        let tput = sim_mux_throughput(s, 20_000);
+        let tput = sim_mux_throughput(s, cycles);
         let at = area_timing(Module::Mux { s, i: 6 });
         println!(
             "S={s:<3} cmd/cycle={tput:.3}  (model: {:.0} ps, {:.1} kGE, fmax {:.2} GHz)",
@@ -62,13 +65,20 @@ fn main() {
             at.fmax_ghz()
         );
         assert!(tput > 0.9, "mux must sustain ~1 cmd/cycle, got {tput}");
+        report.metric(format!("cmd_per_cycle_s{s}"), tput);
     }
 
     section("simulation speed");
     for s in [4usize, 32] {
-        let t = bench(&format!("mux S={s}, 20k cycles"), 3, Some(20_000), || {
-            sim_mux_throughput(s, 20_000);
-        });
+        let t = report.timing(bench(
+            &format!("mux S={s}, {cycles} cycles"),
+            3,
+            Some(cycles),
+            || {
+                sim_mux_throughput(s, cycles);
+            },
+        ));
         println!("{}", t.row());
     }
+    report.finish();
 }

@@ -4,7 +4,7 @@
 //! rate; the counters only stall target *changes*.
 
 use noc::area::{all_figures, area_timing, Module};
-use noc::bench_harness::section;
+use noc::bench_harness::{iters, section, Report};
 use noc::noc::demux::Demux;
 use noc::protocol::payload::{Bytes, Cmd, RBeat, Resp};
 use noc::protocol::port::{bundle, BundleCfg};
@@ -54,6 +54,8 @@ fn sim_demux_throughput(m: usize, spread_ids: bool, cycles: u64) -> f64 {
 }
 
 fn main() {
+    let mut report = Report::new("fig14_demux");
+    let cycles = iters(20_000, 2_000);
     for s in all_figures().iter().filter(|s| s.figure.starts_with("Fig 14")) {
         println!("{}", s.render());
     }
@@ -61,8 +63,10 @@ fn main() {
 
     section("simulated demux: round-robin targets, spread vs single ID");
     for m in [2usize, 4, 8, 16, 32] {
-        let spread = sim_demux_throughput(m, true, 20_000);
-        let single = sim_demux_throughput(m, false, 20_000);
+        let spread = sim_demux_throughput(m, true, cycles);
+        let single = sim_demux_throughput(m, false, cycles);
+        report.metric(format!("spread_txn_per_cycle_m{m}"), spread);
+        report.metric(format!("single_txn_per_cycle_m{m}"), single);
         let at = area_timing(Module::Demux { m, i: 6 });
         println!(
             "M={m:<3} spread-IDs {spread:.3} txn/cy, single-ID {single:.3} txn/cy  (model {:.0} ps, {:.1} kGE)",
@@ -79,4 +83,5 @@ fn main() {
         let at = area_timing(Module::Demux { m: 4, i });
         println!("  I={i}: {:.1} kGE, {:.0} ps", at.kge, at.cp_ps);
     }
+    report.finish();
 }

@@ -3,7 +3,7 @@
 //! crossbar under uniform random traffic.
 
 use noc::area::{all_figures, area_timing, Module};
-use noc::bench_harness::{bench, section};
+use noc::bench_harness::{bench, iters, section, Report};
 use noc::coordinator::{SimCfg, System};
 
 fn xbar_cfg_toml(masters: usize, total: u64) -> String {
@@ -34,6 +34,8 @@ fn sim_xbar(masters: usize, total: u64) -> (f64, u64) {
 }
 
 fn main() {
+    let mut report = Report::new("fig15_xbar");
+    let total = iters(2000, 300);
     for s in all_figures().iter().filter(|s| s.figure.starts_with("Fig 15")) {
         println!("{}", s.render());
     }
@@ -41,7 +43,9 @@ fn main() {
 
     section("simulated 4xM crossbar under uniform random traffic");
     for m in [2usize, 4, 6, 8] {
-        let (tput, cycles) = sim_xbar(m, 2000);
+        let (tput, cycles) = sim_xbar(m, total);
+        report.metric(format!("txn_per_cycle_m{m}"), tput);
+        report.metric(format!("cycles_m{m}"), cycles as f64);
         let at = area_timing(Module::Xbar { s: 4, m, i: 6 });
         println!(
             "M={m}: {tput:.3} txns/cycle over {cycles} cycles  (model {:.0} ps, {:.0} kGE, {:.2} GHz)",
@@ -53,8 +57,9 @@ fn main() {
     }
 
     section("build+run wall time");
-    let t = bench("4x4 xbar, 8k txns", 3, Some(8000), || {
-        sim_xbar(4, 2000);
-    });
+    let t = report.timing(bench(&format!("4x4 xbar, {} txns", 4 * total), 3, Some(4 * total), || {
+        sim_xbar(4, total);
+    }));
     println!("{}", t.row());
+    report.finish();
 }

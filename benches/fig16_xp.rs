@@ -3,7 +3,7 @@
 //! ports stay isomorphous and traffic completes under load.
 
 use noc::area::{all_figures, area_timing, Module};
-use noc::bench_harness::section;
+use noc::bench_harness::{iters, section, Report};
 use noc::noc::addr_decode::{AddrMap, AddrRule, DefaultPort};
 use noc::noc::crosspoint::{Crosspoint, CrosspointCfg};
 use noc::protocol::payload::{Bytes, Cmd, RBeat, Resp};
@@ -72,6 +72,8 @@ fn sim_crosspoint(ports: usize, total: u64) -> f64 {
 }
 
 fn main() {
+    let mut report = Report::new("fig16_xp");
+    let total = iters(4000, 600);
     for s in all_figures().iter().filter(|s| s.figure.starts_with("Fig 16")) {
         println!("{}", s.render());
     }
@@ -79,11 +81,13 @@ fn main() {
 
     section("simulated NxN crosspoint, uniform random, 16 unique IDs");
     for p in [2usize, 4, 8] {
-        let tput = sim_crosspoint(p, 4000);
+        let tput = sim_crosspoint(p, total);
+        report.metric(format!("txn_per_cycle_p{p}"), tput);
         let at = area_timing(Module::Crosspoint { s: p, m: p, i: 4 });
         println!(
             "{p}x{p}: {tput:.3} txns/cycle  (model {:.0} ps, {:.0} kGE)",
             at.cp_ps, at.kge
         );
     }
+    report.finish();
 }

@@ -5,7 +5,7 @@
 //! concurrency is capped at U·T per direction.
 
 use noc::area::{all_figures, area_timing, Module};
-use noc::bench_harness::section;
+use noc::bench_harness::{iters, section, Report};
 use noc::noc::id_remap::IdRemap;
 use noc::protocol::payload::Cmd;
 use noc::protocol::port::{bundle, BundleCfg};
@@ -13,13 +13,13 @@ use noc::sim::Component;
 
 /// Issue reads (IDs cycling over U distinct values) without responding;
 /// count how many pass through — must equal the U x T concurrency cap.
-fn sim_max_concurrency(u: usize, t: u32) -> u64 {
+fn sim_max_concurrency(u: usize, t: u32, cycles: u64) -> u64 {
     let (up, up_s) = bundle("up", BundleCfg::new(64, 8));
     let (down_m, down_s) = bundle("down", BundleCfg::new(64, 8));
     let mut rm = IdRemap::new("rm", up_s, down_m, u, t);
     let mut passed = 0u64;
     let mut i = 0u64;
-    for cy in 1..4000u64 {
+    for cy in 1..cycles {
         up.set_now(cy);
         if up.ar.can_push() {
             let mut c = Cmd::new((i % u as u64) as u32, 0, 0, 3);
@@ -38,6 +38,8 @@ fn sim_max_concurrency(u: usize, t: u32) -> u64 {
 }
 
 fn main() {
+    let mut report = Report::new("fig17_remap");
+    let cycles = iters(4000, 1500);
     for s in all_figures().iter().filter(|s| s.figure.starts_with("Fig 17")) {
         println!("{}", s.render());
     }
@@ -55,10 +57,12 @@ fn main() {
 
     section("simulated concurrency cap (reads unanswered; U distinct IDs offered)");
     for (u, t) in [(1usize, 8u32), (4, 8), (16, 8), (16, 32), (64, 8)] {
-        let passed = sim_max_concurrency(u, t);
+        let passed = sim_max_concurrency(u, t, cycles);
         let cap = (u as u64) * (t as u64);
+        report.metric(format!("forwarded_u{u}_t{t}"), passed as f64);
         println!("U={u:<3} T={t:<3} forwarded {passed:>4} (cap {cap})");
         assert!(passed <= cap, "remapper must cap concurrency at U*T");
         assert_eq!(passed, cap, "should reach the cap under pressure");
     }
+    report.finish();
 }

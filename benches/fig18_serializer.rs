@@ -4,7 +4,7 @@
 //! preserves per-f(ID) ordering while different FIFOs stay concurrent.
 
 use noc::area::{all_figures, area_timing, Module};
-use noc::bench_harness::section;
+use noc::bench_harness::{iters, section, Report};
 use noc::noc::id_serialize::IdSerialize;
 use noc::protocol::payload::{Bytes, Cmd, RBeat, Resp};
 use noc::protocol::port::{bundle, BundleCfg};
@@ -43,6 +43,8 @@ fn sim_serializer(u_m: usize, t: usize, n: u64) -> f64 {
 }
 
 fn main() {
+    let mut report = Report::new("fig18_serializer");
+    let total = iters(2000, 400);
     for s in all_figures().iter().filter(|s| s.figure.starts_with("Fig 18")) {
         println!("{}", s.render());
     }
@@ -60,8 +62,10 @@ fn main() {
 
     section("simulated serializer throughput (64 input IDs folded to U_M)");
     for (um, t) in [(1usize, 8usize), (4, 8), (16, 8), (32, 8), (4, 32)] {
-        let tput = sim_serializer(um, t, 2000);
+        let tput = sim_serializer(um, t, total);
+        report.metric(format!("txn_per_cycle_um{um}_t{t}"), tput);
         println!("U_M={um:<3} T={t:<3} {tput:.3} txns/cycle");
         assert!(tput > 0.4, "serializer throughput too low");
     }
+    report.finish();
 }

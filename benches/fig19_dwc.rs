@@ -4,7 +4,7 @@
 //! same bytes in proportionally fewer beats.
 
 use noc::area::{all_figures, area_timing, Module};
-use noc::bench_harness::section;
+use noc::bench_harness::{iters, section, Report};
 use noc::noc::upsizer::Upsizer;
 use noc::protocol::payload::{Bytes, Cmd, RBeat, Resp};
 use noc::protocol::port::{bundle, BundleCfg};
@@ -63,6 +63,8 @@ fn sim_upsize_ratio(dw: usize, n_txns: u64) -> (u64, u64) {
 }
 
 fn main() {
+    let mut report = Report::new("fig19_dwc");
+    let n_txns = iters(500, 100);
     for s in all_figures().iter().filter(|s| s.figure.starts_with("Fig 19")) {
         println!("{}", s.render());
     }
@@ -70,7 +72,9 @@ fn main() {
 
     section("simulated upsizer burst reshaping (narrow beats : wide beats)");
     for dw in [128usize, 256, 512] {
-        let (narrow, wide) = sim_upsize_ratio(dw, 500);
+        let (narrow, wide) = sim_upsize_ratio(dw, n_txns);
+        report.metric(format!("narrow_beats_dw{dw}"), narrow as f64);
+        report.metric(format!("wide_beats_dw{dw}"), wide as f64);
         let ratio = narrow as f64 / wide as f64;
         let at = area_timing(Module::Upsizer { dn: 64, dw, r: 2 });
         println!(
@@ -87,4 +91,5 @@ fn main() {
         let at = area_timing(Module::Upsizer { dn: 64, dw: 128, r });
         println!("  R={r}: {:.0} ps, {:.1} kGE", at.cp_ps, at.kge);
     }
+    report.finish();
 }

@@ -3,7 +3,7 @@
 //! per width and the simplex controller's one-op-per-cycle ceiling.
 
 use noc::area::{all_figures, area_timing, Module};
-use noc::bench_harness::section;
+use noc::bench_harness::{iters, section, Report};
 use noc::noc::dma::{Dma, TransferReq};
 use noc::noc::mem_duplex::{BankArray, MemDuplex};
 use noc::protocol::port::{bundle, BundleCfg};
@@ -27,14 +27,17 @@ fn sim_dma_copy(data_bits: usize, len: u64) -> f64 {
 }
 
 fn main() {
+    let mut report = Report::new("fig20_dma_mem");
+    let len = iters(256 * 1024, 64 * 1024);
     for s in all_figures().iter().filter(|s| s.figure.starts_with("Fig 20")) {
         println!("{}", s.render());
     }
     println!("paper: DMA 290->400 ps / 25->141 kGE; simplex ~290 ps / 13->53 kGE\n");
 
-    section("simulated DMA copy throughput vs data width (256 KiB copy)");
+    section("simulated DMA copy throughput vs data width");
     for bits in [64usize, 128, 256, 512, 1024] {
-        let bpc = sim_dma_copy(bits, 256 * 1024);
+        let bpc = sim_dma_copy(bits, len);
+        report.metric(format!("bytes_per_cycle_d{bits}"), bpc);
         let at = area_timing(Module::Dma { d: bits });
         let peak = (bits / 8) as f64;
         println!(
@@ -51,4 +54,5 @@ fn main() {
         let at = area_timing(Module::MemSimplex { d });
         println!("  D={d}: {:.0} ps, {:.1} kGE", at.cp_ps, at.kge);
     }
+    report.finish();
 }

@@ -4,7 +4,7 @@
 //! conflict sweep the §2.7.2 discussion predicts.
 
 use noc::area::{all_figures, area_timing, Module};
-use noc::bench_harness::section;
+use noc::bench_harness::{iters, section, Report};
 use noc::noc::mem_duplex::{BankArray, MemDuplex};
 use noc::protocol::payload::{Bytes, Cmd, WBeat};
 use noc::protocol::port::{bundle, BundleCfg};
@@ -49,6 +49,8 @@ fn sim_duplex(banks: usize, cycles: u64) -> (u64, u64) {
 }
 
 fn main() {
+    let mut report = Report::new("fig21_duplex");
+    let cycles = iters(20_000, 4_000);
     for s in all_figures().iter().filter(|s| s.figure.starts_with("Fig 21")) {
         println!("{}", s.render());
     }
@@ -57,11 +59,13 @@ fn main() {
     section("simulated duplex: banking factor vs read throughput + conflicts");
     let mut last_conflicts = u64::MAX;
     for b in [2usize, 4, 8] {
-        let (beats, conflicts) = sim_duplex(b, 20_000);
+        let (beats, conflicts) = sim_duplex(b, cycles);
         let at = area_timing(Module::MemDuplex { d: 64, b });
+        report.metric(format!("r_beats_per_cycle_b{b}"), beats as f64 / cycles as f64);
+        report.metric(format!("conflicts_b{b}"), conflicts as f64);
         println!(
             "B={b}: {:.3} R beats/cycle, {conflicts} conflicts  (model {:.0} ps, {:.1} kGE)",
-            beats as f64 / 20_000.0,
+            beats as f64 / cycles as f64,
             at.cp_ps,
             at.kge
         );
@@ -72,4 +76,5 @@ fn main() {
         last_conflicts = conflicts;
     }
     println!("\n(§2.7.2: increasing the banking factor reduces the conflict rate at the cost of more, shallower SRAM macros)");
+    report.finish();
 }

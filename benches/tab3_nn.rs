@@ -2,7 +2,7 @@
 //! at paper scale plus the simulated scaled-down rows (16-cluster chiplet,
 //! CONV_SMALL workload), reporting the same columns the paper does.
 
-use noc::bench_harness::section;
+use noc::bench_harness::{iters, quick, section, Report};
 use noc::manticore::chiplet::{Chiplet, ChipletCfg};
 use noc::manticore::perf::{render_table3, table3, Machine};
 use noc::manticore::workload::{
@@ -11,6 +11,8 @@ use noc::manticore::workload::{
 };
 
 fn main() {
+    let mut report = Report::new("tab3_nn");
+    let budget = iters(50_000_000, 5_000_000);
     // Analytical table at paper scale.
     let rows = table3(&Machine::manticore(), CONV_PAPER, 8, 32);
     println!("{}", render_table3(&rows));
@@ -20,8 +22,14 @@ fn main() {
     );
 
     // Simulated scaled-down measurement.
-    section("simulated (16 clusters, scaled conv 16x16x32 K=32)");
-    let cfg = ChipletCfg { fanout: vec![4, 4], ..ChipletCfg::full() };
+    section("simulated (scaled-down chiplet + conv layer)");
+    let fanout = if quick() { vec![2, 2] } else { vec![4, 4] };
+    let conv = if quick() {
+        noc::manticore::workload::ConvCfg { wi: 8, di: 16, k: 16, f: 3, p: 1, s: 1 }
+    } else {
+        CONV_SMALL
+    };
+    let cfg = ChipletCfg { fanout, ..ChipletCfg::full() };
     let n = cfg.n_clusters();
     let compute_bound = n as f64 * CLUSTER_FLOPS_PER_CYCLE;
     for (label, variant, stack) in [
@@ -30,9 +38,10 @@ fn main() {
         ("conv pipe'd", ConvVariant::Pipelined, 8),
     ] {
         let mut ch = Chiplet::new(cfg.clone());
-        let res = run_scripts(&mut ch, conv_scripts(CONV_SMALL, variant, n, stack), 50_000_000);
+        let res = run_scripts(&mut ch, conv_scripts(conv, variant, n, stack), budget);
         assert!(res.finished);
-        let gflops = CONV_SMALL.flops() as f64 / res.cycles as f64;
+        let gflops = conv.flops() as f64 / res.cycles as f64;
+        report.metric(format!("{}_gflops", label.replace([' ', '\''], "_")), gflops);
         println!(
             "{label:<14} HBM {:>6.1} GB/s   perf {:>6.1} Gdpflop/s ({:>3.0}% of compute bound)",
             res.gbps(res.hbm_bytes),
@@ -42,9 +51,11 @@ fn main() {
     }
     {
         let mut ch = Chiplet::new(cfg);
-        let res = run_scripts(&mut ch, fc_scripts(8, 16, 32, 32, n), 50_000_000);
+        let res = run_scripts(&mut ch, fc_scripts(8, 16, 32, 32, n), budget);
         assert!(res.finished);
+        report.metric("fc_hbm_gbps", res.gbps(res.hbm_bytes));
         println!("{:<14} HBM {:>6.1} GB/s", "fully conn.", res.gbps(res.hbm_bytes));
     }
     println!("\nshape check: baseline is HBM-bound; stacked/pipelined approach the compute bound;\npipelined slashes HBM traffic at equal performance — as in Table 3.");
+    report.finish();
 }

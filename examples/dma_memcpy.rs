@@ -11,7 +11,7 @@ use noc::noc::mem_duplex::{BankArray, MemDuplex};
 use noc::protocol::{bundle, BundleCfg};
 use noc::sim::Component;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> noc::errors::Result<()> {
     // A 512-bit DMA engine driving a duplex memory controller with 8
     // address-interleaved banks (the cluster-to-memory hot path).
     let cfg = BundleCfg::new(512, 4);
@@ -35,13 +35,13 @@ fn main() -> anyhow::Result<()> {
         cy += 1;
         dma.tick(cy);
         mem.tick(cy);
-        anyhow::ensure!(cy < 10_000_000, "copy did not complete");
+        noc::ensure!(cy < 10_000_000, "copy did not complete");
     }
     let wall = t0.elapsed();
 
     // Verify byte-exactness.
     let got = mem.banks.borrow().peek_vec(dst, len);
-    anyhow::ensure!(got == data, "data mismatch after copy");
+    noc::ensure!(got == data, "data mismatch after copy");
 
     let bpc = len as f64 / cy as f64;
     println!("dma_memcpy: copied {len} B in {cy} cycles");
@@ -69,11 +69,11 @@ fn main() -> anyhow::Result<()> {
         cy += 1;
         dma.tick(cy);
         mem.tick(cy);
-        anyhow::ensure!(cy < 20_000_000, "2D transfer did not complete");
+        noc::ensure!(cy < 20_000_000, "2D transfer did not complete");
     }
     for r in 0..rows {
         let expect: Vec<u8> = (0..row).map(|i| ((r * 7 + i) % 253) as u8).collect();
-        anyhow::ensure!(
+        noc::ensure!(
             mem.banks.borrow().peek_vec(0x70_0000 + r * row, row as usize) == expect,
             "2D row {r} mismatch"
         );

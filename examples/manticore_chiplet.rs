@@ -35,7 +35,7 @@ fn cfg_from_args() -> ChipletCfg {
     }
 }
 
-fn aggregate_bandwidth(cfg: ChipletCfg) -> anyhow::Result<()> {
+fn aggregate_bandwidth(cfg: ChipletCfg) -> noc::errors::Result<()> {
     let n = cfg.n_clusters();
     let mut ch = Chiplet::new(cfg);
     let window = 4000u64;
@@ -70,7 +70,7 @@ fn aggregate_bandwidth(cfg: ChipletCfg) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn round_trip_latency(cfg: ChipletCfg) -> anyhow::Result<()> {
+fn round_trip_latency(cfg: ChipletCfg) -> noc::errors::Result<()> {
     let n = cfg.n_clusters();
     let mut ch = Chiplet::new(cfg);
     ch.clusters[0].cores.borrow_mut().set_cfg(RwGenCfg {
@@ -83,7 +83,7 @@ fn round_trip_latency(cfg: ChipletCfg) -> anyhow::Result<()> {
         ..Default::default()
     });
     let ok = ch.run_until(2_000_000, |c| c.clusters[0].cores.borrow().done());
-    anyhow::ensure!(ok, "latency probe did not complete");
+    noc::ensure!(ok, "latency probe did not complete");
     let s = ch.clusters[0].cores.borrow().stats.clone();
     println!("[2] core-to-core round trip (cluster 0 -> cluster {}, idle network):", n - 1);
     println!(
@@ -96,7 +96,7 @@ fn round_trip_latency(cfg: ChipletCfg) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn hbm_streaming(cfg: ChipletCfg) -> anyhow::Result<()> {
+fn hbm_streaming(cfg: ChipletCfg) -> noc::errors::Result<()> {
     let n = cfg.n_clusters();
     let mut ch = Chiplet::new(cfg);
     // One streaming DMA per quarter of the machine, each on its own HBM
@@ -127,7 +127,7 @@ fn hbm_streaming(cfg: ChipletCfg) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> noc::errors::Result<()> {
     let cfg = cfg_from_args();
     println!(
         "Manticore chiplet: {} clusters ({} cores), fanout {:?}\n",

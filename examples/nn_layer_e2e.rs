@@ -23,7 +23,7 @@ use noc::manticore::workload::{
 };
 use noc::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> noc::errors::Result<()> {
     // ---- Phase 1: compute artifacts through PJRT ----
     println!("== phase 1: AOT compute graphs on the PJRT CPU client ==");
     let mut rt = Runtime::new("artifacts")?;
@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
             r.max_rel_err,
             if r.max_rel_err < 1e-4 { "OK" } else { "MISMATCH" }
         );
-        anyhow::ensure!(r.max_rel_err < 1e-4, "{name}: golden mismatch");
+        noc::ensure!(r.max_rel_err < 1e-4, "{name}: golden mismatch");
     }
 
     // ---- Phase 2: the same layers' DMA traffic on the chiplet ----
@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         let mut ch = Chiplet::new(cfg.clone());
         let scripts = conv_scripts(CONV_SMALL, variant, n, stack);
         let res = run_scripts(&mut ch, scripts, 50_000_000);
-        anyhow::ensure!(res.finished, "{label} did not finish");
+        noc::ensure!(res.finished, "{label} did not finish");
         let flops = CONV_SMALL.flops() as f64;
         let gflops = flops / res.cycles as f64; // Gflop/s at 1 GHz
         let compute_bound_gflops = n as f64 * CLUSTER_FLOPS_PER_CYCLE;
@@ -73,7 +73,7 @@ fn main() -> anyhow::Result<()> {
         let mut ch = Chiplet::new(cfg.clone());
         let scripts = fc_scripts(8, 16, 32, 32, n);
         let res = run_scripts(&mut ch, scripts, 50_000_000);
-        anyhow::ensure!(res.finished, "fc did not finish");
+        noc::ensure!(res.finished, "fc did not finish");
         println!(
             "  {:<16} {:>9} cycles  HBM {:>6.1} GB/s",
             "fully connected",

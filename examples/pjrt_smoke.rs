@@ -1,11 +1,11 @@
-fn main() -> anyhow::Result<()> {
+fn main() -> noc::errors::Result<()> {
     let mut rt = noc::runtime::Runtime::new("artifacts")?;
     println!("platform: {}", rt.platform());
     for n in ["matmul_128", "fc_small", "conv_small"] {
         rt.load(n)?;
         let r = rt.run_golden(n)?;
         println!("{n}: outputs={} max_rel_err={:.2e}", r.outputs.len(), r.max_rel_err);
-        anyhow::ensure!(r.max_rel_err < 1e-4, "golden mismatch");
+        noc::ensure!(r.max_rel_err < 1e-4, "golden mismatch");
     }
     println!("PJRT smoke OK");
     Ok(())

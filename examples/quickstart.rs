@@ -45,15 +45,15 @@ base = 0x1_0000
 size = 0x1_0000
 "#;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> noc::errors::Result<()> {
     println!("building a 2x2 crossbar system from the config:\n{CONFIG}");
     let cfg = SimCfg::from_str_toml(CONFIG)?;
     let mut sys = System::build(&cfg)?;
     let finished = sys.run(cfg.cycles);
     println!("{}", run_summary(&sys));
-    anyhow::ensure!(finished, "traffic did not complete");
+    noc::ensure!(finished, "traffic did not complete");
     let violations = sys.check_protocol();
-    anyhow::ensure!(violations.is_empty(), "protocol violations: {violations:#?}");
+    noc::ensure!(violations.is_empty(), "protocol violations: {violations:#?}");
     println!("quickstart OK: all transactions completed, protocol clean");
     Ok(())
 }

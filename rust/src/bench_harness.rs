@@ -1,8 +1,28 @@
 //! Measurement harness for `benches/*.rs` (criterion is unavailable
-//! offline). Provides wall-clock timing with warmup + repetitions and
-//! tabular reporting, plus helpers shared by the figure/table benches.
+//! offline). Provides wall-clock timing with warmup + repetitions,
+//! tabular reporting, a CI smoke mode (`NOC_BENCH_QUICK=1`) that shrinks
+//! iteration counts, and machine-readable `BENCH_<name>.json` result
+//! files so CI can archive and track the perf trajectory.
 
+use std::path::PathBuf;
 use std::time::Instant;
+
+use crate::coordinator::report::Json;
+
+/// True when `NOC_BENCH_QUICK=1`: benches shrink their iteration counts so
+/// the whole suite finishes in well under a minute (the CI smoke job).
+pub fn quick() -> bool {
+    std::env::var("NOC_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Pick `full` normally, `quick_n` in smoke mode.
+pub fn iters(full: u64, quick_n: u64) -> u64 {
+    if quick() {
+        quick_n
+    } else {
+        full
+    }
+}
 
 /// Timing summary over repetitions.
 #[derive(Debug, Clone)]
@@ -58,12 +78,78 @@ impl Timing {
             self.min_s * 1e3
         )
     }
+
+    fn to_json(&self) -> Json {
+        let mut obj = vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("reps".into(), Json::Num(self.reps as f64)),
+            ("mean_s".into(), Json::Num(self.mean_s)),
+            ("min_s".into(), Json::Num(self.min_s)),
+            ("max_s".into(), Json::Num(self.max_s)),
+        ];
+        if let Some(t) = self.throughput {
+            obj.push(("throughput_per_s".into(), Json::Num(t)));
+        }
+        Json::Obj(obj)
+    }
 }
 
 /// Print a bench section header.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
     println!("{:<40} {:>13} {:>13} {:>12}", "case", "mean", "min", "throughput");
+}
+
+/// Machine-readable result accumulator for one bench binary. `finish`
+/// writes `BENCH_<name>.json` (to `$NOC_BENCH_DIR` or the working
+/// directory) so CI can archive the numbers and track them over time.
+pub struct Report {
+    name: String,
+    metrics: Vec<(String, f64)>,
+    timings: Vec<Timing>,
+}
+
+impl Report {
+    pub fn new(name: impl Into<String>) -> Self {
+        Report { name: name.into(), metrics: Vec::new(), timings: Vec::new() }
+    }
+
+    /// Record a scalar result (throughput, ratio, cycle count, ...).
+    pub fn metric(&mut self, key: impl Into<String>, value: f64) {
+        self.metrics.push((key.into(), value));
+    }
+
+    /// Record a wall-clock timing (and return it for printing).
+    pub fn timing(&mut self, t: Timing) -> Timing {
+        self.timings.push(t.clone());
+        t
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("bench".into(), Json::Str(self.name.clone())),
+            ("quick".into(), Json::Bool(quick())),
+            (
+                "metrics".into(),
+                Json::Obj(self.metrics.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect()),
+            ),
+            ("timings".into(), Json::Arr(self.timings.iter().map(|t| t.to_json()).collect())),
+        ])
+    }
+
+    pub fn path(&self) -> PathBuf {
+        let dir = std::env::var("NOC_BENCH_DIR").unwrap_or_else(|_| ".".into());
+        PathBuf::from(dir).join(format!("BENCH_{}.json", self.name))
+    }
+
+    /// Write the JSON file; prints where it went (or why it could not).
+    pub fn finish(&self) {
+        let path = self.path();
+        match std::fs::write(&path, self.to_json().render() + "\n") {
+            Ok(()) => println!("\nwrote {}", path.display()),
+            Err(e) => eprintln!("\nwarning: could not write {}: {e}", path.display()),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -83,5 +169,34 @@ mod tests {
         assert!(t.mean_s >= 0.0 && t.min_s <= t.mean_s && t.mean_s <= t.max_s);
         assert!(t.throughput.unwrap() > 0.0);
         assert!(t.row().contains("spin"));
+    }
+
+    #[test]
+    fn report_renders_json() {
+        let mut r = Report::new("unit_test");
+        r.metric("cycles_per_sec", 1.5e6);
+        r.timing(Timing {
+            name: "case".into(),
+            reps: 1,
+            mean_s: 0.5,
+            min_s: 0.5,
+            max_s: 0.5,
+            throughput: Some(2.0),
+        });
+        let j = r.to_json().render();
+        assert!(j.contains("\"bench\":\"unit_test\""), "{j}");
+        assert!(j.contains("\"cycles_per_sec\":1500000"), "{j}");
+        assert!(j.contains("\"throughput_per_s\":2"), "{j}");
+        assert!(r.path().to_string_lossy().contains("BENCH_unit_test.json"));
+    }
+
+    #[test]
+    fn iters_scales_in_quick_mode_only() {
+        // Not set in the test environment: full count wins.
+        if !quick() {
+            assert_eq!(iters(1000, 10), 1000);
+        } else {
+            assert_eq!(iters(1000, 10), 10);
+        }
     }
 }

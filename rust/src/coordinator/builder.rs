@@ -5,7 +5,8 @@
 use std::cell::RefCell;
 use std::rc::Rc;
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::errors::Result;
 
 use crate::coordinator::config::{SimCfg, SlaveKind};
 use crate::noc::addr_decode::{AddrMap, AddrRule, DefaultPort};

@@ -8,7 +8,8 @@
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::errors::{Context, Result};
 
 /// A parsed value.
 #[derive(Debug, Clone, PartialEq)]
@@ -123,7 +124,7 @@ pub fn parse(text: &str) -> Result<Doc> {
         if line.is_empty() {
             continue;
         }
-        let err = |m: &str| anyhow::anyhow!("line {}: {m}: {raw}", ln + 1);
+        let err = |m: &str| crate::anyhow!("line {}: {m}: {raw}", ln + 1);
         if let Some(name) = line.strip_prefix("[[").and_then(|l| l.strip_suffix("]]")) {
             let name = name.trim().to_string();
             doc.arrays.entry(name.clone()).or_default().push(Table::new());

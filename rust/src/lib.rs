@@ -7,7 +7,9 @@
 //! * [`protocol`] — the AXI5-subset protocol substrate: channels with
 //!   valid/ready flow control (F1/F2), bundles, ordering rules (O1–O3),
 //!   and a compliance monitor.
-//! * [`sim`] — deterministic cycle-stepped engine with multiple clock
+//! * [`sim`] — deterministic activity-tracked event engine (binary-heap
+//!   edge calendar, component arena with stable [`sim::ComponentId`]
+//!   handles, sleep/wake driven by channel traffic) with multiple clock
 //!   domains, statistics, and a property-testing framework.
 //! * [`noc`] — the paper's §2 module palette: network (de)multiplexers,
 //!   crossbar, crosspoint, ID width converters, data width converters,
@@ -26,6 +28,7 @@
 pub mod area;
 pub mod bench_harness;
 pub mod coordinator;
+pub mod errors;
 pub mod manticore;
 pub mod noc;
 pub mod protocol;

@@ -11,7 +11,8 @@
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Context, Result};
+use noc::errors::{Context, Result};
+use noc::{bail, ensure};
 
 use noc::manticore::chiplet::{Chiplet, ChipletCfg};
 use noc::manticore::perf::{render_table2, render_table3, table3, Machine};
@@ -181,7 +182,7 @@ fn manticore_latency(cfg: ChipletCfg) -> Result<()> {
         ..Default::default()
     });
     let ok = ch.run_until(1_000_000, |c| c.clusters[0].cores.borrow().done());
-    anyhow::ensure!(ok, "latency probe did not finish");
+    ensure!(ok, "latency probe did not finish");
     let stats = ch.clusters[0].cores.borrow().stats.clone();
     println!("round-trip latency cluster 0 -> cluster {} (core network):", n - 1);
     println!(
@@ -243,7 +244,7 @@ fn cmd_e2e(flags: &HashMap<String, String>) -> Result<()> {
             r.max_rel_err,
             if r.max_rel_err < 1e-4 { "OK" } else { "MISMATCH" }
         );
-        anyhow::ensure!(r.max_rel_err < 1e-4, "{name} numerics mismatch");
+        ensure!(r.max_rel_err < 1e-4, "{name} numerics mismatch");
     }
     println!("compute artifacts verified; run examples/nn_layer_e2e for the co-simulation");
     Ok(())

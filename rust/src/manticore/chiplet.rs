@@ -4,6 +4,15 @@
 //! separate networks (512-bit DMA tree, 64-bit core tree) built from the
 //! §2 platform modules.
 //!
+//! The chiplet runs on the activity-tracked engine (`sim::engine`): every
+//! cluster-internal module, tree crosspoint, and endpoint registers
+//! individually in the engine arena, so idle parts of the fabric are
+//! skipped entirely. External pokes keep working through shared handles
+//! (`ClusterHandle`): `Dma::submit` and `RwGen::set_cfg` wake their
+//! engine components themselves. `ChipletCfg::full_scan` disables the
+//! sleep/wake optimization for A/B measurements and determinism checks
+//! (`benches/tab2_manticore.rs`, `rust/tests/engine_semantics.rs`).
+//!
 //! Scaling: the `fanout` vector controls the instance size. The paper
 //! configuration is `[4, 4, 4, 2]` (128 clusters); tests use smaller
 //! instances of the *same* code path (e.g. `[2, 2]` = 4 clusters).
@@ -11,14 +20,14 @@
 use std::cell::RefCell;
 use std::rc::Rc;
 
-use crate::manticore::cluster::{addr, core_net_cfg, dma_net_cfg, Cluster};
-use crate::manticore::network::{build_tree, NodeIo, Tree, TreeCfg};
+use crate::manticore::cluster::{addr, core_net_cfg, dma_net_cfg, Cluster, ClusterHandle};
+use crate::manticore::network::{build_tree, NodeIo, TreeCfg, UplinkTap};
 use crate::noc::addr_decode::{AddrMap, AddrRule, DefaultPort};
 use crate::noc::crosspoint::{Crosspoint, CrosspointCfg};
 use crate::noc::dma::TransferReq;
 use crate::noc::upsizer::Upsizer;
 use crate::protocol::{bundle, BundleCfg, MasterEnd};
-use crate::sim::{shared, Component, Cycle};
+use crate::sim::{shared, Component, Cycle, DomainId, Engine};
 use crate::traffic::gen::RwGenCfg;
 use crate::traffic::perfect_slave::PerfectSlave;
 
@@ -35,6 +44,10 @@ pub struct ChipletCfg {
     pub hbm_latency: Cycle,
     /// Crosspoint input queue depth.
     pub input_queue: Option<usize>,
+    /// Disable the engine's sleep/wake tracking: tick every component on
+    /// every cycle (the pre-refactor behaviour). Used for A/B perf and
+    /// determinism measurements; results must be bit-identical.
+    pub full_scan: bool,
 }
 
 impl ChipletCfg {
@@ -46,6 +59,7 @@ impl ChipletCfg {
             txns_per_id: 8,
             hbm_latency: 50,
             input_queue: Some(4),
+            full_scan: false,
         }
     }
 
@@ -61,14 +75,14 @@ impl ChipletCfg {
 
 pub struct Chiplet {
     pub cfg: ChipletCfg,
-    pub clusters: Vec<Cluster>,
-    dma_tree: Tree,
-    core_tree: Tree,
-    top: Crosspoint,
-    core_upsizer: Upsizer,
+    pub clusters: Vec<ClusterHandle>,
+    engine: Engine,
+    domain: DomainId,
+    /// Per level (bottom-up), per node: DMA-tree uplink bandwidth taps.
+    dma_taps: Vec<Vec<UplinkTap>>,
+    core_taps: Vec<Vec<UplinkTap>>,
     pub hbm: Vec<Rc<RefCell<PerfectSlave>>>,
     pub io: Rc<RefCell<PerfectSlave>>,
-    io_components: Vec<Box<dyn Component>>,
     /// External master into the chiplet (PCIe/D2D side), for tests.
     pub io_in: MasterEnd,
     pub cycles: Cycle,
@@ -80,7 +94,14 @@ impl Chiplet {
         let dcfg = dma_net_cfg();
         let ccfg = core_net_cfg();
 
+        let (mut engine, domain) = Engine::single_clock();
+        if cfg.full_scan {
+            engine.set_sleep(false);
+        }
+
         // --- Clusters + tree leaves ---
+        // Registration order mirrors the old monolithic tick order:
+        // cluster internals first, then tree nodes, then the top level.
         let mut clusters = Vec::with_capacity(n);
         let mut dma_leaves = Vec::with_capacity(n);
         let mut core_leaves = Vec::with_capacity(n);
@@ -99,7 +120,11 @@ impl Chiplet {
                 up_in: cl.core_l1_in.take().unwrap(),
                 range,
             });
-            clusters.push(cl);
+            let (handle, comps) = cl.split();
+            for c in comps {
+                engine.add_boxed(domain, c);
+            }
+            clusters.push(handle);
         }
 
         // --- The two trees ---
@@ -151,6 +176,14 @@ impl Chiplet {
             core_tree.nodes.append(&mut t2.nodes);
             t2.roots.pop().unwrap()
         };
+        let dma_taps = std::mem::take(&mut dma_tree.level_taps);
+        let core_taps = std::mem::take(&mut core_tree.level_taps);
+        for node in dma_tree.nodes.drain(..) {
+            engine.add(domain, node);
+        }
+        for node in core_tree.nodes.drain(..) {
+            engine.add(domain, node);
+        }
 
         // --- Top level ---
         let cluster_span = addr::cluster_base(n);
@@ -224,23 +257,27 @@ impl Chiplet {
                 max_txns_per_id: cfg.txns_per_id,
             },
         );
+        engine.add(domain, core_upsizer);
+        engine.add(domain, top);
+        for c in io_components {
+            engine.add_boxed(domain, c);
+        }
 
         Chiplet {
             cfg,
             clusters,
-            dma_tree,
-            core_tree,
-            top,
-            core_upsizer,
+            engine,
+            domain,
+            dma_taps,
+            core_taps,
             hbm,
             io,
-            io_components,
             io_in: io_in_m,
             cycles: 0,
         }
     }
 
-    /// Submit a DMA transfer on a cluster engine.
+    /// Submit a DMA transfer on a cluster engine (wakes it if asleep).
     pub fn submit_dma(&self, cluster: usize, engine: usize, req: TransferReq) -> u64 {
         self.clusters[cluster].dma[engine].borrow_mut().submit(req)
     }
@@ -258,8 +295,7 @@ impl Chiplet {
     /// L1-quadrant uplinks first). Both directions, W + R channels.
     pub fn dma_level_bytes(&self) -> Vec<u64> {
         let bb = dma_net_cfg().beat_bytes() as u64;
-        self.dma_tree
-            .level_taps
+        self.dma_taps
             .iter()
             .map(|taps| taps.iter().map(|t| t.data_beats()).sum::<u64>() * bb)
             .collect()
@@ -268,8 +304,7 @@ impl Chiplet {
     /// Same for the core network (64-bit beats).
     pub fn core_level_bytes(&self) -> Vec<u64> {
         let bb = core_net_cfg().beat_bytes() as u64;
-        self.core_tree
-            .level_taps
+        self.core_taps
             .iter()
             .map(|taps| taps.iter().map(|t| t.data_beats()).sum::<u64>() * bb)
             .collect()
@@ -286,10 +321,23 @@ impl Chiplet {
             .sum()
     }
 
+    /// Components currently awake in the engine (observability/benches).
+    pub fn awake_components(&self) -> usize {
+        self.engine.awake_components(self.domain)
+    }
+
+    /// Total registered components.
+    pub fn component_count(&self) -> usize {
+        self.engine.component_count()
+    }
+
     pub fn step(&mut self) {
         self.cycles += 1;
-        let cy = self.cycles;
-        self.tick(cy);
+        // Keep the external IO bundle's clock fresh so out-of-engine
+        // masters can push commands with current timestamps.
+        self.io_in.set_now(self.cycles);
+        self.engine.step();
+        debug_assert_eq!(self.engine.cycles(self.domain), self.cycles);
     }
 
     pub fn run(&mut self, cycles: Cycle) {
@@ -306,30 +354,6 @@ impl Chiplet {
             }
         }
         false
-    }
-}
-
-impl Component for Chiplet {
-    fn name(&self) -> &str {
-        "chiplet"
-    }
-
-    fn tick(&mut self, cy: Cycle) {
-        self.io_in.set_now(cy);
-        for c in &mut self.clusters {
-            c.tick(cy);
-        }
-        for n in &mut self.dma_tree.nodes {
-            n.tick(cy);
-        }
-        for n in &mut self.core_tree.nodes {
-            n.tick(cy);
-        }
-        self.core_upsizer.tick(cy);
-        self.top.tick(cy);
-        for c in &mut self.io_components {
-            c.tick(cy);
-        }
     }
 }
 
@@ -447,5 +471,37 @@ mod tests {
         }
         let r = got.expect("IO read must complete");
         assert_eq!(&r.data.as_slice()[..8], &[0x42; 8]);
+    }
+
+    #[test]
+    fn idle_chiplet_sleeps_almost_everything() {
+        // With no traffic, nearly the whole fabric must go to sleep.
+        let mut ch = Chiplet::new(ChipletCfg::small());
+        ch.run(100);
+        let awake = ch.awake_components();
+        let total = ch.component_count();
+        assert!(
+            awake * 10 <= total,
+            "idle fabric should sleep: {awake}/{total} components awake"
+        );
+    }
+
+    #[test]
+    fn full_scan_mode_matches_sleep_mode() {
+        // The determinism oracle at unit scale: the same DMA produces the
+        // same completion cycle and byte counters in both engine modes.
+        let run = |full_scan: bool| {
+            let mut cfg = ChipletCfg::small();
+            cfg.full_scan = full_scan;
+            let mut ch = Chiplet::new(cfg);
+            let src = addr::cluster_base(3) + 0x2000;
+            let dst = addr::cluster_base(0) + 0x4000;
+            ch.clusters[3].l1.borrow().banks.borrow_mut().poke(src, &[0xA5; 512]);
+            let h = ch.submit_dma(0, 0, TransferReq::OneD { src, dst, len: 512 });
+            let ok = ch.run_until(20_000, |c| c.dma_done(0, 0, h));
+            assert!(ok);
+            (ch.cycles, ch.total_dma_bytes(), ch.dma_level_bytes())
+        };
+        assert_eq!(run(false), run(true), "sleep/wake must not change simulated behaviour");
     }
 }

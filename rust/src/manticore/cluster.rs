@@ -24,7 +24,7 @@ use crate::noc::mux::{prepend_bits, Mux};
 use crate::noc::upsizer::Upsizer;
 use crate::noc::dma::Dma;
 use crate::protocol::{bundle, BundleCfg, MasterEnd, SlaveEnd};
-use crate::sim::{Component, Cycle};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 use crate::traffic::gen::{RwGen, RwGenCfg};
 
 /// Global address layout of the Manticore chiplet.
@@ -200,6 +200,44 @@ impl Cluster {
     pub fn dma_bytes(&self) -> u64 {
         self.dma[0].borrow().bytes_moved + self.dma[1].borrow().bytes_moved
     }
+
+    /// Split the cluster into an externally-pokable handle (shared Rcs to
+    /// the DMA engines, L1 and core generator) and its internal component
+    /// list, so the chiplet can register each part with the engine arena
+    /// individually — fine-grained sleep/wake instead of whole-cluster
+    /// ticking. The exported port ends must be `take`n before calling.
+    pub fn split(self) -> (ClusterHandle, Vec<Box<dyn Component>>) {
+        let handle = ClusterHandle {
+            name: self.name,
+            idx: self.idx,
+            dma: self.dma.clone(),
+            l1: self.l1.clone(),
+            cores: self.cores.clone(),
+        };
+        (handle, self.comps)
+    }
+}
+
+/// Shared view of a cluster whose components live in an engine arena.
+/// Field-compatible with the pokable surface of [`Cluster`] (`dma`, `l1`,
+/// `cores`), so workload scripts and tests work against either.
+pub struct ClusterHandle {
+    pub name: String,
+    pub idx: usize,
+    pub dma: [Rc<RefCell<Dma>>; 2],
+    pub l1: Rc<RefCell<MemDuplex>>,
+    pub cores: Rc<RefCell<RwGen>>,
+}
+
+impl ClusterHandle {
+    pub fn l1_base(&self) -> u64 {
+        addr::cluster_base(self.idx)
+    }
+
+    /// Data bytes moved at the cluster's DMA port so far.
+    pub fn dma_bytes(&self) -> u64 {
+        self.dma[0].borrow().bytes_moved + self.dma[1].borrow().bytes_moved
+    }
 }
 
 impl Component for Cluster {
@@ -207,10 +245,20 @@ impl Component for Cluster {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        // Registered as one component: all internal channels wake the
+        // whole cluster (chiplets use `split` for finer granularity).
         for c in &mut self.comps {
-            c.tick(cy);
+            c.bind(wake, id);
         }
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
+        let mut act = Activity::Idle;
+        for c in &mut self.comps {
+            act = act.or(c.tick(cy));
+        }
+        act
     }
 }
 

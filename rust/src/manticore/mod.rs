@@ -10,5 +10,5 @@ pub mod perf;
 pub mod workload;
 
 pub use chiplet::{Chiplet, ChipletCfg};
-pub use cluster::{addr, core_net_cfg, dma_net_cfg, Cluster};
+pub use cluster::{addr, core_net_cfg, dma_net_cfg, Cluster, ClusterHandle};
 pub use network::{build_tree, NodeIo, Tree, TreeCfg};

@@ -12,6 +12,13 @@
 //!
 //! The same builder constructs both physically-separate networks: the
 //! 512-bit DMA network and the 64-bit core network (design goal D4).
+//!
+//! Engine integration: each crosspoint node is one engine component
+//! (`Crosspoint::bind` wires every internal channel to the node's
+//! `ComponentId`), so an idle subtree sleeps as a whole and a beat
+//! arriving at any of its ports wakes exactly the nodes on the path.
+//! The chiplet drains `Tree::nodes` into the arena after construction
+//! and keeps `Tree::level_taps` for bandwidth accounting.
 
 use crate::noc::addr_decode::{AddrMap, AddrRule, DefaultPort};
 use crate::noc::crosspoint::{Crosspoint, CrosspointCfg};

@@ -18,7 +18,7 @@ use std::collections::VecDeque;
 use std::rc::Rc;
 
 use crate::protocol::{BBeat, Cmd, MasterEnd, RBeat, SlaveEnd, WBeat};
-use crate::sim::{Component, Cycle, Ps};
+use crate::sim::{Activity, Component, ComponentId, Cycle, Ps, WakeSet};
 
 /// Dual-clock FIFO with synchronizer-delay modeling. Times are global ps.
 struct CdcFifo<T> {
@@ -142,7 +142,11 @@ impl Component for CdcSlave {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.slave.bind_owner(wake, id);
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
         self.slave.set_now(cy);
         let now = cy * self.period_ps;
         let mut st = self.state.borrow_mut();
@@ -163,6 +167,10 @@ impl Component for CdcSlave {
             let r = st.r.pop(now);
             self.slave.r.push(r);
         }
+        // CDC halves never sleep: the shared dual-clock FIFOs carry
+        // time-based synchronizer state the wake protocol cannot see, and
+        // cross-domain wakes at coincident edges would land one edge late.
+        Activity::Active
     }
 }
 
@@ -171,7 +179,11 @@ impl Component for CdcMaster {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.master.bind_owner(wake, id);
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
         self.master.set_now(cy);
         let now = cy * self.period_ps;
         let mut st = self.state.borrow_mut();
@@ -193,6 +205,7 @@ impl Component for CdcMaster {
         if self.master.r.can_pop() && st.r.can_push(now) {
             st.r.push(self.master.r.pop(), now);
         }
+        Activity::Active
     }
 }
 

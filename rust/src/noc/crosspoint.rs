@@ -18,7 +18,7 @@ use crate::noc::error_slave::ErrorSlave;
 use crate::noc::id_remap::IdRemap;
 use crate::noc::mux::{prepend_bits, Mux};
 use crate::protocol::{bundle, BundleCfg, Cmd, MasterEnd, SlaveEnd};
-use crate::sim::{Component, Cycle};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
 #[derive(Clone)]
 pub struct CrosspointCfg {
@@ -165,22 +165,44 @@ impl Component for Crosspoint {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        // One engine component per crosspoint: every internal channel
+        // wakes the node, which re-ticks its parts in dataflow order.
         for q in &mut self.input_queues {
-            q.tick(cy);
+            q.bind(wake, id);
         }
         for d in &mut self.demuxes {
-            d.tick(cy);
+            d.bind(wake, id);
         }
         for m in &mut self.muxes {
-            m.tick(cy);
+            m.bind(wake, id);
         }
         for r in &mut self.remappers {
-            r.tick(cy);
+            r.bind(wake, id);
         }
         for e in &mut self.error_slaves {
-            e.tick(cy);
+            e.bind(wake, id);
         }
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
+        let mut act = Activity::Idle;
+        for q in &mut self.input_queues {
+            act = act.or(q.tick(cy));
+        }
+        for d in &mut self.demuxes {
+            act = act.or(d.tick(cy));
+        }
+        for m in &mut self.muxes {
+            act = act.or(m.tick(cy));
+        }
+        for r in &mut self.remappers {
+            act = act.or(r.tick(cy));
+        }
+        for e in &mut self.error_slaves {
+            act = act.or(e.tick(cy));
+        }
+        act
     }
 }
 

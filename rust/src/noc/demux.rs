@@ -19,7 +19,7 @@
 //!   arbitration trees.
 
 use crate::protocol::{Cmd, MasterEnd, SlaveEnd};
-use crate::sim::{Component, Cycle};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
 /// Per-ID, per-direction outstanding-transaction tracking.
 #[derive(Debug, Clone, Copy, Default)]
@@ -109,7 +109,14 @@ impl Component for Demux {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.slave.bind_owner(wake, id);
+        for m in &self.masters {
+            m.bind_owner(wake, id);
+        }
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
         self.slave.set_now(cy);
         for m in &self.masters {
             m.set_now(cy);
@@ -183,6 +190,13 @@ impl Component for Demux {
                 self.rr_r = (p + 1) % n;
             }
         }
+
+        // Commands stalled by the same-target rule sit in the slave-side
+        // channels (counted below) and drain when responses arrive, which
+        // also arrive on channels — no internal timer needs a tick.
+        let pending = self.slave.pending_input()
+            + self.masters.iter().map(|m| m.pending_input()).sum::<usize>();
+        Activity::active_if(pending > 0)
     }
 }
 

@@ -21,7 +21,7 @@
 use std::collections::{HashMap, VecDeque};
 
 use crate::protocol::{split_bursts, Bytes, Cmd, MasterEnd, WBeat};
-use crate::sim::{Component, Cycle};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
 /// A transfer request accepted by the frontend.
 #[derive(Debug, Clone)]
@@ -78,6 +78,8 @@ pub struct Dma {
     legs_remaining: HashMap<u64, usize>,
     /// Stats.
     pub bytes_moved: u64,
+    /// Engine binding, so `submit` can wake a sleeping engine component.
+    waker: Option<(WakeSet, ComponentId)>,
 }
 
 impl Dma {
@@ -104,6 +106,7 @@ impl Dma {
             next_handle: 1,
             legs_remaining: HashMap::new(),
             bytes_moved: 0,
+            waker: None,
         }
     }
 
@@ -122,7 +125,11 @@ impl Dma {
     }
 
     /// Submit a transfer; returns a handle reported in `completions`.
+    /// Wakes the engine component if the engine had put it to sleep.
     pub fn submit(&mut self, req: TransferReq) -> u64 {
+        if let Some((ws, id)) = &self.waker {
+            ws.wake(*id);
+        }
         let handle = self.next_handle;
         self.next_handle += 1;
         match req {
@@ -203,11 +210,18 @@ impl Component for Dma {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.master.bind_owner(wake, id);
+        self.waker = Some((wake.clone(), id));
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
         let _ = cy;
         self.master.set_now(cy);
         self.start_next();
-        let Some(t) = &mut self.active else { return };
+        let Some(t) = &mut self.active else {
+            return Activity::active_if(self.master.pending_input() > 0);
+        };
         let bb = self.master.cfg.beat_bytes();
 
         // Data mover: issue read commands. Reservation: never request more
@@ -305,6 +319,11 @@ impl Component for Dma {
                 self.active = None;
             }
         }
+
+        // A transfer in flight keeps the engine ticking (the data mover
+        // retries command issue every cycle); once fully drained, the
+        // next tick takes the early-return path above and goes idle.
+        Activity::Active
     }
 }
 

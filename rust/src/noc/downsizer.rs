@@ -18,7 +18,7 @@ use std::collections::VecDeque;
 use crate::protocol::{
     split_bursts, BBeat, Bytes, Cmd, MasterEnd, RBeat, Resp, SlaveEnd, WBeat,
 };
-use crate::sim::{Component, Cycle};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
 struct WriteState {
     cmd: Cmd,
@@ -97,7 +97,12 @@ impl Component for Downsizer {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.slave.bind_owner(wake, id);
+        self.master.bind_owner(wake, id);
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
         self.slave.set_now(cy);
         self.master.set_now(cy);
         let nb = self.narrow_bytes;
@@ -279,6 +284,14 @@ impl Component for Downsizer {
                 }
             }
         }
+
+        // In-flight write/read state machines unpack buffered wide beats
+        // over several cycles — keep ticking while one is open.
+        Activity::active_if(
+            self.slave.pending_input() + self.master.pending_input() > 0
+                || self.write.is_some()
+                || self.read.is_some(),
+        )
     }
 }
 

@@ -9,7 +9,7 @@
 use std::collections::VecDeque;
 
 use crate::protocol::{BBeat, Bytes, RBeat, Resp, SlaveEnd};
-use crate::sim::{Component, Cycle};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
 pub struct ErrorSlave {
     name: String,
@@ -39,7 +39,11 @@ impl Component for ErrorSlave {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.slave.bind_owner(wake, id);
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
         self.slave.set_now(cy);
 
         // Accept write commands.
@@ -83,6 +87,13 @@ impl Component for ErrorSlave {
                 }
             }
         }
+
+        Activity::active_if(
+            self.slave.pending_input() > 0
+                || !self.w_pending.is_empty()
+                || !self.b_pending.is_empty()
+                || !self.r_pending.is_empty(),
+        )
     }
 }
 

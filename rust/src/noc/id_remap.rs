@@ -10,7 +10,7 @@
 //! the counter and frees the entry at zero.
 
 use crate::protocol::{MasterEnd, SlaveEnd};
-use crate::sim::{Component, Cycle};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
 #[derive(Debug, Clone, Copy, Default)]
 struct Entry {
@@ -114,7 +114,12 @@ impl Component for IdRemap {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.slave.bind_owner(wake, id);
+        self.master.bind_owner(wake, id);
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
         self.slave.set_now(cy);
         self.master.set_now(cy);
 
@@ -154,6 +159,10 @@ impl Component for IdRemap {
             r.id = self.r_table.map_resp(r.id, r.last);
             self.slave.r.push(r);
         }
+
+        // Commands stalled on a full table stay in the slave channels;
+        // the responses that free entries arrive on channels too.
+        Activity::active_if(self.slave.pending_input() + self.master.pending_input() > 0)
     }
 }
 

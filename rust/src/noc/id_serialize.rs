@@ -14,7 +14,7 @@
 use std::collections::VecDeque;
 
 use crate::protocol::{MasterEnd, SlaveEnd};
-use crate::sim::{Component, Cycle};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
 pub struct IdSerialize {
     name: String,
@@ -67,7 +67,12 @@ impl Component for IdSerialize {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.slave.bind_owner(wake, id);
+        self.master.bind_owner(wake, id);
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
         self.slave.set_now(cy);
         self.master.set_now(cy);
 
@@ -127,6 +132,8 @@ impl Component for IdSerialize {
             r.id = orig;
             self.slave.r.push(r);
         }
+
+        Activity::active_if(self.slave.pending_input() + self.master.pending_input() > 0)
     }
 }
 

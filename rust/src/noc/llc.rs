@@ -11,7 +11,7 @@
 use std::collections::VecDeque;
 
 use crate::protocol::{BBeat, Bytes, Cmd, MasterEnd, RBeat, Resp, SlaveEnd, WBeat};
-use crate::sim::{Component, Cycle};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
 #[derive(Clone)]
 struct Line {
@@ -136,6 +136,16 @@ impl Llc {
         }
     }
 
+    /// A transaction or miss in flight keeps the (blocking) cache ticking;
+    /// otherwise only buffered channel beats can create work.
+    fn activity(&self) -> Activity {
+        Activity::active_if(
+            self.slave.pending_input() + self.master.pending_input() > 0
+                || self.txn.is_some()
+                || self.miss.is_some(),
+        )
+    }
+
     /// Begin miss handling for the current beat's line.
     fn start_miss(&mut self, addr: u64) {
         let set = self.set_of(addr);
@@ -157,7 +167,12 @@ impl Component for Llc {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.slave.bind_owner(wake, id);
+        self.master.bind_owner(wake, id);
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
         self.slave.set_now(cy);
         self.master.set_now(cy);
         let bb = self.slave.cfg.beat_bytes();
@@ -237,16 +252,16 @@ impl Component for Llc {
             if !resolved {
                 self.miss = Some((way, state));
             }
-            return; // blocking: serve the miss before anything else
+            return self.activity(); // blocking: serve the miss before anything else
         }
 
         // Serve the current transaction beat by beat.
-        let Some(txn) = &self.txn else { return };
+        let Some(txn) = &self.txn else { return self.activity() };
         match txn {
             Txn::Read(c) => {
                 let c = c.clone();
                 if !self.slave.r.can_push() {
-                    return;
+                    return self.activity();
                 }
                 let addr = c.beat_addr(self.beat);
                 match self.lookup(addr) {
@@ -280,7 +295,7 @@ impl Component for Llc {
                         let w = self.slave.w.pop();
                         self.w_pending.push_back(w);
                     } else {
-                        return;
+                        return self.activity();
                     }
                 }
                 let addr = c.beat_addr(self.beat);
@@ -322,6 +337,7 @@ impl Component for Llc {
                 }
             }
         }
+        self.activity()
     }
 }
 

@@ -15,7 +15,7 @@ use std::rc::Rc;
 
 use crate::noc::sram::{MemCmd, Sram};
 use crate::protocol::{BBeat, Bytes, RBeat, Resp, SlaveEnd};
-use crate::sim::{Component, Cycle};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
 /// Address-interleaved bank array with a one-command-per-bank-per-cycle
 /// logarithmic interconnect.
@@ -155,7 +155,11 @@ impl Component for MemDuplex {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.slave.bind_owner(wake, id);
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
         self.slave.set_now(cy);
 
         // Static demux: writes -> left controller, reads -> right. Each
@@ -265,6 +269,17 @@ impl Component for MemDuplex {
                 self.slave.r.push(r);
             }
         }
+
+        // Open bursts, SRAM reads in flight (r_meta), and queued responses
+        // all need ticks that no channel event will trigger.
+        Activity::active_if(
+            self.slave.pending_input() > 0
+                || self.w_active.is_some()
+                || self.r_active.is_some()
+                || !self.r_meta.is_empty()
+                || !self.r_buf.is_empty()
+                || !self.b_q.is_empty(),
+        )
     }
 }
 

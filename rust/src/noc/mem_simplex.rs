@@ -18,7 +18,7 @@ use std::collections::VecDeque;
 
 use crate::noc::sram::{MemCmd, Sram};
 use crate::protocol::{BBeat, Bytes, RBeat, Resp, SlaveEnd};
-use crate::sim::{Component, Cycle};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
 /// Arbitration policy between the read and write command streams.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -137,7 +137,11 @@ impl Component for MemSimplex {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.slave.bind_owner(wake, id);
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
         self.slave.set_now(cy);
 
         // Accept new commands (one outstanding burst per direction keeps
@@ -170,7 +174,7 @@ impl Component for MemSimplex {
                 (None, None, _) => {
                     // Nothing to do.
                     self.drain_responses(cy);
-                    return;
+                    return self.activity();
                 }
             };
             if grant_write {
@@ -182,10 +186,24 @@ impl Component for MemSimplex {
         }
 
         self.drain_responses(cy);
+        self.activity()
     }
 }
 
 impl MemSimplex {
+    /// Open bursts, SRAM reads awaiting their latency (r_meta), and queued
+    /// responses all need ticks no channel event will trigger.
+    fn activity(&self) -> Activity {
+        Activity::active_if(
+            self.slave.pending_input() > 0
+                || self.w_active.is_some()
+                || self.r_active.is_some()
+                || !self.r_meta.is_empty()
+                || !self.r_buf.is_empty()
+                || !self.b_q.is_empty(),
+        )
+    }
+
     fn drain_responses(&mut self, cy: Cycle) {
         // Join SRAM read data with metadata into the response buffer.
         while self.r_buf.len() < self.r_buf_cap {

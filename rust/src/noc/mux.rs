@@ -16,7 +16,7 @@
 use std::collections::VecDeque;
 
 use crate::protocol::{MasterEnd, SlaveEnd};
-use crate::sim::{Component, Cycle};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
 /// Number of ID bits the mux prepends for `n` slave ports.
 pub fn prepend_bits(n_slave_ports: usize) -> usize {
@@ -92,7 +92,14 @@ impl Component for Mux {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        for s in &self.slaves {
+            s.bind_owner(wake, id);
+        }
+        self.master.bind_owner(wake, id);
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
         for s in &self.slaves {
             s.set_now(cy);
         }
@@ -148,6 +155,12 @@ impl Component for Mux {
                 self.slaves[port].r.push(r);
             }
         }
+
+        // The `w_route` FIFO needs no tick on its own: the W beats it
+        // routes arrive on channels, which wake the mux.
+        let pending = self.master.pending_input()
+            + self.slaves.iter().map(|s| s.pending_input()).sum::<usize>();
+        Activity::active_if(pending > 0)
     }
 }
 

@@ -6,7 +6,7 @@
 //! the circular-wait Coffman condition (see `noc::demux`).
 
 use crate::protocol::{MasterEnd, SlaveEnd};
-use crate::sim::{Component, Cycle};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
 pub struct Pipeline {
     name: String,
@@ -27,7 +27,12 @@ impl Component for Pipeline {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.slave.bind_owner(wake, id);
+        self.master.bind_owner(wake, id);
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
         self.slave.set_now(cy);
         self.master.set_now(cy);
         if self.slave.aw.can_pop() && self.master.aw.can_push() {
@@ -45,6 +50,7 @@ impl Component for Pipeline {
         if self.master.r.can_pop() && self.slave.r.can_push() {
             self.slave.r.push(self.master.r.pop());
         }
+        Activity::active_if(self.slave.pending_input() + self.master.pending_input() > 0)
     }
 }
 

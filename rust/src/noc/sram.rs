@@ -1,6 +1,12 @@
 //! Single-port SRAM macro model, the memory behind the on-chip memory
 //! controllers (§2.7). One read **or** write per cycle (simplex by
 //! nature), fixed access latency, byte-addressable with strobes.
+//!
+//! The SRAM itself is passive (not a `sim::Component`): its latency
+//! pipeline advances with the cycle numbers the owning controller passes
+//! in, so for the engine's sleep/wake protocol the controllers
+//! (`MemSimplex`, `MemDuplex`, `Llc`) report `Active` while any read is
+//! pending here (their `r_meta` queues mirror `pending`).
 
 use std::collections::VecDeque;
 

@@ -23,7 +23,7 @@
 use std::collections::VecDeque;
 
 use crate::protocol::{Bytes, Cmd, MasterEnd, RBeat, SlaveEnd};
-use crate::sim::{Component, Cycle};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
 /// Compute the wide-port command for an upsized narrow INCR burst:
 /// same start address, wide size, beat count covering the same byte span.
@@ -135,7 +135,12 @@ impl Component for Upsizer {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.slave.bind_owner(wake, id);
+        self.master.bind_owner(wake, id);
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
         self.slave.set_now(cy);
         self.master.set_now(cy);
         let nb = self.narrow_bytes;
@@ -272,6 +277,14 @@ impl Component for Upsizer {
                 self.rr_read = (ci + 1) % n;
             }
         }
+
+        // Buffered serialization state (a wide beat being emitted as
+        // several narrow ones) needs ticks without further channel events.
+        Activity::active_if(
+            self.slave.pending_input() + self.master.pending_input() > 0
+                || self.write.is_some()
+                || self.reads.iter().any(|c| !c.idle()),
+        )
     }
 }
 

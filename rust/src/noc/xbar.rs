@@ -19,7 +19,7 @@ use crate::noc::error_slave::ErrorSlave;
 use crate::noc::mux::{prepend_bits, Mux};
 use crate::noc::pipeline::Pipeline;
 use crate::protocol::{bundle, BundleCfg, Cmd, MasterEnd, SlaveEnd};
-use crate::sim::{Component, Cycle};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
 #[derive(Clone)]
 pub struct XbarCfg {
@@ -132,19 +132,40 @@ impl Component for Xbar {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        // The crossbar registers as ONE engine component: all internal
+        // channels wake the crossbar, which re-ticks its children.
         for d in &mut self.demuxes {
-            d.tick(cy);
+            d.bind(wake, id);
         }
         for p in &mut self.pipes {
-            p.tick(cy);
+            p.bind(wake, id);
         }
         for m in &mut self.muxes {
-            m.tick(cy);
+            m.bind(wake, id);
         }
         for e in &mut self.error_slaves {
-            e.tick(cy);
+            e.bind(wake, id);
         }
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
+        // Aggregate: any active child implies a possible internal beat in
+        // flight, so the whole crossbar stays awake for the next edge.
+        let mut act = Activity::Idle;
+        for d in &mut self.demuxes {
+            act = act.or(d.tick(cy));
+        }
+        for p in &mut self.pipes {
+            act = act.or(p.tick(cy));
+        }
+        for m in &mut self.muxes {
+            act = act.or(m.tick(cy));
+        }
+        for e in &mut self.error_slaves {
+            act = act.or(e.tick(cy));
+        }
+        act
     }
 }
 

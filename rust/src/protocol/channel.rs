@@ -21,7 +21,7 @@
 use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
-use crate::sim::Cycle;
+use crate::sim::{ComponentId, Cycle, WakeSet};
 
 /// Per-channel statistics, cheap enough to keep always-on.
 #[derive(Debug, Default, Clone)]
@@ -55,6 +55,23 @@ struct Meta {
     visible_at: Cell<Cycle>,
     last_push: Cell<Cycle>,
     last_pop: Cell<Cycle>,
+    /// Sleep/wake bindings for the activity-tracked engine: a `push`
+    /// wakes the consumer-side component, a `pop` wakes the producer
+    /// side (see `sim::engine`). Unbound channels (tests, manual loops)
+    /// skip the hook entirely.
+    wake: RefCell<WakeHooks>,
+}
+
+#[derive(Default)]
+struct WakeHooks {
+    consumer: Option<(WakeSet, ComponentId)>,
+    producer: Option<(WakeSet, ComponentId)>,
+}
+
+fn notify(hook: &Option<(WakeSet, ComponentId)>) {
+    if let Some((ws, id)) = hook {
+        ws.wake(*id);
+    }
 }
 
 /// The channel's clock, shared by both endpoints — and, inside a bundle,
@@ -101,6 +118,7 @@ pub fn channel_clocked<T>(
         visible_at: Cell::new(Cycle::MAX),
         last_push: Cell::new(Cycle::MAX),
         last_pop: Cell::new(Cycle::MAX),
+        wake: RefCell::new(WakeHooks::default()),
     });
     (
         Tx { core: core.clone(), meta: meta.clone(), now: clock.clone() },
@@ -142,6 +160,19 @@ impl<T> Tx<T> {
         }
         m.len.set(m.len.get() + 1);
         c.q.push_back(Entry { beat, pushed_at: now });
+        drop(c);
+        notify(&m.wake.borrow().consumer);
+    }
+
+    /// Bind the producer side of this channel to a registered component:
+    /// every `pop` (freed space) wakes it. Called from `Component::bind`.
+    pub fn bind_producer(&self, wake: &WakeSet, id: ComponentId) {
+        self.meta.wake.borrow_mut().producer = Some((wake.clone(), id));
+    }
+
+    /// Beats buffered in the channel (visible or not).
+    pub fn occupancy(&self) -> usize {
+        self.meta.len.get()
     }
 
     /// Record that the producer had a beat but the channel was full.
@@ -201,7 +232,15 @@ impl<T> Rx<T> {
         });
         c.stats.handshakes += 1;
         c.stats.last_handshake = now;
+        drop(c);
+        notify(&m.wake.borrow().producer);
         e.beat
+    }
+
+    /// Bind the consumer side of this channel to a registered component:
+    /// every `push` (incoming beat) wakes it. Called from `Component::bind`.
+    pub fn bind_consumer(&self, wake: &WakeSet, id: ComponentId) {
+        self.meta.wake.borrow_mut().consumer = Some((wake.clone(), id));
     }
 
     pub fn label(&self) -> String {
@@ -373,6 +412,37 @@ mod tests {
         let s = rx.stats();
         assert_eq!(s.handshakes, 1);
         assert_eq!(tx.stats().stall_cycles, 1);
+    }
+
+    #[test]
+    fn bound_endpoints_wake_on_push_and_pop() {
+        let (tx, rx) = wire::<u8>("t");
+        let mut engine = crate::sim::Engine::new();
+        let d = engine.add_domain("clk", 1000);
+        struct Nop;
+        impl crate::sim::Component for Nop {
+            fn tick(&mut self, _cy: Cycle) -> crate::sim::Activity {
+                crate::sim::Activity::Idle
+            }
+            fn name(&self) -> &str {
+                "nop"
+            }
+        }
+        let prod_id = engine.add(d, Nop);
+        let cons_id = engine.add(d, Nop);
+        let ws = engine.wake_set();
+        tx.bind_producer(&ws, prod_id);
+        rx.bind_consumer(&ws, cons_id);
+        // Push wakes the consumer; pop wakes the producer.
+        tx.set_now(0);
+        tx.push(9);
+        assert!(ws.is_flagged(cons_id));
+        assert!(!ws.is_flagged(prod_id));
+        engine.step(); // drains flags
+        tx.set_now(1);
+        rx.set_now(1);
+        assert_eq!(rx.pop(), 9);
+        assert!(ws.is_flagged(prod_id));
     }
 
     #[test]

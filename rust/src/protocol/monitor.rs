@@ -22,7 +22,7 @@ use std::collections::VecDeque;
 
 use super::payload::{Cmd, TxnTag};
 use super::port::{MasterEnd, SlaveEnd};
-use crate::sim::{Component, Cycle};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Violation {
@@ -138,7 +138,12 @@ impl Component for Monitor {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.slave.bind_owner(wake, id);
+        self.master.bind_owner(wake, id);
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
         self.slave.set_now(cy);
         self.master.set_now(cy);
 
@@ -248,6 +253,10 @@ impl Component for Monitor {
             }
             self.slave.r.push(r);
         }
+
+        // Pass-through: idle as soon as no beat is buffered on either end;
+        // the outstanding-transaction tables only matter when beats flow.
+        Activity::active_if(self.slave.pending_input() + self.master.pending_input() > 0)
     }
 }
 

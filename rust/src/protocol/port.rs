@@ -9,7 +9,7 @@
 
 use super::channel::{channel_clocked, Clock, Rx, SetNow, Tx};
 use super::payload::{BBeat, Cmd, RBeat, WBeat};
-use crate::sim::Cycle;
+use crate::sim::{ComponentId, Cycle, WakeSet};
 
 /// Static properties of a bundle. Modules check compatibility at build time
 /// (e.g. a mux master port has `id_width = slave.id_width + log2(S)`).
@@ -86,11 +86,43 @@ impl MasterEnd {
     pub fn set_now(&self, cy: Cycle) {
         self.aw.set_now(cy);
     }
+
+    /// Bind all five channels to the component owning this end: incoming
+    /// B/R beats wake it, and pops of its outgoing AW/W/AR beats (freed
+    /// space) wake it too. Called from `Component::bind`.
+    pub fn bind_owner(&self, wake: &WakeSet, id: ComponentId) {
+        self.aw.bind_producer(wake, id);
+        self.w.bind_producer(wake, id);
+        self.ar.bind_producer(wake, id);
+        self.b.bind_consumer(wake, id);
+        self.r.bind_consumer(wake, id);
+    }
+
+    /// Beats buffered toward this end (responses), visible or not. Used
+    /// by idle predicates: nonzero means the owner has pending work.
+    pub fn pending_input(&self) -> usize {
+        self.b.occupancy() + self.r.occupancy()
+    }
 }
 
 impl SlaveEnd {
     pub fn set_now(&self, cy: Cycle) {
         self.aw.set_now(cy);
+    }
+
+    /// Mirror of [`MasterEnd::bind_owner`] for the slave side: incoming
+    /// AW/W/AR beats wake the owner, pops of its B/R beats wake it.
+    pub fn bind_owner(&self, wake: &WakeSet, id: ComponentId) {
+        self.aw.bind_consumer(wake, id);
+        self.w.bind_consumer(wake, id);
+        self.ar.bind_consumer(wake, id);
+        self.b.bind_producer(wake, id);
+        self.r.bind_producer(wake, id);
+    }
+
+    /// Beats buffered toward this end (commands + write data).
+    pub fn pending_input(&self) -> usize {
+        self.aw.occupancy() + self.w.occupancy() + self.ar.occupancy()
     }
 }
 

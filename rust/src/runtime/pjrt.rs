@@ -6,12 +6,19 @@
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that the bundled
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
 //! /opt/xla-example/README.md and python/compile/aot.py).
+//!
+//! The PJRT client itself needs the `xla` crate plus a local XLA
+//! extension, neither of which is available in the offline build
+//! environment — so the real backend is gated behind the `pjrt` cargo
+//! feature and the default build ships a stub [`Runtime`] whose
+//! constructor returns an explanatory error. Everything that does not
+//! touch XLA (input generation, golden-manifest parsing) is always
+//! compiled and tested.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
+use crate::errors::{Context, Result};
 use crate::sim::SplitMix64;
 
 /// Deterministic input generation, bit-exact with aot.py::gen_input.
@@ -96,20 +103,6 @@ pub fn parse_golden(text: &str) -> Result<Golden> {
     Ok(Golden { args, outs })
 }
 
-/// A loaded, compiled executable plus its golden manifest.
-pub struct Artifact {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-    pub golden: Golden,
-}
-
-/// The runtime: a PJRT CPU client and a registry of compiled artifacts.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifacts: HashMap<String, Artifact>,
-    dir: PathBuf,
-}
-
 /// Result of one execution.
 #[derive(Debug)]
 pub struct ExecResult {
@@ -118,91 +111,177 @@ pub struct ExecResult {
     pub max_rel_err: f64,
 }
 
-impl Runtime {
-    /// Create a runtime over an artifact directory (default: `artifacts/`).
-    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        Ok(Runtime { client, artifacts: HashMap::new(), dir: dir.as_ref().to_path_buf() })
+/// Verify inputs exist on disk (without compiling).
+pub fn artifacts_present(dir: impl AsRef<Path>, names: &[&str]) -> bool {
+    names.iter().all(|n| {
+        dir.as_ref().join(format!("{n}.hlo.txt")).exists()
+            && dir.as_ref().join(format!("{n}.golden.txt")).exists()
+    })
+}
+
+/// The real PJRT backend, compiled only with `--features pjrt` (requires
+/// the `xla` crate; see Cargo.toml).
+#[cfg(feature = "pjrt")]
+mod backend {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    use super::{gen_input, parse_golden, ExecResult, Golden};
+    use crate::bail;
+    use crate::errors::{Context, Result};
+
+    /// A loaded, compiled executable plus its golden manifest.
+    pub struct Artifact {
+        pub name: String,
+        exe: xla::PjRtLoadedExecutable,
+        pub golden: Golden,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// The runtime: a PJRT CPU client and a registry of compiled artifacts.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        artifacts: HashMap<String, Artifact>,
+        dir: PathBuf,
     }
 
-    /// Load and compile `<name>.hlo.txt` + `<name>.golden.txt`.
-    pub fn load(&mut self, name: &str) -> Result<()> {
-        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
-        let golden_path = self.dir.join(format!("{name}.golden.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path.to_str().context("path")?,
-        )
-        .with_context(|| format!("parsing {}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).context("PJRT compile")?;
-        let golden = parse_golden(
-            &std::fs::read_to_string(&golden_path)
-                .with_context(|| format!("reading {}", golden_path.display()))?,
-        )?;
-        self.artifacts.insert(name.to_string(), Artifact { name: name.to_string(), exe, golden });
-        Ok(())
-    }
-
-    pub fn loaded(&self) -> Vec<&str> {
-        self.artifacts.keys().map(|s| s.as_str()).collect()
-    }
-
-    /// Execute with the manifest's deterministic inputs and verify the
-    /// outputs against the golden checksums.
-    pub fn run_golden(&self, name: &str) -> Result<ExecResult> {
-        let art = self.artifacts.get(name).with_context(|| format!("artifact {name} not loaded"))?;
-        let inputs: Vec<Vec<f32>> =
-            art.golden.args.iter().map(|a| gen_input(a.numel(), a.seed)).collect();
-        self.run_with(name, &inputs)
-    }
-
-    /// Execute with caller-provided inputs (shapes from the manifest).
-    pub fn run_with(&self, name: &str, inputs: &[Vec<f32>]) -> Result<ExecResult> {
-        let art = self.artifacts.get(name).with_context(|| format!("artifact {name} not loaded"))?;
-        if inputs.len() != art.golden.args.len() {
-            bail!("{name}: expected {} inputs, got {}", art.golden.args.len(), inputs.len());
+    impl Runtime {
+        /// Create a runtime over an artifact directory (default: `artifacts/`).
+        pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+            Ok(Runtime { client, artifacts: HashMap::new(), dir: dir.as_ref().to_path_buf() })
         }
-        let mut literals = Vec::new();
-        for (spec, data) in art.golden.args.iter().zip(inputs) {
-            if data.len() != spec.numel() {
-                bail!("{name}: input size {} != {}", data.len(), spec.numel());
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load and compile `<name>.hlo.txt` + `<name>.golden.txt`.
+        pub fn load(&mut self, name: &str) -> Result<()> {
+            let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+            let golden_path = self.dir.join(format!("{name}.golden.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path.to_str().context("path")?,
+            )
+            .with_context(|| format!("parsing {}", hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).context("PJRT compile")?;
+            let golden = parse_golden(
+                &std::fs::read_to_string(&golden_path)
+                    .with_context(|| format!("reading {}", golden_path.display()))?,
+            )?;
+            self.artifacts
+                .insert(name.to_string(), Artifact { name: name.to_string(), exe, golden });
+            Ok(())
+        }
+
+        pub fn loaded(&self) -> Vec<&str> {
+            self.artifacts.keys().map(|s| s.as_str()).collect()
+        }
+
+        /// Execute with the manifest's deterministic inputs and verify the
+        /// outputs against the golden checksums.
+        pub fn run_golden(&self, name: &str) -> Result<ExecResult> {
+            let art =
+                self.artifacts.get(name).with_context(|| format!("artifact {name} not loaded"))?;
+            let inputs: Vec<Vec<f32>> =
+                art.golden.args.iter().map(|a| gen_input(a.numel(), a.seed)).collect();
+            self.run_with(name, &inputs)
+        }
+
+        /// Execute with caller-provided inputs (shapes from the manifest).
+        pub fn run_with(&self, name: &str, inputs: &[Vec<f32>]) -> Result<ExecResult> {
+            let art =
+                self.artifacts.get(name).with_context(|| format!("artifact {name} not loaded"))?;
+            if inputs.len() != art.golden.args.len() {
+                bail!("{name}: expected {} inputs, got {}", art.golden.args.len(), inputs.len());
             }
-            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-            literals.push(xla::Literal::vec1(data).reshape(&dims).context("reshape")?);
-        }
-        let result = art.exe.execute::<xla::Literal>(&literals).context("execute")?[0][0]
-            .to_literal_sync()
-            .context("to_literal")?;
-        // aot.py lowers with return_tuple=True: unpack the tuple.
-        let elems = result.to_tuple().context("tuple unpack")?;
-        let mut outputs = Vec::new();
-        let mut max_rel = 0.0f64;
-        for (out, golden) in elems.iter().zip(&art.golden.outs) {
-            let v: Vec<f32> = out.to_vec().context("to_vec")?;
-            let sum: f64 = v.iter().map(|&x| x as f64).sum();
-            let l2: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
-            let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-9);
-            max_rel = max_rel.max(rel(sum, golden.sum)).max(rel(l2, golden.l2));
-            for (i, g) in golden.first8.iter().enumerate() {
-                if i < v.len() {
-                    max_rel = max_rel.max(rel(v[i] as f64, *g));
+            let mut literals = Vec::new();
+            for (spec, data) in art.golden.args.iter().zip(inputs) {
+                if data.len() != spec.numel() {
+                    bail!("{name}: input size {} != {}", data.len(), spec.numel());
                 }
+                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                literals.push(xla::Literal::vec1(data).reshape(&dims).context("reshape")?);
             }
-            outputs.push(v);
+            let result = art.exe.execute::<xla::Literal>(&literals).context("execute")?[0][0]
+                .to_literal_sync()
+                .context("to_literal")?;
+            // aot.py lowers with return_tuple=True: unpack the tuple.
+            let elems = result.to_tuple().context("tuple unpack")?;
+            let mut outputs = Vec::new();
+            let mut max_rel = 0.0f64;
+            for (out, golden) in elems.iter().zip(&art.golden.outs) {
+                let v: Vec<f32> = out.to_vec().context("to_vec")?;
+                let sum: f64 = v.iter().map(|&x| x as f64).sum();
+                let l2: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+                let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-9);
+                max_rel = max_rel.max(rel(sum, golden.sum)).max(rel(l2, golden.l2));
+                for (i, g) in golden.first8.iter().enumerate() {
+                    if i < v.len() {
+                        max_rel = max_rel.max(rel(v[i] as f64, *g));
+                    }
+                }
+                outputs.push(v);
+            }
+            Ok(ExecResult { outputs, max_rel_err: max_rel })
         }
-        Ok(ExecResult { outputs, max_rel_err: max_rel })
+    }
+}
+
+/// Stub backend for the default (offline) build: same API surface, but the
+/// constructor fails with an actionable message. Callers that gate on
+/// artifact presence (the e2e tests) skip before ever reaching it.
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use std::path::Path;
+
+    use super::ExecResult;
+    use crate::bail;
+    use crate::errors::Result;
+
+    pub struct Runtime {
+        _private: (),
     }
 
-    /// Verify inputs exist on disk (without compiling).
+    impl Runtime {
+        pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+            let _ = dir;
+            bail!(
+                "PJRT runtime support is not compiled in: rebuild with \
+                 `--features pjrt` (requires the `xla` crate and a local \
+                 XLA extension; see Cargo.toml and README.md)"
+            )
+        }
+
+        pub fn platform(&self) -> String {
+            "stub".into()
+        }
+
+        pub fn load(&mut self, name: &str) -> Result<()> {
+            bail!("cannot load {name}: PJRT support not compiled in")
+        }
+
+        pub fn loaded(&self) -> Vec<&str> {
+            Vec::new()
+        }
+
+        pub fn run_golden(&self, name: &str) -> Result<ExecResult> {
+            bail!("cannot run {name}: PJRT support not compiled in")
+        }
+
+        pub fn run_with(&self, name: &str, _inputs: &[Vec<f32>]) -> Result<ExecResult> {
+            bail!("cannot run {name}: PJRT support not compiled in")
+        }
+    }
+}
+
+pub use backend::Runtime;
+
+impl Runtime {
+    /// Verify inputs exist on disk (without compiling). Kept as an
+    /// associated fn for backward compatibility; see [`artifacts_present`].
     pub fn artifacts_present(dir: impl AsRef<Path>, names: &[&str]) -> bool {
-        names.iter().all(|n| {
-            dir.as_ref().join(format!("{n}.hlo.txt")).exists()
-                && dir.as_ref().join(format!("{n}.golden.txt")).exists()
-        })
+        artifacts_present(dir, names)
     }
 }
 

@@ -1,17 +1,43 @@
-//! Deterministic cycle-stepped simulation engine with multiple clock
+//! Deterministic activity-tracked event engine with multiple clock
 //! domains.
 //!
-//! Components register with a clock domain (period in picoseconds). The
-//! engine advances global time edge-by-edge: at each step, every domain
-//! whose next rising edge equals the current minimum time ticks all of its
-//! components, in registration order. Within a domain, channel visibility
-//! semantics (see `protocol::channel`) make results independent of
-//! registration order for correctness.
+//! Components live in a flat arena and are addressed by stable
+//! [`ComponentId`] handles. The engine advances global time with a
+//! binary-heap **calendar of domain edges** (instead of a per-step `min()`
+//! scan over all domains): each domain has exactly one entry in the heap,
+//! carrying its next rising edge; a step pops every domain scheduled at
+//! the earliest time and ticks it.
+//!
+//! Within a domain, only **awake** components tick. A component reports
+//! [`Activity::Idle`] from `tick` when nothing can happen until one of its
+//! channels sees traffic; the engine then puts it to sleep and skips it on
+//! subsequent edges. Channel endpoints bound to the component (see
+//! [`Component::bind`] and `protocol::channel`) wake it again:
+//!
+//! * a `push` into a channel wakes the bound **consumer** (the beat
+//!   becomes visible one cycle later — exactly when the woken component
+//!   ticks next),
+//! * a `pop` wakes the bound **producer** (freed space is usable from the
+//!   same cycle on, so the producer retries on its next edge).
+//!
+//! Wakes are deduplicated with a per-component flag and applied at the
+//! start of the next engine step; components are always ticked in
+//! registration order, so results are bit-identical to ticking every
+//! component every cycle (an idle component's tick is a no-op by
+//! contract). `Engine::set_sleep(false)` restores the full-scan behaviour
+//! for A/B measurements — `benches/tab2_manticore.rs` reports the speedup.
+//!
+//! Cross-domain constraint: channels connecting components in *different*
+//! clock domains must go through `noc::cdc` (whose halves never sleep);
+//! same-time wakes across coincident domain edges are otherwise applied
+//! only at the following edge.
 //!
 //! Single-clock networks (the common case — Manticore's whole fabric runs
 //! at 1 GHz) use `Engine::single_clock()`, where one cycle = one tick.
 
 use std::cell::RefCell;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::rc::Rc;
 
 /// Cycle count within a clock domain.
@@ -20,11 +46,131 @@ pub type Cycle = u64;
 /// Global simulation time in picoseconds.
 pub type Ps = u64;
 
+/// Stable handle of a component in the engine arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ComponentId(u32);
+
+impl ComponentId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// What a component reports from `tick`: whether it may have work on the
+/// next edge, or can sleep until a bound channel wakes it.
+///
+/// Contract for `Idle`: the component's `tick` must be a state-preserving
+/// no-op until one of its bound channels pushes (incoming beat) or pops
+/// (freed space). Components with internal timers or buffered work must
+/// report `Active`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activity {
+    Active,
+    Idle,
+}
+
+impl Activity {
+    pub fn active_if(cond: bool) -> Activity {
+        if cond {
+            Activity::Active
+        } else {
+            Activity::Idle
+        }
+    }
+
+    pub fn is_active(self) -> bool {
+        matches!(self, Activity::Active)
+    }
+
+    /// Active if either side is active.
+    pub fn or(self, other: Activity) -> Activity {
+        Activity::active_if(self.is_active() || other.is_active())
+    }
+}
+
 /// A simulation component. `tick` is called once per rising edge of the
-/// component's clock domain with the domain-local cycle number.
+/// component's clock domain with the domain-local cycle number — but only
+/// while the component is awake (see [`Activity`]).
 pub trait Component {
-    fn tick(&mut self, cycle: Cycle);
+    fn tick(&mut self, cycle: Cycle) -> Activity;
     fn name(&self) -> &str;
+
+    /// Called once at registration. Implementations bind their channel
+    /// endpoints (`Tx::bind_producer` / `Rx::bind_consumer`, or the
+    /// `MasterEnd::bind_owner` / `SlaveEnd::bind_owner` helpers) so that
+    /// channel traffic wakes `id`. Composite components forward the same
+    /// `id` to their children.
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        let _ = (wake, id);
+    }
+}
+
+struct WakeInner {
+    /// Wake requested since the component's last drain (dedup flag).
+    flagged: Vec<bool>,
+    /// Components with a set flag, in wake order.
+    queue: Vec<ComponentId>,
+}
+
+/// Shared wake registry: channels (and external drivers like `Dma::submit`)
+/// call [`WakeSet::wake`]; the engine drains the queue at the start of each
+/// step and reschedules the named components.
+#[derive(Clone)]
+pub struct WakeSet {
+    inner: Rc<RefCell<WakeInner>>,
+}
+
+impl WakeSet {
+    pub fn new() -> Self {
+        WakeSet { inner: Rc::new(RefCell::new(WakeInner { flagged: Vec::new(), queue: Vec::new() })) }
+    }
+
+    fn register(&self) -> ComponentId {
+        let mut w = self.inner.borrow_mut();
+        let id = ComponentId(w.flagged.len() as u32);
+        w.flagged.push(false);
+        id
+    }
+
+    /// Request that `id` runs on its domain's next edge. Idempotent until
+    /// the engine drains the request.
+    pub fn wake(&self, id: ComponentId) {
+        let mut w = self.inner.borrow_mut();
+        let i = id.index();
+        if i < w.flagged.len() && !w.flagged[i] {
+            w.flagged[i] = true;
+            w.queue.push(id);
+        }
+    }
+
+    /// Whether a wake for `id` is pending (observability; the engine
+    /// clears the flag when it drains the queue).
+    pub fn is_flagged(&self, id: ComponentId) -> bool {
+        self.inner.borrow().flagged.get(id.index()).copied().unwrap_or(false)
+    }
+
+    fn has_pending(&self) -> bool {
+        !self.inner.borrow().queue.is_empty()
+    }
+
+    /// Move the pending queue into `out` (clearing flags). Swapping with a
+    /// caller-owned scratch buffer keeps both vectors' capacity alive —
+    /// no per-step allocation on the hot path.
+    fn drain_into(&self, out: &mut Vec<ComponentId>) {
+        let mut w = self.inner.borrow_mut();
+        let WakeInner { flagged, queue } = &mut *w;
+        for id in queue.iter() {
+            flagged[id.index()] = false;
+        }
+        out.clear();
+        std::mem::swap(queue, out);
+    }
+}
+
+impl Default for WakeSet {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// Shared-ownership adapter so helper structs can be both owned by a parent
@@ -32,12 +178,15 @@ pub trait Component {
 pub struct Shared<T: Component>(pub Rc<RefCell<T>>);
 
 impl<T: Component> Component for Shared<T> {
-    fn tick(&mut self, cycle: Cycle) {
-        self.0.borrow_mut().tick(cycle);
+    fn tick(&mut self, cycle: Cycle) -> Activity {
+        self.0.borrow_mut().tick(cycle)
     }
     fn name(&self) -> &str {
         // Can't borrow through the RefCell for a &str; use a static label.
         "shared"
+    }
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.0.borrow_mut().bind(wake, id);
     }
 }
 
@@ -46,18 +195,35 @@ pub fn shared<T: Component>(c: T) -> (Rc<RefCell<T>>, Shared<T>) {
     (rc.clone(), Shared(rc))
 }
 
+struct Slot {
+    comp: Box<dyn Component>,
+    domain: u32,
+    asleep: bool,
+}
+
 struct Domain {
     name: String,
     period_ps: Ps,
     next_edge: Ps,
     cycle: Cycle,
-    components: Vec<Box<dyn Component>>,
+    /// Awake members, sorted by id (= registration order).
+    active: Vec<ComponentId>,
+    /// Members woken since the last edge, merged into `active` before it.
+    incoming: Vec<ComponentId>,
 }
 
-/// The simulation engine.
+/// The simulation engine: component arena + edge calendar + wake registry.
 pub struct Engine {
     domains: Vec<Domain>,
+    /// Min-heap of (next_edge, domain index) — one entry per domain.
+    calendar: BinaryHeap<Reverse<(Ps, u32)>>,
+    slots: Vec<Slot>,
+    wake: WakeSet,
     now_ps: Ps,
+    sleep_enabled: bool,
+    /// Reusable scratch buffers: allocated once, swapped per step.
+    wake_scratch: Vec<ComponentId>,
+    due_scratch: Vec<u32>,
 }
 
 /// Handle identifying a clock domain.
@@ -66,7 +232,16 @@ pub struct DomainId(usize);
 
 impl Engine {
     pub fn new() -> Self {
-        Engine { domains: Vec::new(), now_ps: 0 }
+        Engine {
+            domains: Vec::new(),
+            calendar: BinaryHeap::new(),
+            slots: Vec::new(),
+            wake: WakeSet::new(),
+            now_ps: 0,
+            sleep_enabled: true,
+            wake_scratch: Vec::new(),
+            due_scratch: Vec::new(),
+        }
     }
 
     /// Engine with a single 1 GHz clock domain (the Manticore operating
@@ -77,24 +252,65 @@ impl Engine {
         (e, d)
     }
 
+    /// Disable (or re-enable) the sleep/wake optimization. With sleep off
+    /// every registered component ticks on every edge of its domain — the
+    /// pre-refactor full-scan behaviour, kept for A/B perf measurements
+    /// and as a determinism oracle.
+    pub fn set_sleep(&mut self, enabled: bool) {
+        self.sleep_enabled = enabled;
+        if enabled {
+            return;
+        }
+        // Wake everyone so the full scan starts immediately.
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if slot.asleep {
+                slot.asleep = false;
+                self.domains[slot.domain as usize].incoming.push(ComponentId(i as u32));
+            }
+        }
+    }
+
     pub fn add_domain(&mut self, name: impl Into<String>, period_ps: Ps) -> DomainId {
         assert!(period_ps > 0);
+        let idx = self.domains.len();
         self.domains.push(Domain {
             name: name.into(),
             period_ps,
             next_edge: 0,
             cycle: 0,
-            components: Vec::new(),
+            active: Vec::new(),
+            incoming: Vec::new(),
         });
-        DomainId(self.domains.len() - 1)
+        self.calendar.push(Reverse((0, idx as u32)));
+        DomainId(idx)
     }
 
-    pub fn add(&mut self, domain: DomainId, c: impl Component + 'static) {
-        self.domains[domain.0].components.push(Box::new(c));
+    /// Register a component; returns its stable arena handle. The
+    /// component's `bind` hook runs here, wiring its channels to the
+    /// engine's wake set.
+    pub fn add(&mut self, domain: DomainId, c: impl Component + 'static) -> ComponentId {
+        self.add_boxed(domain, Box::new(c))
     }
 
-    pub fn add_boxed(&mut self, domain: DomainId, c: Box<dyn Component>) {
-        self.domains[domain.0].components.push(c);
+    pub fn add_boxed(&mut self, domain: DomainId, mut c: Box<dyn Component>) -> ComponentId {
+        let id = self.wake.register();
+        debug_assert_eq!(id.index(), self.slots.len());
+        c.bind(&self.wake, id);
+        self.slots.push(Slot { comp: c, domain: domain.0 as u32, asleep: false });
+        // Ids grow monotonically, so `active` stays sorted.
+        self.domains[domain.0].active.push(id);
+        id
+    }
+
+    /// The wake registry, for external drivers that poke component state
+    /// between steps (e.g. workload scripts submitting DMA transfers).
+    pub fn wake_set(&self) -> WakeSet {
+        self.wake.clone()
+    }
+
+    /// Wake a component directly.
+    pub fn wake(&self, id: ComponentId) {
+        self.wake.wake(id);
     }
 
     /// Current global time.
@@ -107,21 +323,88 @@ impl Engine {
         self.domains[domain.0].cycle
     }
 
-    /// Advance to the next clock edge (of any domain) and tick the domains
-    /// scheduled there. Returns the new global time.
-    pub fn step(&mut self) -> Ps {
-        let t = self.domains.iter().map(|d| d.next_edge).min().expect("no domains");
-        self.now_ps = t;
-        for d in &mut self.domains {
-            if d.next_edge == t {
-                d.cycle += 1;
-                let cy = d.cycle;
-                for c in &mut d.components {
-                    c.tick(cy);
-                }
-                d.next_edge += d.period_ps;
+    /// Number of registered components.
+    pub fn component_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Number of currently-awake components in a domain (observability).
+    pub fn awake_components(&self, domain: DomainId) -> usize {
+        self.domains[domain.0].active.len() + self.domains[domain.0].incoming.len()
+    }
+
+    fn drain_wakes(&mut self) {
+        if !self.wake.has_pending() {
+            return;
+        }
+        let mut scratch = std::mem::take(&mut self.wake_scratch);
+        self.wake.drain_into(&mut scratch);
+        for &id in &scratch {
+            let slot = &mut self.slots[id.index()];
+            if slot.asleep {
+                slot.asleep = false;
+                let d = slot.domain as usize;
+                self.domains[d].incoming.push(id);
             }
         }
+        self.wake_scratch = scratch;
+    }
+
+    fn tick_domain(&mut self, di: usize) {
+        let cy = {
+            let d = &mut self.domains[di];
+            d.cycle += 1;
+            if !d.incoming.is_empty() {
+                let inc = std::mem::take(&mut d.incoming);
+                d.active.extend(inc);
+                d.active.sort_unstable();
+                d.active.dedup();
+            }
+            d.cycle
+        };
+        let mut list = std::mem::take(&mut self.domains[di].active);
+        list.retain(|&id| {
+            let act = self.slots[id.index()].comp.tick(cy);
+            // A wake flagged during this edge (e.g. a beat pushed toward
+            // this component by an earlier-ticking one) keeps it runnable:
+            // the beat only becomes visible next cycle.
+            if !self.sleep_enabled || act.is_active() || self.wake.is_flagged(id) {
+                true
+            } else {
+                self.slots[id.index()].asleep = true;
+                false
+            }
+        });
+        self.domains[di].active = list;
+    }
+
+    /// Advance to the next clock edge (of any domain) and tick the awake
+    /// components of the domains scheduled there. Returns the new global
+    /// time.
+    pub fn step(&mut self) -> Ps {
+        self.drain_wakes();
+        let Reverse((t, first)) = self.calendar.pop().expect("no domains");
+        self.now_ps = t;
+        let mut due = std::mem::take(&mut self.due_scratch);
+        due.clear();
+        due.push(first);
+        while let Some(&Reverse((tt, d))) = self.calendar.peek() {
+            if tt == t {
+                self.calendar.pop();
+                due.push(d);
+            } else {
+                break;
+            }
+        }
+        // Deterministic: coincident domains tick in creation order.
+        due.sort_unstable();
+        for &di in &due {
+            self.tick_domain(di as usize);
+            let d = &mut self.domains[di as usize];
+            d.next_edge = t + d.period_ps;
+            self.calendar.push(Reverse((d.next_edge, di)));
+        }
+        self.due_scratch = due;
         t
     }
 
@@ -166,13 +449,15 @@ impl Default for Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::cell::Cell;
 
     struct Counter {
         count: Rc<RefCell<u64>>,
     }
     impl Component for Counter {
-        fn tick(&mut self, _cy: Cycle) {
+        fn tick(&mut self, _cy: Cycle) -> Activity {
             *self.count.borrow_mut() += 1;
+            Activity::Active
         }
         fn name(&self) -> &str {
             "counter"
@@ -246,5 +531,94 @@ mod tests {
         e.run_cycles(d, 3);
         assert_eq!(*count.borrow(), 3);
         drop(handle);
+    }
+
+    /// Ticks until `work_left` hits zero, then reports Idle.
+    struct Worker {
+        work_left: u64,
+        ticks: Rc<Cell<u64>>,
+    }
+    impl Component for Worker {
+        fn tick(&mut self, _cy: Cycle) -> Activity {
+            self.ticks.set(self.ticks.get() + 1);
+            if self.work_left > 0 {
+                self.work_left -= 1;
+            }
+            Activity::active_if(self.work_left > 0)
+        }
+        fn name(&self) -> &str {
+            "worker"
+        }
+    }
+
+    #[test]
+    fn idle_component_sleeps() {
+        let (mut e, d) = Engine::single_clock();
+        let ticks = Rc::new(Cell::new(0));
+        e.add(d, Worker { work_left: 5, ticks: ticks.clone() });
+        e.run_cycles(d, 100);
+        assert_eq!(e.cycles(d), 100, "cycles advance past the sleeping component");
+        assert_eq!(ticks.get(), 5, "component stops ticking once idle");
+        assert_eq!(e.awake_components(d), 0);
+    }
+
+    #[test]
+    fn sleep_disabled_full_scans() {
+        let (mut e, d) = Engine::single_clock();
+        e.set_sleep(false);
+        let ticks = Rc::new(Cell::new(0));
+        e.add(d, Worker { work_left: 5, ticks: ticks.clone() });
+        e.run_cycles(d, 100);
+        assert_eq!(ticks.get(), 100, "full scan ticks every cycle");
+    }
+
+    #[test]
+    fn explicit_wake_reschedules() {
+        let (mut e, d) = Engine::single_clock();
+        let ticks = Rc::new(Cell::new(0));
+        let id = e.add(d, Worker { work_left: 1, ticks: ticks.clone() });
+        e.run_cycles(d, 10);
+        assert_eq!(ticks.get(), 1);
+        e.wake(id);
+        e.run_cycles(d, 10);
+        assert_eq!(ticks.get(), 2, "woken component ticks exactly once more");
+    }
+
+    #[test]
+    fn wake_during_own_tick_cycle_is_not_lost() {
+        // Component A (earlier id) wakes B during the same cycle B ticks
+        // idle: B must still run on the next edge.
+        struct Waker {
+            target: Rc<Cell<Option<ComponentId>>>,
+            wake: Option<WakeSet>,
+            fire_at: Cycle,
+        }
+        impl Component for Waker {
+            fn tick(&mut self, cy: Cycle) -> Activity {
+                if cy == self.fire_at {
+                    if let (Some(w), Some(t)) = (&self.wake, self.target.get()) {
+                        w.wake(t);
+                    }
+                }
+                Activity::active_if(cy < self.fire_at)
+            }
+            fn name(&self) -> &str {
+                "waker"
+            }
+            fn bind(&mut self, wake: &WakeSet, _id: ComponentId) {
+                self.wake = Some(wake.clone());
+            }
+        }
+        let (mut e, d) = Engine::single_clock();
+        let target = Rc::new(Cell::new(None));
+        let ticks = Rc::new(Cell::new(0));
+        e.add(d, Waker { target: target.clone(), wake: None, fire_at: 5 });
+        // Worker goes idle exactly at cycle 5 — the same edge the (earlier
+        // registered, earlier ticking) waker flags it. The flag must keep
+        // it awake for one more tick at cycle 6.
+        let id = e.add(d, Worker { work_left: 5, ticks: ticks.clone() });
+        target.set(Some(id));
+        e.run_cycles(d, 20);
+        assert_eq!(ticks.get(), 6, "same-edge wake keeps the worker awake one extra tick");
     }
 }

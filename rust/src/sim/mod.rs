@@ -1,12 +1,15 @@
-//! Cycle-stepped simulation substrate: engine, clock domains, statistics,
-//! deterministic PRNG, and the property-testing mini-framework.
+//! Cycle-stepped simulation substrate: activity-tracked event engine,
+//! clock domains, statistics, deterministic PRNG, and the property-testing
+//! mini-framework.
 
 pub mod engine;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 
-pub use engine::{shared, Component, Cycle, DomainId, Engine, Ps, Shared};
+pub use engine::{
+    shared, Activity, Component, ComponentId, Cycle, DomainId, Engine, Ps, Shared, WakeSet,
+};
 pub use prop::{prop_check, prop_replay, Gen};
 pub use rng::SplitMix64;
 pub use stats::{human_bytes, Bandwidth, LatencyStats};

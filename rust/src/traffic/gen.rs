@@ -6,7 +6,7 @@
 use std::collections::HashMap;
 
 use crate::protocol::{Bytes, Cmd, MasterEnd, WBeat};
-use crate::sim::{Component, Cycle, LatencyStats, SplitMix64};
+use crate::sim::{Activity, Component, ComponentId, Cycle, LatencyStats, SplitMix64, WakeSet};
 use crate::traffic::perfect_slave::pattern_byte;
 
 /// Address selection pattern.
@@ -88,6 +88,8 @@ pub struct RwGen {
     inflight: HashMap<u64, (Cycle, bool, u64, usize)>,
     /// Write burst currently being fed beats: (tag, addr, beats left, total).
     w_feed: Option<(u64, u64, usize, usize)>,
+    /// Engine binding, so `set_cfg` can wake a sleeping generator.
+    waker: Option<(WakeSet, ComponentId)>,
     pub stats: GenStats,
 }
 
@@ -104,6 +106,7 @@ impl RwGen {
             seq_counter: 0,
             inflight: HashMap::new(),
             w_feed: None,
+            waker: None,
             stats: GenStats::new(),
         }
     }
@@ -113,8 +116,12 @@ impl RwGen {
     }
 
     /// Reconfigure the generator in place (e.g. per-cluster workloads set
-    /// up after chiplet construction). Keeps the port and statistics.
+    /// up after chiplet construction). Keeps the port and statistics, and
+    /// wakes the engine component if the finished generator was asleep.
     pub fn set_cfg(&mut self, cfg: RwGenCfg) {
+        if let Some((ws, id)) = &self.waker {
+            ws.wake(*id);
+        }
         self.rng = SplitMix64::new(cfg.seed);
         self.cfg = cfg;
         self.seq_counter = 0;
@@ -157,7 +164,12 @@ impl Component for RwGen {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.master.bind_owner(wake, id);
+        self.waker = Some((wake.clone(), id));
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
         self.master.set_now(cy);
         let bb = self.master.cfg.beat_bytes() as u64;
 
@@ -239,6 +251,16 @@ impl Component for RwGen {
                 self.stats.bytes += bb * self.cfg.beats as u64;
             }
         }
+
+        // A source is active until its quota is issued AND retired; an
+        // unlimited generator (total = None) never sleeps. `set_cfg`
+        // wakes a finished generator that gets new work.
+        Activity::active_if(
+            !self.done()
+                || !self.inflight.is_empty()
+                || self.w_feed.is_some()
+                || self.master.pending_input() > 0,
+        )
     }
 }
 

@@ -7,7 +7,7 @@
 use std::collections::VecDeque;
 
 use crate::protocol::{BBeat, Bytes, RBeat, Resp, SlaveEnd, TxnTag};
-use crate::sim::{Component, Cycle};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
 /// The deterministic byte pattern: every address maps to one byte.
 pub fn pattern_byte(addr: u64) -> u8 {
@@ -60,7 +60,11 @@ impl Component for PerfectSlave {
         &self.name
     }
 
-    fn tick(&mut self, cy: Cycle) {
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.slave.bind_owner(wake, id);
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
         self.slave.set_now(cy);
         let bb = self.slave.cfg.beat_bytes();
 
@@ -130,6 +134,16 @@ impl Component for PerfectSlave {
             }
         }
         let _ = self.duplex;
+
+        // Latency queues advance with the cycle counter, so the endpoint
+        // must keep ticking while responses are brewing or bursts are open.
+        Activity::active_if(
+            self.slave.pending_input() > 0
+                || self.r_active.is_some()
+                || self.w_active.is_some()
+                || !self.r_q.is_empty()
+                || !self.b_q.is_empty(),
+        )
     }
 }
 

@@ -145,11 +145,14 @@ fn cdc_cross_domain_traffic() {
     )));
     struct Tick<T: Component>(std::rc::Rc<std::cell::RefCell<T>>);
     impl<T: Component> Component for Tick<T> {
-        fn tick(&mut self, cy: u64) {
-            self.0.borrow_mut().tick(cy);
+        fn tick(&mut self, cy: u64) -> noc::sim::Activity {
+            self.0.borrow_mut().tick(cy)
         }
         fn name(&self) -> &str {
             "tick"
+        }
+        fn bind(&mut self, wake: &noc::sim::WakeSet, id: noc::sim::ComponentId) {
+            self.0.borrow_mut().bind(wake, id);
         }
     }
     e.add(fast, Tick(g.clone()));
