@@ -1,0 +1,112 @@
+//! Coordinator engine bench: the configured single-crossbar topology
+//! under the activity-tracked engine vs the full-scan mode
+//! (`SimCfg::full_scan`), mirroring `benches/tab2_manticore.rs` for the
+//! `noc simulate` stack. Both modes simulate the *same* fixed cycle
+//! window (traffic drains partway through, so the event engine gets to
+//! sleep the finished generators, idle endpoints, and untouched crossbar
+//! ports) and must produce byte-identical determinism fingerprints. CI
+//! tracks `event_cycles_per_sec` / `speedup` via
+//! `BENCH_coordinator_engine.json` (`scripts/check_bench_trend.py`).
+
+use std::time::Instant;
+
+use noc::bench_harness::{quick, section, Report};
+use noc::coordinator::{determinism_fingerprint, SimCfg, System};
+
+/// A multi-master / multi-slave topology exercising all three traffic
+/// patterns and endpoint kinds. Masters are spread over the lower half
+/// of the slave ranges so the upper endpoints stay idle — the scan
+/// avoidance the event engine is for.
+fn cfg_text(masters: usize, slaves: usize, total: u64, window: u64) -> String {
+    let span = 0x1_0000u64;
+    let mut t = format!("[sim]\ncycles = {window}\ndata_bits = 64\nid_bits = 4\n");
+    for m in 0..masters {
+        let pattern = ["uniform", "sequential", "hotspot"][m % 3];
+        let base = (m % (slaves / 2).max(1)) as u64 * span;
+        let beats = if m % 2 == 0 { 1 } else { 4 };
+        t.push_str(&format!(
+            "[[master]]\nname = \"gen{m}\"\npattern = \"{pattern}\"\nbase = {base:#x}\n\
+             span = {span:#x}\nreads = 0.6\nbeats = {beats}\ntotal = {total}\n\
+             max_outstanding = 4\nids = 4\n"
+        ));
+    }
+    for s in 0..slaves {
+        let kind = ["perfect", "simplex", "duplex"][s % 3];
+        let base = s as u64 * span;
+        t.push_str(&format!(
+            "[[slave]]\nname = \"mem{s}\"\nkind = \"{kind}\"\nbase = {base:#x}\nsize = {span:#x}\n"
+        ));
+        if kind == "duplex" {
+            t.push_str("banks = 4\n");
+        }
+    }
+    t
+}
+
+/// Build and run one mode over the full window; returns the finished
+/// system and the wall seconds.
+fn run_mode(text: &str, full_scan: bool) -> (System, f64) {
+    let mut cfg = SimCfg::from_str_toml(text).expect("config");
+    cfg.full_scan = full_scan;
+    let mut sys = System::build(&cfg).expect("build");
+    let t0 = Instant::now();
+    sys.run_for(cfg.cycles);
+    let wall = t0.elapsed().as_secs_f64();
+    assert!(sys.all_done(), "traffic must drain inside the window (full_scan={full_scan})");
+    assert!(sys.check_protocol().is_empty(), "protocol must stay clean");
+    (sys, wall)
+}
+
+fn main() {
+    let mut report = Report::new("coordinator_engine");
+    let (masters, slaves, total, window) = if quick() {
+        (4, 6, 300, 10_000u64)
+    } else {
+        (16, 16, 2_000, 60_000u64)
+    };
+    let text = cfg_text(masters, slaves, total, window);
+
+    section(&format!(
+        "coordinator {masters}x{slaves} topology: event vs full-scan engine ({window} cycles)"
+    ));
+    let (event_sys, event_s) = run_mode(&text, false);
+    let (scan_sys, scan_s) = run_mode(&text, true);
+    assert_eq!(
+        determinism_fingerprint(&event_sys),
+        determinism_fingerprint(&scan_sys),
+        "sleep/wake must be simulation-invisible"
+    );
+
+    let cycles = event_sys.cycles;
+    let event_cps = cycles as f64 / event_s;
+    let scan_cps = cycles as f64 / scan_s;
+    let speedup = event_cps / scan_cps;
+    println!(
+        "full-scan engine:        {:>10.0} cycles/s  ({:.3}s wall, {} cycles, {} components)",
+        scan_cps,
+        scan_s,
+        cycles,
+        scan_sys.component_count()
+    );
+    println!(
+        "activity-tracked engine: {:>10.0} cycles/s  ({:.3}s wall, {} awake at end)",
+        event_cps,
+        event_s,
+        event_sys.awake_components()
+    );
+    println!("speedup: {speedup:.2}x");
+    report.metric("event_cycles_per_sec", event_cps);
+    report.metric("full_scan_cycles_per_sec", scan_cps);
+    report.metric("speedup", speedup);
+    report.metric("components", event_sys.component_count() as f64);
+    report.metric("awake_at_end", event_sys.awake_components() as f64);
+    // Wall-clock ratios are unreliable on shared CI runners in sub-second
+    // quick mode; only enforce the floor in full mode (cf. tab2_manticore).
+    if !quick() {
+        assert!(
+            speedup > 1.0,
+            "event engine must not be slower than the full scan ({speedup:.2}x)"
+        );
+    }
+    report.finish();
+}

@@ -1,6 +1,16 @@
 //! Topology builder: instantiate a configured single-crossbar system —
 //! traffic generators → (optionally pipelined) crossbar → endpoints —
 //! with protocol monitors on every master port.
+//!
+//! The built [`System`] runs on the activity-tracked event engine
+//! (`sim::engine`): every generator, monitor, endpoint, and crossbar
+//! *part* (per-port demux/mux/pipeline stage, see `Xbar::into_parts`)
+//! registers individually in the engine arena with bound wake edges, so
+//! idle parts of the topology are skipped entirely. `SimCfg::full_scan`
+//! keeps the pre-engine every-cycle mode as an A/B oracle: both modes
+//! must produce bit-identical generator stats and monitor violation
+//! streams (`rust/tests/coordinator_engine.rs`), and
+//! `benches/coordinator_engine.rs` records the cycles/sec of each.
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -8,24 +18,121 @@ use std::rc::Rc;
 use crate::bail;
 use crate::errors::Result;
 
-use crate::coordinator::config::{SimCfg, SlaveKind};
+use crate::coordinator::config::{MasterCfg, SimCfg, SlaveKind};
 use crate::noc::addr_decode::{AddrMap, AddrRule, DefaultPort};
 use crate::noc::mem_duplex::{BankArray, MemDuplex};
 use crate::noc::mem_simplex::{ArbPolicy, MemSimplex};
 use crate::noc::sram::Sram;
 use crate::noc::xbar::{xbar_master_id_bits, Xbar, XbarCfg};
-use crate::protocol::{bundle, BundleCfg, Monitor};
-use crate::sim::{shared, Component, Cycle};
+use crate::protocol::channel::Tap;
+use crate::protocol::{bundle, BundleCfg, Monitor, RBeat, WBeat};
+use crate::sim::{shared, Cycle, DomainId, Engine};
 use crate::traffic::gen::{AddrPattern, RwGen, RwGenCfg};
 use crate::traffic::perfect_slave::PerfectSlave;
+
+/// Default hotspot window size, clamped to the master's span at build.
+const DEFAULT_HOT_SPAN: u64 = 0x1000;
+
+/// Passive bandwidth tap on one endpoint's crossbar master port (data
+/// channels in both directions), so reports and tests can attribute
+/// traffic to slaves after the port ends moved into their modules.
+pub struct SlaveTap {
+    pub name: String,
+    w: Tap<WBeat>,
+    r: Tap<RBeat>,
+    beat_bytes: u64,
+}
+
+impl SlaveTap {
+    /// Data beats that crossed this slave's port (W in + R out).
+    pub fn data_beats(&self) -> u64 {
+        self.w.stats().handshakes + self.r.stats().handshakes
+    }
+
+    /// Same, in bytes.
+    pub fn data_bytes(&self) -> u64 {
+        self.data_beats() * self.beat_bytes
+    }
+}
 
 /// A built system ready to run.
 pub struct System {
     pub name: String,
-    components: Vec<Box<dyn Component>>,
+    engine: Engine,
+    domain: DomainId,
     pub gens: Vec<Rc<RefCell<RwGen>>>,
     pub monitors: Vec<Rc<RefCell<Monitor>>>,
+    /// One tap per configured slave, in `SimCfg::slaves` order.
+    pub slave_taps: Vec<SlaveTap>,
     pub cycles: Cycle,
+}
+
+/// Construct the generator address pattern for one master. `port_cfg` is
+/// the bundle at the generator's master port (the sequential stride and
+/// hotspot window derive from it and the master config).
+fn master_pattern(mc: &MasterCfg, port_cfg: &BundleCfg) -> Result<AddrPattern> {
+    Ok(match mc.pattern.as_str() {
+        "uniform" => AddrPattern::Uniform { base: mc.base, span: mc.span },
+        "sequential" => {
+            // One transaction covers beats * beat_bytes; stride by whole
+            // bursts so consecutive transactions tile the range without
+            // overlapping at any data width or burst length.
+            let stride = (mc.beats.max(1) * port_cfg.beat_bytes()) as u64;
+            AddrPattern::Sequential { base: mc.base, stride }
+        }
+        "hotspot" => {
+            // The hot window must stay inside the master's span: a window
+            // larger than the span would emit addresses outside every
+            // decode rule and land the traffic on the error path.
+            let hot_span = mc.hot_span.unwrap_or(DEFAULT_HOT_SPAN).min(mc.span).max(1);
+            AddrPattern::Hotspot {
+                base: mc.base,
+                span: mc.span,
+                hot_base: mc.base,
+                hot_span,
+                p_hot: mc.p_hot,
+            }
+        }
+        p => bail!("unknown pattern: {p}"),
+    })
+}
+
+/// Build the crossbar address rules from the slave configs. Validates
+/// what `AddrMap` would otherwise only assert on (or silently accept):
+/// `base + size` must not wrap the address space, and ranges must be
+/// pairwise disjoint — an overlap would shadow-route everything behind
+/// the first matching rule.
+fn slave_rules(cfg: &SimCfg) -> Result<Vec<AddrRule>> {
+    let mut rules: Vec<AddrRule> = Vec::with_capacity(cfg.slaves.len());
+    for (i, sc) in cfg.slaves.iter().enumerate() {
+        if sc.size == 0 {
+            bail!("slave {}: size must be nonzero", sc.name);
+        }
+        let end = match sc.base.checked_add(sc.size) {
+            Some(e) => e,
+            None => bail!(
+                "slave {}: base {:#x} + size {:#x} wraps the 64-bit address space",
+                sc.name,
+                sc.base,
+                sc.size
+            ),
+        };
+        for (j, r) in rules.iter().enumerate() {
+            if sc.base < r.end && r.start < end {
+                bail!(
+                    "slaves {} [{:#x}, {:#x}) and {} [{:#x}, {:#x}) overlap",
+                    cfg.slaves[j].name,
+                    r.start,
+                    r.end,
+                    sc.name,
+                    sc.base,
+                    end
+                );
+            }
+        }
+        rules.push(AddrRule::new(sc.base, end, i));
+    }
+    Ok(rules)
 }
 
 impl System {
@@ -35,7 +142,10 @@ impl System {
             cfg.data_bits,
             xbar_master_id_bits(cfg.id_bits, cfg.masters.len()),
         );
-        let mut components: Vec<Box<dyn Component>> = Vec::new();
+        let (mut engine, domain) = Engine::single_clock();
+        if cfg.full_scan {
+            engine.set_sleep(false);
+        }
         let mut gens = Vec::new();
         let mut monitors = Vec::new();
 
@@ -44,20 +154,8 @@ impl System {
         for (i, mc) in cfg.masters.iter().enumerate() {
             let (gen_m, gen_s) = bundle(&format!("{}.port", mc.name), s_cfg);
             let (mon_m, mon_s) = bundle(&format!("{}.mon", mc.name), s_cfg);
-            let pattern = match mc.pattern.as_str() {
-                "uniform" => AddrPattern::Uniform { base: mc.base, span: mc.span },
-                "sequential" => AddrPattern::Sequential { base: mc.base, stride: 64 },
-                "hotspot" => AddrPattern::Hotspot {
-                    base: mc.base,
-                    span: mc.span,
-                    hot_base: mc.base,
-                    hot_span: 0x1000,
-                    p_hot: 0.5,
-                },
-                p => bail!("unknown pattern: {p}"),
-            };
             let gen_cfg = RwGenCfg {
-                pattern,
+                pattern: master_pattern(mc, &s_cfg)?,
                 p_read: mc.p_read,
                 beats: mc.beats,
                 n_ids: mc.n_ids,
@@ -69,38 +167,38 @@ impl System {
             };
             let (g, g_adapter) = shared(RwGen::new(mc.name.clone(), gen_m, gen_cfg));
             gens.push(g);
-            components.push(Box::new(g_adapter));
+            engine.add(domain, g_adapter);
             let (mon, mon_adapter) =
                 shared(Monitor::new(format!("{}.monitor", mc.name), gen_s, mon_m));
             monitors.push(mon);
-            components.push(Box::new(mon_adapter));
+            engine.add(domain, mon_adapter);
             xbar_slaves.push(mon_s);
         }
 
-        // Crossbar master ports -> endpoints.
-        let rules: Vec<AddrRule> = cfg
-            .slaves
-            .iter()
-            .enumerate()
-            .map(|(i, sc)| AddrRule::new(sc.base, sc.base + sc.size, i))
-            .collect();
+        // Crossbar master ports -> endpoints (address map validated first).
+        let rules = slave_rules(cfg)?;
         let map = AddrMap::new(rules, DefaultPort::Error);
         let mut xbar_masters = Vec::new();
+        let mut slave_taps = Vec::new();
         for sc in &cfg.slaves {
             let (m, s) = bundle(&format!("{}.port", sc.name), m_cfg);
+            slave_taps.push(SlaveTap {
+                name: sc.name.clone(),
+                w: m.w.tap(),
+                r: m.r.tap(),
+                beat_bytes: m_cfg.beat_bytes() as u64,
+            });
             xbar_masters.push(m);
             match &sc.kind {
                 SlaveKind::Perfect { latency } => {
-                    components.push(Box::new(PerfectSlave::new(sc.name.clone(), s, *latency)));
+                    engine.add(domain, PerfectSlave::new(sc.name.clone(), s, *latency));
                 }
                 SlaveKind::Simplex { latency } => {
                     let sram = Sram::new(sc.base, sc.size as usize, *latency);
-                    components.push(Box::new(MemSimplex::new(
-                        sc.name.clone(),
-                        s,
-                        sram,
-                        ArbPolicy::RoundRobin,
-                    )));
+                    engine.add(
+                        domain,
+                        MemSimplex::new(sc.name.clone(), s, sram, ArbPolicy::RoundRobin),
+                    );
                 }
                 SlaveKind::Duplex { banks, latency } => {
                     let arr = BankArray::new(
@@ -110,7 +208,7 @@ impl System {
                         m_cfg.beat_bytes(),
                         *latency,
                     );
-                    components.push(Box::new(MemDuplex::new(sc.name.clone(), s, arr)));
+                    engine.add(domain, MemDuplex::new(sc.name.clone(), s, arr));
                 }
             }
         }
@@ -126,17 +224,30 @@ impl System {
                 pipeline: cfg.pipeline,
             },
         );
-        components.push(Box::new(xbar));
+        // Finer wake granularity: each demux/mux/pipeline/error-slave
+        // registers individually, so a beat wakes only the port it
+        // touches instead of the whole crossbar.
+        for part in xbar.into_parts() {
+            engine.add_boxed(domain, part);
+        }
 
-        Ok(System { name: "system".into(), components, gens, monitors, cycles: 0 })
+        Ok(System {
+            name: "system".into(),
+            engine,
+            domain,
+            gens,
+            monitors,
+            slave_taps,
+            cycles: 0,
+        })
     }
 
+    /// Advance one cycle on the engine calendar (only awake components
+    /// tick; in full-scan mode, all of them).
     pub fn step(&mut self) {
         self.cycles += 1;
-        let cy = self.cycles;
-        for c in &mut self.components {
-            c.tick(cy);
-        }
+        self.engine.step();
+        debug_assert_eq!(self.engine.cycles(self.domain), self.cycles);
     }
 
     pub fn all_done(&self) -> bool {
@@ -157,12 +268,45 @@ impl System {
         self.all_done()
     }
 
+    /// Run for exactly `cycles` cycles, with no early exit — benches use
+    /// this so event and full-scan modes simulate identical windows.
+    pub fn run_for(&mut self, cycles: Cycle) {
+        for _ in 0..cycles {
+            self.step();
+        }
+    }
+
     /// Assert protocol compliance across all monitors.
     pub fn check_protocol(&self) -> Vec<crate::protocol::Violation> {
         self.monitors
             .iter()
             .flat_map(|m| m.borrow().violations().to_vec())
             .collect()
+    }
+
+    /// Whether this system runs in the full-scan A/B mode.
+    pub fn full_scan(&self) -> bool {
+        !self.engine.sleep_enabled()
+    }
+
+    /// The engine mode as a report label.
+    pub fn mode_str(&self) -> &'static str {
+        if self.full_scan() {
+            "full_scan"
+        } else {
+            "event"
+        }
+    }
+
+    /// Components registered in the engine arena.
+    pub fn component_count(&self) -> usize {
+        self.engine.component_count()
+    }
+
+    /// Currently-awake components (observability; in full-scan mode every
+    /// component stays awake).
+    pub fn awake_components(&self) -> usize {
+        self.engine.awake_components(self.domain)
     }
 }
 
@@ -209,6 +353,7 @@ size = 0x1_0000
     fn builds_and_completes_with_clean_protocol() {
         let cfg = SimCfg::from_str_toml(CFG).unwrap();
         let mut sys = System::build(&cfg).unwrap();
+        assert!(!sys.full_scan());
         let done = sys.run(cfg.cycles);
         assert!(done, "all traffic must complete");
         let violations = sys.check_protocol();
@@ -227,9 +372,132 @@ size = 0x1_0000
     }
 
     #[test]
+    fn full_scan_mode_keeps_everything_awake() {
+        let text = CFG.replace("[sim]", "[sim]\nfull_scan = true");
+        let cfg = SimCfg::from_str_toml(&text).unwrap();
+        let mut sys = System::build(&cfg).unwrap();
+        assert!(sys.full_scan());
+        assert!(sys.run(cfg.cycles));
+        assert_eq!(sys.awake_components(), sys.component_count());
+    }
+
+    #[test]
+    fn event_mode_sleeps_when_drained() {
+        let cfg = SimCfg::from_str_toml(CFG).unwrap();
+        let mut sys = System::build(&cfg).unwrap();
+        assert!(sys.run(cfg.cycles));
+        // All traffic retired: the whole topology must go to sleep.
+        sys.run_for(100);
+        let awake = sys.awake_components();
+        let total = sys.component_count();
+        assert!(awake * 10 <= total, "drained system should sleep: {awake}/{total} awake");
+    }
+
+    #[test]
     fn rejects_unknown_pattern() {
         let text = CFG.replace("name = \"gen0\"", "name = \"gen0\"\npattern = \"zigzag\"");
         let cfg = SimCfg::from_str_toml(&text).unwrap();
         assert!(System::build(&cfg).is_err());
+    }
+
+    #[test]
+    fn rejects_overlapping_slave_ranges() {
+        // mem1 moved onto mem0's range: must be a config error, not a
+        // silent shadow route.
+        let text =
+            CFG.replace("base = 0x1_0000\nsize = 0x1_0000", "base = 0x8000\nsize = 0x1_0000");
+        let cfg = SimCfg::from_str_toml(&text).unwrap();
+        let err = System::build(&cfg).unwrap_err().to_string();
+        assert!(err.contains("overlap"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrapping_slave_range() {
+        // A base this high is not expressible through the i64-backed TOML
+        // layer, so patch the typed config directly.
+        use crate::coordinator::config::{SlaveCfg, SlaveKind};
+        let mut cfg = SimCfg::from_str_toml(CFG).unwrap();
+        cfg.slaves[1] = SlaveCfg {
+            name: "high".into(),
+            kind: SlaveKind::Perfect { latency: 1 },
+            base: u64::MAX - 0xFFF,
+            size: 0x2000,
+        };
+        let err = System::build(&cfg).unwrap_err().to_string();
+        assert!(err.contains("wraps"), "{err}");
+    }
+
+    #[test]
+    fn rejects_empty_slave_range() {
+        let text = CFG.replace("base = 0x1_0000\nsize = 0x1_0000", "base = 0x1_0000\nsize = 0x0");
+        let cfg = SimCfg::from_str_toml(&text).unwrap();
+        let err = System::build(&cfg).unwrap_err().to_string();
+        assert!(err.contains("nonzero"), "{err}");
+    }
+
+    #[test]
+    fn hotspot_window_clamps_to_span() {
+        let port = BundleCfg::new(64, 4);
+        let mc = MasterCfg {
+            name: "m".into(),
+            pattern: "hotspot".into(),
+            base: 0x1000,
+            span: 0x200, // smaller than the 0x1000 default hot window
+            p_read: 1.0,
+            beats: 1,
+            total: Some(1),
+            max_outstanding: 1,
+            n_ids: 1,
+            p_hot: 0.9,
+            hot_span: None,
+        };
+        match master_pattern(&mc, &port).unwrap() {
+            AddrPattern::Hotspot { hot_base, hot_span, p_hot, .. } => {
+                assert_eq!(hot_base, 0x1000);
+                assert_eq!(hot_span, 0x200, "hot window clamped to the span");
+                assert!((p_hot - 0.9).abs() < 1e-9);
+            }
+            p => panic!("expected hotspot, got {p:?}"),
+        }
+        // An explicit window is clamped too.
+        let mc = MasterCfg { hot_span: Some(0x10_0000), ..mc };
+        match master_pattern(&mc, &port).unwrap() {
+            AddrPattern::Hotspot { hot_span, .. } => assert_eq!(hot_span, 0x200),
+            p => panic!("expected hotspot, got {p:?}"),
+        }
+    }
+
+    #[test]
+    fn sequential_stride_follows_burst_footprint() {
+        let mc = MasterCfg {
+            name: "m".into(),
+            pattern: "sequential".into(),
+            base: 0,
+            span: 0x1_0000,
+            p_read: 1.0,
+            beats: 4,
+            total: Some(1),
+            max_outstanding: 1,
+            n_ids: 1,
+            p_hot: 0.5,
+            hot_span: None,
+        };
+        // 512-bit data: 64 B/beat * 4 beats = 256 B per burst. The old
+        // hardcoded 64 B stride made consecutive bursts overlap here.
+        match master_pattern(&mc, &BundleCfg::new(512, 4)).unwrap() {
+            AddrPattern::Sequential { stride, .. } => assert_eq!(stride, 256),
+            p => panic!("expected sequential, got {p:?}"),
+        }
+        // 64-bit data, 4 beats: 32 B strides tile the range gaplessly.
+        match master_pattern(&mc, &BundleCfg::new(64, 4)).unwrap() {
+            AddrPattern::Sequential { stride, .. } => assert_eq!(stride, 32),
+            p => panic!("expected sequential, got {p:?}"),
+        }
+        // Single-beat narrow master: one beat per burst, 8 B stride.
+        let mc = MasterCfg { beats: 1, ..mc };
+        match master_pattern(&mc, &BundleCfg::new(64, 4)).unwrap() {
+            AddrPattern::Sequential { stride, .. } => assert_eq!(stride, 8),
+            p => panic!("expected sequential, got {p:?}"),
+        }
     }
 }

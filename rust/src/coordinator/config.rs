@@ -86,17 +86,19 @@ fn parse_value(s: &str) -> Result<Value> {
     if s == "false" {
         return Ok(Value::Bool(false));
     }
-    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
-        return Ok(Value::Int(
-            i64::from_str_radix(&hex.replace('_', ""), 16).context("bad hex literal")?,
-        ));
+    // TOML allows `_` separators in every numeric literal (ints, hex,
+    // floats alike); normalize once before classifying, so `2_000.5`
+    // parses the same as `2_000`.
+    let num = s.replace('_', "");
+    if let Some(hex) = num.strip_prefix("0x").or_else(|| num.strip_prefix("0X")) {
+        return Ok(Value::Int(i64::from_str_radix(hex, 16).context("bad hex literal")?));
     }
-    if s.contains('.') || s.contains('e') || s.contains('E') {
-        if let Ok(f) = s.parse::<f64>() {
+    if num.contains('.') || num.contains('e') || num.contains('E') {
+        if let Ok(f) = num.parse::<f64>() {
             return Ok(Value::Float(f));
         }
     }
-    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+    if let Ok(i) = num.parse::<i64>() {
         return Ok(Value::Int(i));
     }
     bail!("cannot parse value: {s}")
@@ -178,6 +180,11 @@ pub struct MasterCfg {
     pub total: Option<u64>,
     pub max_outstanding: usize,
     pub n_ids: u32,
+    /// Hotspot pattern: fraction of accesses that hit the hot window.
+    pub p_hot: f64,
+    /// Hotspot pattern: hot window size in bytes. `None` = builder default
+    /// (clamped to `span` either way, so the window stays decodable).
+    pub hot_span: Option<u64>,
 }
 
 #[derive(Debug, Clone)]
@@ -196,6 +203,10 @@ pub struct SimCfg {
     pub data_bits: usize,
     pub id_bits: usize,
     pub pipeline: bool,
+    /// Disable the engine's sleep/wake tracking: tick every component on
+    /// every cycle (the pre-engine behaviour). Kept as an A/B oracle —
+    /// results must be bit-identical to event mode.
+    pub full_scan: bool,
     pub masters: Vec<MasterCfg>,
     pub slaves: Vec<SlaveCfg>,
 }
@@ -210,9 +221,14 @@ impl SimCfg {
         let data_bits = sim.get("data_bits").map(|v| v.as_usize()).transpose()?.unwrap_or(64);
         let id_bits = sim.get("id_bits").map(|v| v.as_usize()).transpose()?.unwrap_or(4);
         let pipeline = sim.get("pipeline").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
+        let full_scan = sim.get("full_scan").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
 
         let mut masters = Vec::new();
         for (i, t) in doc.array("master").iter().enumerate() {
+            let p_hot = t.get("p_hot").map(|v| v.as_f64()).transpose()?.unwrap_or(0.5);
+            if !(0.0..=1.0).contains(&p_hot) {
+                bail!("master {i}: p_hot must be within [0, 1], got {p_hot}");
+            }
             masters.push(MasterCfg {
                 name: t
                     .get("name")
@@ -235,6 +251,8 @@ impl SimCfg {
                     .transpose()?
                     .unwrap_or(4),
                 n_ids: t.get("ids").map(|v| v.as_u64()).transpose()?.unwrap_or(1) as u32,
+                p_hot,
+                hot_span: t.get("hot_span").map(|v| v.as_u64()).transpose()?,
             });
         }
         let mut slaves = Vec::new();
@@ -263,7 +281,7 @@ impl SimCfg {
         if masters.is_empty() || slaves.is_empty() {
             bail!("config needs at least one [[master]] and one [[slave]]");
         }
-        Ok(SimCfg { cycles, data_bits, id_bits, pipeline, masters, slaves })
+        Ok(SimCfg { cycles, data_bits, id_bits, pipeline, full_scan, masters, slaves })
     }
 
     pub fn from_str_toml(text: &str) -> Result<Self> {
@@ -334,6 +352,40 @@ size = 0x1_0000
         assert_eq!(parse_value("true").unwrap(), Value::Bool(true));
         assert_eq!(parse_value("\"hi\"").unwrap(), Value::Str("hi".into()));
         assert!(parse_value("nope nope").is_err());
+    }
+
+    #[test]
+    fn underscore_separators_in_all_numeric_literals() {
+        assert_eq!(parse_value("2_000").unwrap(), Value::Int(2000));
+        assert_eq!(parse_value("0x1_F").unwrap(), Value::Int(31));
+        // Floats take underscores too (previously rejected).
+        assert_eq!(parse_value("2_000.5").unwrap(), Value::Float(2000.5));
+        assert_eq!(parse_value("1_0e2").unwrap(), Value::Float(1000.0));
+        // Strings keep their underscores verbatim.
+        assert_eq!(parse_value("\"a_b\"").unwrap(), Value::Str("a_b".into()));
+    }
+
+    #[test]
+    fn hotspot_and_engine_keys_parse() {
+        let text = EXAMPLE
+            .replace(
+                "pattern = \"uniform\"",
+                "pattern = \"hotspot\"\np_hot = 0.8\nhot_span = 0x800",
+            )
+            .replace("[sim]", "[sim]\nfull_scan = true");
+        let cfg = SimCfg::from_str_toml(&text).unwrap();
+        assert!(cfg.full_scan);
+        assert!((cfg.masters[0].p_hot - 0.8).abs() < 1e-9);
+        assert_eq!(cfg.masters[0].hot_span, Some(0x800));
+        // Defaults on the second master.
+        assert!((cfg.masters[1].p_hot - 0.5).abs() < 1e-9);
+        assert_eq!(cfg.masters[1].hot_span, None);
+    }
+
+    #[test]
+    fn rejects_out_of_range_p_hot() {
+        let text = EXAMPLE.replace("pattern = \"uniform\"", "pattern = \"hotspot\"\np_hot = 1.5");
+        assert!(SimCfg::from_str_toml(&text).is_err());
     }
 
     #[test]

@@ -1,10 +1,15 @@
 //! Coordinator: configuration system, topology builder, and reporting —
 //! the launcher surface of the platform (`noc simulate --config ...`).
+//!
+//! Built systems run on the activity-tracked event engine; the
+//! `full_scan` config key (or `--full-scan`) keeps the every-cycle scan
+//! as an A/B oracle whose results must be bit-identical
+//! ([`determinism_fingerprint`]).
 
 pub mod builder;
 pub mod config;
 pub mod report;
 
-pub use builder::System;
+pub use builder::{SlaveTap, System};
 pub use config::{parse, Doc, SimCfg, Value};
-pub use report::{run_report, run_summary, Json};
+pub use report::{determinism_fingerprint, run_report, run_summary, Json};

@@ -1,7 +1,8 @@
 //! Result reporting: human-readable tables and a minimal JSON emitter
-//! (serde is unavailable offline).
+//! (serde is unavailable offline), plus the determinism fingerprint the
+//! event-vs-full-scan A/B oracle compares.
 
-use crate::coordinator::builder::System;
+use crate::coordinator::builder::{SlaveTap, System};
 
 /// Minimal JSON value builder for reports.
 #[derive(Debug, Clone)]
@@ -39,34 +40,81 @@ impl Json {
     }
 }
 
+fn gen_json(g: &crate::traffic::gen::RwGen) -> Json {
+    let s = &g.stats;
+    Json::Obj(vec![
+        ("name".into(), Json::Str(g.name().to_string())),
+        ("issued".into(), Json::Num(s.issued as f64)),
+        ("completed".into(), Json::Num(s.completed as f64)),
+        ("bytes".into(), Json::Num(s.bytes as f64)),
+        ("read_lat_mean".into(), Json::Num(s.read_latency.mean())),
+        ("read_lat_p99".into(), Json::Num(s.read_latency.percentile(99.0) as f64)),
+        ("write_lat_mean".into(), Json::Num(s.write_latency.mean())),
+        ("data_errors".into(), Json::Num(s.data_errors as f64)),
+    ])
+}
+
+fn slave_json(t: &SlaveTap) -> Json {
+    Json::Obj(vec![
+        ("name".into(), Json::Str(t.name.clone())),
+        ("data_bytes".into(), Json::Num(t.data_bytes() as f64)),
+    ])
+}
+
 /// Per-generator summary of a run.
 pub fn run_report(sys: &System) -> Json {
-    let mut gens = Vec::new();
-    for g in &sys.gens {
-        let g = g.borrow();
-        let s = &g.stats;
-        gens.push(Json::Obj(vec![
-            ("name".into(), Json::Str(g.name().to_string())),
-            ("issued".into(), Json::Num(s.issued as f64)),
-            ("completed".into(), Json::Num(s.completed as f64)),
-            ("bytes".into(), Json::Num(s.bytes as f64)),
-            ("read_lat_mean".into(), Json::Num(s.read_latency.mean())),
-            ("read_lat_p99".into(), Json::Num(s.read_latency.percentile(99.0) as f64)),
-            ("write_lat_mean".into(), Json::Num(s.write_latency.mean())),
-            ("data_errors".into(), Json::Num(s.data_errors as f64)),
-        ]));
-    }
+    let gens: Vec<Json> = sys.gens.iter().map(|g| gen_json(&g.borrow())).collect();
+    let slaves: Vec<Json> = sys.slave_taps.iter().map(slave_json).collect();
     let violations = sys.check_protocol();
     Json::Obj(vec![
         ("cycles".into(), Json::Num(sys.cycles as f64)),
+        ("mode".into(), Json::Str(sys.mode_str().into())),
+        ("components".into(), Json::Num(sys.component_count() as f64)),
         ("generators".into(), Json::Arr(gens)),
+        ("slaves".into(), Json::Arr(slaves)),
         ("protocol_violations".into(), Json::Num(violations.len() as f64)),
     ])
 }
 
+/// Canonical rendering of everything the sleep/wake optimization must
+/// leave unchanged: generator stats, per-slave byte counts, and the full
+/// monitor violation streams. An event-mode and a full-scan run of the
+/// same config must produce byte-identical fingerprints
+/// (`rust/tests/coordinator_engine.rs`, `benches/coordinator_engine.rs`).
+/// Engine-mode observables (`mode`, awake counts) are deliberately
+/// excluded.
+pub fn determinism_fingerprint(sys: &System) -> String {
+    let gens: Vec<Json> = sys.gens.iter().map(|g| gen_json(&g.borrow())).collect();
+    let slaves: Vec<Json> = sys.slave_taps.iter().map(slave_json).collect();
+    let violations: Vec<Json> = sys
+        .check_protocol()
+        .iter()
+        .map(|v| {
+            Json::Obj(vec![
+                ("cycle".into(), Json::Num(v.cycle as f64)),
+                ("rule".into(), Json::Str(v.rule.to_string())),
+                ("detail".into(), Json::Str(v.detail.clone())),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("cycles".into(), Json::Num(sys.cycles as f64)),
+        ("generators".into(), Json::Arr(gens)),
+        ("slaves".into(), Json::Arr(slaves)),
+        ("violations".into(), Json::Arr(violations)),
+    ])
+    .render()
+}
+
 /// Human-readable run summary.
 pub fn run_summary(sys: &System) -> String {
-    let mut out = format!("run: {} cycles\n", sys.cycles);
+    let mut out = format!(
+        "run: {} cycles ({} engine, {} components, {} awake at end)\n",
+        sys.cycles,
+        sys.mode_str(),
+        sys.component_count(),
+        sys.awake_components()
+    );
     out.push_str(&format!(
         "{:<12}{:>8}{:>10}{:>12}{:>14}{:>14}{:>8}\n",
         "generator", "issued", "done", "bytes", "rd lat mean", "wr lat mean", "errs"
@@ -131,7 +179,13 @@ size = 0x1000
         sys.run(cfg.cycles);
         let j = run_report(&sys).render();
         assert!(j.contains("\"completed\":50"), "{j}");
+        assert!(j.contains("\"mode\":\"event\""), "{j}");
+        assert!(j.contains("\"slaves\":["), "{j}");
         let s = run_summary(&sys);
         assert!(s.contains("protocol violations: 0"));
+        assert!(s.contains("event engine"), "{s}");
+        let fp = determinism_fingerprint(&sys);
+        assert!(fp.contains("\"violations\":[]"), "{fp}");
+        assert!(!fp.contains("\"mode\""), "fingerprint must not depend on engine mode: {fp}");
     }
 }

@@ -73,7 +73,12 @@ fn cmd_tables(flags: &HashMap<String, String>) -> Result<()> {
 fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     let path = flags.get("config").context("--config <file> required")?;
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-    let cfg = noc::coordinator::SimCfg::from_str_toml(&text)?;
+    let mut cfg = noc::coordinator::SimCfg::from_str_toml(&text)?;
+    if flags.contains_key("full-scan") {
+        // A/B oracle: tick every component every cycle instead of the
+        // engine's sleep/wake schedule; results must be bit-identical.
+        cfg.full_scan = true;
+    }
     let mut sys = noc::coordinator::System::build(&cfg)?;
     let done = sys.run(cfg.cycles);
     if flags.contains_key("json") {
@@ -256,7 +261,8 @@ fn usage() -> ! {
          commands:\n\
          \x20 figures [--fig N]            regenerate Figs 13-21 series\n\
          \x20 tables  [--tab 1|2|3|4]      regenerate Tables 1-4\n\
-         \x20 simulate --config F [--json] run a configured topology\n\
+         \x20 simulate --config F [--json] [--full-scan]\n\
+         \x20                              run a configured topology\n\
          \x20 manticore [--size small|medium|full]\n\
          \x20           [--workload xsection|latency|conv-base|conv-stacked|conv-pipe|fc]\n\
          \x20           [--cycles N]       case-study simulations\n\

@@ -5,9 +5,12 @@
 //! §2 platform modules.
 //!
 //! The chiplet runs on the activity-tracked engine (`sim::engine`): every
-//! cluster-internal module, tree crosspoint, and endpoint registers
-//! individually in the engine arena, so idle parts of the fabric are
-//! skipped entirely. External pokes keep working through shared handles
+//! cluster-internal module, endpoint, and tree-crosspoint *part* (each
+//! per-port demux, mux, ID remapper, and input queue — see
+//! `Crosspoint::into_parts`) registers individually in the engine arena,
+//! so idle parts of the fabric are skipped entirely and a beat crossing a
+//! node wakes only the ports on its path. External pokes keep working
+//! through shared handles
 //! (`ClusterHandle`): `Dma::submit` and `RwGen::set_cfg` wake their
 //! engine components themselves. `ChipletCfg::full_scan` disables the
 //! sleep/wake optimization for A/B measurements and determinism checks
@@ -178,11 +181,20 @@ impl Chiplet {
         };
         let dma_taps = std::mem::take(&mut dma_tree.level_taps);
         let core_taps = std::mem::take(&mut core_tree.level_taps);
+        // Finer wake granularity: each node's demux/mux/remapper/queue
+        // registers individually, so a beat crossing a node wakes only the
+        // ports on its path instead of the whole crosspoint. The parts are
+        // added in the node's tick order, keeping results bit-identical to
+        // monolithic registration.
         for node in dma_tree.nodes.drain(..) {
-            engine.add(domain, node);
+            for part in node.into_parts() {
+                engine.add_boxed(domain, part);
+            }
         }
         for node in core_tree.nodes.drain(..) {
-            engine.add(domain, node);
+            for part in node.into_parts() {
+                engine.add_boxed(domain, part);
+            }
         }
 
         // --- Top level ---
@@ -258,7 +270,9 @@ impl Chiplet {
             },
         );
         engine.add(domain, core_upsizer);
-        engine.add(domain, top);
+        for part in top.into_parts() {
+            engine.add_boxed(domain, part);
+        }
         for c in io_components {
             engine.add_boxed(domain, c);
         }

@@ -13,12 +13,14 @@
 //! The same builder constructs both physically-separate networks: the
 //! 512-bit DMA network and the 64-bit core network (design goal D4).
 //!
-//! Engine integration: each crosspoint node is one engine component
-//! (`Crosspoint::bind` wires every internal channel to the node's
-//! `ComponentId`), so an idle subtree sleeps as a whole and a beat
-//! arriving at any of its ports wakes exactly the nodes on the path.
-//! The chiplet drains `Tree::nodes` into the arena after construction
-//! and keeps `Tree::level_taps` for bandwidth accounting.
+//! Engine integration: the chiplet drains `Tree::nodes` after
+//! construction and registers each node's per-port parts individually
+//! (`Crosspoint::into_parts`), so an idle subtree sleeps port-by-port and
+//! a beat arriving anywhere wakes only the demux/mux/remapper stages on
+//! its path — not whole crosspoints. `Tree::level_taps` stays behind for
+//! bandwidth accounting. A node can still register monolithically via its
+//! `Component` impl (`Crosspoint::bind` forwards one `ComponentId` to all
+//! internal channels), which standalone tests and benches use.
 
 use crate::noc::addr_decode::{AddrMap, AddrRule, DefaultPort};
 use crate::noc::crosspoint::{Crosspoint, CrosspointCfg};

@@ -270,6 +270,13 @@ impl Engine {
         }
     }
 
+    /// Whether sleep/wake tracking is enabled (false = full-scan A/B mode;
+    /// see [`Engine::set_sleep`]). Lets owners report which mode a run
+    /// used without duplicating the flag.
+    pub fn sleep_enabled(&self) -> bool {
+        self.sleep_enabled
+    }
+
     pub fn add_domain(&mut self, name: impl Into<String>, period_ps: Ps) -> DomainId {
         assert!(period_ps > 0);
         let idx = self.domains.len();

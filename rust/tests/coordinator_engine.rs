@@ -1,0 +1,164 @@
+//! Coordinator on the event engine: the A/B determinism oracle. Every
+//! config runs once under the activity-tracked engine and once in
+//! full-scan mode (`full_scan = true`); generator stats, per-slave byte
+//! counts, and the monitor violation streams must be byte-identical
+//! (`coordinator::determinism_fingerprint`). The configs also exercise
+//! the fixed hotspot (clamped hot window) and sequential (burst-derived
+//! stride) traffic patterns.
+
+use noc::coordinator::{determinism_fingerprint, SimCfg, System};
+
+/// Run `text` in both engine modes and return the two fingerprints.
+fn fingerprints(text: &str) -> (String, String) {
+    let run = |full_scan: bool| {
+        let mut cfg = SimCfg::from_str_toml(text).expect("config");
+        cfg.full_scan = full_scan;
+        let mut sys = System::build(&cfg).expect("build");
+        assert_eq!(sys.full_scan(), full_scan);
+        let done = sys.run(cfg.cycles);
+        assert!(done, "traffic must complete (full_scan={full_scan})");
+        (determinism_fingerprint(&sys), sys.cycles)
+    };
+    let (event_fp, event_cycles) = run(false);
+    let (scan_fp, scan_cycles) = run(true);
+    assert_eq!(event_cycles, scan_cycles, "modes must finish on the same cycle");
+    (event_fp, scan_fp)
+}
+
+/// Three masters over all three patterns (the hotspot one with explicit
+/// `p_hot`/`hot_span` keys), three endpoint kinds, multi-beat bursts.
+const MULTI: &str = r#"
+[sim]
+cycles = 200000
+data_bits = 64
+id_bits = 4
+pipeline = false
+
+[[master]]
+name = "uni"
+pattern = "uniform"
+base = 0x0
+span = 0x3_0000
+reads = 0.6
+total = 300
+max_outstanding = 8
+ids = 8
+
+[[master]]
+name = "seq"
+pattern = "sequential"
+base = 0x1_0000
+beats = 4
+reads = 0.5
+total = 200
+
+[[master]]
+name = "hot"
+pattern = "hotspot"
+base = 0x0
+span = 0x3_0000
+p_hot = 0.7
+hot_span = 0x2_000
+reads = 0.8
+total = 250
+max_outstanding = 4
+ids = 4
+
+[[slave]]
+name = "mem0"
+kind = "duplex"
+banks = 4
+base = 0x0
+size = 0x1_0000
+
+[[slave]]
+name = "mem1"
+kind = "simplex"
+base = 0x1_0000
+size = 0x1_0000
+
+[[slave]]
+name = "mem2"
+kind = "perfect"
+latency = 9
+base = 0x2_0000
+size = 0x1_0000
+"#;
+
+#[test]
+fn event_matches_full_scan_multi_master() {
+    let (event_fp, scan_fp) = fingerprints(MULTI);
+    assert_eq!(event_fp, scan_fp, "sleep/wake must be simulation-invisible");
+}
+
+#[test]
+fn event_matches_full_scan_pipelined() {
+    let text = MULTI.replace("pipeline = false", "pipeline = true");
+    let (event_fp, scan_fp) = fingerprints(&text);
+    assert_eq!(event_fp, scan_fp, "pipelined crossbar: modes must agree");
+}
+
+#[test]
+fn event_matches_full_scan_wide_data() {
+    // 512-bit bundles: the sequential stride becomes 256 B per 4-beat
+    // burst (the old hardcoded 64 B stride overlapped here).
+    let text = MULTI.replace("data_bits = 64", "data_bits = 512");
+    let (event_fp, scan_fp) = fingerprints(&text);
+    assert_eq!(event_fp, scan_fp, "wide-data topology: modes must agree");
+}
+
+#[test]
+fn hotspot_small_span_stays_on_decoded_path() {
+    // The master's span (0x800) is smaller than the old hardcoded 0x1000
+    // hot window, and the single slave covers exactly that span. With the
+    // clamp, every access decodes; nothing may leak to the error path.
+    let text = r#"
+[sim]
+cycles = 100000
+data_bits = 64
+id_bits = 4
+
+[[master]]
+name = "hot"
+pattern = "hotspot"
+base = 0x0
+span = 0x800
+reads = 1.0
+total = 400
+max_outstanding = 4
+
+[[slave]]
+name = "mem"
+kind = "perfect"
+latency = 3
+base = 0x0
+size = 0x800
+"#;
+    let cfg = SimCfg::from_str_toml(text).unwrap();
+    let mut sys = System::build(&cfg).unwrap();
+    assert!(sys.run(cfg.cycles), "hotspot traffic must complete");
+    assert!(sys.check_protocol().is_empty());
+    let gen_bytes: u64 = sys.gens.iter().map(|g| g.borrow().stats.bytes).sum();
+    let slave_bytes: u64 = sys.slave_taps.iter().map(|t| t.data_bytes()).sum();
+    assert!(gen_bytes > 0);
+    assert_eq!(
+        slave_bytes, gen_bytes,
+        "every beat must reach the mapped slave, none the error path"
+    );
+}
+
+#[test]
+fn drained_event_system_goes_to_sleep() {
+    let mut cfg = SimCfg::from_str_toml(MULTI).unwrap();
+    cfg.full_scan = false;
+    let mut sys = System::build(&cfg).unwrap();
+    assert!(sys.run(cfg.cycles));
+    // Give post-completion wakes a chance to settle, then the whole
+    // topology must be asleep while cycles keep advancing.
+    sys.run_for(200);
+    let awake = sys.awake_components();
+    let total = sys.component_count();
+    // 3 gens + 3 monitors + 3 endpoints + 9 crossbar parts.
+    assert_eq!(total, 18, "every part registers individually");
+    assert!(awake * 10 <= total, "drained system should sleep: {awake}/{total} awake");
+}

@@ -1,0 +1,78 @@
+#!/usr/bin/env python3
+"""Bench trend check: compare fresh BENCH_*.json files against the
+previous CI run's archived artifact and fail on >20% regression of the
+tracked throughput metrics (see ROADMAP "Bench trend dashboards").
+
+Usage: check_bench_trend.py <prev-dir> <new-dir>
+
+Exits 0 (with a note) when no previous artifact exists — the first run
+on a branch has no baseline. Exits 1 when any tracked metric regressed
+by more than the threshold.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+# (file name, metric key) pairs; all tracked metrics are
+# higher-is-better throughput/speedup numbers.
+TRACKED = [
+    ("BENCH_tab2_manticore.json", "event_cycles_per_sec"),
+    ("BENCH_tab2_manticore.json", "speedup"),
+    ("BENCH_coordinator_engine.json", "event_cycles_per_sec"),
+    ("BENCH_coordinator_engine.json", "speedup"),
+]
+THRESHOLD = 0.20
+
+
+def metrics(path: Path):
+    with open(path) as f:
+        return json.load(f).get("metrics", {})
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    prev_dir, new_dir = Path(argv[1]), Path(argv[2])
+    if not prev_dir.is_dir():
+        print(f"no previous bench artifact at {prev_dir}; skipping trend check")
+        return 0
+    failures = []
+    for fname, key in TRACKED:
+        prev_file, new_file = prev_dir / fname, new_dir / fname
+        if not prev_file.exists():
+            print(f"{fname}:{key}: no previous copy, skipping")
+            continue
+        if not new_file.exists():
+            failures.append(f"{fname}: missing from the fresh results")
+            continue
+        prev = metrics(prev_file).get(key)
+        new = metrics(new_file).get(key)
+        if prev is None or prev <= 0:
+            print(f"{fname}:{key}: no previous value, skipping")
+            continue
+        if new is None:
+            failures.append(f"{fname}:{key}: metric missing from fresh results")
+            continue
+        change = (new - prev) / prev
+        regressed = change < -THRESHOLD
+        print(
+            f"{fname}:{key}: {prev:.4g} -> {new:.4g} "
+            f"({change:+.1%}) {'REGRESSION' if regressed else 'ok'}"
+        )
+        if regressed:
+            failures.append(
+                f"{fname}:{key} regressed {change:+.1%} ({prev:.4g} -> {new:.4g})"
+            )
+    if failures:
+        print("\nbench trend check FAILED (>20% regression):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nbench trend check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
