@@ -13,10 +13,10 @@
 use std::time::Instant;
 
 use noc::bench_harness::{iters, quick, section, Report};
-use noc::manticore::chiplet::{Chiplet, ChipletCfg};
+use noc::manticore::chiplet::{determinism_fingerprint, Chiplet, ChipletCfg};
 use noc::manticore::perf::render_table2;
 use noc::manticore::workload::{
-    conv_scripts, run_scripts, ConvCfg, ConvVariant, WorkloadResult, CONV_SMALL,
+    conv_scripts, run_scripts, xsection_submit, ConvCfg, ConvVariant, WorkloadResult, CONV_SMALL,
 };
 
 fn bench_fanout() -> Vec<usize> {
@@ -44,6 +44,19 @@ fn conv_run(full_scan: bool, variant: ConvVariant, budget: u64) -> (WorkloadResu
     let t0 = Instant::now();
     let res = run_scripts(&mut ch, scripts, budget);
     (res, t0.elapsed().as_secs_f64())
+}
+
+/// The cross-section workload on the sharded engine: every cluster
+/// DMA-reads from and DMA-writes to a neighbour for a fixed window,
+/// pre-submitted so the whole run is one parallel batch. Returns the
+/// determinism fingerprint and the wall seconds.
+fn sharded_xsection(threads: usize, cycles: u64) -> (String, f64) {
+    let cfg = ChipletCfg { fanout: bench_fanout(), threads, epoch: 16, ..ChipletCfg::full() };
+    let mut ch = Chiplet::new(cfg);
+    xsection_submit(&ch, cycles);
+    let t0 = Instant::now();
+    ch.run(cycles);
+    (determinism_fingerprint(&ch), t0.elapsed().as_secs_f64())
 }
 
 fn main() {
@@ -95,6 +108,21 @@ fn main() {
     report.metric("full_scan_cycles_per_sec", scan_cps);
     report.metric("event_cycles_per_sec", event_cps);
     report.metric("speedup", speedup);
+
+    section("sharded engine: worker threads with epoch exchange (xsection load)");
+    let shard_threads = 4usize;
+    let window = iters(100_000, 10_000);
+    let (fp1, wall1) = sharded_xsection(1, window);
+    let (fp_n, wall_n) = sharded_xsection(shard_threads, window);
+    assert_eq!(fp1, fp_n, "sharded runs must be bit-identical across thread counts");
+    let sharded_cps = window as f64 / wall_n;
+    println!(
+        "sharded engine ({shard_threads} threads): {:>10.0} cycles/s  \
+         ({:.2}s wall; 1-thread {:.2}s, {} cycles)",
+        sharded_cps, wall_n, wall1, window
+    );
+    report.metric("sharded_cycles_per_sec", sharded_cps);
+    report.metric("sharded_threads", shard_threads as f64);
     // Wall-clock assertions are unreliable on noisy shared CI runners with
     // sub-second quick-mode runs, so only enforce the floor in full mode;
     // the smoke job still records the metric in BENCH_tab2_manticore.json.

@@ -11,6 +11,15 @@
 //! must produce bit-identical generator stats and monitor violation
 //! streams (`rust/tests/coordinator_engine.rs`), and
 //! `benches/coordinator_engine.rs` records the cycles/sec of each.
+//!
+//! With `SimCfg::threads >= 1` (`noc simulate --threads N`) the system
+//! builds on the sharded engine instead: each master island (generator
+//! plus monitor) gets its own shard, the crossbar and endpoints live in
+//! shard 0, and the monitor→crossbar bundles are cut with
+//! `protocol::exchange` relays swapped at epoch barriers. The shard
+//! structure is independent of the thread count, so
+//! `coordinator::determinism_fingerprint` is bit-identical for every
+//! `N >= 1` in both engine modes.
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -25,8 +34,9 @@ use crate::noc::mem_simplex::{ArbPolicy, MemSimplex};
 use crate::noc::sram::Sram;
 use crate::noc::xbar::{xbar_master_id_bits, Xbar, XbarCfg};
 use crate::protocol::channel::Tap;
+use crate::protocol::exchange::cut_slave_export;
 use crate::protocol::{bundle, BundleCfg, Monitor, RBeat, WBeat};
-use crate::sim::{shared, Cycle, DomainId, Engine};
+use crate::sim::{shared, Component, Cycle, DomainId, Engine, ShardedEngine};
 use crate::traffic::gen::{AddrPattern, RwGen, RwGenCfg};
 use crate::traffic::perfect_slave::PerfectSlave;
 
@@ -55,11 +65,31 @@ impl SlaveTap {
     }
 }
 
+/// Which engine drives the system: the single arena (`threads = 0`) or
+/// the sharded epoch-exchange engine (one shard per master island plus
+/// shard 0 for the crossbar and endpoints).
+enum Arena {
+    Single { engine: Engine, domain: DomainId },
+    Sharded { eng: ShardedEngine },
+}
+
+impl Arena {
+    fn add_infra(&mut self, c: Box<dyn Component>) {
+        match self {
+            Arena::Single { engine, domain } => {
+                engine.add_boxed(*domain, c);
+            }
+            Arena::Sharded { eng } => {
+                eng.shard(0).add_boxed(c);
+            }
+        }
+    }
+}
+
 /// A built system ready to run.
 pub struct System {
     pub name: String,
-    engine: Engine,
-    domain: DomainId,
+    arena: Arena,
     pub gens: Vec<Rc<RefCell<RwGen>>>,
     pub monitors: Vec<Rc<RefCell<Monitor>>>,
     /// One tap per configured slave, in `SimCfg::slaves` order.
@@ -142,14 +172,25 @@ impl System {
             cfg.data_bits,
             xbar_master_id_bits(cfg.id_bits, cfg.masters.len()),
         );
-        let (mut engine, domain) = Engine::single_clock();
+        let epoch = cfg.epoch.max(1);
+        let mut arena = if cfg.threads == 0 {
+            let (engine, domain) = Engine::single_clock();
+            Arena::Single { engine, domain }
+        } else {
+            Arena::Sharded { eng: ShardedEngine::new(cfg.masters.len() + 1, epoch, cfg.threads) }
+        };
         if cfg.full_scan {
-            engine.set_sleep(false);
+            match &mut arena {
+                Arena::Single { engine, .. } => engine.set_sleep(false),
+                Arena::Sharded { eng } => eng.set_sleep(false),
+            }
         }
         let mut gens = Vec::new();
         let mut monitors = Vec::new();
 
-        // Masters -> monitors -> crossbar slave ports.
+        // Masters -> monitors -> crossbar slave ports. In sharded mode
+        // each master island lives in shard i + 1 and its output bundle
+        // is cut toward the crossbar in shard 0.
         let mut xbar_slaves = Vec::new();
         for (i, mc) in cfg.masters.iter().enumerate() {
             let (gen_m, gen_s) = bundle(&format!("{}.port", mc.name), s_cfg);
@@ -167,12 +208,27 @@ impl System {
             };
             let (g, g_adapter) = shared(RwGen::new(mc.name.clone(), gen_m, gen_cfg));
             gens.push(g);
-            engine.add(domain, g_adapter);
             let (mon, mon_adapter) =
                 shared(Monitor::new(format!("{}.monitor", mc.name), gen_s, mon_m));
             monitors.push(mon);
-            engine.add(domain, mon_adapter);
-            xbar_slaves.push(mon_s);
+            match &mut arena {
+                Arena::Single { engine, domain } => {
+                    engine.add(*domain, g_adapter);
+                    engine.add(*domain, mon_adapter);
+                    xbar_slaves.push(mon_s);
+                }
+                Arena::Sharded { eng } => {
+                    let (cut, far_s) =
+                        cut_slave_export(&format!("cut.{}", mc.name), s_cfg, mon_s, epoch);
+                    let sh = eng.shard(i + 1);
+                    sh.add(g_adapter);
+                    sh.add(mon_adapter);
+                    sh.add(cut.sender);
+                    eng.shard(0).add(cut.receiver);
+                    eng.add_links(cut.links);
+                    xbar_slaves.push(far_s);
+                }
+            }
         }
 
         // Crossbar master ports -> endpoints (address map validated first).
@@ -191,14 +247,16 @@ impl System {
             xbar_masters.push(m);
             match &sc.kind {
                 SlaveKind::Perfect { latency } => {
-                    engine.add(domain, PerfectSlave::new(sc.name.clone(), s, *latency));
+                    arena.add_infra(Box::new(PerfectSlave::new(sc.name.clone(), s, *latency)));
                 }
                 SlaveKind::Simplex { latency } => {
                     let sram = Sram::new(sc.base, sc.size as usize, *latency);
-                    engine.add(
-                        domain,
-                        MemSimplex::new(sc.name.clone(), s, sram, ArbPolicy::RoundRobin),
-                    );
+                    arena.add_infra(Box::new(MemSimplex::new(
+                        sc.name.clone(),
+                        s,
+                        sram,
+                        ArbPolicy::RoundRobin,
+                    )));
                 }
                 SlaveKind::Duplex { banks, latency } => {
                     let arr = BankArray::new(
@@ -208,7 +266,7 @@ impl System {
                         m_cfg.beat_bytes(),
                         *latency,
                     );
-                    engine.add(domain, MemDuplex::new(sc.name.clone(), s, arr));
+                    arena.add_infra(Box::new(MemDuplex::new(sc.name.clone(), s, arr)));
                 }
             }
         }
@@ -228,26 +286,26 @@ impl System {
         // registers individually, so a beat wakes only the port it
         // touches instead of the whole crossbar.
         for part in xbar.into_parts() {
-            engine.add_boxed(domain, part);
+            arena.add_infra(part);
         }
 
-        Ok(System {
-            name: "system".into(),
-            engine,
-            domain,
-            gens,
-            monitors,
-            slave_taps,
-            cycles: 0,
-        })
+        Ok(System { name: "system".into(), arena, gens, monitors, slave_taps, cycles: 0 })
     }
 
     /// Advance one cycle on the engine calendar (only awake components
     /// tick; in full-scan mode, all of them).
     pub fn step(&mut self) {
         self.cycles += 1;
-        self.engine.step();
-        debug_assert_eq!(self.engine.cycles(self.domain), self.cycles);
+        match &mut self.arena {
+            Arena::Single { engine, domain } => {
+                engine.step();
+                debug_assert_eq!(engine.cycles(*domain), self.cycles);
+            }
+            Arena::Sharded { eng } => {
+                eng.run(1);
+                debug_assert_eq!(eng.cycles(), self.cycles);
+            }
+        }
     }
 
     pub fn all_done(&self) -> bool {
@@ -257,10 +315,33 @@ impl System {
         })
     }
 
-    /// Run for up to `budget` cycles or until all generators finish.
+    /// Run for up to `budget` cycles or until all generators finish. In
+    /// sharded mode the completion check (which reads generator state
+    /// owned by worker threads mid-run) happens only at epoch
+    /// boundaries, so the stopping cycle is identical for every thread
+    /// count.
     pub fn run(&mut self, budget: Cycle) -> bool {
-        for _ in 0..budget {
-            self.step();
+        if matches!(self.arena, Arena::Single { .. }) {
+            for _ in 0..budget {
+                self.step();
+                if self.all_done() {
+                    return true;
+                }
+            }
+            return self.all_done();
+        }
+        let mut left = budget;
+        while left > 0 {
+            let step = match &mut self.arena {
+                Arena::Sharded { eng } => {
+                    let step = eng.to_next_exchange().min(left);
+                    eng.run(step);
+                    step
+                }
+                Arena::Single { .. } => unreachable!(),
+            };
+            self.cycles += step;
+            left -= step;
             if self.all_done() {
                 return true;
             }
@@ -271,8 +352,13 @@ impl System {
     /// Run for exactly `cycles` cycles, with no early exit — benches use
     /// this so event and full-scan modes simulate identical windows.
     pub fn run_for(&mut self, cycles: Cycle) {
-        for _ in 0..cycles {
-            self.step();
+        if let Arena::Sharded { eng } = &mut self.arena {
+            eng.run(cycles);
+            self.cycles += cycles;
+        } else {
+            for _ in 0..cycles {
+                self.step();
+            }
         }
     }
 
@@ -286,7 +372,18 @@ impl System {
 
     /// Whether this system runs in the full-scan A/B mode.
     pub fn full_scan(&self) -> bool {
-        !self.engine.sleep_enabled()
+        match &self.arena {
+            Arena::Single { engine, .. } => !engine.sleep_enabled(),
+            Arena::Sharded { eng } => !eng.sleep_enabled(),
+        }
+    }
+
+    /// Worker threads driving the simulation (0 = single-arena engine).
+    pub fn threads(&self) -> usize {
+        match &self.arena {
+            Arena::Single { .. } => 0,
+            Arena::Sharded { eng } => eng.threads(),
+        }
     }
 
     /// The engine mode as a report label.
@@ -298,15 +395,22 @@ impl System {
         }
     }
 
-    /// Components registered in the engine arena.
+    /// Components registered in the engine arena(s).
     pub fn component_count(&self) -> usize {
-        self.engine.component_count()
+        match &self.arena {
+            Arena::Single { engine, .. } => engine.component_count(),
+            Arena::Sharded { eng } => eng.component_count(),
+        }
     }
 
     /// Currently-awake components (observability; in full-scan mode every
-    /// component stays awake).
+    /// component stays awake, and in sharded mode the cut relays never
+    /// sleep).
     pub fn awake_components(&self) -> usize {
-        self.engine.awake_components(self.domain)
+        match &self.arena {
+            Arena::Single { engine, domain } => engine.awake_components(*domain),
+            Arena::Sharded { eng } => eng.awake_components(),
+        }
     }
 }
 
@@ -358,6 +462,19 @@ size = 0x1_0000
         assert!(done, "all traffic must complete");
         let violations = sys.check_protocol();
         assert!(violations.is_empty(), "{violations:#?}");
+        let total: u64 = sys.gens.iter().map(|g| g.borrow().stats.completed).sum();
+        assert_eq!(total, 300);
+    }
+
+    #[test]
+    fn sharded_system_completes_with_clean_protocol() {
+        let text = CFG.replace("[sim]", "[sim]\nthreads = 2\nepoch = 4");
+        let cfg = SimCfg::from_str_toml(&text).unwrap();
+        let mut sys = System::build(&cfg).unwrap();
+        assert_eq!(sys.threads(), 2);
+        let done = sys.run(cfg.cycles);
+        assert!(done, "sharded traffic must complete");
+        assert!(sys.check_protocol().is_empty());
         let total: u64 = sys.gens.iter().map(|g| g.borrow().stats.completed).sum();
         assert_eq!(total, 300);
     }

@@ -207,6 +207,14 @@ pub struct SimCfg {
     /// every cycle (the pre-engine behaviour). Kept as an A/B oracle —
     /// results must be bit-identical to event mode.
     pub full_scan: bool,
+    /// Worker threads for the sharded engine (`noc simulate --threads`).
+    /// `0` (default) = the single-arena engine; `N >= 1` shards every
+    /// master island off the crossbar behind epoch-exchange cuts and
+    /// drives the shards with `N` threads — results are bit-identical
+    /// for every `N >= 1`.
+    pub threads: usize,
+    /// Exchange epoch in cycles (sharded mode only).
+    pub epoch: u64,
     pub masters: Vec<MasterCfg>,
     pub slaves: Vec<SlaveCfg>,
 }
@@ -222,6 +230,11 @@ impl SimCfg {
         let id_bits = sim.get("id_bits").map(|v| v.as_usize()).transpose()?.unwrap_or(4);
         let pipeline = sim.get("pipeline").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
         let full_scan = sim.get("full_scan").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
+        let threads = sim.get("threads").map(|v| v.as_usize()).transpose()?.unwrap_or(0);
+        let epoch = get_u64(sim, "epoch", 8)?;
+        if epoch == 0 {
+            bail!("epoch must be at least 1 cycle");
+        }
 
         let mut masters = Vec::new();
         for (i, t) in doc.array("master").iter().enumerate() {
@@ -281,7 +294,17 @@ impl SimCfg {
         if masters.is_empty() || slaves.is_empty() {
             bail!("config needs at least one [[master]] and one [[slave]]");
         }
-        Ok(SimCfg { cycles, data_bits, id_bits, pipeline, full_scan, masters, slaves })
+        Ok(SimCfg {
+            cycles,
+            data_bits,
+            id_bits,
+            pipeline,
+            full_scan,
+            threads,
+            epoch,
+            masters,
+            slaves,
+        })
     }
 
     pub fn from_str_toml(text: &str) -> Result<Self> {
@@ -380,6 +403,23 @@ size = 0x1_0000
         // Defaults on the second master.
         assert!((cfg.masters[1].p_hot - 0.5).abs() < 1e-9);
         assert_eq!(cfg.masters[1].hot_span, None);
+    }
+
+    #[test]
+    fn threads_and_epoch_keys_parse_with_defaults() {
+        let cfg = SimCfg::from_str_toml(EXAMPLE).unwrap();
+        assert_eq!(cfg.threads, 0, "default is the single-arena engine");
+        assert_eq!(cfg.epoch, 8);
+        let text = EXAMPLE.replace("[sim]", "[sim]\nthreads = 4\nepoch = 16");
+        let cfg = SimCfg::from_str_toml(&text).unwrap();
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.epoch, 16);
+    }
+
+    #[test]
+    fn rejects_zero_epoch() {
+        let text = EXAMPLE.replace("[sim]", "[sim]\nepoch = 0");
+        assert!(SimCfg::from_str_toml(&text).is_err());
     }
 
     #[test]

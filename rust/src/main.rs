@@ -16,7 +16,9 @@ use noc::{bail, ensure};
 
 use noc::manticore::chiplet::{Chiplet, ChipletCfg};
 use noc::manticore::perf::{render_table2, render_table3, table3, Machine};
-use noc::manticore::workload::{conv_scripts, fc_scripts, run_scripts, ConvVariant, CONV_SMALL};
+use noc::manticore::workload::{
+    conv_scripts, fc_scripts, run_scripts, xsection_submit, ConvVariant, CONV_SMALL,
+};
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut pos = Vec::new();
@@ -79,6 +81,15 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
         // engine's sleep/wake schedule; results must be bit-identical.
         cfg.full_scan = true;
     }
+    if let Some(t) = flags.get("threads") {
+        // N >= 1 engages the sharded epoch-exchange engine with N worker
+        // threads; results are bit-identical for every N >= 1.
+        cfg.threads = t.parse().context("--threads must be a non-negative integer")?;
+    }
+    if let Some(e) = flags.get("epoch") {
+        cfg.epoch = e.parse().context("--epoch must be a positive integer")?;
+        ensure!(cfg.epoch >= 1, "--epoch must be at least 1");
+    }
     let mut sys = noc::coordinator::System::build(&cfg)?;
     let done = sys.run(cfg.cycles);
     if flags.contains_key("json") {
@@ -96,12 +107,20 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn chiplet_from_flags(flags: &HashMap<String, String>) -> ChipletCfg {
-    match flags.get("size").map(|s| s.as_str()).unwrap_or("small") {
+fn chiplet_from_flags(flags: &HashMap<String, String>) -> Result<ChipletCfg> {
+    let mut cfg = match flags.get("size").map(|s| s.as_str()).unwrap_or("small") {
         "full" => ChipletCfg::full(),
         "medium" => ChipletCfg { fanout: vec![4, 4], ..ChipletCfg::full() },
         _ => ChipletCfg::small(),
+    };
+    if let Some(t) = flags.get("threads") {
+        cfg.threads = t.parse().context("--threads must be a non-negative integer")?;
     }
+    if let Some(e) = flags.get("epoch") {
+        cfg.epoch = e.parse().context("--epoch must be a positive integer")?;
+        ensure!(cfg.epoch >= 1, "--epoch must be at least 1");
+    }
+    Ok(cfg)
 }
 
 /// Cross-section bandwidth: every cluster DMA-reads from the cluster
@@ -109,40 +128,13 @@ fn chiplet_from_flags(flags: &HashMap<String, String>) -> ChipletCfg {
 fn manticore_xsection(cfg: ChipletCfg, cycles: u64) -> Result<()> {
     let n = cfg.n_clusters();
     let mut ch = Chiplet::new(cfg);
-    use noc::manticore::cluster::addr;
-    use noc::noc::dma::TransferReq;
     // Enough back-to-back blocks per engine to saturate the whole window:
     // peak is 64 B/cycle/engine. Peers are neighbours within the same L1
     // quadrant: the tree's constant link width (design property D2) means
     // the paper's 32 TB/s "cross-sectional" figure is the aggregate
     // bandwidth terminated at the cluster ports, not an all-to-all
     // bisection across the root (which a tree does not provide).
-    let block = 16 * 1024u64;
-    let blocks = (cycles * 64).div_ceil(block) + 2;
-    for c in 0..n {
-        let peer = c ^ 1;
-        for b in 0..blocks {
-            let off = 0x8000 + (b % 2) * 0x2000; // ping-pong buffers
-            ch.submit_dma(
-                c,
-                0,
-                TransferReq::OneD {
-                    src: addr::cluster_base(peer) + off,
-                    dst: addr::cluster_base(c) + off,
-                    len: block,
-                },
-            );
-            ch.submit_dma(
-                c,
-                1,
-                TransferReq::OneD {
-                    src: addr::cluster_base(c) + off + 0x4000,
-                    dst: addr::cluster_base(peer) + off + 0x4000,
-                    len: block,
-                },
-            );
-        }
-    }
+    xsection_submit(&ch, cycles);
     // Warmup, then measure over the window.
     ch.run(500);
     let bytes0 = ch.total_dma_bytes();
@@ -200,7 +192,7 @@ fn manticore_latency(cfg: ChipletCfg) -> Result<()> {
 }
 
 fn cmd_manticore(flags: &HashMap<String, String>) -> Result<()> {
-    let cfg = chiplet_from_flags(flags);
+    let cfg = chiplet_from_flags(flags)?;
     let cycles: u64 = flags.get("cycles").map(|s| s.parse()).transpose()?.unwrap_or(20_000);
     match flags.get("workload").map(|s| s.as_str()).unwrap_or("xsection") {
         "xsection" => manticore_xsection(cfg, cycles)?,
@@ -262,10 +254,14 @@ fn usage() -> ! {
          \x20 figures [--fig N]            regenerate Figs 13-21 series\n\
          \x20 tables  [--tab 1|2|3|4]      regenerate Tables 1-4\n\
          \x20 simulate --config F [--json] [--full-scan]\n\
+         \x20          [--threads N] [--epoch E]\n\
          \x20                              run a configured topology\n\
+         \x20                              (--threads >= 1: sharded engine,\n\
+         \x20                              bit-identical for every N)\n\
          \x20 manticore [--size small|medium|full]\n\
          \x20           [--workload xsection|latency|conv-base|conv-stacked|conv-pipe|fc]\n\
-         \x20           [--cycles N]       case-study simulations\n\
+         \x20           [--cycles N] [--threads N] [--epoch E]\n\
+         \x20                              case-study simulations\n\
          \x20 e2e [--artifacts DIR]        verify PJRT compute artifacts"
     );
     std::process::exit(2)

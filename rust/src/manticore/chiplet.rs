@@ -19,18 +19,33 @@
 //! Scaling: the `fanout` vector controls the instance size. The paper
 //! configuration is `[4, 4, 4, 2]` (128 clusters); tests use smaller
 //! instances of the *same* code path (e.g. `[2, 2]` = 4 clusters).
+//!
+//! Parallel sharded mode (`ChipletCfg::threads >= 1`): every cluster
+//! becomes its own `sim::shard` shard and the whole tree (plus the top
+//! crosspoint, HBM, and IO) lives in shard 0; the four cluster uplink
+//! bundles are cut with `protocol::exchange` relays and swapped at
+//! epoch barriers. Because clusters only ever talk to the trees, the
+//! shard structure is independent of the thread count, so results are
+//! bit-identical for every `threads >= 1`
+//! (`manticore::chiplet::determinism_fingerprint`,
+//! `rust/tests/engine_semantics.rs`). `threads = 0` (the default) keeps
+//! the single-arena engine with direct 1-cycle uplinks — a different,
+//! slightly tighter timing model, so its results are compared against
+//! its own full-scan oracle, not against sharded runs.
 
 use std::cell::RefCell;
 use std::rc::Rc;
 
+use crate::coordinator::report::Json;
 use crate::manticore::cluster::{addr, core_net_cfg, dma_net_cfg, Cluster, ClusterHandle};
 use crate::manticore::network::{build_tree, NodeIo, TreeCfg, UplinkTap};
 use crate::noc::addr_decode::{AddrMap, AddrRule, DefaultPort};
 use crate::noc::crosspoint::{Crosspoint, CrosspointCfg};
 use crate::noc::dma::TransferReq;
 use crate::noc::upsizer::Upsizer;
+use crate::protocol::exchange::{cut_master_export, cut_slave_export};
 use crate::protocol::{bundle, BundleCfg, MasterEnd};
-use crate::sim::{shared, Component, Cycle, DomainId, Engine};
+use crate::sim::{shared, Component, Cycle, DomainId, Engine, ShardedEngine};
 use crate::traffic::gen::RwGenCfg;
 use crate::traffic::perfect_slave::PerfectSlave;
 
@@ -51,6 +66,14 @@ pub struct ChipletCfg {
     /// every cycle (the pre-refactor behaviour). Used for A/B perf and
     /// determinism measurements; results must be bit-identical.
     pub full_scan: bool,
+    /// Worker threads for the sharded engine. `0` (default) = the
+    /// single-arena in-process engine; `N >= 1` = epoch-exchange sharded
+    /// engine with `N` worker threads. All `N >= 1` produce bit-identical
+    /// results.
+    pub threads: usize,
+    /// Exchange epoch in cycles (sharded mode only): cut uplinks gain
+    /// this much latency and two epochs of buffering.
+    pub epoch: Cycle,
 }
 
 impl ChipletCfg {
@@ -63,6 +86,8 @@ impl ChipletCfg {
             hbm_latency: 50,
             input_queue: Some(4),
             full_scan: false,
+            threads: 0,
+            epoch: 8,
         }
     }
 
@@ -76,11 +101,40 @@ impl ChipletCfg {
     }
 }
 
+/// Which engine drives the chiplet: the single-arena event engine
+/// (`threads = 0`) or the sharded epoch-exchange engine (`threads >= 1`,
+/// one shard per cluster plus shard 0 for the trees and endpoints).
+enum Arena {
+    Single { engine: Engine, domain: DomainId },
+    Sharded { eng: ShardedEngine },
+}
+
+impl Arena {
+    /// Register an infrastructure component: the single arena, or shard 0
+    /// (trees, top crosspoint, HBM/IO endpoints).
+    fn add_infra(&mut self, c: Box<dyn Component>) {
+        match self {
+            Arena::Single { engine, domain } => {
+                engine.add_boxed(*domain, c);
+            }
+            Arena::Sharded { eng } => {
+                eng.shard(0).add_boxed(c);
+            }
+        }
+    }
+
+    fn set_sleep(&mut self, enabled: bool) {
+        match self {
+            Arena::Single { engine, .. } => engine.set_sleep(enabled),
+            Arena::Sharded { eng } => eng.set_sleep(enabled),
+        }
+    }
+}
+
 pub struct Chiplet {
     pub cfg: ChipletCfg,
     pub clusters: Vec<ClusterHandle>,
-    engine: Engine,
-    domain: DomainId,
+    arena: Arena,
     /// Per level (bottom-up), per node: DMA-tree uplink bandwidth taps.
     dma_taps: Vec<Vec<UplinkTap>>,
     core_taps: Vec<Vec<UplinkTap>>,
@@ -96,10 +150,20 @@ impl Chiplet {
         let n = cfg.n_clusters();
         let dcfg = dma_net_cfg();
         let ccfg = core_net_cfg();
+        let epoch = cfg.epoch.max(1);
 
-        let (mut engine, domain) = Engine::single_clock();
+        let mut arena = if cfg.threads == 0 {
+            let (engine, domain) = Engine::single_clock();
+            Arena::Single { engine, domain }
+        } else {
+            // Shard 0 carries the trees and endpoints; cluster i lives in
+            // shard i + 1. Clusters only talk to the trees, so the shard
+            // structure (and therefore the result) is independent of how
+            // many worker threads chunk the shards.
+            Arena::Sharded { eng: ShardedEngine::new(n + 1, epoch, cfg.threads) }
+        };
         if cfg.full_scan {
-            engine.set_sleep(false);
+            arena.set_sleep(false);
         }
 
         // --- Clusters + tree leaves ---
@@ -113,20 +177,59 @@ impl Chiplet {
             tc.seed = 0x1000 + i as u64;
             let mut cl = Cluster::new(i, tc);
             let range = (addr::cluster_base(i), addr::cluster_base(i) + addr::CLUSTER_STRIDE);
-            dma_leaves.push(NodeIo {
-                up_out: cl.dma_out.take().unwrap(),
-                up_in: cl.dma_l1_in.take().unwrap(),
-                range,
-            });
-            core_leaves.push(NodeIo {
-                up_out: cl.core_out.take().unwrap(),
-                up_in: cl.core_l1_in.take().unwrap(),
-                range,
-            });
+            let dma_out = cl.dma_out.take().unwrap();
+            let dma_in = cl.dma_l1_in.take().unwrap();
+            let core_out = cl.core_out.take().unwrap();
+            let core_in = cl.core_l1_in.take().unwrap();
             let (handle, comps) = cl.split();
-            for c in comps {
-                engine.add_boxed(domain, c);
-            }
+            let (dma_io, core_io): (NodeIo, NodeIo) = match &mut arena {
+                Arena::Single { engine, domain } => {
+                    for c in comps {
+                        engine.add_boxed(*domain, c);
+                    }
+                    (
+                        NodeIo { up_out: dma_out, up_in: dma_in, range },
+                        NodeIo { up_out: core_out, up_in: core_in, range },
+                    )
+                }
+                Arena::Sharded { eng } => {
+                    // Cut all four uplink bundles: the cluster-side relay
+                    // halves join the cluster's shard, the tree-side halves
+                    // join shard 0, and the fresh far ends become the tree
+                    // leaves.
+                    let (c_do, far_dma_out) =
+                        cut_slave_export(&format!("cut.c{i}.dmaout"), dcfg, dma_out, epoch);
+                    let (c_di, far_dma_in) =
+                        cut_master_export(&format!("cut.c{i}.dmain"), dcfg, dma_in, epoch);
+                    let (c_co, far_core_out) =
+                        cut_slave_export(&format!("cut.c{i}.coreout"), ccfg, core_out, epoch);
+                    let (c_ci, far_core_in) =
+                        cut_master_export(&format!("cut.c{i}.corein"), ccfg, core_in, epoch);
+                    let sh = eng.shard(i + 1);
+                    for c in comps {
+                        sh.add_boxed(c);
+                    }
+                    sh.add(c_do.sender);
+                    sh.add(c_di.receiver);
+                    sh.add(c_co.sender);
+                    sh.add(c_ci.receiver);
+                    let sh0 = eng.shard(0);
+                    sh0.add(c_do.receiver);
+                    sh0.add(c_di.sender);
+                    sh0.add(c_co.receiver);
+                    sh0.add(c_ci.sender);
+                    eng.add_links(c_do.links);
+                    eng.add_links(c_di.links);
+                    eng.add_links(c_co.links);
+                    eng.add_links(c_ci.links);
+                    (
+                        NodeIo { up_out: far_dma_out, up_in: far_dma_in, range },
+                        NodeIo { up_out: far_core_out, up_in: far_core_in, range },
+                    )
+                }
+            };
+            dma_leaves.push(dma_io);
+            core_leaves.push(core_io);
             clusters.push(handle);
         }
 
@@ -188,12 +291,12 @@ impl Chiplet {
         // monolithic registration.
         for node in dma_tree.nodes.drain(..) {
             for part in node.into_parts() {
-                engine.add_boxed(domain, part);
+                arena.add_infra(part);
             }
         }
         for node in core_tree.nodes.drain(..) {
             for part in node.into_parts() {
-                engine.add_boxed(domain, part);
+                arena.add_infra(part);
             }
         }
 
@@ -269,19 +372,18 @@ impl Chiplet {
                 max_txns_per_id: cfg.txns_per_id,
             },
         );
-        engine.add(domain, core_upsizer);
+        arena.add_infra(Box::new(core_upsizer));
         for part in top.into_parts() {
-            engine.add_boxed(domain, part);
+            arena.add_infra(part);
         }
         for c in io_components {
-            engine.add_boxed(domain, c);
+            arena.add_infra(c);
         }
 
         Chiplet {
             cfg,
             clusters,
-            engine,
-            domain,
+            arena,
             dma_taps,
             core_taps,
             hbm,
@@ -336,39 +438,145 @@ impl Chiplet {
     }
 
     /// Components currently awake in the engine (observability/benches).
+    /// In sharded mode the cut relays never sleep, so an otherwise idle
+    /// fabric keeps eight awake components per cluster.
     pub fn awake_components(&self) -> usize {
-        self.engine.awake_components(self.domain)
+        match &self.arena {
+            Arena::Single { engine, domain } => engine.awake_components(*domain),
+            Arena::Sharded { eng } => eng.awake_components(),
+        }
     }
 
     /// Total registered components.
     pub fn component_count(&self) -> usize {
-        self.engine.component_count()
+        match &self.arena {
+            Arena::Single { engine, .. } => engine.component_count(),
+            Arena::Sharded { eng } => eng.component_count(),
+        }
     }
 
+    /// Worker threads driving the simulation (0 = single-arena engine).
+    pub fn threads(&self) -> usize {
+        self.cfg.threads
+    }
+
+    /// Cycles until the next epoch exchange (1 in single-arena mode, so
+    /// polling loops degrade to per-cycle checks).
+    fn to_next_exchange(&self) -> Cycle {
+        match &self.arena {
+            Arena::Single { .. } => 1,
+            Arena::Sharded { eng } => eng.to_next_exchange(),
+        }
+    }
+
+    /// Advance one cycle. Per-cycle stepping is always serial, even in
+    /// sharded mode (callers like `run_scripts` poke cluster handles
+    /// between steps, which requires quiescent shards); parallelism
+    /// comes from batched `run`/`run_until` windows.
     pub fn step(&mut self) {
         self.cycles += 1;
         // Keep the external IO bundle's clock fresh so out-of-engine
         // masters can push commands with current timestamps.
         self.io_in.set_now(self.cycles);
-        self.engine.step();
-        debug_assert_eq!(self.engine.cycles(self.domain), self.cycles);
-    }
-
-    pub fn run(&mut self, cycles: Cycle) {
-        for _ in 0..cycles {
-            self.step();
+        match &mut self.arena {
+            Arena::Single { engine, domain } => {
+                engine.step();
+                debug_assert_eq!(engine.cycles(*domain), self.cycles);
+            }
+            Arena::Sharded { eng } => {
+                eng.run(1);
+                debug_assert_eq!(eng.cycles(), self.cycles);
+            }
         }
     }
 
+    pub fn run(&mut self, cycles: Cycle) {
+        if let Arena::Sharded { eng } = &mut self.arena {
+            // One parallel batch: the worker threads only join at epoch
+            // barriers instead of every cycle.
+            eng.run(cycles);
+            self.cycles += cycles;
+            self.io_in.set_now(self.cycles);
+        } else {
+            for _ in 0..cycles {
+                self.step();
+            }
+        }
+    }
+
+    /// Run until `pred` holds or the budget expires. In sharded mode the
+    /// predicate (which reads cluster handles owned by worker threads
+    /// mid-run) is evaluated only at epoch boundaries, so the stopping
+    /// cycle — and everything downstream of it — is identical for every
+    /// thread count.
     pub fn run_until(&mut self, budget: Cycle, mut pred: impl FnMut(&Chiplet) -> bool) -> bool {
-        for _ in 0..budget {
-            self.step();
+        if matches!(self.arena, Arena::Single { .. }) {
+            for _ in 0..budget {
+                self.step();
+                if pred(self) {
+                    return true;
+                }
+            }
+            return false;
+        }
+        let mut left = budget;
+        while left > 0 {
+            let step = self.to_next_exchange().min(left);
+            self.run(step);
+            left -= step;
             if pred(self) {
                 return true;
             }
         }
         false
     }
+}
+
+/// Canonical rendering of everything the engine choice (single-arena vs
+/// sharded, event vs full-scan, any worker-thread count) must leave
+/// unchanged: per-cluster DMA and core-generator results, per-level tree
+/// traffic, and endpoint byte counters. Two sharded runs of the same
+/// workload must produce byte-identical fingerprints for every
+/// `threads >= 1` (`rust/tests/engine_semantics.rs`).
+pub fn determinism_fingerprint(ch: &Chiplet) -> String {
+    let clusters: Vec<Json> = ch
+        .clusters
+        .iter()
+        .map(|c| {
+            let cores = c.cores.borrow();
+            let s = &cores.stats;
+            Json::Obj(vec![
+                ("dma_bytes".into(), Json::Num(c.dma_bytes() as f64)),
+                ("core_issued".into(), Json::Num(s.issued as f64)),
+                ("core_completed".into(), Json::Num(s.completed as f64)),
+                ("core_bytes".into(), Json::Num(s.bytes as f64)),
+                ("core_read_lat_mean".into(), Json::Num(s.read_latency.mean())),
+                ("core_data_errors".into(), Json::Num(s.data_errors as f64)),
+            ])
+        })
+        .collect();
+    let hbm: Vec<Json> = ch
+        .hbm
+        .iter()
+        .map(|h| {
+            let h = h.borrow();
+            Json::Arr(vec![Json::Num(h.bytes_read as f64), Json::Num(h.bytes_written as f64)])
+        })
+        .collect();
+    let level = |bytes: Vec<u64>| Json::Arr(bytes.iter().map(|&b| Json::Num(b as f64)).collect());
+    let io = ch.io.borrow();
+    Json::Obj(vec![
+        ("cycles".into(), Json::Num(ch.cycles as f64)),
+        ("clusters".into(), Json::Arr(clusters)),
+        ("dma_level_bytes".into(), level(ch.dma_level_bytes())),
+        ("core_level_bytes".into(), level(ch.core_level_bytes())),
+        ("hbm".into(), Json::Arr(hbm)),
+        (
+            "io".into(),
+            Json::Arr(vec![Json::Num(io.bytes_read as f64), Json::Num(io.bytes_written as f64)]),
+        ),
+    ])
+    .render()
 }
 
 #[cfg(test)]
@@ -498,6 +706,46 @@ mod tests {
             awake * 10 <= total,
             "idle fabric should sleep: {awake}/{total} components awake"
         );
+    }
+
+    #[test]
+    fn sharded_chiplet_cross_cluster_dma() {
+        // The same copy as `small_chiplet_cross_cluster_dma`, but with
+        // every cluster in its own shard and two worker threads: data
+        // must arrive intact through the epoch-exchange cuts.
+        let mut cfg = ChipletCfg::small();
+        cfg.threads = 2;
+        cfg.epoch = 4;
+        let mut ch = Chiplet::new(cfg);
+        let src_base = addr::cluster_base(3) + 0x2000;
+        let dst_base = addr::cluster_base(0) + 0x4000;
+        let data: Vec<u8> = (0..1024).map(|i| (i % 241) as u8).collect();
+        ch.clusters[3].l1.borrow().banks.borrow_mut().poke(src_base, &data);
+        let h = ch.submit_dma(0, 0, TransferReq::OneD { src: src_base, dst: dst_base, len: 1024 });
+        let ok = ch.run_until(40_000, |c| c.dma_done(0, 0, h));
+        assert!(ok, "cross-cluster DMA must complete through the cuts");
+        assert_eq!(ch.clusters[0].l1.borrow().banks.borrow().peek_vec(dst_base, 1024), data);
+    }
+
+    #[test]
+    fn sharded_chiplet_hbm_read_verifies_pattern() {
+        let mut cfg = ChipletCfg::small();
+        cfg.threads = 3;
+        cfg.epoch = 8;
+        let mut ch = Chiplet::new(cfg);
+        let dst = addr::cluster_base(1) + 0x1000;
+        let h = ch.submit_dma(
+            1,
+            0,
+            TransferReq::OneD { src: addr::HBM_BASE + 0x10000, dst, len: 4096 },
+        );
+        let ok = ch.run_until(80_000, |c| c.dma_done(1, 0, h));
+        assert!(ok, "HBM read must complete through the cuts");
+        let got = ch.clusters[1].l1.borrow().banks.borrow().peek_vec(dst, 64);
+        let expect: Vec<u8> = (0..64)
+            .map(|j| crate::traffic::perfect_slave::pattern_byte(addr::HBM_BASE + 0x10000 + j))
+            .collect();
+        assert_eq!(got, expect);
     }
 
     #[test]

@@ -198,6 +198,41 @@ pub fn fc_scripts(
     scripts
 }
 
+/// Submit the cross-section load: every cluster DMA-reads from and
+/// DMA-writes to its neighbour (peer `c ^ 1`) with enough back-to-back
+/// 16 KiB ping-pong blocks to saturate a `cycles`-long window (peak is
+/// 64 B/cycle/engine). Shared by `noc manticore --workload xsection`
+/// and `benches/tab2_manticore.rs` so both measure the same load.
+pub fn xsection_submit(ch: &Chiplet, cycles: Cycle) {
+    let n = ch.cfg.n_clusters();
+    let block = 16 * 1024u64;
+    let blocks = (cycles * 64).div_ceil(block) + 2;
+    for c in 0..n {
+        let peer = c ^ 1;
+        for b in 0..blocks {
+            let off = 0x8000 + (b % 2) * 0x2000;
+            ch.submit_dma(
+                c,
+                0,
+                TransferReq::OneD {
+                    src: addr::cluster_base(peer) + off,
+                    dst: addr::cluster_base(c) + off,
+                    len: block,
+                },
+            );
+            ch.submit_dma(
+                c,
+                1,
+                TransferReq::OneD {
+                    src: addr::cluster_base(c) + off + 0x4000,
+                    dst: addr::cluster_base(peer) + off + 0x4000,
+                    len: block,
+                },
+            );
+        }
+    }
+}
+
 struct ScriptState {
     steps: VecDeque<Step>,
     waiting: Option<(usize, u64)>,

@@ -17,6 +17,12 @@
 //!
 //! The default capacity of 2 gives full throughput (1 beat/cycle) despite
 //! the one-cycle visibility delay, like a two-deep skid buffer.
+//!
+//! Sharding constraint: a channel's two endpoints share `Rc` state and
+//! must live in the same `sim::shard` shard. Connections that cross a
+//! shard boundary are cut and carried by `protocol::exchange` relays
+//! over `Send` exchange queues instead (mirroring the rule that
+//! cross-domain channels must go through `noc::cdc`).
 
 use std::cell::{Cell, RefCell};
 use std::rc::Rc;

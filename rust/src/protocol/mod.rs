@@ -7,11 +7,13 @@
 //! on which every network module in [`crate::noc`] is built.
 
 pub mod channel;
+pub mod exchange;
 pub mod monitor;
 pub mod payload;
 pub mod port;
 
 pub use channel::{channel, wire, ChannelStats, Rx, Tx};
+pub use exchange::{cut_master_export, cut_slave_export, BundleCut, CutReceiver, CutSender};
 pub use monitor::{Monitor, Violation};
 pub use payload::{
     split_bursts, strb_all, BBeat, Burst, Bytes, Cmd, Id, RBeat, Resp, Strb, TxnTag, WBeat,

@@ -174,25 +174,31 @@ impl Default for WakeSet {
 }
 
 /// Shared-ownership adapter so helper structs can be both owned by a parent
-/// module and registered with the engine.
-pub struct Shared<T: Component>(pub Rc<RefCell<T>>);
+/// module and registered with the engine. The inner component's name is
+/// captured at construction (a `&str` cannot be borrowed out through the
+/// `RefCell`), so sleep/wake diagnostics and panic messages identify the
+/// real module instead of a generic "shared" label.
+pub struct Shared<T: Component> {
+    inner: Rc<RefCell<T>>,
+    name: String,
+}
 
 impl<T: Component> Component for Shared<T> {
     fn tick(&mut self, cycle: Cycle) -> Activity {
-        self.0.borrow_mut().tick(cycle)
+        self.inner.borrow_mut().tick(cycle)
     }
     fn name(&self) -> &str {
-        // Can't borrow through the RefCell for a &str; use a static label.
-        "shared"
+        &self.name
     }
     fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
-        self.0.borrow_mut().bind(wake, id);
+        self.inner.borrow_mut().bind(wake, id);
     }
 }
 
 pub fn shared<T: Component>(c: T) -> (Rc<RefCell<T>>, Shared<T>) {
+    let name = c.name().to_string();
     let rc = Rc::new(RefCell::new(c));
-    (rc.clone(), Shared(rc))
+    (rc.clone(), Shared { inner: rc, name })
 }
 
 struct Slot {
@@ -336,8 +342,16 @@ impl Engine {
     }
 
     /// Number of currently-awake components in a domain (observability).
+    ///
+    /// Computed from the per-slot `asleep` flags rather than the
+    /// scheduling lists: an id can transiently sit in both `active` and
+    /// `incoming` (they are only merged and deduplicated at the domain's
+    /// next edge), so summing the list lengths could double-count. The
+    /// flags are exact at every instant. O(components); observability
+    /// only, not on the hot path.
     pub fn awake_components(&self, domain: DomainId) -> usize {
-        self.domains[domain.0].active.len() + self.domains[domain.0].incoming.len()
+        let d = domain.0 as u32;
+        self.slots.iter().filter(|s| s.domain == d && !s.asleep).count()
     }
 
     fn drain_wakes(&mut self) {
@@ -527,6 +541,36 @@ mod tests {
         let met = e.run_until(d, 10, || false);
         assert!(!met);
         assert_eq!(e.cycles(d), 10);
+    }
+
+    #[test]
+    fn shared_adapter_reports_inner_name() {
+        let count = Rc::new(RefCell::new(0));
+        let (_handle, adapter) = shared(Counter { count });
+        assert_eq!(adapter.name(), "counter", "adapter must carry the wrapped component's name");
+    }
+
+    #[test]
+    fn awake_count_exact_through_wake_and_mode_changes() {
+        let (mut e, d) = Engine::single_clock();
+        let ticks = Rc::new(Cell::new(0));
+        let id = e.add(d, Worker { work_left: 3, ticks });
+        assert_eq!(e.awake_components(d), 1);
+        e.run_cycles(d, 2);
+        assert_eq!(e.awake_components(d), 1, "still working");
+        e.run_cycles(d, 8);
+        assert_eq!(e.awake_components(d), 0, "idle worker is asleep");
+        // Redundant wakes must not inflate the count at any point.
+        e.wake(id);
+        e.wake(id);
+        assert_eq!(e.awake_components(d), 0, "pending wakes count only once drained");
+        e.step();
+        assert_eq!(e.awake_components(d), 0, "woken worker ticked idle and slept again");
+        // Disabling sleep (even twice) counts each component exactly once,
+        // immediately — before the next edge merges the wake lists.
+        e.set_sleep(false);
+        e.set_sleep(false);
+        assert_eq!(e.awake_components(d), 1);
     }
 
     #[test]

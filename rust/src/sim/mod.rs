@@ -5,6 +5,7 @@
 pub mod engine;
 pub mod prop;
 pub mod rng;
+pub mod shard;
 pub mod stats;
 
 pub use engine::{
@@ -12,4 +13,5 @@ pub use engine::{
 };
 pub use prop::{prop_check, prop_replay, Gen};
 pub use rng::SplitMix64;
+pub use shard::{exchange_channel, ExchangeLink, ExchangeRx, ExchangeTx, Shard, ShardedEngine};
 pub use stats::{human_bytes, Bandwidth, LatencyStats};

@@ -47,8 +47,18 @@ impl SplitMix64 {
     }
 
     /// Pick an element index weighted by `weights`.
+    ///
+    /// Panics on an empty table or a non-positive/non-finite total: with
+    /// `total == 0.0` the scaled draw is NaN, every comparison fails, and
+    /// the old code silently returned the last index — biasing traffic
+    /// mixes instead of surfacing the misconfiguration.
     pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        assert!(!weights.is_empty(), "weighted: empty weight table");
         let total: f64 = weights.iter().sum();
+        assert!(
+            total > 0.0 && total.is_finite(),
+            "weighted: weights must sum to a positive finite value, got {total}"
+        );
         let mut x = (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64 * total;
         for (i, w) in weights.iter().enumerate() {
             if x < *w {
@@ -117,5 +127,23 @@ mod tests {
         for _ in 0..100 {
             assert_eq!(r.weighted(&[0.0, 1.0, 0.0]), 1);
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty weight table")]
+    fn weighted_rejects_empty_table() {
+        SplitMix64::new(1).weighted(&[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive finite")]
+    fn weighted_rejects_zero_total() {
+        SplitMix64::new(1).weighted(&[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive finite")]
+    fn weighted_rejects_nan_total() {
+        SplitMix64::new(1).weighted(&[1.0, f64::NAN]);
     }
 }

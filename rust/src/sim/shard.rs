@@ -1,0 +1,490 @@
+//! Parallel sharded simulation: shard-private engines advanced on worker
+//! threads, synchronized by epoch-aligned exchange at the cut links.
+//!
+//! A [`Shard`] owns a private [`Engine`] — its own component arena, wake
+//! set, and edge calendar — so the `Rc`/`RefCell` graphs of the
+//! components stay confined to one shard. Shards never share channels:
+//! connections that cross a shard boundary are *cut* and replaced by
+//! [`ExchangeTx`]/[`ExchangeRx`] queue pairs (see `protocol::exchange`
+//! for the bundle-level relays). The queues are double-buffered: beats
+//! sent during an epoch stay in the producer-side buffer and become
+//! visible to the consumer only after the exchange at the epoch barrier,
+//! and credits for consumed beats return to the producer the same way.
+//! Because neither side can observe the other's intra-epoch progress,
+//! the simulation result is bit-identical for every worker-thread count
+//! — including a single thread running the shards back-to-back.
+//!
+//! [`ShardedEngine`] drives the shards: `run` advances every shard by
+//! the same cycle count, performing the exchange whenever the global
+//! cycle count crosses a multiple of the epoch. With more than one
+//! worker thread the shards are split into contiguous chunks and
+//! advanced concurrently under `std::thread::scope`, with a barrier at
+//! every exchange; one thread (the barrier leader) performs all
+//! exchanges while the others wait.
+//!
+//! Timing model: a cut link behaves like a link with `epoch` cycles of
+//! latency and two epochs' worth of buffering — the register slices the
+//! paper inserts on long top-level wires, just deeper. The sharded
+//! topology therefore differs (deterministically) from the unsharded
+//! one; A/B comparisons are between sharded runs, or between the event
+//! and full-scan modes of the same sharded topology.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Barrier, Mutex};
+
+use crate::sim::{Component, ComponentId, Cycle, DomainId, Engine};
+
+struct ExchangeInner<T> {
+    label: String,
+    /// Free slots as seen by the producer (updated only at exchanges).
+    credits: usize,
+    /// Beats sent since the last exchange (producer side).
+    out: VecDeque<T>,
+    /// Beats delivered by an exchange, consumable now (consumer side).
+    inbox: VecDeque<T>,
+    /// Beats consumed since the last exchange (returned as credits).
+    consumed: usize,
+}
+
+/// Producer endpoint of a cross-shard exchange queue.
+pub struct ExchangeTx<T> {
+    inner: Arc<Mutex<ExchangeInner<T>>>,
+}
+
+/// Consumer endpoint of a cross-shard exchange queue.
+pub struct ExchangeRx<T> {
+    inner: Arc<Mutex<ExchangeInner<T>>>,
+}
+
+/// Type-erased handle the [`ShardedEngine`] uses to run the epoch
+/// exchange on every registered queue.
+pub trait ExchangeLink: Send + Sync {
+    /// Move the epoch's sent beats to the consumer side and return the
+    /// epoch's consumed count to the producer as credits. Must only be
+    /// called while no shard is advancing.
+    fn exchange(&self);
+    fn label(&self) -> String;
+}
+
+struct LinkImpl<T>(Arc<Mutex<ExchangeInner<T>>>);
+
+impl<T: Send> ExchangeLink for LinkImpl<T> {
+    fn exchange(&self) {
+        let mut i = self.0.lock().unwrap();
+        i.credits += i.consumed;
+        i.consumed = 0;
+        let moved = std::mem::take(&mut i.out);
+        i.inbox.extend(moved);
+    }
+
+    fn label(&self) -> String {
+        self.0.lock().unwrap().label.clone()
+    }
+}
+
+/// Create an exchange queue with `cap` total slots (in-flight beats the
+/// producer may have outstanding before credits return). For a cut
+/// sustaining one beat per cycle, `cap` must cover two epochs (credits
+/// spent in epoch k return at the end of epoch k+1).
+pub fn exchange_channel<T: Send + 'static>(
+    label: impl Into<String>,
+    cap: usize,
+) -> (ExchangeTx<T>, ExchangeRx<T>, Arc<dyn ExchangeLink>) {
+    assert!(cap >= 1);
+    let inner = Arc::new(Mutex::new(ExchangeInner {
+        label: label.into(),
+        credits: cap,
+        out: VecDeque::new(),
+        inbox: VecDeque::new(),
+        consumed: 0,
+    }));
+    (
+        ExchangeTx { inner: inner.clone() },
+        ExchangeRx { inner: inner.clone() },
+        Arc::new(LinkImpl(inner)),
+    )
+}
+
+impl<T> ExchangeTx<T> {
+    /// True iff a `send` would be accepted (a credit is available).
+    pub fn can_send(&self) -> bool {
+        self.inner.lock().unwrap().credits > 0
+    }
+
+    /// Send a beat toward the consumer shard; it becomes visible after
+    /// the next exchange. Panics without a credit (check `can_send`).
+    pub fn send(&self, beat: T) {
+        let mut i = self.inner.lock().unwrap();
+        assert!(i.credits > 0, "send on exchange {} without credit", i.label);
+        i.credits -= 1;
+        i.out.push_back(beat);
+    }
+}
+
+impl<T> ExchangeRx<T> {
+    /// Pop the next delivered beat, if any. The freed slot returns to
+    /// the producer as a credit at the next exchange.
+    pub fn recv(&self) -> Option<T> {
+        let mut i = self.inner.lock().unwrap();
+        let beat = i.inbox.pop_front();
+        if beat.is_some() {
+            i.consumed += 1;
+        }
+        beat
+    }
+
+    /// Delivered beats not yet consumed.
+    pub fn pending(&self) -> usize {
+        self.inner.lock().unwrap().inbox.len()
+    }
+}
+
+/// One shard: a private engine plus its single clock domain. All
+/// components registered here tick on that clock; their channel graphs
+/// must stay confined to this shard (cross-shard traffic goes through
+/// exchange queues).
+///
+/// # Confinement invariant
+///
+/// `add`/`add_boxed` are safe functions, but running a `ShardedEngine`
+/// with more than one thread is only sound if no `Rc`/`RefCell` state
+/// (channel cores, wake sets, `shared()` handles) is reachable from
+/// components of two *different* shards — e.g. registering the two
+/// ends of one `bundle()` in different shards is a data race. The
+/// builders in `manticore::chiplet` and `coordinator::builder` uphold
+/// this by cutting every cross-shard bundle with `protocol::exchange`
+/// relays; custom topologies must do the same (making registration an
+/// `unsafe fn` to push this obligation to call sites is a tracked
+/// follow-on in ROADMAP.md).
+pub struct Shard {
+    engine: Engine,
+    domain: DomainId,
+}
+
+impl Shard {
+    pub fn add(&mut self, c: impl Component + 'static) -> ComponentId {
+        self.engine.add(self.domain, c)
+    }
+
+    pub fn add_boxed(&mut self, c: Box<dyn Component>) -> ComponentId {
+        self.engine.add_boxed(self.domain, c)
+    }
+
+    pub fn component_count(&self) -> usize {
+        self.engine.component_count()
+    }
+
+    pub fn awake_components(&self) -> usize {
+        self.engine.awake_components(self.domain)
+    }
+}
+
+/// Wrapper asserting a shard may move to a worker thread.
+struct SendShard(Shard);
+
+// SAFETY: a Shard's component graph — every `Rc`/`RefCell` reachable
+// from its arena, including channel cores and wake set — is built
+// inside one shard and never shared with another (builders cut every
+// cross-shard connection with exchange queues, which are `Arc<Mutex>`).
+// A shard is therefore only ever touched by one thread at a time: the
+// worker advancing it during `ShardedEngine::run`, or the caller's
+// thread between runs. External handles into a shard (e.g.
+// `ClusterHandle`, endpoint `Rc`s, channel taps) must likewise only be
+// used between runs; `ShardedEngine::run` joins or barriers every
+// worker before returning, which provides the necessary happens-before
+// edge.
+unsafe impl Send for SendShard {}
+
+/// The parallel engine: a vector of shards, the exchange links cut
+/// between them, and the epoch schedule.
+pub struct ShardedEngine {
+    shards: Vec<SendShard>,
+    links: Vec<Arc<dyn ExchangeLink>>,
+    epoch: Cycle,
+    threads: usize,
+    cycles: Cycle,
+    sleep_enabled: bool,
+}
+
+impl ShardedEngine {
+    /// `n_shards` shard-private engines (each with a single 1 GHz
+    /// clock), exchanging every `epoch` cycles, advanced by up to
+    /// `threads` worker threads (more threads than shards is fine; the
+    /// extra ones simply get no work).
+    pub fn new(n_shards: usize, epoch: Cycle, threads: usize) -> Self {
+        assert!(n_shards >= 1, "need at least one shard");
+        assert!(epoch >= 1, "epoch must be at least one cycle");
+        let shards = (0..n_shards)
+            .map(|_| {
+                let (engine, domain) = Engine::single_clock();
+                SendShard(Shard { engine, domain })
+            })
+            .collect();
+        ShardedEngine {
+            shards,
+            links: Vec::new(),
+            epoch,
+            threads: threads.max(1),
+            cycles: 0,
+            sleep_enabled: true,
+        }
+    }
+
+    pub fn shard(&mut self, i: usize) -> &mut Shard {
+        &mut self.shards[i].0
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Register the exchange queues of a cut so `run` swaps them at
+    /// every epoch barrier.
+    pub fn add_links(&mut self, links: impl IntoIterator<Item = Arc<dyn ExchangeLink>>) {
+        self.links.extend(links);
+    }
+
+    /// Disable (or re-enable) sleep/wake tracking in every shard — the
+    /// full-scan A/B oracle, as on the single-arena engine.
+    pub fn set_sleep(&mut self, enabled: bool) {
+        self.sleep_enabled = enabled;
+        for sh in &mut self.shards {
+            sh.0.engine.set_sleep(enabled);
+        }
+    }
+
+    pub fn sleep_enabled(&self) -> bool {
+        self.sleep_enabled
+    }
+
+    pub fn epoch(&self) -> Cycle {
+        self.epoch
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn cycles(&self) -> Cycle {
+        self.cycles
+    }
+
+    /// Cycles until the next exchange boundary, in `(0, epoch]`.
+    pub fn to_next_exchange(&self) -> Cycle {
+        self.epoch - (self.cycles % self.epoch)
+    }
+
+    pub fn component_count(&self) -> usize {
+        self.shards.iter().map(|s| s.0.component_count()).sum()
+    }
+
+    pub fn awake_components(&self) -> usize {
+        self.shards.iter().map(|s| s.0.awake_components()).sum()
+    }
+
+    /// Split `cycles` into steps between exchange boundaries. The
+    /// boundaries are absolute multiples of `epoch`, so the exchange
+    /// schedule does not depend on how callers chunk their runs.
+    fn plan(&self, cycles: Cycle) -> Vec<(Cycle, bool)> {
+        let mut plan = Vec::new();
+        let mut now = self.cycles;
+        let target = now + cycles;
+        while now < target {
+            let boundary = (now / self.epoch + 1) * self.epoch;
+            let upto = boundary.min(target);
+            plan.push((upto - now, upto == boundary));
+            now = upto;
+        }
+        plan
+    }
+
+    /// Advance every shard by `cycles` cycles, exchanging at each epoch
+    /// boundary crossed. Bit-identical for every thread count.
+    pub fn run(&mut self, cycles: Cycle) {
+        if cycles == 0 {
+            return;
+        }
+        let plan = self.plan(cycles);
+        let workers = self.threads.min(self.shards.len());
+        if workers <= 1 || cycles == 1 {
+            for &(step, ex) in &plan {
+                for sh in &mut self.shards {
+                    let d = sh.0.domain;
+                    sh.0.engine.run_cycles(d, step);
+                }
+                if ex {
+                    for l in &self.links {
+                        l.exchange();
+                    }
+                }
+            }
+        } else {
+            let (shards, links) = (&mut self.shards, &self.links);
+            let chunk = shards.len().div_ceil(workers);
+            let mut slices: Vec<&mut [SendShard]> = shards.chunks_mut(chunk).collect();
+            let parts = slices.len();
+            let barrier = Barrier::new(parts);
+            let (plan, barrier) = (&plan, &barrier);
+            std::thread::scope(|scope| {
+                let worker = move |my: &mut [SendShard]| {
+                    for &(step, ex) in plan {
+                        for sh in my.iter_mut() {
+                            let d = sh.0.domain;
+                            sh.0.engine.run_cycles(d, step);
+                        }
+                        if ex {
+                            if barrier.wait().is_leader() {
+                                for l in links {
+                                    l.exchange();
+                                }
+                            }
+                            barrier.wait();
+                        }
+                    }
+                };
+                let first = slices.remove(0);
+                for my in slices {
+                    scope.spawn(move || worker(my));
+                }
+                worker(first);
+            });
+        }
+        self.cycles += cycles;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Activity;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn credits_bound_in_flight_beats() {
+        let (tx, rx, link) = exchange_channel::<u32>("x", 2);
+        assert!(tx.can_send());
+        tx.send(1);
+        tx.send(2);
+        assert!(!tx.can_send());
+        link.exchange();
+        assert!(!tx.can_send(), "credits return only after the consumer pops");
+        assert_eq!(rx.recv(), Some(1));
+        assert!(!tx.can_send(), "...and only at the next exchange");
+        link.exchange();
+        assert!(tx.can_send());
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), None);
+        assert_eq!(link.label(), "x");
+    }
+
+    #[test]
+    fn beats_invisible_until_exchange() {
+        let (tx, rx, link) = exchange_channel::<u32>("x", 8);
+        tx.send(7);
+        assert_eq!(rx.pending(), 0);
+        assert_eq!(rx.recv(), None);
+        link.exchange();
+        assert_eq!(rx.pending(), 1);
+        assert_eq!(rx.recv(), Some(7));
+    }
+
+    /// Sends `0..total`, one per cycle, as credits allow.
+    struct Sender {
+        tx: ExchangeTx<u64>,
+        next: u64,
+        total: u64,
+    }
+
+    impl Component for Sender {
+        fn tick(&mut self, _cy: Cycle) -> Activity {
+            if self.next < self.total && self.tx.can_send() {
+                self.tx.send(self.next);
+                self.next += 1;
+            }
+            Activity::Active
+        }
+        fn name(&self) -> &str {
+            "sender"
+        }
+    }
+
+    /// Receives one beat per cycle, logging (cycle, value).
+    struct Receiver {
+        rx: ExchangeRx<u64>,
+        log: Rc<RefCell<Vec<(Cycle, u64)>>>,
+    }
+
+    impl Component for Receiver {
+        fn tick(&mut self, cy: Cycle) -> Activity {
+            if let Some(v) = self.rx.recv() {
+                self.log.borrow_mut().push((cy, v));
+            }
+            Activity::Active
+        }
+        fn name(&self) -> &str {
+            "receiver"
+        }
+    }
+
+    fn two_shard_run(threads: usize) -> Vec<(Cycle, u64)> {
+        let mut eng = ShardedEngine::new(2, 4, threads);
+        let (tx, rx, link) = exchange_channel::<u64>("x", 16);
+        eng.add_links([link]);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        eng.shard(0).add(Sender { tx, next: 0, total: 10 });
+        eng.shard(1).add(Receiver { rx, log: log.clone() });
+        eng.run(40);
+        assert_eq!(eng.cycles(), 40);
+        let out = log.borrow().clone();
+        out
+    }
+
+    #[test]
+    fn epoch_exchange_delivers_in_order_next_epoch() {
+        // Beats sent during epoch k (cycles 4k+1..=4k+4) arrive at the
+        // barrier and are consumed one per cycle from cycle 4k+5 on:
+        // value v is sent at cycle v+1 and received at cycle v+5.
+        let expect: Vec<(Cycle, u64)> = (0..10).map(|v| (v + 5, v)).collect();
+        assert_eq!(two_shard_run(1), expect);
+    }
+
+    #[test]
+    fn identical_for_any_thread_count() {
+        let base = two_shard_run(1);
+        assert_eq!(base, two_shard_run(2));
+        assert_eq!(base, two_shard_run(8), "more threads than shards");
+    }
+
+    #[test]
+    fn run_chunking_does_not_move_exchanges() {
+        let run_chunked = |chunks: &[Cycle]| {
+            let mut eng = ShardedEngine::new(2, 4, 1);
+            let (tx, rx, link) = exchange_channel::<u64>("x", 16);
+            eng.add_links([link]);
+            let log = Rc::new(RefCell::new(Vec::new()));
+            eng.shard(0).add(Sender { tx, next: 0, total: 10 });
+            eng.shard(1).add(Receiver { rx, log: log.clone() });
+            for &c in chunks {
+                eng.run(c);
+            }
+            let out = log.borrow().clone();
+            out
+        };
+        assert_eq!(run_chunked(&[40]), run_chunked(&[1; 40]));
+        assert_eq!(run_chunked(&[40]), run_chunked(&[3, 7, 11, 19]));
+    }
+
+    #[test]
+    fn empty_shards_are_fine() {
+        let mut eng = ShardedEngine::new(5, 4, 8);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        let (tx, rx, link) = exchange_channel::<u64>("x", 16);
+        eng.add_links([link]);
+        eng.shard(1).add(Sender { tx, next: 0, total: 3 });
+        eng.shard(4).add(Receiver { rx, log: log.clone() });
+        eng.run(12);
+        assert_eq!(log.borrow().len(), 3);
+        assert_eq!(eng.component_count(), 2);
+    }
+}

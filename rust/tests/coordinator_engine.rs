@@ -147,6 +147,46 @@ size = 0x800
     );
 }
 
+/// Build and run `text` on the sharded engine and return the fingerprint.
+fn sharded_fp(text: &str, threads: usize, full_scan: bool) -> String {
+    let mut cfg = SimCfg::from_str_toml(text).expect("config");
+    cfg.threads = threads;
+    cfg.epoch = 8;
+    cfg.full_scan = full_scan;
+    let mut sys = System::build(&cfg).expect("build");
+    assert_eq!(sys.full_scan(), full_scan);
+    assert_eq!(sys.threads(), threads);
+    let done = sys.run(cfg.cycles);
+    assert!(done, "sharded traffic must complete (threads={threads}, full_scan={full_scan})");
+    assert!(sys.check_protocol().is_empty(), "protocol must stay clean across the cuts");
+    determinism_fingerprint(&sys)
+}
+
+#[test]
+fn sharded_fingerprint_identical_across_thread_counts() {
+    // The multi-master/multi-slave config: every master island in its
+    // own shard, the crossbar in shard 0. Results must be bit-identical
+    // for every worker-thread count, in both engine modes.
+    let base = sharded_fp(MULTI, 1, false);
+    for t in [2usize, 4] {
+        assert_eq!(base, sharded_fp(MULTI, t, false), "threads={t}");
+    }
+    if let Ok(s) = std::env::var("NOC_TEST_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            if n >= 1 {
+                assert_eq!(base, sharded_fp(MULTI, n, false), "NOC_TEST_THREADS={n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_event_matches_sharded_full_scan() {
+    let base = sharded_fp(MULTI, 1, false);
+    assert_eq!(base, sharded_fp(MULTI, 1, true), "event vs full-scan, 1 thread");
+    assert_eq!(base, sharded_fp(MULTI, 4, true), "event vs full-scan, 4 threads");
+}
+
 #[test]
 fn drained_event_system_goes_to_sleep() {
     let mut cfg = SimCfg::from_str_toml(MULTI).unwrap();

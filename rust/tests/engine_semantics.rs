@@ -1,15 +1,19 @@
 //! Integration: semantics of the activity-tracked event engine —
 //! multi-domain edge ordering, coincident edges, sleep/wake correctness
-//! through real channels, and determinism of full-system results between
-//! the sleep/wake and full-scan engine modes.
+//! through real channels, determinism of full-system results between
+//! the sleep/wake and full-scan engine modes, and the sharded engine:
+//! cut-bundle backpressure across epoch boundaries and bit-identical
+//! chiplet results for every worker-thread count.
 
 use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
-use noc::manticore::chiplet::{Chiplet, ChipletCfg};
+use noc::manticore::chiplet::{determinism_fingerprint, Chiplet, ChipletCfg};
 use noc::manticore::workload::{conv_scripts, run_scripts, ConvCfg, ConvVariant};
 use noc::protocol::channel::{wire, Rx, Tx};
-use noc::sim::{Activity, Component, ComponentId, Cycle, Engine, WakeSet};
+use noc::protocol::exchange::cut_slave_export;
+use noc::protocol::{bundle, BundleCfg, Cmd, MasterEnd, SlaveEnd};
+use noc::sim::{Activity, Component, ComponentId, Cycle, Engine, ShardedEngine, WakeSet};
 
 /// Logs (tag, domain cycle) on every tick; always active.
 struct Logger {
@@ -257,6 +261,163 @@ fn core_traffic_stats_identical_across_engine_modes() {
         )
     };
     assert_eq!(run(false), run(true), "sim::stats must match between engine modes");
+}
+
+// ---------------------------------------------------------------------------
+// Sharded engine
+// ---------------------------------------------------------------------------
+
+/// Thread counts every sharded determinism test compares. CI's test
+/// matrix adds its own count through `NOC_TEST_THREADS`.
+fn thread_counts() -> Vec<usize> {
+    let mut v = vec![1, 2, 4];
+    if let Ok(s) = std::env::var("NOC_TEST_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            if n >= 1 && !v.contains(&n) {
+                v.push(n);
+            }
+        }
+    }
+    v
+}
+
+/// Pushes `total` AR commands as fast as backpressure allows.
+struct ArProducer {
+    m: MasterEnd,
+    sent: Rc<Cell<u32>>,
+    total: u32,
+}
+
+impl Component for ArProducer {
+    fn tick(&mut self, cy: Cycle) -> Activity {
+        self.m.set_now(cy);
+        if self.sent.get() < self.total && self.m.ar.can_push() {
+            let mut c = Cmd::new(0, 0x40, 0, 3);
+            c.tag = self.sent.get() as u64;
+            self.m.ar.push(c);
+            self.sent.set(self.sent.get() + 1);
+        }
+        Activity::Active
+    }
+    fn name(&self) -> &str {
+        "ar_producer"
+    }
+}
+
+/// Pops one AR command every `period` cycles.
+struct SlowArConsumer {
+    s: SlaveEnd,
+    period: Cycle,
+    got: Rc<RefCell<Vec<u64>>>,
+}
+
+impl Component for SlowArConsumer {
+    fn tick(&mut self, cy: Cycle) -> Activity {
+        self.s.set_now(cy);
+        if cy % self.period == 0 && self.s.ar.can_pop() {
+            self.got.borrow_mut().push(self.s.ar.pop().tag);
+        }
+        Activity::Active
+    }
+    fn name(&self) -> &str {
+        "slow_ar_consumer"
+    }
+}
+
+#[test]
+fn cut_channel_backpressure_across_epoch_boundary() {
+    let epoch = 4;
+    let cfg = BundleCfg::new(64, 4);
+    let run = |threads: usize| {
+        let mut eng = ShardedEngine::new(2, epoch, threads);
+        let (prod_m, prod_s) = bundle("bp.prod", cfg);
+        let (cut, far_s) = cut_slave_export("bp.cut", cfg, prod_s, epoch);
+        let sent = Rc::new(Cell::new(0));
+        let got = Rc::new(RefCell::new(Vec::new()));
+        eng.shard(0).add(ArProducer { m: prod_m, sent: sent.clone(), total: 40 });
+        eng.shard(0).add(cut.sender);
+        eng.shard(1).add(cut.receiver);
+        eng.shard(1).add(SlowArConsumer { s: far_s, period: 8, got: got.clone() });
+        eng.add_links(cut.links);
+        eng.run(40);
+        // The consumer drains one command per 8 cycles, so the elastic
+        // buffering fills: AR exchange capacity (2*epoch + 2 = 10) plus
+        // two 2-deep bundles plus the handful consumed. The producer must
+        // stall well short of its 40 commands — credits only return at
+        // epoch exchanges, which is the backpressure crossing the cut.
+        let after_40 = sent.get();
+        assert!(after_40 < 30, "producer must be backpressured across the cut, sent {after_40}");
+        assert!(after_40 > 5, "some beats must have crossed, sent {after_40}");
+        eng.run(400);
+        (after_40, sent.get(), got.borrow().clone())
+    };
+    let (mid, total, order) = run(1);
+    assert_eq!(total, 40, "all commands eventually cross the cut");
+    assert_eq!(order, (0u64..40).collect::<Vec<_>>(), "FIFO order preserved across epochs");
+    assert_eq!((mid, total, order), run(2), "bit-identical with two worker threads");
+}
+
+/// A mixed sharded workload: cross-cluster DMA, an HBM read, and core
+/// traffic over the core network — all crossing the epoch-exchange cuts.
+fn sharded_chiplet_fp(threads: usize, full_scan: bool) -> String {
+    use noc::manticore::cluster::addr;
+    let mut cfg = ChipletCfg::small();
+    cfg.threads = threads;
+    cfg.epoch = 4;
+    cfg.full_scan = full_scan;
+    let mut ch = Chiplet::new(cfg);
+    ch.clusters[0].cores.borrow_mut().set_cfg(noc::traffic::gen::RwGenCfg {
+        pattern: noc::traffic::gen::AddrPattern::Uniform {
+            base: addr::cluster_base(2),
+            span: 0x4000,
+        },
+        p_read: 1.0,
+        total: Some(20),
+        max_outstanding: 4,
+        verify: false,
+        seed: 7,
+        ..Default::default()
+    });
+    let src = addr::cluster_base(3) + 0x2000;
+    let dst = addr::cluster_base(1) + 0x4000;
+    ch.clusters[3].l1.borrow().banks.borrow_mut().poke(src, &[0x5A; 512]);
+    let h = ch.submit_dma(1, 0, noc::noc::dma::TransferReq::OneD { src, dst, len: 512 });
+    let h2 = ch.submit_dma(
+        2,
+        0,
+        noc::noc::dma::TransferReq::OneD {
+            src: addr::HBM_BASE + 0x8000,
+            dst: addr::cluster_base(2) + 0x6000,
+            len: 1024,
+        },
+    );
+    let ok = ch.run_until(300_000, |c| {
+        c.dma_done(1, 0, h) && c.dma_done(2, 0, h2) && c.clusters[0].cores.borrow().done()
+    });
+    assert!(ok, "sharded workload must complete (threads={threads}, full_scan={full_scan})");
+    assert_eq!(ch.clusters[1].l1.borrow().banks.borrow().peek_vec(dst, 512), vec![0x5A; 512]);
+    determinism_fingerprint(&ch)
+}
+
+#[test]
+fn sharded_chiplet_fingerprint_identical_across_thread_counts() {
+    let base = sharded_chiplet_fp(1, false);
+    for t in thread_counts().into_iter().skip(1) {
+        assert_eq!(base, sharded_chiplet_fp(t, false), "threads={t} must match threads=1");
+    }
+}
+
+#[test]
+fn sharded_chiplet_event_matches_full_scan() {
+    assert_eq!(sharded_chiplet_fp(1, false), sharded_chiplet_fp(1, true), "1 thread");
+    assert_eq!(sharded_chiplet_fp(2, false), sharded_chiplet_fp(2, true), "2 threads");
+}
+
+#[test]
+fn more_threads_than_clusters_is_deterministic() {
+    // The small chiplet has 4 clusters (5 shards); 16 worker threads
+    // means most threads get no shard — the result must not change.
+    assert_eq!(sharded_chiplet_fp(1, false), sharded_chiplet_fp(16, false));
 }
 
 #[test]

@@ -19,15 +19,40 @@ from pathlib import Path
 TRACKED = [
     ("BENCH_tab2_manticore.json", "event_cycles_per_sec"),
     ("BENCH_tab2_manticore.json", "speedup"),
+    ("BENCH_tab2_manticore.json", "sharded_cycles_per_sec"),
     ("BENCH_coordinator_engine.json", "event_cycles_per_sec"),
     ("BENCH_coordinator_engine.json", "speedup"),
 ]
 THRESHOLD = 0.20
 
 
+_METRICS_CACHE = {}
+
+
 def metrics(path: Path):
-    with open(path) as f:
-        return json.load(f).get("metrics", {})
+    """Parse a bench artifact; None if it is truncated/corrupt/unreadable.
+
+    A damaged *previous* artifact must degrade to a skip (the baseline is
+    best-effort), not crash the check — that includes files that are valid
+    JSON but not the expected object shape (e.g. a truncated rewrite that
+    left just "null"). Results are cached so a file tracked under several
+    keys is parsed (and reported unreadable) once.
+    """
+    if path in _METRICS_CACHE:
+        return _METRICS_CACHE[path]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        if not isinstance(doc, dict):
+            raise ValueError(f"expected a JSON object, got {type(doc).__name__}")
+        result = doc.get("metrics", {})
+        if not isinstance(result, dict):
+            raise ValueError(f"'metrics' is {type(result).__name__}, not an object")
+    except (json.JSONDecodeError, OSError, ValueError) as e:
+        print(f"{path}: unreadable ({e})")
+        result = None
+    _METRICS_CACHE[path] = result
+    return result
 
 
 def main(argv):
@@ -47,13 +72,28 @@ def main(argv):
         if not new_file.exists():
             failures.append(f"{fname}: missing from the fresh results")
             continue
-        prev = metrics(prev_file).get(key)
-        new = metrics(new_file).get(key)
+        prev_metrics = metrics(prev_file)
+        if prev_metrics is None:
+            print(f"{fname}:{key}: unreadable previous artifact, skipping")
+            continue
+        new_metrics = metrics(new_file)
+        if new_metrics is None:
+            msg = f"{fname}: fresh results are unreadable"
+            if msg not in failures:
+                failures.append(msg)
+            continue
+        prev = prev_metrics.get(key)
+        new = new_metrics.get(key)
         if prev is None or prev <= 0:
             print(f"{fname}:{key}: no previous value, skipping")
             continue
         if new is None:
             failures.append(f"{fname}:{key}: metric missing from fresh results")
+            continue
+        if new <= 0:
+            # A throughput of zero (or less) is a broken measurement, not
+            # a regression ratio worth computing.
+            failures.append(f"{fname}:{key}: fresh value {new!r} is not positive")
             continue
         change = (new - prev) / prev
         regressed = change < -THRESHOLD
