@@ -1,0 +1,87 @@
+//! Collective-communication bandwidth: DMA-driven ring/tree collectives
+//! over the Manticore chiplet (`rust/src/collective/`).
+//!
+//! Headline metric: `allreduce_bytes_per_cycle` — payload bytes per
+//! simulated cycle for a ring all-reduce — recorded in
+//! `BENCH_collective.json` and tracked by `scripts/check_bench_trend.py`.
+//! The bench also asserts the acceptance bound: ring all-reduce must
+//! achieve at least 50% of the ideal `2·(N−1)/N · bytes /
+//! link-bandwidth` time (simulated cycles are deterministic, so this
+//! gate cannot flake on a noisy runner).
+
+use noc::bench_harness::{quick, section, Report};
+use noc::collective::{Algo, CollOp};
+use noc::manticore::chiplet::{Chiplet, ChipletCfg};
+use noc::manticore::workload::{run_collective, CollectiveResult};
+
+fn bench_fanout() -> Vec<usize> {
+    if quick() {
+        vec![2, 2, 2] // 8 clusters — the acceptance configuration
+    } else {
+        vec![4, 4] // 16 clusters
+    }
+}
+
+fn run(op: CollOp, algo: Algo, bytes: u64, threads: usize) -> CollectiveResult {
+    let cfg = ChipletCfg { fanout: bench_fanout(), threads, ..ChipletCfg::full() };
+    let mut ch = Chiplet::new(cfg);
+    let res = run_collective(&mut ch, op, algo, bytes, 20_000_000).expect("collective builds");
+    assert!(res.finished, "{op:?}/{algo:?} must finish");
+    assert!(res.correct, "{op:?}/{algo:?} must produce the exact result on every rank");
+    res
+}
+
+fn main() {
+    let mut report = Report::new("collective");
+    let bytes = 48 * 1024u64;
+    let n: usize = bench_fanout().iter().product();
+
+    section(&format!("ring vs tree collectives, {n} clusters, {bytes} B payload"));
+    let mut show = |label: &str, r: &CollectiveResult| {
+        println!(
+            "{label:<28} {:>8} cycles  {:>7.2} B/cycle  ({:>3.0}% of ideal {:.2})",
+            r.cycles,
+            r.bytes_per_cycle,
+            100.0 * r.ideal_fraction,
+            r.ideal_bytes_per_cycle
+        );
+    };
+
+    let ring = run(CollOp::AllReduce, Algo::Ring, bytes, 0);
+    show("allreduce ring", &ring);
+    report.metric("allreduce_bytes_per_cycle", ring.bytes_per_cycle);
+    report.metric("allreduce_ideal_fraction", ring.ideal_fraction);
+    report.metric("allreduce_cycles", ring.cycles as f64);
+
+    // The tree needs two full-payload scratch slots per rank, so it runs
+    // a smaller payload to stay inside the 128 KiB L1.
+    let tree = run(CollOp::AllReduce, Algo::Tree, bytes / 2, 0);
+    show("allreduce tree (24 KiB)", &tree);
+    report.metric("tree_allreduce_bytes_per_cycle", tree.bytes_per_cycle);
+
+    let bcast = run(CollOp::Broadcast, Algo::Ring, bytes, 0);
+    show("broadcast ring (pipelined)", &bcast);
+    report.metric("broadcast_bytes_per_cycle", bcast.bytes_per_cycle);
+
+    let rs = run(CollOp::ReduceScatter, Algo::Ring, bytes, 0);
+    show("reduce-scatter ring", &rs);
+    report.metric("reduce_scatter_bytes_per_cycle", rs.bytes_per_cycle);
+
+    section("sharded engine (4 threads): same ring all-reduce");
+    let sharded = run(CollOp::AllReduce, Algo::Ring, bytes, 4);
+    show("allreduce ring --threads 4", &sharded);
+    report.metric("sharded_allreduce_cycles", sharded.cycles as f64);
+
+    // Acceptance gate (deterministic — simulated cycles, not wall clock):
+    // ring all-reduce sustains >= 50% of the ideal collective bound.
+    assert!(
+        ring.ideal_fraction >= 0.5,
+        "ring all-reduce at {:.0}% of ideal (bound: 50%)",
+        100.0 * ring.ideal_fraction
+    );
+    println!(
+        "\nring all-reduce sustains {:.0}% of the ideal 2·(N−1)/N bound (gate: >= 50%)",
+        100.0 * ring.ideal_fraction
+    );
+    report.finish();
+}

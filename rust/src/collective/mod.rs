@@ -1,0 +1,83 @@
+//! Collective communication over the chiplet: DMA-driven all-reduce,
+//! reduce-scatter, all-gather, and broadcast.
+//!
+//! The subsystem has three parts:
+//!
+//! * **Schedules** ([`schedule`]) — pure builders that map logical ranks
+//!   onto per-rank address windows and emit, for every rank, a sequential
+//!   program of [`CollStep`]s implementing a ring or tree algorithm. Data
+//!   movement is expressed as chained DMA descriptors (`noc::dma`
+//!   `submit_chain`): each pipeline sub-block is a data leg followed by an
+//!   8-byte *flag* leg into the receiver's flag arena. The DMA executes
+//!   the chain in order and the fabric keeps same-destination writes
+//!   ordered (single ID, same route), so a visible flag proves the data
+//!   legs ahead of it have been committed — no read-backs, no
+//!   acknowledgement traffic.
+//! * **Execution** ([`unit::CollectiveUnit`]) — a per-cluster engine
+//!   component that runs its rank's program: submits chains on the
+//!   cluster's write DMA engine, polls its *own* L1 for inbound flags,
+//!   performs elementwise reductions at the cluster's FPU rate, and
+//!   sleeps on DMA completion events while draining.
+//! * **Integration** — `manticore::cluster` instantiates one unit per
+//!   cluster (so it lands in the cluster's shard under `--threads`),
+//!   `manticore::workload::run_collective` seeds/verifies buffers, and
+//!   `noc manticore --workload allreduce|broadcast` drives it from the
+//!   CLI.
+//!
+//! ## Determinism under sharding
+//!
+//! A unit only ever touches state of its own cluster: its L1 banks (flag
+//! polls, reductions) and its DMA engine (chain submission). Inbound data
+//! arrives exclusively through the cluster's network slave port, which the
+//! sharded engine cuts at epoch boundaries — so a unit's observable
+//! timeline is a pure function of the epoch-exchange schedule, and the
+//! chiplet's determinism fingerprint is bit-identical for every worker
+//! thread count (`rust/tests/collective_e2e.rs`).
+
+pub mod schedule;
+pub mod unit;
+
+use std::collections::VecDeque;
+
+use crate::noc::dma::TransferReq;
+
+pub use schedule::{build, Algo, Built, CollCfg, CollOp, Elem};
+pub use unit::{CollStats, CollectiveUnit, REDUCE_BYTES_PER_CYCLE};
+
+/// One step of a rank's collective program, executed in order by its
+/// [`CollectiveUnit`].
+#[derive(Debug, Clone)]
+pub enum CollStep {
+    /// Submit a chained DMA descriptor list on the rank's write engine
+    /// and move on without waiting (completion is tracked; see
+    /// [`CollStep::WaitDrain`]).
+    Send { xfers: Vec<TransferReq> },
+    /// Poll the 8-byte little-endian word at `addr` (in the rank's own
+    /// L1) until it equals `expect`. Flag writes are chained behind their
+    /// data legs, so a matching flag proves the data arrived.
+    WaitFlag { addr: u64, expect: u64 },
+    /// Elementwise-sum `len` bytes at `src` into `dst` (both in the
+    /// rank's own L1), modeling the cluster cores reducing at
+    /// [`REDUCE_BYTES_PER_CYCLE`].
+    Reduce { src: u64, dst: u64, len: u64, elem: Elem },
+    /// Block until every chain this unit submitted has fully completed
+    /// (all write responses returned). The unit sleeps here and is woken
+    /// by the DMA's completion event.
+    WaitDrain,
+}
+
+/// A rank's full program plus the initialization pokes (zeroed flag
+/// arena, flag-source tokens) its unit applies to its own L1 at submit
+/// time.
+#[derive(Debug, Clone, Default)]
+pub struct RankSchedule {
+    pub steps: VecDeque<CollStep>,
+    pub init: Vec<(u64, Vec<u8>)>,
+}
+
+impl RankSchedule {
+    /// Number of `Send` chains in the program (observability/tests).
+    pub fn n_sends(&self) -> usize {
+        self.steps.iter().filter(|s| matches!(s, CollStep::Send { .. })).count()
+    }
+}

@@ -1,0 +1,787 @@
+//! Schedule builders: map logical ranks onto address windows and emit
+//! per-rank [`CollStep`] programs for ring and tree collectives.
+//!
+//! ## Address layout
+//!
+//! Every rank gets the same layout inside its window (offsets identical
+//! across ranks, so any rank can compute any other rank's addresses):
+//!
+//! ```text
+//! window + DATA_OFF             data buffer        (bytes)
+//!        + scratch_off          scratch slots      (algorithm-specific)
+//!        + flags_off            flag arena         (n_flags x 8 B, zeroed)
+//!        + flag_src_off         flag tokens        (n_flags x 8 B, i -> i+1)
+//! ```
+//!
+//! The *sender* DMAs each flag from its own `flag_src` table into the
+//! *receiver's* flag arena, chained behind the data sub-block it covers;
+//! the receiver polls its own arena. Flag indices are a pure function of
+//! (phase, step, sub-block) computed identically on both sides, so no
+//! coordination is needed beyond the layout.
+//!
+//! ## Ring
+//!
+//! The classic bandwidth-optimal ring: the buffer splits into `n` chunks;
+//! reduce-scatter runs `n-1` steps in which rank `r` sends chunk
+//! `(r-1-s) mod n` to rank `r+1` and reduces the chunk arriving from rank
+//! `r-1` into its buffer, leaving rank `r` with the fully-reduced chunk
+//! `r`; all-gather runs `n-1` more steps circulating the finished chunks
+//! (written straight into the destination buffers — no scratch, no
+//! reduction). All-reduce is the concatenation, moving `2·(n-1)/n ·
+//! bytes` per rank — the bound the collective bench compares against.
+//! Each phase-1 step writes into a dedicated scratch slot (a rank may run
+//! up to `n-1` steps ahead of its successor, so slots cannot be reused
+//! without acknowledgement traffic).
+//!
+//! ## Tree
+//!
+//! A binary tree over chain positions: reduce up (children stream
+//! sub-blocks into the parent's two scratch slots, the parent reduces and
+//! forwards), then broadcast down. Latency-optimal for small payloads;
+//! every edge carries the full buffer. Broadcast alone is the down-phase.
+
+use std::collections::VecDeque;
+
+use crate::bail;
+use crate::collective::{CollStep, RankSchedule};
+use crate::errors::Result;
+use crate::noc::dma::TransferReq;
+
+/// Offset of the data buffer inside each rank window (the region below
+/// is left for workload-private use).
+pub const DATA_OFF: u64 = 0x1000;
+
+/// Reduction element type. Sums are exact for `U64` (wrapping); `F64`
+/// reduces in a fixed per-chunk order, so results are deterministic but
+/// algorithm-dependent (ring and tree may differ by rounding).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Elem {
+    U64,
+    F64,
+}
+
+/// Collective operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollOp {
+    AllReduce,
+    ReduceScatter,
+    AllGather,
+    Broadcast,
+}
+
+/// Schedule algorithm family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    Ring,
+    Tree,
+}
+
+/// Collective configuration handed to [`build`].
+#[derive(Debug, Clone)]
+pub struct CollCfg {
+    pub op: CollOp,
+    pub algo: Algo,
+    /// Payload bytes per rank buffer; must be a positive multiple of 8.
+    pub bytes: u64,
+    pub elem: Elem,
+    /// Broadcast root / tree root rank.
+    pub root: usize,
+    /// Pipelining granularity: data is chained in sub-blocks of this many
+    /// bytes, each followed by its flag, so receivers can start reducing
+    /// or forwarding before the whole chunk arrives. Rounded down to a
+    /// multiple of 8 (min 8).
+    pub pipeline_bytes: u64,
+}
+
+impl CollCfg {
+    pub fn new(op: CollOp, algo: Algo, bytes: u64) -> Self {
+        CollCfg { op, algo, bytes, elem: Elem::U64, root: 0, pipeline_bytes: 2048 }
+    }
+}
+
+/// A built collective: one program per rank plus the resolved layout.
+pub struct Built {
+    pub ranks: Vec<RankSchedule>,
+    /// Absolute data-buffer base per rank.
+    pub buf: Vec<u64>,
+    /// Bytes of each rank's window the collective occupies (layout end).
+    pub footprint: u64,
+    n: usize,
+    bytes: u64,
+    chunk: u64,
+}
+
+impl Built {
+    /// Byte range `[off, off+len)` of ring chunk `c` within a buffer.
+    pub fn chunk_range(&self, c: usize) -> (u64, u64) {
+        chunk_range(self.bytes, self.chunk, self.n, c)
+    }
+}
+
+fn chunk_range(bytes: u64, chunk: u64, n: usize, c: usize) -> (u64, u64) {
+    assert!(c < n);
+    let off = (c as u64 * chunk).min(bytes);
+    let end = ((c as u64 + 1) * chunk).min(bytes);
+    (off, end - off)
+}
+
+fn token(i: u64) -> u64 {
+    i + 1
+}
+
+/// Per-rank resolved addresses.
+#[derive(Clone, Copy)]
+struct Win {
+    buf: u64,
+    scratch: u64,
+    flags: u64,
+    flag_src: u64,
+}
+
+struct Builder {
+    wins: Vec<Win>,
+    sub: u64,
+    n_flags: u64,
+    elem: Elem,
+}
+
+impl Builder {
+    /// Sub-blocks covering `len` bytes: (offset, length) pairs.
+    fn subs(&self, len: u64) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut off = 0;
+        while off < len {
+            let l = self.sub.min(len - off);
+            out.push((off, l));
+            off += l;
+        }
+        out
+    }
+
+    /// Chain legs for one pipelined transfer `my[src..] -> to[dst..]`
+    /// with flag indices `fbase..` in the receiver's arena: every
+    /// sub-block is followed by its flag write.
+    fn chain(
+        &self,
+        my: usize,
+        to: usize,
+        src: u64,
+        dst: u64,
+        len: u64,
+        fbase: u64,
+    ) -> Vec<TransferReq> {
+        let (me, them) = (self.wins[my], self.wins[to]);
+        let mut xfers = Vec::new();
+        for (k, (off, l)) in self.subs(len).into_iter().enumerate() {
+            let fi = fbase + k as u64;
+            debug_assert!(fi < self.n_flags, "flag index {fi} out of arena ({})", self.n_flags);
+            xfers.push(TransferReq::OneD { src: src + off, dst: dst + off, len: l });
+            xfers.push(TransferReq::OneD {
+                src: me.flag_src + fi * 8,
+                dst: them.flags + fi * 8,
+                len: 8,
+            });
+        }
+        xfers
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn push_send(
+        &self,
+        steps: &mut VecDeque<CollStep>,
+        my: usize,
+        to: usize,
+        src: u64,
+        dst: u64,
+        len: u64,
+        fbase: u64,
+    ) {
+        let xfers = self.chain(my, to, src, dst, len, fbase);
+        if !xfers.is_empty() {
+            steps.push_back(CollStep::Send { xfers });
+        }
+    }
+
+    /// Wait for the flags of one inbound pipelined transfer and, when
+    /// `reduce_from` is set, fold each sub-block into the buffer as it
+    /// arrives.
+    fn push_waits(
+        &self,
+        steps: &mut VecDeque<CollStep>,
+        my: usize,
+        len: u64,
+        fbase: u64,
+        reduce_from: Option<(u64, u64)>,
+    ) {
+        let me = self.wins[my];
+        for (k, (off, l)) in self.subs(len).into_iter().enumerate() {
+            let fi = fbase + k as u64;
+            steps.push_back(CollStep::WaitFlag { addr: me.flags + fi * 8, expect: token(fi) });
+            if let Some((src, dst)) = reduce_from {
+                steps.push_back(CollStep::Reduce {
+                    src: src + off,
+                    dst: dst + off,
+                    len: l,
+                    elem: self.elem,
+                });
+            }
+        }
+    }
+
+    fn init_for(&self, my: usize) -> Vec<(u64, Vec<u8>)> {
+        if self.n_flags == 0 {
+            return Vec::new();
+        }
+        let me = self.wins[my];
+        let tokens: Vec<u8> =
+            (0..self.n_flags).flat_map(|i| token(i).to_le_bytes()).collect();
+        vec![(me.flags, vec![0u8; (self.n_flags * 8) as usize]), (me.flag_src, tokens)]
+    }
+}
+
+/// Build per-rank programs for the collective described by `cfg` over the
+/// given `(base, size)` address windows (one per rank, in rank order —
+/// the caller maps ranks to clusters via the chiplet address map).
+pub fn build(cfg: &CollCfg, windows: &[(u64, u64)]) -> Result<Built> {
+    let n = windows.len();
+    if n == 0 {
+        bail!("collective needs at least one rank");
+    }
+    if cfg.bytes == 0 || cfg.bytes % 8 != 0 {
+        bail!("collective payload must be a positive multiple of 8 bytes, got {}", cfg.bytes);
+    }
+    if cfg.root >= n {
+        bail!("root rank {} out of range (n = {n})", cfg.root);
+    }
+    let bytes = cfg.bytes;
+    let sub = ((cfg.pipeline_bytes / 8).max(1) * 8).min(bytes);
+    let elems = bytes / 8;
+    let chunk = elems.div_ceil(n as u64) * 8; // max chunk bytes
+    let subs_pc = chunk.div_ceil(sub); // flag stride per ring step
+    let total_subs = bytes.div_ceil(sub);
+
+    let supported = matches!(
+        (cfg.algo, cfg.op),
+        (Algo::Ring, _) | (Algo::Tree, CollOp::AllReduce) | (Algo::Tree, CollOp::Broadcast)
+    );
+    if !supported {
+        bail!("{:?} is not implemented for {:?}", cfg.op, cfg.algo);
+    }
+
+    let (scratch_bytes, n_flags) = match (cfg.algo, cfg.op) {
+        (Algo::Ring, CollOp::AllReduce) => ((n as u64 - 1) * chunk, 2 * (n as u64 - 1) * subs_pc),
+        (Algo::Ring, CollOp::ReduceScatter) => ((n as u64 - 1) * chunk, (n as u64 - 1) * subs_pc),
+        (Algo::Ring, CollOp::AllGather) => (0, (n as u64 - 1) * subs_pc),
+        (Algo::Ring, CollOp::Broadcast) => (0, total_subs),
+        (Algo::Tree, CollOp::AllReduce) => (2 * bytes, 3 * total_subs),
+        (Algo::Tree, CollOp::Broadcast) => (0, total_subs),
+        _ => unreachable!(),
+    };
+    let scratch_off = DATA_OFF + bytes;
+    let flags_off = scratch_off + scratch_bytes;
+    let flag_src_off = flags_off + n_flags * 8;
+    let footprint = flag_src_off + n_flags * 8;
+    for (r, &(base, size)) in windows.iter().enumerate() {
+        if footprint > size {
+            bail!(
+                "collective footprint {footprint:#x} exceeds rank {r}'s window \
+                 [{base:#x}, +{size:#x}) — shrink bytes or pipeline_bytes"
+            );
+        }
+    }
+
+    let b = Builder {
+        wins: windows
+            .iter()
+            .map(|&(base, _)| Win {
+                buf: base + DATA_OFF,
+                scratch: base + scratch_off,
+                flags: base + flags_off,
+                flag_src: base + flag_src_off,
+            })
+            .collect(),
+        sub,
+        n_flags,
+        elem: cfg.elem,
+    };
+
+    let mut ranks: Vec<RankSchedule> = (0..n)
+        .map(|r| RankSchedule { steps: VecDeque::new(), init: b.init_for(r) })
+        .collect();
+
+    if n > 1 {
+        match cfg.algo {
+            Algo::Ring => build_ring(cfg, &b, bytes, chunk, subs_pc, n, &mut ranks),
+            Algo::Tree => build_tree(cfg, &b, bytes, total_subs, n, &mut ranks),
+        }
+        for r in ranks.iter_mut() {
+            if r.n_sends() > 0 {
+                r.steps.push_back(CollStep::WaitDrain);
+            }
+        }
+    }
+
+    Ok(Built {
+        ranks,
+        buf: b.wins.iter().map(|w| w.buf).collect(),
+        footprint,
+        n,
+        bytes,
+        chunk,
+    })
+}
+
+fn build_ring(
+    cfg: &CollCfg,
+    b: &Builder,
+    bytes: u64,
+    chunk: u64,
+    subs_pc: u64,
+    n: usize,
+    ranks: &mut [RankSchedule],
+) {
+    let cr = |c: usize| chunk_range(bytes, chunk, n, c);
+    let p1 = matches!(cfg.op, CollOp::AllReduce | CollOp::ReduceScatter);
+    let p2 = matches!(cfg.op, CollOp::AllReduce | CollOp::AllGather);
+    let p2_fbase0 = if p1 && p2 { (n as u64 - 1) * subs_pc } else { 0 };
+    for (r, sched) in ranks.iter_mut().enumerate() {
+        let steps = &mut sched.steps;
+        let next = (r + 1) % n;
+        let me = b.wins[r];
+        if p1 {
+            // Reduce-scatter: rank r ends up owning reduced chunk r.
+            for s in 0..n - 1 {
+                let c_send = (r + n - 1 - s) % n;
+                let c_recv = (r + 2 * n - 2 - s) % n;
+                let fbase = s as u64 * subs_pc;
+                let (so, sl) = cr(c_send);
+                // Into the successor's scratch slot for step s.
+                let slot = s as u64 * chunk;
+                b.push_send(steps, r, next, me.buf + so, b.wins[next].scratch + slot, sl, fbase);
+                let (ro, rl) = cr(c_recv);
+                b.push_waits(steps, r, rl, fbase, Some((me.scratch + slot, me.buf + ro)));
+            }
+        }
+        if p2 {
+            // All-gather: circulate finished chunks straight into the
+            // destination buffers (no scratch, no reduction).
+            for s in 0..n - 1 {
+                let g_send = (r + n - s) % n;
+                let g_recv = (r + n - 1 - s) % n;
+                let fbase = p2_fbase0 + s as u64 * subs_pc;
+                let (so, sl) = cr(g_send);
+                b.push_send(steps, r, next, me.buf + so, b.wins[next].buf + so, sl, fbase);
+                let (_, rl) = cr(g_recv);
+                b.push_waits(steps, r, rl, fbase, None);
+            }
+        }
+        if cfg.op == CollOp::Broadcast {
+            // Pipelined chain: root streams sub-blocks to the next rank;
+            // every intermediate forwards each sub-block as it lands.
+            let pos = (r + n - cfg.root) % n;
+            for (k, (off, l)) in b.subs(bytes).into_iter().enumerate() {
+                let fi = k as u64;
+                if pos > 0 {
+                    steps.push_back(CollStep::WaitFlag {
+                        addr: me.flags + fi * 8,
+                        expect: token(fi),
+                    });
+                }
+                if pos < n - 1 {
+                    b.push_send(steps, r, next, me.buf + off, b.wins[next].buf + off, l, fi);
+                }
+            }
+        }
+    }
+}
+
+fn build_tree(
+    cfg: &CollCfg,
+    b: &Builder,
+    bytes: u64,
+    total_subs: u64,
+    n: usize,
+    ranks: &mut [RankSchedule],
+) {
+    // Binary tree over chain positions; rank of position q is
+    // (root + q) mod n, so the root is position 0.
+    let rank_of = |q: usize| (cfg.root + q) % n;
+    for pos in 0..n {
+        let r = rank_of(pos);
+        let me = b.wins[r];
+        let children: Vec<usize> =
+            [2 * pos + 1, 2 * pos + 2].into_iter().filter(|&q| q < n).collect();
+        let parent = (pos > 0).then(|| rank_of((pos - 1) / 2));
+        // Scratch slot index in the parent (first child -> 0).
+        let my_slot = (1 - pos % 2) as u64;
+        let steps = &mut ranks[r].steps;
+        if cfg.op == CollOp::AllReduce {
+            // Up phase: fold the children's streams into the buffer
+            // sub-block by sub-block and forward each finished sub-block
+            // to the parent.
+            if children.is_empty() {
+                if let Some(p) = parent {
+                    b.push_send(
+                        steps,
+                        r,
+                        p,
+                        me.buf,
+                        b.wins[p].scratch + my_slot * bytes,
+                        bytes,
+                        my_slot * total_subs,
+                    );
+                }
+            } else {
+                for (k, (off, l)) in b.subs(bytes).into_iter().enumerate() {
+                    for slot in 0..children.len() as u64 {
+                        let fi = slot * total_subs + k as u64;
+                        steps.push_back(CollStep::WaitFlag {
+                            addr: me.flags + fi * 8,
+                            expect: token(fi),
+                        });
+                        steps.push_back(CollStep::Reduce {
+                            src: me.scratch + slot * bytes + off,
+                            dst: me.buf + off,
+                            len: l,
+                            elem: b.elem,
+                        });
+                    }
+                    if let Some(p) = parent {
+                        b.push_send(
+                            steps,
+                            r,
+                            p,
+                            me.buf + off,
+                            b.wins[p].scratch + my_slot * bytes + off,
+                            l,
+                            my_slot * total_subs + k as u64,
+                        );
+                    }
+                }
+            }
+        }
+        // Down phase (the whole program for Broadcast): receive each
+        // sub-block from the parent and forward it to both children.
+        let down_fbase = if cfg.op == CollOp::AllReduce { 2 * total_subs } else { 0 };
+        for (k, (off, l)) in b.subs(bytes).into_iter().enumerate() {
+            let fi = down_fbase + k as u64;
+            if parent.is_some() {
+                steps.push_back(CollStep::WaitFlag { addr: me.flags + fi * 8, expect: token(fi) });
+            }
+            for &q in &children {
+                let c = rank_of(q);
+                b.push_send(steps, r, c, me.buf + off, b.wins[c].buf + off, l, fi);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn windows(n: usize) -> Vec<(u64, u64)> {
+        (0..n).map(|r| (r as u64 * 0x10_0000, 0x2_0000)).collect()
+    }
+
+    /// Abstract interpreter: executes the per-rank programs with instant
+    /// transfers over plain byte arrays, verifying the dependency
+    /// structure (no deadlock) and the arithmetic, independent of the
+    /// NoC. Transfers resolve their destination rank by address window.
+    struct Interp {
+        mem: Vec<Vec<u8>>,
+        wins: Vec<(u64, u64)>,
+    }
+
+    impl Interp {
+        fn new(wins: &[(u64, u64)]) -> Self {
+            Interp {
+                mem: wins.iter().map(|&(_, s)| vec![0u8; s as usize]).collect(),
+                wins: wins.to_vec(),
+            }
+        }
+
+        fn locate(&self, addr: u64) -> (usize, usize) {
+            for (r, &(base, size)) in self.wins.iter().enumerate() {
+                if (base..base + size).contains(&addr) {
+                    return (r, (addr - base) as usize);
+                }
+            }
+            panic!("address {addr:#x} outside every rank window");
+        }
+
+        fn read(&self, addr: u64, len: usize) -> Vec<u8> {
+            let (r, o) = self.locate(addr);
+            self.mem[r][o..o + len].to_vec()
+        }
+
+        fn write(&mut self, addr: u64, data: &[u8]) {
+            let (r, o) = self.locate(addr);
+            self.mem[r][o..o + data.len()].copy_from_slice(data);
+        }
+
+        fn run(&mut self, built: &Built) {
+            let mut progs: Vec<VecDeque<CollStep>> = Vec::new();
+            for sched in &built.ranks {
+                for (addr, data) in &sched.init {
+                    self.write(*addr, data);
+                }
+                progs.push(sched.steps.clone());
+            }
+            loop {
+                let mut progress = false;
+                for steps in progs.iter_mut() {
+                    loop {
+                        match steps.front() {
+                            None => break,
+                            Some(CollStep::Send { .. }) => {
+                                let Some(CollStep::Send { xfers }) = steps.pop_front() else {
+                                    unreachable!()
+                                };
+                                for x in xfers {
+                                    match x {
+                                        TransferReq::OneD { src, dst, len } => {
+                                            let d = self.read(src, len as usize);
+                                            self.write(dst, &d);
+                                        }
+                                        _ => panic!("schedules emit 1D legs only"),
+                                    }
+                                }
+                                progress = true;
+                            }
+                            Some(CollStep::WaitFlag { addr, expect }) => {
+                                let got = u64::from_le_bytes(
+                                    self.read(*addr, 8).try_into().unwrap(),
+                                );
+                                if got == *expect {
+                                    steps.pop_front();
+                                    progress = true;
+                                } else {
+                                    assert_eq!(got, 0, "foreign token in flag slot");
+                                    break;
+                                }
+                            }
+                            Some(CollStep::Reduce { .. }) => {
+                                let Some(CollStep::Reduce { src, dst, len, elem }) =
+                                    steps.pop_front()
+                                else {
+                                    unreachable!()
+                                };
+                                let s = self.read(src, len as usize);
+                                let mut d = self.read(dst, len as usize);
+                                for (dc, sc) in
+                                    d.chunks_exact_mut(8).zip(s.chunks_exact(8))
+                                {
+                                    let v = match elem {
+                                        Elem::U64 => u64::from_le_bytes(dc.try_into().unwrap())
+                                            .wrapping_add(u64::from_le_bytes(
+                                                sc.try_into().unwrap(),
+                                            ))
+                                            .to_le_bytes(),
+                                        Elem::F64 => (f64::from_le_bytes(dc.try_into().unwrap())
+                                            + f64::from_le_bytes(sc.try_into().unwrap()))
+                                        .to_le_bytes(),
+                                    };
+                                    dc.copy_from_slice(&v);
+                                }
+                                self.write(dst, &d);
+                                progress = true;
+                            }
+                            Some(CollStep::WaitDrain) => {
+                                steps.pop_front();
+                                progress = true;
+                            }
+                        }
+                    }
+                }
+                if progs.iter().all(|p| p.is_empty()) {
+                    return;
+                }
+                let left: Vec<usize> = progs.iter().map(|p| p.len()).collect();
+                assert!(progress, "schedule deadlocked: {left:?}");
+            }
+        }
+    }
+
+    fn seed_val(r: usize, j: u64) -> u64 {
+        (r as u64 + 1).wrapping_mul(0x9E37_79B9) ^ j
+    }
+
+    fn check_op(op: CollOp, algo: Algo, n: usize, bytes: u64, pipeline: u64, root: usize) {
+        let wins = windows(n);
+        let mut cfg = CollCfg::new(op, algo, bytes);
+        cfg.pipeline_bytes = pipeline;
+        cfg.root = root;
+        let built = build(&cfg, &wins).unwrap();
+        let mut it = Interp::new(&wins);
+        let elems = bytes / 8;
+        // Seed: every rank's full buffer (broadcast: root only matters).
+        for r in 0..n {
+            let data: Vec<u8> = (0..elems).flat_map(|j| seed_val(r, j).to_le_bytes()).collect();
+            it.write(built.buf[r], &data);
+        }
+        it.run(&built);
+        let sums: Vec<u64> =
+            (0..elems).map(|j| (0..n).fold(0u64, |a, r| a.wrapping_add(seed_val(r, j)))).collect();
+        for r in 0..n {
+            let got = it.read(built.buf[r], bytes as usize);
+            let words: Vec<u64> = got
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            match op {
+                CollOp::AllReduce => {
+                    assert_eq!(words, sums, "rank {r} all-reduce result");
+                }
+                CollOp::ReduceScatter => {
+                    // Rank r owns reduced chunk r; other chunks unspecified.
+                    let (off, len) = built.chunk_range(r);
+                    let lo = (off / 8) as usize;
+                    let hi = lo + (len / 8) as usize;
+                    assert_eq!(&words[lo..hi], &sums[lo..hi], "rank {r} reduced chunk");
+                }
+                CollOp::AllGather => {
+                    // Every rank ends with chunk c = rank c's seed.
+                    for c in 0..n {
+                        let (off, len) = built.chunk_range(c);
+                        let lo = off / 8;
+                        for j in 0..len / 8 {
+                            assert_eq!(
+                                words[(lo + j) as usize],
+                                seed_val(c, lo + j),
+                                "rank {r} chunk {c} elem {j}"
+                            );
+                        }
+                    }
+                }
+                CollOp::Broadcast => {
+                    let expect: Vec<u64> = (0..elems).map(|j| seed_val(root, j)).collect();
+                    assert_eq!(words, expect, "rank {r} broadcast result");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_math_many_shapes() {
+        for n in [2usize, 3, 4, 5, 8] {
+            check_op(CollOp::AllReduce, Algo::Ring, n, 4096, 1024, 0);
+        }
+        // Payload not divisible by n: uneven chunks (incl. empty tail).
+        check_op(CollOp::AllReduce, Algo::Ring, 3, 4096, 512, 0);
+        check_op(CollOp::AllReduce, Algo::Ring, 7, 104, 64, 0);
+        // Payload smaller than the rank count: most chunks empty.
+        check_op(CollOp::AllReduce, Algo::Ring, 8, 24, 2048, 0);
+    }
+
+    #[test]
+    fn ring_reduce_scatter_and_allgather_math() {
+        for n in [2usize, 4, 5] {
+            check_op(CollOp::ReduceScatter, Algo::Ring, n, 2048, 512, 0);
+            check_op(CollOp::AllGather, Algo::Ring, n, 2048, 512, 0);
+        }
+    }
+
+    #[test]
+    fn broadcast_math_ring_and_tree_any_root() {
+        for algo in [Algo::Ring, Algo::Tree] {
+            for root in [0usize, 2, 4] {
+                check_op(CollOp::Broadcast, algo, 5, 1536, 256, root);
+            }
+        }
+    }
+
+    #[test]
+    fn tree_allreduce_math() {
+        for n in [2usize, 3, 4, 6, 8] {
+            check_op(CollOp::AllReduce, Algo::Tree, n, 2048, 512, 0);
+        }
+        check_op(CollOp::AllReduce, Algo::Tree, 5, 2048, 512, 3);
+    }
+
+    #[test]
+    fn f64_reduction_exact_on_integers() {
+        let wins = windows(4);
+        let mut cfg = CollCfg::new(CollOp::AllReduce, Algo::Ring, 1024);
+        cfg.elem = Elem::F64;
+        cfg.pipeline_bytes = 256;
+        let built = build(&cfg, &wins).unwrap();
+        let mut it = Interp::new(&wins);
+        for r in 0..4 {
+            let data: Vec<u8> =
+                (0..128).flat_map(|j| ((r * 100 + j) as f64).to_le_bytes()).collect();
+            it.write(built.buf[r], &data);
+        }
+        it.run(&built);
+        for r in 0..4 {
+            let got = it.read(built.buf[r], 1024);
+            for (j, c) in got.chunks_exact(8).enumerate() {
+                let v = f64::from_le_bytes(c.try_into().unwrap());
+                let expect: f64 = (0..4).map(|q| (q * 100 + j) as f64).sum();
+                assert_eq!(v, expect, "rank {r} elem {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_is_trivial() {
+        let built = build(&CollCfg::new(CollOp::AllReduce, Algo::Ring, 256), &windows(1)).unwrap();
+        assert!(built.ranks[0].steps.is_empty());
+    }
+
+    #[test]
+    fn flag_indices_unique_per_receiver() {
+        // Every WaitFlag address/token pair must be written exactly once
+        // across all senders (per receiver arena slot).
+        let wins = windows(6);
+        let cfg =
+            CollCfg { pipeline_bytes: 256, ..CollCfg::new(CollOp::AllReduce, Algo::Ring, 4096) };
+        let built = build(&cfg, &wins).unwrap();
+        let mut writes: HashMap<u64, usize> = HashMap::new();
+        for sched in &built.ranks {
+            for step in &sched.steps {
+                if let CollStep::Send { xfers } = step {
+                    for x in xfers {
+                        if let TransferReq::OneD { dst, len: 8, .. } = x {
+                            *writes.entry(*dst).or_default() += 1;
+                        }
+                    }
+                }
+            }
+        }
+        for sched in &built.ranks {
+            for step in &sched.steps {
+                if let CollStep::WaitFlag { addr, .. } = step {
+                    assert_eq!(writes.get(addr), Some(&1), "flag {addr:#x} written != once");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(build(&CollCfg::new(CollOp::AllReduce, Algo::Ring, 0), &windows(2)).is_err());
+        assert!(build(&CollCfg::new(CollOp::AllReduce, Algo::Ring, 12), &windows(2)).is_err());
+        assert!(build(&CollCfg::new(CollOp::AllGather, Algo::Tree, 256), &windows(2)).is_err());
+        let mut cfg = CollCfg::new(CollOp::Broadcast, Algo::Ring, 256);
+        cfg.root = 5;
+        assert!(build(&cfg, &windows(2)).is_err());
+        // Footprint overflow: windows too small for payload + scratch.
+        let tiny: Vec<(u64, u64)> = (0..4).map(|r| (r * 0x10_0000, 0x2000)).collect();
+        let err = build(&CollCfg::new(CollOp::AllReduce, Algo::Ring, 0x1800), &tiny)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("footprint"), "{err}");
+    }
+
+    #[test]
+    fn footprint_accounts_all_regions() {
+        let wins = windows(4);
+        let cfg = CollCfg::new(CollOp::AllReduce, Algo::Ring, 8192);
+        let built = build(&cfg, &wins).unwrap();
+        // buf + (n-1) scratch chunks + 2 flag regions, all above DATA_OFF.
+        assert!(built.footprint >= DATA_OFF + 8192 + 3 * 2048);
+        assert!(built.footprint <= 0x2_0000);
+    }
+}

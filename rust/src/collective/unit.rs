@@ -1,0 +1,335 @@
+//! Per-cluster collective orchestrator: executes a rank's [`CollStep`]
+//! program against the cluster's write DMA engine and L1 banks.
+//!
+//! The unit is an ordinary engine component registered inside its
+//! cluster (so under `--threads` it lives in the cluster's shard and only
+//! ever touches shard-local state — see the determinism notes in the
+//! module docs). Its tick discipline:
+//!
+//! * `Send` steps submit chained DMA descriptors and continue
+//!   immediately (the chain drains asynchronously);
+//! * `WaitFlag` polls the rank's own L1 every cycle (bank contents have
+//!   no wake edge, and polling in both engine modes keeps event and
+//!   full-scan runs bit-identical);
+//! * `Reduce` folds a sub-block at the cluster FPU rate
+//!   ([`REDUCE_BYTES_PER_CYCLE`]) and busies the unit for the
+//!   corresponding cycles;
+//! * `WaitDrain` (and the gap between operations) puts the unit to
+//!   *sleep*; the DMA's completion event wakes it — this is what the
+//!   descriptor-chaining refactor buys: no software polling of the
+//!   engine.
+//!
+//! Completion visibility uses [`Dma::completed_strictly_before`] so the
+//! observable schedule does not depend on component tick order within a
+//! cycle (event vs full-scan A/B equality).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::collective::schedule::Elem;
+use crate::collective::{CollStep, RankSchedule};
+use crate::noc::dma::Dma;
+use crate::noc::mem_duplex::MemDuplex;
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
+
+/// Cluster reduction rate: the eight FPUs issue two 64-bit ops per cycle
+/// (the FMA rate the workload model uses), i.e. 16 element sums moving
+/// 128 B of operand data per cycle.
+pub const REDUCE_BYTES_PER_CYCLE: u64 = 128;
+
+/// Observability counters (also part of the chiplet determinism
+/// fingerprint).
+#[derive(Debug, Clone, Default)]
+pub struct CollStats {
+    /// Collective programs run to completion.
+    pub ops_completed: u64,
+    /// Bytes folded by `Reduce` steps.
+    pub reduced_bytes: u64,
+    /// DMA descriptor chains submitted.
+    pub chains_submitted: u64,
+    /// Cycles spent busy in reductions.
+    pub reduce_cycles: u64,
+}
+
+pub struct CollectiveUnit {
+    name: String,
+    pub rank: usize,
+    /// The cluster's write DMA engine (local reads / remote writes keep
+    /// the shared network port unidirectional — the deadlock-freedom
+    /// argument of the cluster's two-engine split).
+    dma: Rc<RefCell<Dma>>,
+    /// The cluster's L1 (flag polls, reductions).
+    l1: Rc<RefCell<MemDuplex>>,
+    steps: std::collections::VecDeque<CollStep>,
+    /// Outstanding chain handles.
+    pending: Vec<u64>,
+    busy_until: Cycle,
+    op_in_flight: bool,
+    pub stats: CollStats,
+    waker: Option<(WakeSet, ComponentId)>,
+}
+
+impl CollectiveUnit {
+    pub fn new(
+        name: impl Into<String>,
+        rank: usize,
+        dma: Rc<RefCell<Dma>>,
+        l1: Rc<RefCell<MemDuplex>>,
+    ) -> Self {
+        CollectiveUnit {
+            name: name.into(),
+            rank,
+            dma,
+            l1,
+            steps: std::collections::VecDeque::new(),
+            pending: Vec::new(),
+            busy_until: 0,
+            op_in_flight: false,
+            stats: CollStats::default(),
+            waker: None,
+        }
+    }
+
+    /// Load a rank program (applies its init pokes to the local L1) and
+    /// wake the unit. One collective at a time per rank: callers submit
+    /// the next operation only after `done()`.
+    pub fn submit(&mut self, sched: RankSchedule) {
+        assert!(self.done(), "collective already in flight on rank {}", self.rank);
+        {
+            let l1 = self.l1.borrow();
+            let mut banks = l1.banks.borrow_mut();
+            for (addr, data) in &sched.init {
+                banks.poke(*addr, data);
+            }
+        }
+        self.steps = sched.steps;
+        self.op_in_flight = !self.steps.is_empty();
+        if !self.op_in_flight {
+            self.stats.ops_completed += 1; // trivial program (n = 1)
+        }
+        if let Some((ws, id)) = &self.waker {
+            ws.wake(*id);
+        }
+    }
+
+    /// Whether the current program (if any) has fully completed,
+    /// including the drain of every submitted DMA chain.
+    pub fn done(&self) -> bool {
+        self.steps.is_empty() && self.pending.is_empty() && !self.op_in_flight
+    }
+
+    fn peek_flag(&self, addr: u64) -> u64 {
+        let l1 = self.l1.borrow();
+        let banks = l1.banks.borrow();
+        u64::from_le_bytes(banks.peek_vec(addr, 8).try_into().unwrap())
+    }
+
+    fn reduce(&mut self, src: u64, dst: u64, len: u64, elem: Elem) {
+        let l1 = self.l1.borrow();
+        let mut banks = l1.banks.borrow_mut();
+        let s = banks.peek_vec(src, len as usize);
+        let mut d = banks.peek_vec(dst, len as usize);
+        for (dc, sc) in d.chunks_exact_mut(8).zip(s.chunks_exact(8)) {
+            let v = match elem {
+                Elem::U64 => u64::from_le_bytes(dc.try_into().unwrap())
+                    .wrapping_add(u64::from_le_bytes(sc.try_into().unwrap()))
+                    .to_le_bytes(),
+                Elem::F64 => (f64::from_le_bytes(dc.try_into().unwrap())
+                    + f64::from_le_bytes(sc.try_into().unwrap()))
+                .to_le_bytes(),
+            };
+            dc.copy_from_slice(&v);
+        }
+        banks.poke(dst, &d);
+        self.stats.reduced_bytes += len;
+    }
+}
+
+impl Component for CollectiveUnit {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.waker = Some((wake.clone(), id));
+        // DMA chain completions wake us out of `WaitDrain` sleeps.
+        self.dma.borrow_mut().bind_completion_waker(wake, id);
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
+        if cy < self.busy_until {
+            return Activity::Active; // reduction in progress
+        }
+        loop {
+            if !self.pending.is_empty() {
+                // `take_completed` consumes the stamp so the DMA's
+                // per-handle bookkeeping stays bounded over long runs.
+                let mut dma = self.dma.borrow_mut();
+                self.pending.retain(|&h| !dma.take_completed(h, cy));
+            }
+            match self.steps.front() {
+                None => {
+                    if !self.pending.is_empty() {
+                        // Draining after the last step: sleep until the
+                        // DMA's completion event wakes us.
+                        return Activity::Idle;
+                    }
+                    if self.op_in_flight {
+                        self.op_in_flight = false;
+                        self.stats.ops_completed += 1;
+                    }
+                    return Activity::Idle; // next submit wakes us
+                }
+                Some(CollStep::Send { .. }) => {
+                    let Some(CollStep::Send { xfers }) = self.steps.pop_front() else {
+                        unreachable!()
+                    };
+                    let h = self.dma.borrow_mut().submit_chain(xfers);
+                    self.pending.push(h);
+                    self.stats.chains_submitted += 1;
+                }
+                Some(&CollStep::WaitFlag { addr, expect }) => {
+                    if self.peek_flag(addr) == expect {
+                        self.steps.pop_front();
+                    } else {
+                        // No wake edge on bank contents: poll. Polling in
+                        // both engine modes keeps event == full-scan.
+                        return Activity::Active;
+                    }
+                }
+                Some(CollStep::Reduce { .. }) => {
+                    let Some(CollStep::Reduce { src, dst, len, elem }) = self.steps.pop_front()
+                    else {
+                        unreachable!()
+                    };
+                    self.reduce(src, dst, len, elem);
+                    let cycles = len.div_ceil(REDUCE_BYTES_PER_CYCLE);
+                    self.stats.reduce_cycles += cycles;
+                    self.busy_until = cy + cycles;
+                    return Activity::Active;
+                }
+                Some(CollStep::WaitDrain) => {
+                    if self.pending.is_empty() {
+                        self.steps.pop_front();
+                    } else {
+                        return Activity::Idle; // completion event wakes us
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::dma::TransferReq;
+    use crate::noc::mem_duplex::BankArray;
+    use crate::protocol::port::{bundle, BundleCfg};
+    use crate::sim::{shared, Engine};
+
+    /// Unit + DMA + one memory: sends loop back into the same L1, which
+    /// is enough to exercise every step kind end-to-end in-engine.
+    fn rig() -> (
+        Engine,
+        crate::sim::DomainId,
+        Rc<RefCell<CollectiveUnit>>,
+        Rc<RefCell<MemDuplex>>,
+    ) {
+        let (mut e, d) = Engine::single_clock();
+        let cfg = BundleCfg::new(64, 4);
+        let (m, s) = bundle("dma", cfg);
+        let banks = BankArray::new(0, 1 << 20, 4, 8, 1);
+        let (dma, dma_adapter) = shared(Dma::new("dma", m));
+        let (mem, mem_adapter) = shared(MemDuplex::new("mem", s, banks));
+        e.add(d, dma_adapter);
+        e.add(d, mem_adapter);
+        let (unit, unit_adapter) = shared(CollectiveUnit::new("coll", 0, dma, mem.clone()));
+        e.add(d, unit_adapter);
+        (e, d, unit, mem)
+    }
+
+    #[test]
+    fn program_runs_send_wait_reduce_drain() {
+        let (mut e, d, unit, mem) = rig();
+        let a: Vec<u8> = (0..64u64).flat_map(|j| j.to_le_bytes()).collect();
+        let b: Vec<u8> = (0..64u64).flat_map(|j| (1000 + j).to_le_bytes()).collect();
+        mem.borrow().banks.borrow_mut().poke(0x1000, &a);
+        mem.borrow().banks.borrow_mut().poke(0x2000, &b);
+        let mut sched = RankSchedule::default();
+        // Token table at 0x7000 (as the builders' init would set up).
+        sched.init.push((0x7000, 7u64.to_le_bytes().to_vec()));
+        sched.init.push((0x6000, vec![0u8; 8]));
+        sched.steps.push_back(CollStep::Send {
+            xfers: vec![
+                TransferReq::OneD { src: 0x1000, dst: 0x3000, len: 512 },
+                TransferReq::OneD { src: 0x7000, dst: 0x6000, len: 8 },
+            ],
+        });
+        sched.steps.push_back(CollStep::WaitFlag { addr: 0x6000, expect: 7 });
+        sched.steps.push_back(CollStep::Reduce {
+            src: 0x2000,
+            dst: 0x3000,
+            len: 512,
+            elem: Elem::U64,
+        });
+        sched.steps.push_back(CollStep::WaitDrain);
+        unit.borrow_mut().submit(sched);
+        let done = e.run_until(d, 10_000, || unit.borrow().done());
+        assert!(done, "program must complete: {}", unit.borrow().steps.len());
+        let got = mem.borrow().banks.borrow().peek_vec(0x3000, 512);
+        for (j, c) in got.chunks_exact(8).enumerate() {
+            assert_eq!(u64::from_le_bytes(c.try_into().unwrap()), j as u64 + 1000 + j as u64);
+        }
+        let stats = unit.borrow().stats.clone();
+        assert_eq!(stats.ops_completed, 1);
+        assert_eq!(stats.reduced_bytes, 512);
+        assert_eq!(stats.chains_submitted, 1);
+        assert!(stats.reduce_cycles >= 512 / REDUCE_BYTES_PER_CYCLE);
+    }
+
+    #[test]
+    fn reduce_rate_paces_the_unit() {
+        let (mut e, d, unit, _mem) = rig();
+        let mut sched = RankSchedule::default();
+        sched.steps.push_back(CollStep::Reduce {
+            src: 0x1000,
+            dst: 0x2000,
+            len: 4096,
+            elem: Elem::U64,
+        });
+        unit.borrow_mut().submit(sched);
+        let done_at = {
+            let u = unit.clone();
+            let mut at = 0;
+            e.run_until(d, 1000, || {
+                at += 1;
+                u.borrow().done()
+            });
+            at
+        };
+        assert!(
+            done_at as u64 >= 4096 / REDUCE_BYTES_PER_CYCLE,
+            "4 KiB reduce must take >= {} cycles, took {done_at}",
+            4096 / REDUCE_BYTES_PER_CYCLE
+        );
+    }
+
+    #[test]
+    fn empty_program_completes_instantly() {
+        let (_e, _d, unit, _mem) = rig();
+        unit.borrow_mut().submit(RankSchedule::default());
+        assert!(unit.borrow().done());
+        assert_eq!(unit.borrow().stats.ops_completed, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "already in flight")]
+    fn double_submit_rejected() {
+        let (_e, _d, unit, _mem) = rig();
+        let mut sched = RankSchedule::default();
+        sched.steps.push_back(CollStep::WaitFlag { addr: 0x6000, expect: 1 });
+        unit.borrow_mut().submit(sched.clone());
+        unit.borrow_mut().submit(sched);
+    }
+}

@@ -36,7 +36,7 @@ use crate::noc::xbar::{xbar_master_id_bits, Xbar, XbarCfg};
 use crate::protocol::channel::Tap;
 use crate::protocol::exchange::cut_slave_export;
 use crate::protocol::{bundle, BundleCfg, Monitor, RBeat, WBeat};
-use crate::sim::{shared, Component, Cycle, DomainId, Engine, ShardedEngine};
+use crate::sim::{shared, Arena, Cycle};
 use crate::traffic::gen::{AddrPattern, RwGen, RwGenCfg};
 use crate::traffic::perfect_slave::PerfectSlave;
 
@@ -62,27 +62,6 @@ impl SlaveTap {
     /// Same, in bytes.
     pub fn data_bytes(&self) -> u64 {
         self.data_beats() * self.beat_bytes
-    }
-}
-
-/// Which engine drives the system: the single arena (`threads = 0`) or
-/// the sharded epoch-exchange engine (one shard per master island plus
-/// shard 0 for the crossbar and endpoints).
-enum Arena {
-    Single { engine: Engine, domain: DomainId },
-    Sharded { eng: ShardedEngine },
-}
-
-impl Arena {
-    fn add_infra(&mut self, c: Box<dyn Component>) {
-        match self {
-            Arena::Single { engine, domain } => {
-                engine.add_boxed(*domain, c);
-            }
-            Arena::Sharded { eng } => {
-                eng.shard(0).add_boxed(c);
-            }
-        }
     }
 }
 
@@ -173,17 +152,12 @@ impl System {
             xbar_master_id_bits(cfg.id_bits, cfg.masters.len()),
         );
         let epoch = cfg.epoch.max(1);
-        let mut arena = if cfg.threads == 0 {
-            let (engine, domain) = Engine::single_clock();
-            Arena::Single { engine, domain }
-        } else {
-            Arena::Sharded { eng: ShardedEngine::new(cfg.masters.len() + 1, epoch, cfg.threads) }
-        };
+        // `threads` unset = the single-arena engine (the CLI resolves
+        // `None` to the host core count before building; see main.rs).
+        let threads = cfg.threads.unwrap_or(0);
+        let mut arena = Arena::new(threads, cfg.masters.len() + 1, epoch);
         if cfg.full_scan {
-            match &mut arena {
-                Arena::Single { engine, .. } => engine.set_sleep(false),
-                Arena::Sharded { eng } => eng.set_sleep(false),
-            }
+            arena.set_sleep(false);
         }
         let mut gens = Vec::new();
         let mut monitors = Vec::new();
@@ -220,11 +194,19 @@ impl System {
                 Arena::Sharded { eng } => {
                     let (cut, far_s) =
                         cut_slave_export(&format!("cut.{}", mc.name), s_cfg, mon_s, epoch);
-                    let sh = eng.shard(i + 1);
-                    sh.add(g_adapter);
-                    sh.add(mon_adapter);
-                    sh.add(cut.sender);
-                    eng.shard(0).add(cut.receiver);
+                    // SAFETY: the island's only outbound bundle (monitor
+                    // -> crossbar) was cut just above; shard i+1 holds
+                    // the generator, monitor, and near relay half, shard
+                    // 0 the far half — they share only the Arc-backed
+                    // exchange queues, and the `gens`/`monitors` handles
+                    // are read between runs only.
+                    unsafe {
+                        let sh = eng.shard(i + 1);
+                        sh.add(g_adapter);
+                        sh.add(mon_adapter);
+                        sh.add(cut.sender);
+                        eng.shard(0).add(cut.receiver);
+                    }
                     eng.add_links(cut.links);
                     xbar_slaves.push(far_s);
                 }
@@ -295,17 +277,7 @@ impl System {
     /// Advance one cycle on the engine calendar (only awake components
     /// tick; in full-scan mode, all of them).
     pub fn step(&mut self) {
-        self.cycles += 1;
-        match &mut self.arena {
-            Arena::Single { engine, domain } => {
-                engine.step();
-                debug_assert_eq!(engine.cycles(*domain), self.cycles);
-            }
-            Arena::Sharded { eng } => {
-                eng.run(1);
-                debug_assert_eq!(eng.cycles(), self.cycles);
-            }
-        }
+        self.run_for(1);
     }
 
     pub fn all_done(&self) -> bool {
@@ -319,28 +291,12 @@ impl System {
     /// sharded mode the completion check (which reads generator state
     /// owned by worker threads mid-run) happens only at epoch
     /// boundaries, so the stopping cycle is identical for every thread
-    /// count.
+    /// count (single-arena mode degrades to per-cycle checks).
     pub fn run(&mut self, budget: Cycle) -> bool {
-        if matches!(self.arena, Arena::Single { .. }) {
-            for _ in 0..budget {
-                self.step();
-                if self.all_done() {
-                    return true;
-                }
-            }
-            return self.all_done();
-        }
         let mut left = budget;
         while left > 0 {
-            let step = match &mut self.arena {
-                Arena::Sharded { eng } => {
-                    let step = eng.to_next_exchange().min(left);
-                    eng.run(step);
-                    step
-                }
-                Arena::Single { .. } => unreachable!(),
-            };
-            self.cycles += step;
+            let step = self.arena.to_next_exchange().min(left);
+            self.run_for(step);
             left -= step;
             if self.all_done() {
                 return true;
@@ -352,14 +308,9 @@ impl System {
     /// Run for exactly `cycles` cycles, with no early exit — benches use
     /// this so event and full-scan modes simulate identical windows.
     pub fn run_for(&mut self, cycles: Cycle) {
-        if let Arena::Sharded { eng } = &mut self.arena {
-            eng.run(cycles);
-            self.cycles += cycles;
-        } else {
-            for _ in 0..cycles {
-                self.step();
-            }
-        }
+        self.arena.advance(cycles);
+        self.cycles += cycles;
+        debug_assert_eq!(self.arena.cycles(), self.cycles);
     }
 
     /// Assert protocol compliance across all monitors.
@@ -372,18 +323,12 @@ impl System {
 
     /// Whether this system runs in the full-scan A/B mode.
     pub fn full_scan(&self) -> bool {
-        match &self.arena {
-            Arena::Single { engine, .. } => !engine.sleep_enabled(),
-            Arena::Sharded { eng } => !eng.sleep_enabled(),
-        }
+        !self.arena.sleep_enabled()
     }
 
     /// Worker threads driving the simulation (0 = single-arena engine).
     pub fn threads(&self) -> usize {
-        match &self.arena {
-            Arena::Single { .. } => 0,
-            Arena::Sharded { eng } => eng.threads(),
-        }
+        self.arena.threads()
     }
 
     /// The engine mode as a report label.
@@ -397,20 +342,14 @@ impl System {
 
     /// Components registered in the engine arena(s).
     pub fn component_count(&self) -> usize {
-        match &self.arena {
-            Arena::Single { engine, .. } => engine.component_count(),
-            Arena::Sharded { eng } => eng.component_count(),
-        }
+        self.arena.component_count()
     }
 
     /// Currently-awake components (observability; in full-scan mode every
     /// component stays awake, and in sharded mode the cut relays never
     /// sleep).
     pub fn awake_components(&self) -> usize {
-        match &self.arena {
-            Arena::Single { engine, domain } => engine.awake_components(*domain),
-            Arena::Sharded { eng } => eng.awake_components(),
-        }
+        self.arena.awake_components()
     }
 }
 

@@ -208,11 +208,14 @@ pub struct SimCfg {
     /// results must be bit-identical to event mode.
     pub full_scan: bool,
     /// Worker threads for the sharded engine (`noc simulate --threads`).
-    /// `0` (default) = the single-arena engine; `N >= 1` shards every
+    /// `Some(0)` = the single-arena engine; `Some(N >= 1)` shards every
     /// master island off the crossbar behind epoch-exchange cuts and
     /// drives the shards with `N` threads — results are bit-identical
-    /// for every `N >= 1`.
-    pub threads: usize,
+    /// for every `N >= 1`. `None` = unset: library callers get the
+    /// single-arena engine, while the CLI auto-picks the host core count
+    /// (`sim::auto_threads`; `--threads 0` stays the explicit
+    /// single-arena escape hatch).
+    pub threads: Option<usize>,
     /// Exchange epoch in cycles (sharded mode only).
     pub epoch: u64,
     pub masters: Vec<MasterCfg>,
@@ -230,7 +233,7 @@ impl SimCfg {
         let id_bits = sim.get("id_bits").map(|v| v.as_usize()).transpose()?.unwrap_or(4);
         let pipeline = sim.get("pipeline").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
         let full_scan = sim.get("full_scan").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
-        let threads = sim.get("threads").map(|v| v.as_usize()).transpose()?.unwrap_or(0);
+        let threads = sim.get("threads").map(|v| v.as_usize()).transpose()?;
         let epoch = get_u64(sim, "epoch", 8)?;
         if epoch == 0 {
             bail!("epoch must be at least 1 cycle");
@@ -408,12 +411,15 @@ size = 0x1_0000
     #[test]
     fn threads_and_epoch_keys_parse_with_defaults() {
         let cfg = SimCfg::from_str_toml(EXAMPLE).unwrap();
-        assert_eq!(cfg.threads, 0, "default is the single-arena engine");
+        assert_eq!(cfg.threads, None, "unset: library default is single-arena, CLI auto-picks");
         assert_eq!(cfg.epoch, 8);
         let text = EXAMPLE.replace("[sim]", "[sim]\nthreads = 4\nepoch = 16");
         let cfg = SimCfg::from_str_toml(&text).unwrap();
-        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.threads, Some(4));
         assert_eq!(cfg.epoch, 16);
+        let text = EXAMPLE.replace("[sim]", "[sim]\nthreads = 0");
+        let cfg = SimCfg::from_str_toml(&text).unwrap();
+        assert_eq!(cfg.threads, Some(0), "explicit 0 = single-arena");
     }
 
     #[test]

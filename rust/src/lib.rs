@@ -19,6 +19,8 @@
 //! * [`traffic`] — workload generators and memory endpoints.
 //! * [`manticore`] — the §4 full-system case study: the 1024-core MLT
 //!   accelerator's hierarchical on-chip network.
+//! * [`collective`] — DMA-driven collective communication (all-reduce,
+//!   reduce-scatter, all-gather, broadcast) over the chiplet's clusters.
 //! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas
 //!   compute graphs (`artifacts/*.hlo.txt`) from the request path.
 //! * [`coordinator`] — config system, topology builder, launcher, reports.
@@ -27,6 +29,7 @@
 
 pub mod area;
 pub mod bench_harness;
+pub mod collective;
 pub mod coordinator;
 pub mod errors;
 pub mod manticore;

@@ -14,10 +14,12 @@ use std::collections::HashMap;
 use noc::errors::{Context, Result};
 use noc::{bail, ensure};
 
+use noc::collective::{Algo, CollOp};
 use noc::manticore::chiplet::{Chiplet, ChipletCfg};
 use noc::manticore::perf::{render_table2, render_table3, table3, Machine};
 use noc::manticore::workload::{
-    conv_scripts, fc_scripts, run_scripts, xsection_submit, ConvVariant, CONV_SMALL,
+    conv_scripts, fc_scripts, run_collective, run_scripts, xsection_submit, ConvVariant,
+    CONV_SMALL,
 };
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
@@ -83,8 +85,12 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     }
     if let Some(t) = flags.get("threads") {
         // N >= 1 engages the sharded epoch-exchange engine with N worker
-        // threads; results are bit-identical for every N >= 1.
-        cfg.threads = t.parse().context("--threads must be a non-negative integer")?;
+        // threads; results are bit-identical for every N >= 1, and 0 is
+        // the explicit single-arena mode.
+        cfg.threads = Some(t.parse().context("--threads must be a non-negative integer")?);
+    } else if cfg.threads.is_none() {
+        // Unset on both the CLI and the config: use the host core count.
+        cfg.threads = Some(noc::sim::auto_threads());
     }
     if let Some(e) = flags.get("epoch") {
         cfg.epoch = e.parse().context("--epoch must be a positive integer")?;
@@ -107,15 +113,25 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn chiplet_from_flags(flags: &HashMap<String, String>) -> Result<ChipletCfg> {
+fn chiplet_from_flags(flags: &HashMap<String, String>, auto_threads: bool) -> Result<ChipletCfg> {
     let mut cfg = match flags.get("size").map(|s| s.as_str()).unwrap_or("small") {
         "full" => ChipletCfg::full(),
         "medium" => ChipletCfg { fanout: vec![4, 4], ..ChipletCfg::full() },
         _ => ChipletCfg::small(),
     };
-    if let Some(t) = flags.get("threads") {
-        cfg.threads = t.parse().context("--threads must be a non-negative integer")?;
-    }
+    cfg.threads = match flags.get("threads") {
+        // 0 stays the explicit single-arena mode.
+        Some(t) => t.parse().context("--threads must be a non-negative integer")?,
+        // Unset: batched workloads auto-pick the host core count
+        // (bit-identical for any worker count >= 1, so this never
+        // changes results across hosts). Workloads whose numbers are
+        // compared against the paper's single-arena timing model — the
+        // latency probe and the per-cycle conv/fc scripts, which gain no
+        // parallelism from sharding anyway — keep threads = 0 unless
+        // asked.
+        None if auto_threads => noc::sim::auto_threads(),
+        None => 0,
+    };
     if let Some(e) = flags.get("epoch") {
         cfg.epoch = e.parse().context("--epoch must be a positive integer")?;
         ensure!(cfg.epoch >= 1, "--epoch must be at least 1");
@@ -191,12 +207,49 @@ fn manticore_latency(cfg: ChipletCfg) -> Result<()> {
     Ok(())
 }
 
+/// DMA-driven collective over all clusters: seed, run, verify, and report
+/// achieved vs ideal bandwidth (`--workload allreduce|broadcast`,
+/// `--collective ring|tree`, `--bytes N`).
+fn manticore_collective(
+    cfg: ChipletCfg,
+    op: CollOp,
+    flags: &HashMap<String, String>,
+) -> Result<()> {
+    let algo = match flags.get("collective").map(|s| s.as_str()).unwrap_or("ring") {
+        "ring" => Algo::Ring,
+        "tree" => Algo::Tree,
+        a => bail!("unknown collective algorithm: {a} (ring|tree)"),
+    };
+    let bytes: u64 = flags.get("bytes").map(|s| s.parse()).transpose()?.unwrap_or(32 * 1024);
+    let n = cfg.n_clusters();
+    let mut ch = Chiplet::new(cfg);
+    let res = run_collective(&mut ch, op, algo, bytes, 10_000_000)?;
+    ensure!(res.finished, "collective did not finish within the cycle budget");
+    ensure!(res.correct, "collective result failed verification");
+    println!("{op:?} ({algo:?}) over {n} clusters, {bytes} B payload: {} cycles", res.cycles);
+    println!(
+        "  {:.2} B/cycle achieved vs {:.2} B/cycle ideal ({:.0}% of the \
+         2·(N−1)/N·bytes / link-bandwidth bound)",
+        res.bytes_per_cycle,
+        res.ideal_bytes_per_cycle,
+        100.0 * res.ideal_fraction
+    );
+    println!("  cluster-port traffic: {} B, result verified on every rank", res.cluster_dma_bytes);
+    Ok(())
+}
+
 fn cmd_manticore(flags: &HashMap<String, String>) -> Result<()> {
-    let cfg = chiplet_from_flags(flags)?;
+    let workload = flags.get("workload").map(|s| s.as_str()).unwrap_or("xsection").to_string();
+    // Only the batched workloads auto-engage the sharded engine; see
+    // `chiplet_from_flags`.
+    let batched = matches!(workload.as_str(), "xsection" | "allreduce" | "broadcast");
+    let cfg = chiplet_from_flags(flags, batched)?;
     let cycles: u64 = flags.get("cycles").map(|s| s.parse()).transpose()?.unwrap_or(20_000);
-    match flags.get("workload").map(|s| s.as_str()).unwrap_or("xsection") {
+    match workload.as_str() {
         "xsection" => manticore_xsection(cfg, cycles)?,
         "latency" => manticore_latency(cfg)?,
+        "allreduce" => manticore_collective(cfg, CollOp::AllReduce, flags)?,
+        "broadcast" => manticore_collective(cfg, CollOp::Broadcast, flags)?,
         w @ ("conv-base" | "conv-stacked" | "conv-pipe") => {
             let variant = match w {
                 "conv-base" => ConvVariant::Baseline,
@@ -257,11 +310,17 @@ fn usage() -> ! {
          \x20          [--threads N] [--epoch E]\n\
          \x20                              run a configured topology\n\
          \x20                              (--threads >= 1: sharded engine,\n\
-         \x20                              bit-identical for every N)\n\
+         \x20                              bit-identical for every N; unset:\n\
+         \x20                              host core count; 0: single arena)\n\
          \x20 manticore [--size small|medium|full]\n\
-         \x20           [--workload xsection|latency|conv-base|conv-stacked|conv-pipe|fc]\n\
+         \x20           [--workload xsection|latency|allreduce|broadcast|\n\
+         \x20                       conv-base|conv-stacked|conv-pipe|fc]\n\
+         \x20           [--collective ring|tree] [--bytes N]\n\
          \x20           [--cycles N] [--threads N] [--epoch E]\n\
-         \x20                              case-study simulations\n\
+         \x20                              case-study simulations (unset\n\
+         \x20                              --threads: host core count for\n\
+         \x20                              xsection/allreduce/broadcast,\n\
+         \x20                              0 for latency/conv/fc)\n\
          \x20 e2e [--artifacts DIR]        verify PJRT compute artifacts"
     );
     std::process::exit(2)

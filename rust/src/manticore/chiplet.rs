@@ -36,6 +36,7 @@
 use std::cell::RefCell;
 use std::rc::Rc;
 
+use crate::collective::RankSchedule;
 use crate::coordinator::report::Json;
 use crate::manticore::cluster::{addr, core_net_cfg, dma_net_cfg, Cluster, ClusterHandle};
 use crate::manticore::network::{build_tree, NodeIo, TreeCfg, UplinkTap};
@@ -45,7 +46,7 @@ use crate::noc::dma::TransferReq;
 use crate::noc::upsizer::Upsizer;
 use crate::protocol::exchange::{cut_master_export, cut_slave_export};
 use crate::protocol::{bundle, BundleCfg, MasterEnd};
-use crate::sim::{shared, Component, Cycle, DomainId, Engine, ShardedEngine};
+use crate::sim::{shared, Arena, Component, Cycle};
 use crate::traffic::gen::RwGenCfg;
 use crate::traffic::perfect_slave::PerfectSlave;
 
@@ -101,36 +102,6 @@ impl ChipletCfg {
     }
 }
 
-/// Which engine drives the chiplet: the single-arena event engine
-/// (`threads = 0`) or the sharded epoch-exchange engine (`threads >= 1`,
-/// one shard per cluster plus shard 0 for the trees and endpoints).
-enum Arena {
-    Single { engine: Engine, domain: DomainId },
-    Sharded { eng: ShardedEngine },
-}
-
-impl Arena {
-    /// Register an infrastructure component: the single arena, or shard 0
-    /// (trees, top crosspoint, HBM/IO endpoints).
-    fn add_infra(&mut self, c: Box<dyn Component>) {
-        match self {
-            Arena::Single { engine, domain } => {
-                engine.add_boxed(*domain, c);
-            }
-            Arena::Sharded { eng } => {
-                eng.shard(0).add_boxed(c);
-            }
-        }
-    }
-
-    fn set_sleep(&mut self, enabled: bool) {
-        match self {
-            Arena::Single { engine, .. } => engine.set_sleep(enabled),
-            Arena::Sharded { eng } => eng.set_sleep(enabled),
-        }
-    }
-}
-
 pub struct Chiplet {
     pub cfg: ChipletCfg,
     pub clusters: Vec<ClusterHandle>,
@@ -152,16 +123,11 @@ impl Chiplet {
         let ccfg = core_net_cfg();
         let epoch = cfg.epoch.max(1);
 
-        let mut arena = if cfg.threads == 0 {
-            let (engine, domain) = Engine::single_clock();
-            Arena::Single { engine, domain }
-        } else {
-            // Shard 0 carries the trees and endpoints; cluster i lives in
-            // shard i + 1. Clusters only talk to the trees, so the shard
-            // structure (and therefore the result) is independent of how
-            // many worker threads chunk the shards.
-            Arena::Sharded { eng: ShardedEngine::new(n + 1, epoch, cfg.threads) }
-        };
+        // Shard 0 carries the trees and endpoints; cluster i lives in
+        // shard i + 1. Clusters only talk to the trees, so the shard
+        // structure (and therefore the result) is independent of how
+        // many worker threads chunk the shards.
+        let mut arena = Arena::new(cfg.threads, n + 1, epoch);
         if cfg.full_scan {
             arena.set_sleep(false);
         }
@@ -205,19 +171,28 @@ impl Chiplet {
                         cut_slave_export(&format!("cut.c{i}.coreout"), ccfg, core_out, epoch);
                     let (c_ci, far_core_in) =
                         cut_master_export(&format!("cut.c{i}.corein"), ccfg, core_in, epoch);
-                    let sh = eng.shard(i + 1);
-                    for c in comps {
-                        sh.add_boxed(c);
+                    // SAFETY: all four bundles leaving the cluster were
+                    // cut just above, so everything registered in shard
+                    // i+1 (cluster internals + near relay halves) shares
+                    // `Rc` state only within that shard; the far halves
+                    // join shard 0 and reach the cluster exclusively
+                    // through the Arc-backed exchange queues. The
+                    // `ClusterHandle` is only touched between runs.
+                    unsafe {
+                        let sh = eng.shard(i + 1);
+                        for c in comps {
+                            sh.add_boxed(c);
+                        }
+                        sh.add(c_do.sender);
+                        sh.add(c_di.receiver);
+                        sh.add(c_co.sender);
+                        sh.add(c_ci.receiver);
+                        let sh0 = eng.shard(0);
+                        sh0.add(c_do.receiver);
+                        sh0.add(c_di.sender);
+                        sh0.add(c_co.receiver);
+                        sh0.add(c_ci.sender);
                     }
-                    sh.add(c_do.sender);
-                    sh.add(c_di.receiver);
-                    sh.add(c_co.sender);
-                    sh.add(c_ci.receiver);
-                    let sh0 = eng.shard(0);
-                    sh0.add(c_do.receiver);
-                    sh0.add(c_di.sender);
-                    sh0.add(c_co.receiver);
-                    sh0.add(c_ci.sender);
                     eng.add_links(c_do.links);
                     eng.add_links(c_di.links);
                     eng.add_links(c_co.links);
@@ -398,8 +373,34 @@ impl Chiplet {
         self.clusters[cluster].dma[engine].borrow_mut().submit(req)
     }
 
+    /// Submit a chained DMA descriptor list on a cluster engine.
+    pub fn submit_dma_chain(
+        &self,
+        cluster: usize,
+        engine: usize,
+        reqs: impl IntoIterator<Item = TransferReq>,
+    ) -> u64 {
+        self.clusters[cluster].dma[engine].borrow_mut().submit_chain(reqs)
+    }
+
     pub fn dma_done(&self, cluster: usize, engine: usize, handle: u64) -> bool {
         self.clusters[cluster].dma[engine].borrow().completions.contains(&handle)
+    }
+
+    /// Load a collective rank program onto a cluster's orchestrator
+    /// (wakes it if asleep). Call between runs only.
+    pub fn submit_collective(&self, cluster: usize, sched: RankSchedule) {
+        self.clusters[cluster].coll.borrow_mut().submit(sched);
+    }
+
+    /// Whether a cluster's collective program has fully completed.
+    pub fn collective_done(&self, cluster: usize) -> bool {
+        self.clusters[cluster].coll.borrow().done()
+    }
+
+    /// Whether every cluster's collective program has completed.
+    pub fn all_collectives_done(&self) -> bool {
+        self.clusters.iter().all(|c| c.coll.borrow().done())
     }
 
     /// Aggregate data bytes moved at all cluster DMA ports.
@@ -441,18 +442,12 @@ impl Chiplet {
     /// In sharded mode the cut relays never sleep, so an otherwise idle
     /// fabric keeps eight awake components per cluster.
     pub fn awake_components(&self) -> usize {
-        match &self.arena {
-            Arena::Single { engine, domain } => engine.awake_components(*domain),
-            Arena::Sharded { eng } => eng.awake_components(),
-        }
+        self.arena.awake_components()
     }
 
     /// Total registered components.
     pub fn component_count(&self) -> usize {
-        match &self.arena {
-            Arena::Single { engine, .. } => engine.component_count(),
-            Arena::Sharded { eng } => eng.component_count(),
-        }
+        self.arena.component_count()
     }
 
     /// Worker threads driving the simulation (0 = single-arena engine).
@@ -460,68 +455,35 @@ impl Chiplet {
         self.cfg.threads
     }
 
-    /// Cycles until the next epoch exchange (1 in single-arena mode, so
-    /// polling loops degrade to per-cycle checks).
-    fn to_next_exchange(&self) -> Cycle {
-        match &self.arena {
-            Arena::Single { .. } => 1,
-            Arena::Sharded { eng } => eng.to_next_exchange(),
-        }
-    }
-
     /// Advance one cycle. Per-cycle stepping is always serial, even in
     /// sharded mode (callers like `run_scripts` poke cluster handles
     /// between steps, which requires quiescent shards); parallelism
     /// comes from batched `run`/`run_until` windows.
     pub fn step(&mut self) {
-        self.cycles += 1;
-        // Keep the external IO bundle's clock fresh so out-of-engine
-        // masters can push commands with current timestamps.
-        self.io_in.set_now(self.cycles);
-        match &mut self.arena {
-            Arena::Single { engine, domain } => {
-                engine.step();
-                debug_assert_eq!(engine.cycles(*domain), self.cycles);
-            }
-            Arena::Sharded { eng } => {
-                eng.run(1);
-                debug_assert_eq!(eng.cycles(), self.cycles);
-            }
-        }
+        self.run(1);
     }
 
     pub fn run(&mut self, cycles: Cycle) {
-        if let Arena::Sharded { eng } = &mut self.arena {
-            // One parallel batch: the worker threads only join at epoch
-            // barriers instead of every cycle.
-            eng.run(cycles);
-            self.cycles += cycles;
-            self.io_in.set_now(self.cycles);
-        } else {
-            for _ in 0..cycles {
-                self.step();
-            }
-        }
+        // In sharded mode this is one parallel batch: the worker threads
+        // only join at epoch barriers instead of every cycle.
+        self.arena.advance(cycles);
+        self.cycles += cycles;
+        debug_assert_eq!(self.arena.cycles(), self.cycles);
+        // Keep the external IO bundle's clock fresh so out-of-engine
+        // masters can push commands with current timestamps.
+        self.io_in.set_now(self.cycles);
     }
 
     /// Run until `pred` holds or the budget expires. In sharded mode the
     /// predicate (which reads cluster handles owned by worker threads
     /// mid-run) is evaluated only at epoch boundaries, so the stopping
     /// cycle — and everything downstream of it — is identical for every
-    /// thread count.
+    /// thread count (in single-arena mode it degrades to per-cycle
+    /// checks).
     pub fn run_until(&mut self, budget: Cycle, mut pred: impl FnMut(&Chiplet) -> bool) -> bool {
-        if matches!(self.arena, Arena::Single { .. }) {
-            for _ in 0..budget {
-                self.step();
-                if pred(self) {
-                    return true;
-                }
-            }
-            return false;
-        }
         let mut left = budget;
         while left > 0 {
-            let step = self.to_next_exchange().min(left);
+            let step = self.arena.to_next_exchange().min(left);
             self.run(step);
             left -= step;
             if pred(self) {
@@ -545,6 +507,7 @@ pub fn determinism_fingerprint(ch: &Chiplet) -> String {
         .map(|c| {
             let cores = c.cores.borrow();
             let s = &cores.stats;
+            let coll = c.coll.borrow();
             Json::Obj(vec![
                 ("dma_bytes".into(), Json::Num(c.dma_bytes() as f64)),
                 ("core_issued".into(), Json::Num(s.issued as f64)),
@@ -552,6 +515,9 @@ pub fn determinism_fingerprint(ch: &Chiplet) -> String {
                 ("core_bytes".into(), Json::Num(s.bytes as f64)),
                 ("core_read_lat_mean".into(), Json::Num(s.read_latency.mean())),
                 ("core_data_errors".into(), Json::Num(s.data_errors as f64)),
+                ("coll_ops".into(), Json::Num(coll.stats.ops_completed as f64)),
+                ("coll_reduced".into(), Json::Num(coll.stats.reduced_bytes as f64)),
+                ("coll_chains".into(), Json::Num(coll.stats.chains_submitted as f64)),
             ])
         })
         .collect();

@@ -19,6 +19,7 @@
 use std::cell::RefCell;
 use std::rc::Rc;
 
+use crate::collective::CollectiveUnit;
 use crate::noc::mem_duplex::{BankArray, MemDuplex};
 use crate::noc::mux::{prepend_bits, Mux};
 use crate::noc::upsizer::Upsizer;
@@ -62,6 +63,8 @@ pub struct Cluster {
     pub l1: Rc<RefCell<MemDuplex>>,
     /// Core traffic generator, externally pokable (stats, reconfigure).
     pub cores: Rc<RefCell<RwGen>>,
+    /// Collective orchestrator, externally pokable (submit rank programs).
+    pub coll: Rc<RefCell<CollectiveUnit>>,
     /// Internal plumbing in tick order.
     comps: Vec<Box<dyn Component>>,
     /// Exported ends for the network builder:
@@ -177,12 +180,24 @@ impl Cluster {
             crate::sim::shared(RwGen::new(format!("{name}.cores"), core_m, core_cfg));
         comps.push(Box::new(cores_adapter));
 
+        // --- Collective orchestrator: drives rank programs on the write
+        //     DMA engine (engine 1 pushes local->remote, so collective
+        //     traffic keeps the shared network port unidirectional) ---
+        let (coll, coll_adapter) = crate::sim::shared(CollectiveUnit::new(
+            format!("{name}.coll"),
+            idx,
+            dma1.clone(),
+            l1.clone(),
+        ));
+        comps.push(Box::new(coll_adapter));
+
         Cluster {
             name,
             idx,
             dma: [dma0, dma1],
             l1,
             cores,
+            coll,
             comps,
             dma_out: Some(dma_port_s),
             dma_l1_in: Some(l1_net_m),
@@ -213,6 +228,7 @@ impl Cluster {
             dma: self.dma.clone(),
             l1: self.l1.clone(),
             cores: self.cores.clone(),
+            coll: self.coll.clone(),
         };
         (handle, self.comps)
     }
@@ -227,6 +243,7 @@ pub struct ClusterHandle {
     pub dma: [Rc<RefCell<Dma>>; 2],
     pub l1: Rc<RefCell<MemDuplex>>,
     pub cores: Rc<RefCell<RwGen>>,
+    pub coll: Rc<RefCell<CollectiveUnit>>,
 }
 
 impl ClusterHandle {

@@ -9,6 +9,8 @@
 
 use std::collections::VecDeque;
 
+use crate::collective::{self, Algo, CollCfg, CollOp};
+use crate::errors::Result;
 use crate::manticore::chiplet::Chiplet;
 use crate::manticore::cluster::addr;
 use crate::noc::dma::TransferReq;
@@ -233,6 +235,142 @@ pub fn xsection_submit(ch: &Chiplet, cycles: Cycle) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Collective workloads (all-reduce / broadcast / ...): rank r = cluster r.
+// ---------------------------------------------------------------------------
+
+/// Per-rank link bandwidth of the DMA network: one 512-bit beat per
+/// cycle. The unit of the ideal collective bounds — the tree's constant
+/// link width (design property D2) gives every ring edge a full link, so
+/// per-rank injection bandwidth is the binding constraint (the chiplet's
+/// "bisection" is `n` such links).
+pub const LINK_BYTES_PER_CYCLE: f64 = 64.0;
+
+/// Lower bound on the cycles a collective over `n` ranks of `bytes`
+/// needs at [`LINK_BYTES_PER_CYCLE`]: ring all-reduce moves
+/// `2·(n-1)/n · bytes` per rank port, reduce-scatter / all-gather half
+/// of that, and any broadcast at least the payload once.
+pub fn collective_ideal_cycles(op: CollOp, algo: Algo, n: usize, bytes: u64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let b = bytes as f64;
+    let frac = (n - 1) as f64 / n as f64;
+    match (algo, op) {
+        (Algo::Ring, CollOp::AllReduce) => 2.0 * frac * b / LINK_BYTES_PER_CYCLE,
+        (Algo::Ring, CollOp::ReduceScatter | CollOp::AllGather) => frac * b / LINK_BYTES_PER_CYCLE,
+        // Tree all-reduce sends the payload up and down every edge.
+        (Algo::Tree, CollOp::AllReduce) => 2.0 * b / LINK_BYTES_PER_CYCLE,
+        (_, _) => b / LINK_BYTES_PER_CYCLE,
+    }
+}
+
+/// Address windows for a collective over all `n` clusters: rank r is
+/// cluster r's full L1 window (the schedule builder lays out buffer,
+/// scratch, and flag arenas inside; see `collective::schedule`).
+pub fn collective_windows(n: usize) -> Vec<(u64, u64)> {
+    (0..n).map(|i| (addr::cluster_base(i), addr::L1_SIZE)).collect()
+}
+
+/// Deterministic per-rank seed data (u64 element `j` of rank `r`).
+fn collective_seed(r: usize, j: u64) -> u64 {
+    (r as u64 + 1).wrapping_mul(0x9E37_79B9) ^ j
+}
+
+/// Result of running a collective workload end-to-end.
+#[derive(Debug)]
+pub struct CollectiveResult {
+    pub cycles: Cycle,
+    pub finished: bool,
+    /// Buffers verified against the host-computed expectation.
+    pub correct: bool,
+    pub bytes: u64,
+    /// Payload bytes per simulated cycle — the headline metric
+    /// (`allreduce_bytes_per_cycle` in `BENCH_collective.json`).
+    pub bytes_per_cycle: f64,
+    /// Same, for an ideal fabric ([`collective_ideal_cycles`]).
+    pub ideal_bytes_per_cycle: f64,
+    /// Achieved / ideal (the bench gate asserts >= 0.5 for ring
+    /// all-reduce).
+    pub ideal_fraction: f64,
+    pub cluster_dma_bytes: u64,
+}
+
+/// Seed every rank's buffer, run the collective on the chiplet's
+/// per-cluster orchestrators, and verify the result mathematically.
+pub fn run_collective(
+    ch: &mut Chiplet,
+    op: CollOp,
+    algo: Algo,
+    bytes: u64,
+    budget: Cycle,
+) -> Result<CollectiveResult> {
+    let n = ch.cfg.n_clusters();
+    let windows = collective_windows(n);
+    let cfg = CollCfg::new(op, algo, bytes);
+    let mut built = collective::build(&cfg, &windows)?;
+    let elems = bytes / 8;
+    // Seed: all-reduce/reduce-scatter sum every rank's buffer; all-gather
+    // circulates each rank's own chunk; broadcast propagates the root.
+    for r in 0..n {
+        let data: Vec<u8> = match op {
+            CollOp::Broadcast if r != cfg.root => vec![0u8; bytes as usize],
+            _ => (0..elems).flat_map(|j| collective_seed(r, j).to_le_bytes()).collect(),
+        };
+        ch.clusters[r].l1.borrow().banks.borrow_mut().poke(built.buf[r], &data);
+    }
+    let dma0 = ch.total_dma_bytes();
+    let start = ch.cycles;
+    for (r, sched) in std::mem::take(&mut built.ranks).into_iter().enumerate() {
+        ch.submit_collective(r, sched);
+    }
+    let finished = ch.run_until(budget, |c| c.all_collectives_done());
+    let cycles = ch.cycles - start;
+
+    let sums: Vec<u64> = (0..elems)
+        .map(|j| (0..n).fold(0u64, |a, r| a.wrapping_add(collective_seed(r, j))))
+        .collect();
+    let mut correct = finished;
+    for r in 0..n {
+        if !correct {
+            break;
+        }
+        let got = ch.clusters[r].l1.borrow().banks.borrow().peek_vec(built.buf[r], bytes as usize);
+        let words: Vec<u64> =
+            got.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect();
+        correct &= match op {
+            CollOp::AllReduce => words == sums,
+            CollOp::ReduceScatter => {
+                // Rank r owns reduced chunk r; the rest is unspecified.
+                let (off, len) = built.chunk_range(r);
+                let lo = (off / 8) as usize;
+                words[lo..lo + (len / 8) as usize] == sums[lo..lo + (len / 8) as usize]
+            }
+            CollOp::AllGather => (0..n).all(|c| {
+                let (off, len) = built.chunk_range(c);
+                let lo = off / 8;
+                (0..len / 8).all(|j| words[(lo + j) as usize] == collective_seed(c, lo + j))
+            }),
+            CollOp::Broadcast => {
+                (0..elems).all(|j| words[j as usize] == collective_seed(cfg.root, j))
+            }
+        };
+    }
+    let ideal = collective_ideal_cycles(op, algo, n, bytes).max(1.0);
+    let bpc = bytes as f64 / cycles.max(1) as f64;
+    let ideal_bpc = bytes as f64 / ideal;
+    Ok(CollectiveResult {
+        cycles,
+        finished,
+        correct,
+        bytes,
+        bytes_per_cycle: bpc,
+        ideal_bytes_per_cycle: ideal_bpc,
+        ideal_fraction: bpc / ideal_bpc,
+        cluster_dma_bytes: ch.total_dma_bytes() - dma0,
+    })
+}
+
 struct ScriptState {
     steps: VecDeque<Step>,
     waiting: Option<(usize, u64)>,
@@ -387,6 +525,61 @@ mod tests {
         let res = run_scripts(&mut ch, scripts, 2_000_000);
         assert!(res.finished, "fc workload must finish ({} cycles)", res.cycles);
         assert!(res.hbm_bytes > 0);
+    }
+
+    #[test]
+    fn ring_allreduce_on_small_chiplet_is_correct() {
+        let mut ch = Chiplet::new(ChipletCfg::small());
+        let res =
+            run_collective(&mut ch, CollOp::AllReduce, Algo::Ring, 16 * 1024, 500_000).unwrap();
+        assert!(res.finished, "all-reduce must finish");
+        assert!(res.correct, "all-reduce buffers must hold the exact sums");
+        assert!(res.cluster_dma_bytes >= res.bytes, "data must actually cross the ports");
+        assert!(res.ideal_fraction > 0.0 && res.ideal_fraction <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn reduce_scatter_and_allgather_on_small_chiplet() {
+        for op in [CollOp::ReduceScatter, CollOp::AllGather] {
+            let mut ch = Chiplet::new(ChipletCfg::small());
+            let res = run_collective(&mut ch, op, Algo::Ring, 8 * 1024, 500_000).unwrap();
+            assert!(res.finished && res.correct, "{op:?} must finish correctly");
+        }
+    }
+
+    #[test]
+    fn broadcast_ring_and_tree_on_small_chiplet() {
+        for algo in [Algo::Ring, Algo::Tree] {
+            let mut ch = Chiplet::new(ChipletCfg::small());
+            let res = run_collective(&mut ch, CollOp::Broadcast, algo, 8 * 1024, 500_000).unwrap();
+            assert!(res.finished && res.correct, "{algo:?} broadcast must finish correctly");
+        }
+    }
+
+    #[test]
+    fn tree_allreduce_on_small_chiplet() {
+        let mut ch = Chiplet::new(ChipletCfg::small());
+        let res =
+            run_collective(&mut ch, CollOp::AllReduce, Algo::Tree, 8 * 1024, 500_000).unwrap();
+        assert!(res.finished && res.correct);
+    }
+
+    #[test]
+    fn sharded_ring_allreduce_is_correct() {
+        let mut cfg = ChipletCfg::small();
+        cfg.threads = 2;
+        cfg.epoch = 8;
+        let mut ch = Chiplet::new(cfg);
+        let res =
+            run_collective(&mut ch, CollOp::AllReduce, Algo::Ring, 16 * 1024, 1_000_000).unwrap();
+        assert!(res.finished && res.correct, "all-reduce must survive the epoch cuts");
+    }
+
+    #[test]
+    fn collective_rejects_oversized_payload() {
+        let mut ch = Chiplet::new(ChipletCfg::small());
+        // 128 KiB payload + scratch cannot fit the 128 KiB L1.
+        assert!(run_collective(&mut ch, CollOp::AllReduce, Algo::Ring, addr::L1_SIZE, 1).is_err());
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! DMA engine (§2.6, paper Fig. 10): high-bandwidth data movement.
 //!
 //! Modular split as in the paper:
-//! * **Frontend** — accepts *1D transfers* (contiguous block: source,
-//!   destination, length) and decomposes multi-dimensional/strided
-//!   transfers into 1D transfers. The 1D transfer is the frontend/backend
-//!   interface because it maps directly onto burst-based transactions.
-//! * **Burst reshaper** — splits each 1D transfer into protocol-compliant
+//! * **Frontend** — accepts *descriptors*: a single 1D/2D transfer
+//!   (`submit`) or a chained, dependency-ordered list of transfers
+//!   (`submit_chain`). Multi-dimensional/strided transfers are decomposed
+//!   into 1D legs; the 1D leg is the frontend/backend interface because it
+//!   maps directly onto burst-based transactions.
+//! * **Burst reshaper** — splits each 1D leg into protocol-compliant
 //!   bursts (4 KiB boundaries, max beat count), independently for the read
 //!   (source) and write (destination) sides, whose alignments differ.
 //! * **Data mover** — issues the read and write commands.
@@ -17,20 +18,53 @@
 //! notes ID width affects neither its area nor its critical path), so reads
 //! return in order (O2) and the realignment buffer sees a dense in-order
 //! byte stream.
+//!
+//! ## Descriptor chaining and ordering
+//!
+//! Legs are *pipelined at the issue stage*: leg k+1 starts issuing as soon
+//! as leg k's commands and data have left the engine, while leg k's write
+//! responses (B) are still in flight. Commands carry one ID, so the fabric
+//! keeps same-destination writes in order end-to-end (every demux enforces
+//! the same-ID same-target rule and W follows AW in lockstep) — a chain of
+//! writes to one destination lands in submission order, which is what the
+//! collective subsystem's data-then-flag protocol relies on. Writes to
+//! *different* destinations may complete out of order; a leg that must
+//! *read* data written by an earlier leg needs an explicit
+//! [`TransferReq::Fence`], which stalls the frontend until every
+//! outstanding write response has returned.
+//!
+//! A descriptor completes (lands in `completions`, with its cycle recorded
+//! for [`Dma::completed_strictly_before`]) when all its legs have issued
+//! and all their B responses returned. `bind_completion_waker` lets
+//! another engine component (the collective orchestrator) sleep until a
+//! completion instead of polling every cycle.
 
 use std::collections::{HashMap, VecDeque};
 
 use crate::protocol::{split_bursts, Bytes, Cmd, MasterEnd, WBeat};
 use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
+/// Completion stamps retained for [`Dma::completed_strictly_before`] /
+/// [`Dma::take_completed`]. Far above what any in-engine consumer can
+/// leave unobserved (the completion event wakes it the same cycle).
+const COMPLETED_HISTORY: usize = 1024;
+
 /// A transfer request accepted by the frontend.
 #[derive(Debug, Clone)]
 pub enum TransferReq {
-    /// Contiguous block copy.
+    /// Contiguous block copy. `len = 0` contributes nothing (a descriptor
+    /// with no non-empty legs completes immediately).
     OneD { src: u64, dst: u64, len: u64 },
     /// Strided (2D) transfer: `reps` rows of `row_len` bytes; the frontend
-    /// decomposes this into 1D transfers.
+    /// decomposes this into 1D legs. Zero-length rows and `reps = 0` are
+    /// legal no-ops; `stride < row_len` overlaps rows (legal — the legs
+    /// execute in row order).
     TwoD { src: u64, dst: u64, row_len: u64, src_stride: u64, dst_stride: u64, reps: u64 },
+    /// Ordering barrier inside a chain: legs after the fence do not start
+    /// issuing until every outstanding write response (of any descriptor
+    /// on this engine) has returned. Required when a later leg reads data
+    /// an earlier leg wrote.
+    Fence,
 }
 
 /// Byte range tracker for one burst: absolute [cur, end).
@@ -40,6 +74,19 @@ struct Range {
     end: u64,
 }
 
+/// One 1D leg queued in the frontend.
+struct FrontLeg {
+    handle: u64,
+    src: u64,
+    dst: u64,
+    len: u64,
+    /// Leg must not start before all outstanding writes complete.
+    fence: bool,
+}
+
+/// Issue-side state of the leg currently in the data mover. Write
+/// responses are tracked per descriptor (`HandleState`), not here, so the
+/// next leg can start issuing while B beats are still in flight.
 struct ActiveTransfer {
     handle: u64,
     /// Read bursts to issue: (start_addr, len_field, end_byte).
@@ -50,36 +97,60 @@ struct ActiveTransfer {
     aw_todo: VecDeque<(u64, u8, u64)>,
     /// Byte ranges + beats-left of issued writes (W beats fill the front).
     w_ranges: VecDeque<(Range, usize)>,
-    /// B responses still expected.
-    b_left: usize,
     /// Bytes not yet received from reads.
     read_bytes_left: u64,
     /// Bytes not yet sent on writes.
     write_bytes_left: u64,
 }
 
+/// Per-descriptor progress: legs not yet fully issued and write bursts
+/// awaiting their B response.
+struct HandleState {
+    legs_unissued: usize,
+    b_outstanding: usize,
+}
+
 pub struct Dma {
     name: String,
     master: MasterEnd,
-    /// Frontend queue of 1D transfers (after decomposition).
-    frontend: VecDeque<(u64, u64, u64, u64)>, // (handle, src, dst, len)
+    /// Frontend queue of 1D legs (after decomposition).
+    frontend: VecDeque<FrontLeg>,
     active: Option<ActiveTransfer>,
     /// Realignment byte buffer (barrel shifter + buffer).
     buf: VecDeque<u8>,
     buf_cap: usize,
-    /// Completed transfer handles.
+    /// Completed descriptor handles, in completion order.
     pub completions: VecDeque<u64>,
+    /// Cycle at which each handle completed (same-cycle visibility would
+    /// differ between the event and full-scan engine modes; see
+    /// [`Dma::completed_strictly_before`]). Bounded: only the most
+    /// recent [`COMPLETED_HISTORY`] stamps are retained (in-engine
+    /// consumers are woken by the completion event and observe it within
+    /// cycles), so submitters that never consume their stamps — script
+    /// workloads polling `completions` — cannot grow it without bound.
+    completed_at: HashMap<u64, Cycle>,
+    /// Completion stamps in retirement order, for the history bound.
+    completed_order: VecDeque<u64>,
     /// Config.
     max_burst_beats: usize,
     max_outstanding_reads: usize,
     id: u32,
     next_handle: u64,
-    /// 1D legs remaining per multi-leg (2D) handle.
-    legs_remaining: HashMap<u64, usize>,
+    /// In-flight descriptors.
+    handles: HashMap<u64, HandleState>,
+    /// Degenerate (all-empty-leg) descriptors awaiting their completion
+    /// stamp: completed on the engine's next tick, so the recorded cycle
+    /// is always a fresh one (same observable timing in the event and
+    /// full-scan modes regardless of when `submit_chain` ran).
+    empty_pending: Vec<u64>,
     /// Stats.
     pub bytes_moved: u64,
+    /// Last ticked cycle (stamps completions made from `submit`).
+    now: Cycle,
     /// Engine binding, so `submit` can wake a sleeping engine component.
     waker: Option<(WakeSet, ComponentId)>,
+    /// Woken on every descriptor completion (e.g. the collective unit).
+    completion_waker: Option<(WakeSet, ComponentId)>,
 }
 
 impl Dma {
@@ -100,13 +171,18 @@ impl Dma {
             buf: VecDeque::new(),
             buf_cap: 4 * max_burst_beats * beat,
             completions: VecDeque::new(),
+            completed_at: HashMap::new(),
+            completed_order: VecDeque::new(),
             max_burst_beats,
             max_outstanding_reads: 8,
             id: 0,
             next_handle: 1,
-            legs_remaining: HashMap::new(),
+            handles: HashMap::new(),
+            empty_pending: Vec::new(),
             bytes_moved: 0,
+            now: 0,
             waker: None,
+            completion_waker: None,
         }
     }
 
@@ -124,50 +200,134 @@ impl Dma {
         self
     }
 
-    /// Submit a transfer; returns a handle reported in `completions`.
+    /// Register a second wake target fired on every descriptor
+    /// completion, so an orchestrating component can sleep between
+    /// submissions instead of polling (event-engine friendliness of the
+    /// collective subsystem).
+    pub fn bind_completion_waker(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.completion_waker = Some((wake.clone(), id));
+    }
+
+    /// Submit one transfer; returns a handle reported in `completions`.
     /// Wakes the engine component if the engine had put it to sleep.
     pub fn submit(&mut self, req: TransferReq) -> u64 {
+        self.submit_chain([req])
+    }
+
+    /// Submit a chained descriptor list: the legs execute strictly in
+    /// list order through the data mover, and the single returned handle
+    /// completes once every leg's writes have fully completed. See the
+    /// module docs for the ordering guarantees between pipelined legs.
+    pub fn submit_chain(&mut self, reqs: impl IntoIterator<Item = TransferReq>) -> u64 {
         if let Some((ws, id)) = &self.waker {
             ws.wake(*id);
         }
         let handle = self.next_handle;
         self.next_handle += 1;
-        match req {
-            TransferReq::OneD { src, dst, len } => {
-                assert!(len > 0, "empty transfer");
-                self.legs_remaining.insert(handle, 1);
-                self.frontend.push_back((handle, src, dst, len));
+        let mut legs = 0usize;
+        let mut fence = false;
+        let mut push = |front: &mut VecDeque<FrontLeg>, src, dst, len, fence: &mut bool| {
+            if len > 0 {
+                front.push_back(FrontLeg { handle, src, dst, len, fence: *fence });
+                *fence = false;
+                legs += 1;
             }
-            TransferReq::TwoD { src, dst, row_len, src_stride, dst_stride, reps } => {
-                assert!(row_len > 0 && reps > 0);
-                self.legs_remaining.insert(handle, reps as usize);
-                for r in 0..reps {
-                    self.frontend.push_back((
-                        handle,
-                        src + r * src_stride,
-                        dst + r * dst_stride,
-                        row_len,
-                    ));
+        };
+        for req in reqs {
+            match req {
+                TransferReq::OneD { src, dst, len } => {
+                    push(&mut self.frontend, src, dst, len, &mut fence);
                 }
+                TransferReq::TwoD { src, dst, row_len, src_stride, dst_stride, reps } => {
+                    for r in 0..reps {
+                        push(
+                            &mut self.frontend,
+                            src + r * src_stride,
+                            dst + r * dst_stride,
+                            row_len,
+                            &mut fence,
+                        );
+                    }
+                }
+                TransferReq::Fence => fence = true,
             }
+        }
+        if legs == 0 {
+            // Degenerate descriptor (all legs empty): completes on the
+            // engine's next tick (the waker above guarantees one).
+            self.empty_pending.push(handle);
+        } else {
+            self.handles.insert(handle, HandleState { legs_unissued: legs, b_outstanding: 0 });
         }
         handle
     }
 
+    fn push_completion(&mut self, handle: u64) {
+        self.completions.push_back(handle);
+        self.completed_at.insert(handle, self.now);
+        self.completed_order.push_back(handle);
+        if self.completed_order.len() > COMPLETED_HISTORY {
+            let old = self.completed_order.pop_front().unwrap();
+            self.completed_at.remove(&old);
+        }
+        if let Some((ws, id)) = &self.completion_waker {
+            ws.wake(*id);
+        }
+    }
+
+    /// Whether `handle` completed on a cycle strictly before `cy`.
+    ///
+    /// In-engine consumers must use this (not `completions.contains`)
+    /// so completion visibility does not depend on tick order within a
+    /// cycle — a full-scan component ticking the same cycle the DMA
+    /// retires a descriptor would otherwise observe it one cycle earlier
+    /// than its event-mode (woken next cycle) self.
+    pub fn completed_strictly_before(&self, handle: u64, cy: Cycle) -> bool {
+        self.completed_at.get(&handle).is_some_and(|&at| at < cy)
+    }
+
+    /// Like [`Dma::completed_strictly_before`], but consumes the
+    /// completion stamp on a hit, bounding the per-handle bookkeeping for
+    /// long-running orchestrators (the handle stays in `completions` for
+    /// external observers). Each handle can be taken once.
+    pub fn take_completed(&mut self, handle: u64, cy: Cycle) -> bool {
+        if self.completed_strictly_before(handle, cy) {
+            self.completed_at.remove(&handle);
+            true
+        } else {
+            false
+        }
+    }
+
     /// One-line internal state dump for debugging stalls.
     pub fn debug_state(&self) -> String {
+        let b_out: usize = self.handles.values().map(|h| h.b_outstanding).sum();
         match &self.active {
-            None => format!("inactive frontend={}", self.frontend.len()),
+            None => format!(
+                "inactive frontend={} handles={} b_out={b_out}",
+                self.frontend.len(),
+                self.handles.len()
+            ),
             Some(t) => format!(
-                "ar_todo={} r_ranges={} aw_todo={} w_ranges={} b_left={} rd_left={} wr_left={} buf={}",
-                t.ar_todo.len(), t.r_ranges.len(), t.aw_todo.len(), t.w_ranges.len(),
-                t.b_left, t.read_bytes_left, t.write_bytes_left, self.buf.len()
+                "ar_todo={} r_ranges={} aw_todo={} w_ranges={} rd_left={} wr_left={} buf={} \
+                 handles={} b_out={b_out}",
+                t.ar_todo.len(),
+                t.r_ranges.len(),
+                t.aw_todo.len(),
+                t.w_ranges.len(),
+                t.read_bytes_left,
+                t.write_bytes_left,
+                self.buf.len(),
+                self.handles.len()
             ),
         }
     }
 
     pub fn idle(&self) -> bool {
-        self.frontend.is_empty() && self.active.is_none()
+        self.frontend.is_empty()
+            && self.active.is_none()
+            && self.handles.is_empty()
+            && self.empty_pending.is_empty()
     }
 
     /// Number of queued + active 1D legs (observability).
@@ -179,7 +339,12 @@ impl Dma {
         if self.active.is_some() {
             return;
         }
-        let Some((handle, src, dst, len)) = self.frontend.pop_front() else { return };
+        let Some(front) = self.frontend.front() else { return };
+        if front.fence && self.handles.values().any(|h| h.b_outstanding > 0) {
+            return; // fence: wait for every outstanding write response
+        }
+        let leg = self.frontend.pop_front().unwrap();
+        let (handle, src, dst, len) = (leg.handle, leg.src, leg.dst, leg.len);
         let size = self.master.cfg.size();
         let rd = split_bursts(src, len, size, self.max_burst_beats);
         let wr = split_bursts(dst, len, size, self.max_burst_beats);
@@ -194,7 +359,6 @@ impl Dma {
         };
         self.active = Some(ActiveTransfer {
             handle,
-            b_left: wr.len(),
             ar_todo: mk(&rd, src + len),
             r_ranges: VecDeque::new(),
             aw_todo: mk(&wr, dst + len),
@@ -216,114 +380,136 @@ impl Component for Dma {
     }
 
     fn tick(&mut self, cy: Cycle) -> Activity {
-        let _ = cy;
+        self.now = cy;
         self.master.set_now(cy);
+        for h in std::mem::take(&mut self.empty_pending) {
+            self.push_completion(h);
+        }
         self.start_next();
-        let Some(t) = &mut self.active else {
-            return Activity::active_if(self.master.pending_input() > 0);
-        };
         let bb = self.master.cfg.beat_bytes();
 
-        // Data mover: issue read commands. Reservation: never request more
-        // bytes than the realignment buffer can absorb, so the R channel
-        // is always accepted (liveness invariant, see `new`).
-        if let Some(&(addr, len, end)) = t.ar_todo.front() {
-            let outstanding: u64 = t.r_ranges.iter().map(|r| r.end - r.cur).sum();
-            let reserve = outstanding + self.buf.len() as u64 + (end - addr);
-            if t.r_ranges.len() < self.max_outstanding_reads
-                && reserve <= self.buf_cap as u64
-                && self.master.ar.can_push()
-            {
-                let mut c = Cmd::new(self.id, addr, len, self.master.cfg.size());
-                c.tag = t.handle;
-                self.master.ar.push(c);
-                t.r_ranges.push_back(Range { cur: addr, end });
-                t.ar_todo.pop_front();
+        let mut leg_retired = false;
+        if let Some(t) = &mut self.active {
+            // Data mover: issue read commands. Reservation: never request
+            // more bytes than the realignment buffer can absorb, so the R
+            // channel is always accepted (liveness invariant, see `new`).
+            if let Some(&(addr, len, end)) = t.ar_todo.front() {
+                let outstanding: u64 = t.r_ranges.iter().map(|r| r.end - r.cur).sum();
+                let reserve = outstanding + self.buf.len() as u64 + (end - addr);
+                if t.r_ranges.len() < self.max_outstanding_reads
+                    && reserve <= self.buf_cap as u64
+                    && self.master.ar.can_push()
+                {
+                    let mut c = Cmd::new(self.id, addr, len, self.master.cfg.size());
+                    c.tag = t.handle;
+                    self.master.ar.push(c);
+                    t.r_ranges.push_back(Range { cur: addr, end });
+                    t.ar_todo.pop_front();
+                }
             }
-        }
-        // Issue write commands (keep a small queue of open write bursts).
-        if let Some(&(addr, len, end)) = t.aw_todo.front() {
-            if t.w_ranges.len() < 2 && self.master.aw.can_push() {
-                let mut c = Cmd::new(self.id, addr, len, self.master.cfg.size());
-                c.tag = t.handle;
-                self.master.aw.push(c);
-                t.w_ranges.push_back((Range { cur: addr, end }, len as usize + 1));
-                t.aw_todo.pop_front();
+            // Issue write commands (keep a small queue of open write bursts).
+            if let Some(&(addr, len, end)) = t.aw_todo.front() {
+                if t.w_ranges.len() < 2 && self.master.aw.can_push() {
+                    let mut c = Cmd::new(self.id, addr, len, self.master.cfg.size());
+                    c.tag = t.handle;
+                    self.master.aw.push(c);
+                    t.w_ranges.push_back((Range { cur: addr, end }, len as usize + 1));
+                    t.aw_todo.pop_front();
+                    self.handles
+                        .get_mut(&t.handle)
+                        .expect("descriptor bookkeeping")
+                        .b_outstanding += 1;
+                }
             }
-        }
 
-        // Data path, read process: realign incoming beats into the buffer.
-        // The reservation above guarantees space; never stall R.
-        if self.master.r.can_pop() {
-            let r = self.master.r.pop();
-            let range = t.r_ranges.front_mut().expect("R beat without an open read burst");
-            let beat_base = (range.cur / bb as u64) * bb as u64;
-            let beat_end = beat_base + bb as u64;
-            let valid_end = range.end.min(beat_end);
-            let lo = (range.cur - beat_base) as usize;
-            let hi = (valid_end - beat_base) as usize;
-            // Head/tail masking: only [cur, valid_end) bytes are real.
-            for &byte in &r.data.as_slice()[lo..hi] {
-                self.buf.push_back(byte);
-            }
-            t.read_bytes_left -= (hi - lo) as u64;
-            range.cur = valid_end;
-            if range.cur == range.end {
-                debug_assert!(r.last);
-                t.r_ranges.pop_front();
-            }
-        }
-
-        // Data path, write process: drain the buffer into W beats.
-        if let Some((range, beats_left)) = t.w_ranges.front_mut() {
-            if self.master.w.can_push() {
+            // Data path, read process: realign incoming beats into the
+            // buffer. The reservation above guarantees space; never stall R.
+            if self.master.r.can_pop() {
+                let r = self.master.r.pop();
+                let range = t.r_ranges.front_mut().expect("R beat without an open read burst");
                 let beat_base = (range.cur / bb as u64) * bb as u64;
                 let beat_end = beat_base + bb as u64;
                 let valid_end = range.end.min(beat_end);
-                let need = (valid_end - range.cur) as usize;
-                if self.buf.len() >= need && need > 0 {
-                    let lane = (range.cur - beat_base) as usize;
-                    let mut data = Bytes::zeroed(bb);
-                    for i in 0..need {
-                        data.as_mut_slice()[lane + i] = self.buf.pop_front().unwrap();
-                    }
-                    let strb = (crate::protocol::strb_all(need)) << lane;
-                    *beats_left -= 1;
-                    let last = *beats_left == 0;
-                    self.master.w.push(WBeat { data, strb, last, tag: t.handle });
-                    t.write_bytes_left -= need as u64;
-                    self.bytes_moved += need as u64;
-                    range.cur = valid_end;
-                    if last {
-                        debug_assert_eq!(range.cur, range.end);
-                        t.w_ranges.pop_front();
+                let lo = (range.cur - beat_base) as usize;
+                let hi = (valid_end - beat_base) as usize;
+                // Head/tail masking: only [cur, valid_end) bytes are real.
+                for &byte in &r.data.as_slice()[lo..hi] {
+                    self.buf.push_back(byte);
+                }
+                t.read_bytes_left -= (hi - lo) as u64;
+                range.cur = valid_end;
+                if range.cur == range.end {
+                    debug_assert!(r.last);
+                    t.r_ranges.pop_front();
+                }
+            }
+
+            // Data path, write process: drain the buffer into W beats.
+            if let Some((range, beats_left)) = t.w_ranges.front_mut() {
+                if self.master.w.can_push() {
+                    let beat_base = (range.cur / bb as u64) * bb as u64;
+                    let beat_end = beat_base + bb as u64;
+                    let valid_end = range.end.min(beat_end);
+                    let need = (valid_end - range.cur) as usize;
+                    if self.buf.len() >= need && need > 0 {
+                        let lane = (range.cur - beat_base) as usize;
+                        let mut data = Bytes::zeroed(bb);
+                        for i in 0..need {
+                            data.as_mut_slice()[lane + i] = self.buf.pop_front().unwrap();
+                        }
+                        let strb = (crate::protocol::strb_all(need)) << lane;
+                        *beats_left -= 1;
+                        let last = *beats_left == 0;
+                        self.master.w.push(WBeat { data, strb, last, tag: t.handle });
+                        t.write_bytes_left -= need as u64;
+                        self.bytes_moved += need as u64;
+                        range.cur = valid_end;
+                        if last {
+                            debug_assert_eq!(range.cur, range.end);
+                            t.w_ranges.pop_front();
+                        }
                     }
                 }
             }
+
+            // Leg retire: everything issued and all read data consumed;
+            // only B responses remain (tracked per descriptor), so the
+            // next leg may start issuing next cycle.
+            leg_retired = t.ar_todo.is_empty()
+                && t.aw_todo.is_empty()
+                && t.r_ranges.is_empty()
+                && t.w_ranges.is_empty();
+        }
+        if leg_retired {
+            let t = self.active.take().unwrap();
+            debug_assert_eq!(t.read_bytes_left, 0);
+            debug_assert_eq!(t.write_bytes_left, 0);
+            let hs = self.handles.get_mut(&t.handle).expect("descriptor bookkeeping");
+            hs.legs_unissued -= 1;
+            if hs.legs_unissued == 0 && hs.b_outstanding == 0 {
+                self.handles.remove(&t.handle);
+                self.push_completion(t.handle);
+            }
         }
 
-        // Completion: collect B responses.
+        // Collect write responses (any descriptor; tags route them).
         if self.master.b.can_pop() {
-            self.master.b.pop();
-            t.b_left -= 1;
-            if t.b_left == 0 {
-                debug_assert_eq!(t.write_bytes_left, 0);
-                debug_assert_eq!(t.read_bytes_left, 0);
-                let handle = t.handle;
-                let legs = self.legs_remaining.get_mut(&handle).expect("leg bookkeeping");
-                *legs -= 1;
-                if *legs == 0 {
-                    self.legs_remaining.remove(&handle);
-                    self.completions.push_back(handle);
-                }
-                self.active = None;
+            let b = self.master.b.pop();
+            let hs = self.handles.get_mut(&b.tag).expect("B response for unknown descriptor");
+            hs.b_outstanding -= 1;
+            if hs.legs_unissued == 0 && hs.b_outstanding == 0 {
+                self.handles.remove(&b.tag);
+                self.push_completion(b.tag);
             }
         }
 
-        // A transfer in flight keeps the engine ticking (the data mover
-        // retries command issue every cycle); once fully drained, the
-        // next tick takes the early-return path above and goes idle.
-        Activity::Active
+        // A leg in flight keeps the engine ticking (the data mover retries
+        // command issue every cycle) and so does a queued frontend (fences
+        // re-check each cycle). With only B responses outstanding the
+        // engine can sleep: the B push wakes it.
+        Activity::active_if(
+            self.active.is_some() || !self.frontend.is_empty() || self.master.pending_input() > 0,
+        )
     }
 }
 
@@ -422,6 +608,93 @@ mod tests {
     }
 
     #[test]
+    fn two_d_zero_length_rows_complete_without_traffic() {
+        let (mut dma, _mem) = mk();
+        // Zero-length rows and zero reps are legal no-ops: the descriptor
+        // has no legs and completes on the next tick without touching the
+        // network.
+        let h0 = dma.submit(TransferReq::TwoD {
+            src: 0x1000,
+            dst: 0x8000,
+            row_len: 0,
+            src_stride: 32,
+            dst_stride: 32,
+            reps: 4,
+        });
+        let h1 = dma.submit(TransferReq::TwoD {
+            src: 0x1000,
+            dst: 0x8000,
+            row_len: 16,
+            src_stride: 32,
+            dst_stride: 32,
+            reps: 0,
+        });
+        let h2 = dma.submit(TransferReq::OneD { src: 0x1000, dst: 0x8000, len: 0 });
+        assert!(!dma.idle(), "degenerate descriptors pend until the next tick");
+        dma.tick(1);
+        assert_eq!(dma.completions, VecDeque::from([h0, h1, h2]));
+        assert!(dma.idle());
+        assert_eq!(dma.bytes_moved, 0);
+        // The stamp is the tick's cycle: visible strictly after it, and
+        // consuming it prunes the bookkeeping.
+        assert!(!dma.completed_strictly_before(h0, 1));
+        assert!(dma.take_completed(h0, 2));
+        assert!(!dma.take_completed(h0, 2), "a completion can be taken once");
+    }
+
+    #[test]
+    fn two_d_stride_smaller_than_row_overlaps_in_row_order() {
+        let (mut dma, mut mem) = mk();
+        // Rows overlap at the destination (stride 8 < row_len 16): later
+        // rows must win on the overlapping bytes because legs execute in
+        // row order.
+        for r in 0..3u64 {
+            let row = vec![0x10 + r as u8; 16];
+            mem.banks.borrow_mut().poke(0x1000 + r * 16, &row);
+        }
+        let h = dma.submit(TransferReq::TwoD {
+            src: 0x1000,
+            dst: 0x8000,
+            row_len: 16,
+            src_stride: 16,
+            dst_stride: 8,
+            reps: 3,
+        });
+        assert!(run_copy(&mut dma, &mut mem, h, 4000));
+        let got = mem.banks.borrow().peek_vec(0x8000, 8 * 2 + 16);
+        let mut expect = vec![0x10; 8];
+        expect.extend(vec![0x11; 8]);
+        expect.extend(vec![0x12; 16]);
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn two_d_rows_straddle_4k_boundary() {
+        let (mut dma, mut mem) = mk();
+        // Each 64 B row starts 32 B before a 4 KiB boundary, on both the
+        // source and destination side: every leg splits into two bursts.
+        let src0 = 0x1000 - 32;
+        let dst0 = 0x8000 - 32;
+        for r in 0..4u64 {
+            let row: Vec<u8> = (0..64).map(|i| (r * 64 + i) as u8).collect();
+            mem.banks.borrow_mut().poke(src0 + r * 0x1000, &row);
+        }
+        let h = dma.submit(TransferReq::TwoD {
+            src: src0,
+            dst: dst0,
+            row_len: 64,
+            src_stride: 0x1000,
+            dst_stride: 0x1000,
+            reps: 4,
+        });
+        assert!(run_copy(&mut dma, &mut mem, h, 8000));
+        for r in 0..4u64 {
+            let expect: Vec<u8> = (0..64).map(|i| (r * 64 + i) as u8).collect();
+            assert_eq!(mem.banks.borrow().peek_vec(dst0 + r * 0x1000, 64), expect, "row {r}");
+        }
+    }
+
+    #[test]
     fn back_to_back_transfers_complete_in_order() {
         let (mut dma, mut mem) = mk();
         mem.banks.borrow_mut().poke(0x100, &[1u8; 64]);
@@ -437,6 +710,129 @@ mod tests {
         assert_eq!(dma.completions, VecDeque::from([h1, h2]));
         assert_eq!(mem.banks.borrow().peek_vec(0x4000, 64), vec![1u8; 64]);
         assert_eq!(mem.banks.borrow().peek_vec(0x5000, 64), vec![2u8; 64]);
+    }
+
+    #[test]
+    fn chain_single_completion_and_data() {
+        let (mut dma, mut mem) = mk();
+        let a: Vec<u8> = (0..96).map(|i| (i + 3) as u8).collect();
+        let b: Vec<u8> = (0..32).map(|i| (200 - i) as u8).collect();
+        mem.banks.borrow_mut().poke(0x1000, &a);
+        mem.banks.borrow_mut().poke(0x2000, &b);
+        let h = dma.submit_chain([
+            TransferReq::OneD { src: 0x1000, dst: 0x8000, len: 96 },
+            TransferReq::OneD { src: 0x2000, dst: 0x9000, len: 32 },
+            TransferReq::OneD { src: 0x1000, dst: 0xA000, len: 8 },
+        ]);
+        assert!(run_copy(&mut dma, &mut mem, h, 4000));
+        // One descriptor, one completion, after ALL legs are done.
+        assert_eq!(dma.completions, VecDeque::from([h]));
+        assert_eq!(mem.banks.borrow().peek_vec(0x8000, 96), a);
+        assert_eq!(mem.banks.borrow().peek_vec(0x9000, 32), b);
+        assert_eq!(mem.banks.borrow().peek_vec(0xA000, 8), a[..8]);
+        assert!(dma.idle());
+    }
+
+    #[test]
+    fn chain_flag_never_lands_before_data() {
+        // The collective protocol's core invariant: within a chain, an
+        // 8-byte "flag" write to the same endpoint becomes visible only
+        // after every byte of the preceding data leg is committed.
+        let (mut dma, mut mem) = mk();
+        let data = vec![0xCD; 512];
+        mem.banks.borrow_mut().poke(0x1000, &data);
+        mem.banks.borrow_mut().poke(0x2000, &0xFEED_F00D_u64.to_le_bytes());
+        let h = dma.submit_chain([
+            TransferReq::OneD { src: 0x1000, dst: 0x8000, len: 512 },
+            TransferReq::OneD { src: 0x2000, dst: 0x8FF8, len: 8 },
+        ]);
+        let mut cy = 0;
+        let mut flag_seen_at = None;
+        while cy < 4000 && !dma.completions.contains(&h) {
+            cy += 1;
+            dma.tick(cy);
+            mem.tick(cy);
+            let flag = mem.banks.borrow().peek_vec(0x8FF8, 8);
+            if flag == 0xFEED_F00D_u64.to_le_bytes() {
+                if flag_seen_at.is_none() {
+                    flag_seen_at = Some(cy);
+                }
+                assert_eq!(
+                    mem.banks.borrow().peek_vec(0x8000, 512),
+                    data,
+                    "flag visible at cycle {cy} before the data leg committed"
+                );
+            }
+        }
+        assert!(dma.completions.contains(&h), "chain must complete");
+        assert!(flag_seen_at.is_some(), "flag must land");
+    }
+
+    #[test]
+    fn chain_fence_orders_read_after_write() {
+        // Leg 3 reads what leg 1 wrote; the fence guarantees the write
+        // has fully completed (B returned) before the read issues.
+        let (mut dma, mut mem) = mk();
+        let a: Vec<u8> = (0..256).map(|i| (i * 3 % 251) as u8).collect();
+        mem.banks.borrow_mut().poke(0x1000, &a);
+        let h = dma.submit_chain([
+            TransferReq::OneD { src: 0x1000, dst: 0x8000, len: 256 },
+            TransferReq::Fence,
+            TransferReq::OneD { src: 0x8000, dst: 0x9000, len: 256 },
+        ]);
+        assert!(run_copy(&mut dma, &mut mem, h, 4000));
+        assert_eq!(mem.banks.borrow().peek_vec(0x9000, 256), a, "fenced read sees the write");
+    }
+
+    #[test]
+    fn completion_event_wakes_engine_component() {
+        use crate::sim::{shared, Engine};
+        let cfg = BundleCfg::new(64, 4);
+        let (m, s) = bundle("dma", cfg);
+        let banks = BankArray::new(0, 1 << 20, 4, 8, 1);
+        let (mut e, d) = Engine::single_clock();
+        let (dma, dma_adapter) = shared(Dma::new("dma", m));
+        e.add(d, dma_adapter);
+        e.add(d, MemDuplex::new("mem", s, banks));
+        // A consumer component that sleeps until the completion wake.
+        struct Waiter {
+            dma: std::rc::Rc<std::cell::RefCell<Dma>>,
+            handle: u64,
+            done_at: std::rc::Rc<std::cell::Cell<Cycle>>,
+            ticks: std::rc::Rc<std::cell::Cell<u64>>,
+        }
+        impl Component for Waiter {
+            fn tick(&mut self, cy: Cycle) -> Activity {
+                self.ticks.set(self.ticks.get() + 1);
+                if self.handle != 0
+                    && self.done_at.get() == 0
+                    && self.dma.borrow().completed_strictly_before(self.handle, cy)
+                {
+                    self.done_at.set(cy);
+                }
+                Activity::Idle // only completion wakes revive us
+            }
+            fn name(&self) -> &str {
+                "waiter"
+            }
+            fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+                self.dma.borrow_mut().bind_completion_waker(wake, id);
+            }
+        }
+        let done_at = std::rc::Rc::new(std::cell::Cell::new(0));
+        let ticks = std::rc::Rc::new(std::cell::Cell::new(0));
+        let mut waiter =
+            Waiter { dma: dma.clone(), handle: 0, done_at: done_at.clone(), ticks: ticks.clone() };
+        let h = dma.borrow_mut().submit(TransferReq::OneD { src: 0x100, dst: 0x200, len: 64 });
+        waiter.handle = h;
+        e.add(d, waiter);
+        e.run_cycles(d, 200);
+        assert!(done_at.get() > 0, "waiter must observe the completion");
+        assert!(
+            ticks.get() < 20,
+            "waiter must sleep between submit and completion, ticked {} times",
+            ticks.get()
+        );
     }
 
     #[test]

@@ -192,8 +192,12 @@ mod tests {
         let mut eng = ShardedEngine::new(2, epoch, 1);
         let (prod_m, prod_s) = bundle("prod", cfg);
         let (cut, far_s) = cut_slave_export("cut.t", cfg, prod_s, epoch);
-        eng.shard(0).add(cut.sender);
-        eng.shard(1).add(cut.receiver);
+        // SAFETY: the producer bundle stays on the caller's side of the
+        // cut; only the Arc-backed exchange queues cross shards.
+        unsafe {
+            eng.shard(0).add(cut.sender);
+            eng.shard(1).add(cut.receiver);
+        }
         eng.add_links(cut.links);
         // Consumer: answer every AR with a single R beat, next cycle.
         struct Echo {
@@ -218,7 +222,11 @@ mod tests {
                 "echo"
             }
         }
-        eng.shard(1).add(Echo { s: far_s });
+        // SAFETY: `far_s`'s bundle peer is the cut receiver in the same
+        // shard.
+        unsafe {
+            eng.shard(1).add(Echo { s: far_s });
+        }
         prod_m.set_now(0);
         let mut c = Cmd::new(1, 0x40, 0, 3);
         c.tag = 77;

@@ -1,0 +1,193 @@
+//! Engine-choice dispatch shared by the topology builders.
+//!
+//! Both full-system builders (`manticore::chiplet`, `coordinator::builder`)
+//! offer the same two execution substrates: the single-arena event engine
+//! (`threads = 0`) and the sharded epoch-exchange engine (`threads >= 1`,
+//! one shard per traffic island plus shard 0 for the shared
+//! infrastructure). This enum used to be duplicated in each builder; it
+//! lives here so new subsystems (e.g. `collective`) don't grow a third
+//! copy (ROADMAP "hoist the duplicated Arena dispatch enum").
+//!
+//! The variant fields are public on purpose: builders still `match` on
+//! the arena where the *construction* differs structurally (sharded
+//! topologies must cut cross-shard bundles with `protocol::exchange`
+//! relays before registering the halves — see the confinement invariant
+//! on [`Shard::add`]). The run-time surface (advance, sleep mode,
+//! observability) is uniform and lives on the methods below.
+
+use crate::sim::{Component, Cycle, DomainId, Engine, ShardedEngine};
+
+/// Which engine drives a built system: the single component arena, or the
+/// sharded epoch-exchange engine.
+pub enum Arena {
+    Single { engine: Engine, domain: DomainId },
+    Sharded { eng: ShardedEngine },
+}
+
+impl Arena {
+    /// `threads = 0` builds the single-arena engine (and `n_shards` /
+    /// `epoch` are ignored); `threads >= 1` builds a sharded engine with
+    /// `n_shards` shard-private engines exchanging every `epoch` cycles.
+    pub fn new(threads: usize, n_shards: usize, epoch: Cycle) -> Self {
+        if threads == 0 {
+            let (engine, domain) = Engine::single_clock();
+            Arena::Single { engine, domain }
+        } else {
+            Arena::Sharded { eng: ShardedEngine::new(n_shards, epoch.max(1), threads) }
+        }
+    }
+
+    /// Register an infrastructure component: the single arena, or shard 0
+    /// (trees, crossbars, shared endpoints).
+    ///
+    /// In sharded mode the caller must have cut every bundle connecting
+    /// `c` to components of other shards (`protocol::exchange`) — the
+    /// builders uphold this; see [`Shard::add`] for the obligation.
+    pub fn add_infra(&mut self, c: Box<dyn Component>) {
+        match self {
+            Arena::Single { engine, domain } => {
+                engine.add_boxed(*domain, c);
+            }
+            Arena::Sharded { eng } => {
+                // SAFETY: infrastructure components are built out of
+                // bundles whose far ends either live in shard 0 too or
+                // were replaced by exchange-queue relays by the builder,
+                // so no `Rc` state is reachable from another shard.
+                unsafe {
+                    eng.shard(0).add_boxed(c);
+                }
+            }
+        }
+    }
+
+    /// Disable (or re-enable) sleep/wake tracking — the full-scan A/B
+    /// oracle, uniform across both engines.
+    pub fn set_sleep(&mut self, enabled: bool) {
+        match self {
+            Arena::Single { engine, .. } => engine.set_sleep(enabled),
+            Arena::Sharded { eng } => eng.set_sleep(enabled),
+        }
+    }
+
+    pub fn sleep_enabled(&self) -> bool {
+        match self {
+            Arena::Single { engine, .. } => engine.sleep_enabled(),
+            Arena::Sharded { eng } => eng.sleep_enabled(),
+        }
+    }
+
+    /// Worker threads driving the simulation (0 = single-arena engine).
+    pub fn threads(&self) -> usize {
+        match self {
+            Arena::Single { .. } => 0,
+            Arena::Sharded { eng } => eng.threads(),
+        }
+    }
+
+    /// Cycles simulated so far.
+    pub fn cycles(&self) -> Cycle {
+        match self {
+            Arena::Single { engine, domain } => engine.cycles(*domain),
+            Arena::Sharded { eng } => eng.cycles(),
+        }
+    }
+
+    /// Cycles until the next epoch exchange (1 in single-arena mode, so
+    /// boundary-aligned polling loops degrade to per-cycle checks).
+    pub fn to_next_exchange(&self) -> Cycle {
+        match self {
+            Arena::Single { .. } => 1,
+            Arena::Sharded { eng } => eng.to_next_exchange(),
+        }
+    }
+
+    /// Advance the simulation by `cycles` cycles. In sharded mode this is
+    /// one parallel batch: worker threads only join at epoch barriers.
+    /// External handles into the topology must only be touched between
+    /// calls.
+    pub fn advance(&mut self, cycles: Cycle) {
+        match self {
+            Arena::Single { engine, domain } => engine.run_cycles(*domain, cycles),
+            Arena::Sharded { eng } => eng.run(cycles),
+        }
+    }
+
+    /// Total registered components.
+    pub fn component_count(&self) -> usize {
+        match self {
+            Arena::Single { engine, .. } => engine.component_count(),
+            Arena::Sharded { eng } => eng.component_count(),
+        }
+    }
+
+    /// Currently-awake components (observability). In sharded mode the
+    /// cut relays never sleep; in full-scan mode everything is awake.
+    pub fn awake_components(&self) -> usize {
+        match self {
+            Arena::Single { engine, domain } => engine.awake_components(*domain),
+            Arena::Sharded { eng } => eng.awake_components(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Activity;
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    struct Counter {
+        ticks: Rc<Cell<u64>>,
+        budget: u64,
+    }
+    impl Component for Counter {
+        fn tick(&mut self, _cy: Cycle) -> Activity {
+            self.ticks.set(self.ticks.get() + 1);
+            self.budget = self.budget.saturating_sub(1);
+            Activity::active_if(self.budget > 0)
+        }
+        fn name(&self) -> &str {
+            "counter"
+        }
+    }
+
+    #[test]
+    fn single_and_sharded_advance_uniformly() {
+        for threads in [0usize, 2] {
+            let mut a = Arena::new(threads, 3, 4);
+            let ticks = Rc::new(Cell::new(0));
+            a.add_infra(Box::new(Counter { ticks: ticks.clone(), budget: u64::MAX }));
+            assert_eq!(a.threads(), if threads == 0 { 0 } else { 2 });
+            a.advance(10);
+            assert_eq!(a.cycles(), 10);
+            assert_eq!(ticks.get(), 10);
+            assert_eq!(a.component_count(), 1);
+        }
+    }
+
+    #[test]
+    fn exchange_boundary_schedule() {
+        let a = Arena::new(0, 1, 4);
+        assert_eq!(a.to_next_exchange(), 1, "single arena degrades to per-cycle");
+        let mut a = Arena::new(1, 2, 4);
+        assert_eq!(a.to_next_exchange(), 4);
+        a.advance(3);
+        assert_eq!(a.to_next_exchange(), 1);
+    }
+
+    #[test]
+    fn sleep_mode_uniform() {
+        for threads in [0usize, 1] {
+            let mut a = Arena::new(threads, 2, 4);
+            let ticks = Rc::new(Cell::new(0));
+            a.add_infra(Box::new(Counter { ticks: ticks.clone(), budget: 2 }));
+            assert!(a.sleep_enabled());
+            a.set_sleep(false);
+            assert!(!a.sleep_enabled());
+            a.advance(10);
+            assert_eq!(ticks.get(), 10, "full scan ticks every cycle");
+            assert_eq!(a.awake_components(), 1);
+        }
+    }
+}

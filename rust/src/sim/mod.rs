@@ -2,16 +2,20 @@
 //! clock domains, statistics, deterministic PRNG, and the property-testing
 //! mini-framework.
 
+pub mod arena;
 pub mod engine;
 pub mod prop;
 pub mod rng;
 pub mod shard;
 pub mod stats;
 
+pub use arena::Arena;
 pub use engine::{
     shared, Activity, Component, ComponentId, Cycle, DomainId, Engine, Ps, Shared, WakeSet,
 };
 pub use prop::{prop_check, prop_replay, Gen};
 pub use rng::SplitMix64;
-pub use shard::{exchange_channel, ExchangeLink, ExchangeRx, ExchangeTx, Shard, ShardedEngine};
+pub use shard::{
+    auto_threads, exchange_channel, ExchangeLink, ExchangeRx, ExchangeTx, Shard, ShardedEngine,
+};
 pub use stats::{human_bytes, Bandwidth, LatencyStats};

@@ -139,34 +139,50 @@ impl<T> ExchangeRx<T> {
     }
 }
 
+/// Pick a worker-thread count from the host: `available_parallelism`,
+/// or 1 if the host refuses to say. Used by the CLI when `--threads` /
+/// the `threads` config key is unset; `threads = 0` stays the explicit
+/// single-arena mode. Thread count never changes simulation results
+/// (every `N >= 1` is bit-identical), so auto-picking is safe for
+/// reproducibility — only the engine *family* (0 vs >= 1) matters.
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
 /// One shard: a private engine plus its single clock domain. All
 /// components registered here tick on that clock; their channel graphs
 /// must stay confined to this shard (cross-shard traffic goes through
 /// exchange queues).
-///
-/// # Confinement invariant
-///
-/// `add`/`add_boxed` are safe functions, but running a `ShardedEngine`
-/// with more than one thread is only sound if no `Rc`/`RefCell` state
-/// (channel cores, wake sets, `shared()` handles) is reachable from
-/// components of two *different* shards — e.g. registering the two
-/// ends of one `bundle()` in different shards is a data race. The
-/// builders in `manticore::chiplet` and `coordinator::builder` uphold
-/// this by cutting every cross-shard bundle with `protocol::exchange`
-/// relays; custom topologies must do the same (making registration an
-/// `unsafe fn` to push this obligation to call sites is a tracked
-/// follow-on in ROADMAP.md).
 pub struct Shard {
     engine: Engine,
     domain: DomainId,
 }
 
 impl Shard {
-    pub fn add(&mut self, c: impl Component + 'static) -> ComponentId {
+    /// Register a component in this shard.
+    ///
+    /// # Safety
+    ///
+    /// Running a `ShardedEngine` with more than one thread is only sound
+    /// if no `Rc`/`RefCell` state (channel cores, wake sets, `shared()`
+    /// handles) is reachable from components of two *different* shards —
+    /// e.g. registering the two ends of one `bundle()` in different
+    /// shards is a data race. The caller must guarantee that every
+    /// connection from `c` to another shard has been cut with
+    /// `protocol::exchange` relays (whose queues are `Arc<Mutex>`), and
+    /// that any external handle into `c` is only used between
+    /// `ShardedEngine::run` calls. The builders in `manticore::chiplet`
+    /// and `coordinator::builder` uphold this at every call site.
+    pub unsafe fn add(&mut self, c: impl Component + 'static) -> ComponentId {
         self.engine.add(self.domain, c)
     }
 
-    pub fn add_boxed(&mut self, c: Box<dyn Component>) -> ComponentId {
+    /// Boxed variant of [`Shard::add`].
+    ///
+    /// # Safety
+    ///
+    /// Same confinement obligation as [`Shard::add`].
+    pub unsafe fn add_boxed(&mut self, c: Box<dyn Component>) -> ComponentId {
         self.engine.add_boxed(self.domain, c)
     }
 
@@ -432,8 +448,12 @@ mod tests {
         let (tx, rx, link) = exchange_channel::<u64>("x", 16);
         eng.add_links([link]);
         let log = Rc::new(RefCell::new(Vec::new()));
-        eng.shard(0).add(Sender { tx, next: 0, total: 10 });
-        eng.shard(1).add(Receiver { rx, log: log.clone() });
+        // SAFETY: the only cross-shard state is the exchange queue; the
+        // log handle is read only after `run` returns.
+        unsafe {
+            eng.shard(0).add(Sender { tx, next: 0, total: 10 });
+            eng.shard(1).add(Receiver { rx, log: log.clone() });
+        }
         eng.run(40);
         assert_eq!(eng.cycles(), 40);
         let out = log.borrow().clone();
@@ -463,8 +483,11 @@ mod tests {
             let (tx, rx, link) = exchange_channel::<u64>("x", 16);
             eng.add_links([link]);
             let log = Rc::new(RefCell::new(Vec::new()));
-            eng.shard(0).add(Sender { tx, next: 0, total: 10 });
-            eng.shard(1).add(Receiver { rx, log: log.clone() });
+            // SAFETY: shards only share the exchange queue (see above).
+            unsafe {
+                eng.shard(0).add(Sender { tx, next: 0, total: 10 });
+                eng.shard(1).add(Receiver { rx, log: log.clone() });
+            }
             for &c in chunks {
                 eng.run(c);
             }
@@ -481,8 +504,11 @@ mod tests {
         let log = Rc::new(RefCell::new(Vec::new()));
         let (tx, rx, link) = exchange_channel::<u64>("x", 16);
         eng.add_links([link]);
-        eng.shard(1).add(Sender { tx, next: 0, total: 3 });
-        eng.shard(4).add(Receiver { rx, log: log.clone() });
+        // SAFETY: shards only share the exchange queue (see above).
+        unsafe {
+            eng.shard(1).add(Sender { tx, next: 0, total: 3 });
+            eng.shard(4).add(Receiver { rx, log: log.clone() });
+        }
         eng.run(12);
         assert_eq!(log.borrow().len(), 3);
         assert_eq!(eng.component_count(), 2);

@@ -150,7 +150,7 @@ size = 0x800
 /// Build and run `text` on the sharded engine and return the fingerprint.
 fn sharded_fp(text: &str, threads: usize, full_scan: bool) -> String {
     let mut cfg = SimCfg::from_str_toml(text).expect("config");
-    cfg.threads = threads;
+    cfg.threads = Some(threads);
     cfg.epoch = 8;
     cfg.full_scan = full_scan;
     let mut sys = System::build(&cfg).expect("build");

@@ -334,10 +334,15 @@ fn cut_channel_backpressure_across_epoch_boundary() {
         let (cut, far_s) = cut_slave_export("bp.cut", cfg, prod_s, epoch);
         let sent = Rc::new(Cell::new(0));
         let got = Rc::new(RefCell::new(Vec::new()));
-        eng.shard(0).add(ArProducer { m: prod_m, sent: sent.clone(), total: 40 });
-        eng.shard(0).add(cut.sender);
-        eng.shard(1).add(cut.receiver);
-        eng.shard(1).add(SlowArConsumer { s: far_s, period: 8, got: got.clone() });
+        // SAFETY: the producer bundle stays in shard 0 with the cut
+        // sender; shard 1 holds the far bundle; only the Arc-backed
+        // exchange queues cross, and `sent`/`got` are read between runs.
+        unsafe {
+            eng.shard(0).add(ArProducer { m: prod_m, sent: sent.clone(), total: 40 });
+            eng.shard(0).add(cut.sender);
+            eng.shard(1).add(cut.receiver);
+            eng.shard(1).add(SlowArConsumer { s: far_s, period: 8, got: got.clone() });
+        }
         eng.add_links(cut.links);
         eng.run(40);
         // The consumer drains one command per 8 cycles, so the elastic

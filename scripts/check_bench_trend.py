@@ -22,6 +22,9 @@ TRACKED = [
     ("BENCH_tab2_manticore.json", "sharded_cycles_per_sec"),
     ("BENCH_coordinator_engine.json", "event_cycles_per_sec"),
     ("BENCH_coordinator_engine.json", "speedup"),
+    # Simulated (deterministic) collective bandwidth: regressions here are
+    # real scheduling/fabric changes, not runner noise.
+    ("BENCH_collective.json", "allreduce_bytes_per_cycle"),
 ]
 THRESHOLD = 0.20
 
