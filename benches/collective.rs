@@ -10,9 +10,9 @@
 //! gate cannot flake on a noisy runner).
 
 use noc::bench_harness::{quick, section, Report};
-use noc::collective::{Algo, CollOp};
+use noc::collective::{hierarchical_order, Algo, CollOp};
 use noc::manticore::chiplet::{Chiplet, ChipletCfg};
-use noc::manticore::workload::{run_collective, CollectiveResult};
+use noc::manticore::workload::{run_collective, run_collective_with_order, CollectiveResult};
 
 fn bench_fanout() -> Vec<usize> {
     if quick() {
@@ -22,13 +22,35 @@ fn bench_fanout() -> Vec<usize> {
     }
 }
 
-fn run(op: CollOp, algo: Algo, bytes: u64, threads: usize) -> CollectiveResult {
-    let cfg = ChipletCfg { fanout: bench_fanout(), threads, ..ChipletCfg::full() };
-    let mut ch = Chiplet::new(cfg);
-    let res = run_collective(&mut ch, op, algo, bytes, 20_000_000).expect("collective builds");
+/// Simulation-cycle budget shared by every collective run in this bench.
+const BUDGET: u64 = 20_000_000;
+
+fn chiplet(threads: usize) -> Chiplet {
+    Chiplet::new(ChipletCfg { fanout: bench_fanout(), threads, ..ChipletCfg::full() })
+}
+
+fn checked(op: CollOp, algo: Algo, res: CollectiveResult) -> CollectiveResult {
     assert!(res.finished, "{op:?}/{algo:?} must finish");
     assert!(res.correct, "{op:?}/{algo:?} must produce the exact result on every rank");
     res
+}
+
+/// Run one collective through the product path (`run_collective`, which
+/// applies the hierarchy-aware ring mapping).
+fn run(op: CollOp, algo: Algo, bytes: u64, threads: usize) -> CollectiveResult {
+    let mut ch = chiplet(threads);
+    let res = run_collective(&mut ch, op, algo, bytes, BUDGET).expect("collective builds");
+    checked(op, algo, res)
+}
+
+/// Same chiplet/budget/assertions, but with the explicit linear
+/// rank-r-equals-cluster-r ring order — the comparison side of the
+/// mapping-delta metric.
+fn run_linear(op: CollOp, algo: Algo, bytes: u64, threads: usize) -> CollectiveResult {
+    let mut ch = chiplet(threads);
+    let res = run_collective_with_order(&mut ch, op, algo, bytes, BUDGET, None)
+        .expect("collective builds");
+    checked(op, algo, res)
 }
 
 fn main() {
@@ -52,6 +74,28 @@ fn main() {
     report.metric("allreduce_bytes_per_cycle", ring.bytes_per_cycle);
     report.metric("allreduce_ideal_fraction", ring.ideal_fraction);
     report.metric("allreduce_cycles", ring.cycles as f64);
+
+    // Ring mapping: the default runs use the hierarchy-aware order. The
+    // chiplet numbers clusters contiguously per quadrant, so that order
+    // is the identity today and a separate linear-map run would simulate
+    // the exact same schedule — skip the duplicate simulation and record
+    // a 0.0 delta directly. If `hierarchical_order` ever diverges from
+    // the identity (a builder leaf-map change), this branch measures the
+    // linear map for real and the delta becomes meaningful (simulated
+    // cycles, deterministic either way).
+    let identity: Vec<usize> = (0..n).collect();
+    let linear = if hierarchical_order(&bench_fanout()) == identity {
+        println!("allreduce ring (linear map): identical schedule, run skipped");
+        None
+    } else {
+        Some(run_linear(CollOp::AllReduce, Algo::Ring, bytes, 0))
+    };
+    if let Some(r) = &linear {
+        show("allreduce ring (linear map)", r);
+    }
+    let linear_bpc = linear.as_ref().map_or(ring.bytes_per_cycle, |r| r.bytes_per_cycle);
+    report.metric("allreduce_linear_map_bytes_per_cycle", linear_bpc);
+    report.metric("allreduce_ring_map_delta_bytes_per_cycle", ring.bytes_per_cycle - linear_bpc);
 
     // The tree needs two full-payload scratch slots per rank, so it runs
     // a smaller payload to stay inside the 128 KiB L1.

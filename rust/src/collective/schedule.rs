@@ -91,12 +91,66 @@ pub struct CollCfg {
     /// or forwarding before the whole chunk arrives. Rounded down to a
     /// multiple of 8 (min 8).
     pub pipeline_bytes: u64,
+    /// Ring/chain order: `order[p]` is the rank at ring position `p`
+    /// (ring edges connect consecutive positions; the tree walks chain
+    /// positions offset from the root's position). `None` is the
+    /// identity — rank r at position r. Must be a permutation of
+    /// `0..n`. See [`hierarchical_order`] for the topology-aware
+    /// choice. The order changes *which* neighbour each rank talks to,
+    /// never the mathematical result (rank r still ends owning reduced
+    /// chunk r, etc.).
+    pub order: Option<Vec<usize>>,
 }
 
 impl CollCfg {
     pub fn new(op: CollOp, algo: Algo, bytes: u64) -> Self {
-        CollCfg { op, algo, bytes, elem: Elem::U64, root: 0, pipeline_bytes: 2048 }
+        CollCfg { op, algo, bytes, elem: Elem::U64, root: 0, pipeline_bytes: 2048, order: None }
     }
+}
+
+/// Ring order of the chiplet's clusters that keeps consecutive ring
+/// positions inside the same tree quadrant at every level: a DFS over
+/// the fanout tree emitting each subtree's leaves consecutively, so a
+/// ring over the returned order crosses each level-`k` subtree boundary
+/// exactly once per subtree — the minimum any cyclic visit can achieve
+/// (every subtree must be entered once and left once).
+///
+/// `manticore::network::build_tree` numbers leaves contiguously per
+/// subtree (children are grouped chunk-wise bottom-up), so for the
+/// current chiplet this DFS **is the identity permutation**: the
+/// rank-r-equals-cluster-r map was already hierarchy-optimal, and
+/// `benches/collective.rs` records the (expected ~zero) bytes/cycle
+/// delta between the two to prove it. The function is the single seam
+/// where that numbering assumption lives: callers route through it
+/// instead of assuming identity, so a future non-contiguous leaf map
+/// (e.g. interleaved physical placement) is fixed by updating this
+/// walk in lockstep with the builder — not by hunting down implicit
+/// identity assumptions across the collective layer.
+pub fn hierarchical_order(fanout: &[usize]) -> Vec<usize> {
+    // Depth-first over the grouping `build_tree` applies: the top level
+    // has `fanout[last]` subtrees, each covering a contiguous block of
+    // `product(fanout[..last])` leaves, and so on down. Each subtree's
+    // leaves are emitted completely before the next subtree starts, so
+    // every subtree contributes exactly one entry and one exit edge to
+    // the ring. The contiguous-block assumption (`base + g * span`)
+    // mirrors the builder's chunk-wise leaf grouping and makes the walk
+    // resolve to the identity; a builder change that breaks contiguity
+    // must change this walk with it (there is deliberately no other
+    // place that encodes the leaf numbering).
+    fn emit(levels: &[usize], base: usize, out: &mut Vec<usize>) {
+        match levels.split_last() {
+            None => out.push(base),
+            Some((&top, lower)) => {
+                let span: usize = lower.iter().product();
+                for g in 0..top {
+                    emit(lower, base + g * span, out);
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    emit(fanout, 0, &mut out);
+    out
 }
 
 /// A built collective: one program per rank plus the resolved layout.
@@ -253,6 +307,22 @@ pub fn build(cfg: &CollCfg, windows: &[(u64, u64)]) -> Result<Built> {
     if cfg.root >= n {
         bail!("root rank {} out of range (n = {n})", cfg.root);
     }
+    let ord: Vec<usize> = match &cfg.order {
+        Some(o) => {
+            if o.len() != n {
+                bail!("ring order has {} entries for {n} ranks", o.len());
+            }
+            let mut seen = vec![false; n];
+            for &r in o {
+                if r >= n || seen[r] {
+                    bail!("ring order must be a permutation of 0..{n}");
+                }
+                seen[r] = true;
+            }
+            o.clone()
+        }
+        None => (0..n).collect(),
+    };
     let bytes = cfg.bytes;
     let sub = ((cfg.pipeline_bytes / 8).max(1) * 8).min(bytes);
     let elems = bytes / 8;
@@ -311,8 +381,8 @@ pub fn build(cfg: &CollCfg, windows: &[(u64, u64)]) -> Result<Built> {
 
     if n > 1 {
         match cfg.algo {
-            Algo::Ring => build_ring(cfg, &b, bytes, chunk, subs_pc, n, &mut ranks),
-            Algo::Tree => build_tree(cfg, &b, bytes, total_subs, n, &mut ranks),
+            Algo::Ring => build_ring(cfg, &b, bytes, chunk, subs_pc, &ord, &mut ranks),
+            Algo::Tree => build_tree(cfg, &b, bytes, total_subs, &ord, &mut ranks),
         }
         for r in ranks.iter_mut() {
             if r.n_sends() > 0 {
@@ -337,22 +407,31 @@ fn build_ring(
     bytes: u64,
     chunk: u64,
     subs_pc: u64,
-    n: usize,
+    ord: &[usize],
     ranks: &mut [RankSchedule],
 ) {
+    let n = ord.len();
     let cr = |c: usize| chunk_range(bytes, chunk, n, c);
     let p1 = matches!(cfg.op, CollOp::AllReduce | CollOp::ReduceScatter);
     let p2 = matches!(cfg.op, CollOp::AllReduce | CollOp::AllGather);
     let p2_fbase0 = if p1 && p2 { (n as u64 - 1) * subs_pc } else { 0 };
-    for (r, sched) in ranks.iter_mut().enumerate() {
-        let steps = &mut sched.steps;
-        let next = (r + 1) % n;
+    // The ring algebra runs over *positions* p (edges connect p to
+    // p+1); chunk labels are mapped through `ord` so that phase 1
+    // still leaves rank r owning reduced chunk r regardless of the
+    // order. A sender's chunk expression and its successor's receive
+    // expression reduce to the same position arithmetic, so every
+    // matched send/wait pair agrees on the chunk label.
+    let proot = ord.iter().position(|&r| r == cfg.root).expect("root validated");
+    for p in 0..n {
+        let r = ord[p];
+        let next = ord[(p + 1) % n];
         let me = b.wins[r];
+        let steps = &mut ranks[r].steps;
         if p1 {
             // Reduce-scatter: rank r ends up owning reduced chunk r.
             for s in 0..n - 1 {
-                let c_send = (r + n - 1 - s) % n;
-                let c_recv = (r + 2 * n - 2 - s) % n;
+                let c_send = ord[(p + n - 1 - s) % n];
+                let c_recv = ord[(p + 2 * n - 2 - s) % n];
                 let fbase = s as u64 * subs_pc;
                 let (so, sl) = cr(c_send);
                 // Into the successor's scratch slot for step s.
@@ -366,8 +445,8 @@ fn build_ring(
             // All-gather: circulate finished chunks straight into the
             // destination buffers (no scratch, no reduction).
             for s in 0..n - 1 {
-                let g_send = (r + n - s) % n;
-                let g_recv = (r + n - 1 - s) % n;
+                let g_send = ord[(p + n - s) % n];
+                let g_recv = ord[(p + n - 1 - s) % n];
                 let fbase = p2_fbase0 + s as u64 * subs_pc;
                 let (so, sl) = cr(g_send);
                 b.push_send(steps, r, next, me.buf + so, b.wins[next].buf + so, sl, fbase);
@@ -378,7 +457,7 @@ fn build_ring(
         if cfg.op == CollOp::Broadcast {
             // Pipelined chain: root streams sub-blocks to the next rank;
             // every intermediate forwards each sub-block as it lands.
-            let pos = (r + n - cfg.root) % n;
+            let pos = (p + n - proot) % n;
             for (k, (off, l)) in b.subs(bytes).into_iter().enumerate() {
                 let fi = k as u64;
                 if pos > 0 {
@@ -400,12 +479,15 @@ fn build_tree(
     b: &Builder,
     bytes: u64,
     total_subs: u64,
-    n: usize,
+    ord: &[usize],
     ranks: &mut [RankSchedule],
 ) {
-    // Binary tree over chain positions; rank of position q is
-    // (root + q) mod n, so the root is position 0.
-    let rank_of = |q: usize| (cfg.root + q) % n;
+    let n = ord.len();
+    // Binary tree over chain positions; position q holds the rank at
+    // ring-order offset q from the root's position, so the root is
+    // position 0 (identity order: rank of position q = (root + q) % n).
+    let proot = ord.iter().position(|&r| r == cfg.root).expect("root validated");
+    let rank_of = |q: usize| ord[(proot + q) % n];
     for pos in 0..n {
         let r = rank_of(pos);
         let me = b.wins[r];
@@ -609,10 +691,26 @@ mod tests {
     }
 
     fn check_op(op: CollOp, algo: Algo, n: usize, bytes: u64, pipeline: u64, root: usize) {
+        check_op_ordered(op, algo, n, bytes, pipeline, root, None);
+    }
+
+    /// As `check_op`, with an explicit ring order: the mathematical
+    /// contract (who owns which reduced chunk) must not depend on it.
+    #[allow(clippy::too_many_arguments)]
+    fn check_op_ordered(
+        op: CollOp,
+        algo: Algo,
+        n: usize,
+        bytes: u64,
+        pipeline: u64,
+        root: usize,
+        order: Option<Vec<usize>>,
+    ) {
         let wins = windows(n);
         let mut cfg = CollCfg::new(op, algo, bytes);
         cfg.pipeline_bytes = pipeline;
         cfg.root = root;
+        cfg.order = order;
         let built = build(&cfg, &wins).unwrap();
         let mut it = Interp::new(&wins);
         let elems = bytes / 8;
@@ -701,6 +799,60 @@ mod tests {
     }
 
     #[test]
+    fn ring_ops_with_custom_order() {
+        // A non-trivial permutation must leave the math unchanged: the
+        // all-reduce is complete everywhere, reduce-scatter still
+        // leaves rank r owning reduced chunk r, all-gather still puts
+        // chunk c's seed everywhere — only the neighbour map moves.
+        let ord = vec![2usize, 0, 4, 1, 5, 3];
+        for op in [CollOp::AllReduce, CollOp::ReduceScatter, CollOp::AllGather] {
+            check_op_ordered(op, Algo::Ring, 6, 4096, 512, 0, Some(ord.clone()));
+        }
+        // Uneven chunks + a root that is not at ring position 0.
+        check_op_ordered(CollOp::AllReduce, Algo::Ring, 5, 104, 64, 3, Some(vec![4, 2, 0, 3, 1]));
+        check_op_ordered(CollOp::Broadcast, Algo::Ring, 5, 1536, 256, 2, Some(vec![4, 2, 0, 3, 1]));
+    }
+
+    #[test]
+    fn tree_ops_with_custom_order() {
+        let ord = vec![2usize, 0, 4, 1, 5, 3];
+        check_op_ordered(CollOp::AllReduce, Algo::Tree, 6, 2048, 512, 3, Some(ord.clone()));
+        check_op_ordered(CollOp::Broadcast, Algo::Tree, 6, 1024, 256, 5, Some(ord));
+    }
+
+    #[test]
+    fn hierarchical_order_is_identity_on_contiguous_leaves() {
+        // build_tree groups leaves contiguously per subtree, so the
+        // hierarchy-aware DFS order is the identity — consecutive ring
+        // positions already share the deepest possible quadrant.
+        assert_eq!(hierarchical_order(&[4, 4, 4, 2]), (0..128).collect::<Vec<_>>());
+        assert_eq!(hierarchical_order(&[2, 2]), vec![0, 1, 2, 3]);
+        assert_eq!(hierarchical_order(&[]), vec![0], "degenerate single-rank tree");
+        // The minimality property it encodes: a ring over the order
+        // crosses each level-0 quadrant boundary exactly once per
+        // quadrant (one entry edge, one exit edge per group).
+        let fanout = [4usize, 4];
+        let ord = hierarchical_order(&fanout);
+        let n = ord.len();
+        let group = |r: usize| r / fanout[0];
+        let crossings = (0..n).filter(|&p| group(ord[p]) != group(ord[(p + 1) % n])).count();
+        assert_eq!(crossings, n / fanout[0], "one boundary crossing per quadrant");
+    }
+
+    #[test]
+    fn rejects_bad_order() {
+        let mk = |order: Vec<usize>| {
+            let mut cfg = CollCfg::new(CollOp::AllReduce, Algo::Ring, 256);
+            cfg.order = Some(order);
+            build(&cfg, &windows(3))
+        };
+        assert!(mk(vec![0, 1]).is_err(), "wrong length");
+        assert!(mk(vec![0, 1, 1]).is_err(), "duplicate rank");
+        assert!(mk(vec![0, 1, 3]).is_err(), "out of range");
+        assert!(mk(vec![2, 0, 1]).is_ok(), "valid permutation accepted");
+    }
+
+    #[test]
     fn f64_reduction_exact_on_integers() {
         let wins = windows(4);
         let mut cfg = CollCfg::new(CollOp::AllReduce, Algo::Ring, 1024);
@@ -732,11 +884,21 @@ mod tests {
 
     #[test]
     fn flag_indices_unique_per_receiver() {
+        for order in [None, Some(vec![3usize, 1, 5, 0, 2, 4])] {
+            flag_indices_unique_with(order);
+        }
+    }
+
+    fn flag_indices_unique_with(order: Option<Vec<usize>>) {
         // Every WaitFlag address/token pair must be written exactly once
-        // across all senders (per receiver arena slot).
+        // across all senders (per receiver arena slot) — with or without
+        // a ring order.
         let wins = windows(6);
-        let cfg =
-            CollCfg { pipeline_bytes: 256, ..CollCfg::new(CollOp::AllReduce, Algo::Ring, 4096) };
+        let cfg = CollCfg {
+            pipeline_bytes: 256,
+            order,
+            ..CollCfg::new(CollOp::AllReduce, Algo::Ring, 4096)
+        };
         let built = build(&cfg, &wins).unwrap();
         let mut writes: HashMap<u64, usize> = HashMap::new();
         for sched in &built.ranks {

@@ -196,18 +196,17 @@ impl System {
                         cut_slave_export(&format!("cut.{}", mc.name), s_cfg, mon_s, epoch);
                     // SAFETY: the island's only outbound bundle (monitor
                     // -> crossbar) was cut just above; shard i+1 holds
-                    // the generator, monitor, and near relay half, shard
-                    // 0 the far half — they share only the Arc-backed
-                    // exchange queues, and the `gens`/`monitors` handles
-                    // are read between runs only.
+                    // the generator, monitor, and sender relay, shard 0
+                    // the receiver half — they share only the exchange
+                    // queues (whose wakes `register` wires up, letting
+                    // the relays sleep), and the `gens`/`monitors`
+                    // handles are read between runs only.
                     unsafe {
                         let sh = eng.shard(i + 1);
                         sh.add(g_adapter);
                         sh.add(mon_adapter);
-                        sh.add(cut.sender);
-                        eng.shard(0).add(cut.receiver);
+                        cut.register(eng, i + 1, 0);
                     }
-                    eng.add_links(cut.links);
                     xbar_slaves.push(far_s);
                 }
             }
@@ -346,8 +345,8 @@ impl System {
     }
 
     /// Currently-awake components (observability; in full-scan mode every
-    /// component stays awake, and in sharded mode the cut relays never
-    /// sleep).
+    /// component stays awake — in sharded event mode even the cut relays
+    /// sleep between exchanges, so a drained system reaches zero).
     pub fn awake_components(&self) -> usize {
         self.arena.awake_components()
     }

@@ -176,27 +176,20 @@ impl Chiplet {
                     // i+1 (cluster internals + near relay halves) shares
                     // `Rc` state only within that shard; the far halves
                     // join shard 0 and reach the cluster exclusively
-                    // through the Arc-backed exchange queues. The
+                    // through the exchange queues. `register` also wires
+                    // each queue's exchange wake to its relay, so the
+                    // relays may sleep between exchanges. The
                     // `ClusterHandle` is only touched between runs.
                     unsafe {
                         let sh = eng.shard(i + 1);
                         for c in comps {
                             sh.add_boxed(c);
                         }
-                        sh.add(c_do.sender);
-                        sh.add(c_di.receiver);
-                        sh.add(c_co.sender);
-                        sh.add(c_ci.receiver);
-                        let sh0 = eng.shard(0);
-                        sh0.add(c_do.receiver);
-                        sh0.add(c_di.sender);
-                        sh0.add(c_co.receiver);
-                        sh0.add(c_ci.sender);
+                        c_do.register(eng, i + 1, 0);
+                        c_di.register(eng, 0, i + 1);
+                        c_co.register(eng, i + 1, 0);
+                        c_ci.register(eng, 0, i + 1);
                     }
-                    eng.add_links(c_do.links);
-                    eng.add_links(c_di.links);
-                    eng.add_links(c_co.links);
-                    eng.add_links(c_ci.links);
                     (
                         NodeIo { up_out: far_dma_out, up_in: far_dma_in, range },
                         NodeIo { up_out: far_core_out, up_in: far_core_in, range },
@@ -439,8 +432,10 @@ impl Chiplet {
     }
 
     /// Components currently awake in the engine (observability/benches).
-    /// In sharded mode the cut relays never sleep, so an otherwise idle
-    /// fabric keeps eight awake components per cluster.
+    /// Cut relays sleep between exchanges like everything else (the
+    /// epoch exchange wakes exactly the relays that gained beats or
+    /// credits), so an idle sharded fabric reaches zero awake
+    /// components (`idle_sharded_chiplet_sleeps_everything`).
     pub fn awake_components(&self) -> usize {
         self.arena.awake_components()
     }
@@ -672,6 +667,36 @@ mod tests {
             awake * 10 <= total,
             "idle fabric should sleep: {awake}/{total} components awake"
         );
+    }
+
+    #[test]
+    fn idle_sharded_chiplet_sleeps_everything() {
+        // Cut relays are woken by the epoch exchange only when it moves
+        // beats or credits toward them, so a truly idle sharded fabric
+        // must reach zero awake components — the relays were the last
+        // permanently-awake holdouts.
+        let mut cfg = ChipletCfg::small();
+        cfg.threads = 2;
+        cfg.epoch = 4;
+        let mut ch = Chiplet::new(cfg);
+        ch.run(200);
+        assert_eq!(
+            ch.awake_components(),
+            0,
+            "idle sharded chiplet must be fully asleep ({} components registered)",
+            ch.component_count()
+        );
+        // ...and further idle epochs keep it asleep.
+        ch.run(100);
+        assert_eq!(ch.awake_components(), 0);
+        // The fabric must still wake up for real traffic afterwards.
+        let src = addr::cluster_base(1) + 0x2000;
+        let dst = addr::cluster_base(0) + 0x2000;
+        ch.clusters[1].l1.borrow().banks.borrow_mut().poke(src, &[0x3C; 256]);
+        let h = ch.submit_dma(0, 0, TransferReq::OneD { src, dst, len: 256 });
+        let ok = ch.run_until(40_000, |c| c.dma_done(0, 0, h));
+        assert!(ok, "DMA after the idle period must complete through sleeping cuts");
+        assert_eq!(ch.clusters[0].l1.borrow().banks.borrow().peek_vec(dst, 256), vec![0x3C; 256]);
     }
 
     #[test]

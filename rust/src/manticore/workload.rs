@@ -298,6 +298,13 @@ pub struct CollectiveResult {
 
 /// Seed every rank's buffer, run the collective on the chiplet's
 /// per-cluster orchestrators, and verify the result mathematically.
+///
+/// Uses the hierarchy-aware ring mapping
+/// (`collective::hierarchical_order`) derived from the chiplet's
+/// fanout — which, because the tree numbers clusters contiguously per
+/// quadrant, is the identity permutation today; `benches/collective.rs`
+/// records the delta against an explicit linear map to prove the two
+/// coincide.
 pub fn run_collective(
     ch: &mut Chiplet,
     op: CollOp,
@@ -305,9 +312,24 @@ pub fn run_collective(
     bytes: u64,
     budget: Cycle,
 ) -> Result<CollectiveResult> {
+    let order = collective::hierarchical_order(&ch.cfg.fanout);
+    run_collective_with_order(ch, op, algo, bytes, budget, Some(order))
+}
+
+/// As [`run_collective`], with an explicit ring order (`None` = the
+/// linear rank-r-equals-cluster-r map).
+pub fn run_collective_with_order(
+    ch: &mut Chiplet,
+    op: CollOp,
+    algo: Algo,
+    bytes: u64,
+    budget: Cycle,
+    order: Option<Vec<usize>>,
+) -> Result<CollectiveResult> {
     let n = ch.cfg.n_clusters();
     let windows = collective_windows(n);
-    let cfg = CollCfg::new(op, algo, bytes);
+    let mut cfg = CollCfg::new(op, algo, bytes);
+    cfg.order = order;
     let mut built = collective::build(&cfg, &windows)?;
     let elems = bytes / 8;
     // Seed: all-reduce/reduce-scatter sum every rank's buffer; all-gather
@@ -573,6 +595,42 @@ mod tests {
         let res =
             run_collective(&mut ch, CollOp::AllReduce, Algo::Ring, 16 * 1024, 1_000_000).unwrap();
         assert!(res.finished && res.correct, "all-reduce must survive the epoch cuts");
+    }
+
+    /// Run one collective with an explicit ring order on a fresh small
+    /// chiplet and return the verified result plus the fingerprint.
+    fn ordered_run(op: CollOp, order: Option<Vec<usize>>) -> (Cycle, bool, String) {
+        use crate::manticore::chiplet::determinism_fingerprint;
+        let mut ch = Chiplet::new(ChipletCfg::small());
+        let r = run_collective_with_order(&mut ch, op, Algo::Ring, 4096, 500_000, order).unwrap();
+        assert!(r.finished, "{op:?} must finish");
+        (r.cycles, r.correct, determinism_fingerprint(&ch))
+    }
+
+    #[test]
+    fn hierarchical_ring_map_is_noop_on_contiguous_clusters() {
+        // The tree numbers clusters contiguously per quadrant, so the
+        // hierarchy-aware order must equal the identity and leave the
+        // all-reduce result *and* the determinism fingerprint (cycles,
+        // per-level traffic, per-cluster counters) bit-identical to the
+        // linear rank-r-equals-cluster-r map.
+        let order = collective::hierarchical_order(&[2, 2]);
+        assert_eq!(order, vec![0, 1, 2, 3]);
+        let linear = ordered_run(CollOp::AllReduce, None);
+        let hier = ordered_run(CollOp::AllReduce, Some(order));
+        assert!(linear.1, "all-reduce must be exact");
+        assert_eq!(linear, hier, "hierarchy-aware map must be a no-op today");
+    }
+
+    #[test]
+    fn permuted_ring_order_still_exact_on_chiplet() {
+        // A genuinely shuffled ring order through the real NoC: every
+        // transfer targets different neighbours, yet the math and the
+        // reduce-scatter ownership contract must hold.
+        for op in [CollOp::AllReduce, CollOp::ReduceScatter] {
+            let (_, correct, _) = ordered_run(op, Some(vec![2, 0, 3, 1]));
+            assert!(correct, "{op:?} with permuted order must be exact");
+        }
     }
 
     #[test]

@@ -17,18 +17,32 @@
 //! Each of the five channels is cut independently (FIFO order per
 //! channel is preserved; cross-channel skew can grow by up to the
 //! credit imbalance, which every module already tolerates — a cut
-//! behaves exactly like a deep, slow link). Cut relays never sleep,
-//! like the `noc::cdc` halves: their inputs can change at an exchange,
-//! which no channel wake observes. They are the only permanently-awake
-//! components of a sharded topology.
+//! behaves exactly like a deep, slow link).
+//!
+//! ## Relay sleep
+//!
+//! Relays sleep like any other component: a relay reports
+//! [`Activity::Idle`] once its channels and exchange inboxes are
+//! drained. Two wake sources cover everything that can give it work
+//! again — bound channel traffic (`bind_owner`: a module pushing a beat
+//! toward the relay, or popping one of the relay's beats, wakes it),
+//! and the epoch exchange itself ([`BundleCut::register`] wires each
+//! queue so the engine wakes the consumer relay when beats are
+//! delivered and the producer relay when credits return). A relay
+//! blocked mid-transfer (exchange credits exhausted, or a full outbound
+//! channel) simply stays awake until the blockage clears — bounded by
+//! one epoch, and identical in both engine modes because a blocked tick
+//! moves nothing. Before this, cut relays were the only
+//! permanently-awake components of a sharded topology; an idle sharded
+//! fabric now reaches zero awake components.
 
 use std::sync::Arc;
 
 use crate::protocol::channel::{Rx, Tx};
 use crate::protocol::payload::{BBeat, Cmd, RBeat, WBeat};
 use crate::protocol::port::{bundle, BundleCfg, MasterEnd, SlaveEnd};
-use crate::sim::shard::{exchange_channel, ExchangeLink, ExchangeRx, ExchangeTx};
-use crate::sim::{Activity, Component, Cycle};
+use crate::sim::shard::{exchange_channel, ExchangeLink, ExchangeRx, ExchangeTx, ShardedEngine};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
 /// Exchange capacity that sustains one beat per cycle per channel:
 /// credits spent during epoch k return at the end of epoch k+1, so the
@@ -60,63 +74,133 @@ pub struct CutReceiver {
     r: ExchangeTx<RBeat>,
 }
 
-/// Forward at most one beat from a channel into an exchange queue.
-fn pump_out<T>(rx: &Rx<T>, tx: &ExchangeTx<T>) {
+/// Forward at most one beat from a channel into an exchange queue;
+/// reports whether a beat moved.
+fn pump_out<T>(rx: &Rx<T>, tx: &ExchangeTx<T>) -> bool {
     if rx.can_pop() && tx.can_send() {
         tx.send(rx.pop());
+        true
+    } else {
+        false
     }
 }
 
 /// Forward at most one delivered beat from an exchange queue into a
-/// channel. `recv` is only called once the push is known to succeed.
-fn pump_in<T>(rx: &ExchangeRx<T>, tx: &Tx<T>) {
+/// channel; reports whether a beat moved. `recv` is only called once
+/// the push is known to succeed.
+fn pump_in<T>(rx: &ExchangeRx<T>, tx: &Tx<T>) -> bool {
     if !tx.can_push() {
-        return;
+        return false;
     }
     if let Some(beat) = rx.recv() {
         tx.push(beat);
+        true
+    } else {
+        false
     }
 }
 
 impl Component for CutSender {
     fn tick(&mut self, cy: Cycle) -> Activity {
         self.s.set_now(cy);
-        pump_out(&self.s.aw, &self.aw);
-        pump_out(&self.s.w, &self.w);
-        pump_out(&self.s.ar, &self.ar);
-        pump_in(&self.b, &self.s.b);
-        pump_in(&self.r, &self.s.r);
-        Activity::Active
+        let mut moved = pump_out(&self.s.aw, &self.aw);
+        moved |= pump_out(&self.s.w, &self.w);
+        moved |= pump_out(&self.s.ar, &self.ar);
+        moved |= pump_in(&self.b, &self.s.b);
+        moved |= pump_in(&self.r, &self.s.r);
+        // Stay awake while anything could still move (including beats
+        // stalled on exhausted exchange credits — at most one epoch);
+        // once fully drained, channel wakes and exchange wakes cover
+        // every way work can reappear.
+        let backlog = self.s.aw.can_pop()
+            || self.s.w.can_pop()
+            || self.s.ar.can_pop()
+            || self.b.pending() > 0
+            || self.r.pending() > 0;
+        Activity::active_if(moved || backlog)
     }
 
     fn name(&self) -> &str {
         &self.name
+    }
+
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.s.bind_owner(wake, id);
     }
 }
 
 impl Component for CutReceiver {
     fn tick(&mut self, cy: Cycle) -> Activity {
         self.m.set_now(cy);
-        pump_in(&self.aw, &self.m.aw);
-        pump_in(&self.w, &self.m.w);
-        pump_in(&self.ar, &self.m.ar);
-        pump_out(&self.m.b, &self.b);
-        pump_out(&self.m.r, &self.r);
-        Activity::Active
+        let mut moved = pump_in(&self.aw, &self.m.aw);
+        moved |= pump_in(&self.w, &self.m.w);
+        moved |= pump_in(&self.ar, &self.m.ar);
+        moved |= pump_out(&self.m.b, &self.b);
+        moved |= pump_out(&self.m.r, &self.r);
+        let backlog = self.aw.pending() > 0
+            || self.w.pending() > 0
+            || self.ar.pending() > 0
+            || self.m.b.can_pop()
+            || self.m.r.can_pop();
+        Activity::active_if(moved || backlog)
     }
 
     fn name(&self) -> &str {
         &self.name
     }
+
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.m.bind_owner(wake, id);
+    }
 }
 
-/// One cut bundle connection: the two relays plus the exchange queues
-/// to register with the `ShardedEngine`. The caller places `sender` in
-/// the producing shard and `receiver` in the consuming shard.
+/// One cut bundle connection: the two relays plus the exchange queues.
+/// Construction goes through [`BundleCut::register`] only — it places
+/// the sender in the producing shard, the receiver in the consuming
+/// shard, and wires the exchange wakes. The parts are deliberately not
+/// exposed: relays sleep, so registering them by hand with plain
+/// `ShardedEngine::add_links` (no wake endpoints) would compile and
+/// then stall in event mode the first time an exchange delivered into
+/// a sleeping relay's inbox.
 pub struct BundleCut {
-    pub sender: CutSender,
-    pub receiver: CutReceiver,
-    pub links: Vec<Arc<dyn ExchangeLink>>,
+    sender: CutSender,
+    receiver: CutReceiver,
+    /// Forward (AW/W/AR) queues first, then the response (B/R) queues
+    /// (`FWD_LINKS` splits them).
+    links: Vec<Arc<dyn ExchangeLink>>,
+}
+
+/// Number of forward-direction links at the head of [`BundleCut::links`].
+const FWD_LINKS: usize = 3;
+
+impl BundleCut {
+    /// Register both relay halves and the five exchange queues with the
+    /// sharded engine: the sender joins `sender_shard`, the receiver
+    /// `receiver_shard`, and every queue is wired so the epoch exchange
+    /// wakes the relay that gained work (forward queues wake the
+    /// receiver on delivery and the sender on credit return; the
+    /// response queues mirror that). Returns the relays' component ids.
+    ///
+    /// # Safety
+    ///
+    /// Same obligation as [`crate::sim::Shard::add`] for both relays:
+    /// every other bundle connecting the two shards must also be cut,
+    /// and the far bundle ends this cut produced must live in
+    /// `receiver_shard` / `sender_shard` respectively.
+    pub unsafe fn register(
+        self,
+        eng: &mut ShardedEngine,
+        sender_shard: usize,
+        receiver_shard: usize,
+    ) -> (ComponentId, ComponentId) {
+        let BundleCut { sender, receiver, mut links } = self;
+        let snd = eng.shard(sender_shard).add(sender);
+        let rcv = eng.shard(receiver_shard).add(receiver);
+        let rev = links.split_off(FWD_LINKS);
+        eng.add_links_waking(links, (sender_shard, snd), (receiver_shard, rcv));
+        eng.add_links_waking(rev, (receiver_shard, rcv), (sender_shard, snd));
+        (snd, rcv)
+    }
 }
 
 fn cut(label: &str, s: SlaveEnd, m: MasterEnd, epoch: Cycle) -> BundleCut {
@@ -193,12 +277,10 @@ mod tests {
         let (prod_m, prod_s) = bundle("prod", cfg);
         let (cut, far_s) = cut_slave_export("cut.t", cfg, prod_s, epoch);
         // SAFETY: the producer bundle stays on the caller's side of the
-        // cut; only the Arc-backed exchange queues cross shards.
+        // cut; only the exchange queues cross shards.
         unsafe {
-            eng.shard(0).add(cut.sender);
-            eng.shard(1).add(cut.receiver);
+            cut.register(&mut eng, 0, 1);
         }
-        eng.add_links(cut.links);
         // Consumer: answer every AR with a single R beat, next cycle.
         struct Echo {
             s: SlaveEnd,

@@ -120,8 +120,9 @@ impl Arena {
         }
     }
 
-    /// Currently-awake components (observability). In sharded mode the
-    /// cut relays never sleep; in full-scan mode everything is awake.
+    /// Currently-awake components (observability). In full-scan mode
+    /// everything is awake; in event mode even sharded cut relays sleep
+    /// between exchanges, so idle topologies reach zero.
     pub fn awake_components(&self) -> usize {
         match self {
             Arena::Single { engine, domain } => engine.awake_components(*domain),

@@ -16,6 +16,7 @@ pub use engine::{
 pub use prop::{prop_check, prop_replay, Gen};
 pub use rng::SplitMix64;
 pub use shard::{
-    auto_threads, exchange_channel, ExchangeLink, ExchangeRx, ExchangeTx, Shard, ShardedEngine,
+    auto_threads, exchange_channel, Exchanged, ExchangeLink, ExchangeRx, ExchangeTx, Shard,
+    ShardedEngine,
 };
 pub use stats::{human_bytes, Bandwidth, LatencyStats};

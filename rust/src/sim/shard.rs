@@ -1,5 +1,6 @@
-//! Parallel sharded simulation: shard-private engines advanced on worker
-//! threads, synchronized by epoch-aligned exchange at the cut links.
+//! Parallel sharded simulation: shard-private engines advanced on a
+//! persistent worker pool, synchronized by epoch-aligned exchange at the
+//! cut links.
 //!
 //! A [`Shard`] owns a private [`Engine`] — its own component arena, wake
 //! set, and edge calendar — so the `Rc`/`RefCell` graphs of the
@@ -14,13 +15,54 @@
 //! the simulation result is bit-identical for every worker-thread count
 //! — including a single thread running the shards back-to-back.
 //!
-//! [`ShardedEngine`] drives the shards: `run` advances every shard by
-//! the same cycle count, performing the exchange whenever the global
-//! cycle count crosses a multiple of the epoch. With more than one
-//! worker thread the shards are split into contiguous chunks and
-//! advanced concurrently under `std::thread::scope`, with a barrier at
-//! every exchange; one thread (the barrier leader) performs all
-//! exchanges while the others wait.
+//! ## Lock-free exchange queues
+//!
+//! Exchange state only legally changes hands at epoch barriers, so the
+//! queues take no locks on the per-cycle path. Each queue is split into
+//! two independently-owned halves behind `UnsafeCell`s:
+//!
+//! * the **producer half** (`credits`, `out`) is touched only by the
+//!   component holding the [`ExchangeTx`] — one thread at a time, by the
+//!   same confinement argument as [`SendShard`];
+//! * the **consumer half** (`inbox`, `consumed`) is touched only by the
+//!   component holding the [`ExchangeRx`].
+//!
+//! The two halves meet only inside [`ExchangeLink::exchange`], which runs
+//! while **no shard is advancing**: either on the caller's thread between
+//! runs, or on the barrier leader with every other worker parked between
+//! the two `Barrier::wait`s of an epoch barrier. The barrier provides the
+//! happens-before edges in both directions — everything a worker wrote
+//! before arriving at the barrier is visible to the leader, and the
+//! leader's moves are visible to every worker released by the second
+//! wait — so the halves need no atomics of their own.
+//!
+//! ## Persistent worker pool
+//!
+//! Worker threads are created once (lazily, on the first parallel `run`)
+//! and parked on a condvar between runs, so epoch-granularity callers
+//! (`run_until`, the coordinator's completion polling) stop paying a
+//! `thread::scope` spawn/join per window. The caller's thread always
+//! participates as worker 0; `run` returns only after every pool thread
+//! has reported the job finished, which restores the single-owner view
+//! of the shards for external handles.
+//!
+//! ## Weighted shard placement
+//!
+//! Shards are assigned to workers by component weight (LPT greedy:
+//! heaviest shard to the least-loaded worker) instead of contiguous
+//! `div_ceil` chunks — shard 0 carries a chiplet's whole tree plus the
+//! top crosspoint, HBM, and IO, and contiguous chunking serialized it
+//! with the first clusters. Placement cannot change results (shards
+//! interact only at barriers), so this is free determinism-wise.
+//!
+//! ## Relay wakes
+//!
+//! [`ExchangeLink::exchange`] reports what it moved ([`Exchanged`]), and
+//! links registered with [`ShardedEngine::add_links_waking`] name the
+//! relay component on each side; after the exchanges, the leader wakes
+//! exactly the relays that gained work (beats delivered → consumer,
+//! credits returned → producer). This is what lets `protocol::exchange`
+//! relays sleep between exchanges instead of ticking every cycle.
 //!
 //! Timing model: a cut link behaves like a link with `epoch` cycles of
 //! latency and two epochs' worth of buffering — the register slices the
@@ -29,56 +71,117 @@
 //! one; A/B comparisons are between sharded runs, or between the event
 //! and full-scan modes of the same sharded topology.
 
+use std::cell::{Cell, UnsafeCell};
 use std::collections::VecDeque;
-use std::sync::{Arc, Barrier, Mutex};
+use std::marker::PhantomData;
+use std::sync::{Arc, Barrier, Condvar, Mutex};
 
 use crate::sim::{Component, ComponentId, Cycle, DomainId, Engine};
 
-struct ExchangeInner<T> {
-    label: String,
-    /// Free slots as seen by the producer (updated only at exchanges).
+/// Producer-owned half of an exchange queue: the free-slot count and the
+/// beats sent since the last exchange.
+struct TxHalf<T> {
     credits: usize,
-    /// Beats sent since the last exchange (producer side).
     out: VecDeque<T>,
-    /// Beats delivered by an exchange, consumable now (consumer side).
+}
+
+/// Consumer-owned half: beats delivered by the last exchange, and the
+/// count consumed since (returned to the producer as credits at the next
+/// one).
+struct RxHalf<T> {
     inbox: VecDeque<T>,
-    /// Beats consumed since the last exchange (returned as credits).
     consumed: usize,
 }
 
-/// Producer endpoint of a cross-shard exchange queue.
-pub struct ExchangeTx<T> {
-    inner: Arc<Mutex<ExchangeInner<T>>>,
+/// Shared exchange state. See the module docs for the access discipline:
+/// `tx` is only touched through the [`ExchangeTx`], `rx` only through
+/// the [`ExchangeRx`], and both only by [`ExchangeLink::exchange`] while
+/// every shard is quiescent.
+struct ExchangeShared<T> {
+    label: Arc<str>,
+    tx: UnsafeCell<TxHalf<T>>,
+    rx: UnsafeCell<RxHalf<T>>,
 }
 
-/// Consumer endpoint of a cross-shard exchange queue.
+// SAFETY: the two `UnsafeCell` halves are each confined to a single
+// component (and therefore, by the `SendShard` invariant, to a single
+// thread at a time); the only cross-half access is the epoch exchange,
+// which runs while no shard is advancing, with the barrier (or the
+// pool's completion handshake) providing the happens-before edges. No
+// access path allows two threads to touch the same half concurrently.
+unsafe impl<T: Send> Send for ExchangeShared<T> {}
+unsafe impl<T: Send> Sync for ExchangeShared<T> {}
+
+/// Suppresses the auto-`Sync` impl on the exchange endpoints while
+/// keeping them `Send`: a `Sync` handle would let safe code share `&tx`
+/// across threads and race two `send`s on the same `UnsafeCell` half.
+/// With `!Sync`, a handle is owned by exactly one component at a time
+/// (moving it between threads remains fine — that is the `SendShard`
+/// discipline), and its safe methods cannot alias across threads.
+type NotSync = PhantomData<Cell<()>>;
+
+/// Producer endpoint of a cross-shard exchange queue. `Send` but
+/// deliberately `!Sync` — see [`NotSync`].
+pub struct ExchangeTx<T> {
+    shared: Arc<ExchangeShared<T>>,
+    _confined: NotSync,
+}
+
+/// Consumer endpoint of a cross-shard exchange queue. `Send` but
+/// deliberately `!Sync` — see [`NotSync`].
 pub struct ExchangeRx<T> {
-    inner: Arc<Mutex<ExchangeInner<T>>>,
+    shared: Arc<ExchangeShared<T>>,
+    _confined: NotSync,
+}
+
+/// What one epoch exchange moved on a queue, so the engine can wake
+/// exactly the relay endpoints that gained work.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Exchanged {
+    /// Beats were delivered into the consumer's inbox.
+    pub delivered: bool,
+    /// Credits were returned to the producer.
+    pub credited: bool,
 }
 
 /// Type-erased handle the [`ShardedEngine`] uses to run the epoch
 /// exchange on every registered queue.
 pub trait ExchangeLink: Send + Sync {
     /// Move the epoch's sent beats to the consumer side and return the
-    /// epoch's consumed count to the producer as credits. Must only be
-    /// called while no shard is advancing.
-    fn exchange(&self);
-    fn label(&self) -> String;
+    /// epoch's consumed count to the producer as credits.
+    ///
+    /// # Safety
+    ///
+    /// Must only be called while no shard is advancing and no other
+    /// thread is touching either endpoint of this queue: the caller's
+    /// thread between runs, or the barrier leader with every worker
+    /// parked between the two barrier waits. The caller's barrier/join
+    /// provides the happens-before edges against the endpoint owners.
+    unsafe fn exchange(&self) -> Exchanged;
+
+    /// The queue's label. Cheap: a shared `Arc<str>` clone, no per-call
+    /// allocation (the exchange path and bench logging call this).
+    fn label(&self) -> Arc<str>;
 }
 
-struct LinkImpl<T>(Arc<Mutex<ExchangeInner<T>>>);
+struct LinkImpl<T>(Arc<ExchangeShared<T>>);
 
 impl<T: Send> ExchangeLink for LinkImpl<T> {
-    fn exchange(&self) {
-        let mut i = self.0.lock().unwrap();
-        i.credits += i.consumed;
-        i.consumed = 0;
-        let moved = std::mem::take(&mut i.out);
-        i.inbox.extend(moved);
+    unsafe fn exchange(&self) -> Exchanged {
+        // The caller upholds exclusivity and ordering (see the trait's
+        // safety contract), so both halves may be borrowed together.
+        let tx = &mut *self.0.tx.get();
+        let rx = &mut *self.0.rx.get();
+        let credited = rx.consumed > 0;
+        tx.credits += rx.consumed;
+        rx.consumed = 0;
+        let delivered = !tx.out.is_empty();
+        rx.inbox.extend(tx.out.drain(..));
+        Exchanged { delivered, credited }
     }
 
-    fn label(&self) -> String {
-        self.0.lock().unwrap().label.clone()
+    fn label(&self) -> Arc<str> {
+        self.0.label.clone()
     }
 }
 
@@ -91,33 +194,34 @@ pub fn exchange_channel<T: Send + 'static>(
     cap: usize,
 ) -> (ExchangeTx<T>, ExchangeRx<T>, Arc<dyn ExchangeLink>) {
     assert!(cap >= 1);
-    let inner = Arc::new(Mutex::new(ExchangeInner {
-        label: label.into(),
-        credits: cap,
-        out: VecDeque::new(),
-        inbox: VecDeque::new(),
-        consumed: 0,
-    }));
+    let shared = Arc::new(ExchangeShared {
+        label: label.into().into(),
+        tx: UnsafeCell::new(TxHalf { credits: cap, out: VecDeque::new() }),
+        rx: UnsafeCell::new(RxHalf { inbox: VecDeque::new(), consumed: 0 }),
+    });
     (
-        ExchangeTx { inner: inner.clone() },
-        ExchangeRx { inner: inner.clone() },
-        Arc::new(LinkImpl(inner)),
+        ExchangeTx { shared: shared.clone(), _confined: PhantomData },
+        ExchangeRx { shared: shared.clone(), _confined: PhantomData },
+        Arc::new(LinkImpl(shared)),
     )
 }
 
 impl<T> ExchangeTx<T> {
     /// True iff a `send` would be accepted (a credit is available).
     pub fn can_send(&self) -> bool {
-        self.inner.lock().unwrap().credits > 0
+        // SAFETY: only the owning producer component reads/writes this
+        // half between exchanges (module-level confinement discipline).
+        unsafe { (*self.shared.tx.get()).credits > 0 }
     }
 
     /// Send a beat toward the consumer shard; it becomes visible after
     /// the next exchange. Panics without a credit (check `can_send`).
     pub fn send(&self, beat: T) {
-        let mut i = self.inner.lock().unwrap();
-        assert!(i.credits > 0, "send on exchange {} without credit", i.label);
-        i.credits -= 1;
-        i.out.push_back(beat);
+        // SAFETY: as in `can_send`.
+        let tx = unsafe { &mut *self.shared.tx.get() };
+        assert!(tx.credits > 0, "send on exchange {} without credit", self.shared.label);
+        tx.credits -= 1;
+        tx.out.push_back(beat);
     }
 }
 
@@ -125,17 +229,20 @@ impl<T> ExchangeRx<T> {
     /// Pop the next delivered beat, if any. The freed slot returns to
     /// the producer as a credit at the next exchange.
     pub fn recv(&self) -> Option<T> {
-        let mut i = self.inner.lock().unwrap();
-        let beat = i.inbox.pop_front();
+        // SAFETY: only the owning consumer component touches this half
+        // between exchanges (module-level confinement discipline).
+        let rx = unsafe { &mut *self.shared.rx.get() };
+        let beat = rx.inbox.pop_front();
         if beat.is_some() {
-            i.consumed += 1;
+            rx.consumed += 1;
         }
         beat
     }
 
     /// Delivered beats not yet consumed.
     pub fn pending(&self) -> usize {
-        self.inner.lock().unwrap().inbox.len()
+        // SAFETY: as in `recv`.
+        unsafe { (*self.shared.rx.get()).inbox.len() }
     }
 }
 
@@ -169,10 +276,11 @@ impl Shard {
     /// e.g. registering the two ends of one `bundle()` in different
     /// shards is a data race. The caller must guarantee that every
     /// connection from `c` to another shard has been cut with
-    /// `protocol::exchange` relays (whose queues are `Arc<Mutex>`), and
-    /// that any external handle into `c` is only used between
-    /// `ShardedEngine::run` calls. The builders in `manticore::chiplet`
-    /// and `coordinator::builder` uphold this at every call site.
+    /// `protocol::exchange` relays (whose queues confine each half to
+    /// one side), and that any external handle into `c` is only used
+    /// between `ShardedEngine::run` calls. The builders in
+    /// `manticore::chiplet` and `coordinator::builder` uphold this at
+    /// every call site.
     pub unsafe fn add(&mut self, c: impl Component + 'static) -> ComponentId {
         self.engine.add(self.domain, c)
     }
@@ -195,38 +303,298 @@ impl Shard {
     }
 }
 
-/// Wrapper asserting a shard may move to a worker thread.
+/// Wrapper asserting a shard may move to (or be advanced by) a worker
+/// thread.
 struct SendShard(Shard);
 
 // SAFETY: a Shard's component graph — every `Rc`/`RefCell` reachable
 // from its arena, including channel cores and wake set — is built
 // inside one shard and never shared with another (builders cut every
-// cross-shard connection with exchange queues, which are `Arc<Mutex>`).
-// A shard is therefore only ever touched by one thread at a time: the
-// worker advancing it during `ShardedEngine::run`, or the caller's
-// thread between runs. External handles into a shard (e.g.
-// `ClusterHandle`, endpoint `Rc`s, channel taps) must likewise only be
-// used between runs; `ShardedEngine::run` joins or barriers every
-// worker before returning, which provides the necessary happens-before
-// edge.
+// cross-shard connection with exchange queues, whose halves are
+// single-owner; see above). A shard is therefore only ever touched by
+// one thread at a time: the worker advancing it during
+// `ShardedEngine::run`, or the caller's thread between runs. External
+// handles into a shard (e.g. `ClusterHandle`, endpoint `Rc`s, channel
+// taps) must likewise only be used between runs; `ShardedEngine::run`
+// waits for every pool worker to finish the job before returning,
+// which provides the necessary happens-before edge.
 unsafe impl Send for SendShard {}
 
+/// One registered exchange queue plus the relay endpoints to wake when
+/// an exchange moves something toward them.
+struct LinkEntry {
+    link: Arc<dyn ExchangeLink>,
+    /// (shard, component) woken when credits return to the producer.
+    producer: Option<(usize, ComponentId)>,
+    /// (shard, component) woken when beats are delivered to the consumer.
+    consumer: Option<(usize, ComponentId)>,
+}
+
+/// Run every registered exchange and wake the relay endpoints that
+/// gained work (delivered beats → consumer, returned credits →
+/// producer). Wake order is the link registration order, and wakes are
+/// merged sorted-and-deduplicated at the next engine step, so results
+/// do not depend on which thread runs this.
+///
+/// # Safety
+///
+/// The caller must have exclusive access to every shard: either no
+/// worker is running (serial path, or between runs), or every worker is
+/// parked at the exchange barrier and the caller is the barrier leader.
+/// `shards` must point at `n_shards` valid `SendShard`s.
+unsafe fn exchange_all(links: &[LinkEntry], shards: *mut SendShard, n_shards: usize) {
+    for entry in links {
+        let moved = entry.link.exchange();
+        if moved.delivered {
+            if let Some((s, id)) = entry.consumer {
+                debug_assert!(s < n_shards);
+                (*shards.add(s)).0.engine.wake(id);
+            }
+        }
+        if moved.credited {
+            if let Some((s, id)) = entry.producer {
+                debug_assert!(s < n_shards);
+                (*shards.add(s)).0.engine.wake(id);
+            }
+        }
+    }
+}
+
+/// Assign shard indices to `workers` workers, balancing the summed
+/// component weight (LPT greedy: heaviest shard first, each to the
+/// least-loaded worker). Every worker receives at least one shard when
+/// `workers <= shards`. Placement is deterministic (stable sort, ties
+/// broken by lowest worker index) — and could not change results even
+/// if it were not, since shards only interact at barriers.
+fn weighted_assignment(shards: &[SendShard], workers: usize) -> Vec<Vec<usize>> {
+    let weight = |i: usize| shards[i].0.component_count().max(1);
+    let mut order: Vec<usize> = (0..shards.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(weight(i)));
+    let mut assign = vec![Vec::new(); workers];
+    let mut load = vec![0usize; workers];
+    for i in order {
+        let w = (0..workers).min_by_key(|&w| (load[w], w)).expect("workers >= 1");
+        load[w] += weight(i);
+        assign[w].push(i);
+    }
+    // Keep each worker's shards in index order: cache-friendly, and the
+    // serial fallback walks shards the same way.
+    for a in &mut assign {
+        a.sort_unstable();
+    }
+    assign
+}
+
+/// One parallel run's worth of work, handed to the pool threads as raw
+/// pointers. Validity contract: `ShardedEngine::run` keeps every
+/// pointed-to allocation alive and unmoved until all workers have
+/// reported the job finished (`WorkerPool::wait_done`).
+#[derive(Clone, Copy)]
+struct Job {
+    shards: *mut SendShard,
+    n_shards: usize,
+    /// Per-worker shard index lists; worker 0 is the caller's thread.
+    assign: *const Vec<usize>,
+    plan: *const (Cycle, bool),
+    plan_len: usize,
+    links: *const LinkEntry,
+    n_links: usize,
+    barrier: *const Barrier,
+}
+
+// SAFETY: a Job is a bag of pointers into storage owned by the posting
+// `run` call, which outlives the job (see the struct docs); the data
+// races on what they point at are excluded by the assignment (each
+// shard index appears in exactly one worker's list) and the barrier
+// discipline documented on `run_worker`.
+unsafe impl Send for Job {}
+
+/// Advance one worker's shard set through the whole plan, with a
+/// barrier at every exchange; the barrier leader performs the exchanges
+/// and relay wakes while every other worker is parked between the two
+/// waits.
+///
+/// # Safety
+///
+/// `job`'s pointers must be valid (see [`Job`]); `index` must be within
+/// the assignment list, and each shard index must appear in exactly one
+/// worker's list. Only the barrier leader may touch shards outside its
+/// own list, and only between the two barrier waits of an exchange.
+unsafe fn run_worker(job: Job, index: usize) {
+    let my = &*job.assign.add(index);
+    let plan = std::slice::from_raw_parts(job.plan, job.plan_len);
+    let barrier = &*job.barrier;
+    for &(step, ex) in plan {
+        for &si in my.iter() {
+            let sh = &mut *job.shards.add(si);
+            let d = sh.0.domain;
+            sh.0.engine.run_cycles(d, step);
+        }
+        if ex {
+            if barrier.wait().is_leader() {
+                let links = std::slice::from_raw_parts(job.links, job.n_links);
+                exchange_all(links, job.shards, job.n_shards);
+            }
+            barrier.wait();
+        }
+    }
+}
+
+/// Aborts the process if dropped while panicking. A panic mid-parallel-run
+/// has no safe recovery: unwinding the frame that owns a live [`Job`]
+/// would free the plan/assignment/barrier storage while other workers
+/// still dereference it (use-after-free), and workers parked at the
+/// exchange barrier can never be released, so any join/wait strategy
+/// deadlocks. The panic hook has already printed the message by the time
+/// the guard runs, so aborting loses no diagnostics. (`thread::scope` had
+/// the same two failure modes, minus the use-after-free.)
+struct AbortOnUnwind;
+
+impl Drop for AbortOnUnwind {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            std::process::abort();
+        }
+    }
+}
+
+struct PoolState {
+    /// Monotonically increasing job id; each worker runs each id once.
+    gen: u64,
+    job: Option<Job>,
+    /// Pool workers finished with the current generation.
+    finished: usize,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for a new generation (or shutdown).
+    go: Condvar,
+    /// The posting thread waits here for `finished` to reach pool size.
+    done: Condvar,
+}
+
+/// Persistent worker threads, parked between runs. The pool owns
+/// workers 1..=size; the caller's thread acts as worker 0.
+struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+fn pool_worker(shared: Arc<PoolShared>, index: usize) {
+    let mut last = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.gen > last {
+                    last = st.gen;
+                    break st.job.expect("job posted with its generation");
+                }
+                st = shared.go.wait(st).unwrap();
+            }
+        };
+        {
+            // A component panic on a pool thread would leave `finished`
+            // unincremented and peers stuck at the barrier: abort (see
+            // `AbortOnUnwind`) instead of hanging the caller.
+            let _guard = AbortOnUnwind;
+            // SAFETY: the posting `run` keeps every pointer in `job`
+            // alive until it has observed our `finished` increment
+            // below, and the mutex hand-offs order our shard accesses
+            // against the poster's.
+            unsafe {
+                run_worker(job, index);
+            }
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.finished += 1;
+        shared.done.notify_all();
+    }
+}
+
+impl WorkerPool {
+    fn new(size: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { gen: 0, job: None, finished: 0, shutdown: false }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..=size)
+            .map(|index| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("noc-shard-{index}"))
+                    .spawn(move || pool_worker(sh, index))
+                    .expect("spawn shard worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    fn size(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Hand `job` to every pool thread. The caller must run worker 0's
+    /// share itself and then call [`WorkerPool::wait_done`].
+    fn post(&self, job: Job) {
+        let mut st = self.shared.state.lock().unwrap();
+        debug_assert!(st.job.is_none(), "previous job not yet collected");
+        st.finished = 0;
+        st.job = Some(job);
+        st.gen += 1;
+        drop(st);
+        self.shared.go.notify_all();
+    }
+
+    /// Block until every pool thread has finished the posted job.
+    fn wait_done(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.finished < self.handles.len() {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // A panicked worker poisons the mutex; shutdown must still
+        // proceed (ignore the poison, the state is a plain flag).
+        {
+            let mut st =
+                self.shared.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            st.shutdown = true;
+        }
+        self.shared.go.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 /// The parallel engine: a vector of shards, the exchange links cut
-/// between them, and the epoch schedule.
+/// between them, the epoch schedule, and the persistent worker pool.
 pub struct ShardedEngine {
     shards: Vec<SendShard>,
-    links: Vec<Arc<dyn ExchangeLink>>,
+    links: Vec<LinkEntry>,
     epoch: Cycle,
     threads: usize,
     cycles: Cycle,
     sleep_enabled: bool,
+    pool: Option<WorkerPool>,
 }
 
 impl ShardedEngine {
     /// `n_shards` shard-private engines (each with a single 1 GHz
     /// clock), exchanging every `epoch` cycles, advanced by up to
     /// `threads` worker threads (more threads than shards is fine; the
-    /// extra ones simply get no work).
+    /// surplus is simply never spawned).
     pub fn new(n_shards: usize, epoch: Cycle, threads: usize) -> Self {
         assert!(n_shards >= 1, "need at least one shard");
         assert!(epoch >= 1, "epoch must be at least one cycle");
@@ -243,6 +611,7 @@ impl ShardedEngine {
             threads: threads.max(1),
             cycles: 0,
             sleep_enabled: true,
+            pool: None,
         }
     }
 
@@ -254,10 +623,41 @@ impl ShardedEngine {
         self.shards.len()
     }
 
-    /// Register the exchange queues of a cut so `run` swaps them at
-    /// every epoch barrier.
+    /// Register exchange queues with no relay endpoints: nothing is
+    /// woken at exchanges, so the queue's consumer/producer components
+    /// must stay awake while they have work in flight (or be registered
+    /// through [`ShardedEngine::add_links_waking`] instead).
     pub fn add_links(&mut self, links: impl IntoIterator<Item = Arc<dyn ExchangeLink>>) {
-        self.links.extend(links);
+        let entries =
+            links.into_iter().map(|link| LinkEntry { link, producer: None, consumer: None });
+        self.links.extend(entries);
+    }
+
+    /// Register exchange queues whose endpoints sleep between
+    /// exchanges: after each epoch exchange, the engine wakes `consumer`
+    /// if beats were delivered and `producer` if credits returned. Both
+    /// are (shard index, component) pairs; the shard indices are
+    /// validated here (shards are never removed, so the check stays
+    /// good) rather than on the exchange hot path, where release builds
+    /// would otherwise dereference out of bounds.
+    pub fn add_links_waking(
+        &mut self,
+        links: impl IntoIterator<Item = Arc<dyn ExchangeLink>>,
+        producer: (usize, ComponentId),
+        consumer: (usize, ComponentId),
+    ) {
+        let n = self.shards.len();
+        assert!(
+            producer.0 < n && consumer.0 < n,
+            "link wake endpoints name shards {}/{} of {n}",
+            producer.0,
+            consumer.0
+        );
+        self.links.extend(links.into_iter().map(|link| LinkEntry {
+            link,
+            producer: Some(producer),
+            consumer: Some(consumer),
+        }));
     }
 
     /// Disable (or re-enable) sleep/wake tracking in every shard — the
@@ -314,6 +714,17 @@ impl ShardedEngine {
         plan
     }
 
+    /// Make sure the pool holds exactly `workers - 1` threads (the
+    /// caller's thread is worker 0). Recreated only when the worker
+    /// count changes — in practice once, on the first parallel run.
+    fn ensure_pool(&mut self, workers: usize) {
+        let need = workers - 1;
+        if self.pool.as_ref().map(WorkerPool::size) != Some(need) {
+            self.pool = None; // joins the old threads
+            self.pool = Some(WorkerPool::new(need));
+        }
+    }
+
     /// Advance every shard by `cycles` cycles, exchanging at each epoch
     /// boundary crossed. Bit-identical for every thread count.
     pub fn run(&mut self, cycles: Cycle) {
@@ -323,47 +734,50 @@ impl ShardedEngine {
         let plan = self.plan(cycles);
         let workers = self.threads.min(self.shards.len());
         if workers <= 1 || cycles == 1 {
+            // Serial path (also used for per-cycle stepping): the
+            // caller's thread advances every shard back-to-back.
             for &(step, ex) in &plan {
                 for sh in &mut self.shards {
                     let d = sh.0.domain;
                     sh.0.engine.run_cycles(d, step);
                 }
                 if ex {
-                    for l in &self.links {
-                        l.exchange();
+                    // SAFETY: no worker threads are running; the
+                    // caller's thread has exclusive access to all
+                    // shards.
+                    unsafe {
+                        exchange_all(&self.links, self.shards.as_mut_ptr(), self.shards.len());
                     }
                 }
             }
         } else {
-            let (shards, links) = (&mut self.shards, &self.links);
-            let chunk = shards.len().div_ceil(workers);
-            let mut slices: Vec<&mut [SendShard]> = shards.chunks_mut(chunk).collect();
-            let parts = slices.len();
-            let barrier = Barrier::new(parts);
-            let (plan, barrier) = (&plan, &barrier);
-            std::thread::scope(|scope| {
-                let worker = move |my: &mut [SendShard]| {
-                    for &(step, ex) in plan {
-                        for sh in my.iter_mut() {
-                            let d = sh.0.domain;
-                            sh.0.engine.run_cycles(d, step);
-                        }
-                        if ex {
-                            if barrier.wait().is_leader() {
-                                for l in links {
-                                    l.exchange();
-                                }
-                            }
-                            barrier.wait();
-                        }
-                    }
-                };
-                let first = slices.remove(0);
-                for my in slices {
-                    scope.spawn(move || worker(my));
-                }
-                worker(first);
-            });
+            self.ensure_pool(workers);
+            let assign = weighted_assignment(&self.shards, workers);
+            let barrier = Barrier::new(workers);
+            let job = Job {
+                shards: self.shards.as_mut_ptr(),
+                n_shards: self.shards.len(),
+                assign: assign.as_ptr(),
+                plan: plan.as_ptr(),
+                plan_len: plan.len(),
+                links: self.links.as_ptr(),
+                n_links: self.links.len(),
+                barrier: &barrier,
+            };
+            let pool = self.pool.as_ref().expect("pool exists when workers > 1");
+            // Unwinding past this frame while the job is live would
+            // free `plan`/`assign`/`barrier` under the pool threads'
+            // feet: abort instead (see `AbortOnUnwind`).
+            let _guard = AbortOnUnwind;
+            pool.post(job);
+            // SAFETY: every pointer in `job` refers to storage owned by
+            // `self` or this frame; `wait_done` returns only after all
+            // pool threads finished the job, so nothing dangles, and
+            // the assignment gives each worker a disjoint shard set.
+            unsafe {
+                run_worker(job, 0);
+            }
+            pool.wait_done();
         }
         self.cycles += cycles;
     }
@@ -376,6 +790,12 @@ mod tests {
     use std::cell::RefCell;
     use std::rc::Rc;
 
+    /// Single-threaded exchange for queue unit tests. SAFETY: the test
+    /// thread owns both endpoints and nothing is advancing.
+    fn xch(link: &Arc<dyn ExchangeLink>) -> Exchanged {
+        unsafe { link.exchange() }
+    }
+
     #[test]
     fn credits_bound_in_flight_beats() {
         let (tx, rx, link) = exchange_channel::<u32>("x", 2);
@@ -383,15 +803,15 @@ mod tests {
         tx.send(1);
         tx.send(2);
         assert!(!tx.can_send());
-        link.exchange();
+        xch(&link);
         assert!(!tx.can_send(), "credits return only after the consumer pops");
         assert_eq!(rx.recv(), Some(1));
         assert!(!tx.can_send(), "...and only at the next exchange");
-        link.exchange();
+        xch(&link);
         assert!(tx.can_send());
         assert_eq!(rx.recv(), Some(2));
         assert_eq!(rx.recv(), None);
-        assert_eq!(link.label(), "x");
+        assert_eq!(&*link.label(), "x");
     }
 
     #[test]
@@ -400,9 +820,21 @@ mod tests {
         tx.send(7);
         assert_eq!(rx.pending(), 0);
         assert_eq!(rx.recv(), None);
-        link.exchange();
+        xch(&link);
         assert_eq!(rx.pending(), 1);
         assert_eq!(rx.recv(), Some(7));
+    }
+
+    #[test]
+    fn exchange_reports_deliveries_and_credits() {
+        let (tx, rx, link) = exchange_channel::<u32>("x", 4);
+        assert_eq!(xch(&link), Exchanged::default(), "idle exchange moves nothing");
+        tx.send(1);
+        let ex = xch(&link);
+        assert!(ex.delivered && !ex.credited, "first exchange delivers, no credits yet");
+        assert_eq!(rx.recv(), Some(1));
+        let ex = xch(&link);
+        assert!(!ex.delivered && ex.credited, "second exchange only returns the credit");
     }
 
     /// Sends `0..total`, one per cycle, as credits allow.
@@ -443,6 +875,18 @@ mod tests {
         }
     }
 
+    /// Inert component used to weight shards in placement tests.
+    struct Nop;
+
+    impl Component for Nop {
+        fn tick(&mut self, _cy: Cycle) -> Activity {
+            Activity::Idle
+        }
+        fn name(&self) -> &str {
+            "nop"
+        }
+    }
+
     fn two_shard_run(threads: usize) -> Vec<(Cycle, u64)> {
         let mut eng = ShardedEngine::new(2, 4, threads);
         let (tx, rx, link) = exchange_channel::<u64>("x", 16);
@@ -478,8 +922,8 @@ mod tests {
 
     #[test]
     fn run_chunking_does_not_move_exchanges() {
-        let run_chunked = |chunks: &[Cycle]| {
-            let mut eng = ShardedEngine::new(2, 4, 1);
+        let run_chunked = |chunks: &[Cycle], threads: usize| {
+            let mut eng = ShardedEngine::new(2, 4, threads);
             let (tx, rx, link) = exchange_channel::<u64>("x", 16);
             eng.add_links([link]);
             let log = Rc::new(RefCell::new(Vec::new()));
@@ -494,8 +938,11 @@ mod tests {
             let out = log.borrow().clone();
             out
         };
-        assert_eq!(run_chunked(&[40]), run_chunked(&[1; 40]));
-        assert_eq!(run_chunked(&[40]), run_chunked(&[3, 7, 11, 19]));
+        assert_eq!(run_chunked(&[40], 1), run_chunked(&[1; 40], 1));
+        assert_eq!(run_chunked(&[40], 1), run_chunked(&[3, 7, 11, 19], 1));
+        // Chunked runs on two workers reuse the persistent pool across
+        // `run` calls and must stay bit-identical.
+        assert_eq!(run_chunked(&[40], 1), run_chunked(&[3, 7, 11, 19], 2));
     }
 
     #[test]
@@ -512,5 +959,43 @@ mod tests {
         eng.run(12);
         assert_eq!(log.borrow().len(), 3);
         assert_eq!(eng.component_count(), 2);
+    }
+
+    #[test]
+    fn weighted_placement_isolates_heavy_shard() {
+        let mut eng = ShardedEngine::new(3, 4, 2);
+        // SAFETY: Nop components share nothing across shards.
+        unsafe {
+            for _ in 0..5 {
+                eng.shard(0).add(Nop);
+            }
+            eng.shard(1).add(Nop);
+            eng.shard(2).add(Nop);
+        }
+        let assign = weighted_assignment(&eng.shards, 2);
+        assert_eq!(assign, vec![vec![0], vec![1, 2]], "heavy shard 0 gets its own worker");
+        // Every shard appears exactly once.
+        let mut all: Vec<usize> = assign.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn weighted_placement_covers_every_worker() {
+        let mut eng = ShardedEngine::new(6, 4, 4);
+        // SAFETY: as above.
+        unsafe {
+            for i in 0..6 {
+                for _ in 0..=i {
+                    eng.shard(i).add(Nop);
+                }
+            }
+        }
+        let assign = weighted_assignment(&eng.shards, 4);
+        assert_eq!(assign.len(), 4);
+        assert!(assign.iter().all(|a| !a.is_empty()), "LPT must feed every worker");
+        let mut all: Vec<usize> = assign.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4, 5]);
     }
 }

@@ -13,7 +13,10 @@ use noc::manticore::workload::{conv_scripts, run_scripts, ConvCfg, ConvVariant};
 use noc::protocol::channel::{wire, Rx, Tx};
 use noc::protocol::exchange::cut_slave_export;
 use noc::protocol::{bundle, BundleCfg, Cmd, MasterEnd, SlaveEnd};
-use noc::sim::{Activity, Component, ComponentId, Cycle, Engine, ShardedEngine, WakeSet};
+use noc::sim::{
+    exchange_channel, Activity, Component, ComponentId, Cycle, Engine, ExchangeRx, ExchangeTx,
+    ShardedEngine, SplitMix64, WakeSet,
+};
 
 /// Logs (tag, domain cycle) on every tick; always active.
 struct Logger {
@@ -335,15 +338,13 @@ fn cut_channel_backpressure_across_epoch_boundary() {
         let sent = Rc::new(Cell::new(0));
         let got = Rc::new(RefCell::new(Vec::new()));
         // SAFETY: the producer bundle stays in shard 0 with the cut
-        // sender; shard 1 holds the far bundle; only the Arc-backed
-        // exchange queues cross, and `sent`/`got` are read between runs.
+        // sender; shard 1 holds the far bundle; only the exchange
+        // queues cross, and `sent`/`got` are read between runs.
         unsafe {
             eng.shard(0).add(ArProducer { m: prod_m, sent: sent.clone(), total: 40 });
-            eng.shard(0).add(cut.sender);
-            eng.shard(1).add(cut.receiver);
+            cut.register(&mut eng, 0, 1);
             eng.shard(1).add(SlowArConsumer { s: far_s, period: 8, got: got.clone() });
         }
-        eng.add_links(cut.links);
         eng.run(40);
         // The consumer drains one command per 8 cycles, so the elastic
         // buffering fills: AR exchange capacity (2*epoch + 2 = 10) plus
@@ -423,6 +424,209 @@ fn more_threads_than_clusters_is_deterministic() {
     // The small chiplet has 4 clusters (5 shards); 16 worker threads
     // means most threads get no shard — the result must not change.
     assert_eq!(sharded_chiplet_fp(1, false), sharded_chiplet_fp(16, false));
+}
+
+// ---------------------------------------------------------------------------
+// Lock-free exchange queues: randomized stress + relay sleep
+// ---------------------------------------------------------------------------
+
+/// Sends values with randomized burst sizes through a raw exchange
+/// queue; sleeps when done or when blocked on credits (the epoch
+/// exchange's credit-return wake resumes it). The RNG advances only on
+/// productive ticks, so blocked/idle ticks are state-preserving no-ops
+/// and the behaviour is identical in the event and full-scan modes.
+struct StressSender {
+    tx: ExchangeTx<u64>,
+    rng: SplitMix64,
+    sent: u64,
+    total: u64,
+}
+
+/// Payload derived from the sequence number, so receivers can verify
+/// FIFO order and integrity without shared state.
+fn stress_payload(i: u64) -> u64 {
+    i.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x5DEE_CE66
+}
+
+impl Component for StressSender {
+    fn tick(&mut self, _cy: Cycle) -> Activity {
+        if self.sent < self.total && self.tx.can_send() {
+            let burst = self.rng.below(3); // 0..=2 beats this cycle
+            for _ in 0..burst {
+                if self.sent < self.total && self.tx.can_send() {
+                    self.tx.send(stress_payload(self.sent));
+                    self.sent += 1;
+                }
+            }
+        }
+        Activity::active_if(self.sent < self.total && self.tx.can_send())
+    }
+    fn name(&self) -> &str {
+        "stress_sender"
+    }
+}
+
+/// Drains an exchange inbox with randomized pressure, logging
+/// (cycle, value); sleeps while the inbox is empty (woken by the epoch
+/// exchange's delivery wake). Same RNG discipline as the sender.
+struct StressReceiver {
+    rx: ExchangeRx<u64>,
+    rng: SplitMix64,
+    log: Rc<RefCell<Vec<(Cycle, u64)>>>,
+}
+
+impl Component for StressReceiver {
+    fn tick(&mut self, cy: Cycle) -> Activity {
+        if self.rx.pending() > 0 {
+            let burst = 1 + self.rng.below(2); // 1..=2 pops this cycle
+            for _ in 0..burst {
+                if let Some(v) = self.rx.recv() {
+                    self.log.borrow_mut().push((cy, v));
+                }
+            }
+        }
+        Activity::active_if(self.rx.pending() > 0)
+    }
+    fn name(&self) -> &str {
+        "stress_receiver"
+    }
+}
+
+/// Many-epoch randomized exchange stress over a ring of shards plus two
+/// chords, with small capacities so credits exhaust and refill many
+/// times. Returns every receiver's full (cycle, value) log.
+fn stress_logs(threads: usize, full_scan: bool) -> Vec<Vec<(Cycle, u64)>> {
+    const TOTAL: u64 = 120;
+    let mut eng = ShardedEngine::new(4, 5, threads);
+    if full_scan {
+        eng.set_sleep(false);
+    }
+    let mut logs = Vec::new();
+    let pairs: [(usize, usize, usize); 6] =
+        [(0, 1, 7), (1, 2, 4), (2, 3, 9), (3, 0, 3), (0, 2, 5), (1, 3, 2)];
+    for (k, &(from, to, cap)) in pairs.iter().enumerate() {
+        let (tx, rx, link) = exchange_channel::<u64>(format!("stress{k}"), cap);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        // SAFETY: shards share only the exchange queues; the logs are
+        // read after the final `run` returns.
+        unsafe {
+            let snd = eng.shard(from).add(StressSender {
+                tx,
+                rng: SplitMix64::new(0xABCD + k as u64),
+                sent: 0,
+                total: TOTAL,
+            });
+            let rcv = eng.shard(to).add(StressReceiver {
+                rx,
+                rng: SplitMix64::new(0x1234 + k as u64),
+                log: log.clone(),
+            });
+            eng.add_links_waking([link], (from, snd), (to, rcv));
+        }
+        logs.push(log);
+    }
+    // Uneven chunks: epochs are crossed both mid-run and exactly at
+    // run boundaries, and the worker pool is reused across the runs.
+    for c in [3u64, 17, 40, 1, 99, 240, 600] {
+        eng.run(c);
+    }
+    assert_eq!(eng.cycles(), 1000);
+    let out: Vec<Vec<(Cycle, u64)>> = logs.iter().map(|l| l.borrow().clone()).collect();
+    for (k, l) in out.iter().enumerate() {
+        assert_eq!(l.len(), TOTAL as usize, "link {k} must deliver every beat");
+        for (i, &(_, v)) in l.iter().enumerate() {
+            assert_eq!(v, stress_payload(i as u64), "link {k} FIFO order/integrity");
+        }
+    }
+    out
+}
+
+#[test]
+fn lockfree_exchange_stress_identical_across_threads_and_modes() {
+    let base = stress_logs(1, false);
+    for t in [2usize, 4, 8] {
+        assert_eq!(base, stress_logs(t, false), "threads={t} must match threads=1");
+    }
+    for t in thread_counts().into_iter().skip(3) {
+        assert_eq!(base, stress_logs(t, false), "NOC_TEST_THREADS={t}");
+    }
+    assert_eq!(base, stress_logs(1, true), "full-scan oracle, 1 thread");
+    assert_eq!(base, stress_logs(4, true), "full-scan oracle, 4 threads");
+}
+
+/// Sends a fixed burst of AR commands into a cut, then goes idle.
+struct BurstProducer {
+    m: MasterEnd,
+    left: u32,
+}
+
+impl Component for BurstProducer {
+    fn tick(&mut self, cy: Cycle) -> Activity {
+        self.m.set_now(cy);
+        if self.left > 0 && self.m.ar.can_push() {
+            let mut c = Cmd::new(0, 0x40, 0, 3);
+            c.tag = self.left as u64;
+            self.m.ar.push(c);
+            self.left -= 1;
+        }
+        Activity::active_if(self.left > 0)
+    }
+    fn name(&self) -> &str {
+        "burst_producer"
+    }
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.m.bind_owner(wake, id);
+    }
+}
+
+/// Pops every visible AR command; idle between beats.
+struct DrainConsumer {
+    s: SlaveEnd,
+    got: Rc<Cell<u32>>,
+}
+
+impl Component for DrainConsumer {
+    fn tick(&mut self, cy: Cycle) -> Activity {
+        self.s.set_now(cy);
+        if self.s.ar.can_pop() {
+            self.s.ar.pop();
+            self.got.set(self.got.get() + 1);
+        }
+        Activity::active_if(self.s.ar.can_pop())
+    }
+    fn name(&self) -> &str {
+        "drain_consumer"
+    }
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.s.bind_owner(wake, id);
+    }
+}
+
+#[test]
+fn idle_cut_contributes_zero_awake_components() {
+    // Cut relays used to be the only permanently-awake components of a
+    // sharded topology; with exchange wakes they sleep whenever their
+    // queues and channels are drained.
+    let epoch = 4;
+    let cfg = BundleCfg::new(64, 4);
+    let mut eng = ShardedEngine::new(2, epoch, 2);
+    let (prod_m, prod_s) = bundle("sleep.prod", cfg);
+    let (cut, far_s) = cut_slave_export("sleep.cut", cfg, prod_s, epoch);
+    let got = Rc::new(Cell::new(0));
+    // SAFETY: the cut is the only cross-shard connection; `got` is read
+    // between runs only.
+    unsafe {
+        eng.shard(0).add(BurstProducer { m: prod_m, left: 10 });
+        cut.register(&mut eng, 0, 1);
+        eng.shard(1).add(DrainConsumer { s: far_s, got: got.clone() });
+    }
+    eng.run(200);
+    assert_eq!(got.get(), 10, "every command must cross the cut");
+    assert_eq!(eng.awake_components(), 0, "drained cut must contribute zero awake components");
+    // Idle epochs keep everything asleep and deliver nothing new.
+    eng.run(100);
+    assert_eq!(eng.awake_components(), 0);
+    assert_eq!(got.get(), 10);
 }
 
 #[test]

@@ -14,12 +14,21 @@ import json
 import sys
 from pathlib import Path
 
-# (file name, metric key) pairs; all tracked metrics are
-# higher-is-better throughput/speedup numbers.
+# (file name, metric key[, threshold]) tuples; all tracked metrics are
+# higher-is-better throughput/speedup numbers. A missing threshold uses
+# the default below.
 TRACKED = [
     ("BENCH_tab2_manticore.json", "event_cycles_per_sec"),
     ("BENCH_tab2_manticore.json", "speedup"),
     ("BENCH_tab2_manticore.json", "sharded_cycles_per_sec"),
+    # N-thread cycles/sec over N x 1-thread cycles/sec: the headline of
+    # the lock-free/pool/weighted sharded engine. A wall-clock *ratio*
+    # of two same-workload runs, so runner speed cancels — but runner
+    # *noise* does not, and the quick-mode runs are sub-second, so this
+    # metric gets a looser gate than the default: it still hard-fails on
+    # a real scaling collapse (e.g. a reintroduced lock) while tolerating
+    # shared-runner jitter. Loosen further rather than untracking.
+    ("BENCH_tab2_manticore.json", "parallel_efficiency", 0.35),
     ("BENCH_coordinator_engine.json", "event_cycles_per_sec"),
     ("BENCH_coordinator_engine.json", "speedup"),
     # Simulated (deterministic) collective bandwidth: regressions here are
@@ -67,7 +76,9 @@ def main(argv):
         print(f"no previous bench artifact at {prev_dir}; skipping trend check")
         return 0
     failures = []
-    for fname, key in TRACKED:
+    for entry in TRACKED:
+        fname, key = entry[0], entry[1]
+        threshold = entry[2] if len(entry) > 2 else THRESHOLD
         prev_file, new_file = prev_dir / fname, new_dir / fname
         if not prev_file.exists():
             print(f"{fname}:{key}: no previous copy, skipping")
@@ -99,17 +110,17 @@ def main(argv):
             failures.append(f"{fname}:{key}: fresh value {new!r} is not positive")
             continue
         change = (new - prev) / prev
-        regressed = change < -THRESHOLD
+        regressed = change < -threshold
         print(
             f"{fname}:{key}: {prev:.4g} -> {new:.4g} "
-            f"({change:+.1%}) {'REGRESSION' if regressed else 'ok'}"
+            f"({change:+.1%}, gate {threshold:.0%}) {'REGRESSION' if regressed else 'ok'}"
         )
         if regressed:
             failures.append(
                 f"{fname}:{key} regressed {change:+.1%} ({prev:.4g} -> {new:.4g})"
             )
     if failures:
-        print("\nbench trend check FAILED (>20% regression):")
+        print("\nbench trend check FAILED (regression past gate):")
         for f in failures:
             print(f"  - {f}")
         return 1
