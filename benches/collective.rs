@@ -13,6 +13,7 @@ use noc::bench_harness::{quick, section, Report};
 use noc::collective::{hierarchical_order, Algo, CollOp};
 use noc::manticore::chiplet::{Chiplet, ChipletCfg};
 use noc::manticore::workload::{run_collective, run_collective_with_order, CollectiveResult};
+use noc::sim::EngineOpts;
 
 fn bench_fanout() -> Vec<usize> {
     if quick() {
@@ -26,7 +27,8 @@ fn bench_fanout() -> Vec<usize> {
 const BUDGET: u64 = 20_000_000;
 
 fn chiplet(threads: usize) -> Chiplet {
-    Chiplet::new(ChipletCfg { fanout: bench_fanout(), threads, ..ChipletCfg::full() })
+    let engine = EngineOpts { threads: Some(threads), ..EngineOpts::default() };
+    Chiplet::new(ChipletCfg { fanout: bench_fanout(), engine, ..ChipletCfg::full() })
 }
 
 fn checked(op: CollOp, algo: Algo, res: CollectiveResult) -> CollectiveResult {

@@ -11,7 +11,7 @@
 use std::time::Instant;
 
 use noc::bench_harness::{quick, section, Report};
-use noc::coordinator::{determinism_fingerprint, SimCfg, System};
+use noc::coordinator::{determinism_fingerprint, SimCfg, System, TopoCfg};
 
 /// A multi-master / multi-slave topology exercising all three traffic
 /// patterns and endpoint kinds. Masters are spread over the lower half
@@ -47,7 +47,7 @@ fn cfg_text(masters: usize, slaves: usize, total: u64, window: u64) -> String {
 /// system and the wall seconds.
 fn run_mode(text: &str, full_scan: bool) -> (System, f64) {
     let mut cfg = SimCfg::from_str_toml(text).expect("config");
-    cfg.full_scan = full_scan;
+    cfg.engine.full_scan = full_scan;
     let mut sys = System::build(&cfg).expect("build");
     let t0 = Instant::now();
     sys.run_for(cfg.cycles);
@@ -108,5 +108,35 @@ fn main() {
             "event engine must not be slower than the full scan ({speedup:.2}x)"
         );
     }
+    // Topology-grammar presets (`examples/topologies/`): parse, build,
+    // and run each heterogeneous-SoC example on the single-arena event
+    // engine; CI tracks the aggregate throughput so grammar-built systems
+    // (converter trunks included) don't quietly regress.
+    section("topology presets: examples/topologies/*.toml");
+    let preset_cycles: u64 = if quick() { 3_000 } else { 20_000 };
+    let mut preset_wall = 0.0f64;
+    let mut presets = 0u64;
+    for name in ["coolidge", "biglittle", "hbm_spine"] {
+        let path = format!("{}/examples/topologies/{name}.toml", env!("CARGO_MANIFEST_DIR"));
+        let text = std::fs::read_to_string(&path).expect("preset file");
+        let mut cfg = TopoCfg::from_str_toml(&text).expect("preset parses");
+        cfg.engine.threads = Some(0); // wall-clock metric: keep it host-independent
+        let mut sys = cfg.build().expect("preset builds");
+        let t0 = Instant::now();
+        sys.run(preset_cycles);
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(sys.check_protocol().is_empty(), "preset {name}: protocol must stay clean");
+        println!(
+            "{name:>10}: {:>10.0} cycles/s  ({} components)",
+            preset_cycles as f64 / wall,
+            sys.component_count()
+        );
+        preset_wall += wall;
+        presets += 1;
+    }
+    report.metric(
+        "topology_presets_cycles_per_sec",
+        (presets * preset_cycles) as f64 / preset_wall,
+    );
     report.finish();
 }

@@ -18,6 +18,7 @@ use noc::manticore::perf::render_table2;
 use noc::manticore::workload::{
     conv_scripts, run_scripts, xsection_submit, ConvCfg, ConvVariant, WorkloadResult, CONV_SMALL,
 };
+use noc::sim::EngineOpts;
 
 fn bench_fanout() -> Vec<usize> {
     if quick() {
@@ -37,7 +38,8 @@ fn bench_conv() -> ConvCfg {
 
 /// Run the stacked-conv workload; returns the result and wall seconds.
 fn conv_run(full_scan: bool, variant: ConvVariant, budget: u64) -> (WorkloadResult, f64) {
-    let cfg = ChipletCfg { fanout: bench_fanout(), full_scan, ..ChipletCfg::full() };
+    let engine = EngineOpts { full_scan, ..EngineOpts::default() };
+    let cfg = ChipletCfg { fanout: bench_fanout(), engine, ..ChipletCfg::full() };
     let n = cfg.n_clusters();
     let mut ch = Chiplet::new(cfg);
     let scripts = conv_scripts(bench_conv(), variant, n, 8);
@@ -51,7 +53,8 @@ fn conv_run(full_scan: bool, variant: ConvVariant, budget: u64) -> (WorkloadResu
 /// pre-submitted so the whole run is one parallel batch. Returns the
 /// determinism fingerprint and the wall seconds.
 fn sharded_xsection(threads: usize, cycles: u64) -> (String, f64) {
-    let cfg = ChipletCfg { fanout: bench_fanout(), threads, epoch: 16, ..ChipletCfg::full() };
+    let engine = EngineOpts::sharded(threads, 16);
+    let cfg = ChipletCfg { fanout: bench_fanout(), engine, ..ChipletCfg::full() };
     let mut ch = Chiplet::new(cfg);
     xsection_submit(&ch, cycles);
     let t0 = Instant::now();
@@ -149,8 +152,8 @@ fn main() {
     // exchanges — the cut relays were the last permanently-awake
     // components. Simulated state, not wall clock: deterministic.
     let idle_awake = {
-        let cfg =
-            ChipletCfg { fanout: bench_fanout(), threads: 2, epoch: 16, ..ChipletCfg::full() };
+        let engine = EngineOpts::sharded(2, 16);
+        let cfg = ChipletCfg { fanout: bench_fanout(), engine, ..ChipletCfg::full() };
         let mut ch = Chiplet::new(cfg);
         ch.run(256);
         ch.awake_components()

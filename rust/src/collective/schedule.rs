@@ -106,6 +106,86 @@ impl CollCfg {
     pub fn new(op: CollOp, algo: Algo, bytes: u64) -> Self {
         CollCfg { op, algo, bytes, elem: Elem::U64, root: 0, pipeline_bytes: 2048, order: None }
     }
+
+    /// Start a validated construction chain; see [`CollCfgBuilder`].
+    pub fn builder(op: CollOp, algo: Algo, bytes: u64) -> CollCfgBuilder {
+        CollCfgBuilder { cfg: CollCfg::new(op, algo, bytes) }
+    }
+
+    /// Check this configuration against an `n`-rank communicator: payload
+    /// shape, root range, ring-order permutation, and op/algo support.
+    /// [`build`] calls this first, so a hand-assembled `CollCfg` fails
+    /// with the same messages as one rejected by [`CollCfgBuilder`].
+    pub fn validate(&self, n: usize) -> Result<()> {
+        if n == 0 {
+            bail!("collective needs at least one rank");
+        }
+        if self.bytes == 0 || self.bytes % 8 != 0 {
+            bail!("collective payload must be a positive multiple of 8 bytes, got {}", self.bytes);
+        }
+        if self.root >= n {
+            bail!("root rank {} out of range (n = {n})", self.root);
+        }
+        if let Some(o) = &self.order {
+            if o.len() != n {
+                bail!("ring order has {} entries for {n} ranks", o.len());
+            }
+            let mut seen = vec![false; n];
+            for &r in o {
+                if r >= n || seen[r] {
+                    bail!("ring order must be a permutation of 0..{n}");
+                }
+                seen[r] = true;
+            }
+        }
+        let supported = matches!(
+            (self.algo, self.op),
+            (Algo::Ring, _) | (Algo::Tree, CollOp::AllReduce) | (Algo::Tree, CollOp::Broadcast)
+        );
+        if !supported {
+            bail!("{:?} is not implemented for {:?}", self.op, self.algo);
+        }
+        Ok(())
+    }
+}
+
+/// Builder for [`CollCfg`] that front-loads validation: setters stage the
+/// optional knobs, and [`CollCfgBuilder::build`] runs
+/// [`CollCfg::validate`] against the communicator size — so a bad ring
+/// order or payload is an `Err` at construction, before any schedule or
+/// simulator state exists.
+#[derive(Debug, Clone)]
+pub struct CollCfgBuilder {
+    cfg: CollCfg,
+}
+
+impl CollCfgBuilder {
+    pub fn elem(mut self, e: Elem) -> Self {
+        self.cfg.elem = e;
+        self
+    }
+
+    pub fn root(mut self, r: usize) -> Self {
+        self.cfg.root = r;
+        self
+    }
+
+    pub fn pipeline_bytes(mut self, b: u64) -> Self {
+        self.cfg.pipeline_bytes = b;
+        self
+    }
+
+    pub fn order(mut self, o: Vec<usize>) -> Self {
+        self.cfg.order = Some(o);
+        self
+    }
+
+    /// Validate against an `n_ranks` communicator and hand back the
+    /// finished configuration.
+    pub fn build(self, n_ranks: usize) -> Result<CollCfg> {
+        self.cfg.validate(n_ranks)?;
+        Ok(self.cfg)
+    }
 }
 
 /// Ring order of the chiplet's clusters that keeps consecutive ring
@@ -298,29 +378,9 @@ impl Builder {
 /// the caller maps ranks to clusters via the chiplet address map).
 pub fn build(cfg: &CollCfg, windows: &[(u64, u64)]) -> Result<Built> {
     let n = windows.len();
-    if n == 0 {
-        bail!("collective needs at least one rank");
-    }
-    if cfg.bytes == 0 || cfg.bytes % 8 != 0 {
-        bail!("collective payload must be a positive multiple of 8 bytes, got {}", cfg.bytes);
-    }
-    if cfg.root >= n {
-        bail!("root rank {} out of range (n = {n})", cfg.root);
-    }
+    cfg.validate(n)?;
     let ord: Vec<usize> = match &cfg.order {
-        Some(o) => {
-            if o.len() != n {
-                bail!("ring order has {} entries for {n} ranks", o.len());
-            }
-            let mut seen = vec![false; n];
-            for &r in o {
-                if r >= n || seen[r] {
-                    bail!("ring order must be a permutation of 0..{n}");
-                }
-                seen[r] = true;
-            }
-            o.clone()
-        }
+        Some(o) => o.clone(),
         None => (0..n).collect(),
     };
     let bytes = cfg.bytes;
@@ -329,14 +389,6 @@ pub fn build(cfg: &CollCfg, windows: &[(u64, u64)]) -> Result<Built> {
     let chunk = elems.div_ceil(n as u64) * 8; // max chunk bytes
     let subs_pc = chunk.div_ceil(sub); // flag stride per ring step
     let total_subs = bytes.div_ceil(sub);
-
-    let supported = matches!(
-        (cfg.algo, cfg.op),
-        (Algo::Ring, _) | (Algo::Tree, CollOp::AllReduce) | (Algo::Tree, CollOp::Broadcast)
-    );
-    if !supported {
-        bail!("{:?} is not implemented for {:?}", cfg.op, cfg.algo);
-    }
 
     let (scratch_bytes, n_flags) = match (cfg.algo, cfg.op) {
         (Algo::Ring, CollOp::AllReduce) => ((n as u64 - 1) * chunk, 2 * (n as u64 - 1) * subs_pc),
@@ -850,6 +902,32 @@ mod tests {
         assert!(mk(vec![0, 1, 1]).is_err(), "duplicate rank");
         assert!(mk(vec![0, 1, 3]).is_err(), "out of range");
         assert!(mk(vec![2, 0, 1]).is_ok(), "valid permutation accepted");
+    }
+
+    #[test]
+    fn builder_validates_at_construction() {
+        // Every `build`-time rejection is already an `Err` from the
+        // builder, before any schedule exists.
+        let b = |op, algo, bytes| CollCfg::builder(op, algo, bytes);
+        let ar = CollOp::AllReduce;
+        assert!(b(ar, Algo::Ring, 256).build(0).is_err(), "zero ranks");
+        assert!(b(ar, Algo::Ring, 12).build(3).is_err(), "payload not a multiple of 8");
+        assert!(b(ar, Algo::Ring, 0).build(3).is_err(), "empty payload");
+        assert!(b(ar, Algo::Tree, 256).root(3).build(3).is_err(), "root out of range");
+        assert!(b(ar, Algo::Ring, 256).order(vec![0, 1]).build(3).is_err(), "short order");
+        assert!(b(ar, Algo::Ring, 256).order(vec![0, 1, 1]).build(3).is_err(), "duplicate");
+        assert!(b(CollOp::AllGather, Algo::Tree, 256).build(3).is_err(), "unsupported op/algo");
+        let cfg = b(ar, Algo::Ring, 256)
+            .elem(Elem::F64)
+            .root(2)
+            .pipeline_bytes(64)
+            .order(vec![2, 0, 1])
+            .build(3)
+            .expect("valid configuration");
+        assert_eq!(cfg.elem, Elem::F64);
+        assert_eq!(cfg.root, 2);
+        assert_eq!(cfg.pipeline_bytes, 64);
+        assert!(build(&cfg, &windows(3)).is_ok(), "builder output feeds build unchanged");
     }
 
     #[test]

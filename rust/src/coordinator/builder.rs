@@ -12,14 +12,20 @@
 //! streams (`rust/tests/coordinator_engine.rs`), and
 //! `benches/coordinator_engine.rs` records the cycles/sec of each.
 //!
-//! With `SimCfg::threads >= 1` (`noc simulate --threads N`) the system
-//! builds on the sharded engine instead: each master island (generator
-//! plus monitor) gets its own shard, the crossbar and endpoints live in
-//! shard 0, and the monitor→crossbar bundles are cut with
-//! `protocol::exchange` relays swapped at epoch barriers. The shard
+//! With `SimCfg::engine.threads >= 1` (`noc simulate --threads N`) the
+//! system builds on the sharded engine instead: each master island
+//! (generator plus monitor) gets its own shard, the crossbar and
+//! endpoints live in shard 0, and the monitor→crossbar bundles are cut
+//! with `protocol::exchange` relays swapped at epoch barriers. The shard
 //! structure is independent of the thread count, so
 //! `coordinator::determinism_fingerprint` is bit-identical for every
 //! `N >= 1` in both engine modes.
+//!
+//! Recursive multi-crossbar scenarios (`coordinator::topology`) reuse
+//! this module's pieces — [`master_pattern`], [`gen_cfg`],
+//! [`SlaveTap::new`], [`System::from_parts`] — so a degenerate
+//! single-template grammar config builds the *same* system, name for
+//! name and seed for seed.
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -35,7 +41,7 @@ use crate::noc::sram::Sram;
 use crate::noc::xbar::{xbar_master_id_bits, Xbar, XbarCfg};
 use crate::protocol::channel::Tap;
 use crate::protocol::exchange::cut_slave_export;
-use crate::protocol::{bundle, BundleCfg, Monitor, RBeat, WBeat};
+use crate::protocol::{bundle, BundleCfg, MasterEnd, Monitor, RBeat, WBeat};
 use crate::sim::{shared, Arena, Cycle};
 use crate::traffic::gen::{AddrPattern, RwGen, RwGenCfg};
 use crate::traffic::perfect_slave::PerfectSlave;
@@ -54,6 +60,12 @@ pub struct SlaveTap {
 }
 
 impl SlaveTap {
+    /// Tap the data channels of `m` (an endpoint's crossbar master port)
+    /// before the end moves into its module.
+    pub(crate) fn new(name: String, m: &MasterEnd) -> SlaveTap {
+        SlaveTap { name, w: m.w.tap(), r: m.r.tap(), beat_bytes: m.cfg.beat_bytes() as u64 }
+    }
+
     /// Data beats that crossed this slave's port (W in + R out).
     pub fn data_beats(&self) -> u64 {
         self.w.stats().handshakes + self.r.stats().handshakes
@@ -79,7 +91,7 @@ pub struct System {
 /// Construct the generator address pattern for one master. `port_cfg` is
 /// the bundle at the generator's master port (the sequential stride and
 /// hotspot window derive from it and the master config).
-fn master_pattern(mc: &MasterCfg, port_cfg: &BundleCfg) -> Result<AddrPattern> {
+pub(crate) fn master_pattern(mc: &MasterCfg, port_cfg: &BundleCfg) -> Result<AddrPattern> {
     Ok(match mc.pattern.as_str() {
         "uniform" => AddrPattern::Uniform { base: mc.base, span: mc.span },
         "sequential" => {
@@ -103,6 +115,24 @@ fn master_pattern(mc: &MasterCfg, port_cfg: &BundleCfg) -> Result<AddrPattern> {
             }
         }
         p => bail!("unknown pattern: {p}"),
+    })
+}
+
+/// The full generator config for one master. `seed_idx` is the master's
+/// global walk index — the seed schedule (`0xC0FFEE + idx`) is part of
+/// the determinism fingerprint contract, so the flat builder and the
+/// topology grammar derive it from the same walk order.
+pub(crate) fn gen_cfg(mc: &MasterCfg, port_cfg: &BundleCfg, seed_idx: u64) -> Result<RwGenCfg> {
+    Ok(RwGenCfg {
+        pattern: master_pattern(mc, port_cfg)?,
+        p_read: mc.p_read,
+        beats: mc.beats,
+        n_ids: mc.n_ids,
+        max_outstanding: mc.max_outstanding,
+        total: mc.total,
+        p_issue: 1.0,
+        verify: false, // endpoints may be real memories (zeroed)
+        seed: 0xC0FFEE + seed_idx,
     })
 }
 
@@ -145,18 +175,31 @@ fn slave_rules(cfg: &SimCfg) -> Result<Vec<AddrRule>> {
 }
 
 impl System {
+    /// Wrap an already-populated arena (the topology grammar's entry
+    /// point — `coordinator::topology` registers the component tree
+    /// itself, then hands over the run-time handles).
+    pub(crate) fn from_parts(
+        name: String,
+        arena: Arena,
+        gens: Vec<Rc<RefCell<RwGen>>>,
+        monitors: Vec<Rc<RefCell<Monitor>>>,
+        slave_taps: Vec<SlaveTap>,
+    ) -> Self {
+        System { name, arena, gens, monitors, slave_taps, cycles: 0 }
+    }
+
     pub fn build(cfg: &SimCfg) -> Result<Self> {
         let s_cfg = BundleCfg::new(cfg.data_bits, cfg.id_bits);
         let m_cfg = BundleCfg::new(
             cfg.data_bits,
             xbar_master_id_bits(cfg.id_bits, cfg.masters.len()),
         );
-        let epoch = cfg.epoch.max(1);
+        let epoch = cfg.engine.epoch.max(1);
         // `threads` unset = the single-arena engine (the CLI resolves
         // `None` to the host core count before building; see main.rs).
-        let threads = cfg.threads.unwrap_or(0);
+        let threads = cfg.engine.worker_threads();
         let mut arena = Arena::new(threads, cfg.masters.len() + 1, epoch);
-        if cfg.full_scan {
+        if cfg.engine.full_scan {
             arena.set_sleep(false);
         }
         let mut gens = Vec::new();
@@ -169,18 +212,8 @@ impl System {
         for (i, mc) in cfg.masters.iter().enumerate() {
             let (gen_m, gen_s) = bundle(&format!("{}.port", mc.name), s_cfg);
             let (mon_m, mon_s) = bundle(&format!("{}.mon", mc.name), s_cfg);
-            let gen_cfg = RwGenCfg {
-                pattern: master_pattern(mc, &s_cfg)?,
-                p_read: mc.p_read,
-                beats: mc.beats,
-                n_ids: mc.n_ids,
-                max_outstanding: mc.max_outstanding,
-                total: mc.total,
-                p_issue: 1.0,
-                verify: false, // endpoints may be real memories (zeroed)
-                seed: 0xC0FFEE + i as u64,
-            };
-            let (g, g_adapter) = shared(RwGen::new(mc.name.clone(), gen_m, gen_cfg));
+            let (g, g_adapter) =
+                shared(RwGen::new(mc.name.clone(), gen_m, gen_cfg(mc, &s_cfg, i as u64)?));
             gens.push(g);
             let (mon, mon_adapter) =
                 shared(Monitor::new(format!("{}.monitor", mc.name), gen_s, mon_m));
@@ -219,12 +252,7 @@ impl System {
         let mut slave_taps = Vec::new();
         for sc in &cfg.slaves {
             let (m, s) = bundle(&format!("{}.port", sc.name), m_cfg);
-            slave_taps.push(SlaveTap {
-                name: sc.name.clone(),
-                w: m.w.tap(),
-                r: m.r.tap(),
-                beat_bytes: m_cfg.beat_bytes() as u64,
-            });
+            slave_taps.push(SlaveTap::new(sc.name.clone(), &m));
             xbar_masters.push(m);
             match &sc.kind {
                 SlaveKind::Perfect { latency } => {

@@ -2,14 +2,22 @@
 //! unreachable offline, so `toml`/`serde` are reimplemented at the scale
 //! we need) plus the typed simulation config.
 //!
-//! Supported TOML subset: `[section]`, `[[array-of-tables]]`,
-//! `key = value` with integers (decimal/hex), floats, booleans, strings,
-//! and `#` comments — which covers the whole config surface.
+//! Supported TOML subset: `[section]`, `[[array-of-tables]]`, *scoped*
+//! arrays-of-tables (`[[template.master]]` attaches to the most recent
+//! `[[template]]` — the topology grammar's nesting), `key = value` with
+//! integers (decimal/hex), floats, booleans, strings, and `#` comments —
+//! which covers the whole config surface.
+//!
+//! Typed access goes through [`Table::get_or`] / [`Table::get_opt`] /
+//! [`Table::require`], which carry a field-path context so a bad value
+//! surfaces as `"template[cluster].master[2].beats: expected
+//! non-negative integer, ..."` instead of a bare type error.
 
 use std::collections::HashMap;
 
 use crate::bail;
 use crate::errors::{Context, Result};
+use crate::sim::EngineOpts;
 
 /// A parsed value.
 #[derive(Debug, Clone, PartialEq)]
@@ -55,14 +63,117 @@ impl Value {
     }
 }
 
-/// One table of key/values.
-pub type Table = HashMap<String, Value>;
+/// Conversion out of a parsed [`Value`], for the typed [`Table`]
+/// accessors. Implemented for the config surface's primitive types.
+pub trait FromValue: Sized {
+    fn from_value(v: &Value) -> Result<Self>;
+}
 
-/// Parsed document: singleton tables and arrays-of-tables.
+impl FromValue for u64 {
+    fn from_value(v: &Value) -> Result<u64> {
+        v.as_u64()
+    }
+}
+
+impl FromValue for usize {
+    fn from_value(v: &Value) -> Result<usize> {
+        v.as_usize()
+    }
+}
+
+impl FromValue for u32 {
+    fn from_value(v: &Value) -> Result<u32> {
+        let x = v.as_u64()?;
+        u32::try_from(x).map_err(|_| crate::anyhow!("expected 32-bit integer, got {x}"))
+    }
+}
+
+impl FromValue for f64 {
+    fn from_value(v: &Value) -> Result<f64> {
+        v.as_f64()
+    }
+}
+
+impl FromValue for bool {
+    fn from_value(v: &Value) -> Result<bool> {
+        v.as_bool()
+    }
+}
+
+impl FromValue for String {
+    fn from_value(v: &Value) -> Result<String> {
+        v.as_str().map(String::from)
+    }
+}
+
+fn key_path(ctx: &str, key: &str) -> String {
+    if ctx.is_empty() {
+        key.to_string()
+    } else {
+        format!("{ctx}.{key}")
+    }
+}
+
+/// One table of key/values. Derefs to the underlying map, so raw
+/// `get`/indexing still work; typed lookups should use the accessor
+/// methods, which prefix errors with the field path.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Table(HashMap<String, Value>);
+
+impl Table {
+    pub fn new() -> Self {
+        Table(HashMap::new())
+    }
+
+    /// Typed lookup with a default: `ctx` is the table's field path for
+    /// error messages (e.g. `"template[cluster].master[2]"`).
+    pub fn get_or<T: FromValue>(&self, ctx: &str, key: &str, default: T) -> Result<T> {
+        Ok(self.get_opt(ctx, key)?.unwrap_or(default))
+    }
+
+    /// Typed lookup of an optional key: `None` when absent, `Err` with
+    /// the field path when present but mistyped.
+    pub fn get_opt<T: FromValue>(&self, ctx: &str, key: &str) -> Result<Option<T>> {
+        match self.0.get(key) {
+            None => Ok(None),
+            Some(v) => T::from_value(v).map(Some).with_context(|| key_path(ctx, key)),
+        }
+    }
+
+    /// Typed lookup of a mandatory key; absence is an error naming the
+    /// field path.
+    pub fn require<T: FromValue>(&self, ctx: &str, key: &str) -> Result<T> {
+        match self.0.get(key) {
+            None => bail!("{}: missing required key", key_path(ctx, key)),
+            Some(v) => T::from_value(v).with_context(|| key_path(ctx, key)),
+        }
+    }
+}
+
+impl std::ops::Deref for Table {
+    type Target = HashMap<String, Value>;
+    fn deref(&self) -> &Self::Target {
+        &self.0
+    }
+}
+
+impl std::ops::DerefMut for Table {
+    fn deref_mut(&mut self) -> &mut Self::Target {
+        &mut self.0
+    }
+}
+
+/// Parsed document: singleton tables and arrays-of-tables. Scoped
+/// arrays (`[[a.b]]`) are stored under their full dotted name, with
+/// `parents` recording which element of `[[a]]` each one attaches to.
 #[derive(Debug, Default)]
 pub struct Doc {
     pub tables: HashMap<String, Table>,
     pub arrays: HashMap<String, Vec<Table>>,
+    /// For each scoped array name `"a.b"`: the index into `arrays["a"]`
+    /// that owned each element at parse time (same length as
+    /// `arrays["a.b"]`).
+    pub parents: HashMap<String, Vec<usize>>,
 }
 
 impl Doc {
@@ -72,6 +183,17 @@ impl Doc {
 
     pub fn array(&self, name: &str) -> &[Table] {
         self.arrays.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// The `[[{parent}.{child}]]` tables declared under element `idx` of
+    /// `[[{parent}]]`, in declaration order.
+    pub fn scoped(&self, parent: &str, idx: usize, child: &str) -> Vec<&Table> {
+        let name = format!("{parent}.{child}");
+        let Some(tables) = self.arrays.get(&name) else {
+            return Vec::new();
+        };
+        let owners = self.parents.get(&name).map(|v| v.as_slice()).unwrap_or(&[]);
+        tables.iter().zip(owners).filter(|&(_, &o)| o == idx).map(|(t, _)| t).collect()
     }
 }
 
@@ -129,6 +251,15 @@ pub fn parse(text: &str) -> Result<Doc> {
         let err = |m: &str| crate::anyhow!("line {}: {m}: {raw}", ln + 1);
         if let Some(name) = line.strip_prefix("[[").and_then(|l| l.strip_suffix("]]")) {
             let name = name.trim().to_string();
+            if let Some((parent, _)) = name.split_once('.') {
+                // A scoped array element attaches to the most recent
+                // element of its parent array.
+                let owner = match doc.arrays.get(parent).map(|v| v.len()) {
+                    Some(n) if n > 0 => n - 1,
+                    _ => bail!(err(&format!("[[{name}]] before any [[{parent}]]"))),
+                };
+                doc.parents.entry(name.clone()).or_default().push(owner);
+            }
             doc.arrays.entry(name.clone()).or_default().push(Table::new());
             cur = Cur::Array(name);
         } else if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
@@ -157,6 +288,24 @@ pub fn parse(text: &str) -> Result<Doc> {
 // ---------------------------------------------------------------------------
 // Typed simulation config
 // ---------------------------------------------------------------------------
+
+impl EngineOpts {
+    /// Parse the shared engine keys (`threads`, `epoch`, `full_scan`)
+    /// out of a config table — the one doc-parsing path for both the
+    /// flat `[sim]` config and the grammar's `[topology]` section.
+    pub fn from_table(t: &Table, ctx: &str) -> Result<EngineOpts> {
+        let defaults = EngineOpts::default();
+        let opts = EngineOpts {
+            threads: t.get_opt(ctx, "threads")?,
+            epoch: t.get_or(ctx, "epoch", defaults.epoch)?,
+            full_scan: t.get_or(ctx, "full_scan", defaults.full_scan)?,
+        };
+        if opts.epoch == 0 {
+            bail!("{ctx}.epoch: must be at least 1 cycle");
+        }
+        Ok(opts)
+    }
+}
 
 /// Endpoint kinds attachable to crossbar master ports.
 #[derive(Debug, Clone, PartialEq)]
@@ -196,28 +345,58 @@ pub struct SlaveCfg {
     pub size: u64,
 }
 
-/// A single-crossbar topology: the config surface of `noc simulate`.
+/// Parse one `[[master]]`-shaped table; `ctx` is the field path for
+/// errors, `i` feeds the positional name default. Shared between the
+/// flat config and the topology grammar's `[[template.master]]`.
+pub(crate) fn master_from_table(t: &Table, ctx: &str, i: usize) -> Result<MasterCfg> {
+    let p_hot = t.get_or(ctx, "p_hot", 0.5)?;
+    if !(0.0..=1.0).contains(&p_hot) {
+        bail!("{ctx}.p_hot: must be within [0, 1], got {p_hot}");
+    }
+    Ok(MasterCfg {
+        name: t.get_or(ctx, "name", format!("m{i}"))?,
+        pattern: t.get_or(ctx, "pattern", "uniform".to_string())?,
+        base: t.get_or(ctx, "base", 0)?,
+        span: t.get_or(ctx, "span", 0x1_0000)?,
+        p_read: t.get_or(ctx, "reads", 0.5)?,
+        beats: t.get_or(ctx, "beats", 1)?,
+        total: t.get_opt(ctx, "total")?,
+        max_outstanding: t.get_or(ctx, "max_outstanding", 4)?,
+        n_ids: t.get_or(ctx, "ids", 1u32)?,
+        p_hot,
+        hot_span: t.get_opt(ctx, "hot_span")?,
+    })
+}
+
+/// Parse one `[[slave]]`-shaped table (see [`master_from_table`]).
+pub(crate) fn slave_from_table(t: &Table, ctx: &str, i: usize) -> Result<SlaveCfg> {
+    let latency = t.get_or(ctx, "latency", 2)?;
+    let kind = match t.get_or(ctx, "kind", "perfect".to_string())?.as_str() {
+        "perfect" => SlaveKind::Perfect { latency },
+        "simplex" => SlaveKind::Simplex { latency },
+        "duplex" => SlaveKind::Duplex { banks: t.get_or(ctx, "banks", 2)?, latency },
+        k => bail!("{ctx}.kind: unknown slave kind: {k}"),
+    };
+    Ok(SlaveCfg {
+        name: t.get_or(ctx, "name", format!("s{i}"))?,
+        kind,
+        base: t.get_or(ctx, "base", (i as u64) * 0x1_0000)?,
+        size: t.get_or(ctx, "size", 0x1_0000)?,
+    })
+}
+
+/// A single-crossbar topology: the flat config surface of
+/// `noc simulate`. Recursive multi-crossbar scenarios use the topology
+/// grammar (`coordinator::topology::TopoCfg`) instead.
 #[derive(Debug, Clone)]
 pub struct SimCfg {
     pub cycles: u64,
     pub data_bits: usize,
     pub id_bits: usize,
     pub pipeline: bool,
-    /// Disable the engine's sleep/wake tracking: tick every component on
-    /// every cycle (the pre-engine behaviour). Kept as an A/B oracle —
-    /// results must be bit-identical to event mode.
-    pub full_scan: bool,
-    /// Worker threads for the sharded engine (`noc simulate --threads`).
-    /// `Some(0)` = the single-arena engine; `Some(N >= 1)` shards every
-    /// master island off the crossbar behind epoch-exchange cuts and
-    /// drives the shards with `N` threads — results are bit-identical
-    /// for every `N >= 1`. `None` = unset: library callers get the
-    /// single-arena engine, while the CLI auto-picks the host core count
-    /// (`sim::auto_threads`; `--threads 0` stays the explicit
-    /// single-arena escape hatch).
-    pub threads: Option<usize>,
-    /// Exchange epoch in cycles (sharded mode only).
-    pub epoch: u64,
+    /// Engine choice and mode (`threads` / `epoch` / `full_scan` keys of
+    /// `[sim]`), shared with every other stack via [`EngineOpts`].
+    pub engine: EngineOpts,
     pub masters: Vec<MasterCfg>,
     pub slaves: Vec<SlaveCfg>,
 }
@@ -225,89 +404,25 @@ pub struct SimCfg {
 impl SimCfg {
     pub fn from_doc(doc: &Doc) -> Result<Self> {
         let sim = doc.table("sim").context("missing [sim] section")?;
-        let get_u64 = |t: &Table, k: &str, d: u64| -> Result<u64> {
-            t.get(k).map(|v| v.as_u64()).transpose().map(|o| o.unwrap_or(d))
-        };
-        let cycles = get_u64(sim, "cycles", 10_000)?;
-        let data_bits = sim.get("data_bits").map(|v| v.as_usize()).transpose()?.unwrap_or(64);
-        let id_bits = sim.get("id_bits").map(|v| v.as_usize()).transpose()?.unwrap_or(4);
-        let pipeline = sim.get("pipeline").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
-        let full_scan = sim.get("full_scan").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
-        let threads = sim.get("threads").map(|v| v.as_usize()).transpose()?;
-        let epoch = get_u64(sim, "epoch", 8)?;
-        if epoch == 0 {
-            bail!("epoch must be at least 1 cycle");
-        }
+        let ctx = "sim";
+        let cycles = sim.get_or(ctx, "cycles", 10_000)?;
+        let data_bits = sim.get_or(ctx, "data_bits", 64)?;
+        let id_bits = sim.get_or(ctx, "id_bits", 4)?;
+        let pipeline = sim.get_or(ctx, "pipeline", false)?;
+        let engine = EngineOpts::from_table(sim, ctx)?;
 
         let mut masters = Vec::new();
         for (i, t) in doc.array("master").iter().enumerate() {
-            let p_hot = t.get("p_hot").map(|v| v.as_f64()).transpose()?.unwrap_or(0.5);
-            if !(0.0..=1.0).contains(&p_hot) {
-                bail!("master {i}: p_hot must be within [0, 1], got {p_hot}");
-            }
-            masters.push(MasterCfg {
-                name: t
-                    .get("name")
-                    .map(|v| v.as_str().map(String::from))
-                    .transpose()?
-                    .unwrap_or(format!("m{i}")),
-                pattern: t
-                    .get("pattern")
-                    .map(|v| v.as_str().map(String::from))
-                    .transpose()?
-                    .unwrap_or("uniform".into()),
-                base: get_u64(t, "base", 0)?,
-                span: get_u64(t, "span", 0x1_0000)?,
-                p_read: t.get("reads").map(|v| v.as_f64()).transpose()?.unwrap_or(0.5),
-                beats: t.get("beats").map(|v| v.as_usize()).transpose()?.unwrap_or(1),
-                total: t.get("total").map(|v| v.as_u64()).transpose()?,
-                max_outstanding: t
-                    .get("max_outstanding")
-                    .map(|v| v.as_usize())
-                    .transpose()?
-                    .unwrap_or(4),
-                n_ids: t.get("ids").map(|v| v.as_u64()).transpose()?.unwrap_or(1) as u32,
-                p_hot,
-                hot_span: t.get("hot_span").map(|v| v.as_u64()).transpose()?,
-            });
+            masters.push(master_from_table(t, &format!("master[{i}]"), i)?);
         }
         let mut slaves = Vec::new();
         for (i, t) in doc.array("slave").iter().enumerate() {
-            let latency = get_u64(t, "latency", 2)?;
-            let kind = match t.get("kind").map(|v| v.as_str()).transpose()?.unwrap_or("perfect") {
-                "perfect" => SlaveKind::Perfect { latency },
-                "simplex" => SlaveKind::Simplex { latency },
-                "duplex" => SlaveKind::Duplex {
-                    banks: t.get("banks").map(|v| v.as_usize()).transpose()?.unwrap_or(2),
-                    latency,
-                },
-                k => bail!("unknown slave kind: {k}"),
-            };
-            slaves.push(SlaveCfg {
-                name: t
-                    .get("name")
-                    .map(|v| v.as_str().map(String::from))
-                    .transpose()?
-                    .unwrap_or(format!("s{i}")),
-                kind,
-                base: get_u64(t, "base", (i as u64) * 0x1_0000)?,
-                size: get_u64(t, "size", 0x1_0000)?,
-            });
+            slaves.push(slave_from_table(t, &format!("slave[{i}]"), i)?);
         }
         if masters.is_empty() || slaves.is_empty() {
             bail!("config needs at least one [[master]] and one [[slave]]");
         }
-        Ok(SimCfg {
-            cycles,
-            data_bits,
-            id_bits,
-            pipeline,
-            full_scan,
-            threads,
-            epoch,
-            masters,
-            slaves,
-        })
+        Ok(SimCfg { cycles, data_bits, id_bits, pipeline, engine, masters, slaves })
     }
 
     pub fn from_str_toml(text: &str) -> Result<Self> {
@@ -400,7 +515,7 @@ size = 0x1_0000
             )
             .replace("[sim]", "[sim]\nfull_scan = true");
         let cfg = SimCfg::from_str_toml(&text).unwrap();
-        assert!(cfg.full_scan);
+        assert!(cfg.engine.full_scan);
         assert!((cfg.masters[0].p_hot - 0.8).abs() < 1e-9);
         assert_eq!(cfg.masters[0].hot_span, Some(0x800));
         // Defaults on the second master.
@@ -411,15 +526,18 @@ size = 0x1_0000
     #[test]
     fn threads_and_epoch_keys_parse_with_defaults() {
         let cfg = SimCfg::from_str_toml(EXAMPLE).unwrap();
-        assert_eq!(cfg.threads, None, "unset: library default is single-arena, CLI auto-picks");
-        assert_eq!(cfg.epoch, 8);
+        assert_eq!(
+            cfg.engine.threads, None,
+            "unset: library default is single-arena, CLI auto-picks"
+        );
+        assert_eq!(cfg.engine.epoch, 8);
         let text = EXAMPLE.replace("[sim]", "[sim]\nthreads = 4\nepoch = 16");
         let cfg = SimCfg::from_str_toml(&text).unwrap();
-        assert_eq!(cfg.threads, Some(4));
-        assert_eq!(cfg.epoch, 16);
+        assert_eq!(cfg.engine.threads, Some(4));
+        assert_eq!(cfg.engine.epoch, 16);
         let text = EXAMPLE.replace("[sim]", "[sim]\nthreads = 0");
         let cfg = SimCfg::from_str_toml(&text).unwrap();
-        assert_eq!(cfg.threads, Some(0), "explicit 0 = single-arena");
+        assert_eq!(cfg.engine.threads, Some(0), "explicit 0 = single-arena");
     }
 
     #[test]
@@ -448,5 +566,50 @@ size = 0x1_0000
     #[test]
     fn missing_sections_fail_typed_parse() {
         assert!(SimCfg::from_str_toml("[sim]\ncycles = 1").is_err());
+    }
+
+    #[test]
+    fn scoped_arrays_attach_to_their_parent() {
+        let text = r#"
+[[template]]
+name = "a"
+[[template.master]]
+name = "a0"
+[[template.master]]
+name = "a1"
+[[template]]
+name = "b"
+[[template.master]]
+name = "b0"
+[[template.child]]
+template = "a"
+"#;
+        let doc = parse(text).unwrap();
+        assert_eq!(doc.array("template").len(), 2);
+        let a = doc.scoped("template", 0, "master");
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[1]["name"], Value::Str("a1".into()));
+        let b = doc.scoped("template", 1, "master");
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0]["name"], Value::Str("b0".into()));
+        assert_eq!(doc.scoped("template", 0, "child").len(), 0);
+        assert_eq!(doc.scoped("template", 1, "child").len(), 1);
+        assert_eq!(doc.scoped("template", 1, "slave").len(), 0, "absent scoped array is empty");
+    }
+
+    #[test]
+    fn orphan_scoped_array_is_an_error() {
+        let e = parse("[[template.master]]\nname = \"x\"\n").unwrap_err().to_string();
+        assert!(e.contains("before any [[template]]"), "got: {e}");
+    }
+
+    #[test]
+    fn typed_accessors_carry_field_paths() {
+        let text = EXAMPLE.replace("beats = 4", "beats = \"lots\"");
+        let e = SimCfg::from_str_toml(&text).unwrap_err().to_string();
+        assert!(e.contains("master[1].beats"), "field path in error, got: {e}");
+        let t = Table::new();
+        let e = t.require::<u64>("template[cluster].master[2]", "beats").unwrap_err().to_string();
+        assert_eq!(e, "template[cluster].master[2].beats: missing required key");
     }
 }

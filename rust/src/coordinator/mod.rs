@@ -9,7 +9,9 @@
 pub mod builder;
 pub mod config;
 pub mod report;
+pub mod topology;
 
 pub use builder::{SlaveTap, System};
-pub use config::{parse, Doc, SimCfg, Value};
+pub use config::{parse, Doc, FromValue, SimCfg, Table, Value};
 pub use report::{determinism_fingerprint, run_report, run_summary, Json};
+pub use topology::TopoCfg;

@@ -1,0 +1,995 @@
+//! Recursive topology grammar: composable subnetwork templates.
+//!
+//! The flat `[sim]` config (`coordinator::config::SimCfg`) describes one
+//! crossbar. Real SoCs are trees of them — clusters behind cluster
+//! crossbars behind a chip-level interconnect, mixed-width accelerator
+//! islands, slow-clock peripheral subsystems. This module grows the
+//! config surface into a grammar for exactly that shape:
+//!
+//! - `[[template]]` declares a reusable subnetwork: local masters,
+//!   slaves, a crossbar, and *child* instantiations of other templates.
+//! - `[[template.child]]` stamps a named template `count` times, placing
+//!   each instance's address window at `base + k * stride` inside the
+//!   parent — base-address strides and name prefixes (`cluster3.dsp.`)
+//!   are derived, not hand-written.
+//! - `[topology]` picks the root template and the engine options.
+//!
+//! Parent and child crossbars are linked through a typed trunk (one
+//! downlink, one uplink) that auto-inserts the §2 converter palette:
+//! `Upsizer`/`Downsizer` on a data-width mismatch, a `cdc` pair on a
+//! clock mismatch (`clock_ps` differs), and an ID-width converter
+//! (`IdRemap` or `IdSerialize`, per the child's `id_policy`) always —
+//! the parent crossbar's prepend bits structurally never fit the child's
+//! ID space. Setting `converters = false` on a child turns the implicit
+//! width/clock stages into hard config errors for designs that must stay
+//! homogeneous; the ID boundary stage is kept even then.
+//!
+//! Address decode is absolute end-to-end: each level's map claims its
+//! local slaves and child windows, routes everything outside its own
+//! window to the uplink, and DECERRs in-window holes locally — a hole
+//! can never ping-pong between a parent and child map.
+//!
+//! With `threads >= 1` the walk shards the system exactly like the flat
+//! builder: shard 0 holds the root crossbar and root slaves, each root
+//! master island gets its own shard, and each *top-level* child instance
+//! becomes one shard with its whole subtree inside; the trunks of those
+//! instances are cut with `protocol::exchange` relays. The shard
+//! structure depends only on the config, so
+//! [`crate::coordinator::determinism_fingerprint`] is bit-identical for
+//! every thread count. A degenerate root template (masters + slaves, no
+//! children) reproduces the flat builder name for name and seed for
+//! seed, so a `[sim]` config and its grammar rewrite fingerprint
+//! identically too (`rust/tests/topology_grammar.rs`).
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
+use std::rc::Rc;
+
+use crate::bail;
+use crate::errors::{Context, Result};
+
+use crate::coordinator::builder::{gen_cfg, SlaveTap, System};
+use crate::coordinator::config::{
+    self, master_from_table, slave_from_table, Doc, MasterCfg, SlaveCfg, SlaveKind,
+};
+use crate::noc::addr_decode::{AddrMap, AddrRule, DefaultPort};
+use crate::noc::mem_duplex::{BankArray, MemDuplex};
+use crate::noc::mem_simplex::{ArbPolicy, MemSimplex};
+use crate::noc::sram::Sram;
+use crate::noc::xbar::{xbar_master_id_bits, Xbar, XbarCfg};
+use crate::noc::{cdc, Downsizer, IdRemap, IdSerialize, Upsizer};
+use crate::protocol::exchange::cut_slave_export;
+use crate::protocol::{bundle, BundleCfg, BundleCut, MasterEnd, Monitor, SlaveEnd};
+use crate::sim::{shared, Arena, Component, Cycle, DomainId, EngineOpts, Ps};
+use crate::traffic::gen::RwGen;
+use crate::traffic::perfect_slave::PerfectSlave;
+
+/// Period of the implicit root clock domain; templates inherit it unless
+/// they set `clock_ps`.
+pub const ROOT_CLOCK_PS: Ps = 1000;
+
+/// Transactions per (ID, direction) in every crossbar demux and ID
+/// converter the grammar instantiates (the flat builder's value).
+const TXNS_PER_ID: u32 = 8;
+
+/// Per-channel FIFO depth of auto-inserted CDCs.
+const CDC_DEPTH: usize = 8;
+
+/// Guardrail against configs whose `count`s multiply into something the
+/// walk (and the host) could never finish instantiating.
+const MAX_INSTANCES: u64 = 100_000;
+
+/// How a trunk converts the parent's (wider) ID space down to the
+/// child's: a table-based remapper or a serializing funnel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IdPolicy {
+    Remap,
+    Serialize,
+}
+
+/// One `[[template.master]]`: a flat [`MasterCfg`] plus its address
+/// scope.
+#[derive(Debug, Clone)]
+pub struct TopoMaster {
+    pub cfg: MasterCfg,
+    /// `scope = "global"`: `base` is absolute. Default (`"local"`):
+    /// `base` is relative to the enclosing instance's window, so every
+    /// stamped copy targets its own copy of the subnetwork.
+    pub global: bool,
+}
+
+/// One `[[template.child]]`: stamp `template` `count` times.
+#[derive(Debug, Clone)]
+pub struct ChildCfg {
+    pub template: String,
+    /// Instance name prefix (default: the template name). With
+    /// `count > 1` instances are `name0`, `name1`, ...
+    pub name: String,
+    pub count: usize,
+    /// Offset of instance 0's window inside the parent.
+    pub base: u64,
+    /// Distance between consecutive instance windows (default: the
+    /// child's window size, i.e. densely stacked).
+    pub stride: Option<u64>,
+    /// `false`: a width or clock mismatch on this edge is a config
+    /// error instead of an implicit converter.
+    pub converters: bool,
+    pub id_policy: IdPolicy,
+}
+
+/// One `[[template]]`: a reusable subnetwork.
+#[derive(Debug, Clone)]
+pub struct TemplateCfg {
+    pub name: String,
+    pub data_bits: usize,
+    pub id_bits: usize,
+    /// Clock period of this subnetwork (inherited from the parent when
+    /// unset; the root inherits [`ROOT_CLOCK_PS`]).
+    pub clock_ps: Option<Ps>,
+    pub pipeline: bool,
+    /// Explicit window size (default: the contents' footprint).
+    pub size: Option<u64>,
+    pub masters: Vec<TopoMaster>,
+    pub slaves: Vec<SlaveCfg>,
+    pub children: Vec<ChildCfg>,
+}
+
+/// A parsed `[topology]` document: the grammar's top level.
+#[derive(Debug, Clone)]
+pub struct TopoCfg {
+    pub cycles: u64,
+    pub engine: EngineOpts,
+    pub root: String,
+    pub templates: Vec<TemplateCfg>,
+}
+
+impl TopoCfg {
+    pub fn from_str_toml(text: &str) -> Result<TopoCfg> {
+        Self::from_doc(&config::parse(text)?)
+    }
+
+    pub fn from_doc(doc: &Doc) -> Result<TopoCfg> {
+        let topo = doc.table("topology").context("missing [topology] section")?;
+        let ctx = "topology";
+        let cycles = topo.get_or(ctx, "cycles", 10_000)?;
+        let engine = EngineOpts::from_table(topo, ctx)?;
+        let root: String = topo.require(ctx, "root")?;
+
+        let mut templates = Vec::new();
+        for (k, t) in doc.array("template").iter().enumerate() {
+            let name: String = t.require(&format!("template[{k}]"), "name")?;
+            let ctx = format!("template[{name}]");
+            let mut masters = Vec::new();
+            for (i, mt) in doc.scoped("template", k, "master").iter().enumerate() {
+                let mctx = format!("{ctx}.master[{i}]");
+                let cfg = master_from_table(mt, &mctx, i)?;
+                let global = match mt.get_or(&mctx, "scope", "local".to_string())?.as_str() {
+                    "local" => false,
+                    "global" => true,
+                    s => bail!("{mctx}.scope: expected \"local\" or \"global\", got \"{s}\""),
+                };
+                masters.push(TopoMaster { cfg, global });
+            }
+            let mut slaves = Vec::new();
+            for (i, st) in doc.scoped("template", k, "slave").iter().enumerate() {
+                slaves.push(slave_from_table(st, &format!("{ctx}.slave[{i}]"), i)?);
+            }
+            let mut children = Vec::new();
+            for (i, ct) in doc.scoped("template", k, "child").iter().enumerate() {
+                let cctx = format!("{ctx}.child[{i}]");
+                let template: String = ct.require(&cctx, "template")?;
+                let count = ct.get_or(&cctx, "count", 1usize)?;
+                if count == 0 {
+                    bail!("{cctx}.count: must be at least 1");
+                }
+                let policy: String = ct.get_or(&cctx, "id_policy", "remap".to_string())?;
+                let id_policy = match policy.as_str() {
+                    "remap" => IdPolicy::Remap,
+                    "serialize" => IdPolicy::Serialize,
+                    s => {
+                        bail!("{cctx}.id_policy: expected \"remap\" or \"serialize\", got \"{s}\"")
+                    }
+                };
+                children.push(ChildCfg {
+                    name: ct.get_or(&cctx, "name", template.clone())?,
+                    template,
+                    count,
+                    base: ct.get_or(&cctx, "base", 0)?,
+                    stride: ct.get_opt(&cctx, "stride")?,
+                    converters: ct.get_or(&cctx, "converters", true)?,
+                    id_policy,
+                });
+            }
+            templates.push(TemplateCfg {
+                name,
+                data_bits: t.get_or(&ctx, "data_bits", 64)?,
+                id_bits: t.get_or(&ctx, "id_bits", 4)?,
+                clock_ps: t.get_opt(&ctx, "clock_ps")?,
+                pipeline: t.get_or(&ctx, "pipeline", false)?,
+                size: t.get_opt(&ctx, "size")?,
+                masters,
+                slaves,
+                children,
+            });
+        }
+        Ok(TopoCfg { cycles, engine, root, templates })
+    }
+
+    /// Validate the grammar and build the system. Every malformed config
+    /// is a typed `Err` naming the offending template — never a panic
+    /// from deeper layers (`AddrMap` overlap asserts, converter width
+    /// asserts) whose message knows nothing about the grammar.
+    pub fn build(&self) -> Result<System> {
+        let res = self.resolve()?;
+        let root_t = &self.templates[res.root];
+        let epoch = self.engine.epoch.max(1);
+        let top_instances: usize = root_t.children.iter().map(|c| c.count).sum();
+        let n_shards = 1 + root_t.masters.len() + top_instances;
+        let mut arena = Arena::new(self.engine.worker_threads(), n_shards, epoch);
+        if self.engine.full_scan {
+            arena.set_sleep(false);
+        }
+        let mut w = Walk {
+            cfg: self,
+            res: &res,
+            arena,
+            epoch,
+            domains: HashMap::new(),
+            gens: Vec::new(),
+            monitors: Vec::new(),
+            taps: Vec::new(),
+            seed_idx: 0,
+            next_top_shard: 1 + root_t.masters.len(),
+        };
+        let root_clock = root_t.clock_ps.unwrap_or(ROOT_CLOCK_PS);
+        w.level(res.root, "", 0, root_clock, Place::Root, None)?;
+        Ok(System::from_parts("system".into(), w.arena, w.gens, w.monitors, w.taps))
+    }
+
+    /// Static validation: resolve template references, reject cycles and
+    /// address overlaps, compute per-template address windows.
+    fn resolve(&self) -> Result<Resolved> {
+        let n = self.templates.len();
+        if n == 0 {
+            bail!("topology declares no [[template]]s");
+        }
+        let mut ix = HashMap::new();
+        for (i, t) in self.templates.iter().enumerate() {
+            if ix.insert(t.name.as_str(), i).is_some() {
+                bail!("duplicate template name: {}", t.name);
+            }
+            let ctx = format!("template[{}]", t.name);
+            if t.data_bits == 0 || t.data_bits % 8 != 0 {
+                bail!("{ctx}: data_bits must be a positive multiple of 8, got {}", t.data_bits);
+            }
+            if !(1..=12).contains(&t.id_bits) {
+                bail!("{ctx}: id_bits must be within 1..=12, got {}", t.id_bits);
+            }
+            if t.clock_ps == Some(0) {
+                bail!("{ctx}: clock_ps must be positive");
+            }
+        }
+        let Some(&root) = ix.get(self.root.as_str()) else {
+            bail!("topology.root: unknown template \"{}\"", self.root);
+        };
+        let mut child_ix = Vec::with_capacity(n);
+        for t in &self.templates {
+            let mut cs = Vec::with_capacity(t.children.len());
+            for (c, cc) in t.children.iter().enumerate() {
+                match ix.get(cc.template.as_str()) {
+                    Some(&j) => cs.push(j),
+                    None => bail!(
+                        "template[{}].child[{c}]: unknown template \"{}\"",
+                        t.name,
+                        cc.template
+                    ),
+                }
+            }
+            child_ix.push(cs);
+        }
+        let mut color = vec![0u8; n];
+        let mut stack = Vec::new();
+        for i in 0..n {
+            if color[i] == 0 {
+                find_cycle(i, &self.templates, &child_ix, &mut color, &mut stack)?;
+            }
+        }
+        let mut memo = vec![None; n];
+        for i in 0..n {
+            window_of(i, &self.templates, &child_ix, &mut memo)?;
+        }
+        let window: Vec<u64> = memo.into_iter().map(|w| w.unwrap()).collect();
+        for (i, t) in self.templates.iter().enumerate() {
+            check_overlaps(t, &child_ix[i], &window)?;
+        }
+        let root_clock = self.templates[root].clock_ps.unwrap_or(ROOT_CLOCK_PS);
+        self.check_edges(root, root_clock, &child_ix, &mut HashSet::new())?;
+
+        let mut totals = vec![None; n];
+        let (gens, slaves, instances) = totals_of(root, &self.templates, &child_ix, &mut totals);
+        if gens == 0 {
+            bail!("topology instantiates no traffic generators (add [[template.master]]s)");
+        }
+        if slaves == 0 {
+            bail!("topology instantiates no slaves (add [[template.slave]]s)");
+        }
+        if instances > MAX_INSTANCES {
+            bail!("topology instantiates {instances} template instances (limit {MAX_INSTANCES})");
+        }
+        Ok(Resolved { root, child_ix, window })
+    }
+
+    /// Walk every reachable parent→child edge once per (template, clock)
+    /// pair: widths must divide, and with `converters = false` any width
+    /// or clock mismatch is a config error. Clocks resolve down the
+    /// instantiation paths (a child inherits its parent's period), hence
+    /// the memo key — a diamond instantiated at two different periods is
+    /// checked under both.
+    fn check_edges(
+        &self,
+        t_ix: usize,
+        clock: Ps,
+        child_ix: &[Vec<usize>],
+        seen: &mut HashSet<(usize, Ps)>,
+    ) -> Result<()> {
+        if !seen.insert((t_ix, clock)) {
+            return Ok(());
+        }
+        let t = &self.templates[t_ix];
+        for (c, cc) in t.children.iter().enumerate() {
+            let ct = &self.templates[child_ix[t_ix][c]];
+            let child_clock = ct.clock_ps.unwrap_or(clock);
+            if ct.data_bits != t.data_bits {
+                if !cc.converters {
+                    bail!(
+                        "template[{}].child[{c}] ({}): width mismatch ({} vs {} bits) with \
+                         converters disabled",
+                        t.name,
+                        cc.name,
+                        t.data_bits,
+                        ct.data_bits
+                    );
+                }
+                let hi = t.data_bits.max(ct.data_bits);
+                let lo = t.data_bits.min(ct.data_bits);
+                if hi % lo != 0 {
+                    bail!(
+                        "template[{}].child[{c}] ({}): width {hi} is not a multiple of {lo}, no \
+                         converter chain fits",
+                        t.name,
+                        cc.name
+                    );
+                }
+            }
+            if child_clock != clock && !cc.converters {
+                bail!(
+                    "template[{}].child[{c}] ({}): clock mismatch ({clock} ps vs {child_clock} \
+                     ps) with converters disabled",
+                    t.name,
+                    cc.name
+                );
+            }
+            self.check_edges(child_ix[t_ix][c], child_clock, child_ix, seen)?;
+        }
+        Ok(())
+    }
+}
+
+/// Validation output: the root template's index, resolved child
+/// references, and each template's address-window size.
+struct Resolved {
+    root: usize,
+    child_ix: Vec<Vec<usize>>,
+    window: Vec<u64>,
+}
+
+fn n_slave_ports(t: &TemplateCfg, has_parent: bool) -> usize {
+    let stamped: usize = t.children.iter().map(|c| c.count).sum();
+    t.masters.len() + stamped + usize::from(has_parent)
+}
+
+/// DFS cycle detection over the template reference graph (color: 0 =
+/// unvisited, 1 = on the current path, 2 = done).
+fn find_cycle(
+    i: usize,
+    templates: &[TemplateCfg],
+    child_ix: &[Vec<usize>],
+    color: &mut [u8],
+    stack: &mut Vec<usize>,
+) -> Result<()> {
+    color[i] = 1;
+    stack.push(i);
+    for &j in &child_ix[i] {
+        match color[j] {
+            0 => find_cycle(j, templates, child_ix, color, stack)?,
+            1 => {
+                let pos = stack.iter().position(|&x| x == j).unwrap();
+                let mut names: Vec<&str> =
+                    stack[pos..].iter().map(|&x| templates[x].name.as_str()).collect();
+                names.push(templates[j].name.as_str());
+                bail!("template instantiation cycle: {}", names.join(" -> "));
+            }
+            _ => {}
+        }
+    }
+    stack.pop();
+    color[i] = 2;
+    Ok(())
+}
+
+/// Bottom-up address-window size of one instance of template `i`: the
+/// footprint of its slaves and stacked child windows, or the explicit
+/// `size` when that is at least the footprint. All arithmetic checked —
+/// a wrap here is a config error, not a silent truncation.
+fn window_of(
+    i: usize,
+    templates: &[TemplateCfg],
+    child_ix: &[Vec<usize>],
+    memo: &mut [Option<u64>],
+) -> Result<u64> {
+    if let Some(w) = memo[i] {
+        return Ok(w);
+    }
+    let t = &templates[i];
+    let ctx = format!("template[{}]", t.name);
+    let mut fp: u64 = 0;
+    for sc in &t.slaves {
+        if sc.size == 0 {
+            bail!("{ctx}.slave {}: size must be nonzero", sc.name);
+        }
+        let end = match sc.base.checked_add(sc.size) {
+            Some(e) => e,
+            None => bail!(
+                "{ctx}.slave {}: base {:#x} + size {:#x} wraps the 64-bit address space",
+                sc.name,
+                sc.base,
+                sc.size
+            ),
+        };
+        fp = fp.max(end);
+    }
+    for (c, cc) in t.children.iter().enumerate() {
+        let w = window_of(child_ix[i][c], templates, child_ix, memo)?;
+        let stride = cc.stride.unwrap_or(w);
+        let end = stride
+            .checked_mul(cc.count as u64 - 1)
+            .and_then(|s| cc.base.checked_add(s))
+            .and_then(|b| b.checked_add(w));
+        let end = match end {
+            Some(e) => e,
+            None => bail!(
+                "{ctx}.child[{c}] ({}): stacked address range wraps the 64-bit space",
+                cc.name
+            ),
+        };
+        fp = fp.max(end);
+    }
+    let w = match t.size {
+        Some(s) if s < fp => {
+            bail!("{ctx}: size {s:#x} is smaller than the contents footprint {fp:#x}")
+        }
+        Some(s) => s,
+        None => fp,
+    };
+    memo[i] = Some(w);
+    Ok(w)
+}
+
+/// Pairwise-disjointness of everything mapped inside one template: slave
+/// ranges and each stamped child instance's window. Catches both plain
+/// slave collisions and `stride < window` stacking, with instance names
+/// in the message. (The arithmetic was bounds-checked by [`window_of`].)
+fn check_overlaps(t: &TemplateCfg, child_ix: &[usize], window: &[u64]) -> Result<()> {
+    let mut ranges: Vec<(String, u64, u64)> = Vec::new();
+    for sc in &t.slaves {
+        ranges.push((format!("slave {}", sc.name), sc.base, sc.base + sc.size));
+    }
+    for (c, cc) in t.children.iter().enumerate() {
+        let w = window[child_ix[c]];
+        if w == 0 {
+            continue;
+        }
+        let stride = cc.stride.unwrap_or(w);
+        for k in 0..cc.count {
+            let name = if cc.count > 1 {
+                format!("child instance {}{k}", cc.name)
+            } else {
+                format!("child instance {}", cc.name)
+            };
+            let b = cc.base + stride * k as u64;
+            ranges.push((name, b, b + w));
+        }
+    }
+    for (a, ra) in ranges.iter().enumerate() {
+        for rb in &ranges[..a] {
+            if rb.1 < ra.2 && ra.1 < rb.2 {
+                bail!(
+                    "template[{}]: {} [{:#x}, {:#x}) and {} [{:#x}, {:#x}) overlap",
+                    t.name,
+                    rb.0,
+                    rb.1,
+                    rb.2,
+                    ra.0,
+                    ra.1,
+                    ra.2
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// (generators, slaves, instances) stamped by one instance of template
+/// `i`, transitively. Saturating: the counts only gate validation.
+fn totals_of(
+    i: usize,
+    templates: &[TemplateCfg],
+    child_ix: &[Vec<usize>],
+    memo: &mut [Option<(u64, u64, u64)>],
+) -> (u64, u64, u64) {
+    if let Some(v) = memo[i] {
+        return v;
+    }
+    let t = &templates[i];
+    let mut v = (t.masters.len() as u64, t.slaves.len() as u64, 1u64);
+    for (c, cc) in t.children.iter().enumerate() {
+        let cv = totals_of(child_ix[i][c], templates, child_ix, memo);
+        let n = cc.count as u64;
+        v.0 = v.0.saturating_add(n.saturating_mul(cv.0));
+        v.1 = v.1.saturating_add(n.saturating_mul(cv.1));
+        v.2 = v.2.saturating_add(n.saturating_mul(cv.2));
+    }
+    memo[i] = Some(v);
+    v
+}
+
+/// Where a level's components register: shard 0 / the single arena
+/// (root infrastructure), or a specific shard (a top-level instance's
+/// subtree, or a root master island).
+#[derive(Clone, Copy)]
+enum Place {
+    Root,
+    Shard(usize),
+}
+
+/// The trunk ends a parent hands to a child level: the last downlink
+/// bundle's slave end (the child crossbar's final slave port) and the
+/// first uplink bundle's master end (its final master port).
+struct ParentLink {
+    down: SlaveEnd,
+    up: MasterEnd,
+}
+
+/// Recursive instantiation state.
+struct Walk<'a> {
+    cfg: &'a TopoCfg,
+    res: &'a Resolved,
+    arena: Arena,
+    epoch: Cycle,
+    /// Memoized extra clock domains, keyed by (shard, period). In
+    /// single-arena mode all shards share one engine, so the key
+    /// collapses to (0, period).
+    domains: HashMap<(usize, Ps), DomainId>,
+    gens: Vec<Rc<RefCell<RwGen>>>,
+    monitors: Vec<Rc<RefCell<Monitor>>>,
+    taps: Vec<SlaveTap>,
+    /// Global master walk index — the seed schedule (`0xC0FFEE + idx`)
+    /// follows declaration order, like the flat builder.
+    seed_idx: u64,
+    /// Next shard for a top-level child instance (after shard 0 and the
+    /// root master islands).
+    next_top_shard: usize,
+}
+
+impl Walk<'_> {
+    fn sharded(&self) -> bool {
+        self.arena.threads() > 0
+    }
+
+    fn domain(&mut self, shard: usize, ps: Ps) -> DomainId {
+        if ps == ROOT_CLOCK_PS {
+            return self.arena.base_domain(shard);
+        }
+        let key = (if self.sharded() { shard } else { 0 }, ps);
+        if let Some(&d) = self.domains.get(&key) {
+            return d;
+        }
+        let d = self.arena.add_clock(shard, &format!("clk{ps}"), ps);
+        self.domains.insert(key, d);
+        d
+    }
+
+    /// Register `c` in `shard`'s clock-`ps` domain.
+    fn add(&mut self, shard: usize, ps: Ps, c: Box<dyn Component>) {
+        let d = self.domain(shard, ps);
+        // SAFETY: the walk cuts every trunk bundle that crosses a shard
+        // boundary (`register_cut`) before handing its far end to the
+        // other side, and all other bundles connect components the walk
+        // places in the same shard — so no channel `Rc` registered here
+        // is reachable from another shard.
+        unsafe { self.arena.add_in(shard, d, c) }
+    }
+
+    fn register_cut(&mut self, c: BundleCut, from: usize, to: usize) {
+        match &mut self.arena {
+            // SAFETY: the cut is the shard boundary itself; the walk
+            // placed the producer-side bundle in `from` and hands the
+            // relayed far end to components of `to` only.
+            Arena::Sharded { eng } => unsafe {
+                c.register(eng, from, to);
+            },
+            Arena::Single { .. } => unreachable!("cuts only exist in sharded mode"),
+        }
+    }
+
+    /// Instantiate one level: masters (with monitors), child trunks and
+    /// their subtrees, slaves, then the level's crossbar. Registration
+    /// order is part of the determinism contract with the flat builder.
+    fn level(
+        &mut self,
+        t_ix: usize,
+        prefix: &str,
+        base_abs: u64,
+        clock_ps: Ps,
+        place: Place,
+        parent_link: Option<ParentLink>,
+    ) -> Result<()> {
+        let cfg = self.cfg;
+        let res = self.res;
+        let t = &cfg.templates[t_ix];
+        let n_sp = n_slave_ports(t, parent_link.is_some());
+        let s_cfg = BundleCfg::new(t.data_bits, t.id_bits);
+        let m_cfg = BundleCfg::new(t.data_bits, xbar_master_id_bits(t.id_bits, n_sp));
+        let shard = match place {
+            Place::Root => 0,
+            Place::Shard(s) => s,
+        };
+
+        let mut xbar_slaves: Vec<SlaveEnd> = Vec::new();
+        let mut xbar_masters: Vec<MasterEnd> = Vec::new();
+        let mut rules: Vec<AddrRule> = Vec::new();
+
+        // Masters → monitors → crossbar slave ports.
+        for (i, tm) in t.masters.iter().enumerate() {
+            let label = format!("{prefix}{}", tm.cfg.name);
+            let (gen_m, gen_s) = bundle(&format!("{label}.port"), s_cfg);
+            let (mon_m, mon_s) = bundle(&format!("{label}.mon"), s_cfg);
+            let mut mc = tm.cfg.clone();
+            if !tm.global {
+                mc.base = match base_abs.checked_add(mc.base) {
+                    Some(b) => b,
+                    None => bail!("master {label}: local base wraps the 64-bit address space"),
+                };
+            }
+            let seed = self.seed_idx;
+            self.seed_idx += 1;
+            let (g, g_ad) = shared(RwGen::new(label.clone(), gen_m, gen_cfg(&mc, &s_cfg, seed)?));
+            self.gens.push(g);
+            let (mon, mon_ad) = shared(Monitor::new(format!("{label}.monitor"), gen_s, mon_m));
+            self.monitors.push(mon);
+            if matches!(place, Place::Root) && self.sharded() {
+                // Root master islands shard exactly like the flat
+                // builder: generator + monitor in shard 1 + i, the
+                // output bundle cut toward the crossbar in shard 0.
+                let island = 1 + i;
+                self.add(island, clock_ps, Box::new(g_ad));
+                self.add(island, clock_ps, Box::new(mon_ad));
+                let (c, far) = cut_slave_export(&format!("cut.{label}"), s_cfg, mon_s, self.epoch);
+                self.register_cut(c, island, 0);
+                xbar_slaves.push(far);
+            } else {
+                self.add(shard, clock_ps, Box::new(g_ad));
+                self.add(shard, clock_ps, Box::new(mon_ad));
+                xbar_slaves.push(mon_s);
+            }
+        }
+
+        // Child instances: downlink trunk, uplink trunk, then recurse.
+        for (c, cc) in t.children.iter().enumerate() {
+            let j = res.child_ix[t_ix][c];
+            let ct = &cfg.templates[j];
+            let window = res.window[j];
+            let stride = cc.stride.unwrap_or(window);
+            let child_clock = ct.clock_ps.unwrap_or(clock_ps);
+            let child_s_cfg = BundleCfg::new(ct.data_bits, ct.id_bits);
+            let child_id_bits = xbar_master_id_bits(ct.id_bits, n_slave_ports(ct, true));
+            let child_m_cfg = BundleCfg::new(ct.data_bits, child_id_bits);
+            for k in 0..cc.count {
+                let inst = if cc.count > 1 { format!("{}{k}", cc.name) } else { cc.name.clone() };
+                let cp = format!("{prefix}{inst}.");
+                let inst_base = base_abs + cc.base + stride * k as u64;
+                let (child_place, child_shard, cut_trunk) =
+                    if matches!(place, Place::Root) && self.sharded() {
+                        let s = self.next_top_shard;
+                        self.next_top_shard += 1;
+                        (Place::Shard(s), s, true)
+                    } else {
+                        (place, shard, false)
+                    };
+
+                // Downlink: parent crossbar master port → [cut] →
+                // width → CDC → ID → child crossbar slave port.
+                let (down_m, down_s) = bundle(&format!("{cp}down"), m_cfg);
+                if window > 0 {
+                    rules.push(AddrRule::new(inst_base, inst_base + window, xbar_masters.len()));
+                }
+                xbar_masters.push(down_m);
+                let mut prev = down_s;
+                let mut cur = m_cfg;
+                if cut_trunk {
+                    let (cut, far) =
+                        cut_slave_export(&format!("cut.{cp}down"), cur, prev, self.epoch);
+                    self.register_cut(cut, 0, child_shard);
+                    prev = far;
+                }
+                if ct.data_bits != t.data_bits {
+                    let dw = BundleCfg::new(ct.data_bits, cur.id_bits);
+                    let (dw_m, dw_s) = bundle(&format!("{cp}down.dw"), dw);
+                    let conv: Box<dyn Component> = if ct.data_bits > t.data_bits {
+                        Box::new(Upsizer::new(format!("{cp}down.up"), prev, dw_m, 1))
+                    } else {
+                        Box::new(Downsizer::new(format!("{cp}down.dn"), prev, dw_m))
+                    };
+                    self.add(child_shard, clock_ps, conv);
+                    prev = dw_s;
+                    cur = dw;
+                }
+                if child_clock != clock_ps {
+                    let label = format!("{cp}down.cdc");
+                    let (cdc_m, cdc_s) = bundle(&label, cur);
+                    let (near, far) = cdc(&label, prev, cdc_m, clock_ps, child_clock, CDC_DEPTH);
+                    self.add(child_shard, clock_ps, Box::new(near));
+                    self.add(child_shard, child_clock, Box::new(far));
+                    prev = cdc_s;
+                }
+                // The parent's prepend bits never fit the child's ID
+                // space: the ID boundary stage is unconditional.
+                let (id_m, id_s) = bundle(&format!("{cp}down.id"), child_s_cfg);
+                let u = 1usize << cur.id_bits.min(ct.id_bits);
+                let conv: Box<dyn Component> = match cc.id_policy {
+                    IdPolicy::Remap => Box::new(IdRemap::new(
+                        format!("{cp}down.remap"),
+                        prev,
+                        id_m,
+                        u,
+                        TXNS_PER_ID,
+                    )),
+                    IdPolicy::Serialize => Box::new(IdSerialize::new(
+                        format!("{cp}down.ser"),
+                        prev,
+                        id_m,
+                        u,
+                        TXNS_PER_ID as usize,
+                    )),
+                };
+                self.add(child_shard, child_clock, conv);
+
+                // Uplink: child crossbar master port → CDC → width →
+                // ID → [cut] → parent crossbar slave port.
+                let (up_m, up_s) = bundle(&format!("{cp}up"), child_m_cfg);
+                let mut prev = up_s;
+                let mut cur = child_m_cfg;
+                if child_clock != clock_ps {
+                    let (cdc_m, cdc_s) = bundle(&format!("{cp}up.cdc"), cur);
+                    let (near, far) =
+                        cdc(&format!("{cp}up.cdc"), prev, cdc_m, child_clock, clock_ps, CDC_DEPTH);
+                    self.add(child_shard, child_clock, Box::new(near));
+                    self.add(child_shard, clock_ps, Box::new(far));
+                    prev = cdc_s;
+                }
+                if ct.data_bits != t.data_bits {
+                    let uw = BundleCfg::new(t.data_bits, cur.id_bits);
+                    let (uw_m, uw_s) = bundle(&format!("{cp}up.dw"), uw);
+                    let conv: Box<dyn Component> = if t.data_bits > ct.data_bits {
+                        Box::new(Upsizer::new(format!("{cp}up.up"), prev, uw_m, 1))
+                    } else {
+                        Box::new(Downsizer::new(format!("{cp}up.dn"), prev, uw_m))
+                    };
+                    self.add(child_shard, clock_ps, conv);
+                    prev = uw_s;
+                    cur = uw;
+                }
+                let (uid_m, uid_s) = bundle(&format!("{cp}up.id"), s_cfg);
+                let u = 1usize << cur.id_bits.min(t.id_bits);
+                let conv: Box<dyn Component> = match cc.id_policy {
+                    IdPolicy::Remap => {
+                        Box::new(IdRemap::new(format!("{cp}up.remap"), prev, uid_m, u, TXNS_PER_ID))
+                    }
+                    IdPolicy::Serialize => Box::new(IdSerialize::new(
+                        format!("{cp}up.ser"),
+                        prev,
+                        uid_m,
+                        u,
+                        TXNS_PER_ID as usize,
+                    )),
+                };
+                self.add(child_shard, clock_ps, conv);
+                let mut up_far = uid_s;
+                if cut_trunk {
+                    let (cut, far) =
+                        cut_slave_export(&format!("cut.{cp}up"), s_cfg, up_far, self.epoch);
+                    self.register_cut(cut, child_shard, 0);
+                    up_far = far;
+                }
+                xbar_slaves.push(up_far);
+
+                self.level(
+                    j,
+                    &cp,
+                    inst_base,
+                    child_clock,
+                    child_place,
+                    Some(ParentLink { down: id_s, up: up_m }),
+                )?;
+            }
+        }
+
+        // Slaves → crossbar master ports.
+        for sc in &t.slaves {
+            let label = format!("{prefix}{}", sc.name);
+            let abs = base_abs + sc.base;
+            let (m, s) = bundle(&format!("{label}.port"), m_cfg);
+            self.taps.push(SlaveTap::new(label.clone(), &m));
+            rules.push(AddrRule::new(abs, abs + sc.size, xbar_masters.len()));
+            xbar_masters.push(m);
+            let ep: Box<dyn Component> = match &sc.kind {
+                SlaveKind::Perfect { latency } => Box::new(PerfectSlave::new(label, s, *latency)),
+                SlaveKind::Simplex { latency } => Box::new(MemSimplex::new(
+                    label,
+                    s,
+                    Sram::new(abs, sc.size as usize, *latency),
+                    ArbPolicy::RoundRobin,
+                )),
+                SlaveKind::Duplex { banks, latency } => Box::new(MemDuplex::new(
+                    label,
+                    s,
+                    BankArray::new(
+                        abs,
+                        (sc.size as usize).div_ceil(*banks),
+                        *banks,
+                        m_cfg.beat_bytes(),
+                        *latency,
+                    ),
+                )),
+            };
+            self.add(shard, clock_ps, ep);
+        }
+
+        // Parent trunk ports last; everything outside this instance's
+        // window routes up, in-window holes DECERR locally (so a hole
+        // can never ping-pong between parent and child maps).
+        if let Some(link) = parent_link {
+            xbar_slaves.push(link.down);
+            let up = xbar_masters.len();
+            xbar_masters.push(link.up);
+            let end = base_abs + res.window[t_ix];
+            if base_abs > 0 {
+                rules.push(AddrRule::new(0, base_abs, up));
+            }
+            if end < u64::MAX {
+                rules.push(AddrRule::new(end, u64::MAX, up));
+            }
+        }
+        let map = AddrMap::new(rules, DefaultPort::Error);
+        let n = xbar_slaves.len();
+        let xbar = Xbar::new(
+            format!("{prefix}xbar"),
+            xbar_slaves,
+            xbar_masters,
+            XbarCfg {
+                slave_cfg: s_cfg,
+                maps: vec![map; n],
+                max_txns_per_id: TXNS_PER_ID,
+                pipeline: t.pipeline,
+            },
+        );
+        for part in xbar.into_parts() {
+            self.add(shard, clock_ps, part);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NESTED: &str = r#"
+[topology]
+root = "chip"
+cycles = 4000
+
+[[template]]
+name = "cluster"
+data_bits = 64
+id_bits = 4
+
+[[template.master]]
+name = "core"
+span = 0x1000
+total = 40
+
+[[template.slave]]
+name = "l1"
+kind = "simplex"
+base = 0x0
+size = 0x1000
+
+[[template]]
+name = "chip"
+data_bits = 64
+id_bits = 4
+
+[[template.master]]
+name = "dma"
+base = 0x2000
+span = 0x1000
+total = 30
+
+[[template.child]]
+template = "cluster"
+count = 2
+base = 0x0
+
+[[template.slave]]
+name = "l2"
+base = 0x2000
+size = 0x1000
+"#;
+
+    #[test]
+    fn parses_nested_templates() {
+        let cfg = TopoCfg::from_str_toml(NESTED).unwrap();
+        assert_eq!(cfg.root, "chip");
+        assert_eq!(cfg.cycles, 4000);
+        assert_eq!(cfg.templates.len(), 2);
+        let chip = &cfg.templates[1];
+        assert_eq!(chip.children.len(), 1);
+        assert_eq!(chip.children[0].count, 2);
+        assert_eq!(chip.children[0].name, "cluster");
+        assert!(chip.children[0].converters);
+        assert_eq!(chip.children[0].id_policy, IdPolicy::Remap);
+    }
+
+    #[test]
+    fn windows_stack_child_instances() {
+        let cfg = TopoCfg::from_str_toml(NESTED).unwrap();
+        let res = cfg.resolve().unwrap();
+        // cluster window = its L1; chip = 2 stacked clusters + l2.
+        assert_eq!(res.window[0], 0x1000);
+        assert_eq!(res.window[1], 0x3000);
+    }
+
+    #[test]
+    fn scope_and_policy_keys_are_validated() {
+        let bad = NESTED.replace("name = \"core\"", "name = \"core\"\nscope = \"sideways\"");
+        let err = TopoCfg::from_str_toml(&bad).unwrap_err().to_string();
+        assert!(err.contains("scope"), "{err}");
+        let bad = NESTED.replace("count = 2", "count = 2\nid_policy = \"fold\"");
+        let err = TopoCfg::from_str_toml(&bad).unwrap_err().to_string();
+        assert!(err.contains("id_policy"), "{err}");
+    }
+
+    #[test]
+    fn explicit_size_must_cover_footprint() {
+        let bad = NESTED.replace("name = \"chip\"", "name = \"chip\"\nsize = 0x2000");
+        let cfg = TopoCfg::from_str_toml(&bad).unwrap();
+        let err = cfg.resolve().unwrap_err().to_string();
+        assert!(err.contains("footprint"), "{err}");
+    }
+
+    #[test]
+    fn nested_build_runs_clean() {
+        let cfg = TopoCfg::from_str_toml(NESTED).unwrap();
+        let mut sys = cfg.build().unwrap();
+        assert!(sys.run(cfg.cycles), "all traffic must complete");
+        assert!(sys.check_protocol().is_empty());
+        // 2 cluster cores * 40 transactions + the chip-level DMA's 30.
+        let total: u64 = sys.gens.iter().map(|g| g.borrow().stats.completed).sum();
+        assert_eq!(total, 110);
+        // Local traffic lands on each instance's own L1, the DMA on L2.
+        for tap in &sys.slave_taps {
+            assert!(tap.data_bytes() > 0, "{} saw no traffic", tap.name);
+        }
+    }
+}

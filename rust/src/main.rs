@@ -77,33 +77,35 @@ fn cmd_tables(flags: &HashMap<String, String>) -> Result<()> {
 fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     let path = flags.get("config").context("--config <file> required")?;
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-    let mut cfg = noc::coordinator::SimCfg::from_str_toml(&text)?;
-    if flags.contains_key("full-scan") {
-        // A/B oracle: tick every component every cycle instead of the
-        // engine's sleep/wake schedule; results must be bit-identical.
-        cfg.full_scan = true;
+    let doc = noc::coordinator::parse(&text)?;
+    // A `[topology]` table selects the recursive template grammar
+    // (`coordinator::topology`); flat `[[master]]` / `[[slave]]` configs
+    // keep the single-crossbar builder. Both embed the same `EngineOpts`,
+    // so the `--threads` / `--epoch` / `--full-scan` overrides are one
+    // code path (unset threads auto-pick the host core count; `--threads
+    // 0` stays the explicit single-arena mode).
+    let (mut cycles, mut sys) = if doc.table("topology").is_some() {
+        let mut cfg = noc::coordinator::TopoCfg::from_doc(&doc)?;
+        cfg.engine.apply_cli(flags, true)?;
+        (cfg.cycles, cfg.build()?)
+    } else {
+        let mut cfg = noc::coordinator::SimCfg::from_doc(&doc)?;
+        cfg.engine.apply_cli(flags, true)?;
+        (cfg.cycles, noc::coordinator::System::build(&cfg)?)
+    };
+    if let Some(c) = flags.get("cycles") {
+        cycles = c.parse().context("--cycles must be a non-negative integer")?;
     }
-    if let Some(t) = flags.get("threads") {
-        // N >= 1 engages the sharded epoch-exchange engine with N worker
-        // threads; results are bit-identical for every N >= 1, and 0 is
-        // the explicit single-arena mode.
-        cfg.threads = Some(t.parse().context("--threads must be a non-negative integer")?);
-    } else if cfg.threads.is_none() {
-        // Unset on both the CLI and the config: use the host core count.
-        cfg.threads = Some(noc::sim::auto_threads());
-    }
-    if let Some(e) = flags.get("epoch") {
-        cfg.epoch = e.parse().context("--epoch must be a positive integer")?;
-        ensure!(cfg.epoch >= 1, "--epoch must be at least 1");
-    }
-    let mut sys = noc::coordinator::System::build(&cfg)?;
-    let done = sys.run(cfg.cycles);
-    if flags.contains_key("json") {
+    let done = sys.run(cycles);
+    if flags.contains_key("fingerprint") {
+        // Canonical run digest for scripted determinism checks.
+        println!("{}", noc::coordinator::determinism_fingerprint(&sys));
+    } else if flags.contains_key("json") {
         println!("{}", noc::coordinator::run_report(&sys).render());
     } else {
         println!("{}", noc::coordinator::run_summary(&sys));
         if !done {
-            println!("warning: traffic did not finish within {} cycles", cfg.cycles);
+            println!("warning: traffic did not finish within {cycles} cycles");
         }
     }
     let v = sys.check_protocol();
@@ -119,23 +121,13 @@ fn chiplet_from_flags(flags: &HashMap<String, String>, auto_threads: bool) -> Re
         "medium" => ChipletCfg { fanout: vec![4, 4], ..ChipletCfg::full() },
         _ => ChipletCfg::small(),
     };
-    cfg.threads = match flags.get("threads") {
-        // 0 stays the explicit single-arena mode.
-        Some(t) => t.parse().context("--threads must be a non-negative integer")?,
-        // Unset: batched workloads auto-pick the host core count
-        // (bit-identical for any worker count >= 1, so this never
-        // changes results across hosts). Workloads whose numbers are
-        // compared against the paper's single-arena timing model — the
-        // latency probe and the per-cycle conv/fc scripts, which gain no
-        // parallelism from sharding anyway — keep threads = 0 unless
-        // asked.
-        None if auto_threads => noc::sim::auto_threads(),
-        None => 0,
-    };
-    if let Some(e) = flags.get("epoch") {
-        cfg.epoch = e.parse().context("--epoch must be a positive integer")?;
-        ensure!(cfg.epoch >= 1, "--epoch must be at least 1");
-    }
+    // Only batched workloads auto-pick the host core count when
+    // --threads is unset (bit-identical for any worker count >= 1, so
+    // this never changes results across hosts). Workloads whose numbers
+    // are compared against the paper's single-arena timing model — the
+    // latency probe and the per-cycle conv/fc scripts, which gain no
+    // parallelism from sharding anyway — stay single-arena unless asked.
+    cfg.engine.apply_cli(flags, auto_threads)?;
     Ok(cfg)
 }
 
@@ -306,9 +298,12 @@ fn usage() -> ! {
          commands:\n\
          \x20 figures [--fig N]            regenerate Figs 13-21 series\n\
          \x20 tables  [--tab 1|2|3|4]      regenerate Tables 1-4\n\
-         \x20 simulate --config F [--json] [--full-scan]\n\
-         \x20          [--threads N] [--epoch E]\n\
-         \x20                              run a configured topology\n\
+         \x20 simulate --config F [--json] [--fingerprint] [--full-scan]\n\
+         \x20          [--cycles N] [--threads N] [--epoch E]\n\
+         \x20                              run a configured topology: flat\n\
+         \x20                              [[master]]/[[slave]] or recursive\n\
+         \x20                              [topology] template grammar (see\n\
+         \x20                              examples/topologies/)\n\
          \x20                              (--threads >= 1: sharded engine,\n\
          \x20                              bit-identical for every N; unset:\n\
          \x20                              host core count; 0: single arena)\n\

@@ -46,7 +46,7 @@ use crate::noc::dma::TransferReq;
 use crate::noc::upsizer::Upsizer;
 use crate::protocol::exchange::{cut_master_export, cut_slave_export};
 use crate::protocol::{bundle, BundleCfg, MasterEnd};
-use crate::sim::{shared, Arena, Component, Cycle};
+use crate::sim::{shared, Arena, Component, Cycle, EngineOpts};
 use crate::traffic::gen::RwGenCfg;
 use crate::traffic::perfect_slave::PerfectSlave;
 
@@ -63,18 +63,10 @@ pub struct ChipletCfg {
     pub hbm_latency: Cycle,
     /// Crosspoint input queue depth.
     pub input_queue: Option<usize>,
-    /// Disable the engine's sleep/wake tracking: tick every component on
-    /// every cycle (the pre-refactor behaviour). Used for A/B perf and
-    /// determinism measurements; results must be bit-identical.
-    pub full_scan: bool,
-    /// Worker threads for the sharded engine. `0` (default) = the
-    /// single-arena in-process engine; `N >= 1` = epoch-exchange sharded
-    /// engine with `N` worker threads. All `N >= 1` produce bit-identical
-    /// results.
-    pub threads: usize,
-    /// Exchange epoch in cycles (sharded mode only): cut uplinks gain
-    /// this much latency and two epochs of buffering.
-    pub epoch: Cycle,
+    /// Engine choice and mode (threads / exchange epoch / full-scan
+    /// oracle), shared with every other stack via [`EngineOpts`]. All
+    /// `threads >= 1` produce bit-identical results.
+    pub engine: EngineOpts,
 }
 
 impl ChipletCfg {
@@ -86,9 +78,7 @@ impl ChipletCfg {
             txns_per_id: 8,
             hbm_latency: 50,
             input_queue: Some(4),
-            full_scan: false,
-            threads: 0,
-            epoch: 8,
+            engine: EngineOpts::default(),
         }
     }
 
@@ -121,14 +111,14 @@ impl Chiplet {
         let n = cfg.n_clusters();
         let dcfg = dma_net_cfg();
         let ccfg = core_net_cfg();
-        let epoch = cfg.epoch.max(1);
+        let epoch = cfg.engine.epoch.max(1);
 
         // Shard 0 carries the trees and endpoints; cluster i lives in
         // shard i + 1. Clusters only talk to the trees, so the shard
         // structure (and therefore the result) is independent of how
         // many worker threads chunk the shards.
-        let mut arena = Arena::new(cfg.threads, n + 1, epoch);
-        if cfg.full_scan {
+        let mut arena = Arena::new(cfg.engine.worker_threads(), n + 1, epoch);
+        if cfg.engine.full_scan {
             arena.set_sleep(false);
         }
 
@@ -447,7 +437,7 @@ impl Chiplet {
 
     /// Worker threads driving the simulation (0 = single-arena engine).
     pub fn threads(&self) -> usize {
-        self.cfg.threads
+        self.cfg.engine.worker_threads()
     }
 
     /// Advance one cycle. Per-cycle stepping is always serial, even in
@@ -676,8 +666,7 @@ mod tests {
         // must reach zero awake components — the relays were the last
         // permanently-awake holdouts.
         let mut cfg = ChipletCfg::small();
-        cfg.threads = 2;
-        cfg.epoch = 4;
+        cfg.engine = EngineOpts::sharded(2, 4);
         let mut ch = Chiplet::new(cfg);
         ch.run(200);
         assert_eq!(
@@ -705,8 +694,7 @@ mod tests {
         // every cluster in its own shard and two worker threads: data
         // must arrive intact through the epoch-exchange cuts.
         let mut cfg = ChipletCfg::small();
-        cfg.threads = 2;
-        cfg.epoch = 4;
+        cfg.engine = EngineOpts::sharded(2, 4);
         let mut ch = Chiplet::new(cfg);
         let src_base = addr::cluster_base(3) + 0x2000;
         let dst_base = addr::cluster_base(0) + 0x4000;
@@ -721,8 +709,7 @@ mod tests {
     #[test]
     fn sharded_chiplet_hbm_read_verifies_pattern() {
         let mut cfg = ChipletCfg::small();
-        cfg.threads = 3;
-        cfg.epoch = 8;
+        cfg.engine = EngineOpts::sharded(3, 8);
         let mut ch = Chiplet::new(cfg);
         let dst = addr::cluster_base(1) + 0x1000;
         let h = ch.submit_dma(
@@ -745,7 +732,7 @@ mod tests {
         // same completion cycle and byte counters in both engine modes.
         let run = |full_scan: bool| {
             let mut cfg = ChipletCfg::small();
-            cfg.full_scan = full_scan;
+            cfg.engine.full_scan = full_scan;
             let mut ch = Chiplet::new(cfg);
             let src = addr::cluster_base(3) + 0x2000;
             let dst = addr::cluster_base(0) + 0x4000;

@@ -328,8 +328,13 @@ pub fn run_collective_with_order(
 ) -> Result<CollectiveResult> {
     let n = ch.cfg.n_clusters();
     let windows = collective_windows(n);
-    let mut cfg = CollCfg::new(op, algo, bytes);
-    cfg.order = order;
+    // Validated construction: a bad ring order or payload errors here,
+    // before any DMA program or simulator state exists.
+    let mut b = CollCfg::builder(op, algo, bytes);
+    if let Some(o) = order {
+        b = b.order(o);
+    }
+    let cfg = b.build(n)?;
     let mut built = collective::build(&cfg, &windows)?;
     let elems = bytes / 8;
     // Seed: all-reduce/reduce-scatter sum every rank's buffer; all-gather
@@ -488,6 +493,7 @@ pub fn run_scripts(
 mod tests {
     use super::*;
     use crate::manticore::chiplet::ChipletCfg;
+    use crate::sim::EngineOpts;
 
     #[test]
     fn conv_cfg_paper_numbers() {
@@ -589,8 +595,7 @@ mod tests {
     #[test]
     fn sharded_ring_allreduce_is_correct() {
         let mut cfg = ChipletCfg::small();
-        cfg.threads = 2;
-        cfg.epoch = 8;
+        cfg.engine = EngineOpts::sharded(2, 8);
         let mut ch = Chiplet::new(cfg);
         let res =
             run_collective(&mut ch, CollOp::AllReduce, Algo::Ring, 16 * 1024, 1_000_000).unwrap();

@@ -15,7 +15,7 @@
 //! on [`Shard::add`]). The run-time surface (advance, sleep mode,
 //! observability) is uniform and lives on the methods below.
 
-use crate::sim::{Component, Cycle, DomainId, Engine, ShardedEngine};
+use crate::sim::{Component, Cycle, DomainId, Engine, Ps, ShardedEngine};
 
 /// Which engine drives a built system: the single component arena, or the
 /// sharded epoch-exchange engine.
@@ -56,6 +56,48 @@ impl Arena {
                 unsafe {
                     eng.shard(0).add_boxed(c);
                 }
+            }
+        }
+    }
+
+    /// The base (1 GHz) clock domain of `shard` — the single arena's
+    /// only built-in domain when `threads = 0` (the shard index is
+    /// ignored there).
+    pub fn base_domain(&mut self, shard: usize) -> DomainId {
+        match self {
+            Arena::Single { domain, .. } => *domain,
+            Arena::Sharded { eng } => eng.shard(shard).domain(),
+        }
+    }
+
+    /// Add an extra clock domain to `shard` (ignored in single-arena
+    /// mode: the domain joins the one engine). Must be called before the
+    /// simulation first advances. The topology grammar uses this for
+    /// per-template clock islands behind CDCs.
+    pub fn add_clock(&mut self, shard: usize, name: &str, period_ps: Ps) -> DomainId {
+        match self {
+            Arena::Single { engine, .. } => engine.add_domain(name, period_ps),
+            Arena::Sharded { eng } => eng.shard(shard).add_domain(name, period_ps),
+        }
+    }
+
+    /// Register a component in a specific shard and clock domain. The
+    /// `domain` must belong to that shard's engine (`Arena::base_domain`
+    /// / `Arena::add_clock` with the same shard index); in single-arena
+    /// mode the shard index is ignored.
+    ///
+    /// # Safety
+    ///
+    /// Same confinement obligation as [`Shard::add`]: in sharded mode
+    /// every bundle connecting `c` to components of other shards must
+    /// have been cut with `protocol::exchange` relays.
+    pub unsafe fn add_in(&mut self, shard: usize, domain: DomainId, c: Box<dyn Component>) {
+        match self {
+            Arena::Single { engine, .. } => {
+                engine.add_boxed(domain, c);
+            }
+            Arena::Sharded { eng } => {
+                eng.shard(shard).add_boxed_in(domain, c);
             }
         }
     }
@@ -125,7 +167,7 @@ impl Arena {
     /// between exchanges, so idle topologies reach zero.
     pub fn awake_components(&self) -> usize {
         match self {
-            Arena::Single { engine, domain } => engine.awake_components(*domain),
+            Arena::Single { engine, .. } => engine.awake_components_all(),
             Arena::Sharded { eng } => eng.awake_components(),
         }
     }

@@ -354,6 +354,14 @@ impl Engine {
         self.slots.iter().filter(|s| s.domain == d && !s.asleep).count()
     }
 
+    /// Number of currently-awake components across every domain of this
+    /// engine. Same exactness argument as [`Engine::awake_components`];
+    /// multi-clock topologies (the topology grammar's CDC islands) need
+    /// the whole-arena view.
+    pub fn awake_components_all(&self) -> usize {
+        self.slots.iter().filter(|s| !s.asleep).count()
+    }
+
     fn drain_wakes(&mut self) {
         if !self.wake.has_pending() {
             return;

@@ -4,6 +4,7 @@
 
 pub mod arena;
 pub mod engine;
+pub mod opts;
 pub mod prop;
 pub mod rng;
 pub mod shard;
@@ -13,6 +14,7 @@ pub use arena::Arena;
 pub use engine::{
     shared, Activity, Component, ComponentId, Cycle, DomainId, Engine, Ps, Shared, WakeSet,
 };
+pub use opts::EngineOpts;
 pub use prop::{prop_check, prop_replay, Gen};
 pub use rng::SplitMix64;
 pub use shard::{

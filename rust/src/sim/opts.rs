@@ -1,0 +1,129 @@
+//! Shared engine options: the `threads` / `epoch` / `full_scan` triple
+//! that used to be duplicated (fields, doc-comments, and CLI plumbing)
+//! on `coordinator::SimCfg` and `manticore::ChipletCfg`. Both stacks —
+//! and the recursive topology grammar (`coordinator::topology`) — now
+//! embed one [`EngineOpts`] and share a single CLI parsing path
+//! ([`EngineOpts::apply_cli`]); the config-file path lives next to the
+//! TOML layer (`coordinator::config`).
+
+use std::collections::HashMap;
+
+use crate::ensure;
+use crate::errors::{Context, Result};
+use crate::sim::shard::auto_threads;
+use crate::sim::Cycle;
+
+/// Which engine drives a simulation, and in which mode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineOpts {
+    /// Worker threads for the sharded engine. `Some(0)` = the
+    /// single-arena engine; `Some(N >= 1)` = the epoch-exchange sharded
+    /// engine with `N` worker threads — results are bit-identical for
+    /// every `N >= 1` because the shard structure is independent of the
+    /// thread count. `None` = unset: library callers get the
+    /// single-arena engine ([`EngineOpts::worker_threads`] resolves to
+    /// 0), while the CLI auto-picks the host core count for batched
+    /// workloads (`--threads 0` stays the explicit single-arena escape
+    /// hatch).
+    pub threads: Option<usize>,
+    /// Exchange epoch in cycles (sharded mode only): cut bundles gain
+    /// this much latency and two epochs of buffering.
+    pub epoch: Cycle,
+    /// Disable the engine's sleep/wake tracking: tick every component on
+    /// every cycle (the pre-engine behaviour). Kept as an A/B oracle —
+    /// results must be bit-identical to event mode.
+    pub full_scan: bool,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts { threads: None, epoch: 8, full_scan: false }
+    }
+}
+
+impl EngineOpts {
+    /// The worker-thread count a builder should hand to `Arena::new`:
+    /// unset resolves to the single-arena engine.
+    pub fn worker_threads(&self) -> usize {
+        self.threads.unwrap_or(0)
+    }
+
+    /// Explicit sharded options (tests and benches mostly).
+    pub fn sharded(threads: usize, epoch: Cycle) -> Self {
+        EngineOpts { threads: Some(threads), epoch, full_scan: false }
+    }
+
+    /// Apply the shared CLI flags (`--threads N`, `--epoch E`,
+    /// `--full-scan`) on top of whatever the config file set. With
+    /// `auto_threads_if_unset`, a thread count that is still unset after
+    /// both layers resolves to the host core count ([`auto_threads`]) —
+    /// batched workloads opt in, paper-comparable single-arena runs
+    /// don't.
+    pub fn apply_cli(
+        &mut self,
+        flags: &HashMap<String, String>,
+        auto_threads_if_unset: bool,
+    ) -> Result<()> {
+        if flags.contains_key("full-scan") {
+            self.full_scan = true;
+        }
+        if let Some(t) = flags.get("threads") {
+            self.threads = Some(t.parse().context("--threads must be a non-negative integer")?);
+        } else if self.threads.is_none() && auto_threads_if_unset {
+            self.threads = Some(auto_threads());
+        }
+        if let Some(e) = flags.get("epoch") {
+            let e: Cycle = e.parse().context("--epoch must be a positive integer")?;
+            ensure!(e >= 1, "--epoch must be at least 1");
+            self.epoch = e;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags(pairs: &[(&str, &str)]) -> HashMap<String, String> {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn defaults_resolve_to_single_arena() {
+        let opts = EngineOpts::default();
+        assert_eq!(opts.worker_threads(), 0);
+        assert_eq!(opts.epoch, 8);
+        assert!(!opts.full_scan);
+    }
+
+    #[test]
+    fn cli_flags_override_config() {
+        let mut opts = EngineOpts::sharded(2, 4);
+        opts.apply_cli(&flags(&[("threads", "3"), ("epoch", "16"), ("full-scan", "true")]), true)
+            .unwrap();
+        assert_eq!(opts.threads, Some(3));
+        assert_eq!(opts.epoch, 16);
+        assert!(opts.full_scan);
+    }
+
+    #[test]
+    fn unset_threads_auto_pick_is_opt_in() {
+        let mut opts = EngineOpts::default();
+        opts.apply_cli(&flags(&[]), false).unwrap();
+        assert_eq!(opts.threads, None, "non-batched workloads stay single-arena");
+        opts.apply_cli(&flags(&[]), true).unwrap();
+        assert!(opts.threads.is_some_and(|t| t >= 1), "batched workloads auto-pick");
+        // An explicit 0 survives auto-pick: the escape hatch.
+        let mut opts = EngineOpts { threads: Some(0), ..EngineOpts::default() };
+        opts.apply_cli(&flags(&[]), true).unwrap();
+        assert_eq!(opts.threads, Some(0));
+    }
+
+    #[test]
+    fn bad_flag_values_error() {
+        let mut opts = EngineOpts::default();
+        assert!(opts.apply_cli(&flags(&[("threads", "lots")]), true).is_err());
+        assert!(opts.apply_cli(&flags(&[("epoch", "0")]), true).is_err());
+    }
+}

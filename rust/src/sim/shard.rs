@@ -256,16 +256,30 @@ pub fn auto_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// One shard: a private engine plus its single clock domain. All
-/// components registered here tick on that clock; their channel graphs
-/// must stay confined to this shard (cross-shard traffic goes through
-/// exchange queues).
+/// One shard: a private engine plus its base clock domain. Components
+/// registered with [`Shard::add`] tick on that clock; extra clock
+/// domains for CDC islands can be added with [`Shard::add_domain`] (the
+/// worker advances the shard's whole edge calendar, so every domain
+/// keeps its rate). All component channel graphs must stay confined to
+/// this shard (cross-shard traffic goes through exchange queues).
 pub struct Shard {
     engine: Engine,
     domain: DomainId,
 }
 
 impl Shard {
+    /// The shard's base clock domain.
+    pub fn domain(&self) -> DomainId {
+        self.domain
+    }
+
+    /// Add an extra clock domain to this shard's private engine. Must be
+    /// called before the sharded engine first advances (new domains
+    /// start their edge schedule at time zero).
+    pub fn add_domain(&mut self, name: impl Into<String>, period_ps: crate::sim::Ps) -> DomainId {
+        self.engine.add_domain(name, period_ps)
+    }
+
     /// Register a component in this shard.
     ///
     /// # Safety
@@ -294,12 +308,23 @@ impl Shard {
         self.engine.add_boxed(self.domain, c)
     }
 
+    /// Register a component in a specific clock domain of this shard
+    /// (one returned by [`Shard::add_domain`], or the base domain).
+    ///
+    /// # Safety
+    ///
+    /// Same confinement obligation as [`Shard::add`].
+    pub unsafe fn add_boxed_in(&mut self, domain: DomainId, c: Box<dyn Component>) -> ComponentId {
+        self.engine.add_boxed(domain, c)
+    }
+
     pub fn component_count(&self) -> usize {
         self.engine.component_count()
     }
 
+    /// Currently-awake components across every domain of this shard.
     pub fn awake_components(&self) -> usize {
-        self.engine.awake_components(self.domain)
+        self.engine.awake_components_all()
     }
 }
 

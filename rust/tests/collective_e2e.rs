@@ -11,16 +11,12 @@
 use noc::collective::{Algo, CollOp};
 use noc::manticore::chiplet::{determinism_fingerprint, Chiplet, ChipletCfg};
 use noc::manticore::workload::run_collective;
+use noc::sim::EngineOpts;
 
 /// 8 clusters ([2, 2, 2]), the acceptance configuration.
 fn cfg8(threads: usize, full_scan: bool) -> ChipletCfg {
-    ChipletCfg {
-        fanout: vec![2, 2, 2],
-        threads,
-        epoch: 8,
-        full_scan,
-        ..ChipletCfg::full()
-    }
+    let engine = EngineOpts { threads: Some(threads), epoch: 8, full_scan };
+    ChipletCfg { fanout: vec![2, 2, 2], engine, ..ChipletCfg::full() }
 }
 
 fn allreduce_fp(threads: usize, full_scan: bool, algo: Algo) -> String {

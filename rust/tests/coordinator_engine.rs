@@ -12,7 +12,7 @@ use noc::coordinator::{determinism_fingerprint, SimCfg, System};
 fn fingerprints(text: &str) -> (String, String) {
     let run = |full_scan: bool| {
         let mut cfg = SimCfg::from_str_toml(text).expect("config");
-        cfg.full_scan = full_scan;
+        cfg.engine.full_scan = full_scan;
         let mut sys = System::build(&cfg).expect("build");
         assert_eq!(sys.full_scan(), full_scan);
         let done = sys.run(cfg.cycles);
@@ -150,9 +150,9 @@ size = 0x800
 /// Build and run `text` on the sharded engine and return the fingerprint.
 fn sharded_fp(text: &str, threads: usize, full_scan: bool) -> String {
     let mut cfg = SimCfg::from_str_toml(text).expect("config");
-    cfg.threads = Some(threads);
-    cfg.epoch = 8;
-    cfg.full_scan = full_scan;
+    cfg.engine.threads = Some(threads);
+    cfg.engine.epoch = 8;
+    cfg.engine.full_scan = full_scan;
     let mut sys = System::build(&cfg).expect("build");
     assert_eq!(sys.full_scan(), full_scan);
     assert_eq!(sys.threads(), threads);
@@ -190,7 +190,7 @@ fn sharded_event_matches_sharded_full_scan() {
 #[test]
 fn drained_event_system_goes_to_sleep() {
     let mut cfg = SimCfg::from_str_toml(MULTI).unwrap();
-    cfg.full_scan = false;
+    cfg.engine.full_scan = false;
     let mut sys = System::build(&cfg).unwrap();
     assert!(sys.run(cfg.cycles));
     // Give post-completion wakes a chance to settle, then the whole

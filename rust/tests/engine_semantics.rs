@@ -207,7 +207,7 @@ fn blocked_producer_woken_by_pop() {
 
 fn run_conv(full_scan: bool) -> (u64, u64, u64, Vec<u64>) {
     let mut cfg = ChipletCfg::small();
-    cfg.full_scan = full_scan;
+    cfg.engine.full_scan = full_scan;
     let n = cfg.n_clusters();
     let mut ch = Chiplet::new(cfg);
     let conv = ConvCfg { wi: 8, di: 8, k: 8, f: 3, p: 1, s: 1 };
@@ -235,7 +235,7 @@ fn full_system_determinism_across_runs() {
 fn core_traffic_stats_identical_across_engine_modes() {
     let run = |full_scan: bool| {
         let mut cfg = ChipletCfg::small();
-        cfg.full_scan = full_scan;
+        cfg.engine.full_scan = full_scan;
         let mut ch = Chiplet::new(cfg);
         ch.clusters[0].cores.borrow_mut().set_cfg(noc::traffic::gen::RwGenCfg {
             pattern: noc::traffic::gen::AddrPattern::Uniform {
@@ -368,9 +368,7 @@ fn cut_channel_backpressure_across_epoch_boundary() {
 fn sharded_chiplet_fp(threads: usize, full_scan: bool) -> String {
     use noc::manticore::cluster::addr;
     let mut cfg = ChipletCfg::small();
-    cfg.threads = threads;
-    cfg.epoch = 4;
-    cfg.full_scan = full_scan;
+    cfg.engine = noc::sim::EngineOpts { threads: Some(threads), epoch: 4, full_scan };
     let mut ch = Chiplet::new(cfg);
     ch.clusters[0].cores.borrow_mut().set_cfg(noc::traffic::gen::RwGenCfg {
         pattern: noc::traffic::gen::AddrPattern::Uniform {

@@ -1,0 +1,496 @@
+//! Acceptance tests for the recursive topology grammar
+//! (`coordinator::topology`):
+//!
+//! * a flat `[sim]` config and its single-template grammar rewrite
+//!   produce bit-identical determinism fingerprints — single-arena (both
+//!   engine modes) and sharded (every thread count);
+//! * the shipped `examples/topologies/` presets build, run, and
+//!   fingerprint bit-identically across `--threads {1, 2, 4}` and across
+//!   the event/full-scan engine modes;
+//! * a three-level heterogeneous tree routes traffic down and up through
+//!   the auto-inserted width/clock/ID converter trunks to completion;
+//! * every malformed grammar is a typed `Err` naming the offender, never
+//!   a panic from deeper layers.
+
+use noc::coordinator::{determinism_fingerprint, SimCfg, System, TopoCfg};
+use noc::sim::Component;
+
+/// Fingerprint a flat config under the given engine options.
+fn flat_fp(text: &str, threads: Option<usize>, full_scan: bool) -> String {
+    let mut cfg = SimCfg::from_str_toml(text).expect("flat config");
+    cfg.engine.threads = threads;
+    cfg.engine.full_scan = full_scan;
+    let mut sys = System::build(&cfg).expect("flat build");
+    sys.run(cfg.cycles);
+    assert!(sys.check_protocol().is_empty(), "flat protocol clean");
+    determinism_fingerprint(&sys)
+}
+
+/// Fingerprint a grammar config under the given engine options, with an
+/// optional cycle-budget override (presets declare long windows).
+fn topo_fp(text: &str, threads: Option<usize>, full_scan: bool, cycles: Option<u64>) -> String {
+    let mut cfg = TopoCfg::from_str_toml(text).expect("topology config");
+    cfg.engine.threads = threads;
+    cfg.engine.full_scan = full_scan;
+    let mut sys = cfg.build().expect("topology build");
+    sys.run(cycles.unwrap_or(cfg.cycles));
+    assert!(sys.check_protocol().is_empty(), "topology protocol clean");
+    determinism_fingerprint(&sys)
+}
+
+/// The extra thread count CI injects (`NOC_TEST_THREADS`), if any.
+fn ci_threads() -> Option<usize> {
+    std::env::var("NOC_TEST_THREADS").ok()?.parse().ok().filter(|&n| n >= 1)
+}
+
+// ---------------------------------------------------------------------------
+// Flat config vs grammar rewrite
+// ---------------------------------------------------------------------------
+
+/// Three masters over all patterns, three endpoint kinds — and its
+/// mechanical rewrite as one root template. Same names, same declaration
+/// order, so the walks must produce identical systems.
+const FLAT: &str = r#"
+[sim]
+cycles = 8000
+data_bits = 64
+id_bits = 4
+
+[[master]]
+name = "gen0"
+pattern = "uniform"
+base = 0x0
+span = 0x10000
+reads = 0.6
+beats = 4
+total = 300
+max_outstanding = 4
+ids = 4
+
+[[master]]
+name = "gen1"
+pattern = "sequential"
+base = 0x10000
+span = 0x10000
+reads = 0.5
+total = 300
+
+[[master]]
+name = "gen2"
+pattern = "hotspot"
+base = 0x20000
+span = 0x10000
+hot_span = 0x1000
+total = 300
+ids = 2
+
+[[slave]]
+name = "mem0"
+kind = "perfect"
+base = 0x0
+size = 0x10000
+
+[[slave]]
+name = "mem1"
+kind = "simplex"
+base = 0x10000
+size = 0x10000
+
+[[slave]]
+name = "mem2"
+kind = "duplex"
+banks = 4
+base = 0x20000
+size = 0x10000
+"#;
+
+const FLAT_AS_GRAMMAR: &str = r#"
+[topology]
+root = "flat"
+cycles = 8000
+
+[[template]]
+name = "flat"
+data_bits = 64
+id_bits = 4
+
+[[template.master]]
+name = "gen0"
+pattern = "uniform"
+base = 0x0
+span = 0x10000
+reads = 0.6
+beats = 4
+total = 300
+max_outstanding = 4
+ids = 4
+
+[[template.master]]
+name = "gen1"
+pattern = "sequential"
+base = 0x10000
+span = 0x10000
+reads = 0.5
+total = 300
+
+[[template.master]]
+name = "gen2"
+pattern = "hotspot"
+base = 0x20000
+span = 0x10000
+hot_span = 0x1000
+total = 300
+ids = 2
+
+[[template.slave]]
+name = "mem0"
+kind = "perfect"
+base = 0x0
+size = 0x10000
+
+[[template.slave]]
+name = "mem1"
+kind = "simplex"
+base = 0x10000
+size = 0x10000
+
+[[template.slave]]
+name = "mem2"
+kind = "duplex"
+banks = 4
+base = 0x20000
+size = 0x10000
+"#;
+
+#[test]
+fn grammar_rewrite_matches_flat_config_single_arena() {
+    let flat = flat_fp(FLAT, None, false);
+    assert_eq!(flat, topo_fp(FLAT_AS_GRAMMAR, None, false, None), "event mode");
+    assert_eq!(flat, flat_fp(FLAT, None, true), "flat event vs full-scan");
+    assert_eq!(flat, topo_fp(FLAT_AS_GRAMMAR, None, true, None), "full-scan mode");
+}
+
+#[test]
+fn grammar_rewrite_matches_flat_config_sharded() {
+    // Sharded fingerprints legitimately differ from single-arena ones
+    // (cut bundles add epoch latency), but flat and grammar must agree
+    // at every thread count.
+    let base = flat_fp(FLAT, Some(1), false);
+    for t in [1usize, 2] {
+        assert_eq!(base, flat_fp(FLAT, Some(t), false), "flat threads={t}");
+        assert_eq!(base, topo_fp(FLAT_AS_GRAMMAR, Some(t), false, None), "grammar threads={t}");
+    }
+    assert_eq!(base, topo_fp(FLAT_AS_GRAMMAR, Some(2), true, None), "sharded full-scan");
+    if let Some(n) = ci_threads() {
+        assert_eq!(base, topo_fp(FLAT_AS_GRAMMAR, Some(n), false, None), "threads={n}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shipped presets
+// ---------------------------------------------------------------------------
+
+fn preset(name: &str) -> String {
+    let path = format!("{}/examples/topologies/{name}.toml", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {path}: {e}"))
+}
+
+#[test]
+fn presets_fingerprint_identically_across_thread_counts() {
+    // A shortened window keeps the matrix cheap; fingerprints only need
+    // the same cycle budget, not drained traffic.
+    let cycles = Some(3_000);
+    for name in ["coolidge", "biglittle", "hbm_spine"] {
+        let text = preset(name);
+        let base = topo_fp(&text, Some(1), false, cycles);
+        for t in [2usize, 4] {
+            assert_eq!(base, topo_fp(&text, Some(t), false, cycles), "{name} threads={t}");
+        }
+        assert_eq!(base, topo_fp(&text, Some(2), true, cycles), "{name} sharded full-scan");
+        let single = topo_fp(&text, Some(0), false, cycles);
+        assert_eq!(single, topo_fp(&text, Some(0), true, cycles), "{name} single-arena modes");
+        if let Some(n) = ci_threads() {
+            assert_eq!(base, topo_fp(&text, Some(n), false, cycles), "{name} threads={n}");
+        }
+    }
+}
+
+#[test]
+fn presets_drain_and_stay_protocol_clean() {
+    for name in ["coolidge", "biglittle", "hbm_spine"] {
+        let cfg = TopoCfg::from_str_toml(&preset(name)).expect("preset parses");
+        let mut sys = cfg.build().expect("preset builds");
+        assert!(sys.run(cfg.cycles), "{name}: traffic must drain within its declared window");
+        assert!(sys.check_protocol().is_empty(), "{name}: protocol clean");
+        for tap in &sys.slave_taps {
+            assert!(tap.data_bytes() > 0, "{name}: slave {} saw no traffic", tap.name);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Heterogeneous three-level tree
+// ---------------------------------------------------------------------------
+
+/// 128-bit root over two 64-bit mid subnetworks over two 32-bit leaves
+/// each, with three distinct clock periods: every trunk carries a width
+/// converter, a CDC, and an ID stage. Root hosts reach down two levels
+/// into the mids' L2s; leaf writers reach up two levels into the root
+/// DDR.
+const DEEP: &str = r#"
+[topology]
+root = "root"
+cycles = 40000
+
+[[template]]
+name = "leaf"
+data_bits = 32
+id_bits = 2
+clock_ps = 3000
+
+[[template.master]]
+name = "m"
+span = 0x1000
+total = 40
+ids = 2
+
+[[template.master]]
+name = "w"
+scope = "global"
+base = 0x10000
+span = 0x1000
+total = 20
+
+[[template.slave]]
+name = "ram"
+kind = "simplex"
+base = 0x0
+size = 0x1000
+
+[[template]]
+name = "mid"
+data_bits = 64
+id_bits = 3
+clock_ps = 1500
+
+[[template.child]]
+template = "leaf"
+count = 2
+
+[[template.slave]]
+name = "l2"
+base = 0x4000
+size = 0x1000
+
+[[template]]
+name = "root"
+data_bits = 128
+id_bits = 5
+
+[[template.master]]
+name = "host0"
+base = 0x4000
+span = 0x1000
+total = 30
+
+[[template.master]]
+name = "host1"
+base = 0x9000
+span = 0x1000
+total = 30
+
+[[template.child]]
+template = "mid"
+count = 2
+id_policy = "serialize"
+
+[[template.slave]]
+name = "ddr"
+kind = "duplex"
+banks = 2
+base = 0x10000
+size = 0x10000
+"#;
+
+#[test]
+fn heterogeneous_tree_routes_through_converter_trunks() {
+    let cfg = TopoCfg::from_str_toml(DEEP).expect("config");
+    let mut sys = cfg.build().expect("build");
+    assert!(sys.run(cfg.cycles), "cross-trunk traffic must complete");
+    assert!(sys.check_protocol().is_empty());
+    // 2 mids * 2 leaves * (40 local + 20 up) + 2 * 30 down.
+    let total: u64 = sys.gens.iter().map(|g| g.borrow().stats.completed).sum();
+    assert_eq!(total, 300);
+    for g in &sys.gens {
+        let g = g.borrow();
+        assert_eq!(g.stats.data_errors, 0, "{}: no DECERRs on mapped traffic", g.name());
+    }
+    // Down-trunk traffic lands in the mids, up-trunk traffic on the DDR.
+    for tap in &sys.slave_taps {
+        assert!(tap.data_bytes() > 0, "slave {} saw no traffic", tap.name);
+    }
+}
+
+#[test]
+fn heterogeneous_tree_fingerprints_identically_when_sharded() {
+    let base = topo_fp(DEEP, Some(1), false, None);
+    assert_eq!(base, topo_fp(DEEP, Some(2), false, None), "threads=2");
+    assert_eq!(base, topo_fp(DEEP, Some(2), true, None), "full-scan");
+}
+
+// ---------------------------------------------------------------------------
+// Error paths: typed Errs, never panics
+// ---------------------------------------------------------------------------
+
+/// Build (or fail to) from text, returning the error string.
+fn build_err(text: &str) -> String {
+    let cfg = TopoCfg::from_str_toml(text).expect("these configs parse");
+    cfg.build().expect_err("config must be rejected").to_string()
+}
+
+#[test]
+fn unknown_template_references_are_errors() {
+    let err = build_err(
+        r#"
+[topology]
+root = "nope"
+[[template]]
+name = "a"
+[[template.master]]
+name = "m"
+[[template.slave]]
+name = "s"
+"#,
+    );
+    assert!(err.contains("unknown template \"nope\""), "{err}");
+
+    let err = build_err(
+        r#"
+[topology]
+root = "a"
+[[template]]
+name = "a"
+[[template.master]]
+name = "m"
+[[template.slave]]
+name = "s"
+[[template.child]]
+template = "ghost"
+"#,
+    );
+    assert!(err.contains("child[0]") && err.contains("\"ghost\""), "{err}");
+}
+
+#[test]
+fn instantiation_cycles_are_errors() {
+    let err = build_err(
+        r#"
+[topology]
+root = "a"
+[[template]]
+name = "a"
+[[template.master]]
+name = "m"
+[[template.child]]
+template = "b"
+[[template]]
+name = "b"
+[[template.slave]]
+name = "s"
+[[template.child]]
+template = "a"
+"#,
+    );
+    assert!(err.contains("cycle"), "{err}");
+    assert!(err.contains("a -> b -> a") || err.contains("b -> a -> b"), "{err}");
+}
+
+#[test]
+fn overlapping_instance_windows_are_errors() {
+    // stride < window: consecutive stamped instances collide.
+    let err = build_err(
+        r#"
+[topology]
+root = "top"
+[[template]]
+name = "sub"
+[[template.master]]
+name = "m"
+span = 0x2000
+[[template.slave]]
+name = "ram"
+base = 0x0
+size = 0x2000
+[[template]]
+name = "top"
+[[template.child]]
+template = "sub"
+count = 2
+stride = 0x1000
+"#,
+    );
+    assert!(err.contains("overlap"), "{err}");
+    assert!(err.contains("sub0") && err.contains("sub1"), "{err}");
+
+    // A slave under a stamped child window collides too.
+    let err = build_err(
+        r#"
+[topology]
+root = "top"
+[[template]]
+name = "sub"
+[[template.master]]
+name = "m"
+span = 0x2000
+[[template.slave]]
+name = "ram"
+base = 0x0
+size = 0x2000
+[[template]]
+name = "top"
+[[template.child]]
+template = "sub"
+[[template.slave]]
+name = "shadow"
+base = 0x1000
+size = 0x1000
+"#,
+    );
+    assert!(err.contains("overlap"), "{err}");
+}
+
+#[test]
+fn disabled_converters_make_mismatches_errors() {
+    let base = r#"
+[topology]
+root = "top"
+[[template]]
+name = "sub"
+data_bits = DB
+id_bits = 2
+CLOCK
+[[template.master]]
+name = "m"
+span = 0x1000
+[[template.slave]]
+name = "ram"
+base = 0x0
+size = 0x1000
+[[template]]
+name = "top"
+data_bits = 64
+[[template.child]]
+template = "sub"
+converters = false
+"#;
+    let err = build_err(&base.replace("DB", "32").replace("CLOCK", ""));
+    assert!(err.contains("width mismatch") && err.contains("converters disabled"), "{err}");
+
+    let err = build_err(&base.replace("DB", "64").replace("CLOCK", "clock_ps = 2000"));
+    assert!(err.contains("clock mismatch") && err.contains("converters disabled"), "{err}");
+
+    // Converters enabled but no integer width ratio: still an error.
+    let bad = base.replace("DB", "48").replace("CLOCK", "").replace("converters = false", "");
+    let err = build_err(&bad);
+    assert!(err.contains("not a multiple"), "{err}");
+}

@@ -31,6 +31,11 @@ TRACKED = [
     ("BENCH_tab2_manticore.json", "parallel_efficiency", 0.35),
     ("BENCH_coordinator_engine.json", "event_cycles_per_sec"),
     ("BENCH_coordinator_engine.json", "speedup"),
+    # Aggregate throughput over the examples/topologies/ presets: the
+    # grammar-built systems (converter trunks included). Quick-mode runs
+    # are sub-second wall clocks on shared runners, so this gets the
+    # looser gate (cf. parallel_efficiency above).
+    ("BENCH_coordinator_engine.json", "topology_presets_cycles_per_sec", 0.35),
     # Simulated (deterministic) collective bandwidth: regressions here are
     # real scheduling/fabric changes, not runner noise.
     ("BENCH_collective.json", "allreduce_bytes_per_cycle"),
