@@ -114,9 +114,17 @@ fn main() {
     report.metric("reduce_scatter_bytes_per_cycle", rs.bytes_per_cycle);
 
     section("sharded engine (4 threads): same ring all-reduce");
-    let sharded = run(CollOp::AllReduce, Algo::Ring, bytes, 4);
+    let mut ch = chiplet(4);
+    let res = run_collective(&mut ch, CollOp::AllReduce, Algo::Ring, bytes, BUDGET)
+        .expect("collective builds");
+    let sharded = checked(CollOp::AllReduce, Algo::Ring, res);
     show("allreduce ring --threads 4", &sharded);
     report.metric("sharded_allreduce_cycles", sharded.cycles as f64);
+    // The per-shard cycle profiler's view of the same run: how much of
+    // the workers' wall clock went to barrier stalls and exchanges.
+    let prof = ch.shard_profile().expect("sharded engine profiles");
+    report.metric("sharded_allreduce_stall_frac", prof.exchange_stall_frac());
+    report.metric("sharded_allreduce_exchanges", prof.exchanges as f64);
 
     // Acceptance gate (deterministic — simulated cycles, not wall clock):
     // ring all-reduce sustains >= 50% of the ideal collective bound.

@@ -108,6 +108,28 @@ fn main() {
             "event engine must not be slower than the full scan ({speedup:.2}x)"
         );
     }
+    // Sharded engine over the same topology: each master island in its
+    // own shard, crossbar + endpoints in shard 0. Recorded alongside the
+    // engine-mode speedup so the profiler's stall fraction is visible
+    // for the coordinator stack too (not trend-gated here; the gated
+    // copy lives in BENCH_tab2_manticore.json).
+    let mut cfg = SimCfg::from_str_toml(&text).expect("config");
+    cfg.engine.threads = Some(4);
+    cfg.engine.epoch = 8;
+    let mut sys = System::build(&cfg).expect("build");
+    let t0 = Instant::now();
+    sys.run_for(cfg.cycles);
+    let sharded_wall = t0.elapsed().as_secs_f64();
+    assert!(sys.check_protocol().is_empty(), "sharded protocol must stay clean");
+    let prof = sys.shard_profile().expect("sharded engine profiles");
+    println!(
+        "sharded engine (4 threads): {:>10.0} cycles/s  (stall frac {:.3})",
+        cycles as f64 / sharded_wall,
+        prof.exchange_stall_frac()
+    );
+    report.metric("sharded_cycles_per_sec", cycles as f64 / sharded_wall);
+    report.metric("sharded_stall_frac", prof.exchange_stall_frac());
+
     // Topology-grammar presets (`examples/topologies/`): parse, build,
     // and run each heterogeneous-SoC example on the single-arena event
     // engine; CI tracks the aggregate throughput so grammar-built systems

@@ -13,12 +13,13 @@
 use std::time::Instant;
 
 use noc::bench_harness::{iters, quick, section, Report};
+use noc::coordinator::Json;
 use noc::manticore::chiplet::{determinism_fingerprint, Chiplet, ChipletCfg};
 use noc::manticore::perf::render_table2;
 use noc::manticore::workload::{
     conv_scripts, run_scripts, xsection_submit, ConvCfg, ConvVariant, WorkloadResult, CONV_SMALL,
 };
-use noc::sim::EngineOpts;
+use noc::sim::{EngineOpts, EpochPolicy, ShardProfileReport};
 
 fn bench_fanout() -> Vec<usize> {
     if quick() {
@@ -48,18 +49,90 @@ fn conv_run(full_scan: bool, variant: ConvVariant, budget: u64) -> (WorkloadResu
     (res, t0.elapsed().as_secs_f64())
 }
 
+/// Fanout for the sharded sections: enough clusters (= shards) that the
+/// CI thread count (`NOC_BENCH_THREADS=8`) still has real work per
+/// worker even in quick mode.
+fn shard_fanout() -> Vec<usize> {
+    if quick() {
+        vec![4, 2] // 8 clusters = 9 shards
+    } else {
+        vec![4, 4] // 16 clusters = 17 shards
+    }
+}
+
 /// The cross-section workload on the sharded engine: every cluster
 /// DMA-reads from and DMA-writes to a neighbour for a fixed window,
-/// pre-submitted so the whole run is one parallel batch. Returns the
-/// determinism fingerprint and the wall seconds.
-fn sharded_xsection(threads: usize, cycles: u64) -> (String, f64) {
-    let engine = EngineOpts::sharded(threads, 16);
-    let cfg = ChipletCfg { fanout: bench_fanout(), engine, ..ChipletCfg::full() };
+/// pre-submitted so the whole run is one parallel batch. Runs `total`
+/// cycles (>= the traffic `window` — the excess is an idle tail the
+/// adaptive policy sprints through). Returns the determinism
+/// fingerprint, the wall seconds, and the accumulated shard profile.
+fn sharded_xsection(
+    threads: usize,
+    window: u64,
+    total: u64,
+    policy: EpochPolicy,
+) -> (String, f64, ShardProfileReport) {
+    let engine = EngineOpts { policy, ..EngineOpts::sharded(threads, 16) };
+    let cfg = ChipletCfg { fanout: shard_fanout(), engine, ..ChipletCfg::full() };
     let mut ch = Chiplet::new(cfg);
-    xsection_submit(&ch, cycles);
+    xsection_submit(&ch, window);
     let t0 = Instant::now();
-    ch.run(cycles);
-    (determinism_fingerprint(&ch), t0.elapsed().as_secs_f64())
+    ch.run(total);
+    let wall = t0.elapsed().as_secs_f64();
+    let prof = ch.shard_profile().expect("sharded engine profiles");
+    (determinism_fingerprint(&ch), wall, prof)
+}
+
+/// Write the per-shard cycle profile as its own CI artifact
+/// (`BENCH_tab2_shard_profile.json`): per-shard measured run time and
+/// awake-integral (the LPT placement weights), per-worker run/stall/
+/// exchange split, and the run-level counters.
+fn write_shard_profile(prof: &ShardProfileReport, threads: usize) {
+    let shards: Vec<Json> = prof
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            Json::Obj(vec![
+                ("shard".into(), Json::Num(i as f64)),
+                ("run_ns".into(), Json::Num(s.run_ns as f64)),
+                ("windows".into(), Json::Num(s.windows as f64)),
+                ("awake_integral".into(), Json::Num(s.awake_integral as f64)),
+            ])
+        })
+        .collect();
+    let workers: Vec<Json> = prof
+        .workers
+        .iter()
+        .enumerate()
+        .map(|(i, w)| {
+            Json::Obj(vec![
+                ("worker".into(), Json::Num(i as f64)),
+                ("run_ns".into(), Json::Num(w.run_ns as f64)),
+                ("stall_ns".into(), Json::Num(w.stall_ns as f64)),
+                ("exchange_ns".into(), Json::Num(w.exchange_ns as f64)),
+            ])
+        })
+        .collect();
+    let obj = Json::Obj(vec![
+        ("bench".into(), Json::Str("tab2_shard_profile".into())),
+        ("threads".into(), Json::Num(threads as f64)),
+        ("runs".into(), Json::Num(prof.runs as f64)),
+        ("sprints".into(), Json::Num(prof.sprints as f64)),
+        ("exchanges".into(), Json::Num(prof.exchanges as f64)),
+        ("groups_skipped".into(), Json::Num(prof.groups_skipped as f64)),
+        ("groups_exchanged".into(), Json::Num(prof.groups_exchanged as f64)),
+        ("placements_computed".into(), Json::Num(prof.placements_computed as f64)),
+        ("exchange_stall_frac".into(), Json::Num(prof.exchange_stall_frac())),
+        ("shards".into(), Json::Arr(shards)),
+        ("workers".into(), Json::Arr(workers)),
+    ]);
+    let dir = std::env::var("NOC_BENCH_DIR").unwrap_or_else(|_| ".".into());
+    let path = std::path::PathBuf::from(dir).join("BENCH_tab2_shard_profile.json");
+    match std::fs::write(&path, obj.render() + "\n") {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
 }
 
 fn main() {
@@ -113,19 +186,20 @@ fn main() {
     report.metric("speedup", speedup);
 
     section("sharded engine: persistent pool + weighted placement (xsection load)");
-    // CI sets NOC_BENCH_THREADS=4, so the smoke artifact always carries
-    // the {1, 4}-thread pair and the parallel_efficiency trend metric.
-    // Values below 2 fall back to 4: against the built-in 1-thread run
+    // CI sets NOC_BENCH_THREADS=8, so the smoke artifact always carries
+    // the {1, 8}-thread pair and the parallel_efficiency trend metric.
+    // Values below 2 fall back to 8: against the built-in 1-thread run
     // they would make the fingerprint assert vacuous and the efficiency
     // a noise ratio of two identical measurements.
     let shard_threads = std::env::var("NOC_BENCH_THREADS")
         .ok()
         .and_then(|s| s.parse::<usize>().ok())
         .filter(|&n| n >= 2)
-        .unwrap_or(4);
+        .unwrap_or(8);
     let window = iters(100_000, 10_000);
-    let (fp1, wall1) = sharded_xsection(1, window);
-    let (fp_n, wall_n) = sharded_xsection(shard_threads, window);
+    let (fp1, wall1, _) = sharded_xsection(1, window, window, EpochPolicy::Fixed);
+    let (fp_n, wall_n, prof_n) =
+        sharded_xsection(shard_threads, window, window, EpochPolicy::Fixed);
     assert_eq!(fp1, fp_n, "sharded runs must be bit-identical across thread counts");
     let sharded_cps = window as f64 / wall_n;
     let sharded_cps_1t = window as f64 / wall1;
@@ -147,6 +221,41 @@ fn main() {
     report.metric("sharded_cycles_per_sec_1t", sharded_cps_1t);
     report.metric("sharded_threads", shard_threads as f64);
     report.metric("parallel_efficiency", parallel_efficiency);
+    // Where the wall clock went: fraction of worker time spent stalled
+    // at the epoch barrier (vs running shards / exchanging queues).
+    let stall = prof_n.exchange_stall_frac();
+    println!(
+        "exchange/barrier stall fraction: {stall:.3} ({} exchanges, {} clean groups skipped)",
+        prof_n.exchanges, prof_n.groups_skipped
+    );
+    report.metric("exchange_stall_frac", stall);
+    write_shard_profile(&prof_n, shard_threads);
+
+    section("adaptive epochs: proven-idle boundaries sprint (fixed vs adaptive)");
+    // Same traffic window plus a 3x idle tail: the fixed policy walks
+    // every boundary of the tail, the adaptive policy proves the system
+    // drained and fast-forwards. The fingerprints must stay
+    // bit-identical — only the wall clock may differ.
+    let tail_total = window * 4;
+    let (fp_f, wall_f, prof_f) =
+        sharded_xsection(shard_threads, window, tail_total, EpochPolicy::Fixed);
+    let (fp_a, wall_a, prof_a) =
+        sharded_xsection(shard_threads, window, tail_total, EpochPolicy::Adaptive);
+    assert_eq!(fp_f, fp_a, "adaptive epochs must be simulation-invisible");
+    let adaptive_epoch_speedup = wall_f / wall_a;
+    println!(
+        "fixed:    {:.3}s wall, {} exchanges, {} sprints",
+        wall_f, prof_f.exchanges, prof_f.sprints
+    );
+    println!(
+        "adaptive: {:.3}s wall, {} exchanges, {} sprints",
+        wall_a, prof_a.exchanges, prof_a.sprints
+    );
+    println!("adaptive epoch speedup on the idle tail: {adaptive_epoch_speedup:.2}x");
+    report.metric("adaptive_epoch_speedup", adaptive_epoch_speedup);
+    report.metric("adaptive_sprints", prof_a.sprints as f64);
+    report.metric("adaptive_exchanges", prof_a.exchanges as f64);
+    report.metric("fixed_exchanges", prof_f.exchanges as f64);
 
     // Relay sleep: an idle sharded chiplet must be fully asleep between
     // exchanges — the cut relays were the last permanently-awake

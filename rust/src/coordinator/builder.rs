@@ -194,14 +194,12 @@ impl System {
             cfg.data_bits,
             xbar_master_id_bits(cfg.id_bits, cfg.masters.len()),
         );
-        let epoch = cfg.engine.epoch.max(1);
         // `threads` unset = the single-arena engine (the CLI resolves
         // `None` to the host core count before building; see main.rs).
-        let threads = cfg.engine.worker_threads();
-        let mut arena = Arena::new(threads, cfg.masters.len() + 1, epoch);
-        if cfg.engine.full_scan {
-            arena.set_sleep(false);
-        }
+        // `Arena::new` applies threads/epoch/policy/full_scan itself;
+        // `epoch` stays local for the cut-relay capacities below.
+        let epoch = cfg.engine.epoch.max(1);
+        let mut arena = Arena::new(&cfg.engine, cfg.masters.len() + 1);
         let mut gens = Vec::new();
         let mut monitors = Vec::new();
 
@@ -377,6 +375,13 @@ impl System {
     /// sleep between exchanges, so a drained system reaches zero).
     pub fn awake_components(&self) -> usize {
         self.arena.awake_components()
+    }
+
+    /// The sharded engine's accumulated cycle profile — per-shard run
+    /// time and awake-integral, per-worker stall/exchange split, and the
+    /// run/sprint/exchange counters (`None` in single-arena mode).
+    pub fn shard_profile(&self) -> Option<crate::sim::ShardProfileReport> {
+        self.arena.shard_profile()
     }
 }
 

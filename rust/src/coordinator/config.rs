@@ -17,7 +17,7 @@ use std::collections::HashMap;
 
 use crate::bail;
 use crate::errors::{Context, Result};
-use crate::sim::EngineOpts;
+use crate::sim::{EngineOpts, EpochPolicy};
 
 /// A parsed value.
 #[derive(Debug, Clone, PartialEq)]
@@ -290,19 +290,24 @@ pub fn parse(text: &str) -> Result<Doc> {
 // ---------------------------------------------------------------------------
 
 impl EngineOpts {
-    /// Parse the shared engine keys (`threads`, `epoch`, `full_scan`)
-    /// out of a config table — the one doc-parsing path for both the
-    /// flat `[sim]` config and the grammar's `[topology]` section.
+    /// Parse the shared engine keys (`threads`, `epoch`, `epoch_policy`,
+    /// `full_scan`) out of a config table — the one doc-parsing path for
+    /// both the flat `[sim]` config and the grammar's `[topology]`
+    /// section. Range validation is [`EngineOpts::validate`], shared
+    /// with the CLI path.
     pub fn from_table(t: &Table, ctx: &str) -> Result<EngineOpts> {
         let defaults = EngineOpts::default();
+        let policy = match t.get_opt::<String>(ctx, "epoch_policy")? {
+            Some(s) => EpochPolicy::parse(&s).with_context(|| format!("{ctx}.epoch_policy"))?,
+            None => defaults.policy,
+        };
         let opts = EngineOpts {
             threads: t.get_opt(ctx, "threads")?,
             epoch: t.get_or(ctx, "epoch", defaults.epoch)?,
+            policy,
             full_scan: t.get_or(ctx, "full_scan", defaults.full_scan)?,
         };
-        if opts.epoch == 0 {
-            bail!("{ctx}.epoch: must be at least 1 cycle");
-        }
+        opts.validate().with_context(|| format!("{ctx}: engine options"))?;
         Ok(opts)
     }
 }
@@ -544,6 +549,26 @@ size = 0x1_0000
     fn rejects_zero_epoch() {
         let text = EXAMPLE.replace("[sim]", "[sim]\nepoch = 0");
         assert!(SimCfg::from_str_toml(&text).is_err());
+    }
+
+    #[test]
+    fn epoch_policy_key_parses_and_rejects_bad_values() {
+        use crate::sim::EpochPolicy;
+        let cfg = SimCfg::from_str_toml(EXAMPLE).unwrap();
+        assert_eq!(cfg.engine.policy, EpochPolicy::Fixed, "default is fixed");
+        let text = EXAMPLE.replace("[sim]", "[sim]\nepoch_policy = \"adaptive\"");
+        let cfg = SimCfg::from_str_toml(&text).unwrap();
+        assert_eq!(cfg.engine.policy, EpochPolicy::Adaptive);
+        let text = EXAMPLE.replace("[sim]", "[sim]\nepoch_policy = \"sometimes\"");
+        let err = SimCfg::from_str_toml(&text).unwrap_err().to_string();
+        assert!(err.contains("sim.epoch_policy"), "{err}");
+    }
+
+    #[test]
+    fn rejects_out_of_range_thread_count() {
+        let text = EXAMPLE.replace("[sim]", "[sim]\nthreads = 40000");
+        let err = SimCfg::from_str_toml(&text).unwrap_err().to_string();
+        assert!(err.contains("1024"), "{err}");
     }
 
     #[test]

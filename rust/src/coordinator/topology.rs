@@ -225,10 +225,9 @@ impl TopoCfg {
         let epoch = self.engine.epoch.max(1);
         let top_instances: usize = root_t.children.iter().map(|c| c.count).sum();
         let n_shards = 1 + root_t.masters.len() + top_instances;
-        let mut arena = Arena::new(self.engine.worker_threads(), n_shards, epoch);
-        if self.engine.full_scan {
-            arena.set_sleep(false);
-        }
+        // `Arena::new` applies threads/epoch/policy/full_scan itself;
+        // `epoch` stays local for the cut-relay capacities in the walk.
+        let arena = Arena::new(&self.engine, n_shards);
         let mut w = Walk {
             cfg: self,
             res: &res,

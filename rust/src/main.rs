@@ -300,6 +300,7 @@ fn usage() -> ! {
          \x20 tables  [--tab 1|2|3|4]      regenerate Tables 1-4\n\
          \x20 simulate --config F [--json] [--fingerprint] [--full-scan]\n\
          \x20          [--cycles N] [--threads N] [--epoch E]\n\
+         \x20          [--epoch-policy fixed|adaptive]\n\
          \x20                              run a configured topology: flat\n\
          \x20                              [[master]]/[[slave]] or recursive\n\
          \x20                              [topology] template grammar (see\n\
@@ -312,6 +313,7 @@ fn usage() -> ! {
          \x20                       conv-base|conv-stacked|conv-pipe|fc]\n\
          \x20           [--collective ring|tree] [--bytes N]\n\
          \x20           [--cycles N] [--threads N] [--epoch E]\n\
+         \x20           [--epoch-policy fixed|adaptive]\n\
          \x20                              case-study simulations (unset\n\
          \x20                              --threads: host core count for\n\
          \x20                              xsection/allreduce/broadcast,\n\

@@ -116,11 +116,10 @@ impl Chiplet {
         // Shard 0 carries the trees and endpoints; cluster i lives in
         // shard i + 1. Clusters only talk to the trees, so the shard
         // structure (and therefore the result) is independent of how
-        // many worker threads chunk the shards.
-        let mut arena = Arena::new(cfg.engine.worker_threads(), n + 1, epoch);
-        if cfg.engine.full_scan {
-            arena.set_sleep(false);
-        }
+        // many worker threads chunk the shards. `Arena::new` applies
+        // threads/epoch/policy/full_scan itself; `epoch` stays local for
+        // the cut-relay capacities below.
+        let mut arena = Arena::new(&cfg.engine, n + 1);
 
         // --- Clusters + tree leaves ---
         // Registration order mirrors the old monolithic tick order:
@@ -433,6 +432,13 @@ impl Chiplet {
     /// Total registered components.
     pub fn component_count(&self) -> usize {
         self.arena.component_count()
+    }
+
+    /// The sharded engine's accumulated cycle profile — per-shard run
+    /// time and awake-integral, per-worker stall/exchange split, and the
+    /// run/sprint/exchange counters (`None` in single-arena mode).
+    pub fn shard_profile(&self) -> Option<crate::sim::ShardProfileReport> {
+        self.arena.shard_profile()
     }
 
     /// Worker threads driving the simulation (0 = single-arena engine).

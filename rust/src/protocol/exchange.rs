@@ -35,6 +35,22 @@
 //! moves nothing. Before this, cut relays were the only
 //! permanently-awake components of a sharded topology; an idle sharded
 //! fabric now reaches zero awake components.
+//!
+//! ## Per-pair exchange groups
+//!
+//! [`BundleCut::register`] uses `ShardedEngine::add_links_waking`, which
+//! files each direction's queues under a *pair group* keyed by
+//! (producer shard, consumer shard). The relays' `ExchangeTx`/
+//! `ExchangeRx` halves mark the group dirty whenever a beat is sent or
+//! consumed, so the leader's epoch exchange walks only the groups that
+//! actually moved traffic — exchange cost scales with *active* shard
+//! pairs, not total cut channels. A clean group is skipped wholesale;
+//! nothing observable changes because skipping it delivers no beats,
+//! returns no credits, and wakes no relays — exactly what exchanging
+//! its provably-empty queues would have done. The same drained-pair
+//! bookkeeping feeds the adaptive epoch policy
+//! (`sim::opts::EpochPolicy::Adaptive`), which sprints through
+//! boundaries where every shard sleeps and every cut is drained.
 
 use std::sync::Arc;
 

@@ -15,7 +15,9 @@
 //! on [`Shard::add`]). The run-time surface (advance, sleep mode,
 //! observability) is uniform and lives on the methods below.
 
-use crate::sim::{Component, Cycle, DomainId, Engine, Ps, ShardedEngine};
+use crate::sim::{
+    Component, Cycle, DomainId, Engine, EngineOpts, Ps, ShardProfileReport, ShardedEngine,
+};
 
 /// Which engine drives a built system: the single component arena, or the
 /// sharded epoch-exchange engine.
@@ -25,16 +27,28 @@ pub enum Arena {
 }
 
 impl Arena {
-    /// `threads = 0` builds the single-arena engine (and `n_shards` /
-    /// `epoch` are ignored); `threads >= 1` builds a sharded engine with
-    /// `n_shards` shard-private engines exchanging every `epoch` cycles.
-    pub fn new(threads: usize, n_shards: usize, epoch: Cycle) -> Self {
-        if threads == 0 {
+    /// Build the engine the options ask for: `worker_threads() == 0`
+    /// gives the single-arena engine (and `n_shards` is ignored);
+    /// `>= 1` gives a sharded engine with `n_shards` shard-private
+    /// engines exchanging every `opts.epoch` cycles under `opts.policy`.
+    /// `opts.full_scan` is applied to either engine, so the builders
+    /// stop hand-wiring the same triple everywhere. Out-of-range values
+    /// were rejected at parse time (`EngineOpts::validate`); direct
+    /// callers get normalization.
+    pub fn new(opts: &EngineOpts, n_shards: usize) -> Self {
+        let threads = opts.worker_threads();
+        let mut arena = if threads == 0 {
             let (engine, domain) = Engine::single_clock();
             Arena::Single { engine, domain }
         } else {
-            Arena::Sharded { eng: ShardedEngine::new(n_shards, epoch.max(1), threads) }
+            let mut eng = ShardedEngine::new(n_shards, opts.epoch.max(1), threads);
+            eng.set_policy(opts.policy);
+            Arena::Sharded { eng }
+        };
+        if opts.full_scan {
+            arena.set_sleep(false);
         }
+        arena
     }
 
     /// Register an infrastructure component: the single arena, or shard 0
@@ -171,6 +185,15 @@ impl Arena {
             Arena::Sharded { eng } => eng.awake_components(),
         }
     }
+
+    /// The sharded engine's accumulated profile (`None` in single-arena
+    /// mode, which has no workers, barriers, or exchanges to profile).
+    pub fn shard_profile(&self) -> Option<ShardProfileReport> {
+        match self {
+            Arena::Single { .. } => None,
+            Arena::Sharded { eng } => Some(eng.shard_profile()),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -195,10 +218,14 @@ mod tests {
         }
     }
 
+    fn opts(threads: usize, epoch: Cycle) -> EngineOpts {
+        EngineOpts { threads: Some(threads), epoch, ..EngineOpts::default() }
+    }
+
     #[test]
     fn single_and_sharded_advance_uniformly() {
         for threads in [0usize, 2] {
-            let mut a = Arena::new(threads, 3, 4);
+            let mut a = Arena::new(&opts(threads, 4), 3);
             let ticks = Rc::new(Cell::new(0));
             a.add_infra(Box::new(Counter { ticks: ticks.clone(), budget: u64::MAX }));
             assert_eq!(a.threads(), if threads == 0 { 0 } else { 2 });
@@ -211,18 +238,44 @@ mod tests {
 
     #[test]
     fn exchange_boundary_schedule() {
-        let a = Arena::new(0, 1, 4);
+        let a = Arena::new(&opts(0, 4), 1);
         assert_eq!(a.to_next_exchange(), 1, "single arena degrades to per-cycle");
-        let mut a = Arena::new(1, 2, 4);
+        let mut a = Arena::new(&opts(1, 4), 2);
         assert_eq!(a.to_next_exchange(), 4);
         a.advance(3);
         assert_eq!(a.to_next_exchange(), 1);
     }
 
     #[test]
+    fn opts_full_scan_and_policy_apply() {
+        let full = EngineOpts { threads: Some(1), full_scan: true, ..EngineOpts::default() };
+        let a = Arena::new(&full, 2);
+        assert!(!a.sleep_enabled(), "full_scan flows through construction");
+        let adaptive = EngineOpts {
+            threads: Some(1),
+            policy: crate::sim::EpochPolicy::Adaptive,
+            ..EngineOpts::default()
+        };
+        match Arena::new(&adaptive, 2) {
+            Arena::Sharded { eng } => assert_eq!(eng.policy(), crate::sim::EpochPolicy::Adaptive),
+            Arena::Single { .. } => panic!("threads >= 1 must build the sharded engine"),
+        }
+    }
+
+    #[test]
+    fn shard_profile_only_in_sharded_mode() {
+        assert!(Arena::new(&opts(0, 4), 1).shard_profile().is_none());
+        let mut a = Arena::new(&opts(1, 4), 2);
+        a.advance(8);
+        let prof = a.shard_profile().expect("sharded mode profiles");
+        assert_eq!(prof.runs, 1);
+        assert_eq!(prof.shards.len(), 2);
+    }
+
+    #[test]
     fn sleep_mode_uniform() {
         for threads in [0usize, 1] {
-            let mut a = Arena::new(threads, 2, 4);
+            let mut a = Arena::new(&opts(threads, 4), 2);
             let ticks = Rc::new(Cell::new(0));
             a.add_infra(Box::new(Counter { ticks: ticks.clone(), budget: 2 }));
             assert!(a.sleep_enabled());

@@ -227,6 +227,11 @@ pub struct Engine {
     wake: WakeSet,
     now_ps: Ps,
     sleep_enabled: bool,
+    /// Number of slots with `asleep == false`, maintained incrementally at
+    /// every transition so the awake count (used per exchange window by
+    /// the shard profiler and the adaptive-epoch quiescence check) is
+    /// O(1) instead of an arena scan.
+    awake: usize,
     /// Reusable scratch buffers: allocated once, swapped per step.
     wake_scratch: Vec<ComponentId>,
     due_scratch: Vec<u32>,
@@ -245,6 +250,7 @@ impl Engine {
             wake: WakeSet::new(),
             now_ps: 0,
             sleep_enabled: true,
+            awake: 0,
             wake_scratch: Vec::new(),
             due_scratch: Vec::new(),
         }
@@ -271,6 +277,7 @@ impl Engine {
         for (i, slot) in self.slots.iter_mut().enumerate() {
             if slot.asleep {
                 slot.asleep = false;
+                self.awake += 1;
                 self.domains[slot.domain as usize].incoming.push(ComponentId(i as u32));
             }
         }
@@ -310,6 +317,7 @@ impl Engine {
         debug_assert_eq!(id.index(), self.slots.len());
         c.bind(&self.wake, id);
         self.slots.push(Slot { comp: c, domain: domain.0 as u32, asleep: false });
+        self.awake += 1;
         // Ids grow monotonically, so `active` stays sorted.
         self.domains[domain.0].active.push(id);
         id
@@ -355,11 +363,23 @@ impl Engine {
     }
 
     /// Number of currently-awake components across every domain of this
-    /// engine. Same exactness argument as [`Engine::awake_components`];
-    /// multi-clock topologies (the topology grammar's CDC islands) need
-    /// the whole-arena view.
+    /// engine. Same exactness argument as [`Engine::awake_components`],
+    /// but O(1): the count is maintained incrementally at every
+    /// sleep/wake transition, so the shard profiler can sample it once
+    /// per exchange window and the adaptive epoch policy can test
+    /// quiescence at every boundary without arena scans.
     pub fn awake_components_all(&self) -> usize {
-        self.slots.iter().filter(|s| !s.asleep).count()
+        debug_assert_eq!(self.awake, self.slots.iter().filter(|s| !s.asleep).count());
+        self.awake
+    }
+
+    /// Whether any wake requests are queued but not yet drained into the
+    /// scheduling lists. A zero [`Engine::awake_components_all`] count
+    /// together with no pending wakes proves the engine quiescent:
+    /// nothing can tick until an external driver or a cut exchange wakes
+    /// a component.
+    pub fn has_pending_wakes(&self) -> bool {
+        self.wake.has_pending()
     }
 
     fn drain_wakes(&mut self) {
@@ -372,6 +392,7 @@ impl Engine {
             let slot = &mut self.slots[id.index()];
             if slot.asleep {
                 slot.asleep = false;
+                self.awake += 1;
                 let d = slot.domain as usize;
                 self.domains[d].incoming.push(id);
             }
@@ -401,6 +422,7 @@ impl Engine {
                 true
             } else {
                 self.slots[id.index()].asleep = true;
+                self.awake -= 1;
                 false
             }
         });
@@ -443,6 +465,36 @@ impl Engine {
         while self.domains[domain.0].cycle < target {
             self.step();
         }
+    }
+
+    /// Advance `n` cycles of `domain`, fast-forwarding in O(1) when the
+    /// engine is provably idle: a single clock domain, zero awake
+    /// components, and no pending wakes. With nothing awake every step
+    /// is pure calendar churn (pop the edge, bump the cycle, push the
+    /// next edge), so the fast path computes the post-`n`-steps state
+    /// arithmetically — domain cycle, next edge, global time, and the
+    /// singleton calendar entry all land exactly where stepping would
+    /// put them, keeping results bit-identical. Falls back to the
+    /// stepped [`Engine::run_cycles`] otherwise (multiple domains, or
+    /// anything awake). The sharded runtime's adaptive epoch policy uses
+    /// this to sprint through proven-quiescent windows.
+    pub fn run_cycles_quiescent(&mut self, domain: DomainId, n: Cycle) {
+        if n == 0 {
+            return;
+        }
+        if self.domains.len() != 1 || self.awake != 0 || self.wake.has_pending() {
+            return self.run_cycles(domain, n);
+        }
+        debug_assert_eq!(domain.0, 0);
+        let d = &mut self.domains[0];
+        debug_assert!(d.active.is_empty() && d.incoming.is_empty());
+        // Stepping n times would pop edges E, E+p, ..., E+(n-1)p and
+        // leave E+np scheduled with now = E+(n-1)p.
+        d.cycle += n;
+        d.next_edge += n * d.period_ps;
+        self.now_ps = d.next_edge - d.period_ps;
+        self.calendar.clear();
+        self.calendar.push(Reverse((d.next_edge, 0)));
     }
 
     /// Run until `pred` is true, checked after each step, or until the
@@ -608,6 +660,40 @@ mod tests {
         fn name(&self) -> &str {
             "worker"
         }
+    }
+
+    #[test]
+    fn quiescent_fast_forward_matches_stepping() {
+        let mk = || {
+            let (mut e, d) = Engine::single_clock();
+            let ticks = Rc::new(Cell::new(0));
+            let id = e.add(d, Worker { work_left: 3, ticks: ticks.clone() });
+            e.run_cycles(d, 10);
+            assert_eq!(e.awake_components(d), 0, "worker must be asleep");
+            (e, d, id, ticks)
+        };
+        let (mut a, d, ia, ta) = mk();
+        let (mut b, _, ib, tb) = mk();
+        a.run_cycles(d, 1000);
+        b.run_cycles_quiescent(d, 1000);
+        assert_eq!(a.cycles(d), b.cycles(d));
+        assert_eq!(a.now_ps(), b.now_ps());
+        // Waking both afterwards must behave identically: the calendar
+        // rebuilt by the fast path is exactly the stepped one.
+        a.wake(ia);
+        b.wake(ib);
+        a.run_cycles(d, 5);
+        b.run_cycles(d, 5);
+        assert_eq!(a.cycles(d), b.cycles(d));
+        assert_eq!(a.now_ps(), b.now_ps());
+        assert_eq!(ta.get(), tb.get(), "both workers ticked once more after the wake");
+        // With something awake the call falls back to real stepping.
+        let (mut e, d) = Engine::single_clock();
+        let ticks = Rc::new(Cell::new(0));
+        e.add(d, Worker { work_left: 3, ticks: ticks.clone() });
+        e.run_cycles_quiescent(d, 10);
+        assert_eq!(e.cycles(d), 10);
+        assert_eq!(ticks.get(), 3, "awake worker still ticks through the fallback");
     }
 
     #[test]

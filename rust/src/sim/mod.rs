@@ -14,11 +14,12 @@ pub use arena::Arena;
 pub use engine::{
     shared, Activity, Component, ComponentId, Cycle, DomainId, Engine, Ps, Shared, WakeSet,
 };
-pub use opts::EngineOpts;
+pub use opts::{EngineOpts, EpochPolicy, MAX_THREADS};
 pub use prop::{prop_check, prop_replay, Gen};
 pub use rng::SplitMix64;
 pub use shard::{
-    auto_threads, exchange_channel, Exchanged, ExchangeLink, ExchangeRx, ExchangeTx, Shard,
-    ShardedEngine,
+    auto_threads, exchange_channel, Exchanged, ExchangeLink, ExchangeRx, ExchangeTx, PairDirty,
+    Shard, ShardProfile, ShardProfileReport, ShardedEngine, SpinBarrier, SpinBarrierWaitResult,
+    WorkerProfile,
 };
 pub use stats::{human_bytes, Bandwidth, LatencyStats};

@@ -4,14 +4,57 @@
 //! and the recursive topology grammar (`coordinator::topology`) — now
 //! embed one [`EngineOpts`] and share a single CLI parsing path
 //! ([`EngineOpts::apply_cli`]); the config-file path lives next to the
-//! TOML layer (`coordinator::config`).
+//! TOML layer (`coordinator::config`). Range validation lives here too
+//! ([`EngineOpts::validate`]): both parse paths reject out-of-range
+//! values with typed errors, so the engines themselves never assert.
 
 use std::collections::HashMap;
 
-use crate::ensure;
+use crate::bail;
 use crate::errors::{Context, Result};
 use crate::sim::shard::auto_threads;
 use crate::sim::Cycle;
+
+/// Upper bound on the sharded engine's worker-thread count. Far above
+/// any sane host, it exists so a typo'd `--threads 40000` fails at
+/// parse time with a clear message instead of spawning a thread storm.
+pub const MAX_THREADS: usize = 1024;
+
+/// How the sharded engine paces its epoch-boundary exchanges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EpochPolicy {
+    /// Synchronize at every epoch boundary, unconditionally.
+    #[default]
+    Fixed,
+    /// Lengthen the effective epoch while the cut queues run empty: at a
+    /// boundary where every shard is quiescent and every exchange queue
+    /// is drained, the remaining barriers/exchanges of the current `run`
+    /// call are provably no-ops, and the workers sprint through them in
+    /// one stretch. The moment any queue carries traffic the policy
+    /// snaps back to the base cadence. Boundaries stay absolute
+    /// multiples of the base epoch and only proven no-ops are elided,
+    /// so results are bit-identical to [`EpochPolicy::Fixed`] for every
+    /// thread count and both engine modes.
+    Adaptive,
+}
+
+impl EpochPolicy {
+    /// Parse the config/CLI spelling (`"fixed"` / `"adaptive"`).
+    pub fn parse(s: &str) -> Result<EpochPolicy> {
+        match s {
+            "fixed" => Ok(EpochPolicy::Fixed),
+            "adaptive" => Ok(EpochPolicy::Adaptive),
+            other => bail!("epoch policy must be \"fixed\" or \"adaptive\", got \"{other}\""),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EpochPolicy::Fixed => "fixed",
+            EpochPolicy::Adaptive => "adaptive",
+        }
+    }
+}
 
 /// Which engine drives a simulation, and in which mode.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -29,6 +72,10 @@ pub struct EngineOpts {
     /// Exchange epoch in cycles (sharded mode only): cut bundles gain
     /// this much latency and two epochs of buffering.
     pub epoch: Cycle,
+    /// Epoch pacing (sharded mode only): fixed cadence, or adaptive
+    /// barrier elision through proven-idle stretches. Either way results
+    /// are bit-identical — see [`EpochPolicy`].
+    pub policy: EpochPolicy,
     /// Disable the engine's sleep/wake tracking: tick every component on
     /// every cycle (the pre-engine behaviour). Kept as an A/B oracle —
     /// results must be bit-identical to event mode.
@@ -37,7 +84,7 @@ pub struct EngineOpts {
 
 impl Default for EngineOpts {
     fn default() -> Self {
-        EngineOpts { threads: None, epoch: 8, full_scan: false }
+        EngineOpts { threads: None, epoch: 8, policy: EpochPolicy::Fixed, full_scan: false }
     }
 }
 
@@ -50,15 +97,31 @@ impl EngineOpts {
 
     /// Explicit sharded options (tests and benches mostly).
     pub fn sharded(threads: usize, epoch: Cycle) -> Self {
-        EngineOpts { threads: Some(threads), epoch, full_scan: false }
+        EngineOpts { threads: Some(threads), epoch, ..EngineOpts::default() }
+    }
+
+    /// Typed range validation, shared by the CLI and config-file parse
+    /// paths so bad values surface as configuration errors at parse time
+    /// (the engines normalize instead of asserting).
+    pub fn validate(&self) -> Result<()> {
+        if self.epoch < 1 {
+            bail!("epoch must be at least 1 cycle");
+        }
+        if let Some(t) = self.threads {
+            if t > MAX_THREADS {
+                bail!("threads must be at most {MAX_THREADS}, got {t}");
+            }
+        }
+        Ok(())
     }
 
     /// Apply the shared CLI flags (`--threads N`, `--epoch E`,
-    /// `--full-scan`) on top of whatever the config file set. With
-    /// `auto_threads_if_unset`, a thread count that is still unset after
-    /// both layers resolves to the host core count ([`auto_threads`]) —
-    /// batched workloads opt in, paper-comparable single-arena runs
-    /// don't.
+    /// `--epoch-policy fixed|adaptive`, `--full-scan`) on top of
+    /// whatever the config file set, then [`EngineOpts::validate`] the
+    /// result. With `auto_threads_if_unset`, a thread count that is
+    /// still unset after both layers resolves to the host core count
+    /// ([`auto_threads`]) — batched workloads opt in, paper-comparable
+    /// single-arena runs don't.
     pub fn apply_cli(
         &mut self,
         flags: &HashMap<String, String>,
@@ -73,11 +136,12 @@ impl EngineOpts {
             self.threads = Some(auto_threads());
         }
         if let Some(e) = flags.get("epoch") {
-            let e: Cycle = e.parse().context("--epoch must be a positive integer")?;
-            ensure!(e >= 1, "--epoch must be at least 1");
-            self.epoch = e;
+            self.epoch = e.parse().context("--epoch must be a positive integer")?;
         }
-        Ok(())
+        if let Some(p) = flags.get("epoch-policy") {
+            self.policy = EpochPolicy::parse(p).context("--epoch-policy")?;
+        }
+        self.validate()
     }
 }
 
@@ -94,16 +158,26 @@ mod tests {
         let opts = EngineOpts::default();
         assert_eq!(opts.worker_threads(), 0);
         assert_eq!(opts.epoch, 8);
+        assert_eq!(opts.policy, EpochPolicy::Fixed);
         assert!(!opts.full_scan);
     }
 
     #[test]
     fn cli_flags_override_config() {
         let mut opts = EngineOpts::sharded(2, 4);
-        opts.apply_cli(&flags(&[("threads", "3"), ("epoch", "16"), ("full-scan", "true")]), true)
-            .unwrap();
+        opts.apply_cli(
+            &flags(&[
+                ("threads", "3"),
+                ("epoch", "16"),
+                ("epoch-policy", "adaptive"),
+                ("full-scan", "true"),
+            ]),
+            true,
+        )
+        .unwrap();
         assert_eq!(opts.threads, Some(3));
         assert_eq!(opts.epoch, 16);
+        assert_eq!(opts.policy, EpochPolicy::Adaptive);
         assert!(opts.full_scan);
     }
 
@@ -125,5 +199,25 @@ mod tests {
         let mut opts = EngineOpts::default();
         assert!(opts.apply_cli(&flags(&[("threads", "lots")]), true).is_err());
         assert!(opts.apply_cli(&flags(&[("epoch", "0")]), true).is_err());
+        assert!(opts.apply_cli(&flags(&[("epoch-policy", "sometimes")]), true).is_err());
+    }
+
+    #[test]
+    fn epoch_policy_parses_both_spellings() {
+        assert_eq!(EpochPolicy::parse("fixed").unwrap(), EpochPolicy::Fixed);
+        assert_eq!(EpochPolicy::parse("adaptive").unwrap(), EpochPolicy::Adaptive);
+        assert_eq!(EpochPolicy::Adaptive.as_str(), "adaptive");
+        let err = EpochPolicy::parse("eventually").unwrap_err().to_string();
+        assert!(err.contains("eventually"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_values() {
+        let opts = EngineOpts { epoch: 0, ..EngineOpts::default() };
+        assert!(opts.validate().is_err(), "zero epoch must be a typed error");
+        let opts = EngineOpts { threads: Some(MAX_THREADS + 1), ..EngineOpts::default() };
+        let err = opts.validate().unwrap_err().to_string();
+        assert!(err.contains("1024"), "{err}");
+        assert!(EngineOpts::sharded(MAX_THREADS, 1).validate().is_ok());
     }
 }

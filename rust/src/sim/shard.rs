@@ -30,11 +30,67 @@
 //! The two halves meet only inside [`ExchangeLink::exchange`], which runs
 //! while **no shard is advancing**: either on the caller's thread between
 //! runs, or on the barrier leader with every other worker parked between
-//! the two `Barrier::wait`s of an epoch barrier. The barrier provides the
-//! happens-before edges in both directions — everything a worker wrote
-//! before arriving at the barrier is visible to the leader, and the
-//! leader's moves are visible to every worker released by the second
-//! wait — so the halves need no atomics of their own.
+//! the two [`SpinBarrier::wait`]s of an epoch barrier. The barrier
+//! provides the happens-before edges in both directions — everything a
+//! worker wrote before arriving at the barrier is visible to the leader,
+//! and the leader's moves are visible to every worker released by the
+//! second wait (see the ordering argument on [`SpinBarrier`]) — so the
+//! halves need no atomics of their own.
+//!
+//! ## Sense-reversing spin barrier
+//!
+//! Epoch barriers used `std::sync::Barrier`, whose mutex+condvar pair
+//! costs a futex round-trip per worker per wait and collapses at high
+//! thread counts. [`SpinBarrier`] is a classic sense-reversing barrier:
+//! one shared atomic counter and one shared sense flag (each on its own
+//! cache line), plus a per-participant local sense. Arrivals increment
+//! the counter; the last arriver becomes the **leader**, resets the
+//! counter, and flips the shared sense, releasing everyone else from a
+//! bounded spin (`spin_loop` hint, falling back to `yield_now` so an
+//! oversubscribed host still makes progress).
+//!
+//! ## Per-pair exchange groups
+//!
+//! The leader used to walk every registered link at every boundary —
+//! cost proportional to total channel count even when one shard pair is
+//! talking. Links registered through [`ShardedEngine::add_links_waking`]
+//! are now grouped by (producer shard, consumer shard), and each group
+//! shares a [`PairDirty`] flag pair that the endpoints set on `send` /
+//! `recv`. A group whose both flags are clear moved nothing since the
+//! last boundary — its exchange is provably a no-op and is skipped, so
+//! exchange cost scales with *active* pairs. Links registered without
+//! shard endpoints ([`ShardedEngine::add_links`]), or whose link type
+//! does not opt into tracking, land in a catch-all group that is always
+//! exchanged.
+//!
+//! ## Adaptive epochs (quiescence sprints)
+//!
+//! With [`EpochPolicy::Adaptive`], the engine lengthens the effective
+//! epoch through proven-idle stretches: at a boundary where every shard
+//! is quiescent (no awake components, no pending wakes — checked O(1)
+//! per shard against the engine's incremental awake counter) and every
+//! exchange queue is drained in both directions, the remaining windows
+//! of the current `run` call can neither tick a component nor move a
+//! beat. The workers then *sprint*: each fast-forwards its shards
+//! through the remaining cycles in one stretch
+//! ([`Engine::run_cycles_quiescent`]) with no further barriers. The
+//! moment any queue carries traffic the cadence snaps back. Boundaries
+//! stay absolute multiples of the base epoch and only provably-no-op
+//! exchanges are elided, so results are bit-identical to
+//! [`EpochPolicy::Fixed`] for every thread count and both engine modes
+//! (full-scan keeps every component awake, so it never sprints — the
+//! check simply fails).
+//!
+//! ## Per-shard profiler
+//!
+//! Every run records where the wall-clock went: per-shard run time,
+//! window count, and an awake-component integral (components × cycles,
+//! a load proxy independent of host noise), plus per-worker run /
+//! exchange / barrier-stall time. [`ShardedEngine::shard_profile`]
+//! returns the accumulated [`ShardProfileReport`]; the benches emit it
+//! into `BENCH_*.json`. Measured per-shard run time also feeds the LPT
+//! placement (below). Wall-clock is not deterministic, but it only
+//! influences placement and reporting — never simulation results.
 //!
 //! ## Persistent worker pool
 //!
@@ -48,12 +104,16 @@
 //!
 //! ## Weighted shard placement
 //!
-//! Shards are assigned to workers by component weight (LPT greedy:
-//! heaviest shard to the least-loaded worker) instead of contiguous
-//! `div_ceil` chunks — shard 0 carries a chiplet's whole tree plus the
-//! top crosspoint, HBM, and IO, and contiguous chunking serialized it
-//! with the first clusters. Placement cannot change results (shards
-//! interact only at barriers), so this is free determinism-wise.
+//! Shards are assigned to workers by weight (LPT greedy: heaviest shard
+//! to the least-loaded worker) instead of contiguous `div_ceil` chunks —
+//! shard 0 carries a chiplet's whole tree plus the top crosspoint, HBM,
+//! and IO, and contiguous chunking serialized it with the first
+//! clusters. The assignment is **cached** and recomputed only when the
+//! shard set, the worker count, or the weight generation changes: the
+//! first placement weighs shards by component count, and once every
+//! shard has measured run time the weights refine to the profiler's
+//! per-shard `run_ns` (one recompute). Placement cannot change results
+//! (shards interact only at barriers), so this is free determinism-wise.
 //!
 //! ## Relay wakes
 //!
@@ -72,11 +132,132 @@
 //! and full-scan modes of the same sharded topology.
 
 use std::cell::{Cell, UnsafeCell};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::marker::PhantomData;
-use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
+use crate::sim::opts::EpochPolicy;
 use crate::sim::{Component, ComponentId, Cycle, DomainId, Engine};
+
+/// Spins with the `spin_loop` hint this many iterations before falling
+/// back to `yield_now`, so an oversubscribed host (more workers than
+/// cores, as on small CI runners) still makes progress.
+const SPIN_BEFORE_YIELD: u32 = 4096;
+
+/// Pads (and aligns) a value to its own 128-byte cache-line pair, so the
+/// barrier's counter and sense flag never false-share with each other or
+/// with neighbouring allocations.
+#[repr(align(128))]
+struct CachePadded<T>(T);
+
+/// A sense-reversing spin barrier for `n` participants, reusable across
+/// any number of rounds.
+///
+/// Each participant keeps a `local_sense: bool` (starting `false` for a
+/// fresh barrier) and passes it to every [`SpinBarrier::wait`]. The last
+/// arriver of a round is the **leader**: it resets the arrival counter
+/// and flips the shared sense, releasing every spinner.
+///
+/// # Ordering
+///
+/// The barrier provides full happens-before in both directions, which is
+/// what lets the exchange halves live in plain `UnsafeCell`s:
+///
+/// * Every arrival is an `AcqRel` RMW on `count`; the RMW chain forms a
+///   release sequence, so the leader's continuation synchronizes-with
+///   everything each earlier arriver wrote before arriving.
+/// * The leader's writes (the exchanges, between its two waits) are
+///   sequenced before its next RMW on `count`; later RMWs in the chain
+///   read through it, and the final arriver's `Release` store to `sense`
+///   is then observed by every spinner's `Acquire` load — so the
+///   leader's writes are visible to every released worker even when the
+///   leader is not the last to arrive at the second wait.
+/// * Resetting `count` with a `Relaxed` store is safe because no
+///   participant can start the next round before its `Acquire` load of
+///   `sense` observes the flip, which the reset is sequenced before.
+pub struct SpinBarrier {
+    n: usize,
+    count: CachePadded<AtomicUsize>,
+    sense: CachePadded<AtomicBool>,
+}
+
+/// What [`SpinBarrier::wait`] returned: whether this participant was the
+/// round's leader (exactly one per round).
+#[derive(Debug, Clone, Copy)]
+pub struct SpinBarrierWaitResult {
+    leader: bool,
+}
+
+impl SpinBarrierWaitResult {
+    pub fn is_leader(&self) -> bool {
+        self.leader
+    }
+}
+
+impl SpinBarrier {
+    /// A barrier for `n >= 1` participants. Participants' `local_sense`
+    /// must start `false`.
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "a barrier needs at least one participant");
+        SpinBarrier {
+            n,
+            count: CachePadded(AtomicUsize::new(0)),
+            sense: CachePadded(AtomicBool::new(false)),
+        }
+    }
+
+    /// Block (spinning, then yielding) until all `n` participants have
+    /// arrived. `local_sense` must be this participant's own flag,
+    /// passed to every `wait` on this barrier in order.
+    pub fn wait(&self, local_sense: &mut bool) -> SpinBarrierWaitResult {
+        let next = !*local_sense;
+        *local_sense = next;
+        let arrived = self.count.0.fetch_add(1, Ordering::AcqRel) + 1;
+        if arrived == self.n {
+            // Last arriver: reset for the next round, then release the
+            // spinners (see the ordering notes on the type).
+            self.count.0.store(0, Ordering::Relaxed);
+            self.sense.0.store(next, Ordering::Release);
+            SpinBarrierWaitResult { leader: true }
+        } else {
+            let mut spins = 0u32;
+            while self.sense.0.load(Ordering::Acquire) != next {
+                if spins < SPIN_BEFORE_YIELD {
+                    spins += 1;
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+            SpinBarrierWaitResult { leader: false }
+        }
+    }
+}
+
+/// Dirty flags shared by every link of one (producer shard, consumer
+/// shard) exchange group. `tx` is set by producer-side `send`s, `rx` by
+/// consumer-side `recv`s; the barrier leader reads and clears both
+/// between the two barrier waits. Both flags clear at a boundary proves
+/// the whole group's exchange is a no-op (nothing sent since the last
+/// boundary, nothing consumed), so the group is skipped.
+///
+/// Plain `UnsafeCell<bool>`s suffice: each flag has a single writer side
+/// (the components of one shard, confined to one thread at a time), and
+/// the leader's read/clear happens under the same barrier-ordering that
+/// protects the queue halves themselves.
+#[derive(Default)]
+pub struct PairDirty {
+    tx: UnsafeCell<bool>,
+    rx: UnsafeCell<bool>,
+}
+
+// SAFETY: same argument as `ExchangeShared` — each flag is written only
+// by one side's confined owner, and the only cross-side access (the
+// leader's read+clear) is barrier-ordered against both.
+unsafe impl Send for PairDirty {}
+unsafe impl Sync for PairDirty {}
 
 /// Producer-owned half of an exchange queue: the free-slot count and the
 /// beats sent since the last exchange.
@@ -96,11 +277,13 @@ struct RxHalf<T> {
 /// Shared exchange state. See the module docs for the access discipline:
 /// `tx` is only touched through the [`ExchangeTx`], `rx` only through
 /// the [`ExchangeRx`], and both only by [`ExchangeLink::exchange`] while
-/// every shard is quiescent.
+/// every shard is quiescent. `group` is written once, at registration
+/// time (single-threaded), and read-only after.
 struct ExchangeShared<T> {
     label: Arc<str>,
     tx: UnsafeCell<TxHalf<T>>,
     rx: UnsafeCell<RxHalf<T>>,
+    group: UnsafeCell<Option<Arc<PairDirty>>>,
 }
 
 // SAFETY: the two `UnsafeCell` halves are each confined to a single
@@ -109,6 +292,7 @@ struct ExchangeShared<T> {
 // which runs while no shard is advancing, with the barrier (or the
 // pool's completion handshake) providing the happens-before edges. No
 // access path allows two threads to touch the same half concurrently.
+// `group` is written before any shard advances and immutable after.
 unsafe impl<T: Send> Send for ExchangeShared<T> {}
 unsafe impl<T: Send> Sync for ExchangeShared<T> {}
 
@@ -159,6 +343,33 @@ pub trait ExchangeLink: Send + Sync {
     /// provides the happens-before edges against the endpoint owners.
     unsafe fn exchange(&self) -> Exchanged;
 
+    /// Attach the per-pair dirty flags this link's endpoints should set
+    /// on `send`/`recv`, returning whether the link supports the
+    /// tracking. The default declines, which lands the link in the
+    /// always-exchanged catch-all group — always correct, just not
+    /// skippable.
+    ///
+    /// # Safety
+    ///
+    /// Must only be called at registration time, before any shard
+    /// advances and while no other thread touches the link.
+    unsafe fn set_group(&self, group: Arc<PairDirty>) -> bool {
+        let _ = group;
+        false
+    }
+
+    /// True iff the queue is provably empty in both directions: nothing
+    /// buffered on either side and no credits owed. Used by the adaptive
+    /// policy's quiescence check; the conservative default (`false`)
+    /// merely blocks sprints, never correctness.
+    ///
+    /// # Safety
+    ///
+    /// Same exclusivity contract as [`ExchangeLink::exchange`].
+    unsafe fn is_drained(&self) -> bool {
+        false
+    }
+
     /// The queue's label. Cheap: a shared `Arc<str>` clone, no per-call
     /// allocation (the exchange path and bench logging call this).
     fn label(&self) -> Arc<str>;
@@ -180,6 +391,17 @@ impl<T: Send> ExchangeLink for LinkImpl<T> {
         Exchanged { delivered, credited }
     }
 
+    unsafe fn set_group(&self, group: Arc<PairDirty>) -> bool {
+        *self.0.group.get() = Some(group);
+        true
+    }
+
+    unsafe fn is_drained(&self) -> bool {
+        let tx = &*self.0.tx.get();
+        let rx = &*self.0.rx.get();
+        tx.out.is_empty() && rx.inbox.is_empty() && rx.consumed == 0
+    }
+
     fn label(&self) -> Arc<str> {
         self.0.label.clone()
     }
@@ -198,6 +420,7 @@ pub fn exchange_channel<T: Send + 'static>(
         label: label.into().into(),
         tx: UnsafeCell::new(TxHalf { credits: cap, out: VecDeque::new() }),
         rx: UnsafeCell::new(RxHalf { inbox: VecDeque::new(), consumed: 0 }),
+        group: UnsafeCell::new(None),
     });
     (
         ExchangeTx { shared: shared.clone(), _confined: PhantomData },
@@ -222,6 +445,13 @@ impl<T> ExchangeTx<T> {
         assert!(tx.credits > 0, "send on exchange {} without credit", self.shared.label);
         tx.credits -= 1;
         tx.out.push_back(beat);
+        // SAFETY: `group` is immutable after registration; the `tx`
+        // dirty flag shares this half's single-writer confinement.
+        unsafe {
+            if let Some(g) = (*self.shared.group.get()).as_ref() {
+                *g.tx.get() = true;
+            }
+        }
     }
 }
 
@@ -235,6 +465,12 @@ impl<T> ExchangeRx<T> {
         let beat = rx.inbox.pop_front();
         if beat.is_some() {
             rx.consumed += 1;
+            // SAFETY: as on the `tx` flag in `ExchangeTx::send`.
+            unsafe {
+                if let Some(g) = (*self.shared.group.get()).as_ref() {
+                    *g.rx.get() = true;
+                }
+            }
         }
         beat
     }
@@ -256,6 +492,73 @@ pub fn auto_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Wall-clock profile of one shard, accumulated across runs by the
+/// worker that owns the shard for each run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardProfile {
+    /// Nanoseconds spent advancing this shard's engine.
+    pub run_ns: u64,
+    /// Windows (epoch or partial-epoch stretches) the shard ran.
+    pub windows: u64,
+    /// Sum over windows of (awake components at window end × window
+    /// cycles) — a host-noise-free load proxy.
+    pub awake_integral: u64,
+}
+
+/// Wall-clock profile of one worker slot (worker 0 is the calling
+/// thread), accumulated across runs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerProfile {
+    /// Nanoseconds advancing shards.
+    pub run_ns: u64,
+    /// Nanoseconds parked at epoch barriers (waiting for peers or for
+    /// the leader's exchange).
+    pub stall_ns: u64,
+    /// Nanoseconds running exchanges as the barrier leader.
+    pub exchange_ns: u64,
+}
+
+/// Accumulated profile of a [`ShardedEngine`]: where the wall-clock went
+/// ([`ShardProfile`] / [`WorkerProfile`]) and what the scheduler did
+/// (exchange boundaries, skipped vs exchanged groups, adaptive sprints,
+/// placement recomputes). Obtained from
+/// [`ShardedEngine::shard_profile`]; all counters are totals since the
+/// engine was built.
+#[derive(Debug, Clone, Default)]
+pub struct ShardProfileReport {
+    pub shards: Vec<ShardProfile>,
+    pub workers: Vec<WorkerProfile>,
+    /// `run` calls that advanced at least one cycle.
+    pub runs: u64,
+    /// Runs that ended in an adaptive quiescence sprint.
+    pub sprints: u64,
+    /// Epoch boundaries at which exchanges actually ran (elided
+    /// boundaries inside a sprint are not counted).
+    pub exchanges: u64,
+    /// Exchange groups skipped because their dirty flags were clear.
+    pub groups_skipped: u64,
+    /// Exchange groups actually exchanged.
+    pub groups_exchanged: u64,
+    /// LPT placement computations (cache misses): changes of worker
+    /// count, shard set, or weight generation.
+    pub placements_computed: u64,
+}
+
+impl ShardProfileReport {
+    /// Fraction of the workers' total wall-clock spent stalled at epoch
+    /// barriers — the headline "is the barrier the bottleneck" number.
+    pub fn exchange_stall_frac(&self) -> f64 {
+        let stall: u64 = self.workers.iter().map(|w| w.stall_ns).sum();
+        let busy: u64 = self.workers.iter().map(|w| w.run_ns + w.exchange_ns).sum();
+        let total = stall + busy;
+        if total == 0 {
+            0.0
+        } else {
+            stall as f64 / total as f64
+        }
+    }
+}
+
 /// One shard: a private engine plus its base clock domain. Components
 /// registered with [`Shard::add`] tick on that clock; extra clock
 /// domains for CDC islands can be added with [`Shard::add_domain`] (the
@@ -265,6 +568,7 @@ pub fn auto_threads() -> usize {
 pub struct Shard {
     engine: Engine,
     domain: DomainId,
+    profile: ShardProfile,
 }
 
 impl Shard {
@@ -326,6 +630,11 @@ impl Shard {
     pub fn awake_components(&self) -> usize {
         self.engine.awake_components_all()
     }
+
+    /// This shard's accumulated wall-clock profile.
+    pub fn profile(&self) -> ShardProfile {
+        self.profile
+    }
 }
 
 /// Wrapper asserting a shard may move to (or be advanced by) a worker
@@ -355,11 +664,36 @@ struct LinkEntry {
     consumer: Option<(usize, ComponentId)>,
 }
 
-/// Run every registered exchange and wake the relay endpoints that
-/// gained work (delivered beats → consumer, returned credits →
-/// producer). Wake order is the link registration order, and wakes are
-/// merged sorted-and-deduplicated at the next engine step, so results
-/// do not depend on which thread runs this.
+/// Links of one (producer shard, consumer shard) pair, plus the dirty
+/// flags their endpoints set. `dirty: None` marks the catch-all group
+/// (no shard endpoints or no tracking support), which is always
+/// exchanged.
+struct LinkGroup {
+    dirty: Option<Arc<PairDirty>>,
+    links: Vec<LinkEntry>,
+}
+
+/// Per-run leader↔worker control block, living in an `UnsafeCell` on the
+/// posting `run` frame. The barrier leader writes it between the two
+/// barrier waits; every worker reads it after the second wait (the
+/// barrier orders both). The serial path uses it directly.
+#[derive(Debug, Clone, Copy, Default)]
+struct RunCtl {
+    /// The leader proved global quiescence: skip the remaining windows'
+    /// barriers and fast-forward.
+    sprint: bool,
+    exchanges: u64,
+    groups_skipped: u64,
+    groups_exchanged: u64,
+}
+
+/// Run the epoch exchange on every group that moved something since the
+/// last boundary, and wake the relay endpoints that gained work
+/// (delivered beats → consumer, returned credits → producer). Groups
+/// with both dirty flags clear are skipped — provably no-ops. Wake order
+/// is registration order within a group; wakes are merged
+/// sorted-and-deduplicated at the next engine step, so results do not
+/// depend on which thread runs this or on the grouping.
 ///
 /// # Safety
 ///
@@ -367,39 +701,76 @@ struct LinkEntry {
 /// worker is running (serial path, or between runs), or every worker is
 /// parked at the exchange barrier and the caller is the barrier leader.
 /// `shards` must point at `n_shards` valid `SendShard`s.
-unsafe fn exchange_all(links: &[LinkEntry], shards: *mut SendShard, n_shards: usize) {
-    for entry in links {
-        let moved = entry.link.exchange();
-        if moved.delivered {
-            if let Some((s, id)) = entry.consumer {
-                debug_assert!(s < n_shards);
-                (*shards.add(s)).0.engine.wake(id);
+unsafe fn exchange_groups(
+    groups: &[LinkGroup],
+    shards: *mut SendShard,
+    n_shards: usize,
+    ctl: &mut RunCtl,
+) {
+    for group in groups {
+        if let Some(d) = &group.dirty {
+            // SAFETY (flags): single-writer halves, read+cleared only
+            // here under the caller's exclusivity — see `PairDirty`.
+            if !*d.tx.get() && !*d.rx.get() {
+                ctl.groups_skipped += 1;
+                continue;
             }
+            *d.tx.get() = false;
+            *d.rx.get() = false;
         }
-        if moved.credited {
-            if let Some((s, id)) = entry.producer {
-                debug_assert!(s < n_shards);
-                (*shards.add(s)).0.engine.wake(id);
+        ctl.groups_exchanged += 1;
+        for entry in &group.links {
+            let moved = entry.link.exchange();
+            if moved.delivered {
+                if let Some((s, id)) = entry.consumer {
+                    debug_assert!(s < n_shards);
+                    (*shards.add(s)).0.engine.wake(id);
+                }
+            }
+            if moved.credited {
+                if let Some((s, id)) = entry.producer {
+                    debug_assert!(s < n_shards);
+                    (*shards.add(s)).0.engine.wake(id);
+                }
             }
         }
     }
 }
 
-/// Assign shard indices to `workers` workers, balancing the summed
-/// component weight (LPT greedy: heaviest shard first, each to the
-/// least-loaded worker). Every worker receives at least one shard when
-/// `workers <= shards`. Placement is deterministic (stable sort, ties
-/// broken by lowest worker index) — and could not change results even
-/// if it were not, since shards only interact at barriers.
-fn weighted_assignment(shards: &[SendShard], workers: usize) -> Vec<Vec<usize>> {
-    let weight = |i: usize| shards[i].0.component_count().max(1);
-    let mut order: Vec<usize> = (0..shards.len()).collect();
-    order.sort_by_key(|&i| std::cmp::Reverse(weight(i)));
+/// True iff nothing can happen for the rest of the run: every shard has
+/// zero awake components and zero pending wakes (O(1) each, against the
+/// engine's incremental counter), and every exchange queue is drained in
+/// both directions. Checked by the adaptive policy right after an
+/// exchange, so freshly delivered beats / returned credits show up as
+/// pending relay wakes and correctly block the sprint.
+///
+/// # Safety
+///
+/// Same exclusivity contract as [`exchange_groups`].
+unsafe fn all_quiescent(shards: *mut SendShard, n_shards: usize, groups: &[LinkGroup]) -> bool {
+    for i in 0..n_shards {
+        let eng = &(*shards.add(i)).0.engine;
+        if eng.awake_components_all() != 0 || eng.has_pending_wakes() {
+            return false;
+        }
+    }
+    groups.iter().all(|g| g.links.iter().all(|e| e.link.is_drained()))
+}
+
+/// Assign shard indices `0..weights.len()` to `workers` workers,
+/// balancing the summed weight (LPT greedy: heaviest shard first, each
+/// to the least-loaded worker). Every worker receives at least one shard
+/// when `workers <= shards`. The assignment is deterministic (stable
+/// sort, ties broken by lowest worker index) — and could not change
+/// results even if it were not, since shards only interact at barriers.
+fn weighted_assignment(weights: &[u64], workers: usize) -> Vec<Vec<usize>> {
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(weights[i]));
     let mut assign = vec![Vec::new(); workers];
-    let mut load = vec![0usize; workers];
+    let mut load = vec![0u64; workers];
     for i in order {
         let w = (0..workers).min_by_key(|&w| (load[w], w)).expect("workers >= 1");
-        load[w] += weight(i);
+        load[w] += weights[i];
         assign[w].push(i);
     }
     // Keep each worker's shards in index order: cache-friendly, and the
@@ -408,6 +779,15 @@ fn weighted_assignment(shards: &[SendShard], workers: usize) -> Vec<Vec<usize>> 
         a.sort_unstable();
     }
     assign
+}
+
+/// The cached LPT placement plus the inputs it was computed from; a run
+/// recomputes only when an input changed.
+struct AssignCache {
+    workers: usize,
+    n_shards: usize,
+    weight_gen: u64,
+    assign: Vec<Vec<usize>>,
 }
 
 /// One parallel run's worth of work, handed to the pool threads as raw
@@ -422,47 +802,104 @@ struct Job {
     assign: *const Vec<usize>,
     plan: *const (Cycle, bool),
     plan_len: usize,
-    links: *const LinkEntry,
-    n_links: usize,
-    barrier: *const Barrier,
+    groups: *const LinkGroup,
+    n_groups: usize,
+    barrier: *const SpinBarrier,
+    /// Leader↔worker control block; written by the leader between the
+    /// two barrier waits, read by everyone after the second.
+    ctl: *const UnsafeCell<RunCtl>,
+    /// Per-worker profile slots (`workers` of them); worker `i` writes
+    /// slot `i` only.
+    wprof: *mut WorkerProfile,
+    adaptive: bool,
 }
 
 // SAFETY: a Job is a bag of pointers into storage owned by the posting
 // `run` call, which outlives the job (see the struct docs); the data
 // races on what they point at are excluded by the assignment (each
-// shard index appears in exactly one worker's list) and the barrier
-// discipline documented on `run_worker`.
+// shard index appears in exactly one worker's list, each worker writes
+// only its own profile slot) and the barrier discipline documented on
+// `run_worker`.
 unsafe impl Send for Job {}
 
 /// Advance one worker's shard set through the whole plan, with a
 /// barrier at every exchange; the barrier leader performs the exchanges
 /// and relay wakes while every other worker is parked between the two
-/// waits.
+/// waits. Under the adaptive policy, a leader that proves global
+/// quiescence sets the sprint flag, and every worker fast-forwards its
+/// shards through the remaining windows with no further barriers.
 ///
 /// # Safety
 ///
 /// `job`'s pointers must be valid (see [`Job`]); `index` must be within
 /// the assignment list, and each shard index must appear in exactly one
-/// worker's list. Only the barrier leader may touch shards outside its
-/// own list, and only between the two barrier waits of an exchange.
+/// worker's list. Only the barrier leader may touch shards (or the
+/// control block) outside its own list, and only between the two
+/// barrier waits of an exchange.
 unsafe fn run_worker(job: Job, index: usize) {
     let my = &*job.assign.add(index);
     let plan = std::slice::from_raw_parts(job.plan, job.plan_len);
+    let groups = std::slice::from_raw_parts(job.groups, job.n_groups);
     let barrier = &*job.barrier;
-    for &(step, ex) in plan {
+    let mut sense = false;
+    let (mut run_ns, mut stall_ns, mut exchange_ns) = (0u64, 0u64, 0u64);
+    let mut idx = 0;
+    while idx < plan.len() {
+        let (step, ex) = plan[idx];
+        idx += 1;
         for &si in my.iter() {
             let sh = &mut *job.shards.add(si);
             let d = sh.0.domain;
+            let t0 = Instant::now();
             sh.0.engine.run_cycles(d, step);
+            let dt = t0.elapsed().as_nanos() as u64;
+            run_ns += dt;
+            let p = &mut sh.0.profile;
+            p.run_ns += dt;
+            p.windows += 1;
+            p.awake_integral += sh.0.engine.awake_components_all() as u64 * step;
         }
         if ex {
-            if barrier.wait().is_leader() {
-                let links = std::slice::from_raw_parts(job.links, job.n_links);
-                exchange_all(links, job.shards, job.n_shards);
+            let b0 = Instant::now();
+            let mut ex_ns = 0u64;
+            if barrier.wait(&mut sense).is_leader() {
+                let e0 = Instant::now();
+                let ctl = &mut *(*job.ctl).get();
+                exchange_groups(groups, job.shards, job.n_shards, ctl);
+                ctl.exchanges += 1;
+                if job.adaptive
+                    && idx < plan.len()
+                    && all_quiescent(job.shards, job.n_shards, groups)
+                {
+                    ctl.sprint = true;
+                }
+                ex_ns = e0.elapsed().as_nanos() as u64;
             }
-            barrier.wait();
+            barrier.wait(&mut sense);
+            stall_ns += (b0.elapsed().as_nanos() as u64).saturating_sub(ex_ns);
+            exchange_ns += ex_ns;
+            if (*(*job.ctl).get()).sprint {
+                // Global quiescence is proven: the remaining windows can
+                // neither tick a component nor move a beat, so
+                // fast-forward through them with no further barriers.
+                let remaining: Cycle = plan[idx..].iter().map(|&(s, _)| s).sum();
+                if remaining > 0 {
+                    let t0 = Instant::now();
+                    for &si in my.iter() {
+                        let sh = &mut *job.shards.add(si);
+                        let d = sh.0.domain;
+                        sh.0.engine.run_cycles_quiescent(d, remaining);
+                    }
+                    run_ns += t0.elapsed().as_nanos() as u64;
+                }
+                break;
+            }
         }
     }
+    let wp = &mut *job.wprof.add(index);
+    wp.run_ns += run_ns;
+    wp.stall_ns += stall_ns;
+    wp.exchange_ns += exchange_ns;
 }
 
 /// Aborts the process if dropped while panicking. A panic mid-parallel-run
@@ -603,40 +1040,71 @@ impl Drop for WorkerPool {
     }
 }
 
+/// Scheduler counters accumulated across runs (see
+/// [`ShardProfileReport`] for the public view).
+#[derive(Default)]
+struct ProfTotals {
+    runs: u64,
+    sprints: u64,
+    exchanges: u64,
+    groups_skipped: u64,
+    groups_exchanged: u64,
+    placements: u64,
+}
+
 /// The parallel engine: a vector of shards, the exchange links cut
-/// between them, the epoch schedule, and the persistent worker pool.
+/// between them (grouped per shard pair), the epoch schedule, and the
+/// persistent worker pool.
 pub struct ShardedEngine {
     shards: Vec<SendShard>,
-    links: Vec<LinkEntry>,
+    groups: Vec<LinkGroup>,
+    /// (producer shard, consumer shard) → index into `groups`.
+    group_ix: HashMap<(usize, usize), usize>,
+    /// Index of the always-exchanged catch-all group, if one exists.
+    catchall: Option<usize>,
     epoch: Cycle,
     threads: usize,
+    policy: EpochPolicy,
     cycles: Cycle,
     sleep_enabled: bool,
     pool: Option<WorkerPool>,
+    assign_cache: Option<AssignCache>,
+    /// Bumped when the placement weights change meaning: 0 = component
+    /// counts (pre-measurement), 1 = measured per-shard run time.
+    weight_gen: u64,
+    prof_workers: Vec<WorkerProfile>,
+    totals: ProfTotals,
 }
 
 impl ShardedEngine {
     /// `n_shards` shard-private engines (each with a single 1 GHz
     /// clock), exchanging every `epoch` cycles, advanced by up to
     /// `threads` worker threads (more threads than shards is fine; the
-    /// surplus is simply never spawned).
+    /// surplus is simply never spawned). Out-of-range values are
+    /// normalized here; the CLI/config paths reject them earlier with
+    /// typed errors (`EngineOpts::validate`).
     pub fn new(n_shards: usize, epoch: Cycle, threads: usize) -> Self {
-        assert!(n_shards >= 1, "need at least one shard");
-        assert!(epoch >= 1, "epoch must be at least one cycle");
-        let shards = (0..n_shards)
+        let shards = (0..n_shards.max(1))
             .map(|_| {
                 let (engine, domain) = Engine::single_clock();
-                SendShard(Shard { engine, domain })
+                SendShard(Shard { engine, domain, profile: ShardProfile::default() })
             })
             .collect();
         ShardedEngine {
             shards,
-            links: Vec::new(),
-            epoch,
+            groups: Vec::new(),
+            group_ix: HashMap::new(),
+            catchall: None,
+            epoch: epoch.max(1),
             threads: threads.max(1),
+            policy: EpochPolicy::Fixed,
             cycles: 0,
             sleep_enabled: true,
             pool: None,
+            assign_cache: None,
+            weight_gen: 0,
+            prof_workers: Vec::new(),
+            totals: ProfTotals::default(),
         }
     }
 
@@ -648,14 +1116,30 @@ impl ShardedEngine {
         self.shards.len()
     }
 
+    /// Index of the catch-all group, creating it on first use.
+    fn catchall_group(&mut self) -> usize {
+        match self.catchall {
+            Some(g) => g,
+            None => {
+                let g = self.groups.len();
+                self.groups.push(LinkGroup { dirty: None, links: Vec::new() });
+                self.catchall = Some(g);
+                g
+            }
+        }
+    }
+
     /// Register exchange queues with no relay endpoints: nothing is
     /// woken at exchanges, so the queue's consumer/producer components
     /// must stay awake while they have work in flight (or be registered
-    /// through [`ShardedEngine::add_links_waking`] instead).
+    /// through [`ShardedEngine::add_links_waking`] instead). Without
+    /// shard endpoints the links cannot be pair-grouped; they join the
+    /// always-exchanged catch-all group.
     pub fn add_links(&mut self, links: impl IntoIterator<Item = Arc<dyn ExchangeLink>>) {
+        let g = self.catchall_group();
         let entries =
             links.into_iter().map(|link| LinkEntry { link, producer: None, consumer: None });
-        self.links.extend(entries);
+        self.groups[g].links.extend(entries);
     }
 
     /// Register exchange queues whose endpoints sleep between
@@ -664,7 +1148,9 @@ impl ShardedEngine {
     /// are (shard index, component) pairs; the shard indices are
     /// validated here (shards are never removed, so the check stays
     /// good) rather than on the exchange hot path, where release builds
-    /// would otherwise dereference out of bounds.
+    /// would otherwise dereference out of bounds. The links join the
+    /// (producer shard, consumer shard) exchange group, so boundaries
+    /// where the pair moved nothing skip them wholesale.
     pub fn add_links_waking(
         &mut self,
         links: impl IntoIterator<Item = Arc<dyn ExchangeLink>>,
@@ -678,11 +1164,30 @@ impl ShardedEngine {
             producer.0,
             consumer.0
         );
-        self.links.extend(links.into_iter().map(|link| LinkEntry {
-            link,
-            producer: Some(producer),
-            consumer: Some(consumer),
-        }));
+        let key = (producer.0, consumer.0);
+        let gix = match self.group_ix.get(&key) {
+            Some(&g) => g,
+            None => {
+                let g = self.groups.len();
+                let dirty = Some(Arc::new(PairDirty::default()));
+                self.groups.push(LinkGroup { dirty, links: Vec::new() });
+                self.group_ix.insert(key, g);
+                g
+            }
+        };
+        for link in links {
+            let dirty =
+                self.groups[gix].dirty.as_ref().expect("pair groups carry dirty flags").clone();
+            // SAFETY: registration is single-threaded, before any shard
+            // advances (the engine is being built).
+            let tracked = unsafe { link.set_group(dirty) };
+            let target = if tracked { gix } else { self.catchall_group() };
+            self.groups[target].links.push(LinkEntry {
+                link,
+                producer: Some(producer),
+                consumer: Some(consumer),
+            });
+        }
     }
 
     /// Disable (or re-enable) sleep/wake tracking in every shard — the
@@ -706,6 +1211,17 @@ impl ShardedEngine {
         self.threads
     }
 
+    /// Set the epoch pacing policy. Either policy yields bit-identical
+    /// results (see [`EpochPolicy`]); adaptive is faster on workloads
+    /// with idle stretches.
+    pub fn set_policy(&mut self, policy: EpochPolicy) {
+        self.policy = policy;
+    }
+
+    pub fn policy(&self) -> EpochPolicy {
+        self.policy
+    }
+
     pub fn cycles(&self) -> Cycle {
         self.cycles
     }
@@ -721,6 +1237,22 @@ impl ShardedEngine {
 
     pub fn awake_components(&self) -> usize {
         self.shards.iter().map(|s| s.0.awake_components()).sum()
+    }
+
+    /// The accumulated per-shard / per-worker profile and scheduler
+    /// counters. Cheap to call (copies the counters); all values are
+    /// totals since the engine was built.
+    pub fn shard_profile(&self) -> ShardProfileReport {
+        ShardProfileReport {
+            shards: self.shards.iter().map(|s| s.0.profile).collect(),
+            workers: self.prof_workers.clone(),
+            runs: self.totals.runs,
+            sprints: self.totals.sprints,
+            exchanges: self.totals.exchanges,
+            groups_skipped: self.totals.groups_skipped,
+            groups_exchanged: self.totals.groups_exchanged,
+            placements_computed: self.totals.placements,
+        }
     }
 
     /// Split `cycles` into steps between exchange boundaries. The
@@ -750,44 +1282,121 @@ impl ShardedEngine {
         }
     }
 
+    /// Make sure the cached LPT assignment matches the current worker
+    /// count, shard set, and weight generation; recompute on mismatch.
+    /// Generation 0 weighs shards by component count; once every shard
+    /// has measured run time, `run` bumps the generation and the weights
+    /// refine to the profiler's per-shard `run_ns`.
+    fn ensure_assignment(&mut self, workers: usize) {
+        let n = self.shards.len();
+        let stale = match &self.assign_cache {
+            Some(c) => c.workers != workers || c.n_shards != n || c.weight_gen != self.weight_gen,
+            None => true,
+        };
+        if stale {
+            let weights: Vec<u64> = if self.weight_gen == 0 {
+                self.shards.iter().map(|s| s.0.component_count().max(1) as u64).collect()
+            } else {
+                self.shards.iter().map(|s| s.0.profile.run_ns.max(1)).collect()
+            };
+            let assign = weighted_assignment(&weights, workers);
+            self.totals.placements += 1;
+            self.assign_cache =
+                Some(AssignCache { workers, n_shards: n, weight_gen: self.weight_gen, assign });
+        }
+    }
+
     /// Advance every shard by `cycles` cycles, exchanging at each epoch
-    /// boundary crossed. Bit-identical for every thread count.
+    /// boundary crossed. Bit-identical for every thread count and both
+    /// epoch policies.
     pub fn run(&mut self, cycles: Cycle) {
         if cycles == 0 {
             return;
         }
         let plan = self.plan(cycles);
+        let adaptive = self.policy == EpochPolicy::Adaptive;
         let workers = self.threads.min(self.shards.len());
+        let mut ctl = RunCtl::default();
         if workers <= 1 || cycles == 1 {
             // Serial path (also used for per-cycle stepping): the
             // caller's thread advances every shard back-to-back.
-            for &(step, ex) in &plan {
+            if self.prof_workers.is_empty() {
+                self.prof_workers.push(WorkerProfile::default());
+            }
+            let (mut run_ns, mut exchange_ns) = (0u64, 0u64);
+            let mut idx = 0;
+            while idx < plan.len() {
+                let (step, ex) = plan[idx];
+                idx += 1;
                 for sh in &mut self.shards {
                     let d = sh.0.domain;
+                    let t0 = Instant::now();
                     sh.0.engine.run_cycles(d, step);
+                    let dt = t0.elapsed().as_nanos() as u64;
+                    run_ns += dt;
+                    let awake = sh.0.engine.awake_components_all() as u64;
+                    let p = &mut sh.0.profile;
+                    p.run_ns += dt;
+                    p.windows += 1;
+                    p.awake_integral += awake * step;
                 }
                 if ex {
+                    let e0 = Instant::now();
                     // SAFETY: no worker threads are running; the
                     // caller's thread has exclusive access to all
                     // shards.
                     unsafe {
-                        exchange_all(&self.links, self.shards.as_mut_ptr(), self.shards.len());
+                        exchange_groups(
+                            &self.groups,
+                            self.shards.as_mut_ptr(),
+                            self.shards.len(),
+                            &mut ctl,
+                        );
+                    }
+                    ctl.exchanges += 1;
+                    let mut sprint = false;
+                    if adaptive && idx < plan.len() {
+                        let ptr = self.shards.as_mut_ptr();
+                        // SAFETY: as above.
+                        sprint = unsafe { all_quiescent(ptr, self.shards.len(), &self.groups) };
+                    }
+                    exchange_ns += e0.elapsed().as_nanos() as u64;
+                    if sprint {
+                        ctl.sprint = true;
+                        let remaining: Cycle = plan[idx..].iter().map(|&(s, _)| s).sum();
+                        let t0 = Instant::now();
+                        for sh in &mut self.shards {
+                            let d = sh.0.domain;
+                            sh.0.engine.run_cycles_quiescent(d, remaining);
+                        }
+                        run_ns += t0.elapsed().as_nanos() as u64;
+                        break;
                     }
                 }
             }
+            self.prof_workers[0].run_ns += run_ns;
+            self.prof_workers[0].exchange_ns += exchange_ns;
         } else {
             self.ensure_pool(workers);
-            let assign = weighted_assignment(&self.shards, workers);
-            let barrier = Barrier::new(workers);
+            self.ensure_assignment(workers);
+            if self.prof_workers.len() < workers {
+                self.prof_workers.resize(workers, WorkerProfile::default());
+            }
+            let barrier = SpinBarrier::new(workers);
+            let ctl_cell = UnsafeCell::new(ctl);
+            let assign = &self.assign_cache.as_ref().expect("assignment just ensured").assign;
             let job = Job {
                 shards: self.shards.as_mut_ptr(),
                 n_shards: self.shards.len(),
                 assign: assign.as_ptr(),
                 plan: plan.as_ptr(),
                 plan_len: plan.len(),
-                links: self.links.as_ptr(),
-                n_links: self.links.len(),
+                groups: self.groups.as_ptr(),
+                n_groups: self.groups.len(),
                 barrier: &barrier,
+                ctl: &ctl_cell,
+                wprof: self.prof_workers.as_mut_ptr(),
+                adaptive,
             };
             let pool = self.pool.as_ref().expect("pool exists when workers > 1");
             // Unwinding past this frame while the job is live would
@@ -803,6 +1412,20 @@ impl ShardedEngine {
                 run_worker(job, 0);
             }
             pool.wait_done();
+            ctl = ctl_cell.into_inner();
+        }
+        self.totals.runs += 1;
+        self.totals.exchanges += ctl.exchanges;
+        self.totals.groups_skipped += ctl.groups_skipped;
+        self.totals.groups_exchanged += ctl.groups_exchanged;
+        if ctl.sprint {
+            self.totals.sprints += 1;
+        }
+        // Once every shard has a measured window, refine the placement
+        // weights from component counts to measured run time (exactly
+        // one extra LPT recompute, on the next parallel run).
+        if self.weight_gen == 0 && self.shards.iter().all(|s| s.0.profile.windows > 0) {
+            self.weight_gen = 1;
         }
         self.cycles += cycles;
     }
@@ -862,6 +1485,103 @@ mod tests {
         assert!(!ex.delivered && ex.credited, "second exchange only returns the credit");
     }
 
+    #[test]
+    fn drained_tracks_both_directions() {
+        let (tx, rx, link) = exchange_channel::<u32>("x", 4);
+        let drained = |l: &Arc<dyn ExchangeLink>| unsafe { l.is_drained() };
+        assert!(drained(&link), "fresh queue is drained");
+        tx.send(1);
+        assert!(!drained(&link), "buffered beat on the producer side");
+        xch(&link);
+        assert!(!drained(&link), "beat now in the inbox");
+        assert_eq!(rx.recv(), Some(1));
+        assert!(!drained(&link), "credit still owed to the producer");
+        xch(&link);
+        assert!(drained(&link), "credit returned; both sides empty");
+    }
+
+    #[test]
+    fn spin_barrier_single_participant_is_always_leader() {
+        let b = SpinBarrier::new(1);
+        let mut sense = false;
+        for _ in 0..10 {
+            assert!(b.wait(&mut sense).is_leader());
+        }
+    }
+
+    #[test]
+    fn spin_barrier_elects_exactly_one_leader_per_round() {
+        const THREADS: usize = 4;
+        const ROUNDS: usize = 200;
+        let barrier = Arc::new(SpinBarrier::new(THREADS));
+        let leaders = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let barrier = barrier.clone();
+                let leaders = leaders.clone();
+                std::thread::spawn(move || {
+                    let mut sense = false;
+                    for _ in 0..ROUNDS {
+                        if barrier.wait(&mut sense).is_leader() {
+                            leaders.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Reuse across rounds with exactly one leader per round: any
+        // missed reset or sense glitch would deadlock or double-elect.
+        assert_eq!(leaders.load(Ordering::Relaxed), ROUNDS);
+    }
+
+    #[test]
+    fn spin_barrier_releases_parked_spinners_on_late_arrival() {
+        // The early arriver spins well past SPIN_BEFORE_YIELD into the
+        // yield loop before the late arriver shows up; both must pass,
+        // with exactly one leader.
+        let barrier = Arc::new(SpinBarrier::new(2));
+        let worker = {
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let mut sense = false;
+                barrier.wait(&mut sense).is_leader()
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let mut sense = false;
+        let me = barrier.wait(&mut sense).is_leader();
+        let them = worker.join().unwrap();
+        assert!(me ^ them, "exactly one leader per round");
+    }
+
+    #[test]
+    fn spin_barrier_survives_handle_drop_while_parked() {
+        // Dropping one participant's Arc handle right after its last
+        // wait — while peers may still be inside theirs — must not free
+        // the barrier out from under them.
+        let barrier = Arc::new(SpinBarrier::new(3));
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    let mut sense = false;
+                    barrier.wait(&mut sense);
+                    barrier.wait(&mut sense);
+                })
+            })
+            .collect();
+        let mut sense = false;
+        barrier.wait(&mut sense);
+        barrier.wait(&mut sense);
+        drop(barrier);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
     /// Sends `0..total`, one per cycle, as credits allow.
     struct Sender {
         tx: ExchangeTx<u64>,
@@ -897,6 +1617,46 @@ mod tests {
         }
         fn name(&self) -> &str {
             "receiver"
+        }
+    }
+
+    /// Like `Sender`, but sleeps once everything is sent (so the engine
+    /// can prove quiescence for adaptive sprints).
+    struct IdleSender {
+        tx: ExchangeTx<u64>,
+        next: u64,
+        total: u64,
+    }
+
+    impl Component for IdleSender {
+        fn tick(&mut self, _cy: Cycle) -> Activity {
+            if self.next < self.total && self.tx.can_send() {
+                self.tx.send(self.next);
+                self.next += 1;
+            }
+            Activity::active_if(self.next < self.total)
+        }
+        fn name(&self) -> &str {
+            "idle-sender"
+        }
+    }
+
+    /// Like `Receiver`, but sleeps while its inbox is empty (woken by
+    /// the exchange's relay wake when beats arrive).
+    struct IdleReceiver {
+        rx: ExchangeRx<u64>,
+        log: Rc<RefCell<Vec<(Cycle, u64)>>>,
+    }
+
+    impl Component for IdleReceiver {
+        fn tick(&mut self, cy: Cycle) -> Activity {
+            if let Some(v) = self.rx.recv() {
+                self.log.borrow_mut().push((cy, v));
+            }
+            Activity::active_if(self.rx.pending() > 0)
+        }
+        fn name(&self) -> &str {
+            "idle-receiver"
         }
     }
 
@@ -986,8 +1746,74 @@ mod tests {
         assert_eq!(eng.component_count(), 2);
     }
 
+    /// Bit-identical results across thread counts and both policies,
+    /// with the adaptive policy actually sprinting through the idle
+    /// tail (and the fixed policy skipping the clean pair group).
     #[test]
-    fn weighted_placement_isolates_heavy_shard() {
+    fn adaptive_sprint_is_bit_identical_and_observed() {
+        let run_with = |threads: usize, policy: EpochPolicy| {
+            let mut eng = ShardedEngine::new(2, 4, threads);
+            eng.set_policy(policy);
+            let (tx, rx, link) = exchange_channel::<u64>("x", 16);
+            let log = Rc::new(RefCell::new(Vec::new()));
+            // SAFETY: shards only share the exchange queue (see above).
+            let sid = unsafe { eng.shard(0).add(IdleSender { tx, next: 0, total: 10 }) };
+            let rid = unsafe { eng.shard(1).add(IdleReceiver { rx, log: log.clone() }) };
+            eng.add_links_waking([link], (0, sid), (1, rid));
+            eng.run(400);
+            assert_eq!(eng.cycles(), 400);
+            let out = log.borrow().clone();
+            (out, eng.shard_profile())
+        };
+        let (base, fixed_prof) = run_with(1, EpochPolicy::Fixed);
+        assert_eq!(base.len(), 10);
+        for (threads, policy) in
+            [(1, EpochPolicy::Adaptive), (2, EpochPolicy::Fixed), (2, EpochPolicy::Adaptive)]
+        {
+            let (out, prof) = run_with(threads, policy);
+            assert_eq!(out, base, "threads={threads} policy={policy:?}");
+            if policy == EpochPolicy::Adaptive {
+                assert!(prof.sprints >= 1, "idle tail must trigger a sprint");
+                assert!(
+                    prof.exchanges < fixed_prof.exchanges,
+                    "sprint must elide boundary exchanges ({} vs {})",
+                    prof.exchanges,
+                    fixed_prof.exchanges
+                );
+            } else {
+                assert_eq!(prof.sprints, 0, "fixed policy never sprints");
+            }
+        }
+        // All traffic is done well before cycle 400: the fixed policy
+        // keeps hitting boundaries but skips the clean pair group.
+        assert_eq!(fixed_prof.sprints, 0);
+        assert_eq!(fixed_prof.exchanges, 100);
+        assert!(fixed_prof.groups_skipped > 0, "idle boundaries skip the clean group");
+    }
+
+    #[test]
+    fn clean_pair_groups_are_skipped() {
+        let mut eng = ShardedEngine::new(2, 4, 1);
+        let (tx, rx, link) = exchange_channel::<u64>("x", 4);
+        // SAFETY: Nop components share nothing across shards.
+        let (a, b) = unsafe { (eng.shard(0).add(Nop), eng.shard(1).add(Nop)) };
+        eng.add_links_waking([link], (0, a), (1, b));
+        eng.run(40);
+        let prof = eng.shard_profile();
+        assert_eq!(prof.exchanges, 10, "every boundary still checks in");
+        assert_eq!(prof.groups_skipped, 10, "clean pair group skipped at each");
+        assert_eq!(prof.groups_exchanged, 0);
+        // Traffic from an external handle (between runs) marks the pair
+        // dirty, so the next boundary exchanges it.
+        tx.send(7);
+        eng.run(4);
+        let prof = eng.shard_profile();
+        assert_eq!(prof.groups_exchanged, 1, "dirty pair group exchanges once");
+        assert_eq!(rx.pending(), 1, "the beat crossed at the boundary");
+    }
+
+    #[test]
+    fn placement_cached_until_weights_refine() {
         let mut eng = ShardedEngine::new(3, 4, 2);
         // SAFETY: Nop components share nothing across shards.
         unsafe {
@@ -997,7 +1823,35 @@ mod tests {
             eng.shard(1).add(Nop);
             eng.shard(2).add(Nop);
         }
-        let assign = weighted_assignment(&eng.shards, 2);
+        eng.run(8); // placement 1: component-count weights
+        eng.run(8); // placement 2: refined to measured run time
+        eng.run(8); // cache hit
+        eng.run(8); // cache hit
+        assert_eq!(eng.shard_profile().placements_computed, 2);
+        assert_eq!(eng.shard_profile().runs, 4);
+    }
+
+    #[test]
+    fn profile_counts_windows_and_workers() {
+        let mut eng = ShardedEngine::new(2, 4, 2);
+        // SAFETY: as above.
+        unsafe {
+            eng.shard(0).add(Nop);
+            eng.shard(1).add(Nop);
+        }
+        eng.run(12);
+        let prof = eng.shard_profile();
+        assert_eq!(prof.shards.len(), 2);
+        assert_eq!(prof.workers.len(), 2);
+        for s in &prof.shards {
+            assert_eq!(s.windows, 3, "12 cycles / epoch 4 = 3 windows per shard");
+        }
+        assert!(prof.exchange_stall_frac() >= 0.0 && prof.exchange_stall_frac() <= 1.0);
+    }
+
+    #[test]
+    fn weighted_placement_isolates_heavy_shard() {
+        let assign = weighted_assignment(&[5, 1, 1], 2);
         assert_eq!(assign, vec![vec![0], vec![1, 2]], "heavy shard 0 gets its own worker");
         // Every shard appears exactly once.
         let mut all: Vec<usize> = assign.into_iter().flatten().collect();
@@ -1007,16 +1861,8 @@ mod tests {
 
     #[test]
     fn weighted_placement_covers_every_worker() {
-        let mut eng = ShardedEngine::new(6, 4, 4);
-        // SAFETY: as above.
-        unsafe {
-            for i in 0..6 {
-                for _ in 0..=i {
-                    eng.shard(i).add(Nop);
-                }
-            }
-        }
-        let assign = weighted_assignment(&eng.shards, 4);
+        let weights: Vec<u64> = (1..=6).collect();
+        let assign = weighted_assignment(&weights, 4);
         assert_eq!(assign.len(), 4);
         assert!(assign.iter().all(|a| !a.is_empty()), "LPT must feed every worker");
         let mut all: Vec<usize> = assign.into_iter().flatten().collect();

@@ -14,8 +14,8 @@ use noc::protocol::channel::{wire, Rx, Tx};
 use noc::protocol::exchange::cut_slave_export;
 use noc::protocol::{bundle, BundleCfg, Cmd, MasterEnd, SlaveEnd};
 use noc::sim::{
-    exchange_channel, Activity, Component, ComponentId, Cycle, Engine, ExchangeRx, ExchangeTx,
-    ShardedEngine, SplitMix64, WakeSet,
+    exchange_channel, Activity, Component, ComponentId, Cycle, Engine, EpochPolicy, ExchangeRx,
+    ExchangeTx, ShardedEngine, SplitMix64, WakeSet,
 };
 
 /// Logs (tag, domain cycle) on every tick; always active.
@@ -365,10 +365,10 @@ fn cut_channel_backpressure_across_epoch_boundary() {
 
 /// A mixed sharded workload: cross-cluster DMA, an HBM read, and core
 /// traffic over the core network — all crossing the epoch-exchange cuts.
-fn sharded_chiplet_fp(threads: usize, full_scan: bool) -> String {
+fn sharded_chiplet_fp(threads: usize, full_scan: bool, policy: EpochPolicy) -> String {
     use noc::manticore::cluster::addr;
     let mut cfg = ChipletCfg::small();
-    cfg.engine = noc::sim::EngineOpts { threads: Some(threads), epoch: 4, full_scan };
+    cfg.engine = noc::sim::EngineOpts { threads: Some(threads), epoch: 4, policy, full_scan };
     let mut ch = Chiplet::new(cfg);
     ch.clusters[0].cores.borrow_mut().set_cfg(noc::traffic::gen::RwGenCfg {
         pattern: noc::traffic::gen::AddrPattern::Uniform {
@@ -400,28 +400,50 @@ fn sharded_chiplet_fp(threads: usize, full_scan: bool) -> String {
     });
     assert!(ok, "sharded workload must complete (threads={threads}, full_scan={full_scan})");
     assert_eq!(ch.clusters[1].l1.borrow().banks.borrow().peek_vec(dst, 512), vec![0x5A; 512]);
+    // Idle tail: all traffic has retired, so these boundaries are pure
+    // no-ops — the adaptive policy sprints through them while the fixed
+    // policy walks every one; the fingerprint must not notice either
+    // way (the tail lengthens `cycles` identically for every config).
+    ch.run(1024);
     determinism_fingerprint(&ch)
 }
 
 #[test]
 fn sharded_chiplet_fingerprint_identical_across_thread_counts() {
-    let base = sharded_chiplet_fp(1, false);
+    let base = sharded_chiplet_fp(1, false, EpochPolicy::Fixed);
     for t in thread_counts().into_iter().skip(1) {
-        assert_eq!(base, sharded_chiplet_fp(t, false), "threads={t} must match threads=1");
+        let fp = sharded_chiplet_fp(t, false, EpochPolicy::Fixed);
+        assert_eq!(base, fp, "threads={t} must match threads=1");
     }
 }
 
 #[test]
 fn sharded_chiplet_event_matches_full_scan() {
-    assert_eq!(sharded_chiplet_fp(1, false), sharded_chiplet_fp(1, true), "1 thread");
-    assert_eq!(sharded_chiplet_fp(2, false), sharded_chiplet_fp(2, true), "2 threads");
+    let fp = |t, fs| sharded_chiplet_fp(t, fs, EpochPolicy::Fixed);
+    assert_eq!(fp(1, false), fp(1, true), "1 thread");
+    assert_eq!(fp(2, false), fp(2, true), "2 threads");
+}
+
+#[test]
+fn sharded_chiplet_adaptive_epochs_match_fixed() {
+    // The full matrix the adaptive policy must not perturb: thread
+    // counts {1, 2, 4, 8} in event mode, plus the full-scan oracle
+    // (which never sprints — everything is always awake).
+    let base = sharded_chiplet_fp(1, false, EpochPolicy::Fixed);
+    for t in [1usize, 2, 4, 8] {
+        let fp = sharded_chiplet_fp(t, false, EpochPolicy::Adaptive);
+        assert_eq!(base, fp, "adaptive, event mode, threads={t}");
+    }
+    let fp = sharded_chiplet_fp(2, true, EpochPolicy::Adaptive);
+    assert_eq!(base, fp, "adaptive under the full-scan oracle");
 }
 
 #[test]
 fn more_threads_than_clusters_is_deterministic() {
     // The small chiplet has 4 clusters (5 shards); 16 worker threads
     // means most threads get no shard — the result must not change.
-    assert_eq!(sharded_chiplet_fp(1, false), sharded_chiplet_fp(16, false));
+    let fp = |t| sharded_chiplet_fp(t, false, EpochPolicy::Fixed);
+    assert_eq!(fp(1), fp(16));
 }
 
 // ---------------------------------------------------------------------------
@@ -493,9 +515,10 @@ impl Component for StressReceiver {
 /// Many-epoch randomized exchange stress over a ring of shards plus two
 /// chords, with small capacities so credits exhaust and refill many
 /// times. Returns every receiver's full (cycle, value) log.
-fn stress_logs(threads: usize, full_scan: bool) -> Vec<Vec<(Cycle, u64)>> {
+fn stress_logs(threads: usize, full_scan: bool, policy: EpochPolicy) -> Vec<Vec<(Cycle, u64)>> {
     const TOTAL: u64 = 120;
     let mut eng = ShardedEngine::new(4, 5, threads);
+    eng.set_policy(policy);
     if full_scan {
         eng.set_sleep(false);
     }
@@ -541,15 +564,29 @@ fn stress_logs(threads: usize, full_scan: bool) -> Vec<Vec<(Cycle, u64)>> {
 
 #[test]
 fn lockfree_exchange_stress_identical_across_threads_and_modes() {
-    let base = stress_logs(1, false);
+    let base = stress_logs(1, false, EpochPolicy::Fixed);
     for t in [2usize, 4, 8] {
-        assert_eq!(base, stress_logs(t, false), "threads={t} must match threads=1");
+        assert_eq!(base, stress_logs(t, false, EpochPolicy::Fixed), "threads={t} vs threads=1");
     }
     for t in thread_counts().into_iter().skip(3) {
-        assert_eq!(base, stress_logs(t, false), "NOC_TEST_THREADS={t}");
+        assert_eq!(base, stress_logs(t, false, EpochPolicy::Fixed), "NOC_TEST_THREADS={t}");
     }
-    assert_eq!(base, stress_logs(1, true), "full-scan oracle, 1 thread");
-    assert_eq!(base, stress_logs(4, true), "full-scan oracle, 4 threads");
+    assert_eq!(base, stress_logs(1, true, EpochPolicy::Fixed), "full-scan oracle, 1 thread");
+    assert_eq!(base, stress_logs(4, true, EpochPolicy::Fixed), "full-scan oracle, 4 threads");
+}
+
+#[test]
+fn lockfree_exchange_stress_identical_under_adaptive_epochs() {
+    // The adaptive policy only elides boundaries proven to be no-ops
+    // (every shard asleep, every queue drained), so the randomized
+    // credit-exhausting stress must replay bit-identically for every
+    // thread count and in both engine modes.
+    let base = stress_logs(1, false, EpochPolicy::Fixed);
+    for t in [1usize, 2, 4, 8] {
+        assert_eq!(base, stress_logs(t, false, EpochPolicy::Adaptive), "adaptive, threads={t}");
+    }
+    assert_eq!(base, stress_logs(1, true, EpochPolicy::Adaptive), "full-scan, 1 thread");
+    assert_eq!(base, stress_logs(4, true, EpochPolicy::Adaptive), "full-scan, 4 threads");
 }
 
 /// Sends a fixed burst of AR commands into a cut, then goes idle.

@@ -1,46 +1,89 @@
 #!/usr/bin/env python3
 """Bench trend check: compare fresh BENCH_*.json files against the
-previous CI run's archived artifact and fail on >20% regression of the
-tracked throughput metrics (see ROADMAP "Bench trend dashboards").
+previous CI run's archived artifact and fail on regression of the
+tracked metrics (see ROADMAP "Bench trend dashboards").
 
 Usage: check_bench_trend.py <prev-dir> <new-dir>
 
+Most tracked metrics are higher-is-better throughputs gated on relative
+change (>20% drop fails, unless the entry carries a looser threshold).
+Entries with mode="abs-increase" are lower-is-better fractions gated on
+absolute growth instead (a ratio on a near-zero baseline is noise).
+Entries with a "condition" key are only compared when that metric (e.g.
+the sharded thread count) is identical in both artifacts — comparing an
+8-thread efficiency against a 4-thread baseline would be meaningless.
+
 Exits 0 (with a note) when no previous artifact exists — the first run
 on a branch has no baseline. Exits 1 when any tracked metric regressed
-by more than the threshold.
+past its gate, or when the fresh tab2 artifact was not produced at
+>= MIN_SHARDED_THREADS worker threads (the scaling gate must actually
+exercise scaling).
 """
 
 import json
 import sys
 from pathlib import Path
 
-# (file name, metric key[, threshold]) tuples; all tracked metrics are
-# higher-is-better throughput/speedup numbers. A missing threshold uses
-# the default below.
+# Tracked metrics. Keys: file, key, threshold (optional), mode
+# (optional: "abs-increase"), condition (optional: metric key that must
+# match between the two artifacts for the comparison to make sense).
 TRACKED = [
-    ("BENCH_tab2_manticore.json", "event_cycles_per_sec"),
-    ("BENCH_tab2_manticore.json", "speedup"),
-    ("BENCH_tab2_manticore.json", "sharded_cycles_per_sec"),
+    {"file": "BENCH_tab2_manticore.json", "key": "event_cycles_per_sec"},
+    {"file": "BENCH_tab2_manticore.json", "key": "speedup"},
+    {"file": "BENCH_tab2_manticore.json", "key": "sharded_cycles_per_sec"},
     # N-thread cycles/sec over N x 1-thread cycles/sec: the headline of
     # the lock-free/pool/weighted sharded engine. A wall-clock *ratio*
     # of two same-workload runs, so runner speed cancels — but runner
     # *noise* does not, and the quick-mode runs are sub-second, so this
     # metric gets a looser gate than the default: it still hard-fails on
     # a real scaling collapse (e.g. a reintroduced lock) while tolerating
-    # shared-runner jitter. Loosen further rather than untracking.
-    ("BENCH_tab2_manticore.json", "parallel_efficiency", 0.35),
-    ("BENCH_coordinator_engine.json", "event_cycles_per_sec"),
-    ("BENCH_coordinator_engine.json", "speedup"),
+    # shared-runner jitter. Loosen further rather than untracking. Only
+    # comparable at an unchanged thread count.
+    {
+        "file": "BENCH_tab2_manticore.json",
+        "key": "parallel_efficiency",
+        "threshold": 0.35,
+        "condition": "sharded_threads",
+    },
+    # Fraction of worker wall clock stalled at the epoch barrier or in
+    # the exchange. Lower is better and legitimately near zero, so the
+    # gate is absolute growth, not a ratio.
+    {
+        "file": "BENCH_tab2_manticore.json",
+        "key": "exchange_stall_frac",
+        "threshold": 0.15,
+        "mode": "abs-increase",
+        "condition": "sharded_threads",
+    },
+    # Wall-clock ratio of fixed vs adaptive epoch pacing over an idle
+    # tail; same noise profile as parallel_efficiency.
+    {
+        "file": "BENCH_tab2_manticore.json",
+        "key": "adaptive_epoch_speedup",
+        "threshold": 0.35,
+        "condition": "sharded_threads",
+    },
+    {"file": "BENCH_coordinator_engine.json", "key": "event_cycles_per_sec"},
+    {"file": "BENCH_coordinator_engine.json", "key": "speedup"},
     # Aggregate throughput over the examples/topologies/ presets: the
     # grammar-built systems (converter trunks included). Quick-mode runs
     # are sub-second wall clocks on shared runners, so this gets the
     # looser gate (cf. parallel_efficiency above).
-    ("BENCH_coordinator_engine.json", "topology_presets_cycles_per_sec", 0.35),
+    {
+        "file": "BENCH_coordinator_engine.json",
+        "key": "topology_presets_cycles_per_sec",
+        "threshold": 0.35,
+    },
     # Simulated (deterministic) collective bandwidth: regressions here are
     # real scheduling/fabric changes, not runner noise.
-    ("BENCH_collective.json", "allreduce_bytes_per_cycle"),
+    {"file": "BENCH_collective.json", "key": "allreduce_bytes_per_cycle"},
 ]
 THRESHOLD = 0.20
+
+# The parallel_efficiency gate must be measured at real scale: fail if
+# the fresh tab2 artifact ran its sharded section below this many worker
+# threads (CI pins NOC_BENCH_THREADS=8).
+MIN_SHARDED_THREADS = 8
 
 
 _METRICS_CACHE = {}
@@ -72,18 +115,45 @@ def metrics(path: Path):
     return result
 
 
+def check_sharded_threads(new_dir: Path, failures):
+    """Hard gate: the fresh tab2 sharded section ran at >= 8 threads."""
+    fname = "BENCH_tab2_manticore.json"
+    new_file = new_dir / fname
+    if not new_file.exists():
+        return  # the tracked-metric loop reports the missing file
+    new_metrics = metrics(new_file)
+    if new_metrics is None:
+        return  # likewise
+    threads = new_metrics.get("sharded_threads")
+    if threads is None or threads < MIN_SHARDED_THREADS:
+        failures.append(
+            f"{fname}: sharded_threads is {threads!r}, scaling gate requires "
+            f">= {MIN_SHARDED_THREADS} (set NOC_BENCH_THREADS)"
+        )
+    else:
+        print(f"{fname}: sharded_threads = {threads:g} (gate >= {MIN_SHARDED_THREADS}) ok")
+
+
 def main(argv):
     if len(argv) != 3:
         print(__doc__)
         return 2
     prev_dir, new_dir = Path(argv[1]), Path(argv[2])
+    failures = []
+    check_sharded_threads(new_dir, failures)
     if not prev_dir.is_dir():
         print(f"no previous bench artifact at {prev_dir}; skipping trend check")
+        if failures:
+            print("\nbench trend check FAILED:")
+            for f in failures:
+                print(f"  - {f}")
+            return 1
         return 0
-    failures = []
     for entry in TRACKED:
-        fname, key = entry[0], entry[1]
-        threshold = entry[2] if len(entry) > 2 else THRESHOLD
+        fname, key = entry["file"], entry["key"]
+        threshold = entry.get("threshold", THRESHOLD)
+        mode = entry.get("mode", "relative")
+        condition = entry.get("condition")
         prev_file, new_file = prev_dir / fname, new_dir / fname
         if not prev_file.exists():
             print(f"{fname}:{key}: no previous copy, skipping")
@@ -101,13 +171,41 @@ def main(argv):
             if msg not in failures:
                 failures.append(msg)
             continue
+        if condition is not None:
+            prev_cond = prev_metrics.get(condition)
+            new_cond = new_metrics.get(condition)
+            if prev_cond != new_cond:
+                print(
+                    f"{fname}:{key}: {condition} changed "
+                    f"({prev_cond!r} -> {new_cond!r}), not comparable, skipping"
+                )
+                continue
         prev = prev_metrics.get(key)
         new = new_metrics.get(key)
-        if prev is None or prev <= 0:
+        if prev is None:
             print(f"{fname}:{key}: no previous value, skipping")
             continue
         if new is None:
             failures.append(f"{fname}:{key}: metric missing from fresh results")
+            continue
+        if mode == "abs-increase":
+            # Lower-is-better fraction: gate on absolute growth (a ratio
+            # against a near-zero baseline would be all noise). Zero is a
+            # legitimate value here.
+            change = new - prev
+            regressed = change > threshold
+            print(
+                f"{fname}:{key}: {prev:.4g} -> {new:.4g} "
+                f"({change:+.3f} abs, gate +{threshold:.2f}) "
+                f"{'REGRESSION' if regressed else 'ok'}"
+            )
+            if regressed:
+                failures.append(
+                    f"{fname}:{key} grew {change:+.3f} ({prev:.4g} -> {new:.4g})"
+                )
+            continue
+        if prev <= 0:
+            print(f"{fname}:{key}: no positive previous value, skipping")
             continue
         if new <= 0:
             # A throughput of zero (or less) is a broken measurement, not
