@@ -1,0 +1,126 @@
+//! Multi-chiplet pod collectives over D2D links (`manticore::pod`).
+//!
+//! Headline metric: `d2d_allreduce_bytes_per_cycle` — payload bytes per
+//! simulated cycle for the hierarchical all-reduce on a 4-chiplet pod
+//! with the default (bandwidth-constrained, quarter-width) D2D link —
+//! recorded in `BENCH_multichip.json` and tracked by
+//! `scripts/check_bench_trend.py`. The bench also asserts the
+//! acceptance gates: on 4 chiplets under a constrained link the
+//! hierarchical schedule must beat the flat-ring oracle's bytes/cycle
+//! AND move strictly fewer bytes over the D2D links (simulated cycles
+//! are deterministic, so neither gate can flake on a noisy runner).
+//!
+//! Sweeps: chiplet count, D2D serialization (bandwidth), D2D latency.
+
+use noc::bench_harness::{quick, section, Report};
+use noc::manticore::chiplet::ChipletCfg;
+use noc::manticore::pod::{run_pod_collective, Pod, PodCfg, PodCollectiveResult};
+use noc::noc::d2d::D2DCfg;
+use noc::sim::EngineOpts;
+
+/// Simulation-cycle budget shared by every pod run in this bench.
+const BUDGET: u64 = 50_000_000;
+
+fn die() -> ChipletCfg {
+    // 2 clusters/die in quick mode, 4 in full — the same code path as
+    // the paper-scale die, scaled for bench wall time.
+    let fanout = if quick() { vec![2] } else { vec![2, 2] };
+    let engine = EngineOpts::sharded(4, 8);
+    ChipletCfg { fanout, engine, ..ChipletCfg::full() }
+}
+
+fn payload() -> u64 {
+    if quick() {
+        16 * 1024
+    } else {
+        32 * 1024
+    }
+}
+
+fn run(chiplets: usize, d2d: D2DCfg, bytes: u64, hier: bool) -> PodCollectiveResult {
+    let mut pod = Pod::new(PodCfg { n_chiplets: chiplets, die: die(), d2d });
+    let r = run_pod_collective(&mut pod, bytes, BUDGET, hier).expect("pod collective builds");
+    assert!(r.finished, "pod all-reduce (chiplets={chiplets}, hier={hier}) must finish");
+    assert!(r.correct, "pod all-reduce (chiplets={chiplets}, hier={hier}) must be exact");
+    r
+}
+
+fn show(label: &str, r: &PodCollectiveResult) {
+    println!(
+        "{label:<36} {:>9} cycles  {:>7.2} B/cycle  {:>9} B over D2D",
+        r.cycles, r.bytes_per_cycle, r.d2d_bytes
+    );
+}
+
+fn main() {
+    let mut report = Report::new("multichip");
+    let bytes = payload();
+    let d2d = D2DCfg::default(); // 50-cycle flight, quarter-width link
+    let m = die().n_clusters();
+
+    section(&format!(
+        "4-chiplet pod ({m} clusters/die), {bytes} B all-reduce, \
+         D2D latency {} / serialize {}",
+        d2d.latency, d2d.serialize
+    ));
+    let hier = run(4, d2d, bytes, true);
+    show("hierarchical (RS / D2D ring / AG)", &hier);
+    let flat = run(4, d2d, bytes, false);
+    show("flat ring (die-major oracle)", &flat);
+    report.metric("d2d_allreduce_bytes_per_cycle", hier.bytes_per_cycle);
+    report.metric("d2d_allreduce_cycles", hier.cycles as f64);
+    report.metric("d2d_allreduce_d2d_bytes", hier.d2d_bytes as f64);
+    report.metric("flat_allreduce_bytes_per_cycle", flat.bytes_per_cycle);
+    report.metric("flat_allreduce_d2d_bytes", flat.d2d_bytes as f64);
+    report.metric("hier_over_flat_speedup", hier.bytes_per_cycle / flat.bytes_per_cycle);
+
+    section("chiplet-count sweep (hierarchical)");
+    for nc in [2usize, 8] {
+        let r = run(nc, d2d, bytes, true);
+        show(&format!("{nc} chiplets ({} ranks)", nc * m), &r);
+        report.metric(format!("hier_bytes_per_cycle_{nc}chiplets"), r.bytes_per_cycle);
+    }
+
+    section("D2D bandwidth sweep (serialize cycles per data beat)");
+    for ser in [1u64, 8] {
+        let cfg = D2DCfg { serialize: ser, ..d2d };
+        let h = run(4, cfg, bytes, true);
+        let f = run(4, cfg, bytes, false);
+        show(&format!("serialize {ser}: hierarchical"), &h);
+        show(&format!("serialize {ser}: flat ring"), &f);
+        report.metric(format!("hier_bytes_per_cycle_ser{ser}"), h.bytes_per_cycle);
+        report.metric(format!("flat_bytes_per_cycle_ser{ser}"), f.bytes_per_cycle);
+    }
+
+    section("D2D latency sweep (hierarchical)");
+    for lat in [10u64, 200] {
+        let cfg = D2DCfg { latency: lat, ..d2d };
+        let r = run(4, cfg, bytes, true);
+        show(&format!("latency {lat}"), &r);
+        report.metric(format!("hier_bytes_per_cycle_lat{lat}"), r.bytes_per_cycle);
+    }
+
+    // Acceptance gates (deterministic — simulated cycles and byte
+    // counters): with the constrained default link, the hierarchical
+    // schedule beats the flat-ring oracle on throughput and moves
+    // strictly fewer bytes off-die (2·(d−1)·B vs ~2·d·B).
+    assert!(
+        hier.bytes_per_cycle >= flat.bytes_per_cycle,
+        "hierarchical must not lose to the flat ring on a constrained link: {:.2} vs {:.2} B/cycle",
+        hier.bytes_per_cycle,
+        flat.bytes_per_cycle
+    );
+    assert!(
+        hier.d2d_bytes < flat.d2d_bytes,
+        "hierarchical must cut off-die traffic: {} vs {} B",
+        hier.d2d_bytes,
+        flat.d2d_bytes
+    );
+    println!(
+        "\nhierarchical: {:.2}x flat-ring throughput, {:.0}% of its D2D traffic \
+         (gates: >= 1.0x, < 100%)",
+        hier.bytes_per_cycle / flat.bytes_per_cycle,
+        100.0 * hier.d2d_bytes as f64 / flat.d2d_bytes as f64
+    );
+    report.finish();
+}

@@ -41,7 +41,10 @@ use std::collections::VecDeque;
 
 use crate::noc::dma::TransferReq;
 
-pub use schedule::{build, hierarchical_order, Algo, Built, CollCfg, CollCfgBuilder, CollOp, Elem};
+pub use schedule::{
+    build, build_hier_allreduce, build_with_base, hierarchical_order, pod_hierarchical_order,
+    Algo, Built, CollCfg, CollCfgBuilder, CollOp, Elem,
+};
 pub use unit::{CollStats, CollectiveUnit, REDUCE_BYTES_PER_CYCLE};
 
 /// One step of a rank's collective program, executed in order by its

@@ -263,7 +263,8 @@ fn token(i: u64) -> u64 {
     i + 1
 }
 
-/// Per-rank resolved addresses.
+/// Per-rank resolved addresses, as seen by one specific observer rank
+/// (see [`Builder::view`]).
 #[derive(Clone, Copy)]
 struct Win {
     buf: u64,
@@ -272,14 +273,45 @@ struct Win {
     flag_src: u64,
 }
 
-struct Builder {
-    wins: Vec<Win>,
+/// The region offsets every rank's window shares (identical layout
+/// across ranks, so any rank can compute any other rank's addresses
+/// from that rank's window base alone).
+#[derive(Clone, Copy)]
+struct Layout {
+    buf: u64,
+    scratch: u64,
+    flags: u64,
+    flag_src: u64,
+}
+
+struct Builder<'a> {
+    /// `base(from, to)` is the base address of rank `to`'s window *as
+    /// addressed by rank `from`*. On a single die this ignores `from`
+    /// (every rank sees the same flat map); in a multi-chiplet pod a
+    /// remote rank's window sits behind a per-die D2D aperture, so the
+    /// observer matters (`manticore::pod`). The pod's D2D links strip
+    /// the aperture in flight, so all views of one window denote the
+    /// same physical bytes.
+    base: &'a dyn Fn(usize, usize) -> u64,
+    lay: Layout,
     sub: u64,
     n_flags: u64,
     elem: Elem,
 }
 
-impl Builder {
+impl Builder<'_> {
+    /// Rank `to`'s resolved regions as rank `from` must address them.
+    /// `view(r, r)` is always die-local: a rank's own polls, reductions
+    /// and init pokes never cross a D2D aperture.
+    fn view(&self, from: usize, to: usize) -> Win {
+        let b = (self.base)(from, to);
+        Win {
+            buf: b + self.lay.buf,
+            scratch: b + self.lay.scratch,
+            flags: b + self.lay.flags,
+            flag_src: b + self.lay.flag_src,
+        }
+    }
     /// Sub-blocks covering `len` bytes: (offset, length) pairs.
     fn subs(&self, len: u64) -> Vec<(u64, u64)> {
         let mut out = Vec::new();
@@ -304,7 +336,7 @@ impl Builder {
         len: u64,
         fbase: u64,
     ) -> Vec<TransferReq> {
-        let (me, them) = (self.wins[my], self.wins[to]);
+        let (me, them) = (self.view(my, my), self.view(my, to));
         let mut xfers = Vec::new();
         for (k, (off, l)) in self.subs(len).into_iter().enumerate() {
             let fi = fbase + k as u64;
@@ -347,7 +379,7 @@ impl Builder {
         fbase: u64,
         reduce_from: Option<(u64, u64)>,
     ) {
-        let me = self.wins[my];
+        let me = self.view(my, my);
         for (k, (off, l)) in self.subs(len).into_iter().enumerate() {
             let fi = fbase + k as u64;
             steps.push_back(CollStep::WaitFlag { addr: me.flags + fi * 8, expect: token(fi) });
@@ -366,7 +398,7 @@ impl Builder {
         if self.n_flags == 0 {
             return Vec::new();
         }
-        let me = self.wins[my];
+        let me = self.view(my, my);
         let tokens: Vec<u8> =
             (0..self.n_flags).flat_map(|i| token(i).to_le_bytes()).collect();
         vec![(me.flags, vec![0u8; (self.n_flags * 8) as usize]), (me.flag_src, tokens)]
@@ -375,8 +407,25 @@ impl Builder {
 
 /// Build per-rank programs for the collective described by `cfg` over the
 /// given `(base, size)` address windows (one per rank, in rank order —
-/// the caller maps ranks to clusters via the chiplet address map).
+/// the caller maps ranks to clusters via the chiplet address map). All
+/// ranks share one flat address map: rank `from` addresses rank `to`'s
+/// window at `windows[to].0` regardless of `from`.
 pub fn build(cfg: &CollCfg, windows: &[(u64, u64)]) -> Result<Built> {
+    build_with_base(cfg, windows, &|_from, to| windows[to].0)
+}
+
+/// As [`build`], with an observer-dependent window map: `base(from, to)`
+/// is the base address rank `from` must use to reach rank `to`'s window
+/// (`windows[to].0` only carries the size check; cross-rank traffic is
+/// addressed through `base`). This is the multi-chiplet entry point:
+/// same-die peers resolve to die-local bases, remote peers to D2D
+/// aperture bases (`manticore::pod`). `base(r, r)` must be rank `r`'s
+/// die-local base — polls, reductions and init pokes are always local.
+pub fn build_with_base(
+    cfg: &CollCfg,
+    windows: &[(u64, u64)],
+    base: &dyn Fn(usize, usize) -> u64,
+) -> Result<Built> {
     let n = windows.len();
     cfg.validate(n)?;
     let ord: Vec<usize> = match &cfg.order {
@@ -413,15 +462,13 @@ pub fn build(cfg: &CollCfg, windows: &[(u64, u64)]) -> Result<Built> {
     }
 
     let b = Builder {
-        wins: windows
-            .iter()
-            .map(|&(base, _)| Win {
-                buf: base + DATA_OFF,
-                scratch: base + scratch_off,
-                flags: base + flags_off,
-                flag_src: base + flag_src_off,
-            })
-            .collect(),
+        base,
+        lay: Layout {
+            buf: DATA_OFF,
+            scratch: scratch_off,
+            flags: flags_off,
+            flag_src: flag_src_off,
+        },
         sub,
         n_flags,
         elem: cfg.elem,
@@ -445,7 +492,7 @@ pub fn build(cfg: &CollCfg, windows: &[(u64, u64)]) -> Result<Built> {
 
     Ok(Built {
         ranks,
-        buf: b.wins.iter().map(|w| w.buf).collect(),
+        buf: (0..n).map(|r| b.view(r, r).buf).collect(),
         footprint,
         n,
         bytes,
@@ -477,7 +524,8 @@ fn build_ring(
     for p in 0..n {
         let r = ord[p];
         let next = ord[(p + 1) % n];
-        let me = b.wins[r];
+        let me = b.view(r, r);
+        let them = b.view(r, next);
         let steps = &mut ranks[r].steps;
         if p1 {
             // Reduce-scatter: rank r ends up owning reduced chunk r.
@@ -488,7 +536,7 @@ fn build_ring(
                 let (so, sl) = cr(c_send);
                 // Into the successor's scratch slot for step s.
                 let slot = s as u64 * chunk;
-                b.push_send(steps, r, next, me.buf + so, b.wins[next].scratch + slot, sl, fbase);
+                b.push_send(steps, r, next, me.buf + so, them.scratch + slot, sl, fbase);
                 let (ro, rl) = cr(c_recv);
                 b.push_waits(steps, r, rl, fbase, Some((me.scratch + slot, me.buf + ro)));
             }
@@ -501,7 +549,7 @@ fn build_ring(
                 let g_recv = ord[(p + n - 1 - s) % n];
                 let fbase = p2_fbase0 + s as u64 * subs_pc;
                 let (so, sl) = cr(g_send);
-                b.push_send(steps, r, next, me.buf + so, b.wins[next].buf + so, sl, fbase);
+                b.push_send(steps, r, next, me.buf + so, them.buf + so, sl, fbase);
                 let (_, rl) = cr(g_recv);
                 b.push_waits(steps, r, rl, fbase, None);
             }
@@ -519,7 +567,7 @@ fn build_ring(
                     });
                 }
                 if pos < n - 1 {
-                    b.push_send(steps, r, next, me.buf + off, b.wins[next].buf + off, l, fi);
+                    b.push_send(steps, r, next, me.buf + off, them.buf + off, l, fi);
                 }
             }
         }
@@ -542,7 +590,7 @@ fn build_tree(
     let rank_of = |q: usize| ord[(proot + q) % n];
     for pos in 0..n {
         let r = rank_of(pos);
-        let me = b.wins[r];
+        let me = b.view(r, r);
         let children: Vec<usize> =
             [2 * pos + 1, 2 * pos + 2].into_iter().filter(|&q| q < n).collect();
         let parent = (pos > 0).then(|| rank_of((pos - 1) / 2));
@@ -560,7 +608,7 @@ fn build_tree(
                         r,
                         p,
                         me.buf,
-                        b.wins[p].scratch + my_slot * bytes,
+                        b.view(r, p).scratch + my_slot * bytes,
                         bytes,
                         my_slot * total_subs,
                     );
@@ -586,7 +634,7 @@ fn build_tree(
                             r,
                             p,
                             me.buf + off,
-                            b.wins[p].scratch + my_slot * bytes + off,
+                            b.view(r, p).scratch + my_slot * bytes + off,
                             l,
                             my_slot * total_subs + k as u64,
                         );
@@ -604,8 +652,259 @@ fn build_tree(
             }
             for &q in &children {
                 let c = rank_of(q);
-                b.push_send(steps, r, c, me.buf + off, b.wins[c].buf + off, l, fi);
+                b.push_send(steps, r, c, me.buf + off, b.view(r, c).buf + off, l, fi);
             }
+        }
+    }
+}
+
+/// Flat-ring order over hierarchical `groups`: each group's members
+/// appear consecutively, so a single pod-wide ring crosses each group
+/// (die) boundary exactly once per group — the D2D-minimal *flat*
+/// schedule and the correctness oracle [`build_hier_allreduce`] is
+/// compared against (`manticore::pod` runs both).
+pub fn pod_hierarchical_order(groups: &[Vec<usize>]) -> Vec<usize> {
+    groups.iter().flatten().copied().collect()
+}
+
+/// Groups must be non-empty, equally sized, and partition `0..n`.
+/// Returns `(d, m)`: group count and members per group.
+fn validate_groups(groups: &[Vec<usize>], n: usize) -> Result<(usize, usize)> {
+    if groups.is_empty() || groups[0].is_empty() {
+        bail!("hierarchical all-reduce needs at least one non-empty group");
+    }
+    let m = groups[0].len();
+    for g in groups {
+        if g.len() != m {
+            bail!("hierarchical groups must share one size, got {} and {m}", g.len());
+        }
+    }
+    let d = groups.len();
+    if d * m != n {
+        bail!("groups cover {} ranks but the communicator has {n}", d * m);
+    }
+    let mut seen = vec![false; n];
+    for &r in groups.iter().flatten() {
+        if r >= n || seen[r] {
+            bail!("hierarchical groups must form a partition of 0..{n}");
+        }
+        seen[r] = true;
+    }
+    Ok((d, m))
+}
+
+/// Hierarchical ring all-reduce over `groups` (one group per chiplet):
+///
+/// * **Phase A** — per-group reduce-scatter over the full buffer: the
+///   member at group position `p` ends owning the group-reduced chunk
+///   `p` (chunk size `bytes/m`, rounded to 8).
+/// * **Phase B** — for each position `p`, a ring all-reduce *across
+///   groups* restricted to chunk `p` (its own reduce-scatter plus
+///   all-gather over `bytes/(m·d)` sub-chunks). Only this phase
+///   crosses group boundaries, so over constrained D2D links the
+///   off-die traffic shrinks from the flat ring's `2·(n-1)/n · bytes`
+///   per boundary crossing to `2·(d-1)/d · bytes/m` per rank — every
+///   D2D ring runs in parallel, one per position.
+/// * **Phase C** — per-group all-gather circulating the now globally
+///   reduced chunks.
+///
+/// Groups encode the member order of both ring levels, so `cfg.order`
+/// must be `None`. `base` resolves observer-dependent window addresses
+/// as in [`build_with_base`]; same-group peers should map die-local,
+/// cross-group peers through the D2D aperture. The result is
+/// element-wise identical to the flat ring for `Elem::U64` (wrapping
+/// sums are associative); `Elem::F64` may differ by reduction order.
+pub fn build_hier_allreduce(
+    cfg: &CollCfg,
+    groups: &[Vec<usize>],
+    windows: &[(u64, u64)],
+    base: &dyn Fn(usize, usize) -> u64,
+) -> Result<Built> {
+    let n = windows.len();
+    cfg.validate(n)?;
+    if cfg.op != CollOp::AllReduce || cfg.algo != Algo::Ring {
+        bail!(
+            "hierarchical schedules support ring all-reduce only, got {:?}/{:?}",
+            cfg.op,
+            cfg.algo
+        );
+    }
+    if cfg.order.is_some() {
+        bail!("hierarchical all-reduce takes its order from `groups`; cfg.order must be None");
+    }
+    let (d, m) = validate_groups(groups, n)?;
+
+    let bytes = cfg.bytes;
+    let sub = ((cfg.pipeline_bytes / 8).max(1) * 8).min(bytes);
+    // Intra-group chunk (phase A/C grain) and inter-group sub-chunk
+    // (phase B grain, a division of one chunk across the d groups).
+    let chunk_l = (bytes / 8).div_ceil(m as u64) * 8;
+    let dd = (chunk_l / 8).div_ceil(d as u64) * 8;
+    let subs_pa = chunk_l.div_ceil(sub); // flag stride per A/C ring step
+    let subs_pb = dd.div_ceil(sub); // flag stride per B ring step
+    // Disjoint flag ranges per phase: [0,fa) A, [fa,fa+fb) B, rest C.
+    let fa = (m as u64 - 1) * subs_pa;
+    let fb = 2 * (d as u64 - 1) * subs_pb;
+    let n_flags = fa + fb + (m as u64 - 1) * subs_pa;
+    // Disjoint scratch: A uses slots [0, scratch_a), B the tail.
+    let scratch_a = (m as u64 - 1) * chunk_l;
+    let scratch_bytes = scratch_a + (d as u64 - 1) * dd;
+
+    let scratch_off = DATA_OFF + bytes;
+    let flags_off = scratch_off + scratch_bytes;
+    let flag_src_off = flags_off + n_flags * 8;
+    let footprint = flag_src_off + n_flags * 8;
+    for (r, &(base, size)) in windows.iter().enumerate() {
+        if footprint > size {
+            bail!(
+                "collective footprint {footprint:#x} exceeds rank {r}'s window \
+                 [{base:#x}, +{size:#x}) — shrink bytes or pipeline_bytes"
+            );
+        }
+    }
+
+    let b = Builder {
+        base,
+        lay: Layout {
+            buf: DATA_OFF,
+            scratch: scratch_off,
+            flags: flags_off,
+            flag_src: flag_src_off,
+        },
+        sub,
+        n_flags,
+        elem: cfg.elem,
+    };
+
+    let mut ranks: Vec<RankSchedule> = (0..n)
+        .map(|r| RankSchedule { steps: VecDeque::new(), init: b.init_for(r) })
+        .collect();
+
+    // Phase A: intra-group reduce-scatter over the whole buffer.
+    for g in groups {
+        ring_rs_phase(&b, g, 0, bytes, chunk_l, 0, 0, subs_pa, &mut ranks);
+    }
+    // Phase B: one cross-group ring all-reduce per position, restricted
+    // to that position's chunk. The rings are disjoint (rank sets and
+    // byte regions), so they run concurrently over the D2D links.
+    for p in 0..m {
+        let members: Vec<usize> = groups.iter().map(|g| g[p]).collect();
+        let reg_off = (p as u64 * chunk_l).min(bytes);
+        let reg_len = ((p as u64 + 1) * chunk_l).min(bytes) - reg_off;
+        ring_rs_phase(&b, &members, reg_off, reg_len, dd, scratch_a, fa, subs_pb, &mut ranks);
+        ring_ag_phase(
+            &b,
+            &members,
+            reg_off,
+            reg_len,
+            dd,
+            fa + (d as u64 - 1) * subs_pb,
+            subs_pb,
+            &mut ranks,
+        );
+    }
+    // Phase C: intra-group all-gather of the globally reduced chunks.
+    for g in groups {
+        ring_ag_phase(&b, g, 0, bytes, chunk_l, fa + fb, subs_pa, &mut ranks);
+    }
+    for r in ranks.iter_mut() {
+        if r.n_sends() > 0 {
+            r.steps.push_back(CollStep::WaitDrain);
+        }
+    }
+
+    Ok(Built {
+        ranks,
+        buf: (0..n).map(|r| b.view(r, r).buf).collect(),
+        footprint,
+        n,
+        bytes,
+        chunk: chunk_l,
+    })
+}
+
+/// One ring reduce-scatter pass over `members`, restricted to the byte
+/// region `[reg_off, reg_off+reg_len)` of each buffer, with positional
+/// chunk size `cs` (member position `p` ends owning positional chunk
+/// `p`). Scratch slots start at `sbase`; flag indices at `fbase` with
+/// `fstride` flags per ring step. Steps append to each member's
+/// program, so callers sequence phases by call order.
+#[allow(clippy::too_many_arguments)]
+fn ring_rs_phase(
+    b: &Builder,
+    members: &[usize],
+    reg_off: u64,
+    reg_len: u64,
+    cs: u64,
+    sbase: u64,
+    fbase: u64,
+    fstride: u64,
+    ranks: &mut [RankSchedule],
+) {
+    let k = members.len();
+    if k < 2 {
+        return;
+    }
+    let cr = |c: usize| {
+        let off = (c as u64 * cs).min(reg_len);
+        let end = ((c as u64 + 1) * cs).min(reg_len);
+        (reg_off + off, end - off)
+    };
+    for p in 0..k {
+        let r = members[p];
+        let next = members[(p + 1) % k];
+        let me = b.view(r, r);
+        let them = b.view(r, next);
+        let steps = &mut ranks[r].steps;
+        for s in 0..k - 1 {
+            let c_send = (p + k - 1 - s) % k;
+            let c_recv = (p + 2 * k - 2 - s) % k;
+            let fb_s = fbase + s as u64 * fstride;
+            let (so, sl) = cr(c_send);
+            let slot = sbase + s as u64 * cs;
+            b.push_send(steps, r, next, me.buf + so, them.scratch + slot, sl, fb_s);
+            let (ro, rl) = cr(c_recv);
+            b.push_waits(steps, r, rl, fb_s, Some((me.scratch + slot, me.buf + ro)));
+        }
+    }
+}
+
+/// The all-gather twin of [`ring_rs_phase`]: circulate the finished
+/// positional chunks straight into the destination buffers.
+#[allow(clippy::too_many_arguments)]
+fn ring_ag_phase(
+    b: &Builder,
+    members: &[usize],
+    reg_off: u64,
+    reg_len: u64,
+    cs: u64,
+    fbase: u64,
+    fstride: u64,
+    ranks: &mut [RankSchedule],
+) {
+    let k = members.len();
+    if k < 2 {
+        return;
+    }
+    let cr = |c: usize| {
+        let off = (c as u64 * cs).min(reg_len);
+        let end = ((c as u64 + 1) * cs).min(reg_len);
+        (reg_off + off, end - off)
+    };
+    for p in 0..k {
+        let r = members[p];
+        let next = members[(p + 1) % k];
+        let me = b.view(r, r);
+        let them = b.view(r, next);
+        let steps = &mut ranks[r].steps;
+        for s in 0..k - 1 {
+            let g_send = (p + k - s) % k;
+            let g_recv = (p + k - 1 - s) % k;
+            let fb_s = fbase + s as u64 * fstride;
+            let (so, sl) = cr(g_send);
+            b.push_send(steps, r, next, me.buf + so, them.buf + so, sl, fb_s);
+            let (_, rl) = cr(g_recv);
+            b.push_waits(steps, r, rl, fb_s, None);
         }
     }
 }
@@ -811,6 +1110,251 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Run the hierarchical all-reduce over `groups` under the flat
+    /// (observer-independent) map and check every rank ends with the
+    /// element-wise wrapping sum of all seeds.
+    fn check_hier(groups: &[Vec<usize>], bytes: u64, pipeline: u64) {
+        let n: usize = groups.iter().map(|g| g.len()).sum();
+        let wins = windows(n);
+        let mut cfg = CollCfg::new(CollOp::AllReduce, Algo::Ring, bytes);
+        cfg.pipeline_bytes = pipeline;
+        let built = build_hier_allreduce(&cfg, groups, &wins, &|_f, t| wins[t].0).unwrap();
+        let mut it = Interp::new(&wins);
+        let elems = bytes / 8;
+        for r in 0..n {
+            let data: Vec<u8> = (0..elems).flat_map(|j| seed_val(r, j).to_le_bytes()).collect();
+            it.write(built.buf[r], &data);
+        }
+        it.run(&built);
+        let sums: Vec<u64> =
+            (0..elems).map(|j| (0..n).fold(0u64, |a, r| a.wrapping_add(seed_val(r, j)))).collect();
+        for r in 0..n {
+            let got = it.read(built.buf[r], bytes as usize);
+            let words: Vec<u64> =
+                got.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect();
+            assert_eq!(words, sums, "rank {r} hierarchical all-reduce result");
+        }
+    }
+
+    fn contiguous_groups(d: usize, m: usize) -> Vec<Vec<usize>> {
+        (0..d).map(|g| (g * m..(g + 1) * m).collect()).collect()
+    }
+
+    #[test]
+    fn hier_allreduce_math_many_shapes() {
+        for (d, m) in [(2usize, 2usize), (4, 2), (2, 4), (4, 4)] {
+            check_hier(&contiguous_groups(d, m), 4096, 512);
+        }
+        // Degenerate shapes: one group (pure flat ring) and one member
+        // per group (pure inter-group ring).
+        check_hier(&contiguous_groups(1, 3), 2048, 512);
+        check_hier(&contiguous_groups(3, 1), 2048, 512);
+        // Uneven payload: chunks and sub-chunks clamp (incl. empty tail).
+        check_hier(&contiguous_groups(2, 4), 104, 64);
+        check_hier(&contiguous_groups(4, 2), 120, 2048);
+    }
+
+    #[test]
+    fn hier_allreduce_math_non_contiguous_groups() {
+        // Group membership is arbitrary: permuted, interleaved rank
+        // numberings must leave the math unchanged.
+        check_hier(&[vec![3, 1], vec![0, 2]], 4096, 512);
+        check_hier(&[vec![5, 0, 7, 2], vec![6, 3, 1, 4]], 2048, 256);
+        check_hier(&[vec![2, 9, 4], vec![11, 0, 6], vec![8, 5, 10], vec![1, 7, 3]], 1024, 128);
+    }
+
+    #[test]
+    fn hier_matches_flat_ring_oracle() {
+        // Same seeds through the hierarchical schedule and the flat
+        // ring (ordered die-major) must agree element-wise for U64 —
+        // wrapping sums are associative, so any bracketing is exact.
+        let groups = vec![vec![4usize, 1], vec![0, 5], vec![3, 2]];
+        let n = 6;
+        let bytes = 1536u64;
+        let wins = windows(n);
+        let mut cfg = CollCfg::new(CollOp::AllReduce, Algo::Ring, bytes);
+        cfg.pipeline_bytes = 256;
+        let hier = build_hier_allreduce(&cfg, &groups, &wins, &|_f, t| wins[t].0).unwrap();
+        cfg.order = Some(pod_hierarchical_order(&groups));
+        let flat = build(&cfg, &wins).unwrap();
+        let elems = bytes / 8;
+        let mut bufs = Vec::new();
+        for built in [&hier, &flat] {
+            let mut it = Interp::new(&wins);
+            for r in 0..n {
+                let data: Vec<u8> =
+                    (0..elems).flat_map(|j| seed_val(r, j).to_le_bytes()).collect();
+                it.write(built.buf[r], &data);
+            }
+            it.run(built);
+            bufs.push(
+                (0..n).map(|r| it.read(built.buf[r], bytes as usize)).collect::<Vec<_>>(),
+            );
+        }
+        assert_eq!(bufs[0], bufs[1], "hierarchical vs flat-ring oracle");
+    }
+
+    #[test]
+    fn pod_order_keeps_groups_consecutive() {
+        let groups = vec![vec![3usize, 1], vec![0, 2], vec![5, 4]];
+        let ord = pod_hierarchical_order(&groups);
+        assert_eq!(ord, vec![3, 1, 0, 2, 5, 4]);
+        // Valid permutation, and a ring over it crosses each group
+        // boundary exactly once per group.
+        let n = ord.len();
+        let mut seen = vec![false; n];
+        for &r in &ord {
+            assert!(!seen[r]);
+            seen[r] = true;
+        }
+        let die_of = |r: usize| groups.iter().position(|g| g.contains(&r)).unwrap();
+        let crossings =
+            (0..n).filter(|&p| die_of(ord[p]) != die_of(ord[(p + 1) % n])).count();
+        assert_eq!(crossings, groups.len(), "one boundary crossing per die");
+        // And the flat ring over that order still computes correctly —
+        // this is the pod's oracle path.
+        for op in [CollOp::AllReduce, CollOp::ReduceScatter, CollOp::AllGather] {
+            check_op_ordered(op, Algo::Ring, n, 1024, 256, 0, Some(ord.clone()));
+        }
+    }
+
+    #[test]
+    fn hierarchical_order_composes_with_local_permutations() {
+        // Satellite coverage: the quadrant-DFS order composed with a
+        // per-quadrant relabeling (non-contiguous chiplet-local ranks)
+        // is still a valid ring order and leaves the math unchanged.
+        let base = hierarchical_order(&[2, 2]); // identity over 4 ranks
+        let relabel = [2usize, 0, 3, 1]; // permuted local numbering
+        let ord: Vec<usize> = base.iter().map(|&r| relabel[r]).collect();
+        assert_eq!(ord, vec![2, 0, 3, 1]);
+        check_op_ordered(CollOp::AllReduce, Algo::Ring, 4, 1024, 256, 0, Some(ord.clone()));
+        check_op_ordered(CollOp::Broadcast, Algo::Ring, 4, 512, 128, 2, Some(ord));
+    }
+
+    #[test]
+    fn hier_flag_indices_unique_per_receiver() {
+        // Same single-writer property as the flat ring, across all
+        // three phases' flag ranges.
+        let groups = vec![vec![0usize, 1, 2], vec![3, 4, 5]];
+        let wins = windows(6);
+        let cfg = CollCfg {
+            pipeline_bytes: 256,
+            ..CollCfg::new(CollOp::AllReduce, Algo::Ring, 4096)
+        };
+        let built = build_hier_allreduce(&cfg, &groups, &wins, &|_f, t| wins[t].0).unwrap();
+        let mut writes: HashMap<u64, usize> = HashMap::new();
+        for sched in &built.ranks {
+            for step in &sched.steps {
+                if let CollStep::Send { xfers } = step {
+                    for x in xfers {
+                        if let TransferReq::OneD { dst, len: 8, .. } = x {
+                            *writes.entry(*dst).or_default() += 1;
+                        }
+                    }
+                }
+            }
+        }
+        for sched in &built.ranks {
+            for step in &sched.steps {
+                if let CollStep::WaitFlag { addr, .. } = step {
+                    assert_eq!(writes.get(addr), Some(&1), "flag {addr:#x} written != once");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hier_rejects_bad_groups() {
+        let cfg = CollCfg::new(CollOp::AllReduce, Algo::Ring, 256);
+        let wins = windows(4);
+        let flat = |_f: usize, t: usize| t as u64 * 0x10_0000;
+        let mk = |groups: &[Vec<usize>]| build_hier_allreduce(&cfg, groups, &wins, &flat);
+        assert!(mk(&[]).is_err(), "no groups");
+        assert!(mk(&[vec![0, 1, 2], vec![3]]).is_err(), "unequal sizes");
+        assert!(mk(&[vec![0, 1], vec![2, 2]]).is_err(), "duplicate rank");
+        assert!(mk(&[vec![0, 1], vec![2, 4]]).is_err(), "out of range");
+        assert!(mk(&[vec![0, 1]]).is_err(), "partial cover");
+        assert!(mk(&[vec![0, 1], vec![2, 3]]).is_ok(), "valid partition");
+        let mut ordered = cfg.clone();
+        ordered.order = Some(vec![0, 1, 2, 3]);
+        assert!(
+            build_hier_allreduce(&ordered, &[vec![0, 1], vec![2, 3]], &wins, &flat).is_err(),
+            "explicit order conflicts with groups"
+        );
+        let mut bcast = cfg.clone();
+        bcast.op = CollOp::Broadcast;
+        assert!(
+            build_hier_allreduce(&bcast, &[vec![0, 1], vec![2, 3]], &wins, &flat).is_err(),
+            "only all-reduce is hierarchical"
+        );
+    }
+
+    #[test]
+    fn observer_base_routes_remote_traffic_through_aperture() {
+        // With an observer-dependent map (same-group local, cross-group
+        // behind a high aperture), all polls/reductions stay local and
+        // exactly the cross-group sends target aperture addresses.
+        const APER: u64 = 0x8000_0000;
+        let groups = vec![vec![0usize, 1], vec![2, 3]];
+        let wins = windows(4);
+        let die_of = |r: usize| r / 2;
+        let base = |from: usize, to: usize| {
+            if die_of(from) == die_of(to) {
+                wins[to].0
+            } else {
+                APER + wins[to].0
+            }
+        };
+        let cfg = CollCfg {
+            pipeline_bytes: 256,
+            ..CollCfg::new(CollOp::AllReduce, Algo::Ring, 1024)
+        };
+        let built = build_hier_allreduce(&cfg, &groups, &wins, &base).unwrap();
+        let mut remote_sends = 0usize;
+        for (r, sched) in built.ranks.iter().enumerate() {
+            let (lo, sz) = wins[r];
+            for step in &sched.steps {
+                match step {
+                    CollStep::WaitFlag { addr, .. } => {
+                        assert!(
+                            (lo..lo + sz).contains(addr),
+                            "rank {r} polls a non-local flag {addr:#x}"
+                        );
+                    }
+                    CollStep::Reduce { src, dst, .. } => {
+                        for a in [src, dst] {
+                            assert!(
+                                (lo..lo + sz).contains(a),
+                                "rank {r} reduces through a non-local address {a:#x}"
+                            );
+                        }
+                    }
+                    CollStep::Send { xfers } => {
+                        for x in xfers {
+                            if let TransferReq::OneD { src, dst, .. } = x {
+                                assert!(
+                                    (lo..lo + sz).contains(src),
+                                    "rank {r} sends from a non-local source {src:#x}"
+                                );
+                                if *dst >= APER {
+                                    remote_sends += 1;
+                                    let peer = ((dst - APER) / 0x10_0000) as usize;
+                                    assert_ne!(die_of(peer), die_of(r));
+                                }
+                            }
+                        }
+                    }
+                    CollStep::WaitDrain => {}
+                }
+            }
+            // Init pokes (flag arena + tokens) are always die-local.
+            for (addr, _) in &sched.init {
+                assert!((lo..lo + sz).contains(addr), "non-local init poke {addr:#x}");
+            }
+        }
+        assert!(remote_sends > 0, "phase B must cross the aperture");
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //!   tables [--tab N]        regenerate Tables 1–4
 //!   simulate --config F     run a configured topology (TOML subset)
 //!   manticore [...]         run the §4 case-study simulations
+//!   multichip [...]         multi-chiplet pod collectives over D2D links
 //!   e2e [...]               PJRT compute + network co-simulation
 //!
 //! Argument parsing is hand-rolled (clap is unavailable offline).
@@ -274,6 +275,53 @@ fn cmd_manticore(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Multi-chiplet pod all-reduce: N dies over D2D links, hierarchical
+/// (default) or flat-ring (`--flat`) schedule, verified element-wise.
+fn cmd_multichip(flags: &HashMap<String, String>) -> Result<()> {
+    use noc::manticore::pod::{pod_determinism_fingerprint, run_pod_collective, Pod, PodCfg};
+    use noc::noc::d2d::D2DCfg;
+    let chiplets: usize = flags.get("chiplets").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    ensure!((1..=16).contains(&chiplets), "--chiplets must be in 1..=16");
+    let die = chiplet_from_flags(flags, true)?;
+    let bytes: u64 = flags.get("bytes").map(|s| s.parse()).transpose()?.unwrap_or(16 * 1024);
+    let mut d2d = D2DCfg::default();
+    if let Some(v) = flags.get("d2d-latency") {
+        d2d.latency = v.parse().context("--d2d-latency must be a positive integer")?;
+    }
+    if let Some(v) = flags.get("d2d-credits") {
+        d2d.credits = v.parse().context("--d2d-credits must be a positive integer")?;
+    }
+    if let Some(v) = flags.get("d2d-serialize") {
+        d2d.serialize = v.parse().context("--d2d-serialize must be a positive integer")?;
+    }
+    let hier = !flags.contains_key("flat");
+    let ranks = chiplets * die.n_clusters();
+    let mut pod = Pod::new(PodCfg { n_chiplets: chiplets, die, d2d });
+    let res = run_pod_collective(&mut pod, bytes, 50_000_000, hier)?;
+    ensure!(res.finished, "pod all-reduce did not finish within the cycle budget");
+    ensure!(res.correct, "pod all-reduce result failed verification");
+    if flags.contains_key("fingerprint") {
+        println!("{}", pod_determinism_fingerprint(&pod));
+        return Ok(());
+    }
+    let sched = if hier { "hierarchical" } else { "flat ring" };
+    println!(
+        "{sched} all-reduce over {chiplets} chiplets ({ranks} ranks), {bytes} B payload: \
+         {} cycles",
+        res.cycles
+    );
+    println!(
+        "  {:.2} B/cycle, {} B over D2D links, result verified on every rank",
+        res.bytes_per_cycle, res.d2d_bytes
+    );
+    println!(
+        "  engine: {} worker threads, {} shards (one per die)",
+        pod.threads(),
+        chiplets
+    );
+    Ok(())
+}
+
 fn cmd_e2e(flags: &HashMap<String, String>) -> Result<()> {
     let dir = flags.get("artifacts").map(|s| s.as_str()).unwrap_or("artifacts");
     let mut rt = noc::runtime::Runtime::new(dir)?;
@@ -318,6 +366,15 @@ fn usage() -> ! {
          \x20                              --threads: host core count for\n\
          \x20                              xsection/allreduce/broadcast,\n\
          \x20                              0 for latency/conv/fc)\n\
+         \x20 multichip [--chiplets N] [--size small|medium|full]\n\
+         \x20           [--bytes N] [--flat] [--fingerprint]\n\
+         \x20           [--d2d-latency C] [--d2d-credits N]\n\
+         \x20           [--d2d-serialize C] [--threads N] [--epoch E]\n\
+         \x20           [--epoch-policy fixed|adaptive] [--pin-workers]\n\
+         \x20                              N-chiplet pod all-reduce over D2D\n\
+         \x20                              links (hierarchical; --flat for\n\
+         \x20                              the flat-ring oracle; bit-identical\n\
+         \x20                              for every --threads N >= 1)\n\
          \x20 e2e [--artifacts DIR]        verify PJRT compute artifacts"
     );
     std::process::exit(2)
@@ -332,6 +389,7 @@ fn main() -> Result<()> {
         "tables" => cmd_tables(&flags),
         "simulate" => cmd_simulate(&flags),
         "manticore" => cmd_manticore(&flags),
+        "multichip" => cmd_multichip(&flags),
         "e2e" => cmd_e2e(&flags),
         _ => usage(),
     }

@@ -7,8 +7,13 @@ pub mod chiplet;
 pub mod cluster;
 pub mod network;
 pub mod perf;
+pub mod pod;
 pub mod workload;
 
 pub use chiplet::{Chiplet, ChipletCfg};
 pub use cluster::{addr, core_net_cfg, dma_net_cfg, Cluster, ClusterHandle};
 pub use network::{build_tree, NodeIo, Tree, TreeCfg};
+pub use pod::{
+    pod_determinism_fingerprint, podaddr, run_pod_collective, Pod, PodCfg, PodCollectiveResult,
+    PodDie,
+};

@@ -1,0 +1,908 @@
+//! Multi-chiplet pod: N Manticore dies joined by die-to-die links.
+//!
+//! The pod lifts the stack's single-die assumption without teaching the
+//! dies about each other. Every die keeps its **local** address map
+//! (clusters at `addr::cluster_base`, HBM at `addr::HBM_BASE`); on top
+//! of it the pod layers an inter-chiplet window map: die `j`'s entire
+//! local space is visible to every other die through a dedicated 1 GiB
+//! aperture at [`podaddr::d2d_base`]`(j)`. A command whose address falls
+//! in a remote aperture climbs the source die's DMA tree (out-of-range
+//! traffic routes up by construction), exits at the top crosspoint's
+//! D2D port, is demultiplexed onto the per-destination [`Die2Die`]
+//! link — which strips the aperture base in flight — and lands on the
+//! destination die as a plain local address. The dies' own address maps
+//! never learn about the pod.
+//!
+//! ## Topology
+//!
+//! The pod wires a full mesh: one unidirectional command/response link
+//! pair per ordered die pair `(d, j)`. Per die that is an egress demux
+//! (route by aperture window), `N-1` outgoing link pipes, and an
+//! ingress join (mux over the `N-1` incoming links + an ID remapper
+//! compressing the widened IDs back to the die's ID space) feeding one
+//! extra slave port of the top crosspoint.
+//!
+//! ## Ordering
+//!
+//! The collective layer's flag-proves-data invariant needs writes from
+//! one source to one destination to commit in issue order. Every stage
+//! of the cross-die path preserves per-source AW order: the demux
+//! forwards commands in order (same ID + same target rule), the link
+//! pipes are FIFOs per channel, the mux arbitrates but never reorders
+//! one slave port's stream, and the ID remapper maps commands in
+//! arrival order. W beats follow AW order end to end (protocol O3).
+//!
+//! ## Determinism under sharding
+//!
+//! A pod is **always** sharded: shard `d` owns die `d` wholesale
+//! (clusters, trees, top crosspoint, HBM, egress, link pipes, ingress).
+//! The only bundles crossing a die boundary are the `N·(N-1)` link
+//! bundles, each cut with `protocol::exchange` relays and swapped at
+//! epoch barriers. The shard structure is therefore a pure function of
+//! the pod shape — independent of the worker-thread count — so
+//! [`pod_determinism_fingerprint`] is bit-identical for every
+//! `--threads N >= 1` and both engine modes (`rust/src/manticore/pod.rs`
+//! tests, `noc multichip` in CI).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::collective::{self, Algo, CollCfg, CollOp, RankSchedule};
+use crate::coordinator::report::Json;
+use crate::errors::Result;
+use crate::manticore::chiplet::ChipletCfg;
+use crate::manticore::cluster::{addr, core_net_cfg, dma_net_cfg, Cluster, ClusterHandle};
+use crate::manticore::network::{build_tree, NodeIo, TreeCfg, UplinkTap};
+use crate::noc::addr_decode::{AddrMap, AddrRule, DefaultPort};
+use crate::noc::crosspoint::{Crosspoint, CrosspointCfg};
+use crate::noc::d2d::{D2DCfg, D2DCounters, Die2Die};
+use crate::noc::demux::Demux;
+use crate::noc::id_remap::IdRemap;
+use crate::noc::mux::{prepend_bits, Mux};
+use crate::noc::upsizer::Upsizer;
+use crate::protocol::exchange::cut_slave_export;
+use crate::protocol::{bundle, BundleCfg, Cmd, MasterEnd, SlaveEnd};
+use crate::sim::shard::ShardedEngine;
+use crate::sim::{shared, Cycle};
+use crate::traffic::perfect_slave::PerfectSlave;
+
+/// The pod-level address scheme: die `j`'s local space, seen from any
+/// other die, through a 1 GiB aperture window. The window block starts
+/// above everything a die maps locally (HBM ends at `0x82_0000_0000`,
+/// the single-chiplet IO window 1 GiB later), so local rules and
+/// aperture rules never overlap.
+pub mod podaddr {
+    /// Base of the aperture window block.
+    pub const D2D_BASE: u64 = 0x84_0000_0000;
+    /// Bytes of remote-die space each aperture exposes (covers every
+    /// cluster L1; remote HBM stays private to its die).
+    pub const DIE_WINDOW: u64 = 1 << 30;
+
+    /// Aperture base through which other dies reach die `die`.
+    pub fn d2d_base(die: usize) -> u64 {
+        D2D_BASE + die as u64 * DIE_WINDOW
+    }
+}
+
+#[derive(Clone)]
+pub struct PodCfg {
+    /// Dies in the pod (1–16; the paper-scale target is 4–16).
+    pub n_chiplets: usize,
+    /// Per-die configuration (every die is identical); `die.engine`
+    /// supplies threads / epoch / policy / full-scan for the pod's
+    /// sharded engine (`threads = 0` runs single-threaded sharded).
+    pub die: ChipletCfg,
+    /// Die-to-die link timing, shared by every link of the mesh.
+    pub d2d: D2DCfg,
+}
+
+impl PodCfg {
+    /// A CI-sized pod: N small dies (4 clusters each).
+    pub fn small(n_chiplets: usize) -> Self {
+        PodCfg { n_chiplets, die: ChipletCfg::small(), d2d: D2DCfg::default() }
+    }
+
+    /// Total collective ranks (clusters) in the pod.
+    pub fn n_ranks(&self) -> usize {
+        self.n_chiplets * self.die.n_clusters()
+    }
+}
+
+/// One die's externally-visible state (cluster handles, HBM models,
+/// traffic taps, outgoing-link counters). All handles follow the
+/// between-runs-only discipline of sharded mode.
+pub struct PodDie {
+    pub clusters: Vec<ClusterHandle>,
+    pub hbm: Vec<Rc<RefCell<PerfectSlave>>>,
+    dma_taps: Vec<Vec<UplinkTap>>,
+    core_taps: Vec<Vec<UplinkTap>>,
+    /// Outgoing D2D links: (destination die, byte counters).
+    pub d2d: Vec<(usize, D2DCounters)>,
+}
+
+impl PodDie {
+    /// Aggregate data bytes moved at this die's cluster DMA ports.
+    pub fn dma_bytes(&self) -> u64 {
+        self.clusters.iter().map(|c| c.dma_bytes()).sum()
+    }
+
+    /// Data bytes that crossed each DMA-tree level's uplinks (bottom-up).
+    pub fn dma_level_bytes(&self) -> Vec<u64> {
+        let bb = dma_net_cfg().beat_bytes() as u64;
+        self.dma_taps
+            .iter()
+            .map(|taps| taps.iter().map(|t| t.data_beats()).sum::<u64>() * bb)
+            .collect()
+    }
+
+    /// Same for the core network.
+    pub fn core_level_bytes(&self) -> Vec<u64> {
+        let bb = core_net_cfg().beat_bytes() as u64;
+        self.core_taps
+            .iter()
+            .map(|taps| taps.iter().map(|t| t.data_beats()).sum::<u64>() * bb)
+            .collect()
+    }
+
+    /// Total bytes served by this die's HBM ports.
+    pub fn hbm_bytes(&self) -> u64 {
+        self.hbm
+            .iter()
+            .map(|h| {
+                let h = h.borrow();
+                h.bytes_read + h.bytes_written
+            })
+            .sum()
+    }
+
+    /// Data bytes this die pushed over its outgoing D2D links.
+    pub fn d2d_out_bytes(&self) -> u64 {
+        self.d2d.iter().map(|(_, c)| c.total_bytes()).sum()
+    }
+}
+
+pub struct Pod {
+    pub cfg: PodCfg,
+    pub dies: Vec<PodDie>,
+    eng: ShardedEngine,
+    pub cycles: Cycle,
+}
+
+impl Pod {
+    pub fn new(cfg: PodCfg) -> Self {
+        let nd = cfg.n_chiplets;
+        assert!((1..=16).contains(&nd), "pod supports 1..=16 chiplets, got {nd}");
+        let dcfg = dma_net_cfg();
+        let epoch = cfg.die.engine.epoch.max(1);
+        // Pods always run the sharded engine (one shard per die);
+        // `threads` only sets how many workers chunk the shards.
+        let threads = cfg.die.engine.worker_threads().max(1);
+        let mut eng = ShardedEngine::new(nd, epoch, threads);
+        eng.set_policy(cfg.die.engine.policy);
+        eng.set_pin_workers(cfg.die.engine.pin_workers);
+        if cfg.die.engine.full_scan {
+            eng.set_sleep(false);
+        }
+
+        // --- The D2D mesh, ahead of any die ---
+        // For every ordered pair (d, j): an egress bundle (demux -> link
+        // pipe, both in shard d), the link's downstream bundle — cut, so
+        // the relay far end lands in shard j — and the pipe itself.
+        let mut egress: Vec<Vec<MasterEnd>> = (0..nd).map(|_| Vec::new()).collect();
+        let mut pipes: Vec<Vec<Die2Die>> = (0..nd).map(|_| Vec::new()).collect();
+        let mut counters: Vec<Vec<(usize, D2DCounters)>> = (0..nd).map(|_| Vec::new()).collect();
+        let mut ingress: Vec<Vec<SlaveEnd>> = (0..nd).map(|_| Vec::new()).collect();
+        let mut cuts = Vec::new();
+        for d in 0..nd {
+            for j in 0..nd {
+                if j == d {
+                    continue;
+                }
+                let (eg_m, eg_s) = bundle(&format!("pod.d{d}.to{j}.eg"), dcfg);
+                let (lk_m, lk_s) = bundle(&format!("pod.d{d}.to{j}.lk"), dcfg);
+                let (pipe, ctr) = Die2Die::new(
+                    format!("pod.d2d.{d}to{j}"),
+                    cfg.d2d,
+                    podaddr::d2d_base(j),
+                    eg_s,
+                    lk_m,
+                );
+                let (cut, far_s) = cut_slave_export(&format!("pod.cut.{d}to{j}"), dcfg, lk_s, epoch);
+                egress[d].push(eg_m);
+                pipes[d].push(pipe);
+                counters[d].push((j, ctr));
+                // d-outer iteration: die j's ingress ports are ordered by
+                // source die, ascending.
+                ingress[j].push(far_s);
+                cuts.push((cut, d, j));
+            }
+        }
+
+        // --- The dies, one shard each ---
+        let mut dies = Vec::with_capacity(nd);
+        for d in 0..nd {
+            dies.push(build_die(
+                &mut eng,
+                d,
+                nd,
+                &cfg,
+                std::mem::take(&mut egress[d]),
+                std::mem::take(&mut pipes[d]),
+                std::mem::take(&mut counters[d]),
+                std::mem::take(&mut ingress[d]),
+            ));
+        }
+
+        // --- The cut relays, now that both sides exist ---
+        // SAFETY: each cut's sender half holds ends whose peer bundles
+        // were registered in shard d (the link pipe), the receiver half
+        // ends registered in shard j (the ingress mux); `register` wires
+        // the exchange wake edges so the relays sleep between exchanges.
+        for (cut, d, j) in cuts {
+            unsafe {
+                cut.register(&mut eng, d, j);
+            }
+        }
+
+        Pod { cfg, dies, eng, cycles: 0 }
+    }
+
+    /// Advance `cycles`; worker threads join at epoch barriers only.
+    pub fn run(&mut self, cycles: Cycle) {
+        self.eng.run(cycles);
+        self.cycles += cycles;
+        debug_assert_eq!(self.eng.cycles(), self.cycles);
+    }
+
+    /// Run until `pred` holds or the budget expires. The predicate is
+    /// evaluated only at epoch boundaries, so the stopping cycle is
+    /// identical for every thread count.
+    pub fn run_until(&mut self, budget: Cycle, mut pred: impl FnMut(&Pod) -> bool) -> bool {
+        let mut left = budget;
+        while left > 0 {
+            let step = self.eng.to_next_exchange().min(left);
+            self.run(step);
+            left -= step;
+            if pred(self) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Load a collective rank program onto a cluster's orchestrator
+    /// (between runs only).
+    pub fn submit_collective(&self, die: usize, cluster: usize, sched: RankSchedule) {
+        self.dies[die].clusters[cluster].coll.borrow_mut().submit(sched);
+    }
+
+    pub fn collective_done(&self, die: usize, cluster: usize) -> bool {
+        self.dies[die].clusters[cluster].coll.borrow().done()
+    }
+
+    pub fn all_collectives_done(&self) -> bool {
+        self.dies.iter().all(|d| d.clusters.iter().all(|c| c.coll.borrow().done()))
+    }
+
+    /// Aggregate data bytes moved at every cluster DMA port of the pod.
+    pub fn total_dma_bytes(&self) -> u64 {
+        self.dies.iter().map(|d| d.dma_bytes()).sum()
+    }
+
+    /// Data bytes carried by all D2D links (both directions, all pairs).
+    pub fn d2d_bytes(&self) -> u64 {
+        self.dies.iter().map(|d| d.d2d_out_bytes()).sum()
+    }
+
+    pub fn awake_components(&self) -> usize {
+        self.eng.awake_components()
+    }
+
+    pub fn component_count(&self) -> usize {
+        self.eng.component_count()
+    }
+
+    /// The engine's accumulated cycle profile (always available — pods
+    /// are always sharded).
+    pub fn shard_profile(&self) -> crate::sim::ShardProfileReport {
+        self.eng.shard_profile()
+    }
+
+    pub fn threads(&self) -> usize {
+        self.eng.threads()
+    }
+}
+
+/// Build die `d` entirely inside shard `d`: clusters, both trees, the
+/// top crosspoint (with one aperture rule per remote die), HBM, and —
+/// on a multi-die pod — the D2D egress demux, the outgoing link pipes,
+/// and the ingress mux + ID remapper.
+#[allow(clippy::too_many_arguments)]
+fn build_die(
+    eng: &mut ShardedEngine,
+    d: usize,
+    nd: usize,
+    cfg: &PodCfg,
+    egress: Vec<MasterEnd>,
+    pipes: Vec<Die2Die>,
+    counters: Vec<(usize, D2DCounters)>,
+    ingress: Vec<SlaveEnd>,
+) -> PodDie {
+    let die_cfg = &cfg.die;
+    let n = die_cfg.n_clusters();
+    let dcfg = dma_net_cfg();
+    let ccfg = core_net_cfg();
+    let has_d2d = nd > 1;
+
+    // --- Clusters + tree leaves ---
+    // No intra-die cuts: the whole die shares shard d, so the cluster
+    // uplinks feed the trees directly (the single-arena wiring of
+    // `manticore::chiplet`, once per die).
+    let mut clusters = Vec::with_capacity(n);
+    let mut dma_leaves = Vec::with_capacity(n);
+    let mut core_leaves = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut tc = die_cfg.core_traffic.clone();
+        // Global-rank seed: cluster i of die d behaves like cluster
+        // d*n + i of one large chiplet.
+        tc.seed = 0x1000 + (d * n + i) as u64;
+        let mut cl = Cluster::new(i, tc);
+        let range = (addr::cluster_base(i), addr::cluster_base(i) + addr::CLUSTER_STRIDE);
+        let dma_out = cl.dma_out.take().unwrap();
+        let dma_in = cl.dma_l1_in.take().unwrap();
+        let core_out = cl.core_out.take().unwrap();
+        let core_in = cl.core_l1_in.take().unwrap();
+        let (handle, comps) = cl.split();
+        // SAFETY: every component of die d registers in shard d; the
+        // only bundles leaving the die are the link bundles, each cut
+        // with an exchange relay in `Pod::new`, so all `Rc` state
+        // registered here stays confined to this shard.
+        unsafe {
+            let sh = eng.shard(d);
+            for c in comps {
+                sh.add_boxed(c);
+            }
+        }
+        dma_leaves.push(NodeIo { up_out: dma_out, up_in: dma_in, range });
+        core_leaves.push(NodeIo { up_out: core_out, up_in: core_in, range });
+        clusters.push(handle);
+    }
+
+    // --- The two trees (same shape as the single chiplet's) ---
+    let tree_fanout: Vec<usize> = die_cfg.fanout[..die_cfg.fanout.len() - 1].to_vec();
+    let mut dma_tree = build_tree(
+        &TreeCfg {
+            port_cfg: dcfg,
+            fanout: tree_fanout.clone(),
+            txns_per_id: die_cfg.txns_per_id,
+            input_queue: die_cfg.input_queue,
+            label: format!("p{d}.dma"),
+        },
+        dma_leaves,
+    );
+    let mut core_tree = build_tree(
+        &TreeCfg {
+            port_cfg: ccfg,
+            fanout: tree_fanout,
+            txns_per_id: die_cfg.txns_per_id,
+            input_queue: die_cfg.input_queue,
+            label: format!("p{d}.core"),
+        },
+        core_leaves,
+    );
+    let top_children = *die_cfg.fanout.last().unwrap();
+    assert_eq!(dma_tree.roots.len(), top_children, "tree roots = last fanout level");
+    let dma_roots: Vec<_> = dma_tree.roots.drain(..).collect();
+    let core_root = if core_tree.roots.len() == 1 {
+        core_tree.roots.pop().unwrap()
+    } else {
+        let roots: Vec<_> = core_tree.roots.drain(..).collect();
+        let n_roots = roots.len();
+        let mut t2 = build_tree(
+            &TreeCfg {
+                port_cfg: ccfg,
+                fanout: vec![n_roots],
+                txns_per_id: die_cfg.txns_per_id,
+                input_queue: die_cfg.input_queue,
+                label: format!("p{d}.coretop"),
+            },
+            roots,
+        );
+        core_tree.nodes.append(&mut t2.nodes);
+        t2.roots.pop().unwrap()
+    };
+    let dma_taps = std::mem::take(&mut dma_tree.level_taps);
+    let core_taps = std::mem::take(&mut core_tree.level_taps);
+    unsafe {
+        let sh = eng.shard(d);
+        for node in dma_tree.nodes.drain(..) {
+            for part in node.into_parts() {
+                sh.add_boxed(part);
+            }
+        }
+        for node in core_tree.nodes.drain(..) {
+            for part in node.into_parts() {
+                sh.add_boxed(part);
+            }
+        }
+    }
+
+    // --- Top level ---
+    let hbm_port_size = addr::HBM_SIZE / 4;
+    let up_cfg = BundleCfg::new(512, ccfg.id_bits);
+    let (coreup_m, coreup_s) = bundle(&format!("p{d}.top.coreup"), up_cfg);
+    let core_upsizer = Upsizer::new(format!("p{d}.top.upsizer"), core_root.up_out, coreup_m, 2);
+    drop(core_root.up_in);
+    assert_eq!(up_cfg.id_bits, dcfg.id_bits, "top ports must be isomorphous");
+
+    // D2D ports: one egress master (demuxed onto the links) and one
+    // ingress slave (the mux/remap join) — single-die pods omit both.
+    let (d2d_out_m, d2d_out_s) = bundle(&format!("p{d}.top.d2dout"), dcfg);
+    let (ig_m, ig_s) = bundle(&format!("p{d}.top.d2din"), dcfg);
+
+    let mut hbm_masters = Vec::new();
+    let mut hbm = Vec::new();
+    let mut io_components: Vec<Box<dyn crate::sim::Component>> = Vec::new();
+    for p in 0..4 {
+        let (m, s) = bundle(&format!("p{d}.top.hbm{p}"), dcfg);
+        hbm_masters.push(m);
+        let (ps, adapter) = shared(PerfectSlave::new(format!("p{d}.hbm{p}"), s, die_cfg.hbm_latency));
+        io_components.push(Box::new(adapter));
+        hbm.push(ps);
+    }
+
+    let mut slaves = Vec::new();
+    let mut masters = Vec::new();
+    let mut rules = Vec::new();
+    for (i, root) in dma_roots.into_iter().enumerate() {
+        rules.push(AddrRule::new(root.range.0, root.range.1, i));
+        slaves.push(root.up_out);
+        masters.push(root.up_in);
+    }
+    let ndr = rules.len();
+    for p in 0..4u64 {
+        rules.push(AddrRule::new(
+            addr::HBM_BASE + p * hbm_port_size,
+            addr::HBM_BASE + (p + 1) * hbm_port_size,
+            ndr + p as usize,
+        ));
+    }
+    if has_d2d {
+        // Every remote die's aperture exits through the egress port; the
+        // demux below picks the link. A die's own aperture is absent —
+        // local traffic uses local addresses, so self-apertures decode
+        // to an error like any other unmapped address.
+        for j in 0..nd {
+            if j != d {
+                rules.push(AddrRule::new(
+                    podaddr::d2d_base(j),
+                    podaddr::d2d_base(j) + podaddr::DIE_WINDOW,
+                    ndr + 4,
+                ));
+            }
+        }
+    }
+    let map = AddrMap::new(rules, DefaultPort::Error);
+    slaves.push(coreup_s);
+    if has_d2d {
+        slaves.push(ig_s);
+        masters.extend(hbm_masters);
+        masters.push(d2d_out_m);
+    } else {
+        masters.extend(hbm_masters);
+    }
+    let n_s = slaves.len();
+    let n_m = masters.len();
+    let top = Crosspoint::new(
+        format!("p{d}.top"),
+        slaves,
+        masters,
+        CrosspointCfg {
+            port_cfg: dcfg,
+            maps: vec![map; n_s],
+            connectivity: vec![vec![true; n_m]; n_s],
+            txns_per_id: die_cfg.txns_per_id,
+            input_queue: die_cfg.input_queue,
+            max_txns_per_id: die_cfg.txns_per_id,
+        },
+    );
+    unsafe {
+        let sh = eng.shard(d);
+        sh.add(core_upsizer);
+        for part in top.into_parts() {
+            sh.add_boxed(part);
+        }
+        for c in io_components {
+            sh.add_boxed(c);
+        }
+    }
+
+    // --- D2D egress + ingress ---
+    if has_d2d {
+        // Egress: the crosspoint guarantees only remote-aperture
+        // addresses reach this port; map window j to link slot
+        // (j or j-1, own die skipped).
+        let sel = move |c: &Cmd| {
+            let j = (c.addr.wrapping_sub(podaddr::D2D_BASE) / podaddr::DIE_WINDOW) as usize;
+            if j < d {
+                j
+            } else {
+                j - 1
+            }
+        };
+        let demux = Demux::new_symmetric(format!("p{d}.d2d.eg"), d2d_out_s, egress, sel)
+            .with_max_txns_per_id(die_cfg.txns_per_id);
+        // Ingress: join the far relay ends (ordered by source die), then
+        // compress the mux-widened IDs back into the die's ID space.
+        let s = ingress.len();
+        let wide = BundleCfg::new(dcfg.data_bits, dcfg.id_bits + prepend_bits(s));
+        let (wide_m, wide_s) = bundle(&format!("p{d}.d2d.in.wide"), wide);
+        let mux = Mux::new(format!("p{d}.d2d.in.mux"), ingress, wide_m);
+        let remap = IdRemap::new(
+            format!("p{d}.d2d.in.remap"),
+            wide_s,
+            ig_m,
+            dcfg.id_space(),
+            die_cfg.txns_per_id,
+        );
+        unsafe {
+            let sh = eng.shard(d);
+            sh.add(demux);
+            for pipe in pipes {
+                sh.add(pipe);
+            }
+            sh.add(mux);
+            sh.add(remap);
+        }
+    }
+
+    PodDie { clusters, hbm, dma_taps, core_taps, d2d: counters }
+}
+
+/// Canonical rendering of everything the worker-thread count and engine
+/// mode must leave unchanged, pod-wide: per-die cluster and collective
+/// counters, per-level tree traffic, HBM bytes, and per-link D2D bytes.
+pub fn pod_determinism_fingerprint(pod: &Pod) -> String {
+    let dies: Vec<Json> = pod
+        .dies
+        .iter()
+        .map(|die| {
+            let clusters: Vec<Json> = die
+                .clusters
+                .iter()
+                .map(|c| {
+                    let cores = c.cores.borrow();
+                    let s = &cores.stats;
+                    let coll = c.coll.borrow();
+                    Json::Obj(vec![
+                        ("dma_bytes".into(), Json::Num(c.dma_bytes() as f64)),
+                        ("core_issued".into(), Json::Num(s.issued as f64)),
+                        ("core_completed".into(), Json::Num(s.completed as f64)),
+                        ("core_bytes".into(), Json::Num(s.bytes as f64)),
+                        ("core_data_errors".into(), Json::Num(s.data_errors as f64)),
+                        ("coll_ops".into(), Json::Num(coll.stats.ops_completed as f64)),
+                        ("coll_reduced".into(), Json::Num(coll.stats.reduced_bytes as f64)),
+                        ("coll_chains".into(), Json::Num(coll.stats.chains_submitted as f64)),
+                    ])
+                })
+                .collect();
+            let hbm: Vec<Json> = die
+                .hbm
+                .iter()
+                .map(|h| {
+                    let h = h.borrow();
+                    Json::Arr(vec![
+                        Json::Num(h.bytes_read as f64),
+                        Json::Num(h.bytes_written as f64),
+                    ])
+                })
+                .collect();
+            let level =
+                |bytes: Vec<u64>| Json::Arr(bytes.iter().map(|&b| Json::Num(b as f64)).collect());
+            let d2d: Vec<Json> = die
+                .d2d
+                .iter()
+                .map(|(j, c)| {
+                    let (w, r) = c.bytes();
+                    Json::Arr(vec![
+                        Json::Num(*j as f64),
+                        Json::Num(w as f64),
+                        Json::Num(r as f64),
+                    ])
+                })
+                .collect();
+            Json::Obj(vec![
+                ("clusters".into(), Json::Arr(clusters)),
+                ("dma_level_bytes".into(), level(die.dma_level_bytes())),
+                ("core_level_bytes".into(), level(die.core_level_bytes())),
+                ("hbm".into(), Json::Arr(hbm)),
+                ("d2d".into(), Json::Arr(d2d)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("cycles".into(), Json::Num(pod.cycles as f64)),
+        ("dies".into(), Json::Arr(dies)),
+    ])
+    .render()
+}
+
+// ---------------------------------------------------------------------------
+// Pod collectives: rank g = cluster g % m of die g / m (die-major).
+// ---------------------------------------------------------------------------
+
+/// The pod's rank partition for hierarchical collectives: die-major
+/// contiguous groups (`[[0..m), [m..2m), ...]`).
+pub fn pod_groups(n_dies: usize, m: usize) -> Vec<Vec<usize>> {
+    (0..n_dies).map(|die| (die * m..(die + 1) * m).collect()).collect()
+}
+
+/// Deterministic per-rank seed data (u64 element `j` of rank `r`); same
+/// scheme as the single-chiplet collective workloads.
+fn pod_seed(r: usize, j: u64) -> u64 {
+    (r as u64 + 1).wrapping_mul(0x9E37_79B9) ^ j
+}
+
+/// Result of running a pod-wide all-reduce end-to-end.
+#[derive(Debug)]
+pub struct PodCollectiveResult {
+    pub cycles: Cycle,
+    pub finished: bool,
+    /// Buffers verified element-wise against the host-computed sums.
+    pub correct: bool,
+    pub bytes: u64,
+    /// Payload bytes per simulated cycle — the headline metric
+    /// (`d2d_allreduce_bytes_per_cycle` in `BENCH_multichip.json`).
+    pub bytes_per_cycle: f64,
+    /// Data bytes that crossed D2D links during the collective.
+    pub d2d_bytes: u64,
+}
+
+/// Seed every rank, run a pod-wide ring all-reduce (`hier` = the
+/// hierarchical 3-phase schedule, else the flat ring oracle), and
+/// verify the result mathematically.
+///
+/// Both schedules address remote peers through the observer-dependent
+/// base map: same-die peers by their local base, remote peers through
+/// the destination die's aperture.
+pub fn run_pod_collective(
+    pod: &mut Pod,
+    bytes: u64,
+    budget: Cycle,
+    hier: bool,
+) -> Result<PodCollectiveResult> {
+    let m = pod.cfg.die.n_clusters();
+    let nd = pod.cfg.n_chiplets;
+    let n = nd * m;
+    let windows: Vec<(u64, u64)> = (0..n).map(|g| (addr::cluster_base(g % m), addr::L1_SIZE)).collect();
+    let base = |from: usize, to: usize| -> u64 {
+        let local = addr::cluster_base(to % m);
+        if from / m == to / m {
+            local
+        } else {
+            podaddr::d2d_base(to / m) + local
+        }
+    };
+    let cfg = CollCfg::builder(CollOp::AllReduce, Algo::Ring, bytes).build(n)?;
+    let mut built = if hier {
+        let groups = pod_groups(nd, m);
+        collective::build_hier_allreduce(&cfg, &groups, &windows, &base)?
+    } else {
+        // The identity rank order is already die-major consecutive, so
+        // the flat ring crosses each die boundary exactly once per lap —
+        // the D2D-minimal flat mapping.
+        collective::build_with_base(&cfg, &windows, &base)?
+    };
+    let elems = bytes / 8;
+    for g in 0..n {
+        let data: Vec<u8> = (0..elems).flat_map(|j| pod_seed(g, j).to_le_bytes()).collect();
+        pod.dies[g / m].clusters[g % m].l1.borrow().banks.borrow_mut().poke(built.buf[g], &data);
+    }
+    let d2d0 = pod.d2d_bytes();
+    let start = pod.cycles;
+    for (g, sched) in std::mem::take(&mut built.ranks).into_iter().enumerate() {
+        pod.submit_collective(g / m, g % m, sched);
+    }
+    let finished = pod.run_until(budget, |p| p.all_collectives_done());
+    let cycles = pod.cycles - start;
+
+    let sums: Vec<u64> = (0..elems)
+        .map(|j| (0..n).fold(0u64, |a, g| a.wrapping_add(pod_seed(g, j))))
+        .collect();
+    let mut correct = finished;
+    'ranks: for g in 0..n {
+        if !correct {
+            break;
+        }
+        let got = pod.dies[g / m].clusters[g % m]
+            .l1
+            .borrow()
+            .banks
+            .borrow()
+            .peek_vec(built.buf[g], bytes as usize);
+        for (j, c) in got.chunks_exact(8).enumerate() {
+            if u64::from_le_bytes(c.try_into().unwrap()) != sums[j] {
+                correct = false;
+                break 'ranks;
+            }
+        }
+    }
+    Ok(PodCollectiveResult {
+        cycles,
+        finished,
+        correct,
+        bytes,
+        bytes_per_cycle: bytes as f64 / cycles.max(1) as f64,
+        d2d_bytes: pod.d2d_bytes() - d2d0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::dma::TransferReq;
+    use crate::sim::EngineOpts;
+
+    /// A 2-cluster die: the smallest shape that still exercises the
+    /// full tree + top-crosspoint code path.
+    fn tiny_die() -> ChipletCfg {
+        ChipletCfg { fanout: vec![2], ..ChipletCfg::small() }
+    }
+
+    /// Fast link timing for tests (the default 50-cycle/quarter-width
+    /// link works too, just slower).
+    fn test_d2d() -> D2DCfg {
+        D2DCfg { latency: 4, credits: 32, serialize: 2 }
+    }
+
+    fn tiny_pod(n_chiplets: usize) -> Pod {
+        Pod::new(PodCfg { n_chiplets, die: tiny_die(), d2d: test_d2d() })
+    }
+
+    fn submit_dma(pod: &Pod, die: usize, cluster: usize, engine: usize, req: TransferReq) -> u64 {
+        pod.dies[die].clusters[cluster].dma[engine].borrow_mut().submit(req)
+    }
+
+    fn dma_done(pod: &Pod, die: usize, cluster: usize, engine: usize, h: u64) -> bool {
+        pod.dies[die].clusters[cluster].dma[engine].borrow().completions.contains(&h)
+    }
+
+    #[test]
+    fn cross_die_dma_write_through_aperture() {
+        // Die 0 / cluster 0 writes into die 1 / cluster 1's L1 through
+        // the aperture; the link strips the base so the data lands at
+        // the plain local address.
+        let mut pod = tiny_pod(2);
+        let local_dst = addr::cluster_base(1) + 0x4000;
+        let src = addr::cluster_base(0) + 0x2000;
+        let data: Vec<u8> = (0..1024).map(|i| (i % 251) as u8).collect();
+        pod.dies[0].clusters[0].l1.borrow().banks.borrow_mut().poke(src, &data);
+        let h = submit_dma(
+            &pod,
+            0,
+            0,
+            1,
+            TransferReq::OneD { src, dst: podaddr::d2d_base(1) + local_dst, len: 1024 },
+        );
+        let ok = pod.run_until(100_000, |p| dma_done(p, 0, 0, 1, h));
+        assert!(ok, "cross-die DMA write must complete");
+        assert_eq!(
+            pod.dies[1].clusters[1].l1.borrow().banks.borrow().peek_vec(local_dst, 1024),
+            data
+        );
+        let (w, r) = pod.dies[0].d2d[0].1.bytes();
+        assert!(w >= 1024, "write data must cross the 0->1 link, got {w}");
+        assert_eq!(r, 0, "a pure write carries no response data");
+    }
+
+    #[test]
+    fn cross_die_dma_read_through_aperture() {
+        // Die 1 / cluster 0 reads from die 0 / cluster 1: AR crosses
+        // forward on the 1->0 link, R data flows back over the same link.
+        let mut pod = tiny_pod(2);
+        let remote_src = addr::cluster_base(1) + 0x1000;
+        let dst = addr::cluster_base(0) + 0x8000;
+        let data: Vec<u8> = (0..512).map(|i| (i % 199) as u8).collect();
+        pod.dies[0].clusters[1].l1.borrow().banks.borrow_mut().poke(remote_src, &data);
+        let h = submit_dma(
+            &pod,
+            1,
+            0,
+            0,
+            TransferReq::OneD { src: podaddr::d2d_base(0) + remote_src, dst, len: 512 },
+        );
+        let ok = pod.run_until(100_000, |p| dma_done(p, 1, 0, 0, h));
+        assert!(ok, "cross-die DMA read must complete");
+        assert_eq!(pod.dies[1].clusters[0].l1.borrow().banks.borrow().peek_vec(dst, 512), data);
+        let (_, r) = pod.dies[1].d2d[0].1.bytes();
+        assert!(r >= 512, "read data must return over the 1->0 link, got {r}");
+    }
+
+    #[test]
+    fn idle_pod_sleeps_everything() {
+        let mut pod = tiny_pod(3);
+        pod.run(200);
+        assert_eq!(
+            pod.awake_components(),
+            0,
+            "idle pod must be fully asleep ({} components registered)",
+            pod.component_count()
+        );
+        pod.run(100);
+        assert_eq!(pod.awake_components(), 0);
+    }
+
+    #[test]
+    fn hier_allreduce_matches_flat_oracle_on_fabric() {
+        // Both schedules must produce the exact element-wise sums on
+        // the real fabric; the hierarchical one must also move fewer
+        // bytes over the D2D links.
+        let run = |hier: bool| {
+            let mut pod = tiny_pod(2);
+            let r = run_pod_collective(&mut pod, 4096, 2_000_000, hier).unwrap();
+            assert!(r.finished, "all-reduce (hier={hier}) must finish");
+            assert!(r.correct, "all-reduce (hier={hier}) must be exact");
+            r
+        };
+        let flat = run(false);
+        let hier = run(true);
+        assert!(
+            hier.d2d_bytes < flat.d2d_bytes,
+            "hierarchical must cut off-die traffic: {} vs flat {}",
+            hier.d2d_bytes,
+            flat.d2d_bytes
+        );
+    }
+
+    #[test]
+    fn four_die_hier_allreduce_is_exact() {
+        let mut pod = tiny_pod(4);
+        let r = run_pod_collective(&mut pod, 4096, 4_000_000, true).unwrap();
+        assert!(r.finished && r.correct, "4-die hierarchical all-reduce must be exact");
+        assert!(r.d2d_bytes > 0, "phase B must cross the links");
+    }
+
+    #[test]
+    fn pod_fingerprint_identical_across_threads_and_modes() {
+        // The tentpole acceptance gate: a 4-chiplet pod runs the
+        // hierarchical all-reduce to a bit-identical fingerprint for
+        // every worker-thread count and both engine modes.
+        let run = |threads: usize, full_scan: bool| {
+            let mut die = tiny_die();
+            die.engine = EngineOpts::sharded(threads, 8);
+            die.engine.full_scan = full_scan;
+            let mut pod = Pod::new(PodCfg { n_chiplets: 4, die, d2d: test_d2d() });
+            let r = run_pod_collective(&mut pod, 2048, 2_000_000, true).unwrap();
+            assert!(r.finished && r.correct, "threads={threads} full_scan={full_scan}");
+            pod_determinism_fingerprint(&pod)
+        };
+        let golden = run(1, false);
+        for threads in [2, 4, 8] {
+            assert_eq!(run(threads, false), golden, "threads={threads} diverged");
+        }
+        for threads in [1, 2] {
+            assert_eq!(run(threads, true), golden, "full-scan threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn single_die_pod_degenerates_cleanly() {
+        // n_chiplets = 1: no links, no egress/ingress ports, and the
+        // "hierarchical" schedule reduces to the intra-die phases.
+        let mut pod = tiny_pod(1);
+        let r = run_pod_collective(&mut pod, 2048, 500_000, true).unwrap();
+        assert!(r.finished && r.correct);
+        assert_eq!(r.d2d_bytes, 0);
+        assert_eq!(pod.d2d_bytes(), 0);
+    }
+
+    #[test]
+    fn pod_groups_partition_die_major() {
+        assert_eq!(pod_groups(2, 3), vec![vec![0, 1, 2], vec![3, 4, 5]]);
+        assert_eq!(
+            collective::pod_hierarchical_order(&pod_groups(2, 2)),
+            vec![0, 1, 2, 3],
+            "die-major groups flatten to the identity ring order"
+        );
+    }
+}

@@ -1,0 +1,399 @@
+//! Die-to-die (D2D) link: the off-chip hop of a multi-chiplet pod.
+//!
+//! An off-die SerDes link differs from every on-die module in three
+//! ways, and this component models exactly those three (cf. the DNP /
+//! Colagrande et al. follow-up papers treating off-die links as
+//! first-class network hops):
+//!
+//! - **Latency**: tens of cycles of flight time through the PHY and
+//!   across the interposer, applied to every beat in both directions.
+//! - **Serialization**: the off-die lane bundle is narrower than the
+//!   on-die data path, so data beats (W/R) depart at most once every
+//!   `serialize` cycles — an effective bandwidth of
+//!   `beat_bytes / serialize` bytes per cycle. Command and response
+//!   beats (AW/AR/B) are header-sized and pace at one per cycle.
+//! - **Credits**: the far side's receive buffers are finite; at most
+//!   `credits` beats per channel are in flight inside the pipe.
+//!
+//! The link is also where the pod's inter-chiplet address map folds
+//! back to the die-local map: a master reaches die `d` through a
+//! dedicated aperture window (see `manticore::pod`), and the link
+//! subtracts the aperture base from AW/AR addresses in flight, so the
+//! destination die decodes plain local addresses and the dies' own
+//! address maps never learn about the pod.
+//!
+//! In a sharded pod the link's downstream bundle is cut with
+//! `protocol::exchange` relays (the deep off-die pipe is exactly the
+//! timing model the epoch exchange already implements), so the link
+//! component itself stays confined to the source die's shard.
+
+use std::collections::VecDeque;
+
+use crate::protocol::payload::{BBeat, Cmd, RBeat, WBeat};
+use crate::protocol::{MasterEnd, SlaveEnd};
+use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
+
+/// Timing/capacity parameters of one D2D link direction pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct D2DCfg {
+    /// Flight latency in cycles added to every beat, each direction.
+    pub latency: Cycle,
+    /// Max in-flight beats per channel (far-side buffer credits).
+    pub credits: usize,
+    /// Cycles per data beat (W/R): beat_bytes/serialize bytes/cycle of
+    /// effective data bandwidth. 1 = full on-die width off-die.
+    pub serialize: Cycle,
+}
+
+impl Default for D2DCfg {
+    fn default() -> Self {
+        // A deep but not absurd off-package hop: 50 cycles of flight,
+        // a quarter of the on-die data width, 16 beats of buffering.
+        D2DCfg { latency: 50, credits: 16, serialize: 4 }
+    }
+}
+
+/// Byte counters a [`Die2Die`] link publishes to its pod (plain shared
+/// cells: the pod reads them between runs only, the same external-handle
+/// discipline as every other observer in sharded mode).
+#[derive(Clone, Default)]
+pub struct D2DCounters {
+    inner: std::rc::Rc<std::cell::Cell<(u64, u64)>>,
+}
+
+impl D2DCounters {
+    /// (forward write-data bytes, response read-data bytes) carried.
+    pub fn bytes(&self) -> (u64, u64) {
+        self.inner.get()
+    }
+
+    /// Total data bytes carried in either direction.
+    pub fn total_bytes(&self) -> u64 {
+        let (w, r) = self.inner.get();
+        w + r
+    }
+
+    fn add(&self, w: u64, r: u64) {
+        let (cw, cr) = self.inner.get();
+        self.inner.set((cw + w, cr + r));
+    }
+}
+
+/// One beat waiting out its flight latency.
+struct InFlight<T> {
+    ready: Cycle,
+    beat: T,
+}
+
+/// Bounded latency pipe for one channel.
+struct Pipe<T> {
+    q: VecDeque<InFlight<T>>,
+    credits: usize,
+}
+
+impl<T> Pipe<T> {
+    fn new(credits: usize) -> Self {
+        Pipe { q: VecDeque::new(), credits }
+    }
+
+    fn can_accept(&self) -> bool {
+        self.q.len() < self.credits
+    }
+
+    fn accept(&mut self, cy: Cycle, latency: Cycle, beat: T) {
+        debug_assert!(self.can_accept());
+        self.q.push_back(InFlight { ready: cy + latency, beat });
+    }
+
+    fn ready(&self, cy: Cycle) -> bool {
+        self.q.front().is_some_and(|f| f.ready <= cy)
+    }
+
+    fn pop(&mut self) -> T {
+        self.q.pop_front().expect("ready checked").beat
+    }
+
+    fn len(&self) -> usize {
+        self.q.len()
+    }
+}
+
+/// The D2D link component: a five-channel slave→master bridge with
+/// flight latency, per-channel credits, data serialization, and
+/// aperture-stripping address translation (see module docs).
+pub struct Die2Die {
+    name: String,
+    cfg: D2DCfg,
+    /// Aperture base subtracted from AW/AR addresses in flight; 0
+    /// disables translation.
+    strip: u64,
+    slave: SlaveEnd,
+    master: MasterEnd,
+    aw: Pipe<Cmd>,
+    w: Pipe<WBeat>,
+    ar: Pipe<Cmd>,
+    b: Pipe<BBeat>,
+    r: Pipe<RBeat>,
+    /// Earliest cycle the serializer accepts the next W (resp. R) beat.
+    next_w: Cycle,
+    next_r: Cycle,
+    counters: D2DCounters,
+}
+
+impl Die2Die {
+    /// Bridge `slave` (traffic leaving the source die) onto `master`
+    /// (toward the destination die), stripping `strip` from command
+    /// addresses. Returns the component and its byte counters.
+    pub fn new(
+        name: impl Into<String>,
+        cfg: D2DCfg,
+        strip: u64,
+        slave: SlaveEnd,
+        master: MasterEnd,
+    ) -> (Self, D2DCounters) {
+        assert_eq!(slave.cfg.data_bits, master.cfg.data_bits);
+        assert_eq!(slave.cfg.id_bits, master.cfg.id_bits);
+        let cfg = D2DCfg {
+            latency: cfg.latency.max(1),
+            credits: cfg.credits.max(1),
+            serialize: cfg.serialize.max(1),
+        };
+        let counters = D2DCounters::default();
+        let link = Die2Die {
+            name: name.into(),
+            cfg,
+            strip,
+            slave,
+            master,
+            aw: Pipe::new(cfg.credits),
+            w: Pipe::new(cfg.credits),
+            ar: Pipe::new(cfg.credits),
+            b: Pipe::new(cfg.credits),
+            r: Pipe::new(cfg.credits),
+            next_w: 0,
+            next_r: 0,
+            counters: counters.clone(),
+        };
+        (link, counters)
+    }
+
+    fn translate(&self, mut c: Cmd) -> Cmd {
+        c.addr = c.addr.wrapping_sub(self.strip);
+        c
+    }
+
+    fn in_flight(&self) -> usize {
+        self.aw.len() + self.w.len() + self.ar.len() + self.b.len() + self.r.len()
+    }
+}
+
+impl Component for Die2Die {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
+        self.slave.bind_owner(wake, id);
+        self.master.bind_owner(wake, id);
+    }
+
+    fn tick(&mut self, cy: Cycle) -> Activity {
+        self.slave.set_now(cy);
+        self.master.set_now(cy);
+
+        // Deliver beats whose flight time has elapsed (before accepting,
+        // so a beat spends at least `latency` full cycles in the pipe).
+        if self.aw.ready(cy) && self.master.aw.can_push() {
+            self.master.aw.push(self.aw.pop());
+        }
+        if self.w.ready(cy) && self.master.w.can_push() {
+            let beat = self.w.pop();
+            self.counters.add(beat.data.len() as u64, 0);
+            self.master.w.push(beat);
+        }
+        if self.ar.ready(cy) && self.master.ar.can_push() {
+            self.master.ar.push(self.ar.pop());
+        }
+        if self.b.ready(cy) && self.slave.b.can_push() {
+            self.slave.b.push(self.b.pop());
+        }
+        if self.r.ready(cy) && self.slave.r.can_push() {
+            let beat = self.r.pop();
+            self.counters.add(0, beat.data.len() as u64);
+            self.slave.r.push(beat);
+        }
+
+        // Accept new beats into the pipe: commands/responses at one per
+        // cycle, data beats at the serializer's pace.
+        if self.slave.aw.can_pop() && self.aw.can_accept() {
+            let c = self.translate(self.slave.aw.pop());
+            self.aw.accept(cy, self.cfg.latency, c);
+        }
+        if cy >= self.next_w && self.slave.w.can_pop() && self.w.can_accept() {
+            self.w.accept(cy, self.cfg.latency, self.slave.w.pop());
+            self.next_w = cy + self.cfg.serialize;
+        }
+        if self.slave.ar.can_pop() && self.ar.can_accept() {
+            let c = self.translate(self.slave.ar.pop());
+            self.ar.accept(cy, self.cfg.latency, c);
+        }
+        if self.master.b.can_pop() && self.b.can_accept() {
+            self.b.accept(cy, self.cfg.latency, self.master.b.pop());
+        }
+        if cy >= self.next_r && self.master.r.can_pop() && self.r.can_accept() {
+            self.r.accept(cy, self.cfg.latency, self.master.r.pop());
+            self.next_r = cy + self.cfg.serialize;
+        }
+
+        Activity::active_if(
+            self.in_flight() + self.slave.pending_input() + self.master.pending_input() > 0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::payload::Bytes;
+    use crate::protocol::port::{bundle, BundleCfg};
+
+    fn link(cfg: D2DCfg, strip: u64) -> (Die2Die, D2DCounters, MasterEnd, SlaveEnd) {
+        let bcfg = BundleCfg::default();
+        let (up_m, up_s) = bundle("d2d.up", bcfg);
+        let (down_m, down_s) = bundle("d2d.down", bcfg);
+        let (l, ctr) = Die2Die::new("d2d", cfg, strip, up_s, down_m);
+        (l, ctr, up_m, down_s)
+    }
+
+    fn clock(cy: Cycle, m: &MasterEnd, s: &SlaveEnd) {
+        m.set_now(cy);
+        s.set_now(cy);
+    }
+
+    #[test]
+    fn beats_wait_out_the_flight_latency() {
+        let cfg = D2DCfg { latency: 10, credits: 4, serialize: 1 };
+        let (mut l, _ctr, up_m, down_s) = link(cfg, 0);
+        clock(0, &up_m, &down_s);
+        up_m.ar.push(Cmd::new(1, 0x40, 0, 3));
+        let mut seen_at = None;
+        for cy in 1..40 {
+            clock(cy, &up_m, &down_s);
+            l.tick(cy);
+            if down_s.ar.can_pop() {
+                seen_at = Some(cy);
+                assert_eq!(down_s.ar.pop().id, 1);
+                break;
+            }
+        }
+        // Accepted at cycle 1, ready at 11, pushed at 11, visible 12.
+        assert_eq!(seen_at, Some(12), "latency 10 must delay the beat");
+    }
+
+    #[test]
+    fn serializer_paces_write_data() {
+        let cfg = D2DCfg { latency: 1, credits: 64, serialize: 4 };
+        let (mut l, ctr, up_m, down_s) = link(cfg, 0);
+        let mut delivered = Vec::new();
+        for cy in 0..100 {
+            clock(cy, &up_m, &down_s);
+            if up_m.w.can_push() {
+                up_m.w.push(WBeat::full(Bytes::zeroed(8), false, 0));
+            }
+            l.tick(cy);
+            if down_s.w.can_pop() {
+                down_s.w.pop();
+                delivered.push(cy);
+            }
+        }
+        // One beat per `serialize` cycles once the pipe fills.
+        assert!(
+            (23..=26).contains(&delivered.len()),
+            "serialize=4 over 100 cycles must deliver ~25 beats, got {}",
+            delivered.len()
+        );
+        for pair in delivered.windows(2) {
+            assert!(pair[1] - pair[0] >= 4, "beats closer than the serializer allows: {pair:?}");
+        }
+        assert_eq!(ctr.bytes().0, delivered.len() as u64 * 8);
+    }
+
+    #[test]
+    fn credits_bound_the_in_flight_window() {
+        // Block the output: the pipe may absorb at most `credits` AR
+        // beats (plus the channel's own depth) before back-pressuring.
+        let cfg = D2DCfg { latency: 1, credits: 3, serialize: 1 };
+        let (mut l, _ctr, up_m, down_s) = link(cfg, 0);
+        let mut pushed = 0;
+        for cy in 0..50 {
+            clock(cy, &up_m, &down_s);
+            if up_m.ar.can_push() {
+                up_m.ar.push(Cmd::new(0, 0, 0, 3));
+                pushed += 1;
+            }
+            l.tick(cy);
+            // Never pop down_s.ar: the downstream bundle (depth 2) fills,
+            // then the credit window, then the upstream channel.
+        }
+        let bcfg = BundleCfg::default();
+        assert_eq!(
+            pushed,
+            3 + 2 * bcfg.depth,
+            "in-flight bound = credits + up/down channel depth"
+        );
+    }
+
+    #[test]
+    fn responses_flow_back_with_latency() {
+        let cfg = D2DCfg { latency: 5, credits: 4, serialize: 2 };
+        let (mut l, ctr, up_m, down_s) = link(cfg, 0);
+        clock(0, &up_m, &down_s);
+        down_s.b.push(BBeat { id: 7, resp: crate::protocol::Resp::Okay, tag: 0 });
+        down_s.r.push(RBeat {
+            id: 7,
+            data: Bytes::zeroed(8),
+            resp: crate::protocol::Resp::Okay,
+            last: true,
+            tag: 0,
+        });
+        let mut got_b = None;
+        let mut got_r = None;
+        for cy in 1..30 {
+            clock(cy, &up_m, &down_s);
+            l.tick(cy);
+            if got_b.is_none() && up_m.b.can_pop() {
+                assert_eq!(up_m.b.pop().id, 7);
+                got_b = Some(cy);
+            }
+            if got_r.is_none() && up_m.r.can_pop() {
+                assert_eq!(up_m.r.pop().id, 7);
+                got_r = Some(cy);
+            }
+        }
+        assert_eq!(got_b, Some(7), "B: accepted at 1, ready 6, visible 7");
+        assert_eq!(got_r, Some(7), "R: same flight time");
+        assert_eq!(ctr.bytes(), (0, 8));
+    }
+
+    #[test]
+    fn aperture_base_is_stripped_from_commands() {
+        let strip = 0x84_0000_0000u64;
+        let cfg = D2DCfg { latency: 1, credits: 4, serialize: 1 };
+        let (mut l, _ctr, up_m, down_s) = link(cfg, strip);
+        clock(0, &up_m, &down_s);
+        up_m.aw.push(Cmd::new(2, strip + 0x10_1000, 0, 3));
+        up_m.ar.push(Cmd::new(3, strip + 0x20_2000, 0, 3));
+        for cy in 1..10 {
+            clock(cy, &up_m, &down_s);
+            l.tick(cy);
+        }
+        assert_eq!(down_s.aw.pop().addr, 0x10_1000, "AW lands die-local");
+        assert_eq!(down_s.ar.pop().addr, 0x20_2000, "AR lands die-local");
+    }
+
+    #[test]
+    fn cfg_zero_values_normalize() {
+        let (l, _ctr, _m, _s) = link(D2DCfg { latency: 0, credits: 0, serialize: 0 }, 0);
+        assert_eq!(l.cfg, D2DCfg { latency: 1, credits: 1, serialize: 1 });
+    }
+}

@@ -7,6 +7,7 @@
 pub mod addr_decode;
 pub mod cdc;
 pub mod crosspoint;
+pub mod d2d;
 pub mod demux;
 pub mod dma;
 pub mod downsizer;
@@ -25,6 +26,7 @@ pub mod xbar;
 pub use addr_decode::{AddrMap, AddrRule, DefaultPort};
 pub use cdc::{cdc, CdcMaster, CdcSlave};
 pub use crosspoint::{Crosspoint, CrosspointCfg};
+pub use d2d::{D2DCfg, D2DCounters, Die2Die};
 pub use demux::Demux;
 pub use dma::{Dma, TransferReq};
 pub use downsizer::Downsizer;

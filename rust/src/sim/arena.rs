@@ -43,6 +43,7 @@ impl Arena {
         } else {
             let mut eng = ShardedEngine::new(n_shards, opts.epoch.max(1), threads);
             eng.set_policy(opts.policy);
+            eng.set_pin_workers(opts.pin_workers);
             Arena::Sharded { eng }
         };
         if opts.full_scan {

@@ -2,6 +2,7 @@
 //! clock domains, statistics, deterministic PRNG, and the property-testing
 //! mini-framework.
 
+pub mod affinity;
 pub mod arena;
 pub mod engine;
 pub mod opts;
@@ -10,6 +11,7 @@ pub mod rng;
 pub mod shard;
 pub mod stats;
 
+pub use affinity::pin_to_core;
 pub use arena::Arena;
 pub use engine::{
     shared, Activity, Component, ComponentId, Cycle, DomainId, Engine, Ps, Shared, WakeSet,

@@ -80,11 +80,22 @@ pub struct EngineOpts {
     /// every cycle (the pre-engine behaviour). Kept as an A/B oracle —
     /// results must be bit-identical to event mode.
     pub full_scan: bool,
+    /// Pin pool workers to cores at spawn (`--pin-workers`, sharded mode
+    /// only): a best-effort `sched_setaffinity` locality hint via
+    /// `sim::affinity` — never a result change, observable only in the
+    /// shard profiler's `stall_ns`/`run_ns` split.
+    pub pin_workers: bool,
 }
 
 impl Default for EngineOpts {
     fn default() -> Self {
-        EngineOpts { threads: None, epoch: 8, policy: EpochPolicy::Fixed, full_scan: false }
+        EngineOpts {
+            threads: None,
+            epoch: 8,
+            policy: EpochPolicy::Fixed,
+            full_scan: false,
+            pin_workers: false,
+        }
     }
 }
 
@@ -116,7 +127,8 @@ impl EngineOpts {
     }
 
     /// Apply the shared CLI flags (`--threads N`, `--epoch E`,
-    /// `--epoch-policy fixed|adaptive`, `--full-scan`) on top of
+    /// `--epoch-policy fixed|adaptive`, `--full-scan`,
+    /// `--pin-workers`) on top of
     /// whatever the config file set, then [`EngineOpts::validate`] the
     /// result. With `auto_threads_if_unset`, a thread count that is
     /// still unset after both layers resolves to the host core count
@@ -129,6 +141,9 @@ impl EngineOpts {
     ) -> Result<()> {
         if flags.contains_key("full-scan") {
             self.full_scan = true;
+        }
+        if flags.contains_key("pin-workers") {
+            self.pin_workers = true;
         }
         if let Some(t) = flags.get("threads") {
             self.threads = Some(t.parse().context("--threads must be a non-negative integer")?);
@@ -171,6 +186,7 @@ mod tests {
                 ("epoch", "16"),
                 ("epoch-policy", "adaptive"),
                 ("full-scan", "true"),
+                ("pin-workers", "true"),
             ]),
             true,
         )
@@ -179,6 +195,7 @@ mod tests {
         assert_eq!(opts.epoch, 16);
         assert_eq!(opts.policy, EpochPolicy::Adaptive);
         assert!(opts.full_scan);
+        assert!(opts.pin_workers);
     }
 
     #[test]

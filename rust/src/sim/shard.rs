@@ -547,14 +547,21 @@ pub struct ShardProfileReport {
 impl ShardProfileReport {
     /// Fraction of the workers' total wall-clock spent stalled at epoch
     /// barriers — the headline "is the barrier the bottleneck" number.
+    ///
+    /// A profile with zero measured shard-run time (the engine never
+    /// advanced, or every window was too short for the clock to
+    /// resolve) has no meaningful stall fraction: report 0.0 — never
+    /// NaN, and never the degenerate 1.0 that `stall_ns > 0` with
+    /// `run_ns == 0` would produce — so `check_bench_trend.py`'s
+    /// absolute-growth gate always compares real numbers.
     pub fn exchange_stall_frac(&self) -> f64 {
         let stall: u64 = self.workers.iter().map(|w| w.stall_ns).sum();
-        let busy: u64 = self.workers.iter().map(|w| w.run_ns + w.exchange_ns).sum();
-        let total = stall + busy;
-        if total == 0 {
+        let run: u64 = self.workers.iter().map(|w| w.run_ns).sum();
+        let exchange: u64 = self.workers.iter().map(|w| w.exchange_ns).sum();
+        if run == 0 {
             0.0
         } else {
-            stall as f64 / total as f64
+            stall as f64 / (stall + run + exchange) as f64
         }
     }
 }
@@ -942,9 +949,21 @@ struct PoolShared {
 struct WorkerPool {
     shared: Arc<PoolShared>,
     handles: Vec<std::thread::JoinHandle<()>>,
+    /// Whether the pool's threads pinned themselves at spawn
+    /// (`--pin-workers`); a pool built with the wrong setting is
+    /// recreated by `ensure_pool`.
+    pinned: bool,
 }
 
-fn pool_worker(shared: Arc<PoolShared>, index: usize) {
+fn pool_worker(shared: Arc<PoolShared>, index: usize, pin: bool) {
+    if pin {
+        // Best-effort: pool worker `index` (1..=size) pins to core
+        // `index`. The caller's thread stays worker 0 and is left
+        // unpinned — hijacking the affinity of a thread the library
+        // does not own would leak past the simulation. Placement never
+        // affects results, only cache locality, so failure is ignored.
+        let _ = crate::sim::affinity::pin_to_core(index);
+    }
     let mut last = 0u64;
     loop {
         let job = {
@@ -980,7 +999,7 @@ fn pool_worker(shared: Arc<PoolShared>, index: usize) {
 }
 
 impl WorkerPool {
-    fn new(size: usize) -> Self {
+    fn new(size: usize, pin: bool) -> Self {
         let shared = Arc::new(PoolShared {
             state: Mutex::new(PoolState { gen: 0, job: None, finished: 0, shutdown: false }),
             go: Condvar::new(),
@@ -991,11 +1010,11 @@ impl WorkerPool {
                 let sh = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("noc-shard-{index}"))
-                    .spawn(move || pool_worker(sh, index))
+                    .spawn(move || pool_worker(sh, index, pin))
                     .expect("spawn shard worker")
             })
             .collect();
-        WorkerPool { shared, handles }
+        WorkerPool { shared, handles, pinned: pin }
     }
 
     fn size(&self) -> usize {
@@ -1067,6 +1086,9 @@ pub struct ShardedEngine {
     policy: EpochPolicy,
     cycles: Cycle,
     sleep_enabled: bool,
+    /// Pin pool workers to cores at spawn (`--pin-workers`): a
+    /// best-effort locality hint, never a result change.
+    pin_workers: bool,
     pool: Option<WorkerPool>,
     assign_cache: Option<AssignCache>,
     /// Bumped when the placement weights change meaning: 0 = component
@@ -1100,6 +1122,7 @@ impl ShardedEngine {
             policy: EpochPolicy::Fixed,
             cycles: 0,
             sleep_enabled: true,
+            pin_workers: false,
             pool: None,
             assign_cache: None,
             weight_gen: 0,
@@ -1218,6 +1241,19 @@ impl ShardedEngine {
         self.policy = policy;
     }
 
+    /// Pin pool workers to cores at spawn (`sched_setaffinity`, see
+    /// `sim::affinity`). Best-effort and results-neutral: placement only
+    /// affects the profiler's `stall_ns`/`run_ns` split. Takes effect at
+    /// the next parallel run (the pool is rebuilt if the setting
+    /// changed); worker 0 — the caller's own thread — is never pinned.
+    pub fn set_pin_workers(&mut self, pin: bool) {
+        self.pin_workers = pin;
+    }
+
+    pub fn pin_workers(&self) -> bool {
+        self.pin_workers
+    }
+
     pub fn policy(&self) -> EpochPolicy {
         self.policy
     }
@@ -1272,13 +1308,15 @@ impl ShardedEngine {
     }
 
     /// Make sure the pool holds exactly `workers - 1` threads (the
-    /// caller's thread is worker 0). Recreated only when the worker
-    /// count changes — in practice once, on the first parallel run.
+    /// caller's thread is worker 0), pinned per `pin_workers`.
+    /// Recreated only when the worker count or pin setting changes —
+    /// in practice once, on the first parallel run.
     fn ensure_pool(&mut self, workers: usize) {
         let need = workers - 1;
-        if self.pool.as_ref().map(WorkerPool::size) != Some(need) {
+        let want = Some((need, self.pin_workers));
+        if self.pool.as_ref().map(|p| (p.size(), p.pinned)) != want {
             self.pool = None; // joins the old threads
-            self.pool = Some(WorkerPool::new(need));
+            self.pool = Some(WorkerPool::new(need, self.pin_workers));
         }
     }
 
@@ -1847,6 +1885,47 @@ mod tests {
             assert_eq!(s.windows, 3, "12 cycles / epoch 4 = 3 windows per shard");
         }
         assert!(prof.exchange_stall_frac() >= 0.0 && prof.exchange_stall_frac() <= 1.0);
+    }
+
+    #[test]
+    fn stall_frac_is_zero_without_measured_run_time() {
+        // No runs at all: everything is zero.
+        let report = ShardProfileReport::default();
+        assert_eq!(report.exchange_stall_frac(), 0.0);
+        // The degenerate case the bench trend gate must never see: a
+        // worker that recorded barrier stall but no resolvable run time
+        // (sub-ns windows on a coarse clock). Must be 0.0, not NaN and
+        // not a meaningless 1.0.
+        let mut report = ShardProfileReport::default();
+        report.workers.push(WorkerProfile { run_ns: 0, stall_ns: 1234, exchange_ns: 0 });
+        assert_eq!(report.exchange_stall_frac(), 0.0);
+        // With real run time the fraction is the stall share.
+        report.workers[0].run_ns = 1234;
+        assert!((report.exchange_stall_frac() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pinned_pool_is_bit_identical_and_rebuilt_on_toggle() {
+        let run_pinned = |pin: bool| {
+            let mut eng = ShardedEngine::new(2, 4, 2);
+            eng.set_pin_workers(pin);
+            assert_eq!(eng.pin_workers(), pin);
+            let (tx, rx, link) = exchange_channel::<u64>("x", 16);
+            let log = Rc::new(RefCell::new(Vec::new()));
+            // SAFETY: shards only share the exchange queue (see above).
+            unsafe {
+                eng.shard(0).add(Sender { tx, next: 0, total: 10 });
+                eng.shard(1).add(Receiver { rx, log: log.clone() });
+            }
+            eng.run(40);
+            // Toggling pinning mid-flight rebuilds the pool on the next
+            // run and must not disturb results either.
+            eng.set_pin_workers(!pin);
+            eng.run(20);
+            let out = log.borrow().clone();
+            out
+        };
+        assert_eq!(run_pinned(false), run_pinned(true), "pinning never changes results");
     }
 
     #[test]

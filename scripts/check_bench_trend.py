@@ -77,6 +77,12 @@ TRACKED = [
     # Simulated (deterministic) collective bandwidth: regressions here are
     # real scheduling/fabric changes, not runner noise.
     {"file": "BENCH_collective.json", "key": "allreduce_bytes_per_cycle"},
+    # Pod-scale hierarchical all-reduce over constrained D2D links —
+    # deterministic simulated throughput, same noise-free profile as the
+    # single-die collective metric above. The bench itself additionally
+    # asserts hierarchical >= flat-ring at 4 chiplets.
+    {"file": "BENCH_multichip.json", "key": "d2d_allreduce_bytes_per_cycle"},
+    {"file": "BENCH_multichip.json", "key": "hier_over_flat_speedup"},
 ]
 THRESHOLD = 0.20
 
