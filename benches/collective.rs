@@ -126,6 +126,28 @@ fn main() {
     report.metric("sharded_allreduce_stall_frac", prof.exchange_stall_frac());
     report.metric("sharded_allreduce_exchanges", prof.exchanges as f64);
 
+    section("telemetry: energy accounting, same ring all-reduce with meters on");
+    let engine = EngineOpts { threads: Some(0), telemetry: true, ..EngineOpts::default() };
+    let cfg = ChipletCfg { fanout: bench_fanout(), engine, ..ChipletCfg::full() };
+    let mut ch = Chiplet::new(cfg);
+    let res = run_collective(&mut ch, CollOp::AllReduce, Algo::Ring, bytes, BUDGET)
+        .expect("collective builds");
+    let metered = checked(CollOp::AllReduce, Algo::Ring, res);
+    assert_eq!(metered.cycles, ring.cycles, "telemetry must not change simulation results");
+    println!(
+        "allreduce energy: {:.1} pJ ({:.4} pJ/B payload); DMA chain latency p50 {} / p99 {} \
+         cycles over {} chains",
+        metered.energy_pj,
+        metered.energy_per_byte_pj,
+        metered.chain_latency.percentile(50.0),
+        metered.chain_latency.percentile(99.0),
+        metered.chain_latency.count()
+    );
+    report.metric("allreduce_energy_pj", metered.energy_pj);
+    report.metric("energy_per_byte_pj", metered.energy_per_byte_pj);
+    report.metric("allreduce_chain_p50_cycles", metered.chain_latency.percentile(50.0) as f64);
+    report.metric("allreduce_chain_p99_cycles", metered.chain_latency.percentile(99.0) as f64);
+
     // Acceptance gate (deterministic — simulated cycles, not wall clock):
     // ring all-reduce sustains >= 50% of the ideal collective bound.
     assert!(

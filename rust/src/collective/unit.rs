@@ -30,7 +30,8 @@ use crate::collective::schedule::Elem;
 use crate::collective::{CollStep, RankSchedule};
 use crate::noc::dma::Dma;
 use crate::noc::mem_duplex::MemDuplex;
-use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
+use crate::sim::{Activity, Component, ComponentId, Cycle, LatencyStats, WakeSet};
+use crate::telemetry::Tracer;
 
 /// Cluster reduction rate: the eight FPUs issue two 64-bit ops per cycle
 /// (the FMA rate the workload model uses), i.e. 16 element sums moving
@@ -61,11 +62,18 @@ pub struct CollectiveUnit {
     /// The cluster's L1 (flag polls, reductions).
     l1: Rc<RefCell<MemDuplex>>,
     steps: std::collections::VecDeque<CollStep>,
-    /// Outstanding chain handles.
-    pending: Vec<u64>,
+    /// Outstanding chain handles with their submit cycles (for the
+    /// chain-latency distribution and trace spans).
+    pending: Vec<(u64, Cycle)>,
     busy_until: Cycle,
     op_in_flight: bool,
+    /// First tick cycle of the current program (span start).
+    op_started: Option<Cycle>,
     pub stats: CollStats,
+    /// Submit-to-drain latency of every DMA chain this rank issued
+    /// (p50/p99 feed the collective benchmark report).
+    pub chain_latency: LatencyStats,
+    tracer: Option<Tracer>,
     waker: Option<(WakeSet, ComponentId)>,
 }
 
@@ -85,9 +93,18 @@ impl CollectiveUnit {
             pending: Vec::new(),
             busy_until: 0,
             op_in_flight: false,
+            op_started: None,
             stats: CollStats::default(),
+            chain_latency: LatencyStats::new(),
+            tracer: None,
             waker: None,
         }
+    }
+
+    /// Attach a telemetry tracer. Events carry simulated cycles only, so
+    /// attaching one never perturbs the schedule.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = Some(tracer);
     }
 
     /// Load a rank program (applies its init pokes to the local L1) and
@@ -157,6 +174,9 @@ impl Component for CollectiveUnit {
     }
 
     fn tick(&mut self, cy: Cycle) -> Activity {
+        if self.op_in_flight && self.op_started.is_none() {
+            self.op_started = Some(cy);
+        }
         if cy < self.busy_until {
             return Activity::Active; // reduction in progress
         }
@@ -165,7 +185,20 @@ impl Component for CollectiveUnit {
                 // `take_completed` consumes the stamp so the DMA's
                 // per-handle bookkeeping stays bounded over long runs.
                 let mut dma = self.dma.borrow_mut();
-                self.pending.retain(|&h| !dma.take_completed(h, cy));
+                let lat = &mut self.chain_latency;
+                let tracer = &self.tracer;
+                let name = &self.name;
+                self.pending.retain(|&(h, t0)| {
+                    if dma.take_completed(h, cy) {
+                        lat.record(cy - t0);
+                        if let Some(tr) = tracer {
+                            tr.span(t0, cy - t0, &format!("{name}.chain"), h);
+                        }
+                        false
+                    } else {
+                        true
+                    }
+                });
             }
             match self.steps.front() {
                 None => {
@@ -177,6 +210,11 @@ impl Component for CollectiveUnit {
                     if self.op_in_flight {
                         self.op_in_flight = false;
                         self.stats.ops_completed += 1;
+                        if let Some(tr) = &self.tracer {
+                            let t0 = self.op_started.unwrap_or(cy);
+                            tr.span(t0, cy - t0, &format!("{}.op", self.name), self.stats.ops_completed);
+                        }
+                        self.op_started = None;
                     }
                     return Activity::Idle; // next submit wakes us
                 }
@@ -185,7 +223,7 @@ impl Component for CollectiveUnit {
                         unreachable!()
                     };
                     let h = self.dma.borrow_mut().submit_chain(xfers);
-                    self.pending.push(h);
+                    self.pending.push((h, cy));
                     self.stats.chains_submitted += 1;
                 }
                 Some(&CollStep::WaitFlag { addr, expect }) => {
@@ -321,6 +359,32 @@ mod tests {
         unit.borrow_mut().submit(RankSchedule::default());
         assert!(unit.borrow().done());
         assert_eq!(unit.borrow().stats.ops_completed, 1);
+    }
+
+    #[test]
+    fn trace_and_chain_latency_recorded() {
+        use crate::telemetry::Tracer;
+        let (mut e, d, unit, mem) = rig();
+        let tr = Tracer::new(0);
+        unit.borrow_mut().set_tracer(tr.clone());
+        mem.borrow().banks.borrow_mut().poke(0x1000, &[7u8; 64]);
+        let mut sched = RankSchedule::default();
+        sched.steps.push_back(CollStep::Send {
+            xfers: vec![TransferReq::OneD { src: 0x1000, dst: 0x3000, len: 64 }],
+        });
+        sched.steps.push_back(CollStep::WaitDrain);
+        unit.borrow_mut().submit(sched);
+        assert!(e.run_until(d, 10_000, || unit.borrow().done()));
+        assert_eq!(unit.borrow().chain_latency.count(), 1, "one chain drained");
+        let p99 = unit.borrow().chain_latency.percentile(99.0);
+        assert!(p99 >= 1, "chain latency is at least one cycle");
+        let (evs, dropped) = tr.drain();
+        assert_eq!(dropped, 0);
+        let chain = evs.iter().find(|e| e.name == "coll.chain").expect("chain span");
+        assert!(chain.dur >= 1);
+        let op = evs.iter().find(|e| e.name == "coll.op").expect("op span");
+        assert!(op.dur >= chain.dur, "op span covers its chains");
+        assert_eq!(op.arg, 1, "first completed op");
     }
 
     #[test]

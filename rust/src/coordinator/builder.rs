@@ -383,6 +383,30 @@ impl System {
     pub fn shard_profile(&self) -> Option<crate::sim::ShardProfileReport> {
         self.arena.shard_profile()
     }
+
+    /// Whether the telemetry layer is attached (`--telemetry`/`--trace`).
+    pub fn telemetry_enabled(&self) -> bool {
+        self.arena.telemetry_enabled()
+    }
+
+    /// Drain every trace ring into one export-sorted event list plus the
+    /// total dropped-event count (empty when telemetry is off).
+    pub fn take_trace_events(&mut self) -> (Vec<crate::telemetry::TraceEvent>, u64) {
+        self.arena.take_trace_events()
+    }
+
+    /// Per-component energy integral over the run so far. Configured
+    /// topologies have no floorplan, so every component prices at the
+    /// default infrastructure weight — useful for *relative* comparisons
+    /// between runs, not absolute silicon numbers. Empty (zero total)
+    /// when telemetry is off.
+    pub fn energy_report(&self) -> crate::telemetry::EnergyReport {
+        let mut r = crate::telemetry::EnergyReport::new(self.cycles);
+        for (name, active) in self.arena.meter_rows() {
+            r.add_component(&name, active);
+        }
+        r
+    }
 }
 
 #[cfg(test)]

@@ -24,6 +24,8 @@
 //! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas
 //!   compute graphs (`artifacts/*.hlo.txt`) from the request path.
 //! * [`coordinator`] — config system, topology builder, launcher, reports.
+//! * [`telemetry`] — deterministic observability: per-component energy
+//!   accounting, Perfetto-viewable event traces, link-utilization heatmaps.
 //! * [`bench_harness`] — the measurement harness used by `benches/`
 //!   (criterion is unavailable offline).
 
@@ -37,4 +39,5 @@ pub mod noc;
 pub mod protocol;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod traffic;

@@ -23,6 +23,29 @@ use noc::manticore::workload::{
     CONV_SMALL,
 };
 
+/// Drain telemetry after a run: write the Chrome `trace_event` JSON when
+/// `--trace` named a file, then print the energy and (when available)
+/// link-utilization reports. Everything here is stamped with simulated
+/// cycles, so the outputs are bit-identical across `--threads N` and the
+/// event/full-scan engine modes and can be diffed between runs.
+fn emit_telemetry(
+    flags: &HashMap<String, String>,
+    (events, dropped): (Vec<noc::telemetry::TraceEvent>, u64),
+    energy: noc::telemetry::EnergyReport,
+    links: Option<noc::coordinator::Json>,
+) -> Result<()> {
+    if let Some(path) = flags.get("trace").filter(|p| p.as_str() != "true") {
+        std::fs::write(path, noc::telemetry::chrome_trace_json(&events, dropped))
+            .with_context(|| format!("writing trace to {path}"))?;
+        println!("trace: {} events -> {path} ({dropped} dropped)", events.len());
+    }
+    println!("energy: {}", energy.render());
+    if let Some(l) = links {
+        println!("links: {}", l.render());
+    }
+    Ok(())
+}
+
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut pos = Vec::new();
     let mut flags = HashMap::new();
@@ -109,6 +132,9 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
             println!("warning: traffic did not finish within {cycles} cycles");
         }
     }
+    if sys.telemetry_enabled() {
+        emit_telemetry(flags, sys.take_trace_events(), sys.energy_report(), None)?;
+    }
     let v = sys.check_protocol();
     if !v.is_empty() {
         bail!("{} protocol violations: {:#?}", v.len(), &v[..v.len().min(5)]);
@@ -134,7 +160,15 @@ fn chiplet_from_flags(flags: &HashMap<String, String>, auto_threads: bool) -> Re
 
 /// Cross-section bandwidth: every cluster DMA-reads from the cluster
 /// "across the top" while DMA-writing to it — all links saturated.
-fn manticore_xsection(cfg: ChipletCfg, cycles: u64) -> Result<()> {
+/// Drain a chiplet's telemetry artifacts (no-op when the layer is off).
+fn drain_chiplet_telemetry(ch: &mut Chiplet, flags: &HashMap<String, String>) -> Result<()> {
+    if ch.telemetry_enabled() {
+        emit_telemetry(flags, ch.take_trace_events(), ch.energy_report(), Some(ch.link_report()))?;
+    }
+    Ok(())
+}
+
+fn manticore_xsection(cfg: ChipletCfg, cycles: u64) -> Result<Chiplet> {
     let n = cfg.n_clusters();
     let mut ch = Chiplet::new(cfg);
     // Enough back-to-back blocks per engine to saturate the whole window:
@@ -168,12 +202,12 @@ fn manticore_xsection(cfg: ChipletCfg, cycles: u64) -> Result<()> {
         wall.as_secs_f64(),
         cycles as f64 / wall.as_secs_f64() / 1000.0
     );
-    Ok(())
+    Ok(ch)
 }
 
 /// Core-to-core round-trip latency: single-beat reads from cluster 0 to
 /// the farthest cluster on an otherwise idle network.
-fn manticore_latency(cfg: ChipletCfg) -> Result<()> {
+fn manticore_latency(cfg: ChipletCfg) -> Result<Chiplet> {
     let n = cfg.n_clusters();
     let mut ch = Chiplet::new(cfg);
     use noc::manticore::cluster::addr;
@@ -197,7 +231,12 @@ fn manticore_latency(cfg: ChipletCfg) -> Result<()> {
         stats.read_latency.min(),
         stats.read_latency.max()
     );
-    Ok(())
+    println!(
+        "  p50 {} / p99 {} cycles",
+        stats.read_latency.percentile(50.0),
+        stats.read_latency.percentile(99.0)
+    );
+    Ok(ch)
 }
 
 /// DMA-driven collective over all clusters: seed, run, verify, and report
@@ -228,6 +267,19 @@ fn manticore_collective(
         100.0 * res.ideal_fraction
     );
     println!("  cluster-port traffic: {} B, result verified on every rank", res.cluster_dma_bytes);
+    println!(
+        "  DMA chain latency: p50 {} / p99 {} cycles over {} chains",
+        res.chain_latency.percentile(50.0),
+        res.chain_latency.percentile(99.0),
+        res.chain_latency.count()
+    );
+    if ch.telemetry_enabled() {
+        println!(
+            "  energy: {:.1} pJ for the op ({:.4} pJ/B)",
+            res.energy_pj, res.energy_per_byte_pj
+        );
+    }
+    drain_chiplet_telemetry(&mut ch, flags)?;
     Ok(())
 }
 
@@ -239,8 +291,14 @@ fn cmd_manticore(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = chiplet_from_flags(flags, batched)?;
     let cycles: u64 = flags.get("cycles").map(|s| s.parse()).transpose()?.unwrap_or(20_000);
     match workload.as_str() {
-        "xsection" => manticore_xsection(cfg, cycles)?,
-        "latency" => manticore_latency(cfg)?,
+        "xsection" => {
+            let mut ch = manticore_xsection(cfg, cycles)?;
+            drain_chiplet_telemetry(&mut ch, flags)?;
+        }
+        "latency" => {
+            let mut ch = manticore_latency(cfg)?;
+            drain_chiplet_telemetry(&mut ch, flags)?;
+        }
         "allreduce" => manticore_collective(cfg, CollOp::AllReduce, flags)?,
         "broadcast" => manticore_collective(cfg, CollOp::Broadcast, flags)?,
         w @ ("conv-base" | "conv-stacked" | "conv-pipe") => {
@@ -261,6 +319,10 @@ fn cmd_manticore(flags: &HashMap<String, String>) -> Result<()> {
                 res.gbps(res.cluster_dma_bytes),
                 res.level_bytes
             );
+            if ch.telemetry_enabled() {
+                println!("  energy: {:.1} pJ for the workload", res.energy_pj);
+            }
+            drain_chiplet_telemetry(&mut ch, flags)?;
         }
         "fc" => {
             let n = cfg.n_clusters();
@@ -269,6 +331,10 @@ fn cmd_manticore(flags: &HashMap<String, String>) -> Result<()> {
             let res = run_scripts(&mut ch, scripts, 10_000_000);
             println!("fc on {n} clusters: finished={} cycles={}", res.finished, res.cycles);
             println!("  HBM {:.2} GB/s", res.gbps(res.hbm_bytes));
+            if ch.telemetry_enabled() {
+                println!("  energy: {:.1} pJ for the workload", res.energy_pj);
+            }
+            drain_chiplet_telemetry(&mut ch, flags)?;
         }
         w => bail!("unknown workload: {w}"),
     }
@@ -319,6 +385,15 @@ fn cmd_multichip(flags: &HashMap<String, String>) -> Result<()> {
         pod.threads(),
         chiplets
     );
+    if pod.telemetry_enabled() {
+        let e = pod.energy_report();
+        println!(
+            "  energy: {:.1} pJ total ({:.4} pJ per payload byte)",
+            e.total_pj(),
+            e.total_pj() / bytes.max(1) as f64
+        );
+        emit_telemetry(flags, pod.take_trace_events(), e, Some(pod.link_report()))?;
+    }
     Ok(())
 }
 
@@ -349,6 +424,7 @@ fn usage() -> ! {
          \x20 simulate --config F [--json] [--fingerprint] [--full-scan]\n\
          \x20          [--cycles N] [--threads N] [--epoch E]\n\
          \x20          [--epoch-policy fixed|adaptive]\n\
+         \x20          [--telemetry] [--trace FILE]\n\
          \x20                              run a configured topology: flat\n\
          \x20                              [[master]]/[[slave]] or recursive\n\
          \x20                              [topology] template grammar (see\n\
@@ -362,6 +438,7 @@ fn usage() -> ! {
          \x20           [--collective ring|tree] [--bytes N]\n\
          \x20           [--cycles N] [--threads N] [--epoch E]\n\
          \x20           [--epoch-policy fixed|adaptive]\n\
+         \x20           [--telemetry] [--trace FILE]\n\
          \x20                              case-study simulations (unset\n\
          \x20                              --threads: host core count for\n\
          \x20                              xsection/allreduce/broadcast,\n\
@@ -371,11 +448,17 @@ fn usage() -> ! {
          \x20           [--d2d-latency C] [--d2d-credits N]\n\
          \x20           [--d2d-serialize C] [--threads N] [--epoch E]\n\
          \x20           [--epoch-policy fixed|adaptive] [--pin-workers]\n\
+         \x20           [--telemetry] [--trace FILE]\n\
          \x20                              N-chiplet pod all-reduce over D2D\n\
          \x20                              links (hierarchical; --flat for\n\
          \x20                              the flat-ring oracle; bit-identical\n\
          \x20                              for every --threads N >= 1)\n\
-         \x20 e2e [--artifacts DIR]        verify PJRT compute artifacts"
+         \x20 e2e [--artifacts DIR]        verify PJRT compute artifacts\n\
+         telemetry (all simulation commands): --telemetry attaches the\n\
+         \x20 activity meters and prints energy + link-utilization reports;\n\
+         \x20 --trace FILE also drains the per-shard event rings to Chrome\n\
+         \x20 trace_event JSON (open in Perfetto). Both are off by default\n\
+         \x20 and bit-identical across --threads / engine modes when on."
     );
     std::process::exit(2)
 }

@@ -47,6 +47,9 @@ use crate::noc::upsizer::Upsizer;
 use crate::protocol::exchange::{cut_master_export, cut_slave_export};
 use crate::protocol::{bundle, BundleCfg, MasterEnd};
 use crate::sim::{shared, Arena, Component, Cycle, EngineOpts};
+use crate::telemetry::{
+    link_report_json, EnergyReport, LinkTap, TraceEvent, ON_DIE_PJ_PER_BYTE,
+};
 use crate::traffic::gen::RwGenCfg;
 use crate::traffic::perfect_slave::PerfectSlave;
 
@@ -99,6 +102,10 @@ pub struct Chiplet {
     /// Per level (bottom-up), per node: DMA-tree uplink bandwidth taps.
     dma_taps: Vec<Vec<UplinkTap>>,
     core_taps: Vec<Vec<UplinkTap>>,
+    /// Per-master-port bundle taps of every tree node and the top
+    /// crosspoint (the telemetry link-utilization heatmap; empty when
+    /// telemetry is off).
+    link_taps: Vec<LinkTap>,
     pub hbm: Vec<Rc<RefCell<PerfectSlave>>>,
     pub io: Rc<RefCell<PerfectSlave>>,
     /// External master into the chiplet (PCIe/D2D side), for tests.
@@ -241,17 +248,27 @@ impl Chiplet {
         };
         let dma_taps = std::mem::take(&mut dma_tree.level_taps);
         let core_taps = std::mem::take(&mut core_tree.level_taps);
+        // With telemetry on, keep each node's per-master-port bundle taps
+        // for the link-utilization heatmap (passive counters; skipped
+        // entirely when telemetry is off).
+        let mut link_taps = Vec::new();
         // Finer wake granularity: each node's demux/mux/remapper/queue
         // registers individually, so a beat crossing a node wakes only the
         // ports on its path instead of the whole crosspoint. The parts are
         // added in the node's tick order, keeping results bit-identical to
         // monolithic registration.
-        for node in dma_tree.nodes.drain(..) {
+        for mut node in dma_tree.nodes.drain(..) {
+            if arena.telemetry_enabled() {
+                link_taps.append(&mut node.take_link_taps());
+            }
             for part in node.into_parts() {
                 arena.add_infra(part);
             }
         }
-        for node in core_tree.nodes.drain(..) {
+        for mut node in core_tree.nodes.drain(..) {
+            if arena.telemetry_enabled() {
+                link_taps.append(&mut node.take_link_taps());
+            }
             for part in node.into_parts() {
                 arena.add_infra(part);
             }
@@ -316,7 +333,7 @@ impl Chiplet {
         masters.push(io_out_m);
         let n_s = slaves.len();
         let n_m = masters.len();
-        let top = Crosspoint::new(
+        let mut top = Crosspoint::new(
             "top",
             slaves,
             masters,
@@ -329,6 +346,9 @@ impl Chiplet {
                 max_txns_per_id: cfg.txns_per_id,
             },
         );
+        if arena.telemetry_enabled() {
+            link_taps.append(&mut top.take_link_taps());
+        }
         arena.add_infra(Box::new(core_upsizer));
         for part in top.into_parts() {
             arena.add_infra(part);
@@ -337,12 +357,27 @@ impl Chiplet {
             arena.add_infra(c);
         }
 
+        // With telemetry on, hand each cluster's DMA engines and
+        // collective unit a tracer onto their own shard's ring (shard
+        // i + 1 in sharded mode; the single arena ignores the index).
+        if arena.telemetry_enabled() {
+            for (i, c) in clusters.iter().enumerate() {
+                if let Some(tr) = arena.tracer(i + 1) {
+                    for dma in &c.dma {
+                        dma.borrow_mut().set_tracer(tr.clone());
+                    }
+                    c.coll.borrow_mut().set_tracer(tr);
+                }
+            }
+        }
+
         Chiplet {
             cfg,
             clusters,
             arena,
             dma_taps,
             core_taps,
+            link_taps,
             hbm,
             io,
             io_in: io_in_m,
@@ -444,6 +479,39 @@ impl Chiplet {
     /// Worker threads driving the simulation (0 = single-arena engine).
     pub fn threads(&self) -> usize {
         self.cfg.engine.worker_threads()
+    }
+
+    /// Whether the telemetry layer (meter + tracers + link taps) is on.
+    pub fn telemetry_enabled(&self) -> bool {
+        self.arena.telemetry_enabled()
+    }
+
+    /// Drain the trace rings into one canonically sorted event stream
+    /// plus the total drop count (empty when telemetry is off). Call
+    /// between runs.
+    pub fn take_trace_events(&mut self) -> (Vec<TraceEvent>, u64) {
+        self.arena.take_trace_events()
+    }
+
+    /// Energy spent so far: every component's metered active-cycle count
+    /// through the §3 area model, plus per-byte wire energy on every
+    /// tapped network bundle. Empty (zero totals) when telemetry is off.
+    pub fn energy_report(&self) -> EnergyReport {
+        let mut r = EnergyReport::new(self.cycles);
+        for (name, active) in self.arena.meter_rows() {
+            r.add_component(&name, active);
+        }
+        for t in &self.link_taps {
+            r.add_link(t.label(), t.bytes(), ON_DIE_PJ_PER_BYTE);
+        }
+        r
+    }
+
+    /// Link-utilization heatmap over all tapped network bundles (tree
+    /// node ports + top crosspoint ports). Empty when telemetry is off.
+    pub fn link_report(&self) -> Json {
+        let usages: Vec<_> = self.link_taps.iter().map(|t| t.usage(self.cycles)).collect();
+        link_report_json(&usages, self.cycles)
     }
 
     /// Advance one cycle. Per-cycle stepping is always serial, even in
@@ -730,6 +798,39 @@ mod tests {
             .map(|j| crate::traffic::perfect_slave::pattern_byte(addr::HBM_BASE + 0x10000 + j))
             .collect();
         assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn telemetry_reports_energy_trace_and_links() {
+        let mut cfg = ChipletCfg::small();
+        cfg.engine.telemetry = true;
+        let mut ch = Chiplet::new(cfg);
+        assert!(ch.telemetry_enabled());
+        let src = addr::cluster_base(3) + 0x2000;
+        let dst = addr::cluster_base(0) + 0x4000;
+        ch.clusters[3].l1.borrow().banks.borrow_mut().poke(src, &[0xA5; 512]);
+        let h = ch.submit_dma(0, 0, TransferReq::OneD { src, dst, len: 512 });
+        assert!(ch.run_until(20_000, |c| c.dma_done(0, 0, h)));
+        let e = ch.energy_report();
+        assert!(e.total_fj() > 0, "a DMA burns energy");
+        // Exact conservation: line items sum to the total.
+        let line_sum: u64 = e.comps.iter().map(|c| c.dyn_fj + c.static_fj).sum::<u64>()
+            + e.links.iter().map(|l| l.fj).sum::<u64>();
+        assert_eq!(line_sum, e.total_fj());
+        assert!(e.links.iter().any(|l| l.bytes > 0), "the copy crossed tapped bundles");
+        let (evs, dropped) = ch.take_trace_events();
+        assert_eq!(dropped, 0);
+        assert!(evs.iter().any(|ev| ev.name.ends_with(".leg")), "DMA leg spans traced");
+        assert!(evs.iter().any(|ev| ev.dur > 0), "busy spans traced");
+        let j = ch.link_report().render();
+        assert!(j.contains("\"links\":["), "{j}");
+
+        // Telemetry off (the default): all reports are empty.
+        let mut off = Chiplet::new(ChipletCfg::small());
+        off.run(10);
+        assert!(!off.telemetry_enabled());
+        assert_eq!(off.energy_report().total_fj(), 0);
+        assert_eq!(off.take_trace_events(), (Vec::new(), 0));
     }
 
     #[test]

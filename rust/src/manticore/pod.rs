@@ -64,6 +64,10 @@ use crate::protocol::exchange::cut_slave_export;
 use crate::protocol::{bundle, BundleCfg, Cmd, MasterEnd, SlaveEnd};
 use crate::sim::shard::ShardedEngine;
 use crate::sim::{shared, Cycle};
+use crate::telemetry::{
+    link_report_json, EnergyReport, LinkTap, LinkUse, TraceEvent, D2D_PJ_PER_BYTE,
+    ON_DIE_PJ_PER_BYTE,
+};
 use crate::traffic::perfect_slave::PerfectSlave;
 
 /// The pod-level address scheme: die `j`'s local space, seen from any
@@ -116,6 +120,9 @@ pub struct PodDie {
     pub hbm: Vec<Rc<RefCell<PerfectSlave>>>,
     dma_taps: Vec<Vec<UplinkTap>>,
     core_taps: Vec<Vec<UplinkTap>>,
+    /// Per-master-port bundle taps of this die's tree nodes and top
+    /// crosspoint (empty when telemetry is off).
+    link_taps: Vec<LinkTap>,
     /// Outgoing D2D links: (destination die, byte counters).
     pub d2d: Vec<(usize, D2DCounters)>,
 }
@@ -183,6 +190,9 @@ impl Pod {
         if cfg.die.engine.full_scan {
             eng.set_sleep(false);
         }
+        if cfg.die.engine.telemetry {
+            eng.enable_telemetry();
+        }
 
         // --- The D2D mesh, ahead of any die ---
         // For every ordered pair (d, j): an egress bundle (demux -> link
@@ -200,13 +210,18 @@ impl Pod {
                 }
                 let (eg_m, eg_s) = bundle(&format!("pod.d{d}.to{j}.eg"), dcfg);
                 let (lk_m, lk_s) = bundle(&format!("pod.d{d}.to{j}.lk"), dcfg);
-                let (pipe, ctr) = Die2Die::new(
+                let (mut pipe, ctr) = Die2Die::new(
                     format!("pod.d2d.{d}to{j}"),
                     cfg.d2d,
                     podaddr::d2d_base(j),
                     eg_s,
                     lk_m,
                 );
+                // The pipe lives in shard d; its delivered-beat trace
+                // events go to that shard's ring.
+                if let Some(tr) = eng.shard_tracer(d) {
+                    pipe.set_tracer(tr);
+                }
                 let (cut, far_s) = cut_slave_export(&format!("pod.cut.{d}to{j}"), dcfg, lk_s, epoch);
                 egress[d].push(eg_m);
                 pipes[d].push(pipe);
@@ -311,6 +326,76 @@ impl Pod {
     pub fn threads(&self) -> usize {
         self.eng.threads()
     }
+
+    /// Whether the telemetry layer is on (`die.engine.telemetry`).
+    pub fn telemetry_enabled(&self) -> bool {
+        self.eng.telemetry_enabled()
+    }
+
+    /// Drain every shard's trace ring (plus the epoch-boundary stream)
+    /// into one canonically sorted event list and a drop count. Call
+    /// between runs; empty when telemetry is off.
+    pub fn take_trace_events(&mut self) -> (Vec<TraceEvent>, u64) {
+        self.eng.take_trace_events()
+    }
+
+    /// Pod-wide energy: every metered component through the §3 area
+    /// model, on-die wire energy per tapped network bundle, and off-die
+    /// SerDes energy per D2D byte. Zero totals when telemetry is off.
+    pub fn energy_report(&self) -> EnergyReport {
+        let mut r = EnergyReport::new(self.cycles);
+        if !self.telemetry_enabled() {
+            return r;
+        }
+        for (name, active) in self.eng.meter_rows() {
+            r.add_component(&name, active);
+        }
+        for die in &self.dies {
+            for t in &die.link_taps {
+                r.add_link(t.label(), t.bytes(), ON_DIE_PJ_PER_BYTE);
+            }
+        }
+        for (d, die) in self.dies.iter().enumerate() {
+            for (j, c) in &die.d2d {
+                r.add_link(&format!("pod.d2d.{d}to{j}"), c.total_bytes(), D2D_PJ_PER_BYTE);
+            }
+        }
+        r
+    }
+
+    /// Link-utilization heatmap over every tapped on-die bundle plus the
+    /// D2D links (beat counts derived from the links' byte counters).
+    /// Empty when telemetry is off.
+    pub fn link_report(&self) -> Json {
+        let mut rows: Vec<LinkUse> = Vec::new();
+        if !self.telemetry_enabled() {
+            return link_report_json(&rows, self.cycles);
+        }
+        for die in &self.dies {
+            for t in &die.link_taps {
+                rows.push(t.usage(self.cycles));
+            }
+        }
+        let bb = dma_net_cfg().beat_bytes() as u64;
+        for (d, die) in self.dies.iter().enumerate() {
+            for (j, c) in &die.d2d {
+                let bytes = c.total_bytes();
+                let beats = bytes / bb;
+                rows.push(LinkUse {
+                    label: format!("pod.d2d.{d}to{j}"),
+                    beats,
+                    bytes,
+                    busy_frac: if self.cycles == 0 {
+                        0.0
+                    } else {
+                        beats as f64 / self.cycles as f64
+                    },
+                    stall_cycles: 0,
+                });
+            }
+        }
+        link_report_json(&rows, self.cycles)
+    }
 }
 
 /// Build die `d` entirely inside shard `d`: clusters, both trees, the
@@ -333,6 +418,10 @@ fn build_die(
     let dcfg = dma_net_cfg();
     let ccfg = core_net_cfg();
     let has_d2d = nd > 1;
+    // `Some` iff telemetry is enabled: die d's instrumented components
+    // trace into shard d's ring.
+    let tracer = eng.shard_tracer(d);
+    let mut link_taps = Vec::new();
 
     // --- Clusters + tree leaves ---
     // No intra-die cuts: the whole die shares shard d, so the cluster
@@ -365,6 +454,12 @@ fn build_die(
         }
         dma_leaves.push(NodeIo { up_out: dma_out, up_in: dma_in, range });
         core_leaves.push(NodeIo { up_out: core_out, up_in: core_in, range });
+        if let Some(tr) = &tracer {
+            for dma in &handle.dma {
+                dma.borrow_mut().set_tracer(tr.clone());
+            }
+            handle.coll.borrow_mut().set_tracer(tr.clone());
+        }
         clusters.push(handle);
     }
 
@@ -415,12 +510,18 @@ fn build_die(
     let core_taps = std::mem::take(&mut core_tree.level_taps);
     unsafe {
         let sh = eng.shard(d);
-        for node in dma_tree.nodes.drain(..) {
+        for mut node in dma_tree.nodes.drain(..) {
+            if tracer.is_some() {
+                link_taps.append(&mut node.take_link_taps());
+            }
             for part in node.into_parts() {
                 sh.add_boxed(part);
             }
         }
-        for node in core_tree.nodes.drain(..) {
+        for mut node in core_tree.nodes.drain(..) {
+            if tracer.is_some() {
+                link_taps.append(&mut node.take_link_taps());
+            }
             for part in node.into_parts() {
                 sh.add_boxed(part);
             }
@@ -493,7 +594,7 @@ fn build_die(
     }
     let n_s = slaves.len();
     let n_m = masters.len();
-    let top = Crosspoint::new(
+    let mut top = Crosspoint::new(
         format!("p{d}.top"),
         slaves,
         masters,
@@ -506,6 +607,9 @@ fn build_die(
             max_txns_per_id: die_cfg.txns_per_id,
         },
     );
+    if tracer.is_some() {
+        link_taps.append(&mut top.take_link_taps());
+    }
     unsafe {
         let sh = eng.shard(d);
         sh.add(core_upsizer);
@@ -556,7 +660,7 @@ fn build_die(
         }
     }
 
-    PodDie { clusters, hbm, dma_taps, core_taps, d2d: counters }
+    PodDie { clusters, hbm, dma_taps, core_taps, link_taps, d2d: counters }
 }
 
 /// Canonical rendering of everything the worker-thread count and engine

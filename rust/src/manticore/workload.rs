@@ -14,7 +14,7 @@ use crate::errors::Result;
 use crate::manticore::chiplet::Chiplet;
 use crate::manticore::cluster::addr;
 use crate::noc::dma::TransferReq;
-use crate::sim::Cycle;
+use crate::sim::{Cycle, LatencyStats};
 
 /// Convolutional-layer configuration (paper values: 32×32×128, K=128,
 /// F=3, P=1, S=1). Mirrors python/compile/model.py::ConvCfg.
@@ -294,6 +294,15 @@ pub struct CollectiveResult {
     /// all-reduce).
     pub ideal_fraction: f64,
     pub cluster_dma_bytes: u64,
+    /// Energy spent during the collective (telemetry delta; 0.0 when
+    /// telemetry is off).
+    pub energy_pj: f64,
+    /// [`CollectiveResult::energy_pj`] per payload byte.
+    pub energy_per_byte_pj: f64,
+    /// Submit-to-drain latency of every DMA chain, merged across ranks.
+    /// Always recorded (a histogram bump per chain), independent of the
+    /// telemetry flag.
+    pub chain_latency: LatencyStats,
 }
 
 /// Seed every rank's buffer, run the collective on the chiplet's
@@ -347,12 +356,21 @@ pub fn run_collective_with_order(
         ch.clusters[r].l1.borrow().banks.borrow_mut().poke(built.buf[r], &data);
     }
     let dma0 = ch.total_dma_bytes();
+    let energy0 = ch.energy_report().total_fj();
     let start = ch.cycles;
     for (r, sched) in std::mem::take(&mut built.ranks).into_iter().enumerate() {
         ch.submit_collective(r, sched);
     }
     let finished = ch.run_until(budget, |c| c.all_collectives_done());
     let cycles = ch.cycles - start;
+    let energy_pj = ch.energy_report().total_fj().saturating_sub(energy0) as f64 / 1000.0;
+    // Cumulative over the chiplet's lifetime — the benches build a fresh
+    // chiplet per measurement, so this is the collective's own
+    // distribution there.
+    let mut chain_latency = LatencyStats::new();
+    for c in &ch.clusters {
+        chain_latency.merge(&c.coll.borrow().chain_latency);
+    }
 
     let sums: Vec<u64> = (0..elems)
         .map(|j| (0..n).fold(0u64, |a, r| a.wrapping_add(collective_seed(r, j))))
@@ -395,6 +413,9 @@ pub fn run_collective_with_order(
         ideal_bytes_per_cycle: ideal_bpc,
         ideal_fraction: bpc / ideal_bpc,
         cluster_dma_bytes: ch.total_dma_bytes() - dma0,
+        energy_pj,
+        energy_per_byte_pj: energy_pj / bytes.max(1) as f64,
+        chain_latency,
     })
 }
 
@@ -442,6 +463,9 @@ pub struct WorkloadResult {
     pub cluster_dma_bytes: u64,
     /// Data bytes across DMA-tree uplinks, bottom-up per level.
     pub level_bytes: Vec<u64>,
+    /// Energy spent during the workload (telemetry delta; 0.0 when
+    /// telemetry is off).
+    pub energy_pj: f64,
 }
 
 impl WorkloadResult {
@@ -460,6 +484,7 @@ pub fn run_scripts(
     let hbm0 = ch.hbm_bytes();
     let dma0 = ch.total_dma_bytes();
     let lvl0 = ch.dma_level_bytes();
+    let energy0 = ch.energy_report().total_fj();
     let mut state: Vec<ScriptState> = scripts
         .into_iter()
         .map(|steps| ScriptState { steps, waiting: None, compute_until: 0 })
@@ -486,6 +511,7 @@ pub fn run_scripts(
         hbm_bytes: ch.hbm_bytes() - hbm0,
         cluster_dma_bytes: ch.total_dma_bytes() - dma0,
         level_bytes: lvl1.iter().zip(lvl0).map(|(a, b)| a - b).collect(),
+        energy_pj: ch.energy_report().total_fj().saturating_sub(energy0) as f64 / 1000.0,
     }
 }
 
@@ -564,6 +590,27 @@ mod tests {
         assert!(res.correct, "all-reduce buffers must hold the exact sums");
         assert!(res.cluster_dma_bytes >= res.bytes, "data must actually cross the ports");
         assert!(res.ideal_fraction > 0.0 && res.ideal_fraction <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn collective_reports_energy_and_chain_percentiles() {
+        let mut cfg = ChipletCfg::small();
+        cfg.engine.telemetry = true;
+        let mut ch = Chiplet::new(cfg);
+        let res =
+            run_collective(&mut ch, CollOp::AllReduce, Algo::Ring, 4096, 500_000).unwrap();
+        assert!(res.finished && res.correct);
+        assert!(res.energy_pj > 0.0, "telemetry on: the collective burns energy");
+        assert!(res.energy_per_byte_pj > 0.0);
+        assert!(res.chain_latency.count() > 0, "every Send chain is recorded");
+        assert!(res.chain_latency.percentile(50.0) <= res.chain_latency.percentile(99.0));
+
+        // Telemetry off (default): zero energy, but chain latency is an
+        // always-on histogram.
+        let mut off = Chiplet::new(ChipletCfg::small());
+        let r2 = run_collective(&mut off, CollOp::AllReduce, Algo::Ring, 4096, 500_000).unwrap();
+        assert_eq!(r2.energy_pj, 0.0);
+        assert!(r2.chain_latency.count() > 0);
     }
 
     #[test]

@@ -19,6 +19,7 @@ use crate::noc::id_remap::IdRemap;
 use crate::noc::mux::{prepend_bits, Mux};
 use crate::protocol::{bundle, BundleCfg, Cmd, MasterEnd, SlaveEnd};
 use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
+use crate::telemetry::LinkTap;
 
 #[derive(Clone)]
 pub struct CrosspointCfg {
@@ -57,6 +58,9 @@ pub struct Crosspoint {
     remappers: Vec<IdRemap>,
     error_slaves: Vec<ErrorSlave>,
     input_queues: Vec<crate::noc::pipeline::Pipeline>,
+    /// Passive utilization taps on each master port's outgoing bundle
+    /// (taken by the builder for link-utilization reports).
+    link_taps: Vec<LinkTap>,
 }
 
 impl Crosspoint {
@@ -138,6 +142,7 @@ impl Crosspoint {
         // remapper back down to the port ID width.
         let mut muxes = Vec::new();
         let mut remappers = Vec::new();
+        let mut link_taps = Vec::new();
         for (mi, me) in masters.into_iter().enumerate() {
             let inputs = std::mem::take(&mut mux_inputs[mi]);
             assert!(!inputs.is_empty(), "master port {mi} has no connections");
@@ -145,6 +150,9 @@ impl Crosspoint {
             let wide_cfg = BundleCfg { id_bits: wide_bits, ..cfg.port_cfg };
             let (wide_m, wide_s) = bundle(&format!("{name}.w{mi}"), wide_cfg);
             muxes.push(Mux::new(format!("{name}.mux{mi}"), inputs, wide_m));
+            // Tap the outgoing port bundle before the remapper consumes
+            // it: data-beat counters for the link-utilization report.
+            link_taps.push(LinkTap::from_master(format!("{name}.m{mi}"), &me));
             // U = full output ID space; T from config.
             let u = cfg.port_cfg.id_space();
             remappers.push(IdRemap::new(
@@ -156,7 +164,14 @@ impl Crosspoint {
             ));
         }
 
-        Crosspoint { name, demuxes, muxes, remappers, error_slaves, input_queues }
+        Crosspoint { name, demuxes, muxes, remappers, error_slaves, input_queues, link_taps }
+    }
+
+    /// Take the passive per-master-port utilization taps (builders grab
+    /// these before [`Crosspoint::into_parts`] and hand them to the
+    /// telemetry layer's link report).
+    pub fn take_link_taps(&mut self) -> Vec<LinkTap> {
+        std::mem::take(&mut self.link_taps)
     }
 
     /// Decompose the crosspoint into its per-port parts for individual
@@ -337,6 +352,42 @@ mod tests {
             }
         }
         assert!(done);
+    }
+
+    #[test]
+    fn link_taps_count_data_beats_per_master_port() {
+        let (ups, mut xp, downs) = mk(vec![vec![true, true]; 2], None);
+        let taps = xp.take_link_taps();
+        assert_eq!(taps.len(), 2, "one tap per master port");
+        assert!(xp.take_link_taps().is_empty(), "taps are taken once");
+        let mut cy = 0;
+        ups[1].set_now(cy);
+        ups[1].ar.push(Cmd::new(9, 0x0040, 0, 3));
+        let mut done = false;
+        for _ in 0..24 {
+            step(&mut cy, &ups, &mut xp, &downs);
+            if downs[0].ar.can_pop() {
+                let c = downs[0].ar.pop();
+                downs[0].r.push(RBeat {
+                    id: c.id,
+                    data: Bytes::zeroed(8),
+                    resp: Resp::Okay,
+                    last: true,
+                    tag: c.tag,
+                });
+            }
+            if ups[1].r.can_pop() {
+                ups[1].r.pop();
+                done = true;
+            }
+        }
+        assert!(done);
+        assert_eq!(taps[0].data_beats(), 1, "port 0 carried the R beat");
+        assert_eq!(taps[0].bytes(), 8);
+        assert_eq!(taps[1].data_beats(), 0, "port 1 stayed idle");
+        let usage = taps[0].usage(cy);
+        assert!(usage.busy_frac > 0.0 && !usage.idle());
+        assert!(taps[1].usage(cy).idle());
     }
 
     #[test]

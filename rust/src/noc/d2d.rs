@@ -32,6 +32,7 @@ use std::collections::VecDeque;
 use crate::protocol::payload::{BBeat, Cmd, RBeat, WBeat};
 use crate::protocol::{MasterEnd, SlaveEnd};
 use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
+use crate::telemetry::Tracer;
 
 /// Timing/capacity parameters of one D2D link direction pair.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -138,6 +139,9 @@ pub struct Die2Die {
     next_w: Cycle,
     next_r: Cycle,
     counters: D2DCounters,
+    /// Telemetry handle (`None` = off): one instant per delivered data
+    /// beat, stamped with the simulated delivery cycle.
+    tracer: Option<Tracer>,
 }
 
 impl Die2Die {
@@ -173,8 +177,16 @@ impl Die2Die {
             next_w: 0,
             next_r: 0,
             counters: counters.clone(),
+            tracer: None,
         };
         (link, counters)
+    }
+
+    /// Attach a trace handle (the owning shard's ring): the link emits a
+    /// `<name>.w` / `<name>.r` instant per delivered data beat, arg =
+    /// payload bytes.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = Some(tracer);
     }
 
     fn translate(&self, mut c: Cmd) -> Cmd {
@@ -209,6 +221,9 @@ impl Component for Die2Die {
         if self.w.ready(cy) && self.master.w.can_push() {
             let beat = self.w.pop();
             self.counters.add(beat.data.len() as u64, 0);
+            if let Some(tr) = &self.tracer {
+                tr.instant(cy, &format!("{}.w", self.name), beat.data.len() as u64);
+            }
             self.master.w.push(beat);
         }
         if self.ar.ready(cy) && self.master.ar.can_push() {
@@ -220,6 +235,9 @@ impl Component for Die2Die {
         if self.r.ready(cy) && self.slave.r.can_push() {
             let beat = self.r.pop();
             self.counters.add(0, beat.data.len() as u64);
+            if let Some(tr) = &self.tracer {
+                tr.instant(cy, &format!("{}.r", self.name), beat.data.len() as u64);
+            }
             self.slave.r.push(beat);
         }
 
@@ -389,6 +407,26 @@ mod tests {
         }
         assert_eq!(down_s.aw.pop().addr, 0x10_1000, "AW lands die-local");
         assert_eq!(down_s.ar.pop().addr, 0x20_2000, "AR lands die-local");
+    }
+
+    #[test]
+    fn trace_stamps_delivered_data_beats() {
+        let cfg = D2DCfg { latency: 1, credits: 4, serialize: 1 };
+        let (mut l, _ctr, up_m, down_s) = link(cfg, 0);
+        let t = crate::telemetry::Tracer::new(0);
+        l.set_tracer(t.clone());
+        clock(0, &up_m, &down_s);
+        up_m.w.push(WBeat::full(Bytes::zeroed(8), true, 0));
+        for cy in 1..10 {
+            clock(cy, &up_m, &down_s);
+            l.tick(cy);
+            if down_s.w.can_pop() {
+                down_s.w.pop();
+            }
+        }
+        let (evs, dropped) = t.drain();
+        assert_eq!(dropped, 0);
+        assert!(evs.iter().any(|e| e.name == "d2d.w" && e.arg == 8 && e.dur == 0), "{evs:?}");
     }
 
     #[test]

@@ -43,6 +43,7 @@ use std::collections::{HashMap, VecDeque};
 
 use crate::protocol::{split_bursts, Bytes, Cmd, MasterEnd, WBeat};
 use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
+use crate::telemetry::Tracer;
 
 /// Completion stamps retained for [`Dma::completed_strictly_before`] /
 /// [`Dma::take_completed`]. Far above what any in-engine consumer can
@@ -89,6 +90,10 @@ struct FrontLeg {
 /// next leg can start issuing while B beats are still in flight.
 struct ActiveTransfer {
     handle: u64,
+    /// Leg byte count and start cycle (telemetry: the retire emits one
+    /// `<name>.leg` span covering the leg's residency in the mover).
+    len: u64,
+    started: Cycle,
     /// Read bursts to issue: (start_addr, len_field, end_byte).
     ar_todo: VecDeque<(u64, u8, u64)>,
     /// Byte ranges of issued reads, in order (R data consumes the front).
@@ -151,6 +156,9 @@ pub struct Dma {
     waker: Option<(WakeSet, ComponentId)>,
     /// Woken on every descriptor completion (e.g. the collective unit).
     completion_waker: Option<(WakeSet, ComponentId)>,
+    /// Telemetry handle (`None` = off): leg spans + completion instants,
+    /// all stamped with simulated cycles, so traces stay deterministic.
+    tracer: Option<Tracer>,
 }
 
 impl Dma {
@@ -183,7 +191,15 @@ impl Dma {
             now: 0,
             waker: None,
             completion_waker: None,
+            tracer: None,
         }
+    }
+
+    /// Attach a trace handle (the owning shard's ring). The engine emits
+    /// a `<name>.leg` span per retired 1D leg (arg = bytes) and a
+    /// `<name>.done` instant per descriptor completion (arg = handle).
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = Some(tracer);
     }
 
     pub fn with_max_burst_beats(mut self, n: usize) -> Self {
@@ -269,6 +285,9 @@ impl Dma {
         if self.completed_order.len() > COMPLETED_HISTORY {
             let old = self.completed_order.pop_front().unwrap();
             self.completed_at.remove(&old);
+        }
+        if let Some(tr) = &self.tracer {
+            tr.instant(self.now, &format!("{}.done", self.name), handle);
         }
         if let Some((ws, id)) = &self.completion_waker {
             ws.wake(*id);
@@ -359,6 +378,8 @@ impl Dma {
         };
         self.active = Some(ActiveTransfer {
             handle,
+            len,
+            started: self.now,
             ar_todo: mk(&rd, src + len),
             r_ranges: VecDeque::new(),
             aw_todo: mk(&wr, dst + len),
@@ -484,6 +505,9 @@ impl Component for Dma {
             let t = self.active.take().unwrap();
             debug_assert_eq!(t.read_bytes_left, 0);
             debug_assert_eq!(t.write_bytes_left, 0);
+            if let Some(tr) = &self.tracer {
+                tr.span(t.started, cy - t.started + 1, &format!("{}.leg", self.name), t.len);
+            }
             let hs = self.handles.get_mut(&t.handle).expect("descriptor bookkeeping");
             hs.legs_unissued -= 1;
             if hs.legs_unissued == 0 && hs.b_outstanding == 0 {
@@ -856,6 +880,23 @@ mod tests {
         }
         assert!(done);
         assert_eq!(mem.banks.borrow().peek_vec(0x40000, 4096), src);
+    }
+
+    #[test]
+    fn trace_emits_leg_spans_and_completions() {
+        let (mut dma, mut mem) = mk();
+        let t = crate::telemetry::Tracer::new(0);
+        dma.set_tracer(t.clone());
+        mem.banks.borrow_mut().poke(0x1000, &[7u8; 64]);
+        let h = dma.submit(TransferReq::OneD { src: 0x1000, dst: 0x8000, len: 64 });
+        assert!(run_copy(&mut dma, &mut mem, h, 2000));
+        let (evs, dropped) = t.drain();
+        assert_eq!(dropped, 0);
+        assert!(
+            evs.iter().any(|e| e.name == "dma.leg" && e.arg == 64 && e.dur >= 1),
+            "{evs:?}"
+        );
+        assert!(evs.iter().any(|e| e.name == "dma.done" && e.arg == h && e.dur == 0), "{evs:?}");
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::noc::mux::{prepend_bits, Mux};
 use crate::noc::pipeline::Pipeline;
 use crate::protocol::{bundle, BundleCfg, Cmd, MasterEnd, SlaveEnd};
 use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
+use crate::telemetry::LinkTap;
 
 #[derive(Clone)]
 pub struct XbarCfg {
@@ -45,6 +46,7 @@ pub struct Xbar {
     muxes: Vec<Mux>,
     error_slaves: Vec<ErrorSlave>,
     pipes: Vec<Pipeline>,
+    link_taps: Vec<LinkTap>,
 }
 
 impl Xbar {
@@ -115,15 +117,23 @@ impl Xbar {
             );
         }
 
-        let muxes = masters
-            .into_iter()
-            .enumerate()
-            .map(|(mi, me)| {
-                Mux::new(format!("{name}.mux{mi}"), std::mem::take(&mut mux_inputs[mi]), me)
-            })
-            .collect();
+        let mut muxes = Vec::with_capacity(m);
+        let mut link_taps = Vec::with_capacity(m);
+        for (mi, me) in masters.into_iter().enumerate() {
+            // Tap the external master-port bundle before the mux takes
+            // ownership of the end: telemetry reads the handshake counters
+            // passively, the datapath is untouched.
+            link_taps.push(LinkTap::from_master(format!("{name}.m{mi}"), &me));
+            muxes.push(Mux::new(format!("{name}.mux{mi}"), std::mem::take(&mut mux_inputs[mi]), me));
+        }
 
-        Xbar { name, demuxes, muxes, error_slaves, pipes }
+        Xbar { name, demuxes, muxes, error_slaves, pipes, link_taps }
+    }
+
+    /// Hand the per-master-port link taps to a telemetry collector. Call
+    /// before [`Xbar::into_parts`]; subsequent calls return an empty vec.
+    pub fn take_link_taps(&mut self) -> Vec<LinkTap> {
+        std::mem::take(&mut self.link_taps)
     }
 
     /// Decompose the crossbar into its per-port parts for individual
@@ -508,5 +518,39 @@ mod tests {
             }
         }
         assert_eq!(completed, total, "all random reads complete (no deadlock/loss)");
+    }
+
+    #[test]
+    fn link_taps_count_beats_per_master_port() {
+        let (ups, mut x, downs) = mk_xbar(false, DefaultPort::Error);
+        let taps = x.take_link_taps();
+        assert_eq!(taps.len(), 2, "one tap per master port");
+        assert!(x.take_link_taps().is_empty(), "taps are takeable once");
+        let mut cy = 0;
+        ups[0].set_now(cy);
+        let c = Cmd::new(2, 0x1040, 0, 3); // -> master port 1
+        ups[0].ar.push(c);
+        let mut done = false;
+        for _ in 0..16 {
+            step(&mut cy, &ups, &mut x, &downs);
+            if downs[1].ar.can_pop() {
+                let c = downs[1].ar.pop();
+                downs[1].r.push(RBeat {
+                    id: c.id,
+                    data: Bytes::zeroed(8),
+                    resp: Resp::Okay,
+                    last: true,
+                    tag: c.tag,
+                });
+            }
+            if ups[0].r.can_pop() {
+                ups[0].r.pop();
+                done = true;
+            }
+        }
+        assert!(done);
+        assert_eq!(taps[1].data_beats(), 1, "one R beat crossed master port 1");
+        assert_eq!(taps[1].bytes(), 8);
+        assert!(taps[0].usage(cy).idle(), "untouched port stays idle");
     }
 }

@@ -18,6 +18,7 @@
 use crate::sim::{
     Component, Cycle, DomainId, Engine, EngineOpts, Ps, ShardProfileReport, ShardedEngine,
 };
+use crate::telemetry::{sort_events, TraceEvent, Tracer};
 
 /// Which engine drives a built system: the single component arena, or the
 /// sharded epoch-exchange engine.
@@ -49,7 +50,69 @@ impl Arena {
         if opts.full_scan {
             arena.set_sleep(false);
         }
+        if opts.telemetry {
+            arena.enable_telemetry();
+        }
         arena
+    }
+
+    /// Attach the telemetry layer, uniform across both engines: a
+    /// per-component activity meter and trace ring per shard (the
+    /// single arena traces as shard 0). Applied by [`Arena::new`] when
+    /// `opts.telemetry` is set; idempotent, and covers components
+    /// registered afterwards too.
+    pub fn enable_telemetry(&mut self) {
+        match self {
+            Arena::Single { engine, .. } => engine.enable_meter(0),
+            Arena::Sharded { eng } => eng.enable_telemetry(),
+        }
+    }
+
+    pub fn telemetry_enabled(&self) -> bool {
+        match self {
+            Arena::Single { engine, .. } => engine.telemetry_enabled(),
+            Arena::Sharded { eng } => eng.telemetry_enabled(),
+        }
+    }
+
+    /// A tracer handle onto `shard`'s ring for instrumented components
+    /// built into that shard (the shard index is ignored in
+    /// single-arena mode). `None` until telemetry is enabled.
+    pub fn tracer(&self, shard: usize) -> Option<Tracer> {
+        match self {
+            Arena::Single { engine, .. } => engine.tracer(),
+            Arena::Sharded { eng } => eng.shard_tracer(shard),
+        }
+    }
+
+    /// Flush the meters and drain every trace ring into one canonically
+    /// sorted stream (plus total drop count) — bit-identical across
+    /// thread counts and engine modes when nothing overflowed.
+    pub fn take_trace_events(&mut self) -> (Vec<TraceEvent>, u64) {
+        match self {
+            Arena::Single { engine, .. } => {
+                engine.flush_telemetry();
+                match engine.tracer() {
+                    Some(t) => {
+                        let (mut evs, dropped) = t.drain();
+                        sort_events(&mut evs);
+                        (evs, dropped)
+                    }
+                    None => (Vec::new(), 0),
+                }
+            }
+            Arena::Sharded { eng } => eng.take_trace_events(),
+        }
+    }
+
+    /// Per-component active-cycle counts in deterministic (shard, slot)
+    /// order — the energy accountant's input. Empty until telemetry is
+    /// enabled.
+    pub fn meter_rows(&self) -> Vec<(String, u64)> {
+        match self {
+            Arena::Single { engine, .. } => engine.meter_rows(),
+            Arena::Sharded { eng } => eng.meter_rows(),
+        }
     }
 
     /// Register an infrastructure component: the single arena, or shard 0
@@ -271,6 +334,38 @@ mod tests {
         let prof = a.shard_profile().expect("sharded mode profiles");
         assert_eq!(prof.runs, 1);
         assert_eq!(prof.shards.len(), 2);
+    }
+
+    #[test]
+    fn telemetry_uniform_across_engines() {
+        for threads in [0usize, 2] {
+            let telem = EngineOpts { telemetry: true, ..opts(threads, 4) };
+            let mut a = Arena::new(&telem, 2);
+            assert!(a.telemetry_enabled(), "opts.telemetry flows through construction");
+            let ticks = Rc::new(Cell::new(0));
+            a.add_infra(Box::new(Counter { ticks, budget: 3 }));
+            a.advance(8);
+            let rows = a.meter_rows();
+            // Counter returns Active for its first 2 ticks (budget 3 → 2
+            // active_if(budget > 0) truths after decrement).
+            assert_eq!(
+                rows.iter().find(|(n, _)| n == "counter").map(|(_, c)| *c),
+                Some(2),
+                "threads={threads}: {rows:?}"
+            );
+            let (evs, dropped) = a.take_trace_events();
+            assert_eq!(dropped, 0);
+            assert!(
+                evs.iter().any(|e| e.name == "counter" && e.dur == 2),
+                "threads={threads}: {evs:?}"
+            );
+            assert!(a.tracer(0).is_some());
+        }
+        let mut a = Arena::new(&opts(0, 4), 1);
+        assert!(!a.telemetry_enabled(), "off by default");
+        assert!(a.tracer(0).is_none());
+        assert_eq!(a.take_trace_events(), (Vec::new(), 0));
+        assert!(a.meter_rows().is_empty());
     }
 
     #[test]

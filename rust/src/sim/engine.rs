@@ -40,6 +40,8 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::rc::Rc;
 
+use crate::telemetry::Tracer;
+
 /// Cycle count within a clock domain.
 pub type Cycle = u64;
 
@@ -207,6 +209,47 @@ struct Slot {
     asleep: bool,
 }
 
+/// Telemetry meter: per-slot `Activity::Active` tick counts plus busy-span
+/// tracking, attached to the engine only when telemetry is enabled (the
+/// hot path pays one pointer null-check per ticked component otherwise).
+///
+/// The hot-path `record` touches only integer arrays: counts, the open
+/// span per slot, and a closed-span triple list. Component *names* (a
+/// vtable call each) are resolved once at [`Engine::flush_telemetry`],
+/// not per tick. Everything recorded is mode- and thread-invariant —
+/// only ticks that returned `Active` count, and those are identical in
+/// event and full-scan modes by the `Idle` no-op contract.
+struct Meter {
+    /// Active-tick count per slot.
+    active: Vec<u64>,
+    /// Open busy span per slot: (start, last); start == MAX when none.
+    span: Vec<(Cycle, Cycle)>,
+    /// Closed spans: (slot index, start, last). Bounded by the trace cap.
+    closed: Vec<(u32, Cycle, Cycle)>,
+    /// Spans discarded because `closed` hit the cap.
+    dropped: u64,
+    tracer: Tracer,
+}
+
+impl Meter {
+    fn record(&mut self, idx: usize, cy: Cycle) {
+        self.active[idx] += 1;
+        let (start, last) = self.span[idx];
+        if start == Cycle::MAX {
+            self.span[idx] = (cy, cy);
+        } else if cy == last + 1 {
+            self.span[idx].1 = cy;
+        } else {
+            if self.closed.len() < crate::telemetry::TRACE_CAP {
+                self.closed.push((idx as u32, start, last));
+            } else {
+                self.dropped += 1;
+            }
+            self.span[idx] = (cy, cy);
+        }
+    }
+}
+
 struct Domain {
     name: String,
     period_ps: Ps,
@@ -235,6 +278,9 @@ pub struct Engine {
     /// Reusable scratch buffers: allocated once, swapped per step.
     wake_scratch: Vec<ComponentId>,
     due_scratch: Vec<u32>,
+    /// Telemetry meter; `None` (the default) keeps the hot path free of
+    /// telemetry work beyond one null check per ticked component.
+    meter: Option<Box<Meter>>,
 }
 
 /// Handle identifying a clock domain.
@@ -253,6 +299,7 @@ impl Engine {
             awake: 0,
             wake_scratch: Vec::new(),
             due_scratch: Vec::new(),
+            meter: None,
         }
     }
 
@@ -318,9 +365,86 @@ impl Engine {
         c.bind(&self.wake, id);
         self.slots.push(Slot { comp: c, domain: domain.0 as u32, asleep: false });
         self.awake += 1;
+        if let Some(m) = self.meter.as_deref_mut() {
+            m.active.push(0);
+            m.span.push((Cycle::MAX, 0));
+        }
         // Ids grow monotonically, so `active` stays sorted.
         self.domains[domain.0].active.push(id);
         id
+    }
+
+    /// Attach the telemetry meter (idempotent). `shard` stamps every
+    /// trace event this engine emits — the Chrome `pid`. Enable before or
+    /// after registering components; both are metered from then on.
+    pub fn enable_meter(&mut self, shard: u32) {
+        if self.meter.is_some() {
+            return;
+        }
+        let n = self.slots.len();
+        self.meter = Some(Box::new(Meter {
+            active: vec![0; n],
+            span: vec![(Cycle::MAX, 0); n],
+            closed: Vec::new(),
+            dropped: 0,
+            tracer: Tracer::new(shard),
+        }));
+    }
+
+    /// Whether the telemetry meter is attached.
+    pub fn telemetry_enabled(&self) -> bool {
+        self.meter.is_some()
+    }
+
+    /// A handle onto this engine's trace ring, for instrumented
+    /// components (DMA, collective unit, D2D). `None` when telemetry is
+    /// off.
+    pub fn tracer(&self) -> Option<Tracer> {
+        self.meter.as_ref().map(|m| m.tracer.clone())
+    }
+
+    /// Per-component `(name, active_tick_count)` rows in slot order
+    /// (deterministic: slot order is construction order). Empty when
+    /// telemetry is off.
+    pub fn meter_rows(&self) -> Vec<(String, u64)> {
+        match &self.meter {
+            Some(m) => self
+                .slots
+                .iter()
+                .zip(&m.active)
+                .map(|(s, &a)| (s.comp.name().to_string(), a))
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Close every open busy span and emit all closed spans into the
+    /// trace ring (lane = slot index, name resolved here — not on the
+    /// hot path). Call between runs, before draining the tracer.
+    pub fn flush_telemetry(&mut self) {
+        let Some(m) = self.meter.as_deref_mut() else {
+            return;
+        };
+        for (idx, s) in m.span.iter_mut().enumerate() {
+            let (start, last) = *s;
+            if start != Cycle::MAX {
+                if m.closed.len() < crate::telemetry::TRACE_CAP {
+                    m.closed.push((idx as u32, start, last));
+                } else {
+                    m.dropped += 1;
+                }
+                *s = (Cycle::MAX, 0);
+            }
+        }
+        for &(idx, start, last) in &m.closed {
+            let name = self.slots[idx as usize].comp.name();
+            m.tracer.span_on(idx, start, last - start + 1, name, 0);
+        }
+        m.closed.clear();
+        if m.dropped > 0 {
+            m.tracer.note_dropped(m.dropped);
+            m.dropped = 0;
+        }
     }
 
     /// The wake registry, for external drivers that poke component state
@@ -415,6 +539,11 @@ impl Engine {
         let mut list = std::mem::take(&mut self.domains[di].active);
         list.retain(|&id| {
             let act = self.slots[id.index()].comp.tick(cy);
+            if act.is_active() {
+                if let Some(m) = self.meter.as_deref_mut() {
+                    m.record(id.index(), cy);
+                }
+            }
             // A wake flagged during this edge (e.g. a beat pushed toward
             // this component by an earlier-ticking one) keeps it runnable:
             // the beat only becomes visible next cycle.
@@ -694,6 +823,52 @@ mod tests {
         e.run_cycles_quiescent(d, 10);
         assert_eq!(e.cycles(d), 10);
         assert_eq!(ticks.get(), 3, "awake worker still ticks through the fallback");
+    }
+
+    #[test]
+    fn meter_identical_across_engine_modes() {
+        let run = |sleep: bool| {
+            let (mut e, d) = Engine::single_clock();
+            e.enable_meter(0);
+            let ticks = Rc::new(Cell::new(0));
+            e.add(d, Worker { work_left: 5, ticks });
+            e.set_sleep(sleep);
+            e.run_cycles(d, 50);
+            e.flush_telemetry();
+            (e.meter_rows(), e.tracer().unwrap().drain())
+        };
+        let (rows_ev, (mut tr_ev, drop_ev)) = run(true);
+        let (rows_fs, (mut tr_fs, drop_fs)) = run(false);
+        // Only Active-returning ticks count, so event and full-scan modes
+        // agree exactly (the full scan's extra Idle no-op ticks are
+        // invisible to the meter).
+        assert_eq!(rows_ev, rows_fs);
+        assert_eq!(rows_ev, vec![("worker".to_string(), 4)]);
+        crate::telemetry::sort_events(&mut tr_ev);
+        crate::telemetry::sort_events(&mut tr_fs);
+        assert_eq!(tr_ev, tr_fs);
+        assert_eq!((drop_ev, drop_fs), (0, 0));
+        assert_eq!(tr_ev.len(), 1, "one contiguous busy span");
+        assert_eq!((tr_ev[0].ts, tr_ev[0].dur), (1, 4));
+        assert_eq!(tr_ev[0].name, "worker");
+    }
+
+    #[test]
+    fn meter_splits_spans_on_gaps() {
+        let (mut e, d) = Engine::single_clock();
+        e.enable_meter(2);
+        let ticks = Rc::new(Cell::new(0));
+        let id = e.add(d, Worker { work_left: 3, ticks });
+        e.run_cycles(d, 10);
+        e.wake(id);
+        e.run_cycles(d, 10);
+        // Woken at cycle 11 the worker ticks once more (Idle, work done)
+        // — no new Active ticks, so still one span from the first burst.
+        e.flush_telemetry();
+        let (mut evs, _) = e.tracer().unwrap().drain();
+        crate::telemetry::sort_events(&mut evs);
+        assert_eq!(evs.len(), 1);
+        assert_eq!((evs[0].ts, evs[0].dur, evs[0].shard), (1, 2, 2));
     }
 
     #[test]

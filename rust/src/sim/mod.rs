@@ -22,6 +22,6 @@ pub use rng::SplitMix64;
 pub use shard::{
     auto_threads, exchange_channel, Exchanged, ExchangeLink, ExchangeRx, ExchangeTx, PairDirty,
     Shard, ShardProfile, ShardProfileReport, ShardedEngine, SpinBarrier, SpinBarrierWaitResult,
-    WorkerProfile,
+    WorkerProfile, EPOCH_TRACE_SHARD,
 };
 pub use stats::{human_bytes, Bandwidth, LatencyStats};

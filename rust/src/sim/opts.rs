@@ -85,6 +85,13 @@ pub struct EngineOpts {
     /// `sim::affinity` — never a result change, observable only in the
     /// shard profiler's `stall_ns`/`run_ns` split.
     pub pin_workers: bool,
+    /// Attach the telemetry layer (`--trace FILE` or `--telemetry`):
+    /// per-component activity meters, trace rings, and energy/link
+    /// reports. Off by default — the engine hot path then pays only a
+    /// null check per ticked component. Telemetry output is
+    /// bit-identical across thread counts and engine modes, so enabling
+    /// it never changes simulation results.
+    pub telemetry: bool,
 }
 
 impl Default for EngineOpts {
@@ -95,6 +102,7 @@ impl Default for EngineOpts {
             policy: EpochPolicy::Fixed,
             full_scan: false,
             pin_workers: false,
+            telemetry: false,
         }
     }
 }
@@ -145,6 +153,9 @@ impl EngineOpts {
         if flags.contains_key("pin-workers") {
             self.pin_workers = true;
         }
+        if flags.contains_key("telemetry") || flags.contains_key("trace") {
+            self.telemetry = true;
+        }
         if let Some(t) = flags.get("threads") {
             self.threads = Some(t.parse().context("--threads must be a non-negative integer")?);
         } else if self.threads.is_none() && auto_threads_if_unset {
@@ -187,6 +198,7 @@ mod tests {
                 ("epoch-policy", "adaptive"),
                 ("full-scan", "true"),
                 ("pin-workers", "true"),
+                ("trace", "out.json"),
             ]),
             true,
         )
@@ -196,6 +208,7 @@ mod tests {
         assert_eq!(opts.policy, EpochPolicy::Adaptive);
         assert!(opts.full_scan);
         assert!(opts.pin_workers);
+        assert!(opts.telemetry, "--trace implies telemetry");
     }
 
     #[test]

@@ -140,6 +140,7 @@ use std::time::Instant;
 
 use crate::sim::opts::EpochPolicy;
 use crate::sim::{Component, ComponentId, Cycle, DomainId, Engine};
+use crate::telemetry::{sort_events, TraceEvent, Tracer, TRACE_CAP};
 
 /// Spins with the `spin_loop` hint this many iterations before falling
 /// back to `yield_now`, so an oversubscribed host (more workers than
@@ -797,6 +798,38 @@ struct AssignCache {
     assign: Vec<Vec<usize>>,
 }
 
+/// Synthetic shard id (`pid` in the Chrome export) carrying the sharded
+/// runtime's own epoch-boundary events — exchanges and sprints — so
+/// they never collide with a real shard's component lanes.
+pub const EPOCH_TRACE_SHARD: u32 = u32::MAX;
+
+/// Epoch-boundary event ring, written only by the exchange leader (or
+/// the serial path) while every worker is parked — the same exclusivity
+/// window the exchange queues rely on. Bounded like the per-shard trace
+/// rings; overflow drops new events and counts them.
+#[derive(Default)]
+struct EpochTrace {
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+impl EpochTrace {
+    fn push(&mut self, ts: Cycle, name: &str, arg: u64) {
+        if self.events.len() < TRACE_CAP {
+            self.events.push(TraceEvent {
+                ts,
+                dur: 0,
+                shard: EPOCH_TRACE_SHARD,
+                tid: 0,
+                name: name.into(),
+                arg,
+            });
+        } else {
+            self.dropped += 1;
+        }
+    }
+}
+
 /// One parallel run's worth of work, handed to the pool threads as raw
 /// pointers. Validity contract: `ShardedEngine::run` keeps every
 /// pointed-to allocation alive and unmoved until all workers have
@@ -819,6 +852,12 @@ struct Job {
     /// slot `i` only.
     wprof: *mut WorkerProfile,
     adaptive: bool,
+    /// Epoch-boundary event ring; null when telemetry is off. Written
+    /// only by the exchange leader between the two barrier waits.
+    evts: *mut EpochTrace,
+    /// Absolute engine cycle at the start of this run (epoch events are
+    /// stamped with simulated cycles, which the workers track locally).
+    base_cycle: Cycle,
 }
 
 // SAFETY: a Job is a bag of pointers into storage owned by the posting
@@ -850,10 +889,12 @@ unsafe fn run_worker(job: Job, index: usize) {
     let barrier = &*job.barrier;
     let mut sense = false;
     let (mut run_ns, mut stall_ns, mut exchange_ns) = (0u64, 0u64, 0u64);
+    let mut abs = job.base_cycle;
     let mut idx = 0;
     while idx < plan.len() {
         let (step, ex) = plan[idx];
         idx += 1;
+        abs += step;
         for &si in my.iter() {
             let sh = &mut *job.shards.add(si);
             let d = sh.0.domain;
@@ -872,6 +913,7 @@ unsafe fn run_worker(job: Job, index: usize) {
             if barrier.wait(&mut sense).is_leader() {
                 let e0 = Instant::now();
                 let ctl = &mut *(*job.ctl).get();
+                let before = ctl.groups_exchanged;
                 exchange_groups(groups, job.shards, job.n_shards, ctl);
                 ctl.exchanges += 1;
                 if job.adaptive
@@ -879,6 +921,18 @@ unsafe fn run_worker(job: Job, index: usize) {
                     && all_quiescent(job.shards, job.n_shards, groups)
                 {
                     ctl.sprint = true;
+                }
+                if !job.evts.is_null() {
+                    // Exclusive window: every peer is parked between the
+                    // two waits, so the leader owns the epoch ring. The
+                    // event stream is deterministic — the boundary cycle
+                    // and group-dirty state are simulation facts.
+                    let ev = &mut *job.evts;
+                    ev.push(abs, "exchange", ctl.groups_exchanged - before);
+                    if ctl.sprint {
+                        let remaining: Cycle = plan[idx..].iter().map(|&(s, _)| s).sum();
+                        ev.push(abs, "sprint", remaining);
+                    }
                 }
                 ex_ns = e0.elapsed().as_nanos() as u64;
             }
@@ -1096,6 +1150,9 @@ pub struct ShardedEngine {
     weight_gen: u64,
     prof_workers: Vec<WorkerProfile>,
     totals: ProfTotals,
+    /// Epoch-boundary trace ring (`Some` once telemetry is enabled);
+    /// boxed so the leader's raw pointer stays stable across runs.
+    epoch_trace: Option<Box<EpochTrace>>,
 }
 
 impl ShardedEngine {
@@ -1128,7 +1185,65 @@ impl ShardedEngine {
             weight_gen: 0,
             prof_workers: Vec::new(),
             totals: ProfTotals::default(),
+            epoch_trace: None,
         }
+    }
+
+    /// Attach the telemetry layer: a per-component activity meter and
+    /// trace ring on every shard (shard `i` traces as `pid == i`), plus
+    /// the runtime's own epoch-boundary event ring
+    /// ([`EPOCH_TRACE_SHARD`]). Idempotent; covers components added
+    /// later too. Off by default — the per-tick cost is then a single
+    /// null check per active component.
+    pub fn enable_telemetry(&mut self) {
+        for (i, sh) in self.shards.iter_mut().enumerate() {
+            sh.0.engine.enable_meter(i as u32);
+        }
+        if self.epoch_trace.is_none() {
+            self.epoch_trace = Some(Box::default());
+        }
+    }
+
+    pub fn telemetry_enabled(&self) -> bool {
+        self.epoch_trace.is_some()
+    }
+
+    /// A tracer handle onto shard `i`'s ring (for instrumented
+    /// components built into that shard). `None` until
+    /// [`ShardedEngine::enable_telemetry`].
+    pub fn shard_tracer(&self, i: usize) -> Option<Tracer> {
+        self.shards[i].0.engine.tracer()
+    }
+
+    /// Flush every shard's meter, drain all trace rings (component busy
+    /// spans, instrumented-component events, epoch-boundary events), and
+    /// return the canonically sorted stream plus the total drop count.
+    /// The sorted stream is bit-identical across thread counts and
+    /// engine modes whenever no ring overflowed (`dropped == 0`).
+    pub fn take_trace_events(&mut self) -> (Vec<TraceEvent>, u64) {
+        let mut events = Vec::new();
+        let mut dropped = 0u64;
+        for sh in &mut self.shards {
+            sh.0.engine.flush_telemetry();
+            if let Some(t) = sh.0.engine.tracer() {
+                let (evs, d) = t.drain();
+                events.extend(evs);
+                dropped += d;
+            }
+        }
+        if let Some(et) = &mut self.epoch_trace {
+            events.append(&mut et.events);
+            dropped += std::mem::take(&mut et.dropped);
+        }
+        sort_events(&mut events);
+        (events, dropped)
+    }
+
+    /// Per-component active-cycle counts across all shards, in (shard,
+    /// slot) order — the energy accountant's input. Empty until
+    /// [`ShardedEngine::enable_telemetry`].
+    pub fn meter_rows(&self) -> Vec<(String, u64)> {
+        self.shards.iter().flat_map(|s| s.0.engine.meter_rows()).collect()
     }
 
     pub fn shard(&mut self, i: usize) -> &mut Shard {
@@ -1362,10 +1477,12 @@ impl ShardedEngine {
                 self.prof_workers.push(WorkerProfile::default());
             }
             let (mut run_ns, mut exchange_ns) = (0u64, 0u64);
+            let mut abs = self.cycles;
             let mut idx = 0;
             while idx < plan.len() {
                 let (step, ex) = plan[idx];
                 idx += 1;
+                abs += step;
                 for sh in &mut self.shards {
                     let d = sh.0.domain;
                     let t0 = Instant::now();
@@ -1380,6 +1497,7 @@ impl ShardedEngine {
                 }
                 if ex {
                     let e0 = Instant::now();
+                    let before = ctl.groups_exchanged;
                     // SAFETY: no worker threads are running; the
                     // caller's thread has exclusive access to all
                     // shards.
@@ -1397,6 +1515,16 @@ impl ShardedEngine {
                         let ptr = self.shards.as_mut_ptr();
                         // SAFETY: as above.
                         sprint = unsafe { all_quiescent(ptr, self.shards.len(), &self.groups) };
+                    }
+                    if let Some(et) = &mut self.epoch_trace {
+                        // Same events the parallel leader emits: the
+                        // boundary cycle and dirty-group state are
+                        // simulation facts, independent of the path.
+                        et.push(abs, "exchange", ctl.groups_exchanged - before);
+                        if sprint {
+                            let remaining: Cycle = plan[idx..].iter().map(|&(s, _)| s).sum();
+                            et.push(abs, "sprint", remaining);
+                        }
                     }
                     exchange_ns += e0.elapsed().as_nanos() as u64;
                     if sprint {
@@ -1435,6 +1563,11 @@ impl ShardedEngine {
                 ctl: &ctl_cell,
                 wprof: self.prof_workers.as_mut_ptr(),
                 adaptive,
+                evts: self
+                    .epoch_trace
+                    .as_deref_mut()
+                    .map_or(std::ptr::null_mut(), |t| t as *mut EpochTrace),
+                base_cycle: self.cycles,
             };
             let pool = self.pool.as_ref().expect("pool exists when workers > 1");
             // Unwinding past this frame while the job is live would
@@ -1936,6 +2069,50 @@ mod tests {
         let mut all: Vec<usize> = assign.into_iter().flatten().collect();
         all.sort_unstable();
         assert_eq!(all, vec![0, 1, 2]);
+    }
+
+    /// Telemetry output (component busy spans, epoch events, meter
+    /// rows) is bit-identical across thread counts and engine modes:
+    /// the meter counts only `Active` ticks and every event carries
+    /// only simulation facts.
+    #[test]
+    fn telemetry_bit_identical_across_threads_and_modes() {
+        let run_with = |threads: usize, policy: EpochPolicy, sleep: bool| {
+            let mut eng = ShardedEngine::new(2, 4, threads);
+            eng.set_policy(policy);
+            eng.set_sleep(sleep);
+            eng.enable_telemetry();
+            assert!(eng.telemetry_enabled());
+            let (tx, rx, link) = exchange_channel::<u64>("x", 16);
+            let log = Rc::new(RefCell::new(Vec::new()));
+            // SAFETY: shards only share the exchange queue (see above).
+            let sid = unsafe { eng.shard(0).add(IdleSender { tx, next: 0, total: 10 }) };
+            let rid = unsafe { eng.shard(1).add(IdleReceiver { rx, log: log.clone() }) };
+            eng.add_links_waking([link], (0, sid), (1, rid));
+            eng.run(80);
+            (eng.take_trace_events(), eng.meter_rows())
+        };
+        let ((base_evs, base_drop), base_rows) = run_with(1, EpochPolicy::Fixed, true);
+        assert_eq!(base_drop, 0, "no ring overflow in a tiny run");
+        assert!(base_evs.iter().any(|e| e.shard == 0 && e.name == "idle-sender" && e.dur > 0));
+        assert!(base_evs.iter().any(|e| e.shard == EPOCH_TRACE_SHARD && e.name == "exchange"));
+        assert_eq!(base_rows.iter().filter(|(n, a)| n == "idle-sender" && *a > 0).count(), 1);
+        for (threads, sleep) in [(2, true), (4, true), (1, false), (2, false)] {
+            let ((evs, d), rows) = run_with(threads, EpochPolicy::Fixed, sleep);
+            assert_eq!(evs, base_evs, "threads={threads} sleep={sleep}");
+            assert_eq!(d, 0);
+            assert_eq!(rows, base_rows, "threads={threads} sleep={sleep}");
+        }
+        // The adaptive policy deliberately elides proven-no-op
+        // boundaries (fewer epoch events than fixed), but stays
+        // bit-identical across thread counts, and the meter — which
+        // sees only Active ticks — is policy-invariant.
+        let (ad1, ar1) = run_with(1, EpochPolicy::Adaptive, true);
+        let (ad2, ar2) = run_with(2, EpochPolicy::Adaptive, true);
+        assert_eq!(ad1, ad2);
+        assert_eq!(ar1, ar2);
+        assert_eq!(ar1, base_rows, "meter is policy-invariant");
+        assert!(ad1.0.iter().any(|e| e.name == "sprint"), "idle tail sprints");
     }
 
     #[test]

@@ -32,6 +32,23 @@ impl LatencyStats {
         self.samples
     }
 
+    /// Fold another recorder's samples into this one (aggregation across
+    /// ranks or shards). Count/sum/min/max and the histogram merge
+    /// exactly, so percentiles of the merged set equal those of one
+    /// recorder that saw every sample.
+    pub fn merge(&mut self, other: &LatencyStats) {
+        if other.samples == 0 {
+            return;
+        }
+        self.samples += other.samples;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += *b;
+        }
+    }
+
     pub fn mean(&self) -> f64 {
         if self.samples == 0 {
             return 0.0;
@@ -51,19 +68,26 @@ impl LatencyStats {
         self.max
     }
 
-    /// Approximate percentile from the power-of-two histogram (upper bound
-    /// of the containing bucket).
+    /// Percentile estimate from the power-of-two histogram, linearly
+    /// interpolated inside the containing bucket by sample rank and
+    /// clamped to the observed `[min, max]` (so a single sample reports
+    /// its exact value rather than a bucket bound).
     pub fn percentile(&self, p: f64) -> u64 {
         if self.samples == 0 {
             return 0;
         }
-        let target = (p / 100.0 * self.samples as f64).ceil() as u64;
-        let mut acc = 0;
+        let target = (p / 100.0 * self.samples as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
         for (i, &c) in self.buckets.iter().enumerate() {
-            acc += c;
-            if acc >= target {
-                return 1u64 << (i + 1);
+            if c > 0 && acc + c >= target {
+                // Bucket i covers [2^i, 2^(i+1)): interpolate by the
+                // fraction of the bucket's samples below the target rank.
+                let lo = 1u64 << i;
+                let frac = (target - acc) as f64 / c as f64;
+                let v = (lo as f64 + frac * lo as f64).round() as u64;
+                return v.clamp(self.min(), self.max);
             }
+            acc += c;
         }
         self.max
     }
@@ -144,6 +168,48 @@ mod tests {
         }
         assert!(l.percentile(50.0) <= l.percentile(99.0));
         assert!(l.percentile(99.0) <= 2048);
+    }
+
+    #[test]
+    fn latency_percentile_interpolates() {
+        // Uniform 1..=1000: the true p50 is ~500, inside bucket [512,1024)
+        // for ranks past 511 — interpolation must land near the rank, not
+        // at the bucket's upper bound (the old behaviour returned 1024).
+        let mut l = LatencyStats::new();
+        for v in 1..=1000u64 {
+            l.record(v);
+        }
+        let p50 = l.percentile(50.0);
+        assert!((256..=700).contains(&p50), "p50 = {p50}");
+        let p99 = l.percentile(99.0);
+        assert!((900..=1000).contains(&p99), "p99 = {p99}");
+    }
+
+    #[test]
+    fn latency_percentile_single_sample_is_exact() {
+        let mut l = LatencyStats::new();
+        l.record(100);
+        // Clamped to [min, max], so one sample reports itself exactly.
+        assert_eq!(l.percentile(50.0), 100);
+        assert_eq!(l.percentile(99.0), 100);
+    }
+
+    #[test]
+    fn merge_equals_single_recorder() {
+        let mut a = LatencyStats::new();
+        let mut b = LatencyStats::new();
+        let mut all = LatencyStats::new();
+        for v in 1..=100u64 {
+            if v % 2 == 0 { a.record(v) } else { b.record(v) }
+            all.record(v);
+        }
+        a.merge(&b);
+        a.merge(&LatencyStats::new()); // empty merge is a no-op
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+        assert_eq!(a.percentile(50.0), all.percentile(50.0));
+        assert_eq!(a.percentile(99.0), all.percentile(99.0));
     }
 
     #[test]

@@ -1,0 +1,331 @@
+//! Energy accounting on top of the calibrated §3 area/timing model.
+//!
+//! Every component's `Activity::Active` tick count (collected by the
+//! engine meter) is multiplied by an area-model-derived dynamic energy
+//! per active cycle, plus a static leakage term over *all* simulated
+//! cycles; link energy is beat-counter bytes times a per-byte cost
+//! (on-die wires vs off-die D2D SerDes). Components are classified into
+//! subsystems by name at report time — nothing here runs on the hot
+//! path.
+//!
+//! Units: everything is stored as integer **femtojoules** (`u64`).
+//! Quantizing each term once at insertion makes every rollup an integer
+//! sum, so per-component, per-subsystem, and whole-system totals are
+//! *exactly* conserved regardless of summation order — the conservation
+//! test asserts equality, not approximate closeness — and the report is
+//! bit-identical across thread counts and engine modes.
+//!
+//! Energy per active cycle is frequency-independent under the §3.8 power
+//! law: `power = kGE · f · MW_PER_KGE_GHZ` integrated over one cycle of
+//! length `1/f` ns gives `kGE · MW_PER_KGE_GHZ` pJ.
+
+use crate::area::calib::MW_PER_KGE_GHZ;
+use crate::area::model::{area_timing, Module};
+use crate::coordinator::report::Json;
+use crate::sim::Cycle;
+
+/// Static (leakage + clock-tree) power as a fraction of full-load
+/// dynamic power, applied over every simulated cycle. GF22FDX at
+/// 0.8 V/25 °C leaks little; 10% is the usual planning number.
+pub const STATIC_FRAC: f64 = 0.10;
+
+/// On-die link wire energy (pJ/byte): ~0.1 pJ/byte for millimeter-scale
+/// 22FDX interconnect at 0.8 V.
+pub const ON_DIE_PJ_PER_BYTE: f64 = 0.10;
+
+/// Off-die die-to-die energy (pJ/byte): ~1 pJ/byte, the usual figure
+/// for short-reach organic-substrate D2D PHYs (an order of magnitude
+/// above on-die wires).
+pub const D2D_PJ_PER_BYTE: f64 = 1.00;
+
+/// Fallback area for components the classifier does not recognize
+/// (generators, monitors, glue).
+pub const DEFAULT_KGE: f64 = 5.0;
+
+/// A compute cluster (cores + FPUs + L1 banks behind it) dwarfs any NoC
+/// module; order-of-magnitude planning figure for an 8-core cluster.
+pub const CORE_KGE: f64 = 600.0;
+
+/// D2D PHY + protocol controller logic per direction.
+pub const D2D_KGE: f64 = 40.0;
+
+fn pj_per_active_cycle(kge: f64) -> f64 {
+    kge * MW_PER_KGE_GHZ
+}
+
+fn to_fj(pj: f64) -> u64 {
+    (pj * 1000.0).round() as u64
+}
+
+/// Classify a component by its hierarchical name into a subsystem label
+/// and a representative kGE area from the §3 model.
+///
+/// Substring order matters — names overlap. `.dmamux`, `.dmaremap`, and
+/// `.dma0.split` must hit the mux/remap/demux arms before the `.dma`
+/// arm; the error slave's `.errslv` must win before anything else.
+pub fn classify(name: &str) -> (&'static str, f64) {
+    if name.contains(".errslv") {
+        ("errslv", 1.0)
+    } else if name.contains(".iq") || name.contains(".pipe") || name.contains("cut.") {
+        // Input queues, pipeline stages, shard-cut relays: a register
+        // slice per channel.
+        ("pipeline", 2.0)
+    } else if name.contains(".split") || name.contains(".demux") {
+        ("noc", area_timing(Module::Demux { m: 4, i: 6 }).kge)
+    } else if name.contains("mux") {
+        // .mux / .dmamux / .l1muxA / .l1muxB
+        ("noc", area_timing(Module::Mux { s: 4, i: 6 }).kge)
+    } else if name.contains("remap") {
+        ("noc", area_timing(Module::IdRemap { i: 6, u: 16, t: 8 }).kge)
+    } else if name.contains(".upsizer") {
+        ("noc", area_timing(Module::Upsizer { dn: 64, dw: 512, r: 1 }).kge)
+    } else if name.contains("hbm") || name.contains(".l1a") || name.contains(".l1b") || name.contains("io") {
+        ("mem", area_timing(Module::MemDuplex { d: 512, b: 2 }).kge)
+    } else if name.contains(".dma") {
+        ("dma", area_timing(Module::Dma { d: 512 }).kge)
+    } else if name.contains(".cores") {
+        ("cores", CORE_KGE)
+    } else if name.contains(".coll") {
+        ("collective", 20.0)
+    } else if name.contains("d2d") {
+        ("d2d", D2D_KGE)
+    } else {
+        ("other", DEFAULT_KGE)
+    }
+}
+
+/// One component's energy line.
+#[derive(Debug, Clone)]
+pub struct CompEnergy {
+    pub name: String,
+    pub subsystem: &'static str,
+    /// Cycles this component returned `Activity::Active`.
+    pub active: u64,
+    pub kge: f64,
+    pub dyn_fj: u64,
+    pub static_fj: u64,
+}
+
+/// One link's beat-count energy line.
+#[derive(Debug, Clone)]
+pub struct LinkEnergy {
+    pub label: String,
+    pub bytes: u64,
+    pub fj: u64,
+}
+
+/// Whole-system energy report; build with [`EnergyReport::new`], feed
+/// component active counts and link byte counts, then render.
+#[derive(Debug, Clone)]
+pub struct EnergyReport {
+    /// Simulated cycles covered (static energy integrates over these).
+    pub cycles: Cycle,
+    pub comps: Vec<CompEnergy>,
+    pub links: Vec<LinkEnergy>,
+}
+
+impl EnergyReport {
+    pub fn new(cycles: Cycle) -> Self {
+        EnergyReport { cycles, comps: Vec::new(), links: Vec::new() }
+    }
+
+    /// Add a component by name and active-cycle count; classification
+    /// and quantization happen here, once.
+    pub fn add_component(&mut self, name: &str, active: u64) {
+        let (subsystem, kge) = classify(name);
+        let per_cycle_pj = pj_per_active_cycle(kge);
+        self.comps.push(CompEnergy {
+            name: name.to_string(),
+            subsystem,
+            active,
+            kge,
+            dyn_fj: to_fj(active as f64 * per_cycle_pj),
+            static_fj: to_fj(self.cycles as f64 * STATIC_FRAC * per_cycle_pj),
+        });
+    }
+
+    /// Add a link's byte count at a per-byte energy cost.
+    pub fn add_link(&mut self, label: &str, bytes: u64, pj_per_byte: f64) {
+        self.links.push(LinkEnergy {
+            label: label.to_string(),
+            bytes,
+            fj: to_fj(bytes as f64 * pj_per_byte),
+        });
+    }
+
+    /// Fold another report into this one (pod rollup over dies).
+    pub fn merge(&mut self, other: EnergyReport) {
+        self.cycles = self.cycles.max(other.cycles);
+        self.comps.extend(other.comps);
+        self.links.extend(other.links);
+    }
+
+    pub fn dynamic_fj(&self) -> u64 {
+        self.comps.iter().map(|c| c.dyn_fj).sum()
+    }
+
+    pub fn static_fj(&self) -> u64 {
+        self.comps.iter().map(|c| c.static_fj).sum()
+    }
+
+    pub fn link_fj(&self) -> u64 {
+        self.links.iter().map(|l| l.fj).sum()
+    }
+
+    /// Exact whole-system total (integer sum of every line item).
+    pub fn total_fj(&self) -> u64 {
+        self.dynamic_fj() + self.static_fj() + self.link_fj()
+    }
+
+    pub fn total_pj(&self) -> f64 {
+        self.total_fj() as f64 / 1000.0
+    }
+
+    /// Per-subsystem rollup (component dyn+static; links under "links"),
+    /// in first-appearance order — deterministic because components are
+    /// added in slot order.
+    pub fn by_subsystem(&self) -> Vec<(&'static str, u64)> {
+        let mut out: Vec<(&'static str, u64)> = Vec::new();
+        let mut add = |key: &'static str, fj: u64| match out.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, v)) => *v += fj,
+            None => out.push((key, fj)),
+        };
+        for c in &self.comps {
+            add(c.subsystem, c.dyn_fj + c.static_fj);
+        }
+        for l in &self.links {
+            add("links", l.fj);
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let by_sub = Json::Obj(
+            self.by_subsystem()
+                .into_iter()
+                .map(|(k, fj)| (k.to_string(), Json::Num(fj as f64 / 1000.0)))
+                .collect(),
+        );
+        let comps = Json::Arr(
+            self.comps
+                .iter()
+                .map(|c| {
+                    Json::Obj(vec![
+                        ("name".into(), Json::Str(c.name.clone())),
+                        ("subsystem".into(), Json::Str(c.subsystem.into())),
+                        ("active_cycles".into(), Json::Num(c.active as f64)),
+                        ("kge".into(), Json::Num(c.kge)),
+                        ("dyn_fj".into(), Json::Num(c.dyn_fj as f64)),
+                        ("static_fj".into(), Json::Num(c.static_fj as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let links = Json::Arr(
+            self.links
+                .iter()
+                .map(|l| {
+                    Json::Obj(vec![
+                        ("label".into(), Json::Str(l.label.clone())),
+                        ("bytes".into(), Json::Num(l.bytes as f64)),
+                        ("fj".into(), Json::Num(l.fj as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::Obj(vec![
+            ("cycles".into(), Json::Num(self.cycles as f64)),
+            ("total_pj".into(), Json::Num(self.total_pj())),
+            ("dynamic_fj".into(), Json::Num(self.dynamic_fj() as f64)),
+            ("static_fj".into(), Json::Num(self.static_fj() as f64)),
+            ("link_fj".into(), Json::Num(self.link_fj() as f64)),
+            ("by_subsystem_pj".into(), by_sub),
+            ("components".into(), comps),
+            ("links".into(), links),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        self.to_json().render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_disambiguates_overlapping_names() {
+        assert_eq!(classify("die0.xp.errslv0").0, "errslv");
+        assert_eq!(classify("die0.xp.iq2").0, "pipeline");
+        assert_eq!(classify("cut.c3.up").0, "pipeline");
+        assert_eq!(classify("c0.dma0.split").0, "noc");
+        assert_eq!(classify("c0.dmamux").0, "noc");
+        assert_eq!(classify("c0.dmaremap").0, "noc");
+        assert_eq!(classify("c0.dma0").0, "dma");
+        assert_eq!(classify("c1.cores").0, "cores");
+        assert_eq!(classify("c1.coll").0, "collective");
+        assert_eq!(classify("pod.d2d0to1").0, "d2d");
+        assert_eq!(classify("hbm0").0, "mem");
+        assert_eq!(classify("c0.l1a").0, "mem");
+    }
+
+    #[test]
+    fn energy_is_exactly_conserved() {
+        let mut r = EnergyReport::new(10_000);
+        for (name, active) in
+            [("c0.dma0", 1234u64), ("c0.cores", 9_999), ("xp.mux0", 57), ("xp.errslv0", 0)]
+        {
+            r.add_component(name, active);
+        }
+        r.add_link("trunk0", 4096, ON_DIE_PJ_PER_BYTE);
+        r.add_link("d2d0to1", 512, D2D_PJ_PER_BYTE);
+        // Integer-fJ storage: per-line items sum exactly to the total.
+        let line_sum: u64 = r.comps.iter().map(|c| c.dyn_fj + c.static_fj).sum::<u64>()
+            + r.links.iter().map(|l| l.fj).sum::<u64>();
+        assert_eq!(line_sum, r.total_fj());
+        let sub_sum: u64 = r.by_subsystem().iter().map(|(_, fj)| fj).sum();
+        assert_eq!(sub_sum, r.total_fj());
+    }
+
+    #[test]
+    fn dynamic_energy_scales_with_activity() {
+        let mut r = EnergyReport::new(1000);
+        r.add_component("a.dma0", 100);
+        r.add_component("b.dma0", 200);
+        assert_eq!(r.comps[0].static_fj, r.comps[1].static_fj);
+        // Quantized per-line, so allow 1 fJ of rounding.
+        assert!((2 * r.comps[0].dyn_fj).abs_diff(r.comps[1].dyn_fj) <= 1);
+    }
+
+    #[test]
+    fn link_energy_orders_of_magnitude() {
+        let mut r = EnergyReport::new(1);
+        r.add_link("on", 1000, ON_DIE_PJ_PER_BYTE);
+        r.add_link("off", 1000, D2D_PJ_PER_BYTE);
+        assert_eq!(r.links[0].fj, 100_000); // 1000 B × 0.1 pJ/B
+        assert_eq!(r.links[1].fj, 1_000_000);
+    }
+
+    #[test]
+    fn merge_rolls_up_dies() {
+        let mut a = EnergyReport::new(500);
+        a.add_component("d0.dma0", 10);
+        let mut b = EnergyReport::new(500);
+        b.add_component("d1.dma0", 10);
+        let t0 = a.total_fj();
+        let t1 = b.total_fj();
+        a.merge(b);
+        assert_eq!(a.total_fj(), t0 + t1);
+        assert_eq!(a.cycles, 500);
+    }
+
+    #[test]
+    fn json_has_headline_fields() {
+        let mut r = EnergyReport::new(100);
+        r.add_component("c0.cores", 50);
+        let s = r.render();
+        assert!(s.contains("\"total_pj\":"), "{s}");
+        assert!(s.contains("\"by_subsystem_pj\":{\"cores\":"), "{s}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Link-utilization reports built on the always-on channel statistics.
+//!
+//! A [`LinkTap`] is a passive pair of [`Tap`]s on a bundle's two data
+//! channels (W toward the slave, R back), captured at build time before
+//! the endpoints move into their owning modules. Because one channel
+//! handshake occupies exactly one cycle (the `protocol::channel`
+//! contract), beat counts *are* busy-cycle counts, and
+//! `bytes / (cycles × beat_bytes)` is the true utilization of each
+//! direction. The report flags saturated trunks (≥ [`SATURATED_FRAC`]
+//! of peak) and idle links (zero data beats) — the heatmap a topology
+//! DSE reads to find the bottleneck bundle.
+//!
+//! Everything here derives from handshake counters, which are engine-
+//! mode- and thread-count-invariant, so the report is bit-identical
+//! across `--threads N` × event/full-scan.
+
+use crate::coordinator::report::Json;
+use crate::protocol::channel::Tap;
+use crate::protocol::payload::{RBeat, WBeat};
+use crate::protocol::port::{MasterEnd, SlaveEnd};
+use crate::sim::Cycle;
+
+/// A link counting as "saturated" carries at least this fraction of its
+/// peak duplex bandwidth.
+pub const SATURATED_FRAC: f64 = 0.8;
+
+/// Passive observer of one bundle's data channels.
+pub struct LinkTap {
+    label: String,
+    w: Tap<WBeat>,
+    r: Tap<RBeat>,
+    beat_bytes: u64,
+}
+
+impl LinkTap {
+    pub fn new(label: impl Into<String>, w: Tap<WBeat>, r: Tap<RBeat>, beat_bytes: u64) -> Self {
+        LinkTap { label: label.into(), w, r, beat_bytes }
+    }
+
+    /// Tap a bundle at its master end (before the end moves into a
+    /// module).
+    pub fn from_master(label: impl Into<String>, m: &MasterEnd) -> Self {
+        LinkTap::new(label, m.w.tap(), m.r.tap(), m.cfg.beat_bytes() as u64)
+    }
+
+    /// Tap a bundle at its slave end.
+    pub fn from_slave(label: impl Into<String>, s: &SlaveEnd) -> Self {
+        LinkTap::new(label, s.w.tap(), s.r.tap(), s.cfg.beat_bytes() as u64)
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Data beats moved (W + R handshakes).
+    pub fn data_beats(&self) -> u64 {
+        self.w.stats().handshakes + self.r.stats().handshakes
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.data_beats() * self.beat_bytes
+    }
+
+    /// Producer-side stall cycles on the two data channels.
+    pub fn stall_cycles(&self) -> u64 {
+        self.w.stats().stall_cycles + self.r.stats().stall_cycles
+    }
+
+    /// Snapshot into a [`LinkUse`] over a run of `cycles`.
+    pub fn usage(&self, cycles: Cycle) -> LinkUse {
+        let beats = self.data_beats();
+        LinkUse {
+            label: self.label.clone(),
+            beats,
+            bytes: beats * self.beat_bytes,
+            // W and R are independent channels: a fully duplex link
+            // reaches 2.0.
+            busy_frac: if cycles == 0 { 0.0 } else { beats as f64 / cycles as f64 },
+            stall_cycles: self.stall_cycles(),
+        }
+    }
+}
+
+/// One row of the utilization heatmap.
+#[derive(Debug, Clone)]
+pub struct LinkUse {
+    pub label: String,
+    pub beats: u64,
+    pub bytes: u64,
+    /// Data beats per cycle; duplex peak is 2.0.
+    pub busy_frac: f64,
+    pub stall_cycles: u64,
+}
+
+impl LinkUse {
+    pub fn saturated(&self) -> bool {
+        self.busy_frac >= SATURATED_FRAC
+    }
+
+    pub fn idle(&self) -> bool {
+        self.beats == 0
+    }
+}
+
+/// Render the heatmap: all rows plus the saturated/idle call-outs.
+pub fn link_report_json(links: &[LinkUse], cycles: Cycle) -> Json {
+    let rows = Json::Arr(
+        links
+            .iter()
+            .map(|l| {
+                Json::Obj(vec![
+                    ("label".into(), Json::Str(l.label.clone())),
+                    ("beats".into(), Json::Num(l.beats as f64)),
+                    ("bytes".into(), Json::Num(l.bytes as f64)),
+                    ("busy_frac".into(), Json::Num(l.busy_frac)),
+                    ("stall_cycles".into(), Json::Num(l.stall_cycles as f64)),
+                ])
+            })
+            .collect(),
+    );
+    let saturated = Json::Arr(
+        links.iter().filter(|l| l.saturated()).map(|l| Json::Str(l.label.clone())).collect(),
+    );
+    let idle =
+        Json::Arr(links.iter().filter(|l| l.idle()).map(|l| Json::Str(l.label.clone())).collect());
+    Json::Obj(vec![
+        ("cycles".into(), Json::Num(cycles as f64)),
+        ("links".into(), rows),
+        ("saturated".into(), saturated),
+        ("idle".into(), idle),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::payload::{Bytes, WBeat};
+    use crate::protocol::port::{bundle, BundleCfg};
+
+    #[test]
+    fn tap_counts_data_beats_and_bytes() {
+        let (m, s) = bundle("t", BundleCfg::default());
+        let tap = LinkTap::from_master("t", &m);
+        for cy in 0..4u64 {
+            m.set_now(cy);
+            s.set_now(cy);
+            if m.w.can_push() {
+                m.w.push(WBeat::full(Bytes::zeroed(8), true, 0));
+            }
+            if s.w.can_pop() {
+                s.w.pop();
+            }
+        }
+        assert_eq!(tap.data_beats(), 3, "3 pops in 4 cycles (1-cycle visibility)");
+        assert_eq!(tap.bytes(), 3 * 8);
+        let u = tap.usage(4);
+        assert!((u.busy_frac - 0.75).abs() < 1e-12);
+        assert!(!u.idle() && !u.saturated());
+    }
+
+    #[test]
+    fn report_flags_saturated_and_idle() {
+        let links = vec![
+            LinkUse { label: "hot".into(), beats: 90, bytes: 720, busy_frac: 0.9, stall_cycles: 4 },
+            LinkUse { label: "cold".into(), beats: 0, bytes: 0, busy_frac: 0.0, stall_cycles: 0 },
+        ];
+        let j = link_report_json(&links, 100).render();
+        assert!(j.contains("\"saturated\":[\"hot\"]"), "{j}");
+        assert!(j.contains("\"idle\":[\"cold\"]"), "{j}");
+    }
+}

@@ -1,0 +1,32 @@
+//! Deterministic, zero-overhead-when-disabled observability layer.
+//!
+//! Three pillars, all stamped with *simulated* cycles so every output is
+//! bit-identical across `--threads N` and across the event/full-scan
+//! engine modes:
+//!
+//! - [`trace`]: per-shard ring-buffered event traces (component busy
+//!   spans, DMA chain legs, collective steps, epoch boundaries, D2D
+//!   beats), exported as Chrome `trace_event` JSON for Perfetto.
+//! - [`energy`]: per-component active/total cycle integrals multiplied
+//!   by §3 area-model-derived dynamic/static power, plus per-byte link
+//!   energy from beat counters, rolled up per subsystem.
+//! - [`link`]: per-bundle busy-cycle/byte utilization reports built on
+//!   the always-on channel statistics taps.
+//!
+//! Determinism contract: everything reported here derives from
+//! `Activity::Active` tick counts, channel handshake counters, and
+//! simulated-cycle stamps — none of which depend on the engine mode
+//! (sleeping components tick as state-preserving no-ops by the `Idle`
+//! contract) or on the worker thread count (shard structure is fixed;
+//! threads only change which worker advances a shard). The only caveat
+//! is ring-buffer overflow: a trace that dropped events reports the
+//! drop count, and ordering of the *surviving* events is restored by
+//! sorting on mode-invariant keys at export time.
+
+pub mod energy;
+pub mod link;
+pub mod trace;
+
+pub use energy::{EnergyReport, D2D_PJ_PER_BYTE, ON_DIE_PJ_PER_BYTE};
+pub use link::{link_report_json, LinkTap, LinkUse};
+pub use trace::{chrome_trace_json, sort_events, TraceEvent, Tracer, TRACE_CAP};

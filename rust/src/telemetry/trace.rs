@@ -1,0 +1,224 @@
+//! Event tracing: per-shard ring buffers of simulated-cycle-stamped
+//! events, exported as Chrome `trace_event` JSON (viewable in Perfetto).
+//!
+//! A [`Tracer`] is a cheap `Rc` handle onto one shard's ring buffer.
+//! Components inside a shard clone it (the same single-shard-confinement
+//! rule every channel `Rc` already obeys); the engine's meter emits
+//! component busy spans into it, and instrumented components (DMA,
+//! collective unit, D2D link) emit their own domain events.
+//!
+//! Events carry only mode-invariant data: the simulated cycle stamp, the
+//! owning shard (`pid` in the Chrome format), a deterministic `tid`
+//! assigned at construction time, a name, and one integer argument.
+//! Within a cycle the *insertion* order may differ between engine modes
+//! (tick order of simultaneously-awake components is an engine detail),
+//! so [`sort_events`] restores a canonical order on mode-invariant keys
+//! before export; the export is therefore bit-identical across
+//! `--threads N` and engine modes as long as no ring overflowed (the
+//! drop count is part of the export, so an overflow is visible).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::coordinator::report::Json;
+use crate::sim::Cycle;
+
+/// Events retained per shard ring. Overflow drops *new* events (counted);
+/// sized so every test/smoke trace fits with a wide margin while a
+/// runaway multi-million-cycle trace stays bounded in memory.
+pub const TRACE_CAP: usize = 1 << 16;
+
+/// One trace event: a span (`dur > 0`) or an instant (`dur == 0`), both
+/// rendered as Chrome `"ph":"X"` complete events.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Simulated cycle of the event start.
+    pub ts: Cycle,
+    /// Span length in cycles (0 = instant).
+    pub dur: Cycle,
+    /// Owning shard (Chrome `pid`).
+    pub shard: u32,
+    /// Deterministic lane within the shard (Chrome `tid`).
+    pub tid: u32,
+    pub name: String,
+    /// One integer argument (handle, byte count, group count, ...).
+    pub arg: u64,
+}
+
+struct TraceBuf {
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+/// Cloneable handle onto one shard's trace ring.
+#[derive(Clone)]
+pub struct Tracer {
+    buf: Rc<RefCell<TraceBuf>>,
+    shard: u32,
+    tid: u32,
+}
+
+impl Tracer {
+    pub fn new(shard: u32) -> Self {
+        Tracer {
+            buf: Rc::new(RefCell::new(TraceBuf { events: Vec::new(), dropped: 0 })),
+            shard,
+            tid: 0,
+        }
+    }
+
+    /// A handle onto the same ring stamping a fixed `tid` (one lane per
+    /// instrumented component, assigned in construction order).
+    pub fn with_tid(&self, tid: u32) -> Self {
+        Tracer { buf: self.buf.clone(), shard: self.shard, tid }
+    }
+
+    pub fn shard(&self) -> u32 {
+        self.shard
+    }
+
+    /// Record a span of `dur` cycles starting at `ts`.
+    pub fn span(&self, ts: Cycle, dur: Cycle, name: &str, arg: u64) {
+        self.push(TraceEvent { ts, dur, shard: self.shard, tid: self.tid, name: name.into(), arg });
+    }
+
+    /// Record an instant event.
+    pub fn instant(&self, ts: Cycle, name: &str, arg: u64) {
+        self.span(ts, 0, name, arg);
+    }
+
+    /// Span with an explicit lane (used by the engine meter, which lanes
+    /// spans by component slot index).
+    pub fn span_on(&self, tid: u32, ts: Cycle, dur: Cycle, name: &str, arg: u64) {
+        self.push(TraceEvent { ts, dur, shard: self.shard, tid, name: name.into(), arg });
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        let mut b = self.buf.borrow_mut();
+        if b.events.len() < TRACE_CAP {
+            b.events.push(ev);
+        } else {
+            b.dropped += 1;
+        }
+    }
+
+    /// Account events a producer discarded before they reached the ring
+    /// (e.g. the engine meter's bounded span list).
+    pub fn note_dropped(&self, n: u64) {
+        self.buf.borrow_mut().dropped += n;
+    }
+
+    /// Take all buffered events (and the drop count), leaving the ring
+    /// empty. Main-thread-only, between runs.
+    pub fn drain(&self) -> (Vec<TraceEvent>, u64) {
+        let mut b = self.buf.borrow_mut();
+        let dropped = b.dropped;
+        b.dropped = 0;
+        (std::mem::take(&mut b.events), dropped)
+    }
+
+    /// Buffered event count (tests / overflow checks).
+    pub fn len(&self) -> usize {
+        self.buf.borrow().events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Canonical event order: every key is mode- and thread-count-invariant,
+/// so the sorted stream is deterministic even though insertion order
+/// within a cycle is not.
+pub fn sort_events(events: &mut [TraceEvent]) {
+    events.sort_by(|a, b| {
+        (a.ts, a.shard, a.tid, &a.name, a.dur, a.arg)
+            .cmp(&(b.ts, b.shard, b.tid, &b.name, b.dur, b.arg))
+    });
+}
+
+/// Render a Chrome `trace_event` JSON document. `ts`/`dur` are emitted
+/// in the format's microsecond field, one simulated cycle per
+/// microsecond — Perfetto's time axis then reads directly in cycles.
+pub fn chrome_trace_json(events: &[TraceEvent], dropped: u64) -> String {
+    let evs: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            Json::Obj(vec![
+                ("name".into(), Json::Str(e.name.clone())),
+                ("ph".into(), Json::Str("X".into())),
+                ("ts".into(), Json::Num(e.ts as f64)),
+                ("dur".into(), Json::Num(e.dur as f64)),
+                ("pid".into(), Json::Num(e.shard as f64)),
+                ("tid".into(), Json::Num(e.tid as f64)),
+                ("args".into(), Json::Obj(vec![("v".into(), Json::Num(e.arg as f64))])),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("traceEvents".into(), Json::Arr(evs)),
+        ("displayTimeUnit".into(), Json::Str("ms".into())),
+        ("droppedEvents".into(), Json::Num(dropped as f64)),
+    ])
+    .render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_and_instants_round_trip() {
+        let t = Tracer::new(3);
+        t.span(10, 5, "busy", 0);
+        t.with_tid(7).instant(12, "beat", 64);
+        let (mut evs, dropped) = t.drain();
+        assert_eq!(dropped, 0);
+        assert_eq!(evs.len(), 2);
+        sort_events(&mut evs);
+        assert_eq!(evs[0].name, "busy");
+        assert_eq!(evs[0].shard, 3);
+        assert_eq!(evs[1].tid, 7);
+        assert_eq!(evs[1].dur, 0);
+        assert!(t.is_empty(), "drain empties the ring");
+    }
+
+    #[test]
+    fn overflow_drops_and_counts() {
+        let t = Tracer::new(0);
+        for i in 0..(TRACE_CAP as u64 + 10) {
+            t.instant(i, "e", 0);
+        }
+        let (evs, dropped) = t.drain();
+        assert_eq!(evs.len(), TRACE_CAP);
+        assert_eq!(dropped, 10);
+    }
+
+    #[test]
+    fn sort_is_insertion_order_invariant() {
+        let mk = |order: &[usize]| {
+            let evs = [
+                TraceEvent { ts: 5, dur: 1, shard: 0, tid: 2, name: "a".into(), arg: 0 },
+                TraceEvent { ts: 5, dur: 0, shard: 0, tid: 1, name: "b".into(), arg: 0 },
+                TraceEvent { ts: 4, dur: 9, shard: 1, tid: 0, name: "c".into(), arg: 0 },
+            ];
+            let mut v: Vec<TraceEvent> = order.iter().map(|&i| evs[i].clone()).collect();
+            sort_events(&mut v);
+            v
+        };
+        assert_eq!(mk(&[0, 1, 2]), mk(&[2, 1, 0]));
+        assert_eq!(mk(&[0, 1, 2]), mk(&[1, 2, 0]));
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let t = Tracer::new(1);
+        t.span(2, 3, "x\"y", 7);
+        let (evs, dropped) = t.drain();
+        let j = chrome_trace_json(&evs, dropped);
+        assert!(j.contains("\"traceEvents\":["), "{j}");
+        assert!(j.contains("\"ph\":\"X\""), "{j}");
+        assert!(j.contains("\"name\":\"x\\\"y\""), "{j}");
+        assert!(j.contains("\"droppedEvents\":0"), "{j}");
+    }
+}

@@ -1,0 +1,97 @@
+//! Tier-1 telemetry gates.
+//!
+//! The observability layer's contract is that every artifact — Chrome
+//! trace JSON, energy report, link-utilization report — is stamped with
+//! *simulated* cycles and derived from mode-invariant counters, so the
+//! rendered bytes are identical for every `--threads N` and for both the
+//! event and full-scan engine modes. These tests hold that contract on a
+//! 4-chiplet pod (the tentpole acceptance gate) and pin the energy
+//! ledger's exact integer-femtojoule conservation.
+
+use noc::collective::{Algo, CollOp};
+use noc::manticore::chiplet::{Chiplet, ChipletCfg};
+use noc::manticore::pod::{run_pod_collective, Pod, PodCfg};
+use noc::manticore::workload::run_collective;
+use noc::noc::d2d::D2DCfg;
+use noc::sim::EngineOpts;
+use noc::telemetry::chrome_trace_json;
+
+fn tiny_die() -> ChipletCfg {
+    ChipletCfg { fanout: vec![2], ..ChipletCfg::small() }
+}
+
+fn test_d2d() -> D2DCfg {
+    D2DCfg { latency: 4, credits: 32, serialize: 2 }
+}
+
+/// One telemetry-enabled pod all-reduce; returns the three rendered
+/// artifacts (trace JSON, energy JSON, link JSON) for byte comparison.
+fn pod_artifacts(threads: usize, full_scan: bool) -> (String, String, String) {
+    let mut die = tiny_die();
+    die.engine = EngineOpts::sharded(threads, 8);
+    die.engine.full_scan = full_scan;
+    die.engine.telemetry = true;
+    let mut pod = Pod::new(PodCfg { n_chiplets: 4, die, d2d: test_d2d() });
+    let r = run_pod_collective(&mut pod, 2048, 2_000_000, true).unwrap();
+    assert!(r.finished && r.correct, "threads={threads} full_scan={full_scan}");
+    let (events, dropped) = pod.take_trace_events();
+    assert!(!events.is_empty(), "telemetry-on pod run must record trace events");
+    let energy = pod.energy_report().render();
+    let links = pod.link_report().render();
+    (chrome_trace_json(&events, dropped), energy, links)
+}
+
+#[test]
+fn pod_telemetry_bit_identical_across_threads_and_modes() {
+    let baseline = pod_artifacts(1, false);
+    for (threads, full_scan) in [(2, false), (4, false), (1, true), (4, true)] {
+        let got = pod_artifacts(threads, full_scan);
+        let ctx = format!("threads={threads} full_scan={full_scan}");
+        assert_eq!(baseline.0, got.0, "trace JSON differs: {ctx}");
+        assert_eq!(baseline.1, got.1, "energy report differs: {ctx}");
+        assert_eq!(baseline.2, got.2, "link report differs: {ctx}");
+    }
+}
+
+#[test]
+fn chiplet_energy_ledger_balances_exactly() {
+    let mut cfg = ChipletCfg::small();
+    cfg.engine = EngineOpts::sharded(2, 8);
+    cfg.engine.telemetry = true;
+    let mut ch = Chiplet::new(cfg);
+    let res = run_collective(&mut ch, CollOp::AllReduce, Algo::Ring, 4096, 10_000_000).unwrap();
+    assert!(res.finished && res.correct);
+    assert!(res.energy_pj > 0.0, "telemetry-on collective must report op energy");
+    assert!(res.energy_per_byte_pj > 0.0);
+
+    // Integer-femtojoule storage: every rollup view of the report sums
+    // to exactly the same total — equality, not approximate closeness.
+    let e = ch.energy_report();
+    assert!(e.total_fj() > 0);
+    let line_sum: u64 = e.comps.iter().map(|c| c.dyn_fj + c.static_fj).sum::<u64>()
+        + e.links.iter().map(|l| l.fj).sum::<u64>();
+    assert_eq!(line_sum, e.total_fj(), "per-line sum must equal the total");
+    let sub_sum: u64 = e.by_subsystem().iter().map(|(_, fj)| fj).sum();
+    assert_eq!(sub_sum, e.total_fj(), "per-subsystem rollup must equal the total");
+    assert_eq!(
+        e.dynamic_fj() + e.static_fj() + e.link_fj(),
+        e.total_fj(),
+        "dyn/static/link split must equal the total"
+    );
+}
+
+#[test]
+fn telemetry_off_is_off() {
+    // The default build must pay nothing and report nothing: no meters,
+    // no trace events, a zero-total energy report, and no link rows.
+    let mut ch = Chiplet::new(ChipletCfg::small());
+    let res = run_collective(&mut ch, CollOp::AllReduce, Algo::Ring, 1024, 10_000_000).unwrap();
+    assert!(res.finished && res.correct);
+    assert!(!ch.telemetry_enabled());
+    assert_eq!(res.energy_pj, 0.0);
+    let (events, dropped) = ch.take_trace_events();
+    assert!(events.is_empty() && dropped == 0);
+    assert_eq!(ch.energy_report().total_fj(), 0);
+    // Chain latency is a plain histogram bump, recorded regardless.
+    assert!(res.chain_latency.count() > 0);
+}

@@ -9,6 +9,8 @@ Most tracked metrics are higher-is-better throughputs gated on relative
 change (>20% drop fails, unless the entry carries a looser threshold).
 Entries with mode="abs-increase" are lower-is-better fractions gated on
 absolute growth instead (a ratio on a near-zero baseline is noise).
+Entries with mode="drift" are direction-less deterministic values (the
+telemetry energy metrics) gated on relative movement either way.
 Entries with a "condition" key are only compared when that metric (e.g.
 the sharded thread count) is identical in both artifacts — comparing an
 8-thread efficiency against a 4-thread baseline would be meaningless.
@@ -83,8 +85,38 @@ TRACKED = [
     # asserts hierarchical >= flat-ring at 4 chiplets.
     {"file": "BENCH_multichip.json", "key": "d2d_allreduce_bytes_per_cycle"},
     {"file": "BENCH_multichip.json", "key": "hier_over_flat_speedup"},
+    # Telemetry energy accounting: deterministic simulated values (active
+    # cycles x area-model power + per-byte link energy), so they move
+    # only when the model or the schedule changes. Neither direction is
+    # "better" — mode="drift" fails on a large swing either way, forcing
+    # an intentional recalibration to show up in review instead of
+    # sliding through silently.
+    {
+        "file": "BENCH_collective.json",
+        "key": "allreduce_energy_pj",
+        "threshold": 0.50,
+        "mode": "drift",
+    },
+    {
+        "file": "BENCH_collective.json",
+        "key": "energy_per_byte_pj",
+        "threshold": 0.50,
+        "mode": "drift",
+    },
+    {
+        "file": "BENCH_tab2_manticore.json",
+        "key": "energy_per_inference_pj",
+        "threshold": 0.50,
+        "mode": "drift",
+    },
 ]
 THRESHOLD = 0.20
+
+# Hard gate on the fresh artifact (no baseline needed): wall-clock cost
+# of running with telemetry attached, as a fraction over the untraced
+# run (best-of-3 each, measured by the tab2 bench). The layer's pitch is
+# "attachable in CI by default", which only holds while this stays small.
+MAX_TELEMETRY_OVERHEAD = 0.05
 
 # The parallel_efficiency gate must be measured at real scale: fail if
 # the fresh tab2 artifact ran its sharded section below this many worker
@@ -140,6 +172,30 @@ def check_sharded_threads(new_dir: Path, failures):
         print(f"{fname}: sharded_threads = {threads:g} (gate >= {MIN_SHARDED_THREADS}) ok")
 
 
+def check_telemetry_overhead(new_dir: Path, failures):
+    """Hard gate: telemetry attach cost stays under MAX_TELEMETRY_OVERHEAD."""
+    fname = "BENCH_tab2_manticore.json"
+    new_file = new_dir / fname
+    if not new_file.exists():
+        return  # the tracked-metric loop reports the missing file
+    new_metrics = metrics(new_file)
+    if new_metrics is None:
+        return  # likewise
+    frac = new_metrics.get("telemetry_overhead_frac")
+    if frac is None:
+        failures.append(f"{fname}: telemetry_overhead_frac missing from fresh results")
+    elif frac > MAX_TELEMETRY_OVERHEAD:
+        failures.append(
+            f"{fname}: telemetry_overhead_frac = {frac:.3f}, gate "
+            f"<= {MAX_TELEMETRY_OVERHEAD:.2f}"
+        )
+    else:
+        print(
+            f"{fname}: telemetry_overhead_frac = {frac:.3f} "
+            f"(gate <= {MAX_TELEMETRY_OVERHEAD:.2f}) ok"
+        )
+
+
 def main(argv):
     if len(argv) != 3:
         print(__doc__)
@@ -147,6 +203,7 @@ def main(argv):
     prev_dir, new_dir = Path(argv[1]), Path(argv[2])
     failures = []
     check_sharded_threads(new_dir, failures)
+    check_telemetry_overhead(new_dir, failures)
     if not prev_dir.is_dir():
         print(f"no previous bench artifact at {prev_dir}; skipping trend check")
         if failures:
@@ -208,6 +265,24 @@ def main(argv):
             if regressed:
                 failures.append(
                     f"{fname}:{key} grew {change:+.3f} ({prev:.4g} -> {new:.4g})"
+                )
+            continue
+        if mode == "drift":
+            # Deterministic simulated value with no better/worse
+            # direction: gate on relative movement either way.
+            if prev <= 0:
+                print(f"{fname}:{key}: no positive previous value, skipping")
+                continue
+            change = (new - prev) / prev
+            regressed = abs(change) > threshold
+            print(
+                f"{fname}:{key}: {prev:.4g} -> {new:.4g} "
+                f"({change:+.1%}, drift gate ±{threshold:.0%}) "
+                f"{'REGRESSION' if regressed else 'ok'}"
+            )
+            if regressed:
+                failures.append(
+                    f"{fname}:{key} drifted {change:+.1%} ({prev:.4g} -> {new:.4g})"
                 )
             continue
         if prev <= 0:
