@@ -1,0 +1,153 @@
+//! Fault injection & recovery costs (`fault`, `noc::d2d`, `noc::dma`).
+//!
+//! Headline metric: `faulty_link_goodput_frac` — the fraction of a
+//! clean link's hierarchical all-reduce goodput a 4-chiplet pod retains
+//! when every D2D link corrupts data beats at a 1e-3 per-beat rate and
+//! the CRC + replay layer recovers them — recorded in `BENCH_fault.json`
+//! and tracked by `scripts/check_bench_trend.py`. The bench hard-asserts
+//! the acceptance gate (>= 0.70) and that the result stays element-wise
+//! exact; injection is seeded and rolled only on beat events, so every
+//! number here is deterministic.
+//!
+//! Also measured: the same fraction at an aggressive 1e-2 rate (the
+//! knee of the replay protocol), and `dma_retry_overhead_frac` — the
+//! cycle cost of riding out a transient SLVERR window through the DMA's
+//! bounded-backoff retry path, relative to a clean copy.
+
+use noc::bench_harness::{quick, section, Report};
+use noc::fault::{BeatFaultKind, FaultPlan, SlvErrWindow};
+use noc::manticore::chiplet::ChipletCfg;
+use noc::manticore::pod::{run_pod_collective, Pod, PodCfg, PodCollectiveResult};
+use noc::noc::d2d::D2DCfg;
+use noc::noc::dma::{Dma, DmaRetryCfg, TransferReq};
+use noc::noc::mem_duplex::{BankArray, MemDuplex};
+use noc::protocol::{bundle, BundleCfg, Resp};
+use noc::sim::{Component, EngineOpts};
+
+const BUDGET: u64 = 50_000_000;
+
+fn die() -> ChipletCfg {
+    let fanout = if quick() { vec![2] } else { vec![2, 2] };
+    let engine = EngineOpts::sharded(4, 8);
+    ChipletCfg { fanout, engine, ..ChipletCfg::full() }
+}
+
+fn payload() -> u64 {
+    if quick() {
+        16 * 1024
+    } else {
+        32 * 1024
+    }
+}
+
+/// One 4-chiplet hierarchical all-reduce; returns the result plus the
+/// pod-wide (retransmits, dropped) counters.
+fn run_pod(fault: Option<FaultPlan>, label: &str) -> (PodCollectiveResult, u64, u64) {
+    let mut pod = Pod::new(PodCfg {
+        n_chiplets: 4,
+        die: die(),
+        d2d: D2DCfg::default(),
+        fault,
+        watchdog: 0,
+    });
+    let r = run_pod_collective(&mut pod, payload(), BUDGET, true).expect("pod collective builds");
+    assert!(r.finished, "{label}: all-reduce must finish");
+    assert!(r.correct, "{label}: all-reduce must stay element-wise exact");
+    let (mut retr, mut drops) = (0u64, 0u64);
+    for d in &pod.dies {
+        for (_, c) in &d.d2d {
+            retr += c.retransmits();
+            drops += c.dropped();
+        }
+    }
+    (r, retr, drops)
+}
+
+/// A 4 KiB DMA copy against a duplex memory controller; returns the
+/// completion cycle, retry count, and merged response. `window` arms a
+/// transient SLVERR on the destination range that the retry path must
+/// ride out.
+fn dma_copy(window: Option<SlvErrWindow>) -> (u64, u64, Resp) {
+    let cfg = BundleCfg::new(64, 4);
+    let (m, s) = bundle("bench.dma", cfg);
+    let banks = BankArray::new(0, 1 << 20, 4, 8, 1);
+    let mut dma =
+        Dma::new("bench.dma", m).with_retry(DmaRetryCfg { max_retries: 16, backoff_cycles: 64 });
+    let mut mem = MemDuplex::new("bench.mem", s, banks);
+    if let Some(w) = window {
+        mem.set_fault_window(w);
+    }
+    let data: Vec<u8> = (0..4096).map(|i| (i * 7 % 251) as u8).collect();
+    mem.banks.borrow_mut().poke(0x1000, &data);
+    let h = dma.submit(TransferReq::OneD { src: 0x1000, dst: 0x40_000, len: 4096 });
+    let mut cy = 0u64;
+    let resp = loop {
+        cy += 1;
+        assert!(cy < 1_000_000, "bench copy must complete");
+        dma.tick(cy);
+        mem.tick(cy);
+        if let Some(r) = dma.take_completed_with_resp(h, cy + 2) {
+            break r;
+        }
+    };
+    assert_eq!(mem.banks.borrow().peek_vec(0x40_000, 4096), data, "copy must be byte-exact");
+    (cy, dma.retries, resp)
+}
+
+fn main() {
+    let mut report = Report::new("fault");
+    let bytes = payload();
+
+    section(&format!("4-chiplet pod, {bytes} B hierarchical all-reduce, default D2D link"));
+    let (clean, _, _) = run_pod(None, "clean");
+    println!(
+        "{:<34} {:>9} cycles  {:>7.2} B/cycle",
+        "clean link", clean.cycles, clean.bytes_per_cycle
+    );
+    for (label, rate, key, headline) in [
+        ("1e-3 corrupt (headline)", 1e-3, "faulty_link_goodput_frac", true),
+        ("1e-2 corrupt (stress)", 1e-2, "faulty_link_goodput_frac_1e2", false),
+    ] {
+        let plan = FaultPlan::beat_errors(1, rate, BeatFaultKind::Corrupt);
+        let (r, retr, drops) = run_pod(Some(plan), label);
+        let frac = r.bytes_per_cycle / clean.bytes_per_cycle;
+        println!(
+            "{label:<34} {:>9} cycles  {:>7.2} B/cycle  ({:.0}% of clean, \
+             {retr} replays, {drops} drops)",
+            r.cycles,
+            r.bytes_per_cycle,
+            100.0 * frac
+        );
+        report.metric(key, frac);
+        if headline {
+            assert!(
+                frac >= 0.70,
+                "acceptance gate: goodput at 1e-3 must stay >= 70% of clean, got {:.0}%",
+                100.0 * frac
+            );
+            report.metric("faulty_link_retransmits", retr as f64);
+        }
+    }
+
+    section("transient SLVERR window ridden out by DMA retry (4 KiB copy)");
+    let (clean_cy, r0, resp0) = dma_copy(None);
+    assert_eq!((r0, resp0), (0, Resp::Okay), "clean copy must not retry");
+    let (faulty_cy, retries, resp) = dma_copy(Some(SlvErrWindow {
+        base: 0x40_000,
+        len: 4096,
+        until: Some(clean_cy * 2),
+    }));
+    assert_eq!(resp, Resp::Okay, "retry must eventually succeed past the window");
+    assert!(retries >= 1, "the window must force at least one retry");
+    let overhead = (faulty_cy as f64 - clean_cy as f64) / clean_cy as f64;
+    println!(
+        "clean {clean_cy} cycles; window until {} -> {faulty_cy} cycles, {retries} retries \
+         ({:+.0}% overhead)",
+        clean_cy * 2,
+        100.0 * overhead
+    );
+    report.metric("dma_retry_overhead_frac", overhead);
+    report.metric("dma_retries", retries as f64);
+
+    report.finish();
+}

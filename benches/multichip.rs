@@ -38,7 +38,8 @@ fn payload() -> u64 {
 }
 
 fn run(chiplets: usize, d2d: D2DCfg, bytes: u64, hier: bool) -> PodCollectiveResult {
-    let mut pod = Pod::new(PodCfg { n_chiplets: chiplets, die: die(), d2d });
+    let mut pod =
+        Pod::new(PodCfg { n_chiplets: chiplets, die: die(), d2d, fault: None, watchdog: 0 });
     let r = run_pod_collective(&mut pod, bytes, BUDGET, hier).expect("pod collective builds");
     assert!(r.finished, "pod all-reduce (chiplets={chiplets}, hier={hier}) must finish");
     assert!(r.correct, "pod all-reduce (chiplets={chiplets}, hier={hier}) must be exact");

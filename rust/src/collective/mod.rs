@@ -45,7 +45,7 @@ pub use schedule::{
     build, build_hier_allreduce, build_with_base, hierarchical_order, pod_hierarchical_order,
     Algo, Built, CollCfg, CollCfgBuilder, CollOp, Elem,
 };
-pub use unit::{CollStats, CollectiveUnit, REDUCE_BYTES_PER_CYCLE};
+pub use unit::{CollError, CollStats, CollectiveUnit, REDUCE_BYTES_PER_CYCLE};
 
 /// One step of a rank's collective program, executed in order by its
 /// [`CollectiveUnit`].

@@ -30,8 +30,33 @@ use crate::collective::schedule::Elem;
 use crate::collective::{CollStep, RankSchedule};
 use crate::noc::dma::Dma;
 use crate::noc::mem_duplex::MemDuplex;
+use crate::protocol::Resp;
 use crate::sim::{Activity, Component, ComponentId, Cycle, LatencyStats, WakeSet};
 use crate::telemetry::Tracer;
+
+/// Typed failure of a collective program. Instead of silently
+/// committing wrong data (a reduce over an errored chain) or hanging on
+/// a flag that will never land, the unit aborts the remaining steps,
+/// drains what is in flight, and reports one of these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollError {
+    /// A DMA chain this rank submitted completed with an error response.
+    Dma {
+        rank: usize,
+        handle: u64,
+        resp: Resp,
+    },
+}
+
+impl std::fmt::Display for CollError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CollError::Dma { rank, handle, resp } => {
+                write!(f, "rank {rank}: DMA chain {handle} completed with {resp:?}")
+            }
+        }
+    }
+}
 
 /// Cluster reduction rate: the eight FPUs issue two 64-bit ops per cycle
 /// (the FMA rate the workload model uses), i.e. 16 element sums moving
@@ -50,6 +75,10 @@ pub struct CollStats {
     pub chains_submitted: u64,
     /// Cycles spent busy in reductions.
     pub reduce_cycles: u64,
+    /// Chains that completed with an error response (aborting their
+    /// program). Part of the fingerprint: error paths must be as
+    /// deterministic as clean ones.
+    pub errors: u64,
 }
 
 pub struct CollectiveUnit {
@@ -73,6 +102,8 @@ pub struct CollectiveUnit {
     /// Submit-to-drain latency of every DMA chain this rank issued
     /// (p50/p99 feed the collective benchmark report).
     pub chain_latency: LatencyStats,
+    /// First error of the current/last program (`None` = clean).
+    error: Option<CollError>,
     tracer: Option<Tracer>,
     waker: Option<(WakeSet, ComponentId)>,
 }
@@ -96,9 +127,16 @@ impl CollectiveUnit {
             op_started: None,
             stats: CollStats::default(),
             chain_latency: LatencyStats::new(),
+            error: None,
             tracer: None,
             waker: None,
         }
+    }
+
+    /// The first error of the current (or most recently finished)
+    /// program, if any. Cleared on the next [`CollectiveUnit::submit`].
+    pub fn error(&self) -> Option<CollError> {
+        self.error
     }
 
     /// Attach a telemetry tracer. Events carry simulated cycles only, so
@@ -120,6 +158,7 @@ impl CollectiveUnit {
             }
         }
         self.steps = sched.steps;
+        self.error = None;
         self.op_in_flight = !self.steps.is_empty();
         if !self.op_in_flight {
             self.stats.ops_completed += 1; // trivial program (n = 1)
@@ -173,6 +212,17 @@ impl Component for CollectiveUnit {
         self.dma.borrow_mut().bind_completion_waker(wake, id);
     }
 
+    fn debug_state(&self) -> Option<String> {
+        Some(format!(
+            "steps={} pending_chains={} busy_until={} ops_done={} errors={}",
+            self.steps.len(),
+            self.pending.len(),
+            self.busy_until,
+            self.stats.ops_completed,
+            self.stats.errors
+        ))
+    }
+
     fn tick(&mut self, cy: Cycle) -> Activity {
         if self.op_in_flight && self.op_started.is_none() {
             self.op_started = Some(cy);
@@ -182,23 +232,41 @@ impl Component for CollectiveUnit {
         }
         loop {
             if !self.pending.is_empty() {
-                // `take_completed` consumes the stamp so the DMA's
-                // per-handle bookkeeping stays bounded over long runs.
-                let mut dma = self.dma.borrow_mut();
-                let lat = &mut self.chain_latency;
-                let tracer = &self.tracer;
-                let name = &self.name;
-                self.pending.retain(|&(h, t0)| {
-                    if dma.take_completed(h, cy) {
-                        lat.record(cy - t0);
-                        if let Some(tr) = tracer {
-                            tr.span(t0, cy - t0, &format!("{name}.chain"), h);
+                // `take_completed_with_resp` consumes the stamp so the
+                // DMA's per-handle bookkeeping stays bounded over long
+                // runs, and carries the chain's merged error response.
+                let mut done: Vec<(u64, Cycle, Resp)> = Vec::new();
+                {
+                    let mut dma = self.dma.borrow_mut();
+                    self.pending.retain(|&(h, t0)| match dma.take_completed_with_resp(h, cy) {
+                        Some(resp) => {
+                            done.push((h, t0, resp));
+                            false
                         }
-                        false
-                    } else {
-                        true
+                        None => true,
+                    });
+                }
+                for (h, t0, resp) in done {
+                    self.chain_latency.record(cy - t0);
+                    if let Some(tr) = &self.tracer {
+                        tr.span(t0, cy - t0, &format!("{}.chain", self.name), h);
                     }
-                });
+                    if resp != Resp::Okay {
+                        self.stats.errors += 1;
+                        if self.error.is_none() {
+                            self.error =
+                                Some(CollError::Dma { rank: self.rank, handle: h, resp });
+                        }
+                    }
+                }
+                if self.error.is_some() && !self.steps.is_empty() {
+                    // Abort the rest of the program: a reduce over (or a
+                    // wait on) data an errored chain was supposed to
+                    // deliver would commit garbage or hang forever. The
+                    // in-flight chains still drain below, then the op
+                    // completes with `error()` set.
+                    self.steps.clear();
+                }
             }
             match self.steps.front() {
                 None => {
@@ -385,6 +453,32 @@ mod tests {
         let op = evs.iter().find(|e| e.name == "coll.op").expect("op span");
         assert!(op.dur >= chain.dur, "op span covers its chains");
         assert_eq!(op.arg, 1, "first completed op");
+    }
+
+    #[test]
+    fn errored_chain_aborts_program_with_typed_error() {
+        use crate::fault::SlvErrWindow;
+        let (mut e, d, unit, mem) = rig();
+        mem.borrow().banks.borrow_mut().poke(0x1000, &[5u8; 64]);
+        // Permanent fault at the destination: the chain's B responses
+        // carry SLVERR, so the program must abort — not hang on the
+        // flag below, which the failed chain would never set honestly.
+        mem.borrow_mut().set_fault_window(SlvErrWindow { base: 0x3000, len: 0x100, until: None });
+        let mut sched = RankSchedule::default();
+        sched.steps.push_back(CollStep::Send {
+            xfers: vec![TransferReq::OneD { src: 0x1000, dst: 0x3000, len: 64 }],
+        });
+        sched.steps.push_back(CollStep::WaitFlag { addr: 0x6000, expect: 0xFFFF });
+        sched.steps.push_back(CollStep::WaitDrain);
+        unit.borrow_mut().submit(sched);
+        let done = e.run_until(d, 20_000, || unit.borrow().done());
+        assert!(done, "errored program must complete instead of hanging");
+        let err = unit.borrow().error().expect("typed error surfaced");
+        let CollError::Dma { rank, resp, .. } = err;
+        assert_eq!(rank, 0);
+        assert_eq!(resp, Resp::SlvErr);
+        assert_eq!(unit.borrow().stats.errors, 1);
+        assert_eq!(unit.borrow().stats.ops_completed, 1, "op completes, with error");
     }
 
     #[test]

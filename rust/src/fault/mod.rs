@@ -1,0 +1,466 @@
+//! Deterministic, seeded fault injection (and the primitives recovery is
+//! built from).
+//!
+//! A [`FaultPlan`] describes every fault a run injects:
+//!
+//! * **Beat errors** — per-beat corruption or loss on the data channels
+//!   (W/R) of `noc::d2d::Die2Die` links, at probability
+//!   [`FaultPlan::rate`]. Each link derives its own [`LinkFault`] stream
+//!   from `seed ^ fnv1a(link_name)`, and the RNG is advanced **only on
+//!   beat events** (accept and retransmit), never on idle ticks — so the
+//!   injected fault sequence is a pure function of the beat stream
+//!   through that link, which the engine already guarantees is identical
+//!   across `--threads N` and event/full-scan modes. Recovery is the
+//!   link-layer CRC + replay in `noc::d2d`.
+//! * **Dead link** — a named D2D link stops accepting and delivering at
+//!   cycle `at`. Nothing recovers from this; the point is that the run
+//!   aborts through `sim::watchdog` with a diagnostic dump instead of
+//!   spinning forever.
+//! * **SLVERR window** — memory endpoints handed the plan answer
+//!   [`crate::protocol::Resp::SlvErr`] for any burst touching
+//!   `[base, base+len)`, optionally only until cycle `until` (a
+//!   transient fault the DMA retry path can ride out).
+//!
+//! The module also hosts [`crc32`] (the link-layer checksum) and the
+//! [`rogue`] drivers — deliberately non-compliant bundle endpoints used
+//! by the *positive* protocol-monitor tests.
+
+use std::collections::HashMap;
+
+use crate::errors::{Context, Result};
+use crate::sim::{Cycle, SplitMix64};
+
+/// What happens to a data beat that draws a fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BeatFaultKind {
+    /// One payload bit is flipped in flight; the receiver's CRC check
+    /// catches it and NAKs.
+    #[default]
+    Corrupt,
+    /// The beat is lost in flight; the receiver's arrival timeout
+    /// catches it and NAKs.
+    Drop,
+}
+
+/// The fault actually injected on one beat (reported back so the link
+/// can split its `retransmits` / `dropped` counters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BeatFault {
+    Corrupted,
+    Dropped,
+}
+
+/// A named link that dies mid-run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeadLink {
+    /// `Die2Die` component name, e.g. `pod.d2d.0to1`.
+    pub link: String,
+    /// First cycle the link is dead (accepts and delivers nothing).
+    pub at: Cycle,
+}
+
+/// Address window a faulted memory endpoint answers with SLVERR.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlvErrWindow {
+    pub base: u64,
+    pub len: u64,
+    /// Fault clears at this cycle (`None` = permanent). A transient
+    /// window exercises the DMA retry path end to end; a permanent one
+    /// exercises the bounded-abort path.
+    pub until: Option<Cycle>,
+}
+
+impl SlvErrWindow {
+    /// Whether a beat at `addr` on cycle `cy` hits the (still-armed)
+    /// window.
+    pub fn hits(&self, addr: u64, cy: Cycle) -> bool {
+        self.until.map_or(true, |t| cy < t)
+            && addr >= self.base
+            && addr < self.base.wrapping_add(self.len)
+    }
+}
+
+/// Everything a run injects. Construct directly, or parse the CLI
+/// surface with [`FaultPlan::from_flags`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Root seed; each link folds its name in via [`fnv1a`].
+    pub seed: u64,
+    /// Per-data-beat fault probability on D2D links.
+    pub rate: f64,
+    pub kind: BeatFaultKind,
+    pub dead_link: Option<DeadLink>,
+    pub slverr: Option<SlvErrWindow>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { seed: 1, rate: 0.0, kind: BeatFaultKind::Corrupt, dead_link: None, slverr: None }
+    }
+}
+
+impl FaultPlan {
+    /// A plan that corrupts (or drops) D2D data beats at `rate`.
+    pub fn beat_errors(seed: u64, rate: f64, kind: BeatFaultKind) -> Self {
+        FaultPlan { seed, rate, kind, ..FaultPlan::default() }
+    }
+
+    /// A plan that kills one named link at `at`.
+    pub fn dead_link(link: impl Into<String>, at: Cycle) -> Self {
+        FaultPlan {
+            dead_link: Some(DeadLink { link: link.into(), at }),
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Parse the `--fault-*` CLI surface; `None` when no fault flag is
+    /// present. Flags:
+    ///
+    /// * `--fault-rate R` — per-beat D2D data-channel fault probability
+    /// * `--fault-seed S` — injection seed (default 1)
+    /// * `--fault-kind corrupt|drop|dead-link|slverr` (default corrupt)
+    /// * `--fault-link NAME --fault-at CYCLE` — dead-link target
+    /// * `--fault-addr A --fault-len N [--fault-until CYCLE]` — SLVERR
+    ///   window (addresses accept a `0x` prefix)
+    pub fn from_flags(flags: &HashMap<String, String>) -> Result<Option<FaultPlan>> {
+        let touched = ["fault-rate", "fault-seed", "fault-kind", "fault-link", "fault-addr"]
+            .iter()
+            .any(|k| flags.contains_key(*k));
+        if !touched {
+            return Ok(None);
+        }
+        let mut plan = FaultPlan::default();
+        if let Some(s) = flags.get("fault-seed") {
+            plan.seed = s.parse().context("--fault-seed must be a u64")?;
+        }
+        if let Some(r) = flags.get("fault-rate") {
+            plan.rate = r.parse().context("--fault-rate must be a probability")?;
+            crate::ensure!(
+                (0.0..1.0).contains(&plan.rate),
+                "--fault-rate must be in [0, 1), got {}",
+                plan.rate
+            );
+        }
+        let kind = flags.get("fault-kind").map(|s| s.as_str()).unwrap_or("corrupt");
+        match kind {
+            "corrupt" => plan.kind = BeatFaultKind::Corrupt,
+            "drop" => plan.kind = BeatFaultKind::Drop,
+            "dead-link" => {
+                let link = flags
+                    .get("fault-link")
+                    .context("--fault-kind dead-link requires --fault-link NAME")?
+                    .clone();
+                let at = match flags.get("fault-at") {
+                    Some(v) => v.parse().context("--fault-at must be a cycle count")?,
+                    None => 0,
+                };
+                plan.dead_link = Some(DeadLink { link, at });
+            }
+            "slverr" => {
+                let base = parse_addr(
+                    flags.get("fault-addr").context("--fault-kind slverr requires --fault-addr")?,
+                )?;
+                let len = parse_addr(
+                    flags.get("fault-len").context("--fault-kind slverr requires --fault-len")?,
+                )?;
+                let until = flags
+                    .get("fault-until")
+                    .map(|v| v.parse().context("--fault-until must be a cycle count"))
+                    .transpose()?;
+                plan.slverr = Some(SlvErrWindow { base, len, until });
+            }
+            other => crate::bail!("unknown --fault-kind: {other} (corrupt|drop|dead-link|slverr)"),
+        }
+        Ok(Some(plan))
+    }
+
+    /// The per-link injector for a named link. Seeded from
+    /// `seed ^ fnv1a(name)` so each link's fault stream is independent
+    /// of every other link's traffic — the shard-confinement that keeps
+    /// injection thread-count-invariant.
+    pub fn link_fault(&self, link_name: &str) -> LinkFault {
+        let dead_at = self
+            .dead_link
+            .as_ref()
+            .filter(|d| d.link == link_name)
+            .map(|d| d.at);
+        LinkFault {
+            rng: SplitMix64::new(self.seed ^ fnv1a(link_name.as_bytes())),
+            rate: self.rate,
+            kind: self.kind,
+            dead_at,
+        }
+    }
+}
+
+fn parse_addr(s: &str) -> Result<u64> {
+    let v = if let Some(hex) = s.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16)
+    } else {
+        s.parse()
+    };
+    v.with_context(|| format!("bad address/length: {s}"))
+}
+
+/// Per-link fault stream, derived via [`FaultPlan::link_fault`]. Owned
+/// by the link component, so it lives and rolls inside one shard.
+#[derive(Debug, Clone)]
+pub struct LinkFault {
+    rng: SplitMix64,
+    rate: f64,
+    kind: BeatFaultKind,
+    dead_at: Option<Cycle>,
+}
+
+impl LinkFault {
+    /// Whether the link is dead at `cy`.
+    pub fn dead(&self, cy: Cycle) -> bool {
+        self.dead_at.is_some_and(|t| cy >= t)
+    }
+
+    /// Whether this link is configured to die at some cycle
+    /// (diagnostics only).
+    pub fn will_die(&self) -> bool {
+        self.dead_at.is_some()
+    }
+
+    /// Roll the per-beat fault and apply it to `data` (corruption flips
+    /// one payload bit in place; the caller keeps the clean copy in its
+    /// replay buffer). Call ONLY on beat transmission events — never on
+    /// idle ticks — so the stream stays engine-mode- and thread-count-
+    /// invariant.
+    pub fn corrupt_or_drop(&mut self, data: &mut crate::protocol::payload::Bytes) -> Option<BeatFault> {
+        if self.rate <= 0.0 || !self.rng.chance(self.rate) {
+            return None;
+        }
+        match self.kind {
+            BeatFaultKind::Drop => Some(BeatFault::Dropped),
+            BeatFaultKind::Corrupt => {
+                if data.is_empty() {
+                    // Nothing to flip; model as a drop so the fault
+                    // still exists (and still NAKs).
+                    return Some(BeatFault::Dropped);
+                }
+                let bit = self.rng.below(data.len() as u64 * 8) as usize;
+                data.as_mut_slice()[bit / 8] ^= 1 << (bit % 8);
+                Some(BeatFault::Corrupted)
+            }
+        }
+    }
+}
+
+/// FNV-1a 64-bit hash (stable across runs/platforms; used to fold link
+/// names into the fault seed).
+pub fn fnv1a(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// CRC-32 (IEEE 802.3, reflected, init/final `!0`) — the link-layer
+/// checksum sealing every D2D data beat when fault injection is armed.
+/// Bitwise (no table): it only runs on faulted links' data beats.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc: u32 = !0;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Deliberately non-compliant bundle drivers, for *positive* protocol-
+/// monitor tests: each method produces exactly one class of violation
+/// the monitor must report. These never appear in a real topology.
+pub mod rogue {
+    use crate::protocol::payload::{BBeat, Bytes, Cmd, Id, Resp, TxnTag, WBeat};
+    use crate::protocol::port::{MasterEnd, SlaveEnd};
+    use crate::sim::Cycle;
+
+    /// A master that violates write ordering.
+    pub struct RogueMaster {
+        pub end: MasterEnd,
+    }
+
+    impl RogueMaster {
+        /// Push a W data beat with no AW outstanding — the (O3)
+        /// "W beat with no outstanding AW" violation.
+        pub fn w_before_aw(&self, cy: Cycle, tag: TxnTag) {
+            self.end.set_now(cy);
+            self.end.w.push(WBeat::full(Bytes::zeroed(8), true, tag));
+        }
+
+        /// A well-formed single-beat write (AW then W), for setting up
+        /// outstanding state before a rogue response.
+        pub fn clean_write(&self, cy: Cycle, id: Id, addr: u64, tag: TxnTag) {
+            self.end.set_now(cy);
+            let mut c = Cmd::new(id, addr, 0, 3);
+            c.tag = tag;
+            self.end.aw.push(c);
+            self.end.w.push(WBeat::full(Bytes::zeroed(8), true, tag));
+        }
+
+        /// Drain any responses so channels never back up.
+        pub fn drain(&self, cy: Cycle) {
+            self.end.set_now(cy);
+            while self.end.b.can_pop() {
+                self.end.b.pop();
+            }
+            while self.end.r.can_pop() {
+                self.end.r.pop();
+            }
+        }
+    }
+
+    /// A slave that violates response ordering.
+    pub struct RogueSlave {
+        pub end: SlaveEnd,
+    }
+
+    impl RogueSlave {
+        /// Absorb whatever commands/data arrived (a compliant sink).
+        pub fn absorb(&self, cy: Cycle) {
+            self.end.set_now(cy);
+            while self.end.aw.can_pop() {
+                self.end.aw.pop();
+            }
+            while self.end.w.can_pop() {
+                self.end.w.pop();
+            }
+            while self.end.ar.can_pop() {
+                self.end.ar.pop();
+            }
+        }
+
+        /// Push a B response carrying an arbitrary (id, tag) — used to
+        /// answer out of command order (the (O2) violation) or for an
+        /// ID with nothing outstanding.
+        pub fn b(&self, cy: Cycle, id: Id, tag: TxnTag) {
+            self.end.set_now(cy);
+            self.end.b.push(BBeat { id, resp: Resp::Okay, tag });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::payload::Bytes;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // One flipped bit always changes the CRC.
+        let a = crc32(&[0u8; 64]);
+        let mut buf = [0u8; 64];
+        buf[17] ^= 0x10;
+        assert_ne!(crc32(&buf), a);
+    }
+
+    #[test]
+    fn fnv1a_distinguishes_link_names() {
+        assert_ne!(fnv1a(b"pod.d2d.0to1"), fnv1a(b"pod.d2d.1to0"));
+        assert_eq!(fnv1a(b"x"), fnv1a(b"x"));
+    }
+
+    #[test]
+    fn link_fault_streams_are_per_link_and_deterministic() {
+        let plan = FaultPlan::beat_errors(7, 0.5, BeatFaultKind::Corrupt);
+        let roll = |name: &str| {
+            let mut f = plan.link_fault(name);
+            let mut out = Vec::new();
+            for _ in 0..64 {
+                let mut d = Bytes::zeroed(8);
+                out.push((f.corrupt_or_drop(&mut d).is_some(), d));
+            }
+            out
+        };
+        assert_eq!(roll("a"), roll("a"), "same link, same stream");
+        assert_ne!(roll("a"), roll("b"), "independent per-link streams");
+    }
+
+    #[test]
+    fn corrupt_flips_exactly_one_bit() {
+        let plan = FaultPlan::beat_errors(3, 1.0, BeatFaultKind::Corrupt);
+        let mut f = plan.link_fault("l");
+        for _ in 0..32 {
+            let mut d = Bytes::zeroed(16);
+            assert_eq!(f.corrupt_or_drop(&mut d), Some(BeatFault::Corrupted));
+            let ones: u32 = d.as_slice().iter().map(|b| b.count_ones()).sum();
+            assert_eq!(ones, 1, "exactly one bit flipped");
+        }
+    }
+
+    #[test]
+    fn zero_rate_never_rolls() {
+        let plan = FaultPlan::beat_errors(3, 0.0, BeatFaultKind::Drop);
+        let mut f = plan.link_fault("l");
+        for _ in 0..1000 {
+            let mut d = Bytes::zeroed(8);
+            assert_eq!(f.corrupt_or_drop(&mut d), None);
+        }
+    }
+
+    #[test]
+    fn dead_link_targets_only_the_named_link() {
+        let plan = FaultPlan::dead_link("pod.d2d.0to1", 100);
+        assert!(!plan.link_fault("pod.d2d.0to1").dead(99));
+        assert!(plan.link_fault("pod.d2d.0to1").dead(100));
+        assert!(!plan.link_fault("pod.d2d.1to0").dead(1_000_000));
+    }
+
+    #[test]
+    fn slverr_window_hits() {
+        let w = SlvErrWindow { base: 0x1000, len: 0x100, until: Some(500) };
+        assert!(w.hits(0x1000, 0));
+        assert!(w.hits(0x10FF, 499));
+        assert!(!w.hits(0x1100, 0), "past the window");
+        assert!(!w.hits(0xFFF, 0), "before the window");
+        assert!(!w.hits(0x1000, 500), "fault cleared");
+        let p = SlvErrWindow { base: 0, len: 8, until: None };
+        assert!(p.hits(4, u64::MAX), "permanent window never clears");
+    }
+
+    fn flags(pairs: &[(&str, &str)]) -> HashMap<String, String> {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn from_flags_roundtrip() {
+        assert_eq!(FaultPlan::from_flags(&flags(&[])).unwrap(), None);
+        let p = FaultPlan::from_flags(&flags(&[("fault-rate", "0.001"), ("fault-seed", "9")]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.rate, 0.001);
+        assert_eq!(p.kind, BeatFaultKind::Corrupt);
+        let p = FaultPlan::from_flags(&flags(&[
+            ("fault-kind", "dead-link"),
+            ("fault-link", "pod.d2d.0to1"),
+            ("fault-at", "1000"),
+        ]))
+        .unwrap()
+        .unwrap();
+        assert_eq!(p.dead_link, Some(DeadLink { link: "pod.d2d.0to1".into(), at: 1000 }));
+        let p = FaultPlan::from_flags(&flags(&[
+            ("fault-kind", "slverr"),
+            ("fault-addr", "0x1000"),
+            ("fault-len", "256"),
+            ("fault-until", "400"),
+        ]))
+        .unwrap()
+        .unwrap();
+        assert_eq!(p.slverr, Some(SlvErrWindow { base: 0x1000, len: 256, until: Some(400) }));
+        assert!(FaultPlan::from_flags(&flags(&[("fault-kind", "nope")])).is_err());
+        assert!(FaultPlan::from_flags(&flags(&[("fault-rate", "1.5")])).is_err());
+        assert!(FaultPlan::from_flags(&flags(&[("fault-kind", "dead-link")])).is_err());
+    }
+}

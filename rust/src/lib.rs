@@ -14,6 +14,8 @@
 //! * [`noc`] — the paper's §2 module palette: network (de)multiplexers,
 //!   crossbar, crosspoint, ID width converters, data width converters,
 //!   clock domain crossing, DMA engine, and on-chip memory controllers.
+//! * [`fault`] — deterministic seeded fault injection (D2D beat errors,
+//!   dead links, SLVERR windows) and the link-layer CRC primitive.
 //! * [`area`] — GF22FDX-calibrated analytical area/timing/power model
 //!   regenerating the paper's §3 implementation results (Figs 13–21).
 //! * [`traffic`] — workload generators and memory endpoints.
@@ -34,6 +36,7 @@ pub mod bench_harness;
 pub mod collective;
 pub mod coordinator;
 pub mod errors;
+pub mod fault;
 pub mod manticore;
 pub mod noc;
 pub mod protocol;

@@ -362,7 +362,23 @@ fn cmd_multichip(flags: &HashMap<String, String>) -> Result<()> {
     }
     let hier = !flags.contains_key("flat");
     let ranks = chiplets * die.n_clusters();
-    let mut pod = Pod::new(PodCfg { n_chiplets: chiplets, die, d2d });
+    // Seeded fault injection (--fault-seed/--fault-rate/--fault-kind/...)
+    // plus the no-progress watchdog. The watchdog arms automatically
+    // whenever a fault plan is present (a dead link must abort with a
+    // diagnosis, not burn the 50M-cycle budget); --watchdog N overrides,
+    // 0 disables.
+    let fault = noc::fault::FaultPlan::from_flags(flags)?;
+    let watchdog: u64 = match flags.get("watchdog") {
+        Some(v) => v.parse().context("--watchdog must be a cycle count (0 = off)")?,
+        None => {
+            if fault.is_some() {
+                200_000
+            } else {
+                0
+            }
+        }
+    };
+    let mut pod = Pod::new(PodCfg { n_chiplets: chiplets, die, d2d, fault, watchdog });
     let res = run_pod_collective(&mut pod, bytes, 50_000_000, hier)?;
     ensure!(res.finished, "pod all-reduce did not finish within the cycle budget");
     ensure!(res.correct, "pod all-reduce result failed verification");
@@ -380,6 +396,19 @@ fn cmd_multichip(flags: &HashMap<String, String>) -> Result<()> {
         "  {:.2} B/cycle, {} B over D2D links, result verified on every rank",
         res.bytes_per_cycle, res.d2d_bytes
     );
+    if pod.cfg.fault.is_some() {
+        let (mut retr, mut drops) = (0u64, 0u64);
+        for die in &pod.dies {
+            for (_, c) in &die.d2d {
+                retr += c.retransmits();
+                drops += c.dropped();
+            }
+        }
+        println!(
+            "  fault layer: {retr} beats replayed after CRC mismatch, {drops} after drops \
+             (payloads verified exact)"
+        );
+    }
     println!(
         "  engine: {} worker threads, {} shards (one per die)",
         pod.threads(),
@@ -449,10 +478,21 @@ fn usage() -> ! {
          \x20           [--d2d-serialize C] [--threads N] [--epoch E]\n\
          \x20           [--epoch-policy fixed|adaptive] [--pin-workers]\n\
          \x20           [--telemetry] [--trace FILE]\n\
+         \x20           [--fault-seed S] [--fault-rate R]\n\
+         \x20           [--fault-kind corrupt|drop|dead-link|slverr]\n\
+         \x20           [--fault-link NAME] [--fault-at CYCLE]\n\
+         \x20           [--fault-addr A] [--fault-len L] [--fault-until C]\n\
+         \x20           [--watchdog CYCLES]\n\
          \x20                              N-chiplet pod all-reduce over D2D\n\
          \x20                              links (hierarchical; --flat for\n\
          \x20                              the flat-ring oracle; bit-identical\n\
-         \x20                              for every --threads N >= 1)\n\
+         \x20                              for every --threads N >= 1).\n\
+         \x20                              --fault-* arms seeded injection\n\
+         \x20                              (CRC+replay recovers corrupt/drop;\n\
+         \x20                              dead-link wedges and the watchdog\n\
+         \x20                              aborts with a diagnostic dump;\n\
+         \x20                              --watchdog defaults to 200000 when\n\
+         \x20                              faults are armed, 0 = off)\n\
          \x20 e2e [--artifacts DIR]        verify PJRT compute artifacts\n\
          telemetry (all simulation commands): --telemetry attaches the\n\
          \x20 activity meters and prints energy + link-utilization reports;\n\

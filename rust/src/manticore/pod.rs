@@ -50,6 +50,7 @@ use std::rc::Rc;
 use crate::collective::{self, Algo, CollCfg, CollOp, RankSchedule};
 use crate::coordinator::report::Json;
 use crate::errors::Result;
+use crate::fault::FaultPlan;
 use crate::manticore::chiplet::ChipletCfg;
 use crate::manticore::cluster::{addr, core_net_cfg, dma_net_cfg, Cluster, ClusterHandle};
 use crate::manticore::network::{build_tree, NodeIo, TreeCfg, UplinkTap};
@@ -63,7 +64,7 @@ use crate::noc::upsizer::Upsizer;
 use crate::protocol::exchange::cut_slave_export;
 use crate::protocol::{bundle, BundleCfg, Cmd, MasterEnd, SlaveEnd};
 use crate::sim::shard::ShardedEngine;
-use crate::sim::{shared, Cycle};
+use crate::sim::{fold_signature, shared, Cycle, Verdict, Watchdog};
 use crate::telemetry::{
     link_report_json, EnergyReport, LinkTap, LinkUse, TraceEvent, D2D_PJ_PER_BYTE,
     ON_DIE_PJ_PER_BYTE,
@@ -98,12 +99,40 @@ pub struct PodCfg {
     pub die: ChipletCfg,
     /// Die-to-die link timing, shared by every link of the mesh.
     pub d2d: D2DCfg,
+    /// Seeded fault-injection plan (`None` = clean). D2D beat faults
+    /// attach to every link (each with its own name-derived stream, so
+    /// plans are thread-count- and engine-mode-invariant); an SLVERR
+    /// window arms every die's cluster L1 controllers (its address
+    /// range selects which accesses actually flag); a dead-link entry
+    /// kills the named pipe at its cycle.
+    pub fault: Option<FaultPlan>,
+    /// Watchdog no-progress window in cycles (0 = disabled). Checked at
+    /// epoch boundaries by [`Pod::run_until_guarded`].
+    pub watchdog: Cycle,
 }
 
 impl PodCfg {
     /// A CI-sized pod: N small dies (4 clusters each).
     pub fn small(n_chiplets: usize) -> Self {
-        PodCfg { n_chiplets, die: ChipletCfg::small(), d2d: D2DCfg::default() }
+        PodCfg {
+            n_chiplets,
+            die: ChipletCfg::small(),
+            d2d: D2DCfg::default(),
+            fault: None,
+            watchdog: 0,
+        }
+    }
+
+    /// Attach a fault plan.
+    pub fn with_fault(mut self, plan: FaultPlan) -> Self {
+        self.fault = Some(plan);
+        self
+    }
+
+    /// Arm the no-progress watchdog with the given window.
+    pub fn with_watchdog(mut self, window: Cycle) -> Self {
+        self.watchdog = window;
+        self
     }
 
     /// Total collective ranks (clusters) in the pod.
@@ -210,13 +239,16 @@ impl Pod {
                 }
                 let (eg_m, eg_s) = bundle(&format!("pod.d{d}.to{j}.eg"), dcfg);
                 let (lk_m, lk_s) = bundle(&format!("pod.d{d}.to{j}.lk"), dcfg);
-                let (mut pipe, ctr) = Die2Die::new(
-                    format!("pod.d2d.{d}to{j}"),
-                    cfg.d2d,
-                    podaddr::d2d_base(j),
-                    eg_s,
-                    lk_m,
-                );
+                let link_name = format!("pod.d2d.{d}to{j}");
+                let (mut pipe, ctr) =
+                    Die2Die::new(link_name.clone(), cfg.d2d, podaddr::d2d_base(j), eg_s, lk_m);
+                // Per-link fault stream, seeded from the plan seed and
+                // the link's *name* — never from shard or thread
+                // identity — so injection is invariant across
+                // `--threads N` and engine modes.
+                if let Some(plan) = &cfg.fault {
+                    pipe.set_fault(plan.link_fault(&link_name));
+                }
                 // The pipe lives in shard d; its delivered-beat trace
                 // events go to that shard's ring.
                 if let Some(tr) = eng.shard_tracer(d) {
@@ -283,6 +315,89 @@ impl Pod {
             }
         }
         false
+    }
+
+    /// Fold every monotone delivered-work counter of the pod into one
+    /// progress signature: DMA/HBM bytes, per-link D2D byte and replay
+    /// counters, collective step counters, core completions, and DMA
+    /// retry counters. Any real forward step moves at least one of
+    /// them, so two equal signatures bracketing a window mean nothing
+    /// was delivered in between.
+    pub fn progress_signature(&self) -> u64 {
+        let mut words: Vec<u64> = Vec::new();
+        for die in &self.dies {
+            words.push(die.dma_bytes());
+            words.push(die.hbm_bytes());
+            for (_, c) in &die.d2d {
+                let v = c.vals();
+                words.extend([v.w_bytes, v.r_bytes, v.retransmits, v.dropped]);
+            }
+            for cl in &die.clusters {
+                {
+                    let coll = cl.coll.borrow();
+                    words.extend([
+                        coll.stats.ops_completed,
+                        coll.stats.reduced_bytes,
+                        coll.stats.chains_submitted,
+                        coll.stats.errors,
+                    ]);
+                }
+                words.push(cl.cores.borrow().stats.completed);
+                for dma in &cl.dma {
+                    let d = dma.borrow();
+                    words.extend([d.bytes_moved, d.retries, d.aborted]);
+                }
+            }
+        }
+        fold_signature(words)
+    }
+
+    /// Human-readable dump of awake components (with their
+    /// `debug_state`) and undrained exchange links — the watchdog's
+    /// abort payload.
+    pub fn diagnostic_dump(&self) -> String {
+        self.eng.diagnostic_dump()
+    }
+
+    /// [`Pod::run_until`] with the no-progress watchdog armed (when
+    /// `cfg.watchdog > 0`). At every epoch boundary the pod folds its
+    /// monotone counters into [`Pod::progress_signature`]; if
+    /// components stay awake while the signature freezes for a full
+    /// window, the run aborts with a diagnostic dump instead of
+    /// spinning out the budget. A fully-asleep pod is *idle*, not
+    /// wedged — exactly the quiescence adaptive-epoch sprints prove at
+    /// a barrier, so sprints can never false-trigger the watchdog.
+    pub fn run_until_guarded(
+        &mut self,
+        budget: Cycle,
+        mut pred: impl FnMut(&Pod) -> bool,
+    ) -> Result<bool> {
+        let mut wd = (self.cfg.watchdog > 0).then(|| Watchdog::new(self.cfg.watchdog));
+        let mut left = budget;
+        while left > 0 {
+            let step = self.eng.to_next_exchange().min(left);
+            self.run(step);
+            left -= step;
+            if pred(self) {
+                return Ok(true);
+            }
+            if let Some(wd) = &mut wd {
+                let awake = self.awake_components();
+                if let Verdict::Wedged { stalled_for } =
+                    wd.observe(self.cycles, self.progress_signature(), awake)
+                {
+                    crate::bail!(
+                        "watchdog: no progress for {stalled_for} cycles (window {}) at cycle {}; \
+                         {awake}/{} components awake\n{}",
+                        self.cfg.watchdog,
+                        self.cycles,
+                        self.component_count(),
+                        self.diagnostic_dump()
+                    );
+                }
+            }
+        }
+        Ok(false)
     }
 
     /// Load a collective rank program onto a cluster's orchestrator
@@ -391,6 +506,7 @@ impl Pod {
                         beats as f64 / self.cycles as f64
                     },
                     stall_cycles: 0,
+                    retransmits: c.retransmits(),
                 });
             }
         }
@@ -459,6 +575,11 @@ fn build_die(
                 dma.borrow_mut().set_tracer(tr.clone());
             }
             handle.coll.borrow_mut().set_tracer(tr.clone());
+        }
+        // SLVERR windows arm the network-side L1 port of every cluster;
+        // the window's address range selects which accesses flag.
+        if let Some(w) = cfg.fault.as_ref().and_then(|p| p.slverr) {
+            handle.l1.borrow_mut().set_fault_window(w);
         }
         clusters.push(handle);
     }
@@ -687,6 +808,19 @@ pub fn pod_determinism_fingerprint(pod: &Pod) -> String {
                         ("coll_ops".into(), Json::Num(coll.stats.ops_completed as f64)),
                         ("coll_reduced".into(), Json::Num(coll.stats.reduced_bytes as f64)),
                         ("coll_chains".into(), Json::Num(coll.stats.chains_submitted as f64)),
+                        ("coll_errors".into(), Json::Num(coll.stats.errors as f64)),
+                        (
+                            "dma_retries".into(),
+                            Json::Num(
+                                c.dma.iter().map(|d| d.borrow().retries).sum::<u64>() as f64
+                            ),
+                        ),
+                        (
+                            "dma_aborted".into(),
+                            Json::Num(
+                                c.dma.iter().map(|d| d.borrow().aborted).sum::<u64>() as f64
+                            ),
+                        ),
                     ])
                 })
                 .collect();
@@ -707,11 +841,13 @@ pub fn pod_determinism_fingerprint(pod: &Pod) -> String {
                 .d2d
                 .iter()
                 .map(|(j, c)| {
-                    let (w, r) = c.bytes();
+                    let v = c.vals();
                     Json::Arr(vec![
                         Json::Num(*j as f64),
-                        Json::Num(w as f64),
-                        Json::Num(r as f64),
+                        Json::Num(v.w_bytes as f64),
+                        Json::Num(v.r_bytes as f64),
+                        Json::Num(v.retransmits as f64),
+                        Json::Num(v.dropped as f64),
                     ])
                 })
                 .collect();
@@ -807,7 +943,7 @@ pub fn run_pod_collective(
     for (g, sched) in std::mem::take(&mut built.ranks).into_iter().enumerate() {
         pod.submit_collective(g / m, g % m, sched);
     }
-    let finished = pod.run_until(budget, |p| p.all_collectives_done());
+    let finished = pod.run_until_guarded(budget, |p| p.all_collectives_done())?;
     let cycles = pod.cycles - start;
 
     let sums: Vec<u64> = (0..elems)
@@ -860,7 +996,7 @@ mod tests {
     }
 
     fn tiny_pod(n_chiplets: usize) -> Pod {
-        Pod::new(PodCfg { n_chiplets, die: tiny_die(), d2d: test_d2d() })
+        Pod::new(PodCfg { n_chiplets, die: tiny_die(), d2d: test_d2d(), fault: None, watchdog: 0 })
     }
 
     fn submit_dma(pod: &Pod, die: usize, cluster: usize, engine: usize, req: TransferReq) -> u64 {
@@ -975,7 +1111,8 @@ mod tests {
             let mut die = tiny_die();
             die.engine = EngineOpts::sharded(threads, 8);
             die.engine.full_scan = full_scan;
-            let mut pod = Pod::new(PodCfg { n_chiplets: 4, die, d2d: test_d2d() });
+            let mut pod =
+                Pod::new(PodCfg { n_chiplets: 4, die, d2d: test_d2d(), fault: None, watchdog: 0 });
             let r = run_pod_collective(&mut pod, 2048, 2_000_000, true).unwrap();
             assert!(r.finished && r.correct, "threads={threads} full_scan={full_scan}");
             pod_determinism_fingerprint(&pod)

@@ -26,10 +26,31 @@
 //! `protocol::exchange` relays (the deep off-die pipe is exactly the
 //! timing model the epoch exchange already implements), so the link
 //! component itself stays confined to the source die's shard.
+//!
+//! ## Link-layer reliability (fault injection + CRC/replay)
+//!
+//! When a [`crate::fault::LinkFault`] is attached (`set_fault`), every
+//! data beat (W/R — commands and responses are header-sized and modeled
+//! as ECC-protected) is **sealed** at the sender: it gets a sequence
+//! number and a CRC-32 over the clean payload, and the clean copy goes
+//! into a per-channel replay buffer whose window is the credit count.
+//! The injector may then corrupt one payload bit of the transmitted
+//! copy or drop the beat outright. At the scheduled arrival the
+//! receiver recomputes the CRC (a drop is caught by the arrival
+//! timeout); on mismatch it NAKs, and the sender retransmits the clean
+//! replay copy after one full round trip (`2 × latency`) — the fault is
+//! re-rolled on the retransmission, so back-to-back errors are
+//! possible. Delivery stays strictly in order (the NAK'd head blocks
+//! the pipe), an ACKed beat frees its replay slot, and the per-link
+//! `retransmits`/`dropped` counters land in [`D2DCounters`], the pod
+//! fingerprint, and the telemetry link report. With no fault attached
+//! the sealing path is skipped entirely — timing and results are
+//! bit-identical to the pre-fault link.
 
 use std::collections::VecDeque;
 
-use crate::protocol::payload::{BBeat, Cmd, RBeat, WBeat};
+use crate::fault::{crc32, BeatFault, LinkFault};
+use crate::protocol::payload::{BBeat, Bytes, Cmd, RBeat, WBeat};
 use crate::protocol::{MasterEnd, SlaveEnd};
 use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 use crate::telemetry::Tracer;
@@ -54,29 +75,71 @@ impl Default for D2DCfg {
     }
 }
 
-/// Byte counters a [`Die2Die`] link publishes to its pod (plain shared
+/// Raw counter values of one link (a `Copy` bundle so the shared cell
+/// stays a plain `Cell`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct D2DCounterVals {
+    /// Forward write-data bytes delivered.
+    pub w_bytes: u64,
+    /// Response read-data bytes delivered.
+    pub r_bytes: u64,
+    /// Data beats retransmitted after a NAK (CRC mismatch or loss).
+    pub retransmits: u64,
+    /// Data beats lost in flight (subset of the NAKs: the rest were
+    /// corrupted-but-arrived).
+    pub dropped: u64,
+}
+
+/// Counters a [`Die2Die`] link publishes to its pod (plain shared
 /// cells: the pod reads them between runs only, the same external-handle
 /// discipline as every other observer in sharded mode).
 #[derive(Clone, Default)]
 pub struct D2DCounters {
-    inner: std::rc::Rc<std::cell::Cell<(u64, u64)>>,
+    inner: std::rc::Rc<std::cell::Cell<D2DCounterVals>>,
 }
 
 impl D2DCounters {
     /// (forward write-data bytes, response read-data bytes) carried.
     pub fn bytes(&self) -> (u64, u64) {
-        self.inner.get()
+        let v = self.inner.get();
+        (v.w_bytes, v.r_bytes)
     }
 
     /// Total data bytes carried in either direction.
     pub fn total_bytes(&self) -> u64 {
-        let (w, r) = self.inner.get();
-        w + r
+        let v = self.inner.get();
+        v.w_bytes + v.r_bytes
+    }
+
+    /// Data beats retransmitted after a NAK.
+    pub fn retransmits(&self) -> u64 {
+        self.inner.get().retransmits
+    }
+
+    /// Data beats lost in flight (caught by the arrival timeout).
+    pub fn dropped(&self) -> u64 {
+        self.inner.get().dropped
+    }
+
+    /// Full snapshot.
+    pub fn vals(&self) -> D2DCounterVals {
+        self.inner.get()
     }
 
     fn add(&self, w: u64, r: u64) {
-        let (cw, cr) = self.inner.get();
-        self.inner.set((cw + w, cr + r));
+        let mut v = self.inner.get();
+        v.w_bytes += w;
+        v.r_bytes += r;
+        self.inner.set(v);
+    }
+
+    fn add_nak(&self, was_drop: bool) {
+        let mut v = self.inner.get();
+        v.retransmits += 1;
+        if was_drop {
+            v.dropped += 1;
+        }
+        self.inner.set(v);
     }
 }
 
@@ -119,6 +182,123 @@ impl<T> Pipe<T> {
     }
 }
 
+/// The payload accessor the link-layer guard needs from a data beat.
+trait DataBeat: Clone {
+    fn payload(&self) -> &Bytes;
+    fn payload_mut(&mut self) -> &mut Bytes;
+}
+
+impl DataBeat for WBeat {
+    fn payload(&self) -> &Bytes {
+        &self.data
+    }
+    fn payload_mut(&mut self) -> &mut Bytes {
+        &mut self.data
+    }
+}
+
+impl DataBeat for RBeat {
+    fn payload(&self) -> &Bytes {
+        &self.data
+    }
+    fn payload_mut(&mut self) -> &mut Bytes {
+        &mut self.data
+    }
+}
+
+/// One data beat in flight, sealed with the link-layer guard fields.
+/// On the clean path (no fault attached) `crc`/`fault` stay zeroed and
+/// only `ready`/`beat` matter.
+struct SealedBeat<T> {
+    ready: Cycle,
+    beat: T,
+    /// CRC-32 over the clean payload, computed at the sender.
+    crc: u32,
+    seq: u64,
+    /// The injected fault riding on this transmission attempt (`Dropped`
+    /// means nothing arrives; the receiver's timeout NAKs it).
+    fault: Option<BeatFault>,
+}
+
+/// What the receiver side of a data pipe did this cycle.
+enum Delivery<T> {
+    /// CRC checked out; the replay slot is freed (zero-latency ACK).
+    Deliver(T),
+    /// CRC mismatch or loss: NAK sent, clean copy scheduled to resend.
+    Nak { was_drop: bool },
+}
+
+/// Bounded latency pipe for a data channel (W/R), with the sealed
+/// replay protocol of the module docs. Identical to [`Pipe`] when no
+/// fault is attached.
+struct DataPipe<T: DataBeat> {
+    q: VecDeque<SealedBeat<T>>,
+    /// Clean copies of in-flight beats in seq order; only populated
+    /// while a fault is attached. Bounded by `credits` (the replay
+    /// window IS the credit window: `q` and `replay` advance together).
+    replay: VecDeque<(u64, T)>,
+    credits: usize,
+    next_seq: u64,
+}
+
+impl<T: DataBeat> DataPipe<T> {
+    fn new(credits: usize) -> Self {
+        DataPipe { q: VecDeque::new(), replay: VecDeque::new(), credits, next_seq: 0 }
+    }
+
+    fn can_accept(&self) -> bool {
+        self.q.len() < self.credits
+    }
+
+    /// Seal and launch a beat. Rolls the fault RNG exactly once per
+    /// accepted beat (a beat event, never an idle tick).
+    fn accept(&mut self, cy: Cycle, latency: Cycle, mut beat: T, fault: &mut Option<LinkFault>) {
+        debug_assert!(self.can_accept());
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let (crc, injected) = match fault {
+            Some(f) => {
+                let crc = crc32(beat.payload().as_slice());
+                self.replay.push_back((seq, beat.clone()));
+                (crc, f.corrupt_or_drop(beat.payload_mut()))
+            }
+            None => (0, None),
+        };
+        self.q.push_back(SealedBeat { ready: cy + latency, beat, crc, seq, fault: injected });
+    }
+
+    fn ready(&self, cy: Cycle) -> bool {
+        self.q.front().is_some_and(|f| f.ready <= cy)
+    }
+
+    /// Receive the head beat (caller checked [`DataPipe::ready`] and
+    /// downstream space). A failed CRC (or a loss caught by the arrival
+    /// timeout) NAKs: the clean replay copy is relaunched after one
+    /// round trip, with the fault re-rolled on the new transmission.
+    fn deliver(&mut self, cy: Cycle, latency: Cycle, fault: &mut Option<LinkFault>) -> Delivery<T> {
+        let head = self.q.front_mut().expect("ready checked");
+        if let Some(f) = fault {
+            let arrived = head.fault != Some(BeatFault::Dropped);
+            if !arrived || crc32(head.beat.payload().as_slice()) != head.crc {
+                let was_drop = !arrived;
+                let (seq, clean) = self.replay.front().expect("in-flight beat has a replay slot");
+                debug_assert_eq!(*seq, head.seq);
+                let mut beat = clean.clone();
+                head.fault = f.corrupt_or_drop(beat.payload_mut());
+                head.beat = beat;
+                head.ready = cy + 2 * latency;
+                return Delivery::Nak { was_drop };
+            }
+            self.replay.pop_front();
+        }
+        Delivery::Deliver(self.q.pop_front().expect("ready checked").beat)
+    }
+
+    fn len(&self) -> usize {
+        self.q.len()
+    }
+}
+
 /// The D2D link component: a five-channel slave→master bridge with
 /// flight latency, per-channel credits, data serialization, and
 /// aperture-stripping address translation (see module docs).
@@ -131,13 +311,15 @@ pub struct Die2Die {
     slave: SlaveEnd,
     master: MasterEnd,
     aw: Pipe<Cmd>,
-    w: Pipe<WBeat>,
+    w: DataPipe<WBeat>,
     ar: Pipe<Cmd>,
     b: Pipe<BBeat>,
-    r: Pipe<RBeat>,
+    r: DataPipe<RBeat>,
     /// Earliest cycle the serializer accepts the next W (resp. R) beat.
     next_w: Cycle,
     next_r: Cycle,
+    /// Fault injector (`None` = clean link, zero overhead).
+    fault: Option<LinkFault>,
     counters: D2DCounters,
     /// Telemetry handle (`None` = off): one instant per delivered data
     /// beat, stamped with the simulated delivery cycle.
@@ -170,12 +352,13 @@ impl Die2Die {
             slave,
             master,
             aw: Pipe::new(cfg.credits),
-            w: Pipe::new(cfg.credits),
+            w: DataPipe::new(cfg.credits),
             ar: Pipe::new(cfg.credits),
             b: Pipe::new(cfg.credits),
-            r: Pipe::new(cfg.credits),
+            r: DataPipe::new(cfg.credits),
             next_w: 0,
             next_r: 0,
+            fault: None,
             counters: counters.clone(),
             tracer: None,
         };
@@ -187,6 +370,14 @@ impl Die2Die {
     /// payload bytes.
     pub fn set_tracer(&mut self, tracer: Tracer) {
         self.tracer = Some(tracer);
+    }
+
+    /// Arm fault injection (and the CRC + replay recovery layer) on this
+    /// link. Derive the injector with
+    /// [`crate::fault::FaultPlan::link_fault`] using this link's name so
+    /// the stream is shard-confined and thread-count-invariant.
+    pub fn set_fault(&mut self, fault: LinkFault) {
+        self.fault = Some(fault);
     }
 
     fn translate(&self, mut c: Cmd) -> Cmd {
@@ -213,18 +404,32 @@ impl Component for Die2Die {
         self.slave.set_now(cy);
         self.master.set_now(cy);
 
+        // A dead link does nothing: beats in flight rot in the pipes and
+        // upstream traffic backs up into the bundles. It deliberately
+        // stays non-idle whenever anything is pending, so the watchdog
+        // sees awake-components-but-zero-progress and aborts the run.
+        if self.fault.as_ref().is_some_and(|f| f.dead(cy)) {
+            return Activity::active_if(
+                self.in_flight() + self.slave.pending_input() + self.master.pending_input() > 0,
+            );
+        }
+
         // Deliver beats whose flight time has elapsed (before accepting,
         // so a beat spends at least `latency` full cycles in the pipe).
         if self.aw.ready(cy) && self.master.aw.can_push() {
             self.master.aw.push(self.aw.pop());
         }
         if self.w.ready(cy) && self.master.w.can_push() {
-            let beat = self.w.pop();
-            self.counters.add(beat.data.len() as u64, 0);
-            if let Some(tr) = &self.tracer {
-                tr.instant(cy, &format!("{}.w", self.name), beat.data.len() as u64);
+            match self.w.deliver(cy, self.cfg.latency, &mut self.fault) {
+                Delivery::Deliver(beat) => {
+                    self.counters.add(beat.data.len() as u64, 0);
+                    if let Some(tr) = &self.tracer {
+                        tr.instant(cy, &format!("{}.w", self.name), beat.data.len() as u64);
+                    }
+                    self.master.w.push(beat);
+                }
+                Delivery::Nak { was_drop } => self.counters.add_nak(was_drop),
             }
-            self.master.w.push(beat);
         }
         if self.ar.ready(cy) && self.master.ar.can_push() {
             self.master.ar.push(self.ar.pop());
@@ -233,12 +438,16 @@ impl Component for Die2Die {
             self.slave.b.push(self.b.pop());
         }
         if self.r.ready(cy) && self.slave.r.can_push() {
-            let beat = self.r.pop();
-            self.counters.add(0, beat.data.len() as u64);
-            if let Some(tr) = &self.tracer {
-                tr.instant(cy, &format!("{}.r", self.name), beat.data.len() as u64);
+            match self.r.deliver(cy, self.cfg.latency, &mut self.fault) {
+                Delivery::Deliver(beat) => {
+                    self.counters.add(0, beat.data.len() as u64);
+                    if let Some(tr) = &self.tracer {
+                        tr.instant(cy, &format!("{}.r", self.name), beat.data.len() as u64);
+                    }
+                    self.slave.r.push(beat);
+                }
+                Delivery::Nak { was_drop } => self.counters.add_nak(was_drop),
             }
-            self.slave.r.push(beat);
         }
 
         // Accept new beats into the pipe: commands/responses at one per
@@ -248,7 +457,8 @@ impl Component for Die2Die {
             self.aw.accept(cy, self.cfg.latency, c);
         }
         if cy >= self.next_w && self.slave.w.can_pop() && self.w.can_accept() {
-            self.w.accept(cy, self.cfg.latency, self.slave.w.pop());
+            let beat = self.slave.w.pop();
+            self.w.accept(cy, self.cfg.latency, beat, &mut self.fault);
             self.next_w = cy + self.cfg.serialize;
         }
         if self.slave.ar.can_pop() && self.ar.can_accept() {
@@ -259,13 +469,32 @@ impl Component for Die2Die {
             self.b.accept(cy, self.cfg.latency, self.master.b.pop());
         }
         if cy >= self.next_r && self.master.r.can_pop() && self.r.can_accept() {
-            self.r.accept(cy, self.cfg.latency, self.master.r.pop());
+            let beat = self.master.r.pop();
+            self.r.accept(cy, self.cfg.latency, beat, &mut self.fault);
             self.next_r = cy + self.cfg.serialize;
         }
 
         Activity::active_if(
             self.in_flight() + self.slave.pending_input() + self.master.pending_input() > 0,
         )
+    }
+
+    fn debug_state(&self) -> Option<String> {
+        let v = self.counters.vals();
+        Some(format!(
+            "pipes aw/w/ar/b/r = {}/{}/{}/{}/{} in flight, pending in {}+{}, \
+             retransmits {} (dropped {}){}",
+            self.aw.len(),
+            self.w.len(),
+            self.ar.len(),
+            self.b.len(),
+            self.r.len(),
+            self.slave.pending_input(),
+            self.master.pending_input(),
+            v.retransmits,
+            v.dropped,
+            if self.fault.as_ref().is_some_and(|f| f.will_die()) { " [dies]" } else { "" },
+        ))
     }
 }
 
@@ -433,5 +662,87 @@ mod tests {
     fn cfg_zero_values_normalize() {
         let (l, _ctr, _m, _s) = link(D2DCfg { latency: 0, credits: 0, serialize: 0 }, 0);
         assert_eq!(l.cfg, D2DCfg { latency: 1, credits: 1, serialize: 1 });
+    }
+
+    /// Push `total` distinct W beats through a faulted link and return
+    /// (delivered beats, counters).
+    fn pump_w(fault: crate::fault::LinkFault, total: usize) -> (Vec<WBeat>, D2DCounterVals) {
+        let cfg = D2DCfg { latency: 3, credits: 8, serialize: 1 };
+        let (mut l, ctr, up_m, down_s) = link(cfg, 0);
+        l.set_fault(fault);
+        let mut sent = 0usize;
+        let mut got = Vec::new();
+        for cy in 0..20_000 {
+            clock(cy, &up_m, &down_s);
+            if sent < total && up_m.w.can_push() {
+                let mut data = [0u8; 8];
+                data[0] = sent as u8;
+                data[7] = sent as u8 ^ 0x5A;
+                up_m.w.push(WBeat::full(Bytes::from_slice(&data), true, sent as u64));
+                sent += 1;
+            }
+            l.tick(cy);
+            if down_s.w.can_pop() {
+                got.push(down_s.w.pop());
+            }
+            if got.len() == total {
+                break;
+            }
+        }
+        (got, ctr.vals())
+    }
+
+    #[test]
+    fn crc_replay_delivers_exact_payloads_under_corruption() {
+        use crate::fault::{BeatFaultKind, FaultPlan};
+        let plan = FaultPlan::beat_errors(11, 0.3, BeatFaultKind::Corrupt);
+        let (got, v) = pump_w(plan.link_fault("d2d"), 40);
+        assert_eq!(got.len(), 40, "every beat eventually delivered");
+        for (i, b) in got.iter().enumerate() {
+            assert_eq!(b.data.as_slice()[0], i as u8, "payloads exact and in order");
+            assert_eq!(b.data.as_slice()[7], i as u8 ^ 0x5A);
+        }
+        assert!(v.retransmits > 0, "rate 0.3 over 40 beats must NAK");
+        assert_eq!(v.dropped, 0, "corruption, not loss");
+        assert_eq!(v.w_bytes, 40 * 8, "goodput counts each beat once");
+    }
+
+    #[test]
+    fn lost_beats_are_retransmitted() {
+        use crate::fault::{BeatFaultKind, FaultPlan};
+        let plan = FaultPlan::beat_errors(23, 0.3, BeatFaultKind::Drop);
+        let (got, v) = pump_w(plan.link_fault("d2d"), 40);
+        assert_eq!(got.len(), 40);
+        for (i, b) in got.iter().enumerate() {
+            assert_eq!(b.data.as_slice()[0], i as u8);
+        }
+        assert!(v.dropped > 0, "rate 0.3 over 40 beats must lose some");
+        assert_eq!(v.retransmits, v.dropped, "every loss costs exactly one NAK round");
+    }
+
+    #[test]
+    fn identical_fault_streams_give_identical_counters() {
+        use crate::fault::{BeatFaultKind, FaultPlan};
+        let plan = FaultPlan::beat_errors(5, 0.25, BeatFaultKind::Corrupt);
+        let (_, a) = pump_w(plan.link_fault("d2d"), 64);
+        let (_, b) = pump_w(plan.link_fault("d2d"), 64);
+        assert_eq!(a, b, "same plan, same link -> bit-identical counters");
+    }
+
+    #[test]
+    fn dead_link_wedges_instead_of_delivering() {
+        let cfg = D2DCfg { latency: 10, credits: 4, serialize: 1 };
+        let (mut l, _ctr, up_m, down_s) = link(cfg, 0);
+        l.set_fault(crate::fault::FaultPlan::dead_link("d2d", 5).link_fault("d2d"));
+        clock(0, &up_m, &down_s);
+        up_m.ar.push(Cmd::new(1, 0x40, 0, 3));
+        let mut act = Activity::Idle;
+        for cy in 1..200 {
+            clock(cy, &up_m, &down_s);
+            act = l.tick(cy);
+            assert!(!down_s.ar.can_pop(), "beat in flight dies with the link at cycle 5");
+        }
+        assert!(act.is_active(), "wedged link stays non-idle so the watchdog can see it");
+        assert!(l.debug_state().unwrap().contains("[dies]"));
     }
 }

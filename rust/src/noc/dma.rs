@@ -41,7 +41,7 @@
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::protocol::{split_bursts, Bytes, Cmd, MasterEnd, WBeat};
+use crate::protocol::{split_bursts, Bytes, Cmd, MasterEnd, Resp, WBeat};
 use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 use crate::telemetry::Tracer;
 
@@ -49,6 +49,20 @@ use crate::telemetry::Tracer;
 /// [`Dma::take_completed`]. Far above what any in-engine consumer can
 /// leave unobserved (the completion event wakes it the same cycle).
 const COMPLETED_HISTORY: usize = 1024;
+
+/// Bounded-retry policy for descriptors whose merged response (worst of
+/// every R and B beat, [`Resp::merge`]) is not OKAY. The whole
+/// descriptor is re-issued after an exponential backoff —
+/// `backoff_cycles << (attempt - 1)` — up to `max_retries` times; a
+/// descriptor that still fails completes with its error response
+/// recorded (consumers read it with [`Dma::take_completed_with_resp`]).
+/// Without a policy ([`Dma::new`] default) errors are never retried:
+/// the first completion carries the merged error response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DmaRetryCfg {
+    pub max_retries: u32,
+    pub backoff_cycles: Cycle,
+}
 
 /// A transfer request accepted by the frontend.
 #[derive(Debug, Clone)]
@@ -83,6 +97,8 @@ struct FrontLeg {
     len: u64,
     /// Leg must not start before all outstanding writes complete.
     fence: bool,
+    /// Earliest cycle the leg may start (retry backoff; 0 = immediately).
+    not_before: Cycle,
 }
 
 /// Issue-side state of the leg currently in the data mover. Write
@@ -108,11 +124,18 @@ struct ActiveTransfer {
     write_bytes_left: u64,
 }
 
-/// Per-descriptor progress: legs not yet fully issued and write bursts
-/// awaiting their B response.
+/// Per-descriptor progress: legs not yet fully issued, write bursts
+/// awaiting their B response, and the error/retry bookkeeping.
 struct HandleState {
     legs_unissued: usize,
     b_outstanding: usize,
+    /// Worst response observed across the attempt's R and B beats.
+    resp: Resp,
+    /// Issue attempts so far (1 = the original submission).
+    attempts: u32,
+    /// The descriptor's decomposed 1D legs (src, dst, len, fence), kept
+    /// so a failed attempt can be re-issued whole.
+    legs: Vec<(u64, u64, u64, bool)>,
 }
 
 pub struct Dma {
@@ -133,7 +156,8 @@ pub struct Dma {
     /// consumers are woken by the completion event and observe it within
     /// cycles), so submitters that never consume their stamps — script
     /// workloads polling `completions` — cannot grow it without bound.
-    completed_at: HashMap<u64, Cycle>,
+    /// The value also carries the descriptor's final merged response.
+    completed_at: HashMap<u64, (Cycle, Resp)>,
     /// Completion stamps in retirement order, for the history bound.
     completed_order: VecDeque<u64>,
     /// Config.
@@ -148,8 +172,16 @@ pub struct Dma {
     /// is always a fresh one (same observable timing in the event and
     /// full-scan modes regardless of when `submit_chain` ran).
     empty_pending: Vec<u64>,
+    /// Error-recovery policy (`None` = complete with the error response
+    /// on the first failed attempt).
+    retry: Option<DmaRetryCfg>,
     /// Stats.
     pub bytes_moved: u64,
+    /// Descriptor re-issues triggered by a non-OKAY merged response.
+    pub retries: u64,
+    /// Descriptors that completed with an error after exhausting (or
+    /// lacking) their retry budget.
+    pub aborted: u64,
     /// Last ticked cycle (stamps completions made from `submit`).
     now: Cycle,
     /// Engine binding, so `submit` can wake a sleeping engine component.
@@ -187,7 +219,10 @@ impl Dma {
             next_handle: 1,
             handles: HashMap::new(),
             empty_pending: Vec::new(),
+            retry: None,
             bytes_moved: 0,
+            retries: 0,
+            aborted: 0,
             now: 0,
             waker: None,
             completion_waker: None,
@@ -216,6 +251,13 @@ impl Dma {
         self
     }
 
+    /// Enable bounded retry-with-backoff for failed descriptors.
+    pub fn with_retry(mut self, cfg: DmaRetryCfg) -> Self {
+        assert!(cfg.backoff_cycles >= 1, "zero backoff would retry in place");
+        self.retry = Some(cfg);
+        self
+    }
+
     /// Register a second wake target fired on every descriptor
     /// completion, so an orchestrating component can sleep between
     /// submissions instead of polling (event-engine friendliness of the
@@ -240,24 +282,23 @@ impl Dma {
         }
         let handle = self.next_handle;
         self.next_handle += 1;
-        let mut legs = 0usize;
+        let mut legs: Vec<(u64, u64, u64, bool)> = Vec::new();
         let mut fence = false;
-        let mut push = |front: &mut VecDeque<FrontLeg>, src, dst, len, fence: &mut bool| {
+        let mut push = |legs: &mut Vec<(u64, u64, u64, bool)>, src, dst, len, fence: &mut bool| {
             if len > 0 {
-                front.push_back(FrontLeg { handle, src, dst, len, fence: *fence });
+                legs.push((src, dst, len, *fence));
                 *fence = false;
-                legs += 1;
             }
         };
         for req in reqs {
             match req {
                 TransferReq::OneD { src, dst, len } => {
-                    push(&mut self.frontend, src, dst, len, &mut fence);
+                    push(&mut legs, src, dst, len, &mut fence);
                 }
                 TransferReq::TwoD { src, dst, row_len, src_stride, dst_stride, reps } => {
                     for r in 0..reps {
                         push(
-                            &mut self.frontend,
+                            &mut legs,
                             src + r * src_stride,
                             dst + r * dst_stride,
                             row_len,
@@ -268,19 +309,78 @@ impl Dma {
                 TransferReq::Fence => fence = true,
             }
         }
-        if legs == 0 {
+        if legs.is_empty() {
             // Degenerate descriptor (all legs empty): completes on the
             // engine's next tick (the waker above guarantees one).
             self.empty_pending.push(handle);
         } else {
-            self.handles.insert(handle, HandleState { legs_unissued: legs, b_outstanding: 0 });
+            for &(src, dst, len, fence) in &legs {
+                self.frontend.push_back(FrontLeg { handle, src, dst, len, fence, not_before: 0 });
+            }
+            self.handles.insert(
+                handle,
+                HandleState {
+                    legs_unissued: legs.len(),
+                    b_outstanding: 0,
+                    resp: Resp::Okay,
+                    attempts: 1,
+                    legs,
+                },
+            );
         }
         handle
     }
 
-    fn push_completion(&mut self, handle: u64) {
+    /// Retire a descriptor whose issue and response bookkeeping both hit
+    /// zero: either complete it (recording the merged response) or, on a
+    /// failed attempt with retry budget left, re-queue every leg after
+    /// the exponential backoff.
+    fn maybe_finish(&mut self, handle: u64) {
+        {
+            let hs = self.handles.get(&handle).expect("descriptor bookkeeping");
+            if hs.legs_unissued > 0 || hs.b_outstanding > 0 {
+                return;
+            }
+        }
+        let hs = self.handles.remove(&handle).unwrap();
+        if hs.resp != Resp::Okay {
+            let budget_left = self
+                .retry
+                .is_some_and(|cfg| hs.attempts <= cfg.max_retries);
+            if budget_left {
+                let cfg = self.retry.unwrap();
+                // Bounded exponential backoff: doubles per attempt; the
+                // shift is capped so the wait saturates instead of
+                // overflowing on absurd retry budgets.
+                let shift = (hs.attempts - 1).min(16);
+                let not_before = self.now + cfg.backoff_cycles.saturating_mul(1u64 << shift);
+                self.retries += 1;
+                for (i, &(src, dst, len, fence)) in hs.legs.iter().enumerate() {
+                    // The first re-issued leg fences: the retry must not
+                    // overlap stale writes from other descriptors.
+                    let fence = fence || i == 0;
+                    self.frontend.push_back(FrontLeg { handle, src, dst, len, fence, not_before });
+                }
+                self.handles.insert(
+                    handle,
+                    HandleState {
+                        legs_unissued: hs.legs.len(),
+                        b_outstanding: 0,
+                        resp: Resp::Okay,
+                        attempts: hs.attempts + 1,
+                        legs: hs.legs,
+                    },
+                );
+                return;
+            }
+            self.aborted += 1;
+        }
+        self.push_completion(handle, hs.resp);
+    }
+
+    fn push_completion(&mut self, handle: u64, resp: Resp) {
         self.completions.push_back(handle);
-        self.completed_at.insert(handle, self.now);
+        self.completed_at.insert(handle, (self.now, resp));
         self.completed_order.push_back(handle);
         if self.completed_order.len() > COMPLETED_HISTORY {
             let old = self.completed_order.pop_front().unwrap();
@@ -302,7 +402,7 @@ impl Dma {
     /// retires a descriptor would otherwise observe it one cycle earlier
     /// than its event-mode (woken next cycle) self.
     pub fn completed_strictly_before(&self, handle: u64, cy: Cycle) -> bool {
-        self.completed_at.get(&handle).is_some_and(|&at| at < cy)
+        self.completed_at.get(&handle).is_some_and(|&(at, _)| at < cy)
     }
 
     /// Like [`Dma::completed_strictly_before`], but consumes the
@@ -310,11 +410,21 @@ impl Dma {
     /// long-running orchestrators (the handle stays in `completions` for
     /// external observers). Each handle can be taken once.
     pub fn take_completed(&mut self, handle: u64, cy: Cycle) -> bool {
-        if self.completed_strictly_before(handle, cy) {
-            self.completed_at.remove(&handle);
-            true
-        } else {
-            false
+        self.take_completed_with_resp(handle, cy).is_some()
+    }
+
+    /// Consume a completion stamp and return the descriptor's final
+    /// merged response — OKAY for a clean (or successfully retried)
+    /// descriptor, the worst R/B error otherwise. `None` while the
+    /// descriptor has not completed strictly before `cy` (or was
+    /// already taken).
+    pub fn take_completed_with_resp(&mut self, handle: u64, cy: Cycle) -> Option<Resp> {
+        match self.completed_at.get(&handle) {
+            Some(&(at, resp)) if at < cy => {
+                self.completed_at.remove(&handle);
+                Some(resp)
+            }
+            _ => None,
         }
     }
 
@@ -323,9 +433,11 @@ impl Dma {
         let b_out: usize = self.handles.values().map(|h| h.b_outstanding).sum();
         match &self.active {
             None => format!(
-                "inactive frontend={} handles={} b_out={b_out}",
+                "inactive frontend={} handles={} b_out={b_out} retries={} aborted={}",
                 self.frontend.len(),
-                self.handles.len()
+                self.handles.len(),
+                self.retries,
+                self.aborted
             ),
             Some(t) => format!(
                 "ar_todo={} r_ranges={} aw_todo={} w_ranges={} rd_left={} wr_left={} buf={} \
@@ -359,6 +471,9 @@ impl Dma {
             return;
         }
         let Some(front) = self.frontend.front() else { return };
+        if front.not_before > self.now {
+            return; // retry backoff window still open
+        }
         if front.fence && self.handles.values().any(|h| h.b_outstanding > 0) {
             return; // fence: wait for every outstanding write response
         }
@@ -395,6 +510,10 @@ impl Component for Dma {
         &self.name
     }
 
+    fn debug_state(&self) -> Option<String> {
+        Some(Dma::debug_state(self))
+    }
+
     fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
         self.master.bind_owner(wake, id);
         self.waker = Some((wake.clone(), id));
@@ -404,7 +523,7 @@ impl Component for Dma {
         self.now = cy;
         self.master.set_now(cy);
         for h in std::mem::take(&mut self.empty_pending) {
-            self.push_completion(h);
+            self.push_completion(h, Resp::Okay);
         }
         self.start_next();
         let bb = self.master.cfg.beat_bytes();
@@ -447,6 +566,10 @@ impl Component for Dma {
             // buffer. The reservation above guarantees space; never stall R.
             if self.master.r.can_pop() {
                 let r = self.master.r.pop();
+                if r.resp != Resp::Okay {
+                    let hs = self.handles.get_mut(&t.handle).expect("descriptor bookkeeping");
+                    hs.resp = hs.resp.merge(r.resp);
+                }
                 let range = t.r_ranges.front_mut().expect("R beat without an open read burst");
                 let beat_base = (range.cur / bb as u64) * bb as u64;
                 let beat_end = beat_base + bb as u64;
@@ -510,10 +633,7 @@ impl Component for Dma {
             }
             let hs = self.handles.get_mut(&t.handle).expect("descriptor bookkeeping");
             hs.legs_unissued -= 1;
-            if hs.legs_unissued == 0 && hs.b_outstanding == 0 {
-                self.handles.remove(&t.handle);
-                self.push_completion(t.handle);
-            }
+            self.maybe_finish(t.handle);
         }
 
         // Collect write responses (any descriptor; tags route them).
@@ -521,10 +641,10 @@ impl Component for Dma {
             let b = self.master.b.pop();
             let hs = self.handles.get_mut(&b.tag).expect("B response for unknown descriptor");
             hs.b_outstanding -= 1;
-            if hs.legs_unissued == 0 && hs.b_outstanding == 0 {
-                self.handles.remove(&b.tag);
-                self.push_completion(b.tag);
+            if b.resp != Resp::Okay {
+                hs.resp = hs.resp.merge(b.resp);
             }
+            self.maybe_finish(b.tag);
         }
 
         // A leg in flight keeps the engine ticking (the data mover retries
@@ -897,6 +1017,52 @@ mod tests {
             "{evs:?}"
         );
         assert!(evs.iter().any(|e| e.name == "dma.done" && e.arg == h && e.dur == 0), "{evs:?}");
+    }
+
+    #[test]
+    fn transient_slverr_retried_to_success() {
+        use crate::fault::SlvErrWindow;
+        let (dma, mut mem) = mk();
+        let mut dma = dma.with_retry(DmaRetryCfg { max_retries: 5, backoff_cycles: 20 });
+        let src: Vec<u8> = (0..128).map(|i| (i * 11 % 251) as u8).collect();
+        mem.banks.borrow_mut().poke(0x1000, &src);
+        // Destination faulted until cycle 300: the first attempt(s) see
+        // SLVERR on their B responses, a later retry lands clean.
+        mem.set_fault_window(SlvErrWindow { base: 0x8000, len: 0x100, until: Some(300) });
+        let h = dma.submit(TransferReq::OneD { src: 0x1000, dst: 0x8000, len: 128 });
+        assert!(run_copy(&mut dma, &mut mem, h, 4000), "retried copy must complete");
+        assert_eq!(dma.take_completed_with_resp(h, 5000), Some(Resp::Okay));
+        assert!(dma.retries >= 1, "the faulted first attempt must have retried");
+        assert_eq!(dma.aborted, 0);
+        assert_eq!(mem.banks.borrow().peek_vec(0x8000, 128), src);
+    }
+
+    #[test]
+    fn permanent_slverr_aborts_with_merged_resp() {
+        use crate::fault::SlvErrWindow;
+        let (dma, mut mem) = mk();
+        let mut dma = dma.with_retry(DmaRetryCfg { max_retries: 2, backoff_cycles: 10 });
+        mem.banks.borrow_mut().poke(0x1000, &[9u8; 64]);
+        mem.set_fault_window(SlvErrWindow { base: 0x8000, len: 0x100, until: None });
+        let h = dma.submit(TransferReq::OneD { src: 0x1000, dst: 0x8000, len: 64 });
+        assert!(run_copy(&mut dma, &mut mem, h, 8000), "exhausted retries still complete");
+        assert_eq!(dma.take_completed_with_resp(h, 10_000), Some(Resp::SlvErr));
+        assert_eq!(dma.retries, 2, "bounded: exactly max_retries re-issues");
+        assert_eq!(dma.aborted, 1);
+    }
+
+    #[test]
+    fn no_retry_policy_reports_error_first_attempt() {
+        use crate::fault::SlvErrWindow;
+        let (mut dma, mut mem) = mk();
+        mem.banks.borrow_mut().poke(0x1000, &[3u8; 64]);
+        mem.set_fault_window(SlvErrWindow { base: 0x1000, len: 0x40, until: None });
+        let h = dma.submit(TransferReq::OneD { src: 0x1000, dst: 0x8000, len: 64 });
+        assert!(run_copy(&mut dma, &mut mem, h, 2000));
+        // Source reads carried SLVERR; without a policy it lands directly.
+        assert_eq!(dma.take_completed_with_resp(h, 3000), Some(Resp::SlvErr));
+        assert_eq!(dma.retries, 0);
+        assert_eq!(dma.aborted, 1);
     }
 
     #[test]

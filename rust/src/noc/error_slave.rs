@@ -5,11 +5,47 @@
 //! Reads: issues `len+1` R beats of zeros with DECERR, `last` on the final
 //! beat. Ordering is trivially compliant because the error slave handles
 //! transactions strictly in arrival order per direction.
+//!
+//! Pending work is **bounded**: each direction holds at most
+//! [`ErrorSlave::DEFAULT_CAP`] open transactions (configurable with
+//! [`ErrorSlave::with_capacity`]); beyond that the AW/AR channels are
+//! simply not popped, and valid/ready backpressure propagates to the
+//! misbehaving master. A runaway master spraying unmapped addresses
+//! therefore stalls instead of growing the simulator's heap without
+//! bound. Every DECERR issued is counted per direction
+//! ([`ErrorSlaveCounters`]) so decode errors show up in determinism
+//! fingerprints.
 
+use std::cell::Cell;
 use std::collections::VecDeque;
+use std::rc::Rc;
 
 use crate::protocol::{BBeat, Bytes, RBeat, Resp, SlaveEnd};
 use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
+
+/// Cloneable external handle onto an error slave's DECERR counters
+/// (writes, reads) — readable after the slave moved into an engine.
+#[derive(Clone, Default)]
+pub struct ErrorSlaveCounters {
+    inner: Rc<Cell<(u64, u64)>>,
+}
+
+impl ErrorSlaveCounters {
+    /// (write DECERRs issued, read DECERR bursts issued).
+    pub fn decerrs(&self) -> (u64, u64) {
+        self.inner.get()
+    }
+
+    fn add_w(&self) {
+        let (w, r) = self.inner.get();
+        self.inner.set((w + 1, r));
+    }
+
+    fn add_r(&self) {
+        let (w, r) = self.inner.get();
+        self.inner.set((w, r + 1));
+    }
+}
 
 pub struct ErrorSlave {
     name: String,
@@ -20,9 +56,15 @@ pub struct ErrorSlave {
     b_pending: VecDeque<(u32, u64)>,
     /// Read bursts being answered: (id, tag, beats remaining).
     r_pending: VecDeque<(u32, u64, usize)>,
+    /// Max open transactions per direction (backpressure beyond this).
+    cap: usize,
+    counters: ErrorSlaveCounters,
 }
 
 impl ErrorSlave {
+    /// Default per-direction bound on open transactions.
+    pub const DEFAULT_CAP: usize = 16;
+
     pub fn new(name: impl Into<String>, slave: SlaveEnd) -> Self {
         ErrorSlave {
             name: name.into(),
@@ -30,7 +72,21 @@ impl ErrorSlave {
             w_pending: VecDeque::new(),
             b_pending: VecDeque::new(),
             r_pending: VecDeque::new(),
+            cap: Self::DEFAULT_CAP,
+            counters: ErrorSlaveCounters::default(),
         }
+    }
+
+    /// Override the per-direction open-transaction bound.
+    pub fn with_capacity(mut self, cap: usize) -> Self {
+        assert!(cap >= 1);
+        self.cap = cap;
+        self
+    }
+
+    /// External handle onto the DECERR counters.
+    pub fn counters(&self) -> ErrorSlaveCounters {
+        self.counters.clone()
     }
 }
 
@@ -43,11 +99,23 @@ impl Component for ErrorSlave {
         self.slave.bind_owner(wake, id);
     }
 
+    fn debug_state(&self) -> Option<String> {
+        let (w, r) = self.counters.decerrs();
+        Some(format!(
+            "w_pending={} b_pending={} r_pending={} cap={} decerrs=(w {w}, r {r})",
+            self.w_pending.len(),
+            self.b_pending.len(),
+            self.r_pending.len(),
+            self.cap
+        ))
+    }
+
     fn tick(&mut self, cy: Cycle) -> Activity {
         self.slave.set_now(cy);
 
-        // Accept write commands.
-        if self.slave.aw.can_pop() {
+        // Accept write commands — bounded: past the cap the AW channel
+        // stays un-popped and backpressure reaches the master.
+        if self.w_pending.len() + self.b_pending.len() < self.cap && self.slave.aw.can_pop() {
             let c = self.slave.aw.pop();
             self.w_pending.push_back((c.id, c.tag, c.beats()));
         }
@@ -68,10 +136,11 @@ impl Component for ErrorSlave {
             if self.slave.b.can_push() {
                 self.slave.b.push(BBeat { id, resp: Resp::DecErr, tag });
                 self.b_pending.pop_front();
+                self.counters.add_w();
             }
         }
-        // Accept read commands.
-        if self.slave.ar.can_pop() {
+        // Accept read commands (same bound as the write direction).
+        if self.r_pending.len() < self.cap && self.slave.ar.can_pop() {
             let c = self.slave.ar.pop();
             self.r_pending.push_back((c.id, c.tag, c.beats()));
         }
@@ -84,6 +153,7 @@ impl Component for ErrorSlave {
                 self.slave.r.push(RBeat { id, data: Bytes::zeroed(bb), resp: Resp::DecErr, last, tag });
                 if last {
                     self.r_pending.pop_front();
+                    self.counters.add_r();
                 }
             }
         }
@@ -153,6 +223,61 @@ mod tests {
         assert_eq!(b.resp, Resp::DecErr);
         assert_eq!(b.id, 2);
         assert_eq!(b.tag, 5);
+    }
+
+    #[test]
+    fn pending_queues_bounded_by_backpressure() {
+        let (m, s) = bundle("t", BundleCfg::default());
+        // Tiny cap, and never drain R: the slave must stop popping AR
+        // instead of queueing without bound.
+        let mut es = ErrorSlave::new("err", s).with_capacity(2);
+        let mut cy = 0;
+        let mut pushed = 0u64;
+        for _ in 0..200 {
+            m.set_now(cy);
+            if m.ar.can_push() {
+                let mut c = Cmd::new(1, 0xDEAD_0000, 7, 3);
+                c.tag = pushed;
+                m.ar.push(c);
+                pushed += 1;
+            }
+            cy += 1;
+            m.set_now(cy);
+            es.tick(cy);
+        }
+        assert!(es.r_pending.len() <= 2, "r_pending grew to {}", es.r_pending.len());
+        assert!(
+            pushed < 20,
+            "backpressure must reach the master, yet {pushed} commands were accepted"
+        );
+    }
+
+    #[test]
+    fn decerr_counters_count_per_direction() {
+        let (m, s) = bundle("t", BundleCfg::default());
+        let mut es = ErrorSlave::new("err", s);
+        let counters = es.counters();
+        let mut cy = 0;
+        m.set_now(cy);
+        let mut c = Cmd::new(2, 0xBAD0, 0, 3);
+        c.tag = 5;
+        m.aw.push(c);
+        m.w.push(WBeat::full(Bytes::zeroed(8), true, 5));
+        let mut rc = Cmd::new(3, 0xBAD8, 1, 3);
+        rc.tag = 6;
+        m.ar.push(rc);
+        for _ in 0..12 {
+            cy += 1;
+            m.set_now(cy);
+            es.tick(cy);
+            if m.b.can_pop() {
+                m.b.pop();
+            }
+            if m.r.can_pop() {
+                m.r.pop();
+            }
+        }
+        assert_eq!(counters.decerrs(), (1, 1));
     }
 
     #[test]

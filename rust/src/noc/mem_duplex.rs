@@ -13,6 +13,7 @@ use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::rc::Rc;
 
+use crate::fault::SlvErrWindow;
 use crate::noc::sram::{MemCmd, Sram};
 use crate::protocol::{BBeat, Bytes, RBeat, Resp, SlaveEnd};
 use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
@@ -103,6 +104,8 @@ struct ReadMeta {
     bytes: usize,
     last: bool,
     bank: usize,
+    /// Beat address fell in an armed SLVERR fault window at issue time.
+    err: bool,
 }
 
 pub struct MemDuplex {
@@ -121,6 +124,10 @@ pub struct MemDuplex {
     r_buf_cap: usize,
     /// Writes win bank conflicts (cannot be interleaved due to (O3)).
     write_wins_conflicts: bool,
+    /// Armed fault window: accesses in it return SLVERR (`None` = clean).
+    fault: Option<SlvErrWindow>,
+    /// Whether any beat of the open write burst hit the fault window.
+    w_hit: bool,
 }
 
 impl MemDuplex {
@@ -146,7 +153,18 @@ impl MemDuplex {
             r_buf: VecDeque::new(),
             r_buf_cap: 16,
             write_wins_conflicts: true,
+            fault: None,
+            w_hit: false,
         }
+    }
+
+    /// Arm a fault window: read and write beats whose address falls in
+    /// it (while the window is open, see [`SlvErrWindow::hits`]) return
+    /// SLVERR. Data is still committed — the window models a slave that
+    /// flags the access poisoned, not one that loses it — so a retry
+    /// after a transient window closes observes consistent memory.
+    pub fn set_fault_window(&mut self, w: SlvErrWindow) {
+        self.fault = Some(w);
     }
 }
 
@@ -159,6 +177,17 @@ impl Component for MemDuplex {
         self.slave.bind_owner(wake, id);
     }
 
+    fn debug_state(&self) -> Option<String> {
+        Some(format!(
+            "w_active={} r_active={} r_meta={} r_buf={} b_q={}",
+            self.w_active.is_some(),
+            self.r_active.is_some(),
+            self.r_meta.len(),
+            self.r_buf.len(),
+            self.b_q.len()
+        ))
+    }
+
     fn tick(&mut self, cy: Cycle) -> Activity {
         self.slave.set_now(cy);
 
@@ -166,6 +195,7 @@ impl Component for MemDuplex {
         // accepts one burst at a time.
         if self.w_active.is_none() && self.slave.aw.can_pop() {
             self.w_active = Some((self.slave.aw.pop(), 0));
+            self.w_hit = false;
         }
         if self.r_active.is_none() && self.slave.ar.can_pop() {
             self.r_active = Some((self.slave.ar.pop(), 0));
@@ -213,9 +243,13 @@ impl Component for MemDuplex {
                 let strb = (w.strb >> lane) & crate::protocol::strb_all(bb);
                 let bank = self.banks.borrow_mut().accept(cy, wa, MemCmd::Write { addr: wa, data, strb });
                 wrote_bank = Some(bank);
+                if self.fault.as_ref().is_some_and(|f| f.hits(wa, cy)) {
+                    self.w_hit = true;
+                }
                 *issued += 1;
                 if *issued == c.beats() {
-                    self.b_q.push_back(BBeat { id: c.id, resp: Resp::Okay, tag: c.tag });
+                    let resp = if self.w_hit { Resp::SlvErr } else { Resp::Okay };
+                    self.b_q.push_back(BBeat { id: c.id, resp, tag: c.tag });
                     self.w_active = None;
                 }
             }
@@ -230,9 +264,10 @@ impl Component for MemDuplex {
                 let bb = c.beat_bytes();
                 let lane = (ra % port_bytes as u64) as usize;
                 let bank = self.banks.borrow_mut().accept(cy, ra, MemCmd::Read { addr: ra, bytes: bb });
+                let err = self.fault.as_ref().is_some_and(|f| f.hits(ra, cy));
                 *issued += 1;
                 let last = *issued == c.beats();
-                self.r_meta.push_back(ReadMeta { id: c.id, tag: c.tag, lane, bytes: bb, last, bank });
+                self.r_meta.push_back(ReadMeta { id: c.id, tag: c.tag, lane, bytes: bb, last, bank, err });
                 if last {
                     self.r_active = None;
                 }
@@ -248,7 +283,8 @@ impl Component for MemDuplex {
                 let m = self.r_meta.pop_front().unwrap();
                 let mut data = Bytes::zeroed(port_bytes);
                 data.as_mut_slice()[m.lane..m.lane + m.bytes].copy_from_slice(&resp.data);
-                self.r_buf.push_back(RBeat { id: m.id, data, resp: Resp::Okay, last: m.last, tag: m.tag });
+                let rresp = if m.err { Resp::SlvErr } else { Resp::Okay };
+                self.r_buf.push_back(RBeat { id: m.id, data, resp: rresp, last: m.last, tag: m.tag });
             } else {
                 break;
             }
@@ -434,6 +470,68 @@ mod tests {
             }
         }
         assert!(ctrl.banks.borrow().conflicts > 0, "same-bank traffic must conflict");
+    }
+
+    #[test]
+    fn slverr_window_flags_reads_and_writes() {
+        use crate::fault::SlvErrWindow;
+        let (m, mut ctrl) = mk(2);
+        // Window closes at cycle 100: hits before then return SLVERR.
+        ctrl.set_fault_window(SlvErrWindow { base: 0x40, len: 0x20, until: Some(100) });
+        let mut cy = 0;
+        m.set_now(cy);
+        let mut wc = Cmd::new(0, 0x40, 3, 3);
+        wc.tag = 1;
+        m.aw.push(wc);
+        let mut fed = 0;
+        let mut b_resp = None;
+        while b_resp.is_none() && cy < 60 {
+            m.set_now(cy);
+            if fed < 4 && m.w.can_push() {
+                m.w.push(WBeat::full(Bytes::zeroed(8), fed == 3, 1));
+                fed += 1;
+            }
+            cy += 1;
+            m.set_now(cy);
+            ctrl.tick(cy);
+            if m.b.can_pop() {
+                b_resp = Some(m.b.pop().resp);
+            }
+        }
+        assert_eq!(b_resp, Some(Resp::SlvErr), "write into the window must flag");
+        // A read of the same range also flags, per beat.
+        m.set_now(cy);
+        let mut rc = Cmd::new(1, 0x40, 3, 3);
+        rc.tag = 2;
+        m.ar.push(rc);
+        let mut beats = Vec::new();
+        for _ in 0..30 {
+            cy += 1;
+            m.set_now(cy);
+            ctrl.tick(cy);
+            if m.r.can_pop() {
+                beats.push(m.r.pop());
+            }
+        }
+        assert_eq!(beats.len(), 4);
+        assert!(beats.iter().all(|r| r.resp == Resp::SlvErr));
+        // After the window closes the same access is clean again.
+        cy = 200;
+        m.set_now(cy);
+        let mut rc = Cmd::new(1, 0x40, 3, 3);
+        rc.tag = 3;
+        m.ar.push(rc);
+        let mut beats = Vec::new();
+        for _ in 0..30 {
+            cy += 1;
+            m.set_now(cy);
+            ctrl.tick(cy);
+            if m.r.can_pop() {
+                beats.push(m.r.pop());
+            }
+        }
+        assert_eq!(beats.len(), 4);
+        assert!(beats.iter().all(|r| r.resp == Resp::Okay), "window expired at 100");
     }
 
     #[test]

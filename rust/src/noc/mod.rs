@@ -26,11 +26,11 @@ pub mod xbar;
 pub use addr_decode::{AddrMap, AddrRule, DefaultPort};
 pub use cdc::{cdc, CdcMaster, CdcSlave};
 pub use crosspoint::{Crosspoint, CrosspointCfg};
-pub use d2d::{D2DCfg, D2DCounters, Die2Die};
+pub use d2d::{D2DCfg, D2DCounterVals, D2DCounters, Die2Die};
 pub use demux::Demux;
-pub use dma::{Dma, TransferReq};
+pub use dma::{Dma, DmaRetryCfg, TransferReq};
 pub use downsizer::Downsizer;
-pub use error_slave::ErrorSlave;
+pub use error_slave::{ErrorSlave, ErrorSlaveCounters};
 pub use id_remap::IdRemap;
 pub use id_serialize::IdSerialize;
 pub use llc::Llc;

@@ -14,7 +14,7 @@ pub mod port;
 
 pub use channel::{channel, wire, ChannelStats, Rx, Tx};
 pub use exchange::{cut_master_export, cut_slave_export, BundleCut, CutReceiver, CutSender};
-pub use monitor::{Monitor, Violation};
+pub use monitor::{Monitor, Violation, DEFAULT_MAX_VIOLATIONS};
 pub use payload::{
     split_bursts, strb_all, BBeat, Burst, Bytes, Cmd, Id, RBeat, Resp, Strb, TxnTag, WBeat,
 };

@@ -24,6 +24,9 @@ use super::payload::{Cmd, TxnTag};
 use super::port::{MasterEnd, SlaveEnd};
 use crate::sim::{Activity, Component, ComponentId, Cycle, WakeSet};
 
+/// Default cap on stored violations (see [`Monitor::with_max_violations`]).
+pub const DEFAULT_MAX_VIOLATIONS: usize = 64;
+
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Violation {
     pub cycle: Cycle,
@@ -57,6 +60,9 @@ pub struct Monitor {
     w_expect: VecDeque<(usize, usize)>,
     violations: Vec<Violation>,
     max_violations: usize,
+    /// Violations observed past the retention cap (recorded as a count
+    /// so a chatty failure still reports its full magnitude).
+    dropped_violations: u64,
     /// Totals for the completion check.
     cmds_seen: u64,
     resps_done: u64,
@@ -75,20 +81,37 @@ impl Monitor {
             writes: (0..ids).map(|_| WriteIdState::default()).collect(),
             w_expect: VecDeque::new(),
             violations: Vec::new(),
-            max_violations: 64,
+            max_violations: DEFAULT_MAX_VIOLATIONS,
+            dropped_violations: 0,
             cmds_seen: 0,
             resps_done: 0,
         }
     }
 
+    /// Override the violation retention cap ([`DEFAULT_MAX_VIOLATIONS`]).
+    /// Violations past the cap are not stored but still counted in
+    /// [`Monitor::dropped_violations`].
+    pub fn with_max_violations(mut self, cap: usize) -> Self {
+        assert!(cap >= 1);
+        self.max_violations = cap;
+        self
+    }
+
     fn violate(&mut self, cycle: Cycle, rule: &'static str, detail: String) {
         if self.violations.len() < self.max_violations {
             self.violations.push(Violation { cycle, rule, detail });
+        } else {
+            self.dropped_violations += 1;
         }
     }
 
     pub fn violations(&self) -> &[Violation] {
         &self.violations
+    }
+
+    /// Violations dropped because the retention cap was already full.
+    pub fn dropped_violations(&self) -> u64 {
+        self.dropped_violations
     }
 
     /// End-of-test check: no outstanding transactions left behind.
@@ -273,6 +296,76 @@ mod tests {
         let (down_m, down_s) = bundle("down", cfg);
         let mon = Monitor::new("mon", up_s, down_m);
         (up_m, mon, down_s)
+    }
+
+    #[test]
+    fn rogue_master_w_before_aw_flags_o3() {
+        // Positive test driven through the fault layer: a rogue master
+        // pushes write data with no outstanding address — the monitor
+        // must report it, not just stay silent on clean traffic.
+        use crate::fault::rogue::{RogueMaster, RogueSlave};
+        let (m, mut mon, s) = setup();
+        let rm = RogueMaster { end: m };
+        let rs = RogueSlave { end: s };
+        let mut cy = 0;
+        rm.w_before_aw(cy, 7);
+        for _ in 0..8 {
+            cy += 1;
+            mon.tick(cy);
+            rs.absorb(cy);
+            rm.drain(cy);
+        }
+        assert!(
+            mon.violations().iter().any(|v| v.rule == "O3" && v.detail.contains("no outstanding")),
+            "{:?}",
+            mon.violations()
+        );
+    }
+
+    #[test]
+    fn rogue_slave_reordered_b_flags_o2() {
+        // A rogue slave answers the second same-ID write before the
+        // first: (O2) same-ID responses must come back in command order.
+        use crate::fault::rogue::{RogueMaster, RogueSlave};
+        let (m, mut mon, s) = setup();
+        let rm = RogueMaster { end: m };
+        let rs = RogueSlave { end: s };
+        let mut cy = 0;
+        rm.clean_write(cy, 1, 0x100, 10);
+        for _ in 0..4 {
+            cy += 1;
+            mon.tick(cy);
+            rs.absorb(cy);
+        }
+        rm.clean_write(cy, 1, 0x200, 11);
+        for _ in 0..4 {
+            cy += 1;
+            mon.tick(cy);
+            rs.absorb(cy);
+        }
+        rs.b(cy, 1, 11); // out of order: tag 10 is still due first
+        for _ in 0..8 {
+            cy += 1;
+            mon.tick(cy);
+            rs.absorb(cy);
+            rm.drain(cy);
+        }
+        assert!(
+            mon.violations().iter().any(|v| v.rule == "O2"),
+            "{:?}",
+            mon.violations()
+        );
+    }
+
+    #[test]
+    fn violation_cap_is_configurable_and_counts_drops() {
+        let (_m, mon, _s) = setup();
+        let mut mon = mon.with_max_violations(4);
+        for i in 0..10 {
+            mon.violate(i, "test", format!("synthetic violation {i}"));
+        }
+        assert_eq!(mon.violations().len(), 4, "retention stops at the cap");
+        assert_eq!(mon.dropped_violations(), 6, "overflow is counted, not lost");
     }
 
     #[test]

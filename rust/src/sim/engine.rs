@@ -105,6 +105,14 @@ pub trait Component {
     fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
         let _ = (wake, id);
     }
+
+    /// One-line internal state summary for hang diagnostics (queue
+    /// depths, outstanding transactions, ...). `None` (the default)
+    /// omits the component from the watchdog's diagnostic dump beyond
+    /// its name. Never called on the hot path.
+    fn debug_state(&self) -> Option<String> {
+        None
+    }
 }
 
 struct WakeInner {
@@ -194,6 +202,9 @@ impl<T: Component> Component for Shared<T> {
     }
     fn bind(&mut self, wake: &WakeSet, id: ComponentId) {
         self.inner.borrow_mut().bind(wake, id);
+    }
+    fn debug_state(&self) -> Option<String> {
+        self.inner.borrow().debug_state()
     }
 }
 
@@ -504,6 +515,29 @@ impl Engine {
     /// a component.
     pub fn has_pending_wakes(&self) -> bool {
         self.wake.has_pending()
+    }
+
+    /// Multi-line listing of every awake component — name plus its
+    /// [`Component::debug_state`] line when it offers one — for the
+    /// watchdog's abort report. Observability only, never on the hot
+    /// path.
+    pub fn diagnostic_dump(&self) -> String {
+        let mut out = String::new();
+        for (i, slot) in self.slots.iter().enumerate() {
+            if slot.asleep {
+                continue;
+            }
+            out.push_str(&format!("    [{i}] {}", slot.comp.name()));
+            if let Some(s) = slot.comp.debug_state() {
+                out.push_str(": ");
+                out.push_str(&s);
+            }
+            out.push('\n');
+        }
+        if out.is_empty() {
+            out.push_str("    (no awake components)\n");
+        }
+        out
     }
 
     fn drain_wakes(&mut self) {

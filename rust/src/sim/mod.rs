@@ -10,6 +10,7 @@ pub mod prop;
 pub mod rng;
 pub mod shard;
 pub mod stats;
+pub mod watchdog;
 
 pub use affinity::pin_to_core;
 pub use arena::Arena;
@@ -25,3 +26,4 @@ pub use shard::{
     WorkerProfile, EPOCH_TRACE_SHARD,
 };
 pub use stats::{human_bytes, Bandwidth, LatencyStats};
+pub use watchdog::{fold_signature, Verdict, Watchdog};

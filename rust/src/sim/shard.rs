@@ -1390,6 +1390,42 @@ impl ShardedEngine {
         self.shards.iter().map(|s| s.0.awake_components()).sum()
     }
 
+    /// A multi-line diagnosis of what is (still) awake: per-shard awake
+    /// counts, each awake component's `debug_state`, and every exchange
+    /// link that is not drained. Built for the watchdog's abort path —
+    /// the dump a wedged run leaves behind instead of a silent hang.
+    /// Only call between runs (the same exclusivity window as every
+    /// other external handle into the shards).
+    pub fn diagnostic_dump(&self) -> String {
+        let mut out = String::new();
+        for (i, sh) in self.shards.iter().enumerate() {
+            let awake = sh.0.awake_components();
+            out.push_str(&format!(
+                "  shard {i}: {awake}/{} components awake\n",
+                sh.0.component_count()
+            ));
+            if awake > 0 {
+                out.push_str(&sh.0.engine.diagnostic_dump());
+            }
+        }
+        let mut undrained = 0usize;
+        for group in &self.groups {
+            for entry in &group.links {
+                // SAFETY: the caller holds `&self` between runs, so no
+                // worker is advancing a shard — the exclusivity window
+                // `ExchangeLink::is_drained` requires.
+                if !unsafe { entry.link.is_drained() } {
+                    undrained += 1;
+                    out.push_str(&format!("  link {} has beats in flight\n", entry.link.label()));
+                }
+            }
+        }
+        if undrained == 0 {
+            out.push_str("  (all exchange links drained)\n");
+        }
+        out
+    }
+
     /// The accumulated per-shard / per-worker profile and scheduler
     /// counters. Cheap to call (copies the counters); all values are
     /// totals since the engine was built.

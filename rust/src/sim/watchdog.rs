@@ -1,0 +1,162 @@
+//! No-progress watchdog: turns an infinite spin into a bounded abort
+//! with a diagnosis.
+//!
+//! ## The no-progress definition
+//!
+//! A simulation is **wedged** when, for a full observation window of
+//! `window` cycles, (a) at least one component is awake — something
+//! claims to have work — and (b) the run's **progress signature** has
+//! not changed. The signature is a hash the owner folds from its
+//! monotone delivered-work counters (beats delivered, DMA bytes moved,
+//! retransmissions, completed collective steps, ...): any real forward
+//! step changes at least one counter, so an unchanged signature over a
+//! whole window with components awake means beats are circling a dead
+//! link, a credit loop, or a lost completion — the run will never
+//! finish, and burning the rest of a 50M-cycle budget on it helps
+//! nobody.
+//!
+//! Zero awake components is explicitly **not** wedged: that is the
+//! quiescence the adaptive epoch policy proves at a barrier before
+//! sprinting (`sim::shard`, `EpochPolicy::Adaptive`). During such a
+//! sprint the signature legitimately stays frozen for long stretches —
+//! and the watchdog reports [`Verdict::Idle`] and resets its stall
+//! clock, which is why adaptive-epoch sprints can never false-trigger
+//! it. A quiescent system that is never woken again simply runs out its
+//! cycle budget and is reported as unfinished, not killed.
+//!
+//! The watchdog itself is a passive counter fed at epoch boundaries by
+//! `Engine`/`ShardedEngine` owners (see `manticore::pod::Pod::run_until`);
+//! it costs one hash comparison per observation and nothing on the hot
+//! path, and everything it sees is cycle-stamped simulation state, so
+//! verdicts are bit-identical across `--threads N` × engine modes.
+
+use super::Cycle;
+
+/// What one observation concluded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// The signature moved since the last observation.
+    Progressing,
+    /// Nothing awake: proven-quiescent, the stall clock is reset.
+    Idle,
+    /// Awake components but a frozen signature for >= the window.
+    Wedged {
+        /// Cycles since the signature last moved.
+        stalled_for: Cycle,
+    },
+}
+
+/// No-progress detector. Feed it `(cycle, signature, awake)` at every
+/// epoch boundary (or any coarser deterministic cadence).
+#[derive(Debug, Clone)]
+pub struct Watchdog {
+    window: Cycle,
+    last_sig: u64,
+    last_progress_at: Cycle,
+    armed: bool,
+}
+
+impl Watchdog {
+    /// A watchdog that fires after `window` cycles of awake-but-frozen.
+    /// The window should comfortably exceed the longest legitimate
+    /// quiet stretch (D2D round trips, replay backoffs); pods default
+    /// to tens of thousands of cycles.
+    pub fn new(window: Cycle) -> Self {
+        assert!(window > 0, "watchdog window must be positive");
+        Watchdog { window, last_sig: 0, last_progress_at: 0, armed: false }
+    }
+
+    pub fn window(&self) -> Cycle {
+        self.window
+    }
+
+    /// Record one observation. `signature` is the owner's folded hash of
+    /// its monotone progress counters; `awake` is the engine's awake-
+    /// component count at the same instant.
+    pub fn observe(&mut self, cy: Cycle, signature: u64, awake: usize) -> Verdict {
+        if !self.armed || signature != self.last_sig {
+            self.armed = true;
+            self.last_sig = signature;
+            self.last_progress_at = cy;
+            return Verdict::Progressing;
+        }
+        if awake == 0 {
+            // Proven quiescence (the same condition adaptive epochs
+            // sprint on) is idleness, not a hang.
+            self.last_progress_at = cy;
+            return Verdict::Idle;
+        }
+        let stalled_for = cy.saturating_sub(self.last_progress_at);
+        if stalled_for >= self.window {
+            Verdict::Wedged { stalled_for }
+        } else {
+            Verdict::Progressing
+        }
+    }
+}
+
+/// Order-sensitive 64-bit fold for building progress signatures out of
+/// counter snapshots (FNV-1a over the words).
+pub fn fold_signature(words: impl IntoIterator<Item = u64>) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn progress_resets_the_stall_clock() {
+        let mut w = Watchdog::new(100);
+        assert_eq!(w.observe(0, 1, 5), Verdict::Progressing);
+        assert_eq!(w.observe(90, 1, 5), Verdict::Progressing, "within window");
+        assert_eq!(w.observe(95, 2, 5), Verdict::Progressing, "signature moved");
+        assert_eq!(w.observe(180, 2, 5), Verdict::Progressing, "clock restarted at 95");
+        assert_eq!(w.observe(195, 2, 5), Verdict::Wedged { stalled_for: 100 });
+    }
+
+    #[test]
+    fn quiescent_system_is_idle_not_wedged() {
+        let mut w = Watchdog::new(100);
+        w.observe(0, 7, 3);
+        for cy in (100..10_000).step_by(100) {
+            assert_eq!(w.observe(cy, 7, 0), Verdict::Idle, "awake == 0 never trips");
+        }
+        // Waking up frozen afterwards restarts the window from the last
+        // idle observation, not from cycle 0.
+        assert_eq!(w.observe(10_000, 7, 1), Verdict::Progressing);
+        assert_eq!(w.observe(10_099, 7, 1), Verdict::Progressing);
+        assert!(matches!(w.observe(10_500, 7, 1), Verdict::Wedged { .. }));
+    }
+
+    #[test]
+    fn wedge_reports_stall_length() {
+        let mut w = Watchdog::new(50);
+        w.observe(1000, 42, 1);
+        assert_eq!(w.observe(1049, 42, 1), Verdict::Progressing);
+        assert_eq!(w.observe(1050, 42, 1), Verdict::Wedged { stalled_for: 50 });
+        assert_eq!(w.observe(1300, 42, 1), Verdict::Wedged { stalled_for: 300 });
+    }
+
+    #[test]
+    fn first_observation_arms() {
+        let mut w = Watchdog::new(10);
+        // Signature 0 on the first call must arm, not instantly wedge.
+        assert_eq!(w.observe(500, 0, 9), Verdict::Progressing);
+        assert!(matches!(w.observe(510, 0, 9), Verdict::Wedged { .. }));
+    }
+
+    #[test]
+    fn fold_signature_is_order_sensitive() {
+        assert_ne!(fold_signature([1, 2]), fold_signature([2, 1]));
+        assert_eq!(fold_signature([1, 2, 3]), fold_signature([1, 2, 3]));
+        assert_ne!(fold_signature([0]), fold_signature([0, 0]));
+    }
+}

@@ -77,6 +77,7 @@ impl LinkTap {
             // reaches 2.0.
             busy_frac: if cycles == 0 { 0.0 } else { beats as f64 / cycles as f64 },
             stall_cycles: self.stall_cycles(),
+            retransmits: 0,
         }
     }
 }
@@ -90,6 +91,9 @@ pub struct LinkUse {
     /// Data beats per cycle; duplex peak is 2.0.
     pub busy_frac: f64,
     pub stall_cycles: u64,
+    /// Replayed beats on links with a CRC+replay layer (D2D); on-die
+    /// bundles are lossless and always report 0.
+    pub retransmits: u64,
 }
 
 impl LinkUse {
@@ -114,6 +118,7 @@ pub fn link_report_json(links: &[LinkUse], cycles: Cycle) -> Json {
                     ("bytes".into(), Json::Num(l.bytes as f64)),
                     ("busy_frac".into(), Json::Num(l.busy_frac)),
                     ("stall_cycles".into(), Json::Num(l.stall_cycles as f64)),
+                    ("retransmits".into(), Json::Num(l.retransmits as f64)),
                 ])
             })
             .collect(),
@@ -161,8 +166,22 @@ mod tests {
     #[test]
     fn report_flags_saturated_and_idle() {
         let links = vec![
-            LinkUse { label: "hot".into(), beats: 90, bytes: 720, busy_frac: 0.9, stall_cycles: 4 },
-            LinkUse { label: "cold".into(), beats: 0, bytes: 0, busy_frac: 0.0, stall_cycles: 0 },
+            LinkUse {
+                label: "hot".into(),
+                beats: 90,
+                bytes: 720,
+                busy_frac: 0.9,
+                stall_cycles: 4,
+                retransmits: 0,
+            },
+            LinkUse {
+                label: "cold".into(),
+                beats: 0,
+                bytes: 0,
+                busy_frac: 0.0,
+                stall_cycles: 0,
+                retransmits: 0,
+            },
         ];
         let j = link_report_json(&links, 100).render();
         assert!(j.contains("\"saturated\":[\"hot\"]"), "{j}");

@@ -31,7 +31,7 @@ fn pod_artifacts(threads: usize, full_scan: bool) -> (String, String, String) {
     die.engine = EngineOpts::sharded(threads, 8);
     die.engine.full_scan = full_scan;
     die.engine.telemetry = true;
-    let mut pod = Pod::new(PodCfg { n_chiplets: 4, die, d2d: test_d2d() });
+    let mut pod = Pod::new(PodCfg { n_chiplets: 4, die, d2d: test_d2d(), fault: None, watchdog: 0 });
     let r = run_pod_collective(&mut pod, 2048, 2_000_000, true).unwrap();
     assert!(r.finished && r.correct, "threads={threads} full_scan={full_scan}");
     let (events, dropped) = pod.take_trace_events();

@@ -85,6 +85,21 @@ TRACKED = [
     # asserts hierarchical >= flat-ring at 4 chiplets.
     {"file": "BENCH_multichip.json", "key": "d2d_allreduce_bytes_per_cycle"},
     {"file": "BENCH_multichip.json", "key": "hier_over_flat_speedup"},
+    # Fault layer (PR 10): fraction of a clean link's all-reduce goodput
+    # retained at a 1e-3 per-beat D2D error rate with CRC+replay armed —
+    # deterministic simulated values (seeded injection), so any movement
+    # is a real change in the replay protocol or the schedule. The bench
+    # itself hard-asserts >= 0.70.
+    {"file": "BENCH_fault.json", "key": "faulty_link_goodput_frac"},
+    # Cycle overhead of riding out a transient SLVERR window via DMA
+    # retry, relative to a clean copy. Lower is better and legitimately
+    # small, so gate on absolute growth, not a ratio.
+    {
+        "file": "BENCH_fault.json",
+        "key": "dma_retry_overhead_frac",
+        "threshold": 0.50,
+        "mode": "abs-increase",
+    },
     # Telemetry energy accounting: deterministic simulated values (active
     # cycles x area-model power + per-byte link energy), so they move
     # only when the model or the schedule changes. Neither direction is
